@@ -1,0 +1,56 @@
+//! Asynchronous shared-memory SVM (§5.3, Algorithm 4): GSpar vs dense under
+//! all three update schemes, reporting wall time, coordinate updates, and
+//! CAS conflicts.
+//!
+//! ```sh
+//! cargo run --release --example async_svm
+//! ```
+
+use gsparse::config::{AsyncSvmConfig, Method, UpdateScheme};
+use gsparse::coordinator::AsyncSvmEngine;
+use gsparse::data::gen_svm;
+
+fn main() {
+    let n = 8192;
+    let d = 256;
+    let ds = gen_svm(n, d, 0.01, 0.9, 2018);
+    println!("SVM: N={n} d={d} C1=0.01 C2=0.9 (the paper's §5.3 recipe)\n");
+    println!(
+        "{:<28} {:>9} {:>12} {:>12} {:>12}",
+        "config", "wall_ms", "final_loss", "updates", "conflicts"
+    );
+    for scheme in [UpdateScheme::Lock, UpdateScheme::Atomic, UpdateScheme::Wild] {
+        for method in [Method::Dense, Method::GSpar] {
+            let cfg = AsyncSvmConfig {
+                n,
+                d,
+                c1: 0.01,
+                c2: 0.9,
+                reg: 0.1,
+                rho: 0.05,
+                threads: 8,
+                lr: 0.05,
+                method,
+                seed: 2018,
+                total_steps: 40_000,
+                scheme,
+            };
+            let report = AsyncSvmEngine::new(cfg).run(&ds);
+            println!(
+                "{:<28} {:>9.1} {:>12.5} {:>12} {:>12}",
+                format!(
+                    "{}+{scheme}",
+                    if method == Method::Dense { "dense" } else { "GSpar" }
+                ),
+                report.wall_ms,
+                report.final_loss,
+                report.updates,
+                report.conflicts
+            );
+        }
+    }
+    println!(
+        "\nGSpar touches ~ρ·d coordinates per step instead of d, which is what\n\
+         reduces lock/CAS conflicts between threads (the §5.3 mechanism)."
+    );
+}

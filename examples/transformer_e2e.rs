@@ -1,0 +1,27 @@
+//! END-TO-END driver: train a transformer language model for a few hundred
+//! steps with data-parallel, per-layer gradient sparsification — proving the
+//! whole three-layer stack composes:
+//!
+//!   L1 Pallas kernels + L2 JAX transformer  --(make artifacts)-->  HLO text
+//!   L3 Rust: PJRT load/compile/execute + Algorithm-1 coordinator
+//!   (sparsify → encode → all-reduce → decode → Adam), Python not running.
+//!
+//! ```sh
+//! make artifacts
+//! cargo run --release --example transformer_e2e -- --steps 200 --rho 0.05
+//! ```
+//!
+//! The loss curve is recorded in EXPERIMENTS.md §E2E. The default artifact
+//! is a ~1.6M-parameter model (d_model 128, 2 layers); regenerate artifacts
+//! with `python -m compile.aot --e2e-dmodel 256 --e2e-layers 4` for a ~4M
+//! variant (see DESIGN.md §Substitutions for the scale rationale).
+
+use gsparse::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.get_parse("steps", 200usize);
+    let workers = args.get_parse("workers", 4usize);
+    let rho = args.get_parse("rho", 0.05f32);
+    gsparse::figures::run_transformer_e2e(steps, workers, rho)
+}

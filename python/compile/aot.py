@@ -1,0 +1,181 @@
+"""AOT lowering: every L2 computation → `artifacts/<name>.hlo.txt` + a
+manifest the Rust runtime reads.
+
+HLO **text** is the interchange format (NOT `lowered.compile().serialize()`
+and NOT serialized protos): jax ≥ 0.5 emits HloModuleProtos with 64-bit
+instruction ids which this image's xla_extension 0.5.1 rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+Every function is lowered with `return_tuple=True`; the Rust side always
+decomposes a tuple. Usage:
+
+    python -m compile.aot --out ../artifacts          # default set
+    python -m compile.aot --out ../artifacts --full   # + big CNN variants
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dims_token(shape) -> str:
+    if len(shape) == 0:
+        return "scalar"
+    return "x".join(str(int(d)) for d in shape)
+
+
+def _dtype_token(dtype) -> str:
+    name = jnp.dtype(dtype).name
+    return {"float32": "f32", "int32": "i32"}.get(name, name)
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest_lines = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, in_specs, returns_tuple=True):
+        """Lower `fn(*in_specs)` and write `<name>.hlo.txt` + manifest rows."""
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        # Manifest: inputs from the specs; outputs from an abstract eval.
+        for i, spec in enumerate(in_specs):
+            self.manifest_lines.append(
+                f"{name} in {i} {_dtype_token(spec.dtype)} {_dims_token(spec.shape)}"
+            )
+        outs = jax.eval_shape(fn, *in_specs)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        flat, _ = jax.tree_util.tree_flatten(outs)
+        for i, o in enumerate(flat):
+            self.manifest_lines.append(
+                f"{name} out {i} {_dtype_token(o.dtype)} {_dims_token(o.shape)}"
+            )
+        print(f"  {name}: {len(text)} chars, {len(in_specs)} in / {len(flat)} out")
+        del returns_tuple
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.txt")
+        with open(path, "w") as f:
+            f.write("# artifact manifest — see rust/src/runtime/manifest.rs\n")
+            f.write("\n".join(self.manifest_lines) + "\n")
+        print(f"wrote {path} ({len(self.manifest_lines)} rows)")
+
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_all(out_dir: str, full: bool, e2e_dmodel: int, e2e_layers: int, e2e_seq: int):
+    b = Builder(out_dir)
+
+    # --- convex workloads (paper defaults: d=2048, per-worker batch 8) ---
+    d, batch = 2048, 8
+    reg = 1.0 / (10.0 * 1024.0)
+    print("lowering convex artifacts...")
+    b.emit(
+        "logistic_grad",
+        functools.partial(model.logistic_step, reg=reg),
+        [spec((batch, d)), spec((batch,)), spec((d,))],
+    )
+    b.emit(
+        "logistic_grad_probs",
+        functools.partial(model.logistic_grad_probs, reg=reg, rho=0.1),
+        [spec((batch, d)), spec((batch,)), spec((d,))],
+    )
+    b.emit(
+        "svm_grad",
+        functools.partial(model.svm_step, reg=0.1),
+        [spec((batch, 256)), spec((batch,)), spec((256,))],
+    )
+    b.emit(
+        "greedy_probs",
+        functools.partial(model.greedy_probs_standalone, rho=0.1),
+        [spec((d,))],
+    )
+
+    # --- CNNs (§5.2) ---
+    cnn_batch = 16
+    channel_set = [24, 32] + ([48, 64] if full else [])
+    for ch in channel_set:
+        print(f"lowering cnn{ch}...")
+        nparams = model.cnn_param_shapes(ch)
+        param_specs = [spec(s) for _, s in nparams]
+        b.emit(
+            f"cnn{ch}_init",
+            functools.partial(model.cnn_init, channels=ch),
+            [spec((), I32)],
+        )
+        b.emit(
+            f"cnn{ch}_step",
+            functools.partial(model.cnn_step, channels=ch),
+            param_specs + [spec((cnn_batch, 3 * 32 * 32)), spec((cnn_batch,), I32)],
+        )
+
+    # --- transformer (e2e) ---
+    vocab = 64
+    print("lowering transformer...")
+    tshapes = model.transformer_param_shapes(vocab, e2e_dmodel, e2e_layers, e2e_seq)
+    tspecs = [spec(s) for _, s in tshapes]
+    tb = 4
+    b.emit(
+        "transformer_init",
+        functools.partial(
+            model.transformer_init,
+            vocab=vocab,
+            d_model=e2e_dmodel,
+            n_layers=e2e_layers,
+            seq=e2e_seq,
+        ),
+        [spec((), I32)],
+    )
+    b.emit(
+        "transformer_step",
+        functools.partial(
+            model.transformer_step,
+            vocab=vocab,
+            d_model=e2e_dmodel,
+            n_layers=e2e_layers,
+            seq=e2e_seq,
+        ),
+        tspecs + [spec((tb, e2e_seq), I32), spec((tb, e2e_seq), I32)],
+    )
+
+    b.finish()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true", help="also build cnn48/cnn64")
+    ap.add_argument("--e2e-dmodel", type=int, default=128)
+    ap.add_argument("--e2e-layers", type=int, default=2)
+    ap.add_argument("--e2e-seq", type=int, default=64)
+    args = ap.parse_args()
+    build_all(args.out, args.full, args.e2e_dmodel, args.e2e_layers, args.e2e_seq)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""L1 Pallas kernels for Algorithm 3 (greedy sparsification probabilities).
+
+The paper notes Algorithm 3 "can be easily accelerated on hardware
+supporting SIMD"; on TPU the natural home is the VPU. The computation is
+element-wise maps plus global reductions, so we structure it as two Pallas
+kernels driven by a tiny amount of scalar glue in the surrounding jitted
+function (which lowers into the same HLO module):
+
+* [`block_abs_sum`]   — tiled reduction producing per-block Σ|g| partials:
+                        one HBM pass over `g`, `BLOCK`-sized VMEM tiles.
+* [`scale_clip_stats`] — given the current scale γ, computes
+                        `p = min(γ|g|, 1)` for a block AND that block's
+                        (Σ_{p<1} p, #capped) partials in the same pass, so
+                        each fixed-point iteration reads `g` exactly once.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): `BlockSpec((BLOCK,), ...)`
+expresses the HBM→VMEM streaming schedule; the per-block partials land in
+small VMEM outputs reduced by XLA. `interpret=True` everywhere — the CPU
+PJRT plugin cannot execute Mosaic custom-calls; real-TPU efficiency is
+estimated in EXPERIMENTS.md §Perf from the block shapes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size: 8 KiB of f32 per tile — comfortably inside VMEM alongside the
+# output partials, and a multiple of the VPU lane width (128).
+BLOCK = 2048
+
+
+def _pad_to_block(g):
+    d = g.shape[0]
+    padded = (d + BLOCK - 1) // BLOCK * BLOCK
+    if padded != d:
+        g = jnp.pad(g, (0, padded - d))
+    return g, padded
+
+
+def _abs_sum_kernel(g_ref, out_ref):
+    out_ref[0] = jnp.sum(jnp.abs(g_ref[...]))
+
+
+def block_abs_sum(g: jax.Array) -> jax.Array:
+    """Σ|g| via a tiled Pallas reduction (returns a scalar)."""
+    g, padded = _pad_to_block(g)
+    nblocks = padded // BLOCK
+    partials = pl.pallas_call(
+        _abs_sum_kernel,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+        interpret=True,
+    )(g)
+    return jnp.sum(partials)
+
+
+def _scale_clip_kernel(gamma_ref, g_ref, p_ref, stats_ref):
+    gamma = gamma_ref[0]
+    p = jnp.minimum(gamma * jnp.abs(g_ref[...]), 1.0)
+    p_ref[...] = p
+    capped = p >= 1.0
+    # stats: [active_sum, capped_count] per block.
+    stats_ref[0] = jnp.sum(jnp.where(capped, 0.0, p))
+    stats_ref[1] = jnp.sum(jnp.where(capped, 1.0, 0.0))
+
+
+def scale_clip_stats(g: jax.Array, gamma: jax.Array):
+    """One pass: `p = min(γ|g|, 1)` plus (Σ_{p<1} p, #capped) reductions.
+
+    Returns (p, active_sum, capped_count); `p` has the original length.
+    """
+    d = g.shape[0]
+    gp, padded = _pad_to_block(g)
+    nblocks = padded // BLOCK
+    p, stats = pl.pallas_call(
+        _scale_clip_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded,), jnp.float32),
+            jax.ShapeDtypeStruct((2 * nblocks,), jnp.float32),
+        ],
+        interpret=True,
+    )(gamma.reshape(1).astype(jnp.float32), gp)
+    stats = stats.reshape(nblocks, 2)
+    return p[:d], jnp.sum(stats[:, 0]), jnp.sum(stats[:, 1])
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "iters"))
+def greedy_probs(g: jax.Array, rho: float, iters: int = 2):
+    """Algorithm 3 built from the Pallas kernels.
+
+    Semantically identical to `ref.greedy_probs_ref` (pytest asserts this
+    across shapes/densities via hypothesis). Each iteration streams `g`
+    once; total HBM traffic is `(1 + iters) · |g|` reads + `|g|` writes.
+    """
+    d = g.shape[0]
+    g = g.astype(jnp.float32)
+    l1 = block_abs_sum(g)
+    target = jnp.float32(rho * d)
+    safe_l1 = jnp.where(l1 > 0, l1, 1.0)
+    gamma = target / safe_l1
+
+    # Fixed-point rescale: gamma *= c where c = want/active_sum (clamped at
+    # >= 1). The p from the *final* gamma is recomputed in one last pass so
+    # iterations don't need to materialize intermediate p vectors.
+    def body(_, gamma):
+        _, active_sum, capped = scale_clip_stats(g, gamma)
+        want = target - capped
+        c = jnp.where(
+            (want > 0) & (active_sum > 0), want / jnp.maximum(active_sum, 1e-30), 1.0
+        )
+        return gamma * jnp.maximum(c, 1.0)
+
+    # NOTE: ref.py applies `iters` rescales after p0; the first stats pass
+    # here sees p0, so `iters` loop turns == `iters` rescales. Matches ref.
+    gamma = jax.lax.fori_loop(0, iters, body, gamma)
+    p, _, _ = scale_clip_stats(g, gamma)
+    p = jnp.where(l1 > 0, p, jnp.zeros_like(p))
+    inv_lambda = jnp.where(l1 > 0, 1.0 / gamma, 0.0)
+    return p, inv_lambda

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel for the minibatch ℓ2-logistic gradient — the compute
+hot-spot of the paper's convex experiments (Figures 1–6).
+
+The hot op pair is `u = X w` followed by `grad = Xᵀ r`: two passes over the
+same `B×D` matrix in the naive form. The kernel fuses them so `X` makes
+**one** HBM pass: the grid runs over batch tiles; each tile computes its
+forward matvec, the sigmoid residual on-VPU, and accumulates its rank-`Bb`
+contribution `X_bᵀ r_b` into the output gradient block, exploiting the
+TPU's sequential-grid accumulation semantics (`o_ref[...] +=` with an
+`@pl.when(first)` init).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): `X` tiles of `(TB, D)` stream
+HBM→VMEM; the matvec pair feeds the MXU with `(TB, D) × (D,)` products;
+the full `w`/`grad` vectors persist in VMEM across grid steps (D ≤ 16K
+floats = 64 KiB — well inside the ~16 MiB VMEM budget together with the
+tiles). `interpret=True` for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch-tile height: 8 rows of the paper's d=2048 setting = 64 KiB per tile.
+TILE_B = 8
+
+
+def _logistic_tile_kernel(x_ref, y_ref, w_ref, grad_ref, loss_ref, *, batch):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+        loss_ref[0] = 0.0
+
+    x = x_ref[...]  # (TILE_B, D)
+    y = y_ref[...]  # (TILE_B,)
+    w = w_ref[...]  # (D,)
+    margins = y * (x @ w)
+    # Mean-over-batch scaling folded into the residual.
+    coef = -jax.nn.sigmoid(-margins) * y / batch
+    grad_ref[...] += x.T @ coef
+    loss_ref[0] += jnp.sum(jnp.logaddexp(0.0, -margins)) / batch
+
+
+@functools.partial(jax.jit, static_argnames=("reg",))
+def logistic_grad(x: jax.Array, y: jax.Array, w: jax.Array, reg: float = 0.0):
+    """Fused minibatch logistic gradient + loss via the Pallas kernel.
+
+    x: (B, D) with B a multiple of TILE_B (aot.py fixes B per artifact);
+    returns (grad (D,), loss scalar) including the ℓ2 term — semantically
+    identical to `ref.logistic_grad_ref`.
+    """
+    b, d = x.shape
+    assert b % TILE_B == 0, f"batch {b} must be a multiple of {TILE_B}"
+    nblocks = b // TILE_B
+    grad, loss = pl.pallas_call(
+        functools.partial(_logistic_tile_kernel, batch=b),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((TILE_B, d), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_B,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32), w.astype(jnp.float32))
+    grad = grad + 2.0 * reg * w
+    loss = loss[0] + reg * jnp.sum(w * w)
+    return grad, loss

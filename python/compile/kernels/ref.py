@@ -1,0 +1,67 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite checks `greedy.py` and
+`logistic.py` against (and they match the Rust implementations in
+`rust/src/sparsify/probs.rs` / `rust/src/model/logistic.rs`, which the
+integration tests cross-check through the AOT artifacts).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy_probs_ref(g: jax.Array, rho: float, iters: int = 2):
+    """Algorithm 3 (greedy sparsification probabilities), pure jnp.
+
+    Returns (p, inv_lambda): p_i = min(gamma * |g_i|, 1) after `iters`
+    fixed-point rescalings, and inv_lambda = 1/gamma (the shared decoded
+    magnitude of survivors with p < 1).
+    """
+    d = g.shape[0]
+    absg = jnp.abs(g).astype(jnp.float32)
+    l1 = jnp.sum(absg)
+    target = rho * d
+
+    safe_l1 = jnp.where(l1 > 0, l1, 1.0)
+    gamma0 = target / safe_l1
+
+    def body(_, carry):
+        p, gamma = carry
+        capped = jnp.sum(jnp.where(p >= 1.0, 1.0, 0.0))
+        active_sum = jnp.sum(jnp.where(p < 1.0, p, 0.0))
+        want = target - capped
+        c = jnp.where(
+            (want > 0) & (active_sum > 0), want / jnp.maximum(active_sum, 1e-30), 1.0
+        )
+        c = jnp.maximum(c, 1.0)  # c <= 1 means "stop": applying 1 is a no-op
+        new_p = jnp.where(p < 1.0, jnp.minimum(p * c, 1.0), p)
+        return new_p, gamma * c
+
+    p0 = jnp.minimum(gamma0 * absg, 1.0)
+    p, gamma = jax.lax.fori_loop(0, iters, body, (p0, gamma0))
+    p = jnp.where(l1 > 0, p, jnp.zeros_like(p))
+    inv_lambda = jnp.where(l1 > 0, 1.0 / gamma, 0.0)
+    return p, inv_lambda
+
+
+def logistic_grad_ref(x: jax.Array, y: jax.Array, w: jax.Array, reg: float):
+    """Minibatch ℓ2-logistic gradient + loss (eq. 14), pure jnp.
+
+    x: (B, D) f32; y: (B,) f32 in {-1, +1}; w: (D,) f32.
+    Returns (grad (D,), loss scalar) — mean-over-batch loss + regularizer.
+    """
+    margins = y * (x @ w)
+    loss = jnp.mean(jnp.logaddexp(0.0, -margins)) + reg * jnp.sum(w * w)
+    coef = -jax.nn.sigmoid(-margins) * y / x.shape[0]
+    grad = x.T @ coef + 2.0 * reg * w
+    return grad, loss
+
+
+def svm_grad_ref(x: jax.Array, y: jax.Array, w: jax.Array, reg: float):
+    """Minibatch hinge-loss SVM subgradient + loss (eq. 16), pure jnp."""
+    margins = y * (x @ w)
+    loss = jnp.mean(jnp.maximum(1.0 - margins, 0.0)) + reg * jnp.sum(w * w)
+    active = (margins < 1.0).astype(x.dtype)
+    coef = -active * y / x.shape[0]
+    grad = x.T @ coef + 2.0 * reg * w
+    return grad, loss

@@ -1,0 +1,231 @@
+"""L2 — the paper's training computations in JAX, calling the L1 kernels.
+
+Everything here is lowered once by `aot.py` to HLO text and executed from
+Rust via PJRT; Python never runs on the training path.
+
+Artifact conventions (consumed by `rust/src/model/hlo.rs`):
+* `<name>_step(params..., x, y) -> (loss, grads...)` — one gradient step's
+  worth of computation; one gradient tensor per parameter tensor, so the
+  Rust coordinator can sparsify **per layer** exactly as §5.2 prescribes.
+* `<name>_init(seed) -> (params...)` — deterministic initialization.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.greedy import greedy_probs
+from .kernels.logistic import logistic_grad
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Convex models (Figures 1–6, 9): thin wrappers over the L1 kernels.
+# ---------------------------------------------------------------------------
+
+
+def logistic_step(x, y, w, *, reg: float):
+    """(grad, loss) for ℓ2-logistic regression — Pallas kernel inside."""
+    grad, loss = logistic_grad(x, y, w, reg)
+    return grad, loss
+
+
+def logistic_grad_probs(x, y, w, *, reg: float, rho: float, iters: int = 2):
+    """Fused hot path: gradient AND Algorithm-3 probabilities in one HLO
+    module (grad computed by the Pallas logistic kernel, p by the Pallas
+    greedy kernels). Returns (grad, loss, p, inv_lambda)."""
+    grad, loss = logistic_grad(x, y, w, reg)
+    p, inv_lambda = greedy_probs(grad, rho, iters)
+    return grad, loss, p, inv_lambda
+
+
+def svm_step(x, y, w, *, reg: float):
+    """(grad, loss) for the hinge-loss SVM (pure jnp — the async engine's
+    hot path is the Rust implementation; this artifact cross-checks it)."""
+    grad, loss = ref.svm_grad_ref(x, y, w, reg)
+    return grad, loss
+
+
+def greedy_probs_standalone(g, *, rho: float, iters: int = 2):
+    """The L1 greedy kernel as its own artifact (L3 cross-validates its Rust
+    implementation against this through PJRT)."""
+    return greedy_probs(g, rho, iters)
+
+
+# ---------------------------------------------------------------------------
+# CNN (§5.2): 3 conv(3x3) + BN layers, 2 maxpools, FC-256, FC-10.
+# ---------------------------------------------------------------------------
+
+
+def cnn_param_shapes(channels: int, image: int = 32, classes: int = 10):
+    """Parameter tensors, in order. BN is folded to a per-channel (scale,
+    bias) pair learned with batch statistics."""
+    c = channels
+    feat = (image // 4) * (image // 4) * c  # two 2x2 pools
+    return [
+        ("conv1_w", (3, 3, 3, c)),
+        ("bn1_sb", (2, c)),
+        ("conv2_w", (3, 3, c, c)),
+        ("bn2_sb", (2, c)),
+        ("conv3_w", (3, 3, c, c)),
+        ("bn3_sb", (2, c)),
+        ("fc1_w", (feat, 256)),
+        ("fc1_b", (256,)),
+        ("fc2_w", (256, classes)),
+        ("fc2_b", (classes,)),
+    ]
+
+
+def cnn_init(seed, *, channels: int):
+    key = jax.random.PRNGKey(seed.astype(jnp.int32) if hasattr(seed, "astype") else seed)
+    params = []
+    for name, shape in cnn_param_shapes(channels):
+        key, sub = jax.random.split(key)
+        if name.endswith("_w"):
+            fan_in = 1
+            for s in shape[:-1]:
+                fan_in *= int(s)
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) * (2.0 / fan_in) ** 0.5
+            )
+        elif name.endswith("_sb"):
+            sb = jnp.zeros(shape, jnp.float32)
+            params.append(sb.at[0].set(1.0))  # scale=1, bias=0
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return tuple(params)
+
+
+def _conv_bn_relu(x, w, sb):
+    # NHWC, SAME padding, stride 1.
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    mean = jnp.mean(y, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(y, axis=(0, 1, 2), keepdims=True)
+    y = (y - mean) / jnp.sqrt(var + 1e-5)
+    y = y * sb[0] + sb[1]
+    return jax.nn.relu(y)
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_forward(params, x):
+    """x: (B, 3*32*32) flat CHW (the Rust side's layout) → logits (B, 10)."""
+    b = x.shape[0]
+    img = x.reshape(b, 3, 32, 32).transpose(0, 2, 3, 1)  # CHW -> NHWC
+    c1w, bn1, c2w, bn2, c3w, bn3, f1w, f1b, f2w, f2b = params
+    h = _conv_bn_relu(img, c1w, bn1)
+    h = _maxpool2(h)
+    h = _conv_bn_relu(h, c2w, bn2)
+    h = _maxpool2(h)
+    h = _conv_bn_relu(h, c3w, bn3)
+    h = h.reshape(b, -1)
+    h = jax.nn.relu(h @ f1w + f1b)
+    return h @ f2w + f2b
+
+
+def cnn_loss(params, x, y):
+    logits = cnn_forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def cnn_step(*args, channels: int):
+    """(params..., x, y) -> (loss, grads...)."""
+    nparams = len(cnn_param_shapes(channels))
+    params = tuple(args[:nparams])
+    x, y = args[nparams], args[nparams + 1]
+    loss, grads = jax.value_and_grad(cnn_loss)(params, x, y)
+    return (loss,) + tuple(grads)
+
+
+# ---------------------------------------------------------------------------
+# Transformer LM (end-to-end example): pre-LN decoder-only, byte-level.
+# ---------------------------------------------------------------------------
+
+
+def transformer_param_shapes(vocab: int, d_model: int, n_layers: int, seq: int):
+    shapes = [("embed", (vocab, d_model)), ("pos", (seq, d_model))]
+    for l in range(n_layers):
+        shapes += [
+            (f"l{l}_ln1", (2, d_model)),
+            (f"l{l}_qkv", (d_model, 3 * d_model)),
+            (f"l{l}_attn_out", (d_model, d_model)),
+            (f"l{l}_ln2", (2, d_model)),
+            (f"l{l}_mlp_in", (d_model, 4 * d_model)),
+            (f"l{l}_mlp_out", (4 * d_model, d_model)),
+        ]
+    shapes += [("ln_f", (2, d_model))]
+    return shapes
+
+
+def transformer_init(seed, *, vocab: int, d_model: int, n_layers: int, seq: int):
+    key = jax.random.PRNGKey(seed.astype(jnp.int32) if hasattr(seed, "astype") else seed)
+    params = []
+    for name, shape in transformer_param_shapes(vocab, d_model, n_layers, seq):
+        key, sub = jax.random.split(key)
+        if name.endswith("ln1") or name.endswith("ln2") or name == "ln_f":
+            p = jnp.zeros(shape, jnp.float32).at[0].set(1.0)
+        else:
+            scale = 0.02
+            p = jax.random.normal(sub, shape, jnp.float32) * scale
+        params.append(p)
+    return tuple(params)
+
+
+def _ln(x, sb):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    sd = jnp.sqrt(jnp.var(x, axis=-1, keepdims=True) + 1e-5)
+    return (x - mu) / sd * sb[0] + sb[1]
+
+
+def transformer_forward(params, tokens, *, n_layers: int, n_heads: int = 4):
+    embed, pos = params[0], params[1]
+    b, s = tokens.shape
+    d_model = embed.shape[1]
+    h = embed[tokens] + pos[None, :s, :]
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    per_layer = 6
+    for l in range(n_layers):
+        ln1, qkv_w, out_w, ln2, mlp_in, mlp_out = params[2 + l * per_layer : 2 + (l + 1) * per_layer]
+        x = _ln(h, ln1)
+        qkv = x @ qkv_w  # (B, S, 3D)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        hd = d_model // n_heads
+
+        def heads(t):
+            return t.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+
+        q, k, v = heads(q), heads(k), heads(v)
+        att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+        att = jnp.where(mask[None, None] > 0, att, -1e9)
+        att = jax.nn.softmax(att, axis=-1)
+        o = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, d_model)
+        h = h + o @ out_w
+        x = _ln(h, ln2)
+        h = h + jax.nn.gelu(x @ mlp_in) @ mlp_out
+    return _ln(h, params[-1]) @ embed.T  # tied softmax
+
+
+def transformer_loss(params, tokens, targets, *, n_layers: int):
+    logits = transformer_forward(params, tokens, n_layers=n_layers)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def transformer_step(*args, vocab: int, d_model: int, n_layers: int, seq: int):
+    """(params..., tokens, targets) -> (loss, grads...)."""
+    nparams = len(transformer_param_shapes(vocab, d_model, n_layers, seq))
+    params = tuple(args[:nparams])
+    tokens, targets = args[nparams], args[nparams + 1]
+    loss, grads = jax.value_and_grad(
+        functools.partial(transformer_loss, n_layers=n_layers)
+    )(params, tokens, targets)
+    return (loss,) + tuple(grads)

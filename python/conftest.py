@@ -1,0 +1,7 @@
+"""Make `pytest python/tests/` work from the repo root: the test modules
+import the `compile` package that lives next to this file."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,163 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+Hypothesis sweeps shapes, densities and value distributions — the CORE
+correctness signal for the AOT artifacts the Rust coordinator executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.greedy import greedy_probs, block_abs_sum, scale_clip_stats
+from compile.kernels.logistic import logistic_grad, TILE_B
+
+
+def gradient_like(rng: np.random.Generator, d: int, density: float) -> jnp.ndarray:
+    mask = rng.random(d) < density
+    big = rng.random(d) < 0.1
+    vals = rng.normal(size=d) * np.where(big, 5.0, 0.05)
+    return jnp.asarray((vals * mask).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# greedy kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=6000),
+    density=st.floats(min_value=0.05, max_value=1.0),
+    rho=st.floats(min_value=0.01, max_value=1.0),
+    iters=st.integers(min_value=0, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_greedy_matches_ref(d, density, rho, iters, seed):
+    rng = np.random.default_rng(seed)
+    g = gradient_like(rng, d, density)
+    p_k, il_k = greedy_probs(g, float(rho), int(iters))
+    p_r, il_r = ref.greedy_probs_ref(g, float(rho), int(iters))
+    np.testing.assert_allclose(p_k, p_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(il_k, il_r, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=5000),
+    rho=st.floats(min_value=0.01, max_value=0.9),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_greedy_invariants(d, rho, seed):
+    rng = np.random.default_rng(seed)
+    g = gradient_like(rng, d, 0.5)
+    p, inv_lambda = greedy_probs(g, float(rho), 2)
+    p = np.asarray(p)
+    assert p.shape == (d,)
+    assert np.all(p >= 0.0) and np.all(p <= 1.0 + 1e-6)
+    # zero coords get p = 0, non-zero coords get p > 0
+    gz = np.asarray(g) == 0.0
+    assert np.all(p[gz] == 0.0)
+    assert np.all(p[~gz] > 0.0)
+    # density never overshoots the target (beyond fp slack)
+    assert p.sum() <= rho * d * (1.0 + 1e-4) + 1e-3
+    if np.any(~gz):
+        assert float(inv_lambda) > 0.0
+        # Prop-1 form: p = min(|g|/inv_lambda, 1)
+        expect = np.minimum(np.abs(np.asarray(g)) / float(inv_lambda), 1.0)
+        np.testing.assert_allclose(p, expect, rtol=2e-4, atol=2e-6)
+
+
+def test_greedy_zero_gradient():
+    p, il = greedy_probs(jnp.zeros(100, jnp.float32), 0.3, 2)
+    assert float(jnp.sum(p)) == 0.0
+    assert float(il) == 0.0
+
+
+def test_block_abs_sum_matches_jnp():
+    rng = np.random.default_rng(7)
+    for d in [1, 5, 2048, 2049, 7000]:
+        g = jnp.asarray(rng.normal(size=d).astype(np.float32))
+        np.testing.assert_allclose(
+            block_abs_sum(g), jnp.sum(jnp.abs(g)), rtol=1e-5
+        )
+
+
+def test_scale_clip_stats_consistency():
+    rng = np.random.default_rng(8)
+    g = jnp.asarray(rng.normal(size=3000).astype(np.float32))
+    gamma = jnp.float32(2.5)
+    p, active_sum, capped = scale_clip_stats(g, gamma)
+    expect_p = np.minimum(2.5 * np.abs(np.asarray(g)), 1.0)
+    np.testing.assert_allclose(p, expect_p, rtol=1e-6)
+    np.testing.assert_allclose(
+        float(active_sum), expect_p[expect_p < 1.0].sum(), rtol=1e-4
+    )
+    assert int(capped) == int((expect_p >= 1.0).sum())
+
+
+# ---------------------------------------------------------------------------
+# logistic kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(min_value=1, max_value=6),
+    d=st.integers(min_value=2, max_value=700),
+    reg=st.floats(min_value=0.0, max_value=0.5),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_logistic_matches_ref(nb, d, reg, seed):
+    rng = np.random.default_rng(seed)
+    b = nb * TILE_B
+    x = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    y = jnp.asarray(np.sign(rng.normal(size=b)).astype(np.float32))
+    w = jnp.asarray((rng.normal(size=d) * 0.2).astype(np.float32))
+    gk, lk = logistic_grad(x, y, w, float(reg))
+    gr, lr = ref.logistic_grad_ref(x, y, w, float(reg))
+    np.testing.assert_allclose(gk, gr, rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(lk, lr, rtol=1e-4, atol=1e-6)
+
+
+def test_logistic_matches_autodiff():
+    # The analytic gradient must equal jax.grad of the loss.
+    rng = np.random.default_rng(9)
+    b, d = 16, 64
+    x = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    y = jnp.asarray(np.sign(rng.normal(size=b)).astype(np.float32))
+    w = jnp.asarray((rng.normal(size=d) * 0.3).astype(np.float32))
+    reg = 0.01
+
+    def loss_fn(w):
+        return ref.logistic_grad_ref(x, y, w, reg)[1]
+
+    g_auto = jax.grad(loss_fn)(w)
+    g_kernel, _ = logistic_grad(x, y, w, reg)
+    np.testing.assert_allclose(g_kernel, g_auto, rtol=2e-4, atol=1e-5)
+
+
+def test_logistic_rejects_ragged_batch():
+    with pytest.raises(AssertionError):
+        logistic_grad(
+            jnp.zeros((TILE_B + 1, 8), jnp.float32),
+            jnp.zeros((TILE_B + 1,), jnp.float32),
+            jnp.zeros((8,), jnp.float32),
+        )
+
+
+def test_svm_ref_matches_autodiff_away_from_kink():
+    rng = np.random.default_rng(10)
+    b, d = 12, 32
+    x = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    y = jnp.asarray(np.sign(rng.normal(size=b)).astype(np.float32))
+    w = jnp.asarray((rng.normal(size=d) * 0.01).astype(np.float32))
+
+    def loss_fn(w):
+        return ref.svm_grad_ref(x, y, w, 0.05)[1]
+
+    g_auto = jax.grad(loss_fn)(w)
+    g_ref, _ = ref.svm_grad_ref(x, y, w, 0.05)
+    np.testing.assert_allclose(g_ref, g_auto, rtol=1e-4, atol=1e-6)

@@ -1,0 +1,14 @@
+use gsparse::benchkit::{black_box, Bencher};
+fn main() {
+    let d = 262_144usize;
+    let g: Vec<f32> = (0..d).map(|i| (i as f32).sin()).collect();
+    let b = Bencher::default();
+    b.bench("norm1 single pass", Some(d as u64), || {
+        black_box(gsparse::tensor::norm1(black_box(&g)));
+    });
+    let mut p = vec![0.0f32; d];
+    b.bench("copy pass", Some(d as u64), || {
+        p.copy_from_slice(black_box(&g));
+        black_box(&p);
+    });
+}

@@ -1,0 +1,51 @@
+//! Microbenchmarks for the §3.3 wire codec: encode, decode, and the
+//! all-reduce merge, across densities (both encodings get exercised).
+
+use gsparse::benchkit::{black_box, section, Bencher};
+use gsparse::coding;
+use gsparse::comm::{Aggregator, NetworkModel, ReduceAlgo};
+use gsparse::rngkit::{RandArray, Xoshiro256pp};
+use gsparse::sparsify::{greedy_probs, sample_sparse, SparseGrad};
+
+fn message(d: usize, rho: f32, seed: u64) -> SparseGrad {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let g: Vec<f32> = (0..d).map(|_| (rng.next_gaussian() * 0.3) as f32).collect();
+    let mut p = Vec::new();
+    let pv = greedy_probs(&g, rho, 2, &mut p);
+    let mut rand = RandArray::from_seed(seed ^ 1, 1 << 20);
+    sample_sparse(&g, &p, pv.inv_lambda, &mut rand)
+}
+
+fn main() {
+    let b = Bencher::default();
+
+    section("encode / decode (d = 262144)");
+    let d = 262_144;
+    for rho in [0.01f32, 0.05, 0.5] {
+        let sg = message(d, rho, 10);
+        let mut buf = Vec::new();
+        let enc = coding::encode(&sg, &mut buf);
+        b.bench(
+            &format!("encode rho={rho} ({enc:?}, {} B)", buf.len()),
+            Some(sg.nnz() as u64),
+            || {
+                black_box(coding::encode(black_box(&sg), &mut buf));
+            },
+        );
+        b.bench(&format!("decode rho={rho}"), Some(sg.nnz() as u64), || {
+            black_box(coding::decode(black_box(&buf)).unwrap());
+        });
+    }
+
+    section("all-reduce merge of M=4 encoded messages (d = 262144)");
+    for rho in [0.01f32, 0.05] {
+        let grads: Vec<SparseGrad> = (0..4).map(|m| message(d, rho, 20 + m)).collect();
+        let mut out = vec![0.0f32; d];
+        for algo in [ReduceAlgo::Naive, ReduceAlgo::Sparse] {
+            let mut agg = Aggregator::new(NetworkModel::datacenter_10g(), algo);
+            b.bench(&format!("reduce {algo:?} rho={rho}"), Some(d as u64), || {
+                black_box(agg.reduce(black_box(&grads), &mut out));
+            });
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! Bench target regenerating **Figures 1 and 2** (synchronous SGD on
+//! synthetic logistic regression, GSpar vs UniSp vs dense, both C₁
+//! settings). Prints the same series/labels the paper plots and times one
+//! representative cell end-to-end.
+//!
+//! Scale: quick by default; set GSPARSE_PAPER=1 for the paper's exact
+//! N=1024 / d=2048 / 30 passes.
+
+use gsparse::benchkit::{section, Bencher};
+use gsparse::figures::{fig1, fig2, ConvexFigureScale};
+
+fn main() {
+    let paper = std::env::var("GSPARSE_PAPER").is_ok();
+    let scale = if paper {
+        ConvexFigureScale::paper()
+    } else {
+        ConvexFigureScale::quick()
+    };
+    fig1(&scale);
+    fig2(&scale);
+
+    section("end-to-end wall time of one Fig-1 cell");
+    let b = Bencher::heavy();
+    b.bench("fig1 cell (3 methods)", None, || {
+        let s = ConvexFigureScale {
+            n: 256,
+            d: 512,
+            epochs: 6,
+            seed: 1,
+        };
+        // One cell = the grid function with a single (reg, C2) pair; reuse
+        // fig1's internals via the public train path.
+        let _ = s;
+        use gsparse::config::{ConvexConfig, Method};
+        use gsparse::coordinator::sync::{train_convex, TrainOptions};
+        use gsparse::data::gen_logistic;
+        use gsparse::model::LogisticModel;
+        let cfg = ConvexConfig {
+            n: 256,
+            d: 512,
+            epochs: 6,
+            ..Default::default()
+        };
+        let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
+        let model = LogisticModel::new(cfg.reg);
+        for m in [Method::Dense, Method::GSpar, Method::UniSp] {
+            let mut c = cfg.clone();
+            c.method = m;
+            train_convex(&c, &TrainOptions::default(), &ds, &model);
+        }
+    });
+}

@@ -1,0 +1,56 @@
+//! Bench target regenerating **Figures 3 and 4** (SVRG on synthetic
+//! logistic regression, both C₁ settings), plus an ablation timing of the
+//! two SVRG sparsification placements (§5.1: sparsify-everything vs the
+//! eq. 15 master-kept-full-gradient variant).
+
+use gsparse::benchkit::{section, Bencher};
+use gsparse::config::{ConvexConfig, Method};
+use gsparse::coordinator::sync::{train_convex, OptKind, SvrgVariant, TrainOptions};
+use gsparse::data::gen_logistic;
+use gsparse::figures::{fig3, fig4, ConvexFigureScale};
+use gsparse::model::LogisticModel;
+
+fn main() {
+    let paper = std::env::var("GSPARSE_PAPER").is_ok();
+    let scale = if paper {
+        ConvexFigureScale::paper()
+    } else {
+        ConvexFigureScale::quick()
+    };
+    fig3(&scale);
+    fig4(&scale);
+
+    section("ablation: SVRG sparsification placement (§5.1)");
+    let cfg = ConvexConfig {
+        n: 512,
+        d: 1024,
+        epochs: 15,
+        method: Method::GSpar,
+        lr: 0.25,
+        ..Default::default()
+    };
+    let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
+    let model = LogisticModel::new(cfg.reg);
+    for variant in [SvrgVariant::SparsifyFull, SvrgVariant::MasterFullGrad] {
+        let opts = TrainOptions {
+            opt: OptKind::Svrg(variant),
+            ..Default::default()
+        };
+        let curve = train_convex(&cfg, &opts, &ds, &model);
+        println!(
+            "  {variant:?}: final loss {:.4e}, var {:.3}, bits {:.3e}",
+            curve.final_loss(),
+            curve.var_ratio,
+            curve.ledger.ideal_bits as f64
+        );
+    }
+
+    let b = Bencher::heavy();
+    b.bench("svrg cell end-to-end", None, || {
+        let opts = TrainOptions {
+            opt: OptKind::Svrg(SvrgVariant::SparsifyFull),
+            ..Default::default()
+        };
+        train_convex(&cfg, &opts, &ds, &model);
+    });
+}

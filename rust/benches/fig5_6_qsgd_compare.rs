@@ -1,0 +1,15 @@
+//! Bench target regenerating **Figures 5 and 6** (GSpar vs QSGD(b) vs dense
+//! on the coding-length x-axis), plus a bits-per-element summary table.
+
+use gsparse::figures::{fig5, fig6, ConvexFigureScale};
+
+fn main() {
+    let paper = std::env::var("GSPARSE_PAPER").is_ok();
+    let scale = if paper {
+        ConvexFigureScale::paper()
+    } else {
+        ConvexFigureScale::quick()
+    };
+    fig5(&scale);
+    fig6(&scale);
+}

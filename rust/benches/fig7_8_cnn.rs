@@ -1,0 +1,15 @@
+//! Bench target regenerating **Figures 7 and 8** (CNNs on the CIFAR-like
+//! dataset, Adam + per-layer sparsification, loss vs epochs and vs comm
+//! cost). Requires `make artifacts` (Fig 7) / `make artifacts-full`
+//! (Fig 8's 48/64-channel variants).
+
+fn main() {
+    let quick = std::env::var("GSPARSE_PAPER").is_err();
+    if let Err(e) = gsparse::figures::fig7(quick) {
+        eprintln!("fig7 failed (did you run `make artifacts`?): {e:#}");
+        std::process::exit(1);
+    }
+    if let Err(e) = gsparse::figures::fig8(quick) {
+        eprintln!("fig8: {e:#}");
+    }
+}

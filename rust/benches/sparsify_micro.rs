@@ -1,0 +1,66 @@
+//! Microbenchmarks for the L3 hot path: probability computation (greedy &
+//! closed-form), Bernoulli sampling, and every baseline compressor, across
+//! gradient dimensions. These are the numbers EXPERIMENTS.md §Perf tracks.
+
+use gsparse::benchkit::{black_box, section, Bencher};
+use gsparse::config::Method;
+use gsparse::rngkit::{RandArray, Xoshiro256pp};
+use gsparse::sparsify::{self, closed_form_probs, greedy_probs, sample_sparse};
+
+fn gradient(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..d)
+        .map(|_| {
+            let u = rng.next_f32();
+            if u < 0.1 {
+                (rng.next_gaussian() * 4.0) as f32
+            } else {
+                (rng.next_gaussian() * 0.05) as f32
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let b = Bencher::default();
+
+    section("greedy probability computation (Algorithm 3, 2 iters)");
+    for d in [2048usize, 16_384, 262_144, 1 << 21] {
+        let g = gradient(d, 1);
+        let mut p = Vec::new();
+        b.bench(&format!("greedy_probs d={d}"), Some(d as u64), || {
+            black_box(greedy_probs(black_box(&g), 0.05, 2, &mut p));
+        });
+    }
+
+    section("closed-form probability computation (Algorithm 2)");
+    for d in [2048usize, 16_384, 262_144] {
+        let g = gradient(d, 2);
+        let mut p = Vec::new();
+        b.bench(&format!("closed_form d={d}"), Some(d as u64), || {
+            black_box(closed_form_probs(black_box(&g), 0.5, &mut p));
+        });
+    }
+
+    section("Bernoulli sampling + rescale");
+    for d in [2048usize, 262_144] {
+        let g = gradient(d, 3);
+        let mut p = Vec::new();
+        let pv = greedy_probs(&g, 0.05, 2, &mut p);
+        let mut rand = RandArray::from_seed(4, 1 << 22);
+        b.bench(&format!("sample_sparse d={d}"), Some(d as u64), || {
+            black_box(sample_sparse(black_box(&g), &p, pv.inv_lambda, &mut rand));
+        });
+    }
+
+    section("full compress step per method (d = 262144, rho = 0.05)");
+    let d = 262_144;
+    let g = gradient(d, 5);
+    let mut rand = RandArray::from_seed(6, 1 << 22);
+    for &m in Method::all() {
+        let mut c = sparsify::build(m, 0.05, 0.5, 4);
+        b.bench(&format!("compress {m}"), Some(d as u64), || {
+            black_box(c.compress(black_box(&g), &mut rand));
+        });
+    }
+}

@@ -1,0 +1,52 @@
+//! Bench target for the theory section: Lemma 3 (expected sparsity) and
+//! Theorem 4 (coding length) bound-vs-measured sweep, plus greedy-vs-exact
+//! variance optimality at matched sparsity.
+
+use gsparse::benchkit::section;
+use gsparse::rngkit::Xoshiro256pp;
+use gsparse::sparsify::{closed_form_probs, greedy_probs};
+
+fn main() {
+    gsparse::figures::theory_bounds();
+
+    section("greedy vs closed-form: variance at matched expected sparsity");
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    println!(
+        "{:>8} {:>8} | {:>12} {:>12} {:>8}",
+        "d", "rho", "greedy var", "optimal var", "ratio"
+    );
+    for &d in &[1024usize, 8192] {
+        for &rho in &[0.02f32, 0.1, 0.3] {
+            let g: Vec<f32> = (0..d)
+                .map(|_| {
+                    let u = rng.next_f32();
+                    if u < 0.1 {
+                        (rng.next_gaussian() * 4.0) as f32
+                    } else {
+                        (rng.next_gaussian() * 0.05) as f32
+                    }
+                })
+                .collect();
+            let mut p = Vec::new();
+            let greedy = greedy_probs(&g, rho, 2, &mut p);
+            // Bisect closed-form eps to the same expected nnz.
+            let (mut lo, mut hi) = (0.0f32, 100.0f32);
+            let mut pc = Vec::new();
+            for _ in 0..48 {
+                let mid = 0.5 * (lo + hi);
+                if closed_form_probs(&g, mid, &mut pc).expected_nnz > greedy.expected_nnz {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            let exact = closed_form_probs(&g, 0.5 * (lo + hi), &mut pc);
+            println!(
+                "{d:>8} {rho:>8.2} | {:>12.4} {:>12.4} {:>8.4}",
+                greedy.variance,
+                exact.variance,
+                greedy.variance / exact.variance
+            );
+        }
+    }
+}

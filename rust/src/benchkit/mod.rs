@@ -1,0 +1,157 @@
+//! Tiny benchmarking harness (criterion is unavailable in the offline
+//! registry — see DESIGN.md §Substitutions).
+//!
+//! Provides warmed-up, repeated timing with mean / p50 / p95 and throughput
+//! reporting, plus a `black_box` to defeat dead-code elimination. All bench
+//! targets (`rust/benches/*.rs`, `harness = false`) use this.
+
+use std::time::{Duration, Instant};
+
+/// Re-export of the standard hint; used by benches to keep results alive.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Result of a timed run.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items: Option<u64>,
+}
+
+impl Stats {
+    /// Throughput in items/second, if `items` was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items
+            .map(|n| n as f64 / self.mean.as_secs_f64())
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:>8.2} Gitem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:>8.2} Mitem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:>8.2} Kitem/s", t / 1e3),
+            Some(t) => format!("  {:>8.2} item/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} mean {:>10?}  p50 {:>10?}  p95 {:>10?}  min {:>10?}{}",
+            self.name, self.mean, self.p50, self.p95, self.min, tp
+        )
+    }
+}
+
+/// Benchmark runner: fixed warmup then `samples` timed invocations.
+pub struct Bencher {
+    samples: usize,
+    warmup: usize,
+    min_sample_time: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            samples: 30,
+            warmup: 3,
+            min_sample_time: Duration::from_micros(50),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(samples: usize, warmup: usize) -> Self {
+        Self {
+            samples,
+            warmup,
+            min_sample_time: Duration::from_micros(50),
+        }
+    }
+
+    /// Quick preset for heavier end-to-end benches.
+    pub fn heavy() -> Self {
+        Self::new(5, 1)
+    }
+
+    /// Time `f`, auto-batching fast functions so each sample is at least
+    /// `min_sample_time` long. `items` is the per-invocation work amount
+    /// used for throughput (e.g. the gradient dimension).
+    pub fn bench<F: FnMut()>(&self, name: &str, items: Option<u64>, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        // Calibrate batch size.
+        let mut batch = 1usize;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            if t0.elapsed() >= self.min_sample_time || batch >= 1 << 20 {
+                break;
+            }
+            batch *= 4;
+        }
+        let mut times: Vec<Duration> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            times.push(t0.elapsed() / batch as u32);
+        }
+        times.sort();
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        let stats = Stats {
+            name: name.to_string(),
+            iters: self.samples * batch,
+            mean,
+            p50: times[times.len() / 2],
+            p95: times[(times.len() * 95 / 100).min(times.len() - 1)],
+            min: times[0],
+            items,
+        };
+        println!("{}", stats.report());
+        stats
+    }
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bencher::new(5, 1);
+        let mut acc = 0u64;
+        let s = b.bench("noop-ish", Some(100), || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(s.iters >= 5);
+        assert!(s.mean >= Duration::ZERO);
+        assert!(s.throughput().unwrap() > 0.0);
+        assert!(s.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let b = Bencher::new(10, 1);
+        let s = b.bench("sleepless", None, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.min <= s.p50);
+        assert!(s.p50 <= s.p95);
+        assert!(s.throughput().is_none());
+    }
+}

@@ -1,0 +1,155 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports the forms the `gsparse` binary and examples need:
+//! `prog SUBCOMMAND [--flag] [--key value] [--key=value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, `--key value` options, `--flag` booleans,
+/// and positionals, in a deterministic order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable); `argv[0]` must already be
+    /// stripped by the caller.
+    pub fn parse_from<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        // First non-flag token is the subcommand.
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                out.consume_option(stripped, &mut it);
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    fn consume_option<I: Iterator<Item = String>>(
+        &mut self,
+        stripped: &str,
+        it: &mut std::iter::Peekable<I>,
+    ) {
+        if let Some((k, v)) = stripped.split_once('=') {
+            self.opts.insert(k.to_string(), v.to_string());
+        } else if it
+            .peek()
+            .map(|n| !n.starts_with("--"))
+            .unwrap_or(false)
+        {
+            let v = it.next().unwrap();
+            self.opts.insert(stripped.to_string(), v);
+        } else {
+            self.flags.push(stripped.to_string());
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed getter with a default; exits with a clear message on a malformed
+    /// value (this is a CLI front door, not a library error path).
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{name} expects a {}", std::any::type_name::<T>());
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// Comma-separated list getter, e.g. `--rho 0.1,0.05,0.01`.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().unwrap_or_else(|_| {
+                        eprintln!("error: --{name} expects comma-separated values");
+                        std::process::exit(2);
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NB: a bare `--flag` followed by a positional is ambiguous in this
+        // grammar (the positional becomes the flag's value); callers use
+        // `--key=value` style or put positionals first.
+        let a = parse("train --rho 0.1 --workers=4 out.csv --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("rho"), Some("0.1"));
+        assert_eq!(a.get("workers"), Some("4"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("fig --n 100 --eps 0.5");
+        assert_eq!(a.get_parse("n", 0usize), 100);
+        assert!((a.get_parse("eps", 0.0f64) - 0.5).abs() < 1e-12);
+        assert_eq!(a.get_parse("missing", 7u32), 7);
+        assert_eq!(a.get_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn list_getter() {
+        let a = parse("x --rho 0.1,0.05");
+        assert_eq!(a.get_list("rho", &[1.0f64]), vec![0.1, 0.05]);
+        assert_eq!(a.get_list("other", &[1.0f64]), vec![1.0]);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("run --fast");
+        assert!(a.flag("fast"));
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert!(a.subcommand.is_none());
+        assert!(a.flag("help"));
+    }
+}

@@ -1,0 +1,137 @@
+//! Entropy accounting for the dense symbol stream `q̃ ∈ {0, ±1, 2}^d`.
+//!
+//! The paper bounds the entropy-coded size by
+//! `Σ_ℓ d_ℓ log₂(d / d_ℓ) ≤ 2d` bits, where `d_ℓ` counts occurrences of
+//! symbol `ℓ`. We expose that quantity so the figure drivers can report the
+//! tighter entropy cost alongside the fixed 2-bit cost.
+
+use crate::sparsify::SparseGrad;
+
+/// Symbol histogram of a sparsified gradient's dense representation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SymbolCounts {
+    /// Dropped coordinates (symbol 0).
+    pub zeros: usize,
+    /// Positive QB survivors (+1).
+    pub plus: usize,
+    /// Negative QB survivors (−1).
+    pub minus: usize,
+    /// QA survivors (symbol 2).
+    pub exact: usize,
+}
+
+impl SymbolCounts {
+    pub fn of(sg: &SparseGrad) -> Self {
+        let plus = sg.shared.iter().filter(|&&(_, neg)| !neg).count();
+        let minus = sg.shared.len() - plus;
+        let exact = sg.exact.len();
+        Self {
+            zeros: sg.d as usize - plus - minus - exact,
+            plus,
+            minus,
+            exact,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.zeros + self.plus + self.minus + self.exact
+    }
+}
+
+/// The paper's entropy bound `Σ_ℓ d_ℓ log₂(d / d_ℓ)` in bits (0-count
+/// symbols contribute nothing). Always ≤ 2d.
+pub fn symbol_entropy_bits(counts: &SymbolCounts) -> f64 {
+    let d = counts.total() as f64;
+    if d == 0.0 {
+        return 0.0;
+    }
+    [counts.zeros, counts.plus, counts.minus, counts.exact]
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| c as f64 * (d / c as f64).log2())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(d: usize, exact: usize, plus: usize, minus: usize) -> SparseGrad {
+        let mut sg = SparseGrad::empty(d);
+        let mut idx = 0u32;
+        for _ in 0..exact {
+            sg.exact.push((idx, 1.0));
+            idx += 1;
+        }
+        for _ in 0..plus {
+            sg.shared.push((idx, false));
+            idx += 1;
+        }
+        for _ in 0..minus {
+            sg.shared.push((idx, true));
+            idx += 1;
+        }
+        sg
+    }
+
+    #[test]
+    fn counts_are_correct() {
+        let sg = msg(100, 5, 10, 15);
+        let c = SymbolCounts::of(&sg);
+        assert_eq!(
+            c,
+            SymbolCounts {
+                zeros: 70,
+                plus: 10,
+                minus: 15,
+                exact: 5
+            }
+        );
+        assert_eq!(c.total(), 100);
+    }
+
+    #[test]
+    fn entropy_bounded_by_2d() {
+        for (e, p, m) in [(0, 0, 0), (25, 25, 25), (10, 5, 3), (100, 0, 0)] {
+            let sg = msg(100, e, p, m);
+            let bits = symbol_entropy_bits(&SymbolCounts::of(&sg));
+            assert!(bits <= 2.0 * 100.0 + 1e-9, "({e},{p},{m}): {bits}");
+            assert!(bits >= 0.0);
+        }
+    }
+
+    #[test]
+    fn entropy_zero_when_uniformly_one_symbol() {
+        let sg = msg(64, 0, 0, 0); // all zeros
+        assert_eq!(symbol_entropy_bits(&SymbolCounts::of(&sg)), 0.0);
+    }
+
+    #[test]
+    fn entropy_maximized_at_uniform_quarters() {
+        let uniform = msg(100, 25, 25, 25);
+        let skewed = msg(100, 1, 1, 1);
+        assert!(
+            symbol_entropy_bits(&SymbolCounts::of(&uniform))
+                > symbol_entropy_bits(&SymbolCounts::of(&skewed))
+        );
+        // Uniform quarters = exactly 2 bits/symbol.
+        let bits = symbol_entropy_bits(&SymbolCounts::of(&uniform));
+        assert!((bits - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn property_entropy_bound_holds() {
+        crate::proptest_lite::run("entropy ≤ 2d", 64, |gen| {
+            let d = gen.usize_in(4, 1000);
+            let e = gen.usize_in(0, d / 4 + 1);
+            let p = gen.usize_in(0, d / 4 + 1);
+            let m = gen.usize_in(0, d / 4 + 1);
+            let sg = msg(d, e, p, m);
+            let bits = symbol_entropy_bits(&SymbolCounts::of(&sg));
+            if bits > 2.0 * d as f64 + 1e-6 {
+                return Err(format!("entropy {bits} > 2d = {}", 2 * d));
+            }
+            Ok(())
+        });
+    }
+}

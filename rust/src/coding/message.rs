@@ -1,0 +1,407 @@
+//! The actual byte wire format for sparsified gradients (what the simulated
+//! All-Reduce ships between workers).
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "GSPR"
+//! 4       1     version (1)
+//! 5       1     encoding (0 = Indexed, 1 = DenseSymbols)
+//! 6       2     reserved (0)
+//! 8       4     d            (u32 LE)
+//! 12      4     nnz_a        (u32 LE)
+//! 16      4     nnz_b        (u32 LE)
+//! 20      4     shared_mag   (f32 LE, = 1/λ)
+//! 24      ...   payload
+//! ```
+//!
+//! * Indexed payload: `nnz_a × (u32 index, f32 value)`, then `nnz_b × u32`
+//!   QB indices, then `⌈nnz_b/8⌉` bytes of QB sign bitmap (bit set ⇒
+//!   negative).
+//! * DenseSymbols payload: `⌈d/4⌉` bytes of 2-bit symbols in coordinate
+//!   order (0 dropped, 1 = +shared, 2 = −shared, 3 = exact), then `nnz_a`
+//!   f32 values for the exact coordinates in ascending coordinate order.
+//!
+//! [`encode`] picks the smaller of the two encodings, exactly like the
+//! `min(·,·)` in Theorem 4.
+
+use crate::sparsify::SparseGrad;
+
+pub const MAGIC: &[u8; 4] = b"GSPR";
+pub const VERSION: u8 = 1;
+/// Fixed header length in bytes.
+pub const HEADER_LEN: usize = 24;
+
+/// Which payload layout a message uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Encoding {
+    Indexed = 0,
+    DenseSymbols = 1,
+}
+
+/// Wire-format decode errors.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum WireError {
+    #[error("message too short: {0} bytes")]
+    Truncated(usize),
+    #[error("bad magic")]
+    BadMagic,
+    #[error("unsupported version {0}")]
+    BadVersion(u8),
+    #[error("unknown encoding {0}")]
+    BadEncoding(u8),
+    #[error("payload length mismatch: expected {expected}, got {got}")]
+    LengthMismatch { expected: usize, got: usize },
+    #[error("index {index} out of bounds (d = {d})")]
+    IndexOutOfBounds { index: u32, d: u32 },
+    #[error("indices not strictly ascending at position {0}")]
+    IndicesNotSorted(usize),
+}
+
+fn indexed_payload_len(nnz_a: usize, nnz_b: usize) -> usize {
+    nnz_a * 8 + nnz_b * 4 + nnz_b.div_ceil(8)
+}
+
+fn dense_payload_len(d: usize, nnz_a: usize) -> usize {
+    d.div_ceil(4) + nnz_a * 4
+}
+
+/// Byte length [`encode`] will produce for `sg` (header + cheaper payload).
+pub fn encoded_len(sg: &SparseGrad) -> usize {
+    HEADER_LEN
+        + indexed_payload_len(sg.exact.len(), sg.shared.len())
+            .min(dense_payload_len(sg.d as usize, sg.exact.len()))
+}
+
+/// Encode into `out` (cleared first). Returns the encoding chosen.
+pub fn encode(sg: &SparseGrad, out: &mut Vec<u8>) -> Encoding {
+    let d = sg.d as usize;
+    let (na, nb) = (sg.exact.len(), sg.shared.len());
+    let enc = if indexed_payload_len(na, nb) <= dense_payload_len(d, na) {
+        Encoding::Indexed
+    } else {
+        Encoding::DenseSymbols
+    };
+    out.clear();
+    out.reserve(HEADER_LEN + indexed_payload_len(na, nb).min(dense_payload_len(d, na)));
+    out.extend_from_slice(MAGIC);
+    out.push(VERSION);
+    out.push(enc as u8);
+    out.extend_from_slice(&[0, 0]);
+    out.extend_from_slice(&(sg.d).to_le_bytes());
+    out.extend_from_slice(&(na as u32).to_le_bytes());
+    out.extend_from_slice(&(nb as u32).to_le_bytes());
+    out.extend_from_slice(&sg.shared_mag.to_le_bytes());
+
+    match enc {
+        Encoding::Indexed => {
+            // Pre-size once and write at offsets: avoids per-entry capacity
+            // checks (measured 2.5x on the encode hot path — see
+            // EXPERIMENTS.md §Perf).
+            let start = out.len();
+            out.resize(start + indexed_payload_len(na, nb), 0);
+            let payload = &mut out[start..];
+            let mut off = 0;
+            for &(i, v) in &sg.exact {
+                payload[off..off + 4].copy_from_slice(&i.to_le_bytes());
+                payload[off + 4..off + 8].copy_from_slice(&v.to_le_bytes());
+                off += 8;
+            }
+            for &(i, _) in &sg.shared {
+                payload[off..off + 4].copy_from_slice(&i.to_le_bytes());
+                off += 4;
+            }
+            for (pos, &(_, neg)) in sg.shared.iter().enumerate() {
+                if neg {
+                    payload[off + pos / 8] |= 1 << (pos % 8);
+                }
+            }
+        }
+        Encoding::DenseSymbols => {
+            // 2-bit symbols.
+            let mut symbols = vec![0u8; d.div_ceil(4)];
+            for &(i, _) in &sg.exact {
+                let i = i as usize;
+                symbols[i / 4] |= 0b11 << (2 * (i % 4));
+            }
+            for &(i, neg) in &sg.shared {
+                let i = i as usize;
+                let sym = if neg { 0b10 } else { 0b01 };
+                symbols[i / 4] |= sym << (2 * (i % 4));
+            }
+            out.extend_from_slice(&symbols);
+            for &(_, v) in &sg.exact {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    enc
+}
+
+/// Decode a wire message back into a [`SparseGrad`]. Validates structure and
+/// rejects malformed input (the failure-injection tests exercise every arm).
+pub fn decode(buf: &[u8]) -> Result<SparseGrad, WireError> {
+    if buf.len() < HEADER_LEN {
+        return Err(WireError::Truncated(buf.len()));
+    }
+    if &buf[0..4] != MAGIC {
+        return Err(WireError::BadMagic);
+    }
+    if buf[4] != VERSION {
+        return Err(WireError::BadVersion(buf[4]));
+    }
+    let enc = match buf[5] {
+        0 => Encoding::Indexed,
+        1 => Encoding::DenseSymbols,
+        e => return Err(WireError::BadEncoding(e)),
+    };
+    let d = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    let na = u32::from_le_bytes(buf[12..16].try_into().unwrap()) as usize;
+    let nb = u32::from_le_bytes(buf[16..20].try_into().unwrap()) as usize;
+    let shared_mag = f32::from_le_bytes(buf[20..24].try_into().unwrap());
+    let payload = &buf[HEADER_LEN..];
+
+    let mut sg = SparseGrad::empty(d as usize);
+    sg.shared_mag = shared_mag;
+
+    match enc {
+        Encoding::Indexed => {
+            let expected = indexed_payload_len(na, nb);
+            if payload.len() != expected {
+                return Err(WireError::LengthMismatch {
+                    expected,
+                    got: payload.len(),
+                });
+            }
+            let mut off = 0;
+            sg.exact.reserve(na);
+            let mut prev: i64 = -1;
+            for pos in 0..na {
+                let i = u32::from_le_bytes(payload[off..off + 4].try_into().unwrap());
+                let v = f32::from_le_bytes(payload[off + 4..off + 8].try_into().unwrap());
+                off += 8;
+                if i >= d {
+                    return Err(WireError::IndexOutOfBounds { index: i, d });
+                }
+                if (i as i64) <= prev {
+                    return Err(WireError::IndicesNotSorted(pos));
+                }
+                prev = i as i64;
+                sg.exact.push((i, v));
+            }
+            let idx_end = off + nb * 4;
+            let bitmap = &payload[idx_end..];
+            sg.shared.reserve(nb);
+            prev = -1;
+            for pos in 0..nb {
+                let i =
+                    u32::from_le_bytes(payload[off + pos * 4..off + pos * 4 + 4].try_into().unwrap());
+                if i >= d {
+                    return Err(WireError::IndexOutOfBounds { index: i, d });
+                }
+                if (i as i64) <= prev {
+                    return Err(WireError::IndicesNotSorted(pos));
+                }
+                prev = i as i64;
+                let neg = bitmap[pos / 8] & (1 << (pos % 8)) != 0;
+                sg.shared.push((i, neg));
+            }
+        }
+        Encoding::DenseSymbols => {
+            let expected = dense_payload_len(d as usize, na);
+            if payload.len() != expected {
+                return Err(WireError::LengthMismatch {
+                    expected,
+                    got: payload.len(),
+                });
+            }
+            let symbols = &payload[..(d as usize).div_ceil(4)];
+            let values = &payload[(d as usize).div_ceil(4)..];
+            sg.exact.reserve(na);
+            sg.shared.reserve(nb);
+            let mut voff = 0;
+            // Byte-at-a-time with a zero-byte fast path: 4 coordinates per
+            // iteration, and all-dropped groups cost one compare.
+            for (bi, &byte) in symbols.iter().enumerate() {
+                if byte == 0 {
+                    continue;
+                }
+                let base = (bi * 4) as u32;
+                let mut rest = byte;
+                for lane in 0..4u32 {
+                    let sym = rest & 0b11;
+                    rest >>= 2;
+                    if sym == 0 {
+                        continue;
+                    }
+                    let i = base + lane;
+                    if i >= d {
+                        break;
+                    }
+                    match sym {
+                        0b01 => sg.shared.push((i, false)),
+                        0b10 => sg.shared.push((i, true)),
+                        _ => {
+                            if voff + 4 > values.len() {
+                                return Err(WireError::LengthMismatch {
+                                    expected,
+                                    got: payload.len(),
+                                });
+                            }
+                            let v =
+                                f32::from_le_bytes(values[voff..voff + 4].try_into().unwrap());
+                            voff += 4;
+                            sg.exact.push((i, v));
+                        }
+                    }
+                }
+            }
+            if sg.exact.len() != na || sg.shared.len() != nb {
+                return Err(WireError::LengthMismatch {
+                    expected: na + nb,
+                    got: sg.exact.len() + sg.shared.len(),
+                });
+            }
+        }
+    }
+    Ok(sg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngkit::RandArray;
+    use crate::sparsify::{greedy_probs, sample_sparse};
+
+    fn sample_message(d: usize, rho: f32, seed: u64) -> SparseGrad {
+        let mut rng = crate::rngkit::Xoshiro256pp::seed_from_u64(seed);
+        let g: Vec<f32> = (0..d).map(|_| (rng.next_gaussian() * 0.5) as f32).collect();
+        let mut p = Vec::new();
+        let pv = greedy_probs(&g, rho, 2, &mut p);
+        let mut ra = RandArray::from_seed(seed ^ 1, 1 << 16);
+        sample_sparse(&g, &p, pv.inv_lambda, &mut ra)
+    }
+
+    #[test]
+    fn roundtrip_indexed() {
+        let sg = sample_message(1024, 0.02, 40); // sparse -> indexed
+        let mut buf = Vec::new();
+        let enc = encode(&sg, &mut buf);
+        assert_eq!(enc, Encoding::Indexed);
+        assert_eq!(buf.len(), encoded_len(&sg));
+        let back = decode(&buf).unwrap();
+        assert_eq!(back, sg);
+    }
+
+    #[test]
+    fn roundtrip_dense_symbols() {
+        let sg = sample_message(256, 0.9, 41); // dense -> symbol coding
+        let mut buf = Vec::new();
+        let enc = encode(&sg, &mut buf);
+        assert_eq!(enc, Encoding::DenseSymbols);
+        let back = decode(&buf).unwrap();
+        assert_eq!(back, sg);
+    }
+
+    #[test]
+    fn empty_message_roundtrip() {
+        let sg = SparseGrad::empty(100);
+        let mut buf = Vec::new();
+        encode(&sg, &mut buf);
+        assert_eq!(decode(&buf).unwrap(), sg);
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let sg = sample_message(128, 0.1, 42);
+        let mut buf = Vec::new();
+        encode(&sg, &mut buf);
+        assert_eq!(decode(&buf[..10]), Err(WireError::Truncated(10)));
+        let err = decode(&buf[..buf.len() - 1]).unwrap_err();
+        assert!(matches!(err, WireError::LengthMismatch { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_encoding() {
+        let sg = sample_message(128, 0.1, 43);
+        let mut buf = Vec::new();
+        encode(&sg, &mut buf);
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert_eq!(decode(&bad), Err(WireError::BadMagic));
+        let mut bad = buf.clone();
+        bad[4] = 9;
+        assert_eq!(decode(&bad), Err(WireError::BadVersion(9)));
+        let mut bad = buf.clone();
+        bad[5] = 7;
+        assert_eq!(decode(&bad), Err(WireError::BadEncoding(7)));
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_index() {
+        let mut sg = SparseGrad::empty(16);
+        sg.exact.push((3, 1.0));
+        let mut buf = Vec::new();
+        encode(&sg, &mut buf);
+        // Corrupt the index to 999 (little-endian at payload offset 0).
+        buf[HEADER_LEN..HEADER_LEN + 4].copy_from_slice(&999u32.to_le_bytes());
+        assert_eq!(
+            decode(&buf),
+            Err(WireError::IndexOutOfBounds { index: 999, d: 16 })
+        );
+    }
+
+    #[test]
+    fn rejects_unsorted_indices() {
+        // d large enough that the Indexed encoding is chosen.
+        let mut sg = SparseGrad::empty(1000);
+        sg.exact.push((5, 1.0));
+        sg.exact.push((9, 2.0));
+        let mut buf = Vec::new();
+        encode(&sg, &mut buf);
+        // Swap index order.
+        buf[HEADER_LEN..HEADER_LEN + 4].copy_from_slice(&9u32.to_le_bytes());
+        buf[HEADER_LEN + 8..HEADER_LEN + 12].copy_from_slice(&5u32.to_le_bytes());
+        assert!(matches!(
+            decode(&buf),
+            Err(WireError::IndicesNotSorted(_)) | Err(WireError::IndexOutOfBounds { .. })
+        ));
+    }
+
+    #[test]
+    fn encoder_picks_smaller_encoding() {
+        for (d, rho) in [(4096, 0.01f32), (128, 0.8), (512, 0.25), (64, 1.0)] {
+            let sg = sample_message(d, rho, 44 + d as u64);
+            let mut buf = Vec::new();
+            encode(&sg, &mut buf);
+            let indexed = HEADER_LEN + indexed_payload_len(sg.exact.len(), sg.shared.len());
+            let dense = HEADER_LEN + dense_payload_len(d, sg.exact.len());
+            assert_eq!(buf.len(), indexed.min(dense), "d={d} rho={rho}");
+        }
+    }
+
+    #[test]
+    fn property_roundtrip_random_messages() {
+        crate::proptest_lite::run("wire roundtrip is exact", 64, |gen| {
+            let d = gen.usize_in(1, 2000);
+            let rho = gen.f32_in(0.01, 1.0);
+            let g = gen.gradient_vec(d);
+            let mut p = Vec::new();
+            let pv = greedy_probs(&g, rho, 2, &mut p);
+            let mut ra = RandArray::new(
+                crate::rngkit::Xoshiro256pp::seed_from_u64(gen.u64()),
+                1 << 14,
+            );
+            let sg = sample_sparse(&g, &p, pv.inv_lambda, &mut ra);
+            let mut buf = Vec::new();
+            encode(&sg, &mut buf);
+            if buf.len() != encoded_len(&sg) {
+                return Err(format!("encoded_len {} != actual {}", encoded_len(&sg), buf.len()));
+            }
+            match decode(&buf) {
+                Ok(back) if back == sg => Ok(()),
+                Ok(_) => Err("roundtrip not identical".into()),
+                Err(e) => Err(format!("decode failed: {e}")),
+            }
+        });
+    }
+}

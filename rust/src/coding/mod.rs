@@ -1,0 +1,76 @@
+//! §3.3 coding strategy: pack a sparsified gradient into an actual byte
+//! message, and account its cost both in real wire bytes and in the paper's
+//! idealized bit model (Theorem 4).
+//!
+//! Two codings are implemented, and the encoder picks the cheaper one per
+//! message — mirroring the `min(·, ·)` in Theorem 4:
+//!
+//! * **Indexed** — `Q_A` as `(index, float)` pairs, `Q_B` as indices plus a
+//!   sign bitmap plus the single shared float `1/λ`;
+//! * **Dense symbols** — the paper's `q̃ ∈ {0, ±1, 2}^d` alternative: a 2-bit
+//!   symbol per coordinate (0 = dropped, ±1 = QB survivor with sign,
+//!   2 = QA survivor) followed by the QA floats in coordinate order.
+//!
+//! [`entropy`] provides the entropy-coded size bound
+//! `Σ_ℓ d_ℓ log₂(d/d_ℓ) ≤ 2d` the paper cites for `q̃`.
+
+mod entropy;
+mod message;
+
+pub use entropy::{symbol_entropy_bits, SymbolCounts};
+pub use message::{decode, encode, encoded_len, Encoding, WireError, HEADER_LEN};
+
+use crate::sparsify::{index_bits, SparseGrad, FLOAT_BITS};
+
+/// Theorem 4's idealized coding-length bound for a `(ρ,s)`-approximately
+/// sparse gradient: `s(b + log₂ d) + min(ρ·s·log₂ d, d) + b` bits.
+pub fn theorem4_bound_bits(s: usize, rho: f64, d: usize) -> u64 {
+    let ib = index_bits(d) as f64;
+    let qa = s as f64 * (FLOAT_BITS as f64 + ib);
+    let qb = (rho * s as f64 * ib).min(d as f64);
+    (qa + qb).ceil() as u64 + FLOAT_BITS
+}
+
+/// Exact idealized cost of a *given* message under the paper's bit model
+/// (full-precision floats, `⌈log₂ d⌉`-bit indices, 1-bit signs folded into
+/// the QB index cost, one float for `1/λ`); the dense-symbol alternative is
+/// taken when cheaper, as in the Fig 5 cost formula.
+pub fn ideal_message_bits(sg: &SparseGrad) -> u64 {
+    let d = sg.d as usize;
+    let ib = index_bits(d);
+    let qa = sg.exact.len() as u64 * (FLOAT_BITS + ib);
+    let qb_indexed = sg.shared.len() as u64 * ib;
+    let qb_dense = 2 * d as u64;
+    qa + qb_indexed.min(qb_dense) + FLOAT_BITS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theorem4_bound_monotone_in_s() {
+        let d = 2048;
+        let b1 = theorem4_bound_bits(10, 0.5, d);
+        let b2 = theorem4_bound_bits(100, 0.5, d);
+        assert!(b2 > b1);
+    }
+
+    #[test]
+    fn theorem4_qb_term_caps_at_d() {
+        let d = 64;
+        // Huge rho*s*log2d should cap the middle term at d.
+        let b = theorem4_bound_bits(1, 1e9, d);
+        assert_eq!(b, (FLOAT_BITS + index_bits(d)) + d as u64 + FLOAT_BITS);
+    }
+
+    #[test]
+    fn ideal_bits_picks_cheaper_qb_coding() {
+        let mut sg = SparseGrad::empty(32);
+        sg.shared = (0..30).map(|i| (i as u32, false)).collect();
+        // Indexed QB: 30 * 5 bits = 150 > dense 2*32 = 64.
+        assert_eq!(ideal_message_bits(&sg), 64 + FLOAT_BITS);
+        sg.shared.truncate(2); // 2*5 = 10 < 64
+        assert_eq!(ideal_message_bits(&sg), 10 + FLOAT_BITS);
+    }
+}

@@ -1,0 +1,199 @@
+//! All-Reduce over *encoded* sparsified-gradient messages — Algorithm 1
+//! steps 6–8.
+//!
+//! The [`Aggregator`] consumes the actual wire bytes each worker produced
+//! (round-tripping through [`crate::coding`] so the simulation exercises the
+//! real codec), averages them into a dense gradient `v_t = (1/M) Σ_m
+//! Q(g^m)`, and reports the per-round byte and simulated-time cost. When the
+//! combined density is low it aggregates sparsely without materializing
+//! per-worker dense vectors.
+
+use super::network::NetworkModel;
+use crate::coding;
+use crate::sparsify::SparseGrad;
+
+/// How the reduction is computed (numerically identical; different cost
+/// accounting and memory behaviour).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceAlgo {
+    /// Master decodes M messages and accumulates into one dense buffer.
+    Naive,
+    /// Sparse accumulation: survivors are scatter-added without any dense
+    /// per-worker intermediate (wins when ρ·M ≪ 1).
+    Sparse,
+}
+
+/// Result of one aggregation round.
+#[derive(Debug, Clone)]
+pub struct AggregateOutput {
+    /// Total encoded bytes uploaded by workers this round.
+    pub upload_bytes: u64,
+    /// Bytes broadcast back (dense averaged gradient, or re-sparsified).
+    pub broadcast_bytes: u64,
+    /// Simulated wall time of the round under the aggregator's network model.
+    pub sim_time_s: f64,
+}
+
+/// Synchronous All-Reduce master (also usable as a worker-side mirror since
+/// the reduction is deterministic given the same messages).
+pub struct Aggregator {
+    pub net: NetworkModel,
+    pub algo: ReduceAlgo,
+    /// Scratch for decode (reused across rounds).
+    decode_buf: Vec<SparseGrad>,
+    wire_buf: Vec<u8>,
+}
+
+impl Aggregator {
+    pub fn new(net: NetworkModel, algo: ReduceAlgo) -> Self {
+        Self {
+            net,
+            algo,
+            decode_buf: Vec::new(),
+            wire_buf: Vec::new(),
+        }
+    }
+
+    /// Encode each worker's sparse gradient to bytes, "transmit", decode,
+    /// and average into `out` (len d, zeroed by this call). Returns the cost
+    /// accounting. This is the honest path used by integration tests; the
+    /// figure drivers use [`Aggregator::reduce_decoded`] on pre-encoded
+    /// messages when they already hold them.
+    pub fn reduce(&mut self, grads: &[SparseGrad], out: &mut [f32]) -> AggregateOutput {
+        let m = grads.len();
+        assert!(m > 0, "no workers");
+        let mut upload_bytes = 0u64;
+        self.decode_buf.clear();
+        for sg in grads {
+            coding::encode(sg, &mut self.wire_buf);
+            upload_bytes += self.wire_buf.len() as u64;
+            let decoded = coding::decode(&self.wire_buf).expect("self-encoded message");
+            self.decode_buf.push(decoded);
+        }
+        let decoded = std::mem::take(&mut self.decode_buf);
+        let res = self.reduce_decoded(&decoded, upload_bytes, out);
+        self.decode_buf = decoded;
+        res
+    }
+
+    /// Average already-decoded messages into `out`.
+    pub fn reduce_decoded(
+        &self,
+        grads: &[SparseGrad],
+        upload_bytes: u64,
+        out: &mut [f32],
+    ) -> AggregateOutput {
+        let m = grads.len();
+        out.fill(0.0);
+        let inv_m = 1.0 / m as f32;
+        match self.algo {
+            ReduceAlgo::Naive => {
+                // Decode each worker to dense then axpy (reference path).
+                let mut dense = vec![0.0f32; out.len()];
+                for sg in grads {
+                    dense.fill(0.0);
+                    sg.add_into(1.0, &mut dense);
+                    crate::tensor::axpy(inv_m, &dense, out);
+                }
+            }
+            ReduceAlgo::Sparse => {
+                for sg in grads {
+                    sg.add_into(inv_m, out);
+                }
+            }
+        }
+        // Broadcast: dense averaged gradient (Algorithm 1 step 8). The
+        // optional step-7 re-sparsification is applied by the coordinator
+        // before calling this when enabled.
+        let broadcast_bytes = (out.len() * 4) as u64;
+        let per_worker = upload_bytes / m as u64;
+        let worker_bytes: Vec<u64> = (0..m)
+            .map(|i| {
+                // Distribute the remainder deterministically.
+                per_worker + if (i as u64) < upload_bytes % m as u64 { 1 } else { 0 }
+            })
+            .collect();
+        AggregateOutput {
+            upload_bytes,
+            broadcast_bytes,
+            sim_time_s: self.net.round_time_s(&worker_bytes, broadcast_bytes),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngkit::RandArray;
+    use crate::sparsify::{greedy_probs, sample_sparse};
+
+    fn worker_grad(d: usize, seed: u64, rho: f32) -> SparseGrad {
+        let mut rng = crate::rngkit::Xoshiro256pp::seed_from_u64(seed);
+        let g: Vec<f32> = (0..d).map(|_| (rng.next_gaussian() * 0.4) as f32).collect();
+        let mut p = Vec::new();
+        let pv = greedy_probs(&g, rho, 2, &mut p);
+        let mut ra = RandArray::from_seed(seed ^ 0xF00D, 1 << 16);
+        sample_sparse(&g, &p, pv.inv_lambda, &mut ra)
+    }
+
+    #[test]
+    fn naive_and_sparse_agree() {
+        let d = 512;
+        let grads: Vec<SparseGrad> = (0..4).map(|m| worker_grad(d, 100 + m, 0.2)).collect();
+        let mut a = Aggregator::new(NetworkModel::datacenter_10g(), ReduceAlgo::Naive);
+        let mut b = Aggregator::new(NetworkModel::datacenter_10g(), ReduceAlgo::Sparse);
+        let mut out_a = vec![0.0; d];
+        let mut out_b = vec![0.0; d];
+        let ra = a.reduce(&grads, &mut out_a);
+        let rb = b.reduce(&grads, &mut out_b);
+        for i in 0..d {
+            assert!((out_a[i] - out_b[i]).abs() < 1e-6, "coord {i}");
+        }
+        assert_eq!(ra.upload_bytes, rb.upload_bytes);
+    }
+
+    #[test]
+    fn reduce_is_mean_of_decodes() {
+        let d = 128;
+        let grads: Vec<SparseGrad> = (0..3).map(|m| worker_grad(d, 200 + m, 0.5)).collect();
+        let mut agg = Aggregator::new(NetworkModel::datacenter_10g(), ReduceAlgo::Sparse);
+        let mut out = vec![0.0; d];
+        agg.reduce(&grads, &mut out);
+        let mut expect = vec![0.0f64; d];
+        for sg in &grads {
+            for (i, v) in sg.to_dense().into_iter().enumerate() {
+                expect[i] += v as f64 / 3.0;
+            }
+        }
+        for i in 0..d {
+            assert!((out[i] as f64 - expect[i]).abs() < 1e-6, "coord {i}");
+        }
+    }
+
+    #[test]
+    fn cost_accounting_positive_and_scaling() {
+        let d = 2048;
+        let sparse: Vec<SparseGrad> = (0..4).map(|m| worker_grad(d, 300 + m, 0.02)).collect();
+        let dense: Vec<SparseGrad> = (0..4).map(|m| worker_grad(d, 300 + m, 1.0)).collect();
+        let mut agg = Aggregator::new(NetworkModel::commodity_1g(), ReduceAlgo::Sparse);
+        let mut out = vec![0.0; d];
+        let rs = agg.reduce(&sparse, &mut out);
+        let rd = agg.reduce(&dense, &mut out);
+        assert!(rs.upload_bytes * 4 < rd.upload_bytes, "sparsification should shrink uploads");
+        assert!(rs.sim_time_s < rd.sim_time_s);
+        assert_eq!(rs.broadcast_bytes, (d * 4) as u64);
+    }
+
+    #[test]
+    fn single_worker_identity() {
+        let d = 64;
+        let g = worker_grad(d, 400, 0.9);
+        let mut agg = Aggregator::new(NetworkModel::datacenter_10g(), ReduceAlgo::Sparse);
+        let mut out = vec![0.0; d];
+        agg.reduce(std::slice::from_ref(&g), &mut out);
+        let dense = g.to_dense();
+        for i in 0..d {
+            assert!((out[i] - dense[i]).abs() < 1e-7);
+        }
+    }
+}

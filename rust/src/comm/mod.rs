@@ -1,0 +1,29 @@
+//! Simulated cluster communication layer.
+//!
+//! The paper's convex experiments simulate M machines (§5.1: "We simulated
+//! with M=4 machines, where one machine is both a worker and the master").
+//! This module makes the simulation *honest*: workers produce real encoded
+//! byte messages ([`crate::coding`]), the [`Aggregator`] combines them into
+//! an averaged dense gradient exactly as Algorithm 1 steps 6–8 describe, and
+//! a [`NetworkModel`] (α-β latency/bandwidth cost model) translates the bytes
+//! that crossed the simulated wire into simulated wall time so figure drivers
+//! can report communication-bound speedups.
+
+mod allreduce;
+mod network;
+
+pub use allreduce::{AggregateOutput, Aggregator, ReduceAlgo};
+pub use network::{NetworkModel, Topology};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reexports_compile() {
+        let net = NetworkModel::datacenter_10g();
+        assert!(net.message_time_s(1500) > 0.0);
+        let _ = ReduceAlgo::Naive;
+        let _ = Topology::Star;
+    }
+}

@@ -1,0 +1,125 @@
+//! α-β network cost model: transmitting an `n`-byte message costs
+//! `α + n/β` seconds (latency + inverse bandwidth). Used to convert the byte
+//! ledger of a training run into *simulated* communication wall time — the
+//! substitution for the authors' real 4-machine cluster (DESIGN.md
+//! §Substitutions).
+
+/// Physical topology of the simulated cluster; affects how many sequential
+/// message times one synchronization round costs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Parameter-server star: the master receives M−1 messages and
+    /// broadcasts one (the paper's Algorithm 1 with a master node).
+    Star,
+    /// Ring all-reduce: 2(M−1) phases, each carrying ~1/M of the payload.
+    Ring,
+}
+
+/// α-β cost model for a homogeneous cluster link.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkModel {
+    /// Per-message latency α in seconds.
+    pub alpha_s: f64,
+    /// Bandwidth β in bytes/second.
+    pub beta_bytes_per_s: f64,
+    pub topology: Topology,
+}
+
+impl NetworkModel {
+    /// 10 GbE datacenter defaults: 50 µs latency, 1.25 GB/s.
+    pub fn datacenter_10g() -> Self {
+        Self {
+            alpha_s: 50e-6,
+            beta_bytes_per_s: 1.25e9,
+            topology: Topology::Star,
+        }
+    }
+
+    /// 1 GbE commodity cluster: 200 µs latency, 125 MB/s — closest to the
+    /// paper's 2017-era testbed assumption.
+    pub fn commodity_1g() -> Self {
+        Self {
+            alpha_s: 200e-6,
+            beta_bytes_per_s: 125e6,
+            topology: Topology::Star,
+        }
+    }
+
+    /// Time for a single point-to-point message of `bytes`.
+    pub fn message_time_s(&self, bytes: u64) -> f64 {
+        self.alpha_s + bytes as f64 / self.beta_bytes_per_s
+    }
+
+    /// Simulated time of one synchronization round of Algorithm 1 steps 6–8:
+    /// `worker_bytes[m]` is what worker `m` uploads; `broadcast_bytes` is the
+    /// averaged gradient (or weight) pushed back to everyone.
+    pub fn round_time_s(&self, worker_bytes: &[u64], broadcast_bytes: u64) -> f64 {
+        match self.topology {
+            Topology::Star => {
+                // Uploads are serialized at the master's NIC (conservative,
+                // like the paper's single aggregating machine), broadcast
+                // counted once (switch multicast assumption).
+                let upload: f64 = worker_bytes
+                    .iter()
+                    .map(|&b| self.message_time_s(b))
+                    .sum();
+                upload + self.message_time_s(broadcast_bytes)
+            }
+            Topology::Ring => {
+                // 2(M−1) phases each carrying the max worker chunk of ~1/M.
+                let m = worker_bytes.len().max(1) as f64;
+                let max_bytes = worker_bytes.iter().copied().max().unwrap_or(0) as f64;
+                let phase = self.alpha_s + (max_bytes / m) / self.beta_bytes_per_s;
+                2.0 * (m - 1.0) * phase
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_time_has_latency_floor() {
+        let net = NetworkModel::datacenter_10g();
+        assert!(net.message_time_s(0) >= 50e-6);
+        // 1.25 GB at 1.25 GB/s ≈ 1 s.
+        let t = net.message_time_s(1_250_000_000);
+        assert!((t - 1.0).abs() < 0.01, "{t}");
+    }
+
+    #[test]
+    fn star_round_scales_with_workers() {
+        let net = NetworkModel::commodity_1g();
+        let t2 = net.round_time_s(&[1000, 1000], 1000);
+        let t4 = net.round_time_s(&[1000; 4], 1000);
+        assert!(t4 > t2);
+    }
+
+    #[test]
+    fn smaller_messages_cost_less() {
+        let net = NetworkModel::commodity_1g();
+        // Bandwidth-bound regime (MB-scale messages): a 20× smaller
+        // sparsified message wins by ≈20×. (At KB scale the α latency floor
+        // dominates and compression buys little — that regime is asserted
+        // separately below.)
+        let dense = net.round_time_s(&[10_000_000; 4], 10_000_000);
+        let sparse = net.round_time_s(&[500_000; 4], 500_000);
+        assert!(sparse < dense / 5.0, "sparse {sparse} vs dense {dense}");
+        // Latency-bound regime: both pay ≈ the same α floor.
+        let tiny_dense = net.round_time_s(&[4000; 4], 4000);
+        let tiny_sparse = net.round_time_s(&[200; 4], 200);
+        assert!(tiny_sparse > tiny_dense / 3.0);
+    }
+
+    #[test]
+    fn ring_beats_star_for_large_messages_many_workers() {
+        let mut net = NetworkModel::datacenter_10g();
+        let payload = vec![10_000_000u64; 16];
+        let star = net.round_time_s(&payload, 10_000_000);
+        net.topology = Topology::Ring;
+        let ring = net.round_time_s(&payload, 10_000_000);
+        assert!(ring < star, "ring {ring} vs star {star}");
+    }
+}

@@ -1,0 +1,342 @@
+//! Experiment configuration: typed structs for every workload plus a simple
+//! `key = value` config-file format (serde/toml unavailable offline).
+//!
+//! Files look like:
+//! ```text
+//! # synthetic logistic regression, Fig 1 cell (1,1)
+//! n = 1024
+//! d = 2048
+//! c1 = 0.6
+//! c2 = 0.25
+//! reg = 9.765625e-5
+//! rho = 0.1
+//! method = gspar
+//! ```
+//! Sections (`[name]`) namespace keys as `name.key`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// Which gradient compressor a run uses. This is the user-facing switch that
+/// selects among the paper's method and every baseline we implement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Dense (no compression) — the paper's "baseline".
+    Dense,
+    /// The paper's gradient sparsification, greedy solver (Alg. 3) — "GSpar".
+    GSpar,
+    /// The paper's closed-form solver (Alg. 2).
+    GSparExact,
+    /// Uniform-probability sampling baseline — "UniSp".
+    UniSp,
+    /// QSGD stochastic quantization [Alistarh et al.].
+    Qsgd,
+    /// TernGrad {-1,0,+1} ternarization [Wen et al.].
+    TernGrad,
+    /// Deterministic top-k (biased) ablation.
+    TopK,
+    /// 1-bit SGD with error feedback [Seide et al.] ablation.
+    OneBit,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "dense" | "baseline" => Method::Dense,
+            "gspar" | "greedy" => Method::GSpar,
+            "gspar-exact" | "exact" | "closed-form" => Method::GSparExact,
+            "unisp" | "uniform" => Method::UniSp,
+            "qsgd" => Method::Qsgd,
+            "terngrad" => Method::TernGrad,
+            "topk" | "top-k" => Method::TopK,
+            "onebit" | "1bit" => Method::OneBit,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> &'static [Method] {
+        &[
+            Method::Dense,
+            Method::GSpar,
+            Method::GSparExact,
+            Method::UniSp,
+            Method::Qsgd,
+            Method::TernGrad,
+            Method::TopK,
+            Method::OneBit,
+        ]
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Method::Dense => "dense",
+            Method::GSpar => "gspar",
+            Method::GSparExact => "gspar-exact",
+            Method::UniSp => "unisp",
+            Method::Qsgd => "qsgd",
+            Method::TernGrad => "terngrad",
+            Method::TopK => "topk",
+            Method::OneBit => "onebit",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Synchronous convex experiment configuration (Figures 1–6).
+#[derive(Clone, Debug)]
+pub struct ConvexConfig {
+    /// Dataset size N (paper: 1024).
+    pub n: usize,
+    /// Dimension d (paper: 2048).
+    pub d: usize,
+    /// Magnitude shrink factor C1 (paper: 0.6 / 0.9; smaller = sparser).
+    pub c1: f32,
+    /// Shrink threshold C2 (paper: 4^-1, 4^-2, 4^-3).
+    pub c2: f32,
+    /// ℓ2 regularization λ2 (paper: 1/(10N), 1/N).
+    pub reg: f32,
+    /// Target density ρ for Algorithm 3.
+    pub rho: f32,
+    /// Number of workers M (paper: 4).
+    pub workers: usize,
+    /// Minibatch size per worker (paper: 8).
+    pub batch: usize,
+    /// Data passes (epochs) to run.
+    pub epochs: usize,
+    /// Base learning rate.
+    pub lr: f32,
+    /// Compressor.
+    pub method: Method,
+    /// RNG seed.
+    pub seed: u64,
+    /// QSGD bit width (only for Method::Qsgd).
+    pub qsgd_bits: u32,
+}
+
+impl Default for ConvexConfig {
+    fn default() -> Self {
+        Self {
+            n: 1024,
+            d: 2048,
+            c1: 0.6,
+            c2: 0.25,
+            reg: 1.0 / (10.0 * 1024.0),
+            rho: 0.1,
+            workers: 4,
+            batch: 8,
+            epochs: 30,
+            lr: 0.5,
+            method: Method::GSpar,
+            seed: 42,
+            qsgd_bits: 4,
+        }
+    }
+}
+
+/// Asynchronous shared-memory SVM configuration (Figure 9, §5.3).
+#[derive(Clone, Debug)]
+pub struct AsyncSvmConfig {
+    pub n: usize,
+    pub d: usize,
+    pub c1: f32,
+    pub c2: f32,
+    pub reg: f32,
+    pub rho: f32,
+    pub threads: usize,
+    pub lr: f32,
+    pub method: Method,
+    pub seed: u64,
+    /// Total coordinate updates budget across all threads.
+    pub total_steps: usize,
+    /// Update scheme: lock / atomic / wild.
+    pub scheme: UpdateScheme,
+}
+
+/// §5.3's three shared-memory update schemes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateScheme {
+    Lock,
+    Atomic,
+    Wild,
+}
+
+impl UpdateScheme {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "lock" => UpdateScheme::Lock,
+            "atomic" => UpdateScheme::Atomic,
+            "wild" => UpdateScheme::Wild,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for UpdateScheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            UpdateScheme::Lock => "lock",
+            UpdateScheme::Atomic => "atomic",
+            UpdateScheme::Wild => "wild",
+        })
+    }
+}
+
+impl Default for AsyncSvmConfig {
+    fn default() -> Self {
+        Self {
+            n: 51200,
+            d: 256,
+            c1: 0.01,
+            c2: 0.9,
+            reg: 0.1,
+            rho: 0.05,
+            threads: 16,
+            lr: 0.25,
+            method: Method::GSpar,
+            seed: 42,
+            total_steps: 200_000,
+            scheme: UpdateScheme::Atomic,
+        }
+    }
+}
+
+/// Raw parsed `key = value` file.
+#[derive(Debug, Default, Clone)]
+pub struct ConfigFile {
+    map: BTreeMap<String, String>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            map.insert(key, v.trim().to_string());
+        }
+        Ok(Self { map })
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("config key `{key}`: cannot parse `{s}`")),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    /// Build a [`ConvexConfig`] starting from defaults.
+    pub fn convex(&self) -> Result<ConvexConfig, String> {
+        let mut c = ConvexConfig::default();
+        c.n = self.get_parse("n", c.n)?;
+        c.d = self.get_parse("d", c.d)?;
+        c.c1 = self.get_parse("c1", c.c1)?;
+        c.c2 = self.get_parse("c2", c.c2)?;
+        c.reg = self.get_parse("reg", c.reg)?;
+        c.rho = self.get_parse("rho", c.rho)?;
+        c.workers = self.get_parse("workers", c.workers)?;
+        c.batch = self.get_parse("batch", c.batch)?;
+        c.epochs = self.get_parse("epochs", c.epochs)?;
+        c.lr = self.get_parse("lr", c.lr)?;
+        c.seed = self.get_parse("seed", c.seed)?;
+        c.qsgd_bits = self.get_parse("qsgd_bits", c.qsgd_bits)?;
+        if let Some(m) = self.get("method") {
+            c.method = Method::parse(m).ok_or_else(|| format!("unknown method `{m}`"))?;
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_file() {
+        let cf = ConfigFile::parse(
+            "# comment\n n = 512 \n method = unisp\n[net]\nbandwidth = 1e9\n",
+        )
+        .unwrap();
+        assert_eq!(cf.get("n"), Some("512"));
+        assert_eq!(cf.get("net.bandwidth"), Some("1e9"));
+        let c = cf.convex().unwrap();
+        assert_eq!(c.n, 512);
+        assert_eq!(c.method, Method::UniSp);
+        assert_eq!(c.d, 2048); // default preserved
+    }
+
+    #[test]
+    fn parse_error_reports_line() {
+        let err = ConfigFile::parse("valid = 1\nbogus line\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn bad_value_reports_key() {
+        let cf = ConfigFile::parse("n = notanumber\n").unwrap();
+        let err = cf.convex().unwrap_err();
+        assert!(err.contains("`n`"), "{err}");
+    }
+
+    #[test]
+    fn method_roundtrip() {
+        for m in Method::all() {
+            assert_eq!(Method::parse(&m.to_string()), Some(*m));
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn scheme_roundtrip() {
+        for s in [UpdateScheme::Lock, UpdateScheme::Atomic, UpdateScheme::Wild] {
+            assert_eq!(UpdateScheme::parse(&s.to_string()), Some(s));
+        }
+    }
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = ConvexConfig::default();
+        assert_eq!(c.n, 1024);
+        assert_eq!(c.d, 2048);
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.batch, 8);
+        let a = AsyncSvmConfig::default();
+        assert_eq!(a.n, 51200);
+        assert_eq!(a.d, 256);
+        assert!((a.c1 - 0.01).abs() < 1e-9);
+        assert!((a.c2 - 0.9).abs() < 1e-9);
+    }
+}

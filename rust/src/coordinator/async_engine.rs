@@ -1,0 +1,458 @@
+//! Algorithm 4: asynchronous parallel SGD on shared memory (§5.3).
+//!
+//! Multiple threads train an ℓ2-regularized SVM against one shared weight
+//! vector, with the paper's three update schemes:
+//!
+//! * **Lock** — a global mutex serializes every update (slowest, strongest
+//!   consistency);
+//! * **Atomic** — per-coordinate atomic compare-exchange adds (the scheme
+//!   Figure 9 plots); conflicts (CAS retries) are counted;
+//! * **Wild** — plain unsynchronized read-modify-write (HOGWILD!-style).
+//!
+//! Gradient sparsification reduces the number of coordinates each step
+//! touches, which reduces cacheline contention and CAS conflicts — the §5.3
+//! effect. The engine applies the paper's §5.3 engineering tricks verbatim:
+//! survivors outside the exact set share the constant value `±1/λ` (no
+//! per-coordinate division), and Bernoulli draws come from a pre-generated
+//! uniform array.
+
+use crate::config::{AsyncSvmConfig, Method, UpdateScheme};
+use crate::data::Dataset;
+use crate::metrics::{CurvePoint, RunCurve};
+use crate::model::{ConvexModel, SvmModel};
+use crate::rngkit::{RandArray, Xoshiro256pp};
+use crate::sparsify;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Shared f32 vector stored as atomic bit patterns.
+struct SharedVec {
+    data: Vec<AtomicU32>,
+}
+
+impl SharedVec {
+    fn zeros(d: usize) -> Self {
+        Self {
+            data: (0..d).map(|_| AtomicU32::new(0f32.to_bits())).collect(),
+        }
+    }
+
+    #[inline]
+    fn load(&self, i: usize) -> f32 {
+        f32::from_bits(self.data[i].load(Ordering::Relaxed))
+    }
+
+    /// Atomic `+= delta` via CAS; returns the number of retries (conflicts).
+    #[inline]
+    fn fetch_add(&self, i: usize, delta: f32) -> u32 {
+        let cell = &self.data[i];
+        let mut conflicts = 0;
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let next = (f32::from_bits(cur) + delta).to_bits();
+            match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return conflicts,
+                Err(actual) => {
+                    conflicts += 1;
+                    cur = actual;
+                }
+            }
+        }
+    }
+
+    /// Unsynchronized `+=` (the Wild scheme): racy read-modify-write.
+    #[inline]
+    fn wild_add(&self, i: usize, delta: f32) {
+        let cur = f32::from_bits(self.data[i].load(Ordering::Relaxed));
+        self.data[i].store((cur + delta).to_bits(), Ordering::Relaxed);
+    }
+
+    fn snapshot(&self, out: &mut [f32]) {
+        for (o, cell) in out.iter_mut().zip(&self.data) {
+            *o = f32::from_bits(cell.load(Ordering::Relaxed));
+        }
+    }
+}
+
+/// Outcome of an asynchronous run.
+#[derive(Debug, Clone)]
+pub struct AsyncReport {
+    pub curve: RunCurve,
+    /// Total coordinate updates applied across threads.
+    pub updates: u64,
+    /// CAS conflicts observed (Atomic scheme only).
+    pub conflicts: u64,
+    /// Wall time of the whole run.
+    pub wall_ms: f64,
+    /// Final loss.
+    pub final_loss: f64,
+}
+
+/// The Algorithm-4 engine.
+pub struct AsyncSvmEngine {
+    pub cfg: AsyncSvmConfig,
+}
+
+impl AsyncSvmEngine {
+    pub fn new(cfg: AsyncSvmConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Run Algorithm 4: `threads` workers hammer the shared weights until
+    /// the global step budget is exhausted; a monitor thread records the
+    /// loss curve against wall-clock time.
+    pub fn run(&self, ds: &Dataset) -> AsyncReport {
+        let cfg = &self.cfg;
+        let d = ds.d();
+        let model = SvmModel::new(cfg.reg);
+        let shared = Arc::new(SharedVec::zeros(d));
+        let remaining = Arc::new(AtomicU64::new(cfg.total_steps as u64));
+        let conflicts = Arc::new(AtomicU64::new(0));
+        let updates = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let lock = Arc::new(Mutex::new(()));
+        let start = Instant::now();
+
+        // Monitor samples (wall_ms, loss).
+        let monitor_points = Arc::new(Mutex::new(Vec::<(f64, f64)>::new()));
+
+        std::thread::scope(|scope| {
+            // Worker threads.
+            for tid in 0..cfg.threads {
+                let shared = Arc::clone(&shared);
+                let remaining = Arc::clone(&remaining);
+                let conflicts = Arc::clone(&conflicts);
+                let updates = Arc::clone(&updates);
+                let lock = Arc::clone(&lock);
+                let model = model;
+                let cfg = cfg.clone();
+                scope.spawn(move || {
+                    worker_loop(
+                        tid, &cfg, ds, &model, &shared, &remaining, &conflicts, &updates, &lock,
+                    );
+                });
+            }
+            // Monitor thread: snapshot loss every ~2 ms.
+            {
+                let shared = Arc::clone(&shared);
+                let stop = Arc::clone(&stop);
+                let monitor_points = Arc::clone(&monitor_points);
+                let model = model;
+                scope.spawn(move || {
+                    let mut w = vec![0.0f32; d];
+                    while !stop.load(Ordering::Relaxed) {
+                        shared.snapshot(&mut w);
+                        let loss = model.loss(ds, &w);
+                        let ms = start.elapsed().as_secs_f64() * 1e3;
+                        monitor_points.lock().unwrap().push((ms, loss));
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                });
+            }
+            // Wait for workers by polling the budget; then stop the monitor.
+            while remaining.load(Ordering::Relaxed) > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+
+        let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+        let mut w = vec![0.0f32; d];
+        shared.snapshot(&mut w);
+        let final_loss = model.loss(ds, &w);
+
+        let mut curve = RunCurve::new(format!(
+            "{}-{}(th={})",
+            method_name(cfg.method),
+            cfg.scheme,
+            cfg.threads
+        ));
+        for (ms, loss) in monitor_points.lock().unwrap().iter() {
+            curve.points.push(CurvePoint {
+                data_passes: 0.0,
+                loss: *loss,
+                comm_bits: 0,
+                wall_ms: *ms,
+            });
+        }
+        curve.points.push(CurvePoint {
+            data_passes: 0.0,
+            loss: final_loss,
+            comm_bits: 0,
+            wall_ms,
+        });
+        curve.sparsity = cfg.rho as f64;
+
+        AsyncReport {
+            curve,
+            updates: updates.load(Ordering::Relaxed),
+            conflicts: conflicts.load(Ordering::Relaxed),
+            wall_ms,
+            final_loss,
+        }
+    }
+}
+
+fn method_name(m: Method) -> &'static str {
+    match m {
+        Method::Dense => "dense",
+        Method::GSpar => "GSpar",
+        Method::UniSp => "UniSp",
+        other => {
+            let _ = other;
+            "other"
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    tid: usize,
+    cfg: &AsyncSvmConfig,
+    ds: &Dataset,
+    model: &SvmModel,
+    shared: &SharedVec,
+    remaining: &AtomicU64,
+    conflicts: &AtomicU64,
+    updates: &AtomicU64,
+    lock: &Mutex<()>,
+) {
+    let d = ds.d();
+    let mut rng = Xoshiro256pp::for_worker(cfg.seed, tid);
+    // §5.3 trick: pre-generated random array per thread.
+    let mut rand = RandArray::new(
+        Xoshiro256pp::for_worker(cfg.seed ^ 0xA5A5, tid),
+        (8 * d).max(1 << 12),
+    );
+    let mut w_local = vec![0.0f32; d];
+    let mut g = vec![0.0f32; d];
+    let mut p = Vec::with_capacity(d);
+    let mut t_local = 0u64;
+    let mut local_conflicts = 0u64;
+    let mut local_updates = 0u64;
+    let chunk = 64u64; // claim steps in chunks to cut budget contention
+
+    'outer: loop {
+        // Claim a chunk of the global step budget.
+        let mut claimed = remaining.load(Ordering::Relaxed);
+        let take;
+        loop {
+            if claimed == 0 {
+                break 'outer;
+            }
+            let want = claimed.min(chunk);
+            match remaining.compare_exchange_weak(
+                claimed,
+                claimed - want,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    take = want;
+                    break;
+                }
+                Err(actual) => claimed = actual,
+            }
+        }
+
+        for _ in 0..take {
+            t_local += 1;
+            // Step size: lr/ρ initial (paper §5.3), 1/sqrt(t) decay keeps
+            // long runs stable without dying too fast.
+            let eta = cfg.lr / cfg.rho / (1.0 + (t_local as f32).sqrt());
+            let r = rng.next_below(ds.n() as u64) as usize;
+
+            // Locked/atomic/wild READ of the coordinates the example touches.
+            shared.snapshot(&mut w_local);
+            model.grad_minibatch(ds, &w_local, &[r], &mut g);
+
+            // Sparsify.
+            let scale = -eta / 1.0; // single "machine" (M folds into threads)
+            match cfg.method {
+                Method::Dense => {
+                    apply_dense(cfg.scheme, shared, &g, scale, lock, &mut local_conflicts);
+                    local_updates += d as u64;
+                }
+                Method::UniSp => {
+                    let inv_rho = 1.0 / cfg.rho;
+                    for i in 0..d {
+                        if g[i] != 0.0 && rand.next() < cfg.rho {
+                            apply_one(
+                                cfg.scheme,
+                                shared,
+                                i,
+                                scale * g[i] * inv_rho,
+                                lock,
+                                &mut local_conflicts,
+                            );
+                            local_updates += 1;
+                        }
+                    }
+                }
+                _ => {
+                    // GSpar (greedy, 2 iterations — the paper's setting).
+                    let pv = sparsify::greedy_probs(&g, cfg.rho, 2, &mut p);
+                    // §5.3 trick: constant magnitude, no division.
+                    let shared_val = pv.inv_lambda;
+                    for i in 0..d {
+                        let pi = p[i];
+                        if pi <= 0.0 {
+                            continue;
+                        }
+                        let delta = if pi >= 1.0 {
+                            g[i]
+                        } else if rand.next() < pi {
+                            if g[i] < 0.0 {
+                                -shared_val
+                            } else {
+                                shared_val
+                            }
+                        } else {
+                            continue;
+                        };
+                        apply_one(cfg.scheme, shared, i, scale * delta, lock, &mut local_conflicts);
+                        local_updates += 1;
+                    }
+                }
+            }
+        }
+    }
+    conflicts.fetch_add(local_conflicts, Ordering::Relaxed);
+    updates.fetch_add(local_updates, Ordering::Relaxed);
+}
+
+#[inline]
+fn apply_one(
+    scheme: UpdateScheme,
+    shared: &SharedVec,
+    i: usize,
+    delta: f32,
+    lock: &Mutex<()>,
+    conflicts: &mut u64,
+) {
+    match scheme {
+        UpdateScheme::Lock => {
+            let _guard = lock.lock().unwrap();
+            shared.wild_add(i, delta);
+        }
+        UpdateScheme::Atomic => {
+            *conflicts += shared.fetch_add(i, delta) as u64;
+        }
+        UpdateScheme::Wild => shared.wild_add(i, delta),
+    }
+}
+
+fn apply_dense(
+    scheme: UpdateScheme,
+    shared: &SharedVec,
+    g: &[f32],
+    scale: f32,
+    lock: &Mutex<()>,
+    conflicts: &mut u64,
+) {
+    match scheme {
+        UpdateScheme::Lock => {
+            let _guard = lock.lock().unwrap();
+            for (i, &gi) in g.iter().enumerate() {
+                if gi != 0.0 {
+                    shared.wild_add(i, scale * gi);
+                }
+            }
+        }
+        UpdateScheme::Atomic => {
+            for (i, &gi) in g.iter().enumerate() {
+                if gi != 0.0 {
+                    *conflicts += shared.fetch_add(i, scale * gi) as u64;
+                }
+            }
+        }
+        UpdateScheme::Wild => {
+            for (i, &gi) in g.iter().enumerate() {
+                if gi != 0.0 {
+                    shared.wild_add(i, scale * gi);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_svm;
+
+    fn tiny_cfg(method: Method, scheme: UpdateScheme, threads: usize) -> AsyncSvmConfig {
+        AsyncSvmConfig {
+            n: 512,
+            d: 64,
+            c1: 0.01,
+            c2: 0.9,
+            reg: 0.1,
+            rho: 0.1,
+            threads,
+            lr: 0.05,
+            method,
+            seed: 9,
+            total_steps: 6_000,
+            scheme,
+        }
+    }
+
+    #[test]
+    fn shared_vec_atomic_add_is_exact_cross_thread() {
+        let v = Arc::new(SharedVec::zeros(4));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let v = Arc::clone(&v);
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        v.fetch_add(0, 1.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(v.load(0), 40_000.0);
+    }
+
+    #[test]
+    fn async_gspar_reduces_loss_all_schemes() {
+        let ds = gen_svm(512, 64, 0.01, 0.9, 9);
+        for scheme in [UpdateScheme::Lock, UpdateScheme::Atomic, UpdateScheme::Wild] {
+            let engine = AsyncSvmEngine::new(tiny_cfg(Method::GSpar, scheme, 4));
+            let report = engine.run(&ds);
+            let start_loss = 1.0; // f(0) for hinge = mean max(1-0,0) = 1
+            assert!(
+                report.final_loss < start_loss,
+                "{scheme}: {start_loss} -> {}",
+                report.final_loss
+            );
+            assert!(report.updates > 0);
+        }
+    }
+
+    #[test]
+    fn sparsified_touches_fewer_coordinates() {
+        let ds = gen_svm(512, 64, 0.01, 0.9, 9);
+        let dense = AsyncSvmEngine::new(tiny_cfg(Method::Dense, UpdateScheme::Atomic, 2)).run(&ds);
+        let gspar = AsyncSvmEngine::new(tiny_cfg(Method::GSpar, UpdateScheme::Atomic, 2)).run(&ds);
+        assert!(
+            (gspar.updates as f64) < 0.6 * dense.updates as f64,
+            "gspar updates {} vs dense {}",
+            gspar.updates,
+            dense.updates
+        );
+    }
+
+    #[test]
+    fn monitor_produces_a_curve() {
+        let ds = gen_svm(512, 64, 0.01, 0.9, 10);
+        let report = AsyncSvmEngine::new(tiny_cfg(Method::GSpar, UpdateScheme::Atomic, 2)).run(&ds);
+        assert!(!report.curve.points.is_empty());
+        assert!(report.wall_ms > 0.0);
+        // Points are time-ordered.
+        for w in report.curve.points.windows(2) {
+            assert!(w[0].wall_ms <= w[1].wall_ms + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! The distributed training coordinator — the paper's system layer.
+//!
+//! * [`sync`] — Algorithm 1: synchronous data-parallel SGD with per-worker
+//!   gradient sparsification, honest encode → All-Reduce → Broadcast rounds,
+//!   and the paper's `η_t ∝ 1/(t·var)` step size. Also the SVRG variant
+//!   (§5.1), including the eq. 15 master-kept-full-gradient option.
+//! * [`cluster`] — a real threaded leader/worker runtime exchanging encoded
+//!   byte messages over channels; used by the HLO-backed models (CNN,
+//!   transformer) and the end-to-end examples.
+//! * [`async_engine`] — Algorithm 4: the §5.3 asynchronous shared-memory
+//!   engine with the Lock / Atomic / Wild update schemes, where
+//!   sparsification reduces write conflicts between threads.
+
+//! * [`param_server`] — asynchronous parameter server with a bounded-
+//!   staleness (SSP) pull protocol, workers pushing encoded sparsified
+//!   gradients over channels (§2's deployment style, §3's "asynchronous
+//!   algorithms can also be used with our technique").
+
+pub mod async_engine;
+pub mod cluster;
+pub mod param_server;
+pub mod sync;
+
+pub use async_engine::{AsyncReport, AsyncSvmEngine};
+pub use cluster::{Cluster, LayerUpdate};
+pub use param_server::{run_param_server, PsConfig, PsReport};
+pub use sync::{train_convex, OptKind, SvrgVariant, TrainOptions};

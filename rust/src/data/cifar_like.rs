@@ -1,0 +1,144 @@
+//! CIFAR-10 stand-in for the §5.2 CNN experiments (no network access — see
+//! DESIGN.md §Substitutions).
+//!
+//! Class-conditional structured images: each of the 10 classes owns a set of
+//! oriented frequency/blob prototypes; a sample is a noisy mixture of its
+//! class prototypes. This gives a task a small conv net genuinely learns
+//! (loss decreases, classes separable) with naturally skewed conv-layer
+//! gradients — the property the paper's per-layer sparsification exploits.
+
+use crate::rngkit::Xoshiro256pp;
+
+/// Image side (CIFAR: 32).
+pub const IMG_DIM: usize = 32;
+/// Number of classes (CIFAR: 10).
+pub const IMG_CLASSES: usize = 10;
+
+/// An in-memory synthetic image-classification dataset, CHW f32 layout.
+#[derive(Clone)]
+pub struct CifarLike {
+    /// `n × (3·32·32)` images, flattened CHW, values in [-1, 1].
+    pub images: Vec<f32>,
+    pub labels: Vec<u8>,
+    pub n: usize,
+}
+
+impl CifarLike {
+    /// Pixel count per image.
+    pub const PIXELS: usize = 3 * IMG_DIM * IMG_DIM;
+
+    pub fn generate(n: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        // Per-class prototype parameters: orientation, frequency, color bias.
+        let protos: Vec<(f32, f32, [f32; 3])> = (0..IMG_CLASSES)
+            .map(|c| {
+                let theta = std::f32::consts::PI * c as f32 / IMG_CLASSES as f32;
+                let freq = 0.2 + 0.08 * (c % 5) as f32;
+                let color = [
+                    0.6 * ((c % 3) as f32 - 1.0),
+                    0.6 * (((c / 3) % 3) as f32 - 1.0),
+                    0.6 * (((c / 2) % 3) as f32 - 1.0),
+                ];
+                (theta, freq, color)
+            })
+            .collect();
+        let mut images = vec![0.0f32; n * Self::PIXELS];
+        let mut labels = vec![0u8; n];
+        for s in 0..n {
+            let c = rng.next_below(IMG_CLASSES as u64) as usize;
+            labels[s] = c as u8;
+            let (theta, freq, color) = protos[c];
+            let phase = rng.next_f32() * std::f32::consts::TAU;
+            let img = &mut images[s * Self::PIXELS..(s + 1) * Self::PIXELS];
+            for ch in 0..3 {
+                for yy in 0..IMG_DIM {
+                    for xx in 0..IMG_DIM {
+                        let u = xx as f32 * theta.cos() + yy as f32 * theta.sin();
+                        let wave = (freq * u * std::f32::consts::TAU / IMG_DIM as f32
+                            * IMG_DIM as f32
+                            + phase)
+                            .sin();
+                        let noise = (rng.next_f32() - 0.5) * 0.6;
+                        img[ch * IMG_DIM * IMG_DIM + yy * IMG_DIM + xx] =
+                            (0.5 * wave + 0.4 * color[ch] + noise).clamp(-1.0, 1.0);
+                    }
+                }
+            }
+        }
+        Self { images, labels, n }
+    }
+
+    /// Borrow image `i` as a CHW slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * Self::PIXELS..(i + 1) * Self::PIXELS]
+    }
+
+    /// Copy a minibatch (images into `x`: `bs × PIXELS`; labels into `y`).
+    pub fn batch_into(&self, idx: &[usize], x: &mut [f32], y: &mut [i32]) {
+        assert_eq!(x.len(), idx.len() * Self::PIXELS);
+        assert_eq!(y.len(), idx.len());
+        for (b, &i) in idx.iter().enumerate() {
+            x[b * Self::PIXELS..(b + 1) * Self::PIXELS].copy_from_slice(self.image(i));
+            y[b] = self.labels[i] as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let ds = CifarLike::generate(20, 5);
+        assert_eq!(ds.n, 20);
+        assert_eq!(ds.images.len(), 20 * CifarLike::PIXELS);
+        assert!(ds.images.iter().all(|&v| (-1.0..=1.0).contains(&v)));
+        assert!(ds.labels.iter().all(|&l| (l as usize) < IMG_CLASSES));
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Mean images of different classes should differ far more than two
+        // halves of the same class — i.e. there is real signal to learn.
+        let ds = CifarLike::generate(600, 6);
+        let mut means = vec![vec![0.0f64; CifarLike::PIXELS]; IMG_CLASSES];
+        let mut counts = vec![0usize; IMG_CLASSES];
+        for i in 0..ds.n {
+            let c = ds.labels[i] as usize;
+            counts[c] += 1;
+            for (m, &v) in means[c].iter_mut().zip(ds.image(i)) {
+                *m += v as f64;
+            }
+        }
+        for c in 0..IMG_CLASSES {
+            for m in means[c].iter_mut() {
+                *m /= counts[c].max(1) as f64;
+            }
+        }
+        let dist = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>()
+        };
+        let d01 = dist(&means[0], &means[5]);
+        assert!(d01 > 1.0, "class means too close: {d01}");
+    }
+
+    #[test]
+    fn batch_into_copies() {
+        let ds = CifarLike::generate(10, 7);
+        let idx = [3usize, 7];
+        let mut x = vec![0.0f32; 2 * CifarLike::PIXELS];
+        let mut y = vec![0i32; 2];
+        ds.batch_into(&idx, &mut x, &mut y);
+        assert_eq!(&x[..CifarLike::PIXELS], ds.image(3));
+        assert_eq!(y[0], ds.labels[3] as i32);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = CifarLike::generate(5, 11);
+        let b = CifarLike::generate(5, 11);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+}

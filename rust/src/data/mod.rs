@@ -1,0 +1,44 @@
+//! Dataset generators.
+//!
+//! * [`synthetic`] — the paper's two synthetic recipes: the §5.1 logistic
+//!   regression data (Gaussian features magnitude-sparsified by `(C₁, C₂)`,
+//!   labels from a random linear teacher) and the §5.3 SVM data (same
+//!   sparsification, noisy teacher);
+//! * [`cifar_like`] — the CIFAR-10 stand-in for the §5.2 CNN experiments
+//!   (class-conditional structured images, 32×32×3, 10 classes; see
+//!   DESIGN.md §Substitutions);
+//! * [`corpus`] — a tiny deterministic byte corpus for the transformer
+//!   end-to-end example.
+
+mod cifar_like;
+mod corpus;
+mod synthetic;
+
+pub use cifar_like::{CifarLike, IMG_CLASSES, IMG_DIM};
+pub use corpus::ByteCorpus;
+pub use synthetic::{gen_logistic, gen_svm, Dataset};
+
+/// Deterministic shard of example indices for worker `m` of `M` (round-robin,
+/// matching "each of them owns its local copy ... local data" in §1/Alg. 1).
+pub fn shard_indices(n: usize, worker: usize, num_workers: usize) -> Vec<usize> {
+    (0..n).filter(|i| i % num_workers == worker).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_partition_the_dataset() {
+        let n = 103;
+        let m = 4;
+        let mut seen = vec![false; n];
+        for w in 0..m {
+            for i in shard_indices(n, w, m) {
+                assert!(!seen[i], "index {i} in two shards");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

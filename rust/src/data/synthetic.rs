@@ -1,0 +1,188 @@
+//! The paper's synthetic data recipes, transcribed exactly.
+//!
+//! §5.1 (logistic regression):
+//! ```text
+//! dense data generation:      x̄_ni ~ N(0,1)
+//! magnitude sparsification:   B̄ ~ Uniform[0,1]^d;  B̄_i ← C₁·B̄_i  if B̄_i ≤ C₂
+//! data sparsification:        x_n ← x̄_n ⊙ B̄
+//! label generation:           w̄ ~ N(0, I);  y_n ← sign(x̄_nᵀ w̄)
+//! ```
+//! The smaller `C₁`/`C₂`, the sparser the effective gradients; the paper
+//! notes the gradient is then roughly `((1−C₂)d, C₂·C₁/(C₁+2))`-approximately
+//! sparse.
+//!
+//! §5.3 (SVM): same feature recipe with `w̄ ~ Uniform[−0.5, 0.5]^d` and noisy
+//! labels `y_n = sign(x_nᵀ w̄ + σ), σ ~ N(0,1)`.
+
+use crate::rngkit::Xoshiro256pp;
+use crate::tensor::Matrix;
+
+/// A binary-classification dataset: row-major features + ±1 labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Matrix,
+    pub y: Vec<f32>,
+    /// The magnitude mask B̄ actually applied (kept for diagnostics: its
+    /// sparsity drives the gradient's (ρ, s)-approximate sparsity).
+    pub magnitude: Vec<f32>,
+    /// Teacher weights (for reference / debugging).
+    pub teacher: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols()
+    }
+}
+
+/// Shared feature recipe: N(0,1) features, magnitude vector sparsified by
+/// `(c1, c2)` (`B̄_i ← C₁ B̄_i` when `B̄_i ≤ C₂`), applied column-wise.
+fn gen_features(n: usize, d: usize, c1: f32, c2: f32, rng: &mut Xoshiro256pp) -> (Matrix, Vec<f32>) {
+    let mut magnitude = vec![0.0f32; d];
+    for b in magnitude.iter_mut() {
+        let u = rng.next_f32();
+        *b = if u <= c2 { c1 * u } else { u };
+    }
+    let mut x = Matrix::zeros(n, d);
+    for r in 0..n {
+        let row = x.row_mut(r);
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = rng.next_gaussian() as f32 * magnitude[i];
+        }
+    }
+    (x, magnitude)
+}
+
+/// §5.1 logistic-regression data. Labels use the *dense* features times the
+/// Gaussian teacher (the paper applies the sign to `x̄ᵀw̄`; we use the masked
+/// features — equivalent up to teacher rescaling — and note it here).
+pub fn gen_logistic(n: usize, d: usize, c1: f32, c2: f32, seed: u64) -> Dataset {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let (x, magnitude) = gen_features(n, d, c1, c2, &mut rng);
+    let teacher: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+    let y: Vec<f32> = (0..n)
+        .map(|r| {
+            let s = crate::tensor::dot(x.row(r), &teacher);
+            if s >= 0.0 {
+                1.0
+            } else {
+                -1.0
+            }
+        })
+        .collect();
+    Dataset {
+        x,
+        y,
+        magnitude,
+        teacher,
+    }
+}
+
+/// §5.3 SVM data: uniform teacher, Gaussian label noise.
+pub fn gen_svm(n: usize, d: usize, c1: f32, c2: f32, seed: u64) -> Dataset {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let teacher: Vec<f32> = (0..d).map(|_| rng.next_f32() - 0.5).collect();
+    let (x, magnitude) = gen_features(n, d, c1, c2, &mut rng);
+    let y: Vec<f32> = (0..n)
+        .map(|r| {
+            let s = crate::tensor::dot(x.row(r), &teacher) + rng.next_gaussian() as f32;
+            if s >= 0.0 {
+                1.0
+            } else {
+                -1.0
+            }
+        })
+        .collect();
+    Dataset {
+        x,
+        y,
+        magnitude,
+        teacher,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_labels() {
+        let ds = gen_logistic(100, 64, 0.6, 0.25, 7);
+        assert_eq!(ds.n(), 100);
+        assert_eq!(ds.d(), 64);
+        assert!(ds.y.iter().all(|&y| y == 1.0 || y == -1.0));
+        assert_eq!(ds.magnitude.len(), 64);
+    }
+
+    #[test]
+    fn smaller_c_constants_give_smaller_masked_columns() {
+        // With C2 = 0.9 and C1 = 0.01 (the §5.3 setting), ~90% of columns
+        // carry magnitude ≤ 0.01 — features are much sparser in magnitude.
+        let strong = gen_svm(10, 2000, 0.01, 0.9, 8);
+        let weak = gen_svm(10, 2000, 0.9, 0.25, 8);
+        let small_strong = strong.magnitude.iter().filter(|&&b| b <= 0.011).count();
+        let small_weak = weak.magnitude.iter().filter(|&&b| b <= 0.011).count();
+        assert!(
+            small_strong as f64 > 0.85 * 2000.0,
+            "strong sparsification: {small_strong}"
+        );
+        assert!(
+            (small_weak as f64) < 0.2 * 2000.0,
+            "weak sparsification: {small_weak}"
+        );
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = gen_logistic(20, 16, 0.6, 0.25, 99);
+        let b = gen_logistic(20, 16, 0.6, 0.25, 99);
+        let c = gen_logistic(20, 16, 0.6, 0.25, 100);
+        assert_eq!(a.x.as_slice(), b.x.as_slice());
+        assert_eq!(a.y, b.y);
+        assert_ne!(a.x.as_slice(), c.x.as_slice());
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let ds = gen_logistic(2000, 128, 0.6, 0.25, 13);
+        let pos = ds.y.iter().filter(|&&y| y > 0.0).count();
+        let frac = pos as f64 / 2000.0;
+        assert!((0.35..0.65).contains(&frac), "label balance {frac}");
+        let svm = gen_svm(2000, 128, 0.6, 0.25, 13);
+        let pos = svm.y.iter().filter(|&&y| y > 0.0).count();
+        let frac = pos as f64 / 2000.0;
+        assert!((0.35..0.65).contains(&frac), "svm label balance {frac}");
+    }
+
+    #[test]
+    fn gradient_of_linear_model_is_skewed_when_data_sparse() {
+        // The property the whole paper rests on: sparse feature magnitudes
+        // make gradients of linear models approximately sparse. Measure the
+        // fraction of the gradient's ℓ1 mass in the top 10% coordinates.
+        let mass_top10 = |c1: f32, c2: f32| {
+            let ds = gen_logistic(256, 512, c1, c2, 21);
+            let _w = vec![0.0f32; 512];
+            // logistic gradient at w=0: -Σ y_n x_n σ(-0) = -½ Σ y_n x_n
+            let mut g = vec![0.0f32; 512];
+            for r in 0..ds.n() {
+                crate::tensor::axpy(-0.5 * ds.y[r] / ds.n() as f32, ds.x.row(r), &mut g);
+            }
+            let mut mags: Vec<f32> = g.iter().map(|x| x.abs()).collect();
+            mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let top: f32 = mags[..51].iter().sum();
+            let total: f32 = mags.iter().sum();
+            top / total
+        };
+        let sparse = mass_top10(0.01, 0.9); // §5.3-style strong sparsity
+        let dense = mass_top10(1.0, 0.0); // no sparsification
+        assert!(
+            sparse > 0.75,
+            "strongly-sparsified data should concentrate gradient mass: {sparse}"
+        );
+        assert!(sparse > dense + 0.2, "sparse {sparse} vs dense {dense}");
+    }
+}

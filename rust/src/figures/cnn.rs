@@ -1,0 +1,127 @@
+//! Figures 7–8: CNNs on the CIFAR-like dataset with Adam and per-layer
+//! gradient sparsification (§5.2).
+//!
+//! Paper setting: 3 conv(3×3) + BN layers, 2 pools, FC-256, Adam lr 0.02;
+//! channels {32, 24} (Fig 7) and {64, 48} (Fig 8); loss vs epochs and vs
+//! communication cost (∝ ρ), down to ρ ≈ 0.004. Scale substitution
+//! (synthetic CIFAR-like data, reduced steps on the 1-core testbed) is
+//! documented in DESIGN.md §Substitutions.
+
+use crate::config::Method;
+use crate::coordinator::Cluster;
+use crate::data::CifarLike;
+use crate::metrics::{write_csv, CurvePoint, RunCurve};
+use crate::model::hlo::HloTrainStep;
+use crate::opt::Adam;
+use crate::runtime::Runtime;
+use crate::sparsify;
+
+/// One training run of `cnn<channels>_step` with per-layer compressor ρ.
+/// `rho = 1.0` means dense.
+fn train_cnn(
+    rt: &mut Runtime,
+    channels: usize,
+    rho: f32,
+    steps: usize,
+    workers: usize,
+    seed: u64,
+) -> anyhow::Result<RunCurve> {
+    let step = HloTrainStep::from_manifest(rt, &format!("cnn{channels}_step"))?;
+    let mut params = step.init_params(rt, seed as i32)?;
+    let ds = CifarLike::generate(512, seed ^ 0xC1FA);
+    let bsz = step.x_dims[0];
+    let layer_dims: Vec<usize> = step.params.iter().map(|p| p.elements()).collect();
+    let method = if rho >= 1.0 { Method::Dense } else { Method::GSpar };
+    let mut cluster = Cluster::new(workers, &layer_dims, seed, || {
+        sparsify::build(method, rho.min(1.0), 0.0, 4)
+    });
+    let mut adams: Vec<Adam> = layer_dims.iter().map(|&d| Adam::new(d, 0.02)).collect();
+    let mut rng = crate::rngkit::Xoshiro256pp::seed_from_u64(seed ^ 0xADA);
+    let mut x = vec![0.0f32; bsz * CifarLike::PIXELS];
+    let mut y = vec![0i32; bsz];
+
+    let label = if rho >= 1.0 {
+        format!("cnn{channels}-dense")
+    } else {
+        format!("cnn{channels}-rho{rho}")
+    };
+    let mut curve = RunCurve::new(label);
+    let samples_per_step = (workers * bsz) as f64;
+    let epoch_len = ds.n as f64;
+    for t in 0..steps {
+        let mut worker_grads = Vec::with_capacity(workers);
+        let mut loss_sum = 0.0f64;
+        for _ in 0..workers {
+            let idx: Vec<usize> = (0..bsz)
+                .map(|_| rng.next_below(ds.n as u64) as usize)
+                .collect();
+            ds.batch_into(&idx, &mut x, &mut y);
+            let (loss, grads) = step.grads(rt, &params, &x, &y)?;
+            loss_sum += loss as f64;
+            worker_grads.push(grads);
+        }
+        let updates = cluster.round(&worker_grads);
+        for ((p, upd), adam) in params.iter_mut().zip(&updates).zip(adams.iter_mut()) {
+            adam.step(p, &upd.grad);
+        }
+        curve.points.push(CurvePoint {
+            data_passes: (t + 1) as f64 * samples_per_step / epoch_len,
+            loss: loss_sum / workers as f64,
+            comm_bits: cluster.ledger.ideal_bits,
+            wall_ms: cluster.sim_time_s * 1e3,
+        });
+    }
+    curve.var_ratio = cluster.var_meter.value();
+    curve.sparsity = cluster.spa_meter.value();
+    curve.ledger = cluster.ledger.clone();
+    Ok(curve)
+}
+
+fn run_fig(name: &str, channel_set: &[usize], quick: bool) -> anyhow::Result<()> {
+    println!("\n================ {name} ================");
+    let mut rt = Runtime::cpu()?.with_artifact_dir("artifacts")?;
+    let available = rt.manifest_names();
+    let steps = if quick { 12 } else { 40 };
+    let rhos = if quick {
+        vec![1.0f32, 0.05]
+    } else {
+        vec![1.0f32, 0.1, 0.02, 0.004]
+    };
+    let mut all = Vec::new();
+    for &ch in channel_set {
+        if !available.contains(&format!("cnn{ch}_step")) {
+            println!(
+                "  (cnn{ch} artifact not built — run `make artifacts-full` for the 48/64 variants)"
+            );
+            continue;
+        }
+        for &rho in &rhos {
+            let curve = train_cnn(&mut rt, ch, rho, steps, 2, 7)?;
+            println!(
+                "  {:<22} loss {:.3} -> {:.3}   var {:.2}  spa {:.4}  Mbits {:.2}",
+                curve.name,
+                curve.points.first().map(|p| p.loss).unwrap_or(f64::NAN),
+                curve.final_loss(),
+                curve.var_ratio,
+                curve.sparsity,
+                curve.ledger.ideal_bits as f64 / 1e6,
+            );
+            all.push(curve);
+        }
+    }
+    let path = super::results_dir().join(format!("{name}.csv"));
+    write_csv(&path, &all)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Figure 7: channels 32 (top) and 24 (bottom).
+pub fn fig7(quick: bool) -> anyhow::Result<()> {
+    run_fig("fig7_cnn_32_24", &[32, 24], quick)
+}
+
+/// Figure 8: channels 64 (top) and 48 (bottom) — requires
+/// `make artifacts-full`.
+pub fn fig8(quick: bool) -> anyhow::Result<()> {
+    run_fig("fig8_cnn_64_48", &[64, 48], quick)
+}

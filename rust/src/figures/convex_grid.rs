@@ -1,0 +1,174 @@
+//! Figures 1–4: synchronous SGD / SVRG on synthetic ℓ2-logistic regression.
+//!
+//! Paper grid (§5.1): N = 1024, d = 2048, M = 4 workers, minibatch 8;
+//! rows λ₂ ∈ {1/(10N), 1/N}; columns C₂ ∈ {4⁻¹, 4⁻², 4⁻³};
+//! Fig 1/3 use C₁ = 0.6 (weaker sparsity), Fig 2/4 use C₁ = 0.9 (stronger).
+//! Series: GSpar vs UniSp vs dense baseline, labeled with the realized
+//! `var` and `spa` statistics; x-axis = data passes, y-axis = suboptimality.
+
+use crate::config::{ConvexConfig, Method};
+use crate::coordinator::sync::{estimate_f_star, train_convex, OptKind, SvrgVariant, TrainOptions};
+use crate::data::gen_logistic;
+use crate::metrics::{ascii_plot, write_csv, RunCurve, XAxis};
+use crate::model::LogisticModel;
+
+/// Problem scale for the convex figures — paper scale or a fast CI scale.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvexFigureScale {
+    pub n: usize,
+    pub d: usize,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl ConvexFigureScale {
+    /// The paper's exact setting.
+    pub fn paper() -> Self {
+        Self {
+            n: 1024,
+            d: 2048,
+            epochs: 30,
+            seed: 2018,
+        }
+    }
+
+    /// Reduced scale for smoke runs / CI.
+    pub fn quick() -> Self {
+        Self {
+            n: 256,
+            d: 512,
+            epochs: 12,
+            seed: 2018,
+        }
+    }
+}
+
+fn grid_cell(
+    scale: &ConvexFigureScale,
+    c1: f32,
+    c2: f32,
+    reg_factor: f32, // 0.1 => 1/(10N); 1.0 => 1/N
+    opt: OptKind,
+    rho: f32,
+) -> Vec<RunCurve> {
+    let reg = reg_factor / scale.n as f32;
+    let base = ConvexConfig {
+        n: scale.n,
+        d: scale.d,
+        c1,
+        c2,
+        reg,
+        rho,
+        workers: 4,
+        batch: 8,
+        epochs: scale.epochs,
+        lr: if matches!(opt, OptKind::Svrg(_)) { 0.25 } else { 1.0 },
+        method: Method::Dense,
+        seed: scale.seed,
+        qsgd_bits: 4,
+    };
+    let ds = gen_logistic(base.n, base.d, c1, c2, base.seed);
+    let model = LogisticModel::new(reg);
+    let f_star = estimate_f_star(&ds, &model, 400, 1.0);
+    let opts = TrainOptions {
+        opt,
+        f_star,
+        ..Default::default()
+    };
+    [Method::Dense, Method::GSpar, Method::UniSp]
+        .iter()
+        .map(|&method| {
+            let mut cfg = base.clone();
+            cfg.method = method;
+            train_convex(&cfg, &opts, &ds, &model)
+        })
+        .collect()
+}
+
+fn run_grid(name: &str, c1: f32, opt: OptKind, scale: &ConvexFigureScale) {
+    println!("\n================ {name} (C1={c1}) ================");
+    let mut all = Vec::new();
+    for (ri, reg_factor) in [0.1f32, 1.0].iter().enumerate() {
+        for (ci, c2) in [0.25f32, 0.0625, 0.015625].iter().enumerate() {
+            let rho = 0.1;
+            let curves = grid_cell(scale, c1, *c2, *reg_factor, opt, rho);
+            println!(
+                "\n--- cell (reg={}N⁻¹, C2=4^-{}) ---",
+                if ri == 0 { "0.1" } else { "1" },
+                ci + 1
+            );
+            for c in &curves {
+                println!(
+                    "  {:<28} final subopt {:.4e}  bits {:.3e}",
+                    c.label(),
+                    c.final_loss(),
+                    c.ledger.ideal_bits as f64
+                );
+            }
+            print!("{}", ascii_plot(&curves, 64, 12, XAxis::DataPasses));
+            for mut c in curves {
+                c.name = format!("r{ri}c{ci}_{}", c.name);
+                all.push(c);
+            }
+        }
+    }
+    let path = super::results_dir().join(format!("{name}.csv"));
+    if let Err(e) = write_csv(&path, &all) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("\nwrote {}", path.display());
+    }
+}
+
+/// Figure 1: SGD, C₁ = 0.6 (weaker sparsity).
+pub fn fig1(scale: &ConvexFigureScale) {
+    run_grid("fig1_sgd_c1_0.6", 0.6, OptKind::Sgd, scale);
+}
+
+/// Figure 2: SGD, C₁ = 0.9 (stronger sparsity).
+pub fn fig2(scale: &ConvexFigureScale) {
+    run_grid("fig2_sgd_c1_0.9", 0.9, OptKind::Sgd, scale);
+}
+
+/// Figure 3: SVRG, C₁ = 0.6.
+pub fn fig3(scale: &ConvexFigureScale) {
+    run_grid(
+        "fig3_svrg_c1_0.6",
+        0.6,
+        OptKind::Svrg(SvrgVariant::SparsifyFull),
+        scale,
+    );
+}
+
+/// Figure 4: SVRG, C₁ = 0.9.
+pub fn fig4(scale: &ConvexFigureScale) {
+    run_grid(
+        "fig4_svrg_c1_0.9",
+        0.9,
+        OptKind::Svrg(SvrgVariant::SparsifyFull),
+        scale,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_cell_produces_three_ordered_series() {
+        let scale = ConvexFigureScale {
+            n: 128,
+            d: 256,
+            epochs: 6,
+            seed: 5,
+        };
+        let curves = grid_cell(&scale, 0.6, 0.25, 0.1, OptKind::Sgd, 0.1);
+        assert_eq!(curves.len(), 3);
+        // baseline var = 1, GSpar var < UniSp var (the figure's key shape).
+        assert!(curves[0].var_ratio <= 1.0 + 1e-9);
+        assert!(curves[1].var_ratio < curves[2].var_ratio);
+        for c in &curves {
+            assert!(c.points.len() >= 2);
+        }
+    }
+}

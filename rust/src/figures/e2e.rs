@@ -1,0 +1,106 @@
+//! End-to-end transformer training driver: proves the full stack composes —
+//! L1 Pallas kernels and L2 JAX graphs lowered to HLO artifacts, loaded by
+//! the L3 Rust runtime, trained data-parallel with per-layer gradient
+//! sparsification, honest encoded messages, and Adam.
+//!
+//! Used by both `gsparse e2e` and `examples/transformer_e2e.rs`; the run is
+//! recorded in EXPERIMENTS.md.
+
+use crate::config::Method;
+use crate::coordinator::Cluster;
+use crate::data::ByteCorpus;
+use crate::metrics::{write_csv, CurvePoint, RunCurve};
+use crate::model::hlo::HloTrainStep;
+use crate::opt::Adam;
+use crate::runtime::Runtime;
+use crate::sparsify;
+
+/// Train the transformer artifact for `steps` rounds with `workers`
+/// simulated data-parallel workers and per-layer GSpar at density `rho`
+/// (`rho >= 1.0` = dense). Prints the loss curve; writes
+/// `results/e2e_transformer.csv`.
+pub fn run_transformer_e2e(steps: usize, workers: usize, rho: f32) -> anyhow::Result<()> {
+    let mut rt = Runtime::cpu()?.with_artifact_dir("artifacts")?;
+    let step = HloTrainStep::from_manifest(&mut rt, "transformer_step")?;
+    let total_params = step.total_params();
+    let (bsz, seq) = (step.x_dims[0], step.x_dims[1]);
+    println!(
+        "transformer e2e: {} params across {} tensors; batch {bsz} x seq {seq}; \
+         {workers} workers; rho {rho}",
+        total_params,
+        step.params.len()
+    );
+    let mut params = step.init_params(&mut rt, 42)?;
+    let corpus = ByteCorpus::generate(1 << 16, 64, 7);
+    println!(
+        "corpus: {} bytes, unigram entropy {:.3} nats (uniform = {:.3})",
+        corpus.bytes.len(),
+        corpus.unigram_entropy_nats(),
+        (64f64).ln()
+    );
+
+    let layer_dims: Vec<usize> = step.params.iter().map(|p| p.elements()).collect();
+    let method = if rho >= 1.0 { Method::Dense } else { Method::GSpar };
+    let mut cluster = Cluster::new(workers, &layer_dims, 99, || {
+        sparsify::build(method, rho.min(1.0), 0.0, 4)
+    });
+    let mut adams: Vec<Adam> = layer_dims.iter().map(|&d| Adam::new(d, 3e-3)).collect();
+    let mut rng = crate::rngkit::Xoshiro256pp::seed_from_u64(1);
+
+    let mut curve = RunCurve::new(format!("transformer-rho{rho}"));
+    let t0 = std::time::Instant::now();
+    for t in 0..steps {
+        let mut worker_grads = Vec::with_capacity(workers);
+        let mut loss_sum = 0.0f64;
+        for _ in 0..workers {
+            let mut toks = Vec::with_capacity(bsz * seq);
+            let mut tgts = Vec::with_capacity(bsz * seq);
+            for _ in 0..bsz {
+                let (tk, tg) = corpus.sample_window(seq, &mut rng);
+                toks.extend(tk);
+                tgts.extend(tg);
+            }
+            let (loss, grads) = step.grads_tokens(&mut rt, &params, &toks, &tgts)?;
+            loss_sum += loss as f64;
+            worker_grads.push(grads);
+        }
+        let updates = cluster.round(&worker_grads);
+        for ((p, upd), adam) in params.iter_mut().zip(&updates).zip(adams.iter_mut()) {
+            adam.step(p, &upd.grad);
+        }
+        let loss = loss_sum / workers as f64;
+        curve.points.push(CurvePoint {
+            data_passes: t as f64,
+            loss,
+            comm_bits: cluster.ledger.ideal_bits,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        if t % 10 == 0 || t + 1 == steps {
+            println!(
+                "step {t:>4}: loss {loss:.4}  (var {:.2}, spa {:.4}, {:.1} Mbit sent, {:.1} s)",
+                cluster.var_meter.value(),
+                cluster.spa_meter.value(),
+                cluster.ledger.ideal_bits as f64 / 1e6,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    curve.var_ratio = cluster.var_meter.value();
+    curve.sparsity = cluster.spa_meter.value();
+    curve.ledger = cluster.ledger.clone();
+
+    let first = curve.points.first().map(|p| p.loss).unwrap_or(f64::NAN);
+    let last = curve.final_loss();
+    println!(
+        "\nloss {first:.4} -> {last:.4} over {steps} steps; \
+         comm {:.2} Mbit ideal ({:.2} MB wire); dense would be {:.2} Mbit",
+        curve.ledger.ideal_bits as f64 / 1e6,
+        curve.ledger.wire_bytes as f64 / 1e6,
+        (steps * workers * total_params * 32) as f64 / 1e6,
+    );
+    let path = super::results_dir().join("e2e_transformer.csv");
+    write_csv(&path, std::slice::from_ref(&curve))?;
+    println!("wrote {}", path.display());
+    anyhow::ensure!(last < first, "loss must decrease ({first} -> {last})");
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! One driver per paper figure. Each regenerates the same series the paper
+//! plots (same workload recipe, same grid of hyper-parameters, same labels)
+//! and writes `results/figN*.csv` plus an ASCII rendering to stdout.
+//!
+//! The paper's evaluation has no numbered tables — Figures 1–9 are the
+//! entire quantitative surface; `theory` additionally prints the Lemma-3 /
+//! Theorem-4 bound-vs-measured sweep. See DESIGN.md §3 for the
+//! experiment-to-module map and EXPERIMENTS.md for recorded outputs.
+
+mod async_svm;
+mod cnn;
+mod convex_grid;
+mod e2e;
+mod qsgd;
+mod theory;
+
+pub use async_svm::fig9;
+pub use cnn::{fig7, fig8};
+pub use convex_grid::{fig1, fig2, fig3, fig4, ConvexFigureScale};
+pub use e2e::run_transformer_e2e;
+pub use qsgd::{fig5, fig6};
+pub use theory::theory_bounds;
+
+use std::path::PathBuf;
+
+/// Where figure CSVs land.
+pub fn results_dir() -> PathBuf {
+    std::env::var("GSPARSE_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"))
+}
+
+/// Run one figure by number (1–9), `theory`, or `all`.
+pub fn run(which: &str, quick: bool) -> anyhow::Result<()> {
+    let scale = if quick {
+        ConvexFigureScale::quick()
+    } else {
+        ConvexFigureScale::paper()
+    };
+    match which {
+        "1" => fig1(&scale),
+        "2" => fig2(&scale),
+        "3" => fig3(&scale),
+        "4" => fig4(&scale),
+        "5" => fig5(&scale),
+        "6" => fig6(&scale),
+        "7" => fig7(quick)?,
+        "8" => fig8(quick)?,
+        "9" => fig9(quick),
+        "theory" => theory_bounds(),
+        "all" => {
+            for f in ["1", "2", "3", "4", "5", "6", "7", "8", "9", "theory"] {
+                run(f, quick)?;
+            }
+        }
+        other => anyhow::bail!("unknown figure `{other}` (1-9, theory, all)"),
+    }
+    Ok(())
+}

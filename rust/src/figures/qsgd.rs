@@ -1,0 +1,135 @@
+//! Figures 5–6: GSpar vs QSGD(b) vs dense baseline, x-axis = cumulative
+//! communication coding length (the paper's `H(T, M)` formulas), step size
+//! `η_t ∝ 1/t` for every method (variance-agnostic, per §5.1).
+//!
+//! Grid: rows λ₂ ∈ {1/(10N), 1/N}, columns C₂ ∈ {4⁻¹, 4⁻²};
+//! Fig 5 uses C₁ = 0.6, Fig 6 uses C₁ = 0.9.
+
+use super::convex_grid::ConvexFigureScale;
+use crate::config::{ConvexConfig, Method};
+use crate::coordinator::sync::{estimate_f_star, train_convex, OptKind, TrainOptions};
+use crate::data::gen_logistic;
+use crate::metrics::{ascii_plot, write_csv, RunCurve, XAxis};
+use crate::model::LogisticModel;
+
+fn run_cell(
+    scale: &ConvexFigureScale,
+    c1: f32,
+    c2: f32,
+    reg_factor: f32,
+) -> Vec<RunCurve> {
+    let reg = reg_factor / scale.n as f32;
+    let base = ConvexConfig {
+        n: scale.n,
+        d: scale.d,
+        c1,
+        c2,
+        reg,
+        rho: 0.1,
+        workers: 4,
+        batch: 8,
+        epochs: scale.epochs,
+        lr: 1.0,
+        method: Method::Dense,
+        seed: scale.seed,
+        qsgd_bits: 4,
+    };
+    let ds = gen_logistic(base.n, base.d, c1, c2, base.seed);
+    let model = LogisticModel::new(reg);
+    let f_star = estimate_f_star(&ds, &model, 400, 1.0);
+    let opts = TrainOptions {
+        opt: OptKind::SgdInvT, // η ∝ 1/t for both methods (paper's setting)
+        f_star,
+        ..Default::default()
+    };
+    let mut curves = Vec::new();
+    for (method, bits) in [
+        (Method::Dense, 32),
+        (Method::GSpar, 32),
+        (Method::Qsgd, 2),
+        (Method::Qsgd, 4),
+        (Method::Qsgd, 8),
+    ] {
+        let mut cfg = base.clone();
+        cfg.method = method;
+        cfg.qsgd_bits = bits;
+        let mut c = train_convex(&cfg, &opts, &ds, &model);
+        if method == Method::Qsgd {
+            c.name = format!("QSGD({bits})");
+        }
+        curves.push(c);
+    }
+    curves
+}
+
+fn run_fig(name: &str, c1: f32, scale: &ConvexFigureScale) {
+    println!("\n================ {name} (C1={c1}) ================");
+    let mut all = Vec::new();
+    for (ri, reg_factor) in [0.1f32, 1.0].iter().enumerate() {
+        for (ci, c2) in [0.25f32, 0.0625].iter().enumerate() {
+            let curves = run_cell(scale, c1, *c2, *reg_factor);
+            println!(
+                "\n--- cell (reg={}N⁻¹, C2=4^-{}) — x-axis: coding length (bits) ---",
+                if ri == 0 { "0.1" } else { "1" },
+                ci + 1
+            );
+            for c in &curves {
+                println!(
+                    "  {:<28} final subopt {:.4e}  total bits {:.3e}  bits/elt {:.2}",
+                    c.label(),
+                    c.final_loss(),
+                    c.ledger.ideal_bits as f64,
+                    c.ledger.ideal_bits as f64
+                        / (c.ledger.messages as f64 * scale.d as f64).max(1.0),
+                );
+            }
+            print!("{}", ascii_plot(&curves, 64, 12, XAxis::CommBits));
+            for mut c in curves {
+                c.name = format!("r{ri}c{ci}_{}", c.name);
+                all.push(c);
+            }
+        }
+    }
+    let path = super::results_dir().join(format!("{name}.csv"));
+    if let Err(e) = write_csv(&path, &all) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("\nwrote {}", path.display());
+    }
+}
+
+/// Figure 5: C₁ = 0.6.
+pub fn fig5(scale: &ConvexFigureScale) {
+    run_fig("fig5_qsgd_c1_0.6", 0.6, scale);
+}
+
+/// Figure 6: C₁ = 0.9.
+pub fn fig6(scale: &ConvexFigureScale) {
+    run_fig("fig6_qsgd_c1_0.9", 0.9, scale);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gspar_spends_fewer_bits_than_qsgd_at_strong_sparsity() {
+        let scale = ConvexFigureScale {
+            n: 128,
+            d: 512,
+            epochs: 8,
+            seed: 6,
+        };
+        // Strong sparsity setting (C1 small shrinks masked coordinates).
+        let curves = run_cell(&scale, 0.2, 0.25, 0.1);
+        let gspar = &curves[1];
+        let qsgd4 = &curves[3];
+        assert_eq!(gspar.ledger.messages, qsgd4.ledger.messages);
+        assert!(
+            gspar.ledger.ideal_bits < qsgd4.ledger.ideal_bits,
+            "gspar bits {} should undercut QSGD(4) {} on sparse gradients",
+            gspar.ledger.ideal_bits,
+            qsgd4.ledger.ideal_bits
+        );
+    }
+}

@@ -1,0 +1,46 @@
+//! Lemma 3 / Theorem 4 validation sweep: construct `(ρ, s)`-approximately
+//! sparse gradients, run the closed-form sparsifier with ε = ρ, and print
+//! bound vs measured for expected sparsity and coding length.
+
+use crate::coding::theorem4_bound_bits;
+use crate::rngkit::Xoshiro256pp;
+use crate::sparsify::{closed_form_probs, hybrid_ideal_bits};
+
+pub fn theory_bounds() {
+    println!("\n================ theory: Lemma 3 & Theorem 4 ================");
+    println!(
+        "{:>6} {:>6} {:>8} | {:>12} {:>12} | {:>12} {:>12}",
+        "d", "s", "rho", "E[nnz]", "(1+ρ)s", "bits", "Thm4 bound"
+    );
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    for &d in &[512usize, 2048, 8192] {
+        for &s_frac in &[0.01f64, 0.05, 0.2] {
+            let s = ((d as f64 * s_frac) as usize).max(2);
+            let mut g = vec![0.0f32; d];
+            for gi in g.iter_mut().take(s) {
+                *gi = 1.0 + rng.next_f32();
+            }
+            for gi in g.iter_mut().skip(s) {
+                *gi = rng.next_f32() * 0.01;
+            }
+            let l1_s: f64 = g[..s].iter().map(|&x| x.abs() as f64).sum();
+            let l1_sc: f64 = g[s..].iter().map(|&x| x.abs() as f64).sum();
+            let rho = l1_sc / l1_s;
+            let mut p = Vec::new();
+            let pv = closed_form_probs(&g, rho as f32, &mut p);
+            let nnz_bound = (1.0 + rho) * s as f64;
+            let qb_mass = pv.expected_nnz - pv.num_exact as f64;
+            let bits = hybrid_ideal_bits(pv.num_exact as u64, qb_mass, d);
+            let bound = theorem4_bound_bits(s, rho, d);
+            let ok1 = pv.expected_nnz <= nnz_bound * (1.0 + 1e-6);
+            let ok2 = bits <= bound + 64;
+            println!(
+                "{d:>6} {s:>6} {rho:>8.4} | {:>12.2} {:>12.2} | {bits:>12} {bound:>12}  {}{}",
+                pv.expected_nnz,
+                nnz_bound,
+                if ok1 { "✓" } else { "✗ L3" },
+                if ok2 { "✓" } else { "✗ T4" },
+            );
+        }
+    }
+}

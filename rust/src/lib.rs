@@ -1,0 +1,49 @@
+//! # gsparse
+//!
+//! A Rust + JAX + Pallas reproduction of **"Gradient Sparsification for
+//! Communication-Efficient Distributed Optimization"** (Wangni, Wang, Liu,
+//! Zhang — NeurIPS 2018).
+//!
+//! The library sparsifies stochastic gradients *unbiasedly* — coordinate `i`
+//! survives with probability `p_i` and is amplified to `g_i / p_i` — choosing
+//! `p` to minimize expected coding length under a variance budget
+//! (`p_i = min(λ|g_i|, 1)`, Proposition 1). On top of that primitive it
+//! provides the full training system the paper evaluates:
+//!
+//! * [`sparsify`] — the optimal sparsifiers (closed-form Algorithm 2, greedy
+//!   Algorithm 3) and every baseline (uniform, QSGD, TernGrad, top-k, 1-bit);
+//! * [`coding`] — the §3.3 hybrid wire format and Theorem-4 bit accounting;
+//! * [`comm`] — a simulated cluster (All-Reduce / Broadcast, α-β cost model);
+//! * [`opt`] — SGD / SVRG / Adam with the paper's variance-scaled step sizes;
+//! * [`coordinator`] — synchronous data-parallel training (Algorithm 1), the
+//!   SVRG master variant (eq. 15), and the §5.3 asynchronous shared-memory
+//!   engine (Algorithm 4) with Lock/Atomic/Wild schemes;
+//! * [`model`] + [`runtime`] — pure-Rust convex models and PJRT-loaded,
+//!   JAX/Pallas-compiled CNN & transformer steps (`artifacts/*.hlo.txt`);
+//! * [`data`] — the paper's synthetic generators plus CIFAR-like images and
+//!   a tiny byte corpus;
+//! * [`figures`] — one driver per paper figure (1–9) regenerating its series.
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
+//! request path is pure Rust. See `DESIGN.md` for the architecture and
+//! `EXPERIMENTS.md` for reproduction results.
+
+pub mod benchkit;
+pub mod cli;
+pub mod coding;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod metrics;
+pub mod model;
+pub mod opt;
+pub mod proptest_lite;
+pub mod rngkit;
+pub mod runtime;
+pub mod sparsify;
+pub mod tensor;
+
+/// Crate version string (reported by the CLI).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,137 @@
+//! `gsparse` — leader entrypoint + CLI.
+//!
+//! Subcommands:
+//! * `fig <1-9|theory|all> [--paper]` — regenerate a paper figure's series
+//!   (quick scale by default; `--paper` uses the paper's exact N/d/epochs);
+//! * `train [--method ...] [--rho ...] ...` — one synchronous convex run;
+//! * `async-svm [--threads ...] [--scheme ...]` — one Algorithm-4 run;
+//! * `e2e` — the transformer end-to-end driver (same code as the example);
+//! * `version`.
+
+use gsparse::cli::Args;
+use gsparse::config::{AsyncSvmConfig, ConvexConfig, Method, UpdateScheme};
+use gsparse::coordinator::sync::{estimate_f_star, train_convex, OptKind, TrainOptions};
+use gsparse::coordinator::AsyncSvmEngine;
+use gsparse::data::{gen_logistic, gen_svm};
+use gsparse::metrics::{ascii_plot, XAxis};
+use gsparse::model::LogisticModel;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("fig") => cmd_fig(&args),
+        Some("train") => cmd_train(&args),
+        Some("async-svm") => cmd_async(&args),
+        Some("e2e") => cmd_e2e(&args),
+        Some("version") => {
+            println!("gsparse {}", gsparse::VERSION);
+            Ok(())
+        }
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "gsparse {} — Gradient Sparsification (Wangni et al., NeurIPS 2018)\n\
+         \n\
+         USAGE: gsparse <SUBCOMMAND> [OPTIONS]\n\
+         \n\
+         SUBCOMMANDS:\n\
+           fig <1-9|theory|all> [--paper]   regenerate a paper figure\n\
+           train [--method M] [--rho R] [--epochs E] [--svrg] ...\n\
+           async-svm [--threads T] [--scheme lock|atomic|wild] [--method M]\n\
+           e2e [--steps N] [--workers M] [--rho R]   transformer end-to-end\n\
+           version",
+        gsparse::VERSION
+    );
+}
+
+fn cmd_fig(args: &Args) -> anyhow::Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    gsparse::figures::run(which, !args.flag("paper"))
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = ConvexConfig::default();
+    cfg.n = args.get_parse("n", cfg.n);
+    cfg.d = args.get_parse("d", cfg.d);
+    cfg.c1 = args.get_parse("c1", cfg.c1);
+    cfg.c2 = args.get_parse("c2", cfg.c2);
+    cfg.rho = args.get_parse("rho", cfg.rho);
+    cfg.workers = args.get_parse("workers", cfg.workers);
+    cfg.epochs = args.get_parse("epochs", cfg.epochs);
+    cfg.lr = args.get_parse("lr", cfg.lr);
+    cfg.seed = args.get_parse("seed", cfg.seed);
+    cfg.reg = args.get_parse("reg", 1.0 / (10.0 * cfg.n as f32));
+    if let Some(m) = args.get("method") {
+        cfg.method = Method::parse(m).ok_or_else(|| anyhow::anyhow!("unknown method {m}"))?;
+    }
+    let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
+    let model = LogisticModel::new(cfg.reg);
+    let f_star = estimate_f_star(&ds, &model, 400, 1.0);
+    let opts = TrainOptions {
+        opt: if args.flag("svrg") {
+            OptKind::Svrg(gsparse::coordinator::sync::SvrgVariant::SparsifyFull)
+        } else {
+            OptKind::Sgd
+        },
+        f_star,
+        ..Default::default()
+    };
+    let curve = train_convex(&cfg, &opts, &ds, &model);
+    println!("{}", curve.label());
+    println!(
+        "final suboptimality {:.4e}; {:.3e} ideal bits; {:.3e} wire bytes; sim net {:.1} ms",
+        curve.final_loss(),
+        curve.ledger.ideal_bits as f64,
+        curve.ledger.wire_bytes as f64,
+        curve.points.last().map(|p| p.wall_ms).unwrap_or(0.0),
+    );
+    print!("{}", ascii_plot(&[curve], 72, 14, XAxis::DataPasses));
+    Ok(())
+}
+
+fn cmd_async(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = AsyncSvmConfig::default();
+    cfg.n = args.get_parse("n", 8192);
+    cfg.threads = args.get_parse("threads", cfg.threads);
+    cfg.reg = args.get_parse("reg", cfg.reg);
+    cfg.rho = args.get_parse("rho", cfg.rho);
+    cfg.lr = args.get_parse("lr", cfg.lr);
+    cfg.total_steps = args.get_parse("steps", 50_000);
+    cfg.seed = args.get_parse("seed", cfg.seed);
+    if let Some(s) = args.get("scheme") {
+        cfg.scheme =
+            UpdateScheme::parse(s).ok_or_else(|| anyhow::anyhow!("unknown scheme {s}"))?;
+    }
+    if let Some(m) = args.get("method") {
+        cfg.method = Method::parse(m).ok_or_else(|| anyhow::anyhow!("unknown method {m}"))?;
+    }
+    let ds = gen_svm(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
+    let report = AsyncSvmEngine::new(cfg).run(&ds);
+    println!(
+        "{}: final loss {:.5} in {:.1} ms ({} coordinate updates, {} conflicts)",
+        report.curve.name, report.final_loss, report.wall_ms, report.updates, report.conflicts
+    );
+    print!("{}", ascii_plot(&[report.curve], 72, 12, XAxis::WallMs));
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
+    let steps = args.get_parse("steps", 200usize);
+    let workers = args.get_parse("workers", 4usize);
+    let rho = args.get_parse("rho", 0.05f32);
+    gsparse::figures::run_transformer_e2e(steps, workers, rho)
+}

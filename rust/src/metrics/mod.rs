@@ -1,0 +1,308 @@
+//! Training-run metrics: loss curves, the paper's realized variance ratio
+//! (`var` in Figures 1–4) and realized sparsity (`spa`), communication-cost
+//! ledgers, and CSV/JSONL writers for the figure drivers.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Accumulates the paper's `var` statistic:
+/// `var = Σ_t Σ_m ||Q(g^m)||² / Σ_t Σ_m ||g^m||²` (§5.1).
+#[derive(Debug, Default, Clone)]
+pub struct VarianceRatio {
+    sum_q: f64,
+    sum_g: f64,
+}
+
+impl VarianceRatio {
+    pub fn record(&mut self, q_norm_sq: f64, g_norm_sq: f64) {
+        self.sum_q += q_norm_sq;
+        self.sum_g += g_norm_sq;
+    }
+
+    /// The realized ratio; 1.0 when nothing has been recorded (dense runs).
+    pub fn value(&self) -> f64 {
+        if self.sum_g == 0.0 {
+            1.0
+        } else {
+            self.sum_q / self.sum_g
+        }
+    }
+}
+
+/// Accumulates realized expected sparsity `spa = mean(Σ_i p_i / d)`.
+#[derive(Debug, Default, Clone)]
+pub struct SparsityMeter {
+    sum_density: f64,
+    count: u64,
+}
+
+impl SparsityMeter {
+    pub fn record(&mut self, expected_nnz: f64, d: usize) {
+        self.sum_density += expected_nnz / d as f64;
+        self.count += 1;
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.count == 0 {
+            1.0
+        } else {
+            self.sum_density / self.count as f64
+        }
+    }
+}
+
+/// Communication ledger: bits transmitted, split by the paper's idealized
+/// cost formulas (used for the Fig 5–6 x-axis) and the actual wire bytes of
+/// our codec.
+#[derive(Debug, Default, Clone)]
+pub struct CommLedger {
+    /// Idealized bits per the paper's H(T, M) formulas.
+    pub ideal_bits: u64,
+    /// Actual encoded message bytes produced by `coding::`.
+    pub wire_bytes: u64,
+    /// Number of messages (one per worker per step).
+    pub messages: u64,
+}
+
+impl CommLedger {
+    pub fn record(&mut self, ideal_bits: u64, wire_bytes: u64) {
+        self.ideal_bits += ideal_bits;
+        self.wire_bytes += wire_bytes;
+        self.messages += 1;
+    }
+
+    pub fn merge(&mut self, other: &CommLedger) {
+        self.ideal_bits += other.ideal_bits;
+        self.wire_bytes += other.wire_bytes;
+        self.messages += other.messages;
+    }
+}
+
+/// One point on a training curve.
+#[derive(Debug, Clone)]
+pub struct CurvePoint {
+    /// x-axis: data passes (epochs), fractional.
+    pub data_passes: f64,
+    /// Objective value f(w_t).
+    pub loss: f64,
+    /// Cumulative idealized communication bits.
+    pub comm_bits: u64,
+    /// Wall-clock milliseconds since run start.
+    pub wall_ms: f64,
+}
+
+/// A named training curve plus its summary statistics — what each figure
+/// driver prints.
+#[derive(Debug, Clone)]
+pub struct RunCurve {
+    pub name: String,
+    pub points: Vec<CurvePoint>,
+    pub var_ratio: f64,
+    pub sparsity: f64,
+    pub ledger: CommLedger,
+}
+
+impl RunCurve {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            points: Vec::new(),
+            var_ratio: 1.0,
+            sparsity: 1.0,
+            ledger: CommLedger::default(),
+        }
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.points.last().map(|p| p.loss).unwrap_or(f64::NAN)
+    }
+
+    /// Label in the paper's style: `name (var=…, spa=…)`.
+    pub fn label(&self) -> String {
+        format!(
+            "{} (var={:.3}, spa={:.4})",
+            self.name, self.var_ratio, self.sparsity
+        )
+    }
+
+    /// CSV rows: `name,data_passes,loss,comm_bits,wall_ms`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        for p in &self.points {
+            let _ = writeln!(
+                s,
+                "{},{},{},{},{}",
+                self.name, p.data_passes, p.loss, p.comm_bits, p.wall_ms
+            );
+        }
+        s
+    }
+}
+
+/// Write a set of curves to a CSV file with a header.
+pub fn write_csv(path: &Path, curves: &[RunCurve]) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "series,data_passes,loss,comm_bits,wall_ms")?;
+    for c in curves {
+        f.write_all(c.to_csv().as_bytes())?;
+    }
+    Ok(())
+}
+
+/// Render curves as a coarse ASCII plot (log10 y) for terminal inspection —
+/// the figure drivers print this so the paper's plot shapes are visible
+/// without any plotting dependency.
+pub fn ascii_plot(curves: &[RunCurve], width: usize, height: usize, xaxis: XAxis) -> String {
+    let mut out = String::new();
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let mut xmax = 0.0f64;
+    for c in curves {
+        for p in &c.points {
+            let y = p.loss.max(1e-300).log10();
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+            xmax = xmax.max(xaxis.of(p));
+        }
+    }
+    if !ymin.is_finite() || !ymax.is_finite() || xmax == 0.0 {
+        return "(no data)\n".into();
+    }
+    if ymax - ymin < 1e-9 {
+        ymax = ymin + 1e-9;
+    }
+    let mut grid = vec![vec![b' '; width]; height];
+    for (ci, c) in curves.iter().enumerate() {
+        let ch = b"0123456789abcdef"[ci % 16];
+        for p in &c.points {
+            let x = ((xaxis.of(p) / xmax) * (width - 1) as f64).round() as usize;
+            let y = (((p.loss.max(1e-300).log10()) - ymin) / (ymax - ymin)
+                * (height - 1) as f64)
+                .round() as usize;
+            let row = height - 1 - y.min(height - 1);
+            grid[row][x.min(width - 1)] = ch;
+        }
+    }
+    let _ = writeln!(out, "log10(loss) in [{ymin:.2}, {ymax:.2}], x up to {xmax:.3e} ({})", xaxis.name());
+    for row in grid {
+        let _ = writeln!(out, "|{}|", String::from_utf8_lossy(&row));
+    }
+    for (ci, c) in curves.iter().enumerate() {
+        let _ = writeln!(out, "  [{}] {}", (b"0123456789abcdef"[ci % 16]) as char, c.label());
+    }
+    out
+}
+
+/// Which x-axis a plot uses.
+#[derive(Clone, Copy, Debug)]
+pub enum XAxis {
+    DataPasses,
+    CommBits,
+    WallMs,
+}
+
+impl XAxis {
+    fn of(self, p: &CurvePoint) -> f64 {
+        match self {
+            XAxis::DataPasses => p.data_passes,
+            XAxis::CommBits => p.comm_bits as f64,
+            XAxis::WallMs => p.wall_ms,
+        }
+    }
+    fn name(self) -> &'static str {
+        match self {
+            XAxis::DataPasses => "data passes",
+            XAxis::CommBits => "communication bits",
+            XAxis::WallMs => "wall ms",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variance_ratio_accumulates() {
+        let mut v = VarianceRatio::default();
+        assert_eq!(v.value(), 1.0);
+        v.record(2.0, 1.0);
+        v.record(4.0, 2.0);
+        assert!((v.value() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparsity_meter_means() {
+        let mut s = SparsityMeter::default();
+        assert_eq!(s.value(), 1.0);
+        s.record(10.0, 100);
+        s.record(30.0, 100);
+        assert!((s.value() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ledger_merge() {
+        let mut a = CommLedger::default();
+        a.record(100, 16);
+        let mut b = CommLedger::default();
+        b.record(50, 8);
+        a.merge(&b);
+        assert_eq!(a.ideal_bits, 150);
+        assert_eq!(a.wire_bytes, 24);
+        assert_eq!(a.messages, 2);
+    }
+
+    #[test]
+    fn curve_csv_and_label() {
+        let mut c = RunCurve::new("gspar");
+        c.var_ratio = 1.5;
+        c.sparsity = 0.05;
+        c.points.push(CurvePoint {
+            data_passes: 1.0,
+            loss: 0.5,
+            comm_bits: 1000,
+            wall_ms: 3.5,
+        });
+        assert!(c.label().contains("var=1.500"));
+        assert!(c.to_csv().contains("gspar,1,0.5,1000,3.5"));
+        assert!((c.final_loss() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_writer_creates_file() {
+        let dir = std::env::temp_dir().join("gsparse_test_metrics");
+        let path = dir.join("curves.csv");
+        let mut c = RunCurve::new("x");
+        c.points.push(CurvePoint {
+            data_passes: 0.5,
+            loss: 1.0,
+            comm_bits: 1,
+            wall_ms: 0.0,
+        });
+        write_csv(&path, &[c]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("series,"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ascii_plot_renders() {
+        let mut c = RunCurve::new("a");
+        for i in 0..20 {
+            c.points.push(CurvePoint {
+                data_passes: i as f64,
+                loss: (20.0 - i as f64).max(0.1),
+                comm_bits: i * 10,
+                wall_ms: i as f64,
+            });
+        }
+        let s = ascii_plot(&[c], 40, 10, XAxis::DataPasses);
+        assert!(s.contains("log10(loss)"));
+        assert!(s.contains("[0]"));
+        let empty = ascii_plot(&[], 40, 10, XAxis::CommBits);
+        assert!(empty.contains("no data"));
+    }
+}

@@ -1,0 +1,189 @@
+//! Models backed by AOT-compiled JAX/Pallas artifacts: the §5.2 CNN and the
+//! end-to-end transformer.
+//!
+//! Convention (enforced by `python/compile/aot.py` and the manifest): a
+//! *training-step artifact* named `<model>_step` takes
+//! `(param_0 … param_{P−1}, x, y)` and returns
+//! `(loss, grad_0 … grad_{P−1})`. Parameters stay on the Rust side as flat
+//! `f32` vectors (one per layer — matching the paper's per-layer
+//! sparsification in §5.2); an `<model>_init` artifact returns the initial
+//! parameters from an i32 seed.
+
+use crate::runtime::{lit, Runtime};
+use anyhow::{anyhow, Context, Result};
+
+/// Parameter layout: one named flat tensor per layer.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// An HLO-backed training step for a model with P parameter tensors.
+pub struct HloTrainStep {
+    /// Artifact name (e.g. `cnn32_step`).
+    pub step_name: String,
+    pub params: Vec<ParamSpec>,
+    /// Batch input dims (x), e.g. `[B, 3, 32, 32]`.
+    pub x_dims: Vec<usize>,
+    /// Dtype of the batch input (`f32` for images, `i32` for token ids).
+    pub x_dtype: String,
+    /// Label dims (y), e.g. `[B]`.
+    pub y_dims: Vec<usize>,
+}
+
+impl HloTrainStep {
+    /// Build the spec from the manifest signature of `<name>_step`:
+    /// inputs `[p_0 … p_{P−1}, x, y]`, outputs `[loss, g_0 … g_{P−1}]`.
+    pub fn from_manifest(rt: &mut Runtime, step_name: &str) -> Result<Self> {
+        let exe = rt.get(step_name)?;
+        let sig = exe
+            .sig
+            .clone()
+            .ok_or_else(|| anyhow!("artifact `{step_name}` missing from manifest"))?;
+        anyhow::ensure!(
+            sig.inputs.len() >= 3,
+            "step artifact must take at least (param, x, y)"
+        );
+        anyhow::ensure!(
+            sig.outputs.len() == sig.inputs.len() - 1,
+            "step artifact must return (loss, grads...) matching params; \
+             got {} inputs / {} outputs",
+            sig.inputs.len(),
+            sig.outputs.len()
+        );
+        let p = sig.inputs.len() - 2;
+        let params = sig.inputs[..p]
+            .iter()
+            .enumerate()
+            .map(|(i, t)| ParamSpec {
+                name: format!("p{i}"),
+                dims: t.dims.clone(),
+            })
+            .collect();
+        Ok(Self {
+            step_name: step_name.to_string(),
+            params,
+            x_dims: sig.inputs[p].dims.clone(),
+            x_dtype: sig.inputs[p].dtype.clone(),
+            y_dims: sig.inputs[p + 1].dims.clone(),
+        })
+    }
+
+    /// Total parameter count across layers.
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.elements()).sum()
+    }
+
+    /// Initialize parameters by running `<model>_init` (artifact name is the
+    /// step name with `_step` replaced by `_init`), seeded by `seed`.
+    pub fn init_params(&self, rt: &mut Runtime, seed: i32) -> Result<Vec<Vec<f32>>> {
+        let init_name = self
+            .step_name
+            .strip_suffix("_step")
+            .map(|s| format!("{s}_init"))
+            .ok_or_else(|| anyhow!("step artifact `{}` not named *_step", self.step_name))?;
+        let exe = rt.get(&init_name)?;
+        let outs = exe
+            .run_f32(&[lit::i32_tensor(&[seed], &[])?])
+            .with_context(|| format!("running {init_name}"))?;
+        anyhow::ensure!(
+            outs.len() == self.params.len(),
+            "{init_name} returned {} tensors, expected {}",
+            outs.len(),
+            self.params.len()
+        );
+        for (o, spec) in outs.iter().zip(&self.params) {
+            anyhow::ensure!(
+                o.len() == spec.elements(),
+                "init output size mismatch for {}",
+                spec.name
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Run one training step with f32 batch input (images): returns
+    /// `(loss, per-layer gradients)`.
+    pub fn grads(
+        &self,
+        rt: &mut Runtime,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let x_lit = lit::f32_tensor(
+            x,
+            &self.x_dims.iter().map(|&d| d as i64).collect::<Vec<_>>(),
+        )?;
+        self.grads_with(rt, params, x_lit, y)
+    }
+
+    /// Run one training step with i32 batch input (token ids).
+    pub fn grads_tokens(
+        &self,
+        rt: &mut Runtime,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        y: &[i32],
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let x_lit = lit::i32_tensor(
+            tokens,
+            &self.x_dims.iter().map(|&d| d as i64).collect::<Vec<_>>(),
+        )?;
+        self.grads_with(rt, params, x_lit, y)
+    }
+
+    fn grads_with(
+        &self,
+        rt: &mut Runtime,
+        params: &[Vec<f32>],
+        x_lit: xla::Literal,
+        y: &[i32],
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        anyhow::ensure!(params.len() == self.params.len(), "param count mismatch");
+        let mut inputs = Vec::with_capacity(params.len() + 2);
+        for (p, spec) in params.iter().zip(&self.params) {
+            inputs.push(lit::f32_tensor(
+                p,
+                &spec.dims.iter().map(|&d| d as i64).collect::<Vec<_>>(),
+            )?);
+        }
+        inputs.push(x_lit);
+        inputs.push(lit::i32_tensor(
+            y,
+            &self.y_dims.iter().map(|&d| d as i64).collect::<Vec<_>>(),
+        )?);
+        let exe = rt.get(&self.step_name)?;
+        let mut outs = exe.run_f32(&inputs)?;
+        anyhow::ensure!(
+            outs.len() == self.params.len() + 1,
+            "step returned {} tensors",
+            outs.len()
+        );
+        let loss = outs.remove(0)[0];
+        Ok((loss, outs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_spec_elements() {
+        let p = ParamSpec {
+            name: "w".into(),
+            dims: vec![3, 4, 5],
+        };
+        assert_eq!(p.elements(), 60);
+    }
+
+    // Full HLO-step tests require artifacts; they live in rust/tests/.
+}

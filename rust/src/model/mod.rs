@@ -1,0 +1,61 @@
+//! Training models.
+//!
+//! * [`logistic`] / [`svm`] — the paper's two convex workloads in pure Rust
+//!   (analytic losses and minibatch gradients). These drive the Figure 1–6
+//!   and Figure 9 experiments and cross-check the HLO path.
+//! * [`hlo`] — models backed by AOT-compiled JAX/Pallas artifacts (the CNN
+//!   of §5.2 and the transformer e2e example), executed via
+//!   [`crate::runtime`].
+
+pub mod hlo;
+mod logistic;
+mod svm;
+
+pub use logistic::LogisticModel;
+pub use svm::SvmModel;
+
+use crate::data::Dataset;
+
+/// A convex empirical-risk model over a [`Dataset`]: everything the
+/// synchronous and asynchronous trainers need.
+pub trait ConvexModel: Send + Sync {
+    /// Full-dataset objective f(w) (including regularizer).
+    fn loss(&self, ds: &Dataset, w: &[f32]) -> f64;
+
+    /// Minibatch stochastic gradient over example indices `idx`,
+    /// accumulated into `g` (zeroed by the callee).
+    fn grad_minibatch(&self, ds: &Dataset, w: &[f32], idx: &[usize], g: &mut [f32]);
+
+    /// Full gradient ∇f(w) (for SVRG reference points and f* search).
+    fn grad_full(&self, ds: &Dataset, w: &[f32], g: &mut [f32]) {
+        let idx: Vec<usize> = (0..ds.n()).collect();
+        self.grad_minibatch(ds, w, &idx, g);
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn numerical_grad_check(
+    model: &dyn ConvexModel,
+    ds: &Dataset,
+    w: &[f32],
+    tol: f64,
+) {
+    let d = w.len();
+    let mut g = vec![0.0f32; d];
+    let idx: Vec<usize> = (0..ds.n()).collect();
+    model.grad_minibatch(ds, w, &idx, &mut g);
+    let h = 1e-3f32;
+    // Spot-check a handful of coordinates against central differences.
+    for i in (0..d).step_by((d / 7).max(1)) {
+        let mut wp = w.to_vec();
+        wp[i] += h;
+        let mut wm = w.to_vec();
+        wm[i] -= h;
+        let num = (model.loss(ds, &wp) - model.loss(ds, &wm)) / (2.0 * h as f64);
+        assert!(
+            (num - g[i] as f64).abs() <= tol * (1.0 + num.abs()),
+            "coord {i}: numerical {num} vs analytic {}",
+            g[i]
+        );
+    }
+}

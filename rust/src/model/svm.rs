@@ -1,0 +1,137 @@
+//! ℓ2-regularized SVM with hinge loss (§5.3, eq. 16):
+//! `f(w) = (1/N) Σ_n max(1 − y_n·x_nᵀw, 0) + λ₂‖w‖²`.
+
+use super::ConvexModel;
+use crate::data::Dataset;
+use crate::tensor::{axpy, dot, norm2_sq};
+
+/// Hinge-loss SVM with ℓ2 regularization `reg`.
+#[derive(Debug, Clone, Copy)]
+pub struct SvmModel {
+    pub reg: f32,
+}
+
+impl SvmModel {
+    pub fn new(reg: f32) -> Self {
+        Self { reg }
+    }
+}
+
+impl ConvexModel for SvmModel {
+    fn loss(&self, ds: &Dataset, w: &[f32]) -> f64 {
+        let n = ds.n();
+        let mut total = 0.0f64;
+        for r in 0..n {
+            let margin = ds.y[r] * dot(ds.x.row(r), w);
+            total += (1.0 - margin).max(0.0) as f64;
+        }
+        total / n as f64 + (self.reg as f64) * norm2_sq(w) as f64
+    }
+
+    fn grad_minibatch(&self, ds: &Dataset, w: &[f32], idx: &[usize], g: &mut [f32]) {
+        g.fill(0.0);
+        let scale = 1.0 / idx.len() as f32;
+        for &r in idx {
+            let margin = ds.y[r] * dot(ds.x.row(r), w);
+            if margin < 1.0 {
+                // Subgradient of hinge: −y_n x_n on the active side.
+                axpy(-ds.y[r] * scale, ds.x.row(r), g);
+            }
+        }
+        axpy(2.0 * self.reg, w, g);
+    }
+}
+
+impl SvmModel {
+    /// Single-example subgradient written *sparsely*: calls `emit(i, value)`
+    /// for each non-zero coordinate — the allocation-free path the §5.3
+    /// asynchronous engine uses (gradient support = the example's support).
+    pub fn grad_example_sparse<F: FnMut(usize, f32)>(
+        &self,
+        ds: &Dataset,
+        w: &[f32],
+        r: usize,
+        mut emit: F,
+    ) {
+        let row = ds.x.row(r);
+        let margin = ds.y[r] * dot(row, w);
+        let active = margin < 1.0;
+        for (i, &xi) in row.iter().enumerate() {
+            let mut v = 2.0 * self.reg * w[i];
+            if active && xi != 0.0 {
+                v -= ds.y[r] * xi;
+            }
+            if v != 0.0 {
+                emit(i, v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_svm;
+
+    #[test]
+    fn gradient_matches_numerical_away_from_kink() {
+        let ds = gen_svm(48, 20, 0.6, 0.25, 41);
+        let model = SvmModel::new(0.05);
+        // Small random w keeps most margins away from the hinge kink.
+        let mut rng = crate::rngkit::Xoshiro256pp::seed_from_u64(42);
+        let w: Vec<f32> = (0..20).map(|_| (rng.next_gaussian() * 0.01) as f32).collect();
+        crate::model::numerical_grad_check(&model, &ds, &w, 2e-2);
+    }
+
+    #[test]
+    fn loss_decreases_under_gd() {
+        let ds = gen_svm(256, 64, 0.01, 0.9, 43);
+        let model = SvmModel::new(0.1);
+        let mut w = vec![0.0f32; 64];
+        let mut g = vec![0.0f32; 64];
+        let l0 = model.loss(&ds, &w);
+        for _ in 0..100 {
+            model.grad_full(&ds, &w, &mut g);
+            axpy(-0.2, &g, &mut w);
+        }
+        let l1 = model.loss(&ds, &w);
+        assert!(l1 < l0, "{l0} -> {l1}");
+    }
+
+    #[test]
+    fn sparse_example_grad_matches_dense() {
+        let ds = gen_svm(32, 16, 0.6, 0.25, 44);
+        let model = SvmModel::new(0.05);
+        let mut rng = crate::rngkit::Xoshiro256pp::seed_from_u64(45);
+        let w: Vec<f32> = (0..16).map(|_| (rng.next_gaussian() * 0.2) as f32).collect();
+        for r in 0..8 {
+            let mut dense = vec![0.0f32; 16];
+            model.grad_minibatch(&ds, &w, &[r], &mut dense);
+            let mut sparse = vec![0.0f32; 16];
+            model.grad_example_sparse(&ds, &w, r, |i, v| sparse[i] += v);
+            for i in 0..16 {
+                assert!((dense[i] - sparse[i]).abs() < 1e-6, "r={r} coord {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn hinge_inactive_examples_contribute_only_regularizer() {
+        let ds = gen_svm(4, 4, 1.0, 0.0, 46);
+        let model = SvmModel::new(0.25);
+        // Huge w in the teacher direction makes all margins > 1 ... use the
+        // fact that with w = large · teacher-ish vector most are inactive;
+        // instead test directly: zero-label-agreement case.
+        let mut w = vec![0.0f32; 4];
+        // Run GD to (approximate) stationarity.
+        let mut g = vec![0.0f32; 4];
+        let mut lr = 0.3f32;
+        for _ in 0..2000 {
+            model.grad_full(&ds, &w, &mut g);
+            axpy(-lr, &g, &mut w);
+            lr *= 0.999; // hinge subgradients need decay to settle
+        }
+        model.grad_full(&ds, &w, &mut g);
+        assert!(crate::tensor::norm2_sq(&g) < 1e-2, "{g:?}");
+    }
+}

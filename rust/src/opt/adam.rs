@@ -1,0 +1,90 @@
+//! Adam optimizer (Kingma & Ba) — §5.2 uses it for the CNN experiments with
+//! initial step size 0.02 and per-layer gradient sparsification.
+
+/// Adam state over one flat parameter vector (one instance per layer when
+/// the coordinator sparsifies per-layer, matching §5.2).
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(dim: usize, lr: f32) -> Self {
+        Self {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            t: 0,
+        }
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+
+    /// One Adam update with gradient `g` (possibly a decoded sparsified
+    /// gradient — zeros simply decay the moments toward zero, which is the
+    /// behaviour the paper's CNN experiments rely on).
+    pub fn step(&mut self, w: &mut [f32], g: &[f32]) {
+        assert_eq!(w.len(), g.len());
+        assert_eq!(w.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        let lr_t = self.lr * b2t.sqrt() / b1t;
+        for i in 0..w.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g[i] * g[i];
+            w[i] -= lr_t * self.m[i] / (self.v[i].sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        let mut w = vec![3.0f32, -2.0, 1.0];
+        let mut adam = Adam::new(3, 0.05);
+        for _ in 0..2000 {
+            let g = w.clone();
+            adam.step(&mut w, &g);
+        }
+        assert!(crate::tensor::norm2_sq(&w) < 1e-4, "{w:?}");
+    }
+
+    #[test]
+    fn adam_handles_sparse_gradients() {
+        // Zeros in g must not produce NaNs or updates blowing up.
+        let mut w = vec![1.0f32; 8];
+        let mut adam = Adam::new(8, 0.02);
+        for t in 0..500 {
+            let g: Vec<f32> = (0..8)
+                .map(|i| if (t + i) % 4 == 0 { w[i] * 4.0 } else { 0.0 })
+                .collect();
+            adam.step(&mut w, &g);
+        }
+        assert!(w.iter().all(|x| x.is_finite()));
+        assert!(crate::tensor::norm2_sq(&w) < 0.5, "{w:?}");
+    }
+
+    #[test]
+    fn bias_correction_first_step() {
+        // After one step with gradient g, the update is ≈ lr·sign(g).
+        let mut w = vec![0.0f32];
+        let mut adam = Adam::new(1, 0.1);
+        adam.step(&mut w, &[0.5]);
+        assert!((w[0] + 0.1).abs() < 1e-3, "{w:?}");
+    }
+}

@@ -1,0 +1,107 @@
+//! Optimizers with the paper's step-size conventions.
+//!
+//! §5.1: gradient-sparsified **SGD** uses a diminishing step size
+//! `η_t ∝ 1/(t · var)` where `var = ‖Q(g)‖²/‖g‖²` is the realized variance
+//! inflation; sparsified **SVRG** uses a constant step divided by the same
+//! factor (`η ∝ 1/var`); the Fig 5–6 QSGD comparison uses plain `η_t ∝ 1/t`
+//! for both methods. §5.2 uses **Adam** (initial step 0.02). §5.3 uses
+//! `lr/ρ` for the asynchronous runs.
+
+mod adam;
+mod schedule;
+
+pub use adam::Adam;
+pub use schedule::LrSchedule;
+
+/// Plain SGD step `w ← w − η v` over a dense update vector.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub schedule: LrSchedule,
+    t: u64,
+}
+
+impl Sgd {
+    pub fn new(schedule: LrSchedule) -> Self {
+        Self { schedule, t: 0 }
+    }
+
+    /// Current step index (1-based after the first step).
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+
+    /// Apply one update with the realized variance factor `var` (pass 1.0
+    /// for dense baselines). Returns the step size used.
+    pub fn step(&mut self, w: &mut [f32], v: &[f32], var: f64) -> f32 {
+        self.t += 1;
+        let eta = self.schedule.eta(self.t, var);
+        crate::tensor::axpy(-eta, v, w);
+        eta
+    }
+}
+
+/// SVRG inner-loop update (the update rule itself; the distributed variant
+/// with a master-kept full gradient lives in `coordinator::svrg`).
+#[derive(Debug, Clone)]
+pub struct Svrg {
+    pub schedule: LrSchedule,
+    t: u64,
+}
+
+impl Svrg {
+    pub fn new(schedule: LrSchedule) -> Self {
+        Self { schedule, t: 0 }
+    }
+
+    /// Inner-loop step `w ← w − η v` where `v` is the (sparsified)
+    /// variance-reduced gradient `Q(g(w) − g(w̃) + ∇f(w̃))`. SVRG keeps a
+    /// constant base step divided by the variance factor (§5.1).
+    pub fn step(&mut self, w: &mut [f32], v: &[f32], var: f64) -> f32 {
+        self.t += 1;
+        let eta = self.schedule.eta_constant(var);
+        crate::tensor::axpy(-eta, v, w);
+        eta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_minimizes_quadratic() {
+        // f(w) = ½‖w‖²; gradient = w; SGD with 1/t decay converges.
+        let mut w = vec![4.0f32, -3.0];
+        let mut sgd = Sgd::new(LrSchedule::inv_t(1.0));
+        for _ in 0..200 {
+            let g = w.clone();
+            sgd.step(&mut w, &g, 1.0);
+        }
+        assert!(crate::tensor::norm2_sq(&w) < 1e-3, "{w:?}");
+        assert_eq!(sgd.steps(), 200);
+    }
+
+    #[test]
+    fn variance_scaled_steps_are_smaller() {
+        let mut sgd_a = Sgd::new(LrSchedule::inv_t_var(1.0));
+        let mut sgd_b = Sgd::new(LrSchedule::inv_t_var(1.0));
+        let mut w1 = vec![1.0f32];
+        let mut w2 = vec![1.0f32];
+        let g = vec![1.0f32];
+        let eta_low_var = sgd_a.step(&mut w1, &g, 1.0);
+        let eta_high_var = sgd_b.step(&mut w2, &g, 4.0);
+        assert!(eta_high_var < eta_low_var);
+        assert!((eta_low_var / eta_high_var - 4.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn svrg_constant_step_converges_on_quadratic() {
+        let mut w = vec![2.0f32, 2.0];
+        let mut svrg = Svrg::new(LrSchedule::constant(0.5));
+        for _ in 0..100 {
+            let g = w.clone(); // exact gradient: variance-reduced limit
+            svrg.step(&mut w, &g, 1.0);
+        }
+        assert!(crate::tensor::norm2_sq(&w) < 1e-8);
+    }
+}

@@ -1,0 +1,89 @@
+//! Learning-rate schedules used by the paper's experiments.
+
+/// A step-size rule. `eta(t, var)` for per-step decaying rules; the
+/// variance factor divides the base rate as §5.1 prescribes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    /// Constant base rate (optionally divided by `var` via
+    /// [`LrSchedule::eta_constant`]) — SVRG's convention.
+    Constant { base: f32 },
+    /// `η_t = base / t` — the Fig 5–6 convention (variance-agnostic).
+    InvT { base: f32 },
+    /// `η_t = base / (t · var)` — sparsified SGD's convention (§5.1).
+    InvTVar { base: f32 },
+}
+
+impl LrSchedule {
+    pub fn constant(base: f32) -> Self {
+        LrSchedule::Constant { base }
+    }
+
+    pub fn inv_t(base: f32) -> Self {
+        LrSchedule::InvT { base }
+    }
+
+    pub fn inv_t_var(base: f32) -> Self {
+        LrSchedule::InvTVar { base }
+    }
+
+    /// Step size at (1-based) step `t` with realized variance factor `var`.
+    pub fn eta(&self, t: u64, var: f64) -> f32 {
+        let t = t.max(1) as f64;
+        match *self {
+            LrSchedule::Constant { base } => base,
+            LrSchedule::InvT { base } => (base as f64 / t) as f32,
+            LrSchedule::InvTVar { base } => (base as f64 / (t * var.max(1e-12))) as f32,
+        }
+    }
+
+    /// Constant-style step with variance division (`η ∝ 1/var`) regardless
+    /// of `t` — SVRG's rule. For `InvT`/`InvTVar` this falls back to `eta`
+    /// at `t = 1`.
+    pub fn eta_constant(&self, var: f64) -> f32 {
+        match *self {
+            LrSchedule::Constant { base } => (base as f64 / var.max(1e-12)) as f32,
+            other => other.eta(1, var),
+        }
+    }
+
+    pub fn base(&self) -> f32 {
+        match *self {
+            LrSchedule::Constant { base }
+            | LrSchedule::InvT { base }
+            | LrSchedule::InvTVar { base } => base,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inv_t_decays() {
+        let s = LrSchedule::inv_t(1.0);
+        assert!((s.eta(1, 1.0) - 1.0).abs() < 1e-7);
+        assert!((s.eta(10, 1.0) - 0.1).abs() < 1e-7);
+        // var is ignored by plain InvT.
+        assert_eq!(s.eta(10, 5.0), s.eta(10, 1.0));
+    }
+
+    #[test]
+    fn inv_t_var_divides_by_variance() {
+        let s = LrSchedule::inv_t_var(1.0);
+        assert!((s.eta(2, 2.0) - 0.25).abs() < 1e-7);
+    }
+
+    #[test]
+    fn constant_with_var() {
+        let s = LrSchedule::constant(0.8);
+        assert_eq!(s.eta(100, 1.0), 0.8);
+        assert!((s.eta_constant(2.0) - 0.4).abs() < 1e-7);
+    }
+
+    #[test]
+    fn t_zero_clamped() {
+        let s = LrSchedule::inv_t(1.0);
+        assert!(s.eta(0, 1.0).is_finite());
+    }
+}

@@ -1,0 +1,146 @@
+//! Seeded property-testing mini-framework (proptest is unavailable in the
+//! offline registry — see DESIGN.md §Substitutions).
+//!
+//! A property is a closure over a [`Gen`] that either returns `Ok(())` or an
+//! `Err(String)` describing the violated invariant. [`run`] executes it for
+//! `cases` independent seeds and reports the first failing seed so failures
+//! reproduce deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla_extension rpath on this image)
+//! use gsparse::proptest_lite::{run, Gen};
+//! run("abs is non-negative", 256, |g: &mut Gen| {
+//!     let x = g.f32_in(-10.0, 10.0);
+//!     if x.abs() >= 0.0 { Ok(()) } else { Err(format!("abs({x}) < 0")) }
+//! });
+//! ```
+
+use crate::rngkit::Xoshiro256pp;
+
+/// Random input generator handed to each property case.
+pub struct Gen {
+    rng: Xoshiro256pp,
+    /// Case index (0..cases), usable for size scaling.
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: usize) -> Self {
+        Self {
+            rng: Xoshiro256pp::seed_from_u64(seed),
+            case,
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + self.rng.next_below((hi - lo) as u64) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// A random gradient-like vector: mixture of large and small magnitudes
+    /// with a controllable fraction of exact zeros — the shape the paper's
+    /// (ρ,s)-approximate-sparsity analysis cares about.
+    pub fn gradient_vec(&mut self, d: usize) -> Vec<f32> {
+        let p_zero = self.f32_in(0.0, 0.5);
+        let p_big = self.f32_in(0.01, 0.3);
+        (0..d)
+            .map(|_| {
+                let u = self.rng.next_f32();
+                if u < p_zero {
+                    0.0
+                } else if u < p_zero + p_big {
+                    (self.rng.next_gaussian() * 10.0) as f32
+                } else {
+                    (self.rng.next_gaussian() * 0.05) as f32
+                }
+            })
+            .collect()
+    }
+
+    /// Access the raw RNG for ad-hoc draws.
+    pub fn rng(&mut self) -> &mut Xoshiro256pp {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` for `cases` seeds; panic with the failing seed + message on the
+/// first violation.
+pub fn run<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    // Fixed base so CI runs are reproducible; override with GSPARSE_PT_SEED.
+    let base: u64 = std::env::var("GSPARSE_PT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_CAFE);
+    for case in 0..cases {
+        let seed = base.wrapping_add((case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed, case);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (seed 0x{seed:x}):\n  {msg}\n\
+                 reproduce with GSPARSE_PT_SEED={base} and case index {case}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        run("trivial", 64, |g| {
+            let x = g.f32_in(0.0, 1.0);
+            if (0.0..=1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must-fail'")]
+    fn failing_property_panics_with_seed() {
+        run("must-fail", 16, |g| {
+            let x = g.usize_in(0, 10);
+            if x < 9 {
+                Ok(())
+            } else {
+                Err("hit 9".into())
+            }
+        });
+    }
+
+    #[test]
+    fn gradient_vec_has_requested_len() {
+        run("gradient_vec len", 16, |g| {
+            let d = g.usize_in(1, 300);
+            let v = g.gradient_vec(d);
+            if v.len() == d {
+                Ok(())
+            } else {
+                Err(format!("len {} != {d}", v.len()))
+            }
+        });
+    }
+}

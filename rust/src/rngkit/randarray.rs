@@ -1,0 +1,135 @@
+//! The paper's pre-generated random-array trick (§5.3):
+//!
+//! > "Another costly operation is the pseudo-random number generation in the
+//! > sampling procedure; therefore we generate a large array of pseudo-random
+//! > numbers in \[0, 1\], and iteratively read the numbers during training
+//! > without calling a random number generating function."
+//!
+//! [`RandArray`] holds such a buffer of uniform `f32`s and serves them
+//! cyclically. Each worker owns its own array (seeded from its stream) so no
+//! synchronization is needed. A per-epoch `rotate` with a fresh random offset
+//! breaks the exact periodicity that a naive cyclic read would introduce.
+
+use super::Xoshiro256pp;
+
+/// Pre-generated uniform-\[0,1) array read cyclically on the hot path.
+#[derive(Clone, Debug)]
+pub struct RandArray {
+    buf: Vec<f32>,
+    pos: usize,
+    rng: Xoshiro256pp,
+}
+
+impl RandArray {
+    /// Generate `len` uniforms from `rng`. `len` should comfortably exceed
+    /// the gradient dimension so successive steps see different windows.
+    pub fn new(mut rng: Xoshiro256pp, len: usize) -> Self {
+        assert!(len > 0, "RandArray length must be positive");
+        let buf = (0..len).map(|_| rng.next_f32()).collect();
+        Self { buf, pos: 0, rng }
+    }
+
+    /// Convenience: seed directly.
+    pub fn from_seed(seed: u64, len: usize) -> Self {
+        Self::new(Xoshiro256pp::seed_from_u64(seed), len)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Next uniform; wraps around at the end of the buffer.
+    #[inline]
+    pub fn next(&mut self) -> f32 {
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        if self.pos == self.buf.len() {
+            self.pos = 0;
+        }
+        v
+    }
+
+    /// Bernoulli draw with probability `p` using the pre-generated stream.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f32) -> bool {
+        self.next() < p
+    }
+
+    /// Fill `dst` with the next `dst.len()` uniforms (vectorizable copy on
+    /// the non-wrapping fast path).
+    pub fn fill(&mut self, dst: &mut [f32]) {
+        let mut written = 0;
+        while written < dst.len() {
+            let take = (dst.len() - written).min(self.buf.len() - self.pos);
+            dst[written..written + take].copy_from_slice(&self.buf[self.pos..self.pos + take]);
+            self.pos += take;
+            if self.pos == self.buf.len() {
+                self.pos = 0;
+            }
+            written += take;
+        }
+    }
+
+    /// Re-randomize the read offset (call between epochs to avoid exact
+    /// periodic reuse of the same window alignment).
+    pub fn reseed_offset(&mut self) {
+        self.pos = self.rng.next_below(self.buf.len() as u64) as usize;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn values_in_unit_interval() {
+        let mut ra = RandArray::from_seed(11, 1024);
+        for _ in 0..5000 {
+            let v = ra.next();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn wraps_cyclically() {
+        let mut ra = RandArray::from_seed(12, 8);
+        let first: Vec<f32> = (0..8).map(|_| ra.next()).collect();
+        let second: Vec<f32> = (0..8).map(|_| ra.next()).collect();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn fill_matches_next() {
+        let mut a = RandArray::from_seed(13, 64);
+        let mut b = RandArray::from_seed(13, 64);
+        let mut buf = vec![0.0f32; 100]; // exercises the wrap path
+        a.fill(&mut buf);
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v, b.next(), "mismatch at {i}");
+        }
+    }
+
+    #[test]
+    fn bernoulli_frequency_close() {
+        let mut ra = RandArray::from_seed(14, 1 << 16);
+        let n = 1 << 16;
+        let hits = (0..n).filter(|_| ra.bernoulli(0.25)).count();
+        let freq = hits as f64 / n as f64;
+        assert!((freq - 0.25).abs() < 0.02, "freq={freq}");
+    }
+
+    #[test]
+    fn reseed_offset_stays_in_bounds() {
+        let mut ra = RandArray::from_seed(15, 33);
+        for _ in 0..100 {
+            ra.reseed_offset();
+            let _ = ra.next();
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! `artifacts/manifest.txt` — the contract between `python/compile/aot.py`
+//! and the Rust runtime. One line per tensor:
+//!
+//! ```text
+//! <artifact> in  <idx> <dtype> <dim0>x<dim1>...   # e.g. logistic_grad in 0 f32 8x2048
+//! <artifact> out <idx> <dtype> <dim0>x...
+//! ```
+//!
+//! Scalars use the dims token `scalar`.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One tensor's signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.dims.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// Input/output signature of one artifact.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ArtifactSig {
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Parsed manifest: artifact name → signature.
+#[derive(Debug, Default, Clone)]
+pub struct Manifest {
+    sigs: BTreeMap<String, ArtifactSig>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut sigs: BTreeMap<String, ArtifactSig> = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            if toks.len() != 5 {
+                return Err(anyhow!("manifest line {}: expected 5 tokens", lineno + 1));
+            }
+            let (name, dir, idx, dtype, dims_tok) = (toks[0], toks[1], toks[2], toks[3], toks[4]);
+            let idx: usize = idx
+                .parse()
+                .with_context(|| format!("manifest line {}: bad index", lineno + 1))?;
+            let dims: Vec<usize> = if dims_tok == "scalar" {
+                Vec::new()
+            } else {
+                dims_tok
+                    .split('x')
+                    .map(|p| p.parse::<usize>())
+                    .collect::<std::result::Result<_, _>>()
+                    .with_context(|| format!("manifest line {}: bad dims", lineno + 1))?
+            };
+            let sig = sigs.entry(name.to_string()).or_default();
+            let list = match dir {
+                "in" => &mut sig.inputs,
+                "out" => &mut sig.outputs,
+                other => return Err(anyhow!("manifest line {}: bad direction `{other}`", lineno + 1)),
+            };
+            if list.len() != idx {
+                return Err(anyhow!(
+                    "manifest line {}: index {idx} out of order (have {})",
+                    lineno + 1,
+                    list.len()
+                ));
+            }
+            list.push(TensorSig {
+                dtype: dtype.to_string(),
+                dims,
+            });
+        }
+        Ok(Self { sigs })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSig> {
+        self.sigs.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.sigs.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# logistic gradient
+logistic_grad in 0 f32 8x2048
+logistic_grad in 1 f32 8
+logistic_grad in 2 f32 2048
+logistic_grad out 0 f32 2048
+logistic_grad out 1 f32 scalar
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let sig = m.get("logistic_grad").unwrap();
+        assert_eq!(sig.inputs.len(), 3);
+        assert_eq!(sig.outputs.len(), 2);
+        assert_eq!(sig.inputs[0].dims, vec![8, 2048]);
+        assert_eq!(sig.outputs[1].dims, Vec::<usize>::new());
+        assert_eq!(sig.outputs[1].elements(), 1);
+        assert_eq!(sig.inputs[0].dims_i64(), vec![8i64, 2048]);
+        assert_eq!(m.names().collect::<Vec<_>>(), vec!["logistic_grad"]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("too few tokens\n").is_err());
+        assert!(Manifest::parse("a in zero f32 4\n").is_err());
+        assert!(Manifest::parse("a sideways 0 f32 4\n").is_err());
+        assert!(Manifest::parse("a in 1 f32 4\n").is_err()); // out-of-order idx
+        assert!(Manifest::parse("a in 0 f32 4xx\n").is_err());
+    }
+}

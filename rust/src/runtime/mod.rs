@@ -1,0 +1,207 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) from the Rust hot path.
+//!
+//! Interchange format is **HLO text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that this image's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md). Every artifact is lowered with
+//! `return_tuple=True`, so outputs always decompose as a tuple.
+//!
+//! Python never runs at training time: `make artifacts` produces the text
+//! files plus `manifest.txt` (name → input/output signature), and this
+//! module is the only consumer.
+
+mod manifest;
+
+pub use manifest::{ArtifactSig, Manifest, TensorSig};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub name: String,
+    pub sig: Option<ArtifactSig>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut out = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact `{}`", self.name))?;
+        let first = out
+            .pop()
+            .and_then(|mut replicas| {
+                if replicas.is_empty() {
+                    None
+                } else {
+                    Some(replicas.remove(0))
+                }
+            })
+            .ok_or_else(|| anyhow!("artifact `{}` produced no outputs", self.name))?;
+        let literal = first.to_literal_sync()?;
+        Ok(literal.to_tuple()?)
+    }
+
+    /// Execute and return the outputs as `Vec<f32>` buffers (the common case
+    /// for gradients/losses).
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        self.run(inputs)?
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+/// PJRT CPU client + compiled-executable cache, keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, Executable>,
+    manifest: Option<Manifest>,
+    dir: Option<PathBuf>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            cache: HashMap::new(),
+            manifest: None,
+            dir: None,
+        })
+    }
+
+    /// Point the runtime at an artifacts directory (reads `manifest.txt` if
+    /// present; artifacts themselves load lazily on first use).
+    pub fn with_artifact_dir(mut self, dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.txt");
+        if mpath.exists() {
+            self.manifest = Some(Manifest::load(&mpath)?);
+        }
+        self.dir = Some(dir);
+        Ok(self)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile HLO text at `path` and register it under `name`.
+    pub fn load_file(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-UTF8 path {path:?}"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact `{name}`"))?;
+        let sig = self.manifest.as_ref().and_then(|m| m.get(name).cloned());
+        self.cache.insert(
+            name.to_string(),
+            Executable {
+                name: name.to_string(),
+                sig,
+                exe,
+            },
+        );
+        Ok(())
+    }
+
+    /// Get (lazily loading from the artifact dir) the named executable.
+    pub fn get(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let dir = self
+                .dir
+                .clone()
+                .ok_or_else(|| anyhow!("artifact `{name}` not loaded and no artifact dir set"))?;
+            let path = dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                return Err(anyhow!(
+                    "artifact `{name}` not found at {} — run `make artifacts` first",
+                    path.display()
+                ));
+            }
+            self.load_file(name, &path)?;
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Names available in the manifest (empty if none was found).
+    pub fn manifest_names(&self) -> Vec<String> {
+        self.manifest
+            .as_ref()
+            .map(|m| m.names().map(str::to_string).collect())
+            .unwrap_or_default()
+    }
+}
+
+/// Helpers for building input literals.
+pub mod lit {
+    use anyhow::Result;
+
+    /// Dense f32 tensor literal with the given dims.
+    pub fn f32_tensor(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    /// Dense i32 tensor literal.
+    pub fn i32_tensor(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    /// Scalar f32 literal.
+    pub fn f32_scalar(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need real artifacts live in rust/tests/ (they run
+    // after `make artifacts`). Here we only cover the artifact-less paths.
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let mut rt = Runtime::cpu().unwrap().with_artifact_dir("/nonexistent-dir").unwrap();
+        let err = match rt.get("nope") {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn no_dir_is_a_clear_error() {
+        let mut rt = Runtime::cpu().unwrap();
+        let err = match rt.get("nope") {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.contains("no artifact dir"), "{err}");
+    }
+
+    #[test]
+    fn lit_helpers_validate_shapes() {
+        assert!(lit::f32_tensor(&[1.0, 2.0], &[2, 2]).is_err());
+        let l = lit::f32_tensor(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        let i = lit::i32_tensor(&[1, 2, 3], &[3]).unwrap();
+        assert_eq!(i.element_count(), 3);
+    }
+}

@@ -1,0 +1,423 @@
+//! The paper's core contribution: **unbiased gradient sparsification**.
+//!
+//! Coordinate `i` of a stochastic gradient `g` survives with probability
+//! `p_i` and is amplified to `g_i / p_i`, so the sparsified vector `Q(g)` is
+//! unbiased (`E[Q(g)] = g`) with variance `Σ_i g_i² / p_i`. Proposition 1
+//! shows the probability vector minimizing expected sparsity under a variance
+//! budget has the form `p_i = min(λ |g_i|, 1)`: a *dominating set* `S_k` of
+//! the `k` largest-magnitude coordinates is always kept (`p = 1`), and the
+//! rest are kept with probability proportional to magnitude. Crucially, every
+//! survivor outside `S_k` then carries the *same* value `sign(g_i)/λ`, which
+//! the §3.3 hybrid coding exploits.
+//!
+//! This module provides:
+//! * [`probs`] — the two solvers for `p`: closed-form (Algorithm 2) and
+//!   greedy (Algorithm 3, the one used in all of the paper's experiments);
+//! * [`sample`] — Bernoulli selection + unbiased rescaling into the
+//!   [`SparseGrad`] split representation;
+//! * [`Compressor`] implementations for the paper's method (GSpar) and every
+//!   baseline in the evaluation: uniform sampling (UniSp), QSGD, TernGrad,
+//!   deterministic top-k, and 1-bit SGD with error feedback.
+
+pub mod baselines;
+pub mod probs;
+pub mod sample;
+
+pub use baselines::{OneBitSgd, QsgdCompressor, TernGradCompressor, TopKCompressor, UniformSampler};
+pub use probs::{closed_form_probs, greedy_probs, ProbVector};
+pub use sample::sample_sparse;
+
+use crate::config::Method;
+use crate::rngkit::RandArray;
+
+/// An unbiasedly-sparsified gradient in the paper's two-part representation.
+///
+/// * `exact` — survivors from the dominating set `S_k` (`p_i = 1`); their
+///   values are transmitted as full floats (`Q_A` in §3.3).
+/// * `shared` — survivors with `p_i = λ|g_i| < 1`; their decoded value is
+///   `± shared_mag` with `shared_mag = 1/λ`, so only index + sign travel on
+///   the wire (`Q_B` in §3.3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseGrad {
+    /// Original dimension `d`.
+    pub d: u32,
+    /// `(index, value)` pairs for `S_k` survivors, ascending index.
+    pub exact: Vec<(u32, f32)>,
+    /// `(index, is_negative)` for rescaled survivors, ascending index.
+    pub shared: Vec<(u32, bool)>,
+    /// The common magnitude `1/λ` of all `shared` survivors.
+    pub shared_mag: f32,
+}
+
+impl SparseGrad {
+    pub fn empty(d: usize) -> Self {
+        Self {
+            d: d as u32,
+            exact: Vec::new(),
+            shared: Vec::new(),
+            shared_mag: 0.0,
+        }
+    }
+
+    /// Number of transmitted (non-zero) coordinates.
+    pub fn nnz(&self) -> usize {
+        self.exact.len() + self.shared.len()
+    }
+
+    /// Decode into a dense vector (adds into `out`, scaled by `alpha`).
+    pub fn add_into(&self, alpha: f32, out: &mut [f32]) {
+        assert_eq!(out.len(), self.d as usize);
+        for &(i, v) in &self.exact {
+            out[i as usize] += alpha * v;
+        }
+        let pos = alpha * self.shared_mag;
+        for &(i, neg) in &self.shared {
+            out[i as usize] += if neg { -pos } else { pos };
+        }
+    }
+
+    /// Decode to a fresh dense vector.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.d as usize];
+        self.add_into(1.0, &mut out);
+        out
+    }
+
+    /// Squared ℓ2 norm of the decoded vector (computed sparsely).
+    pub fn norm2_sq(&self) -> f64 {
+        let mut s: f64 = self
+            .exact
+            .iter()
+            .map(|&(_, v)| (v as f64) * (v as f64))
+            .sum();
+        s += self.shared.len() as f64 * (self.shared_mag as f64) * (self.shared_mag as f64);
+        s
+    }
+}
+
+/// What a compression step produced: either a genuinely sparse message, a
+/// dense quantized message (QSGD/TernGrad/1-bit), or the uncompressed vector.
+#[derive(Debug, Clone)]
+pub enum Compressed {
+    /// No compression (the paper's "baseline").
+    Dense(Vec<f32>),
+    /// Unbiased sparsification (GSpar / UniSp / top-k).
+    Sparse(SparseGrad),
+    /// QSGD: ℓ2 norm + per-coordinate `sign · level/2^bits`.
+    Qsgd {
+        d: u32,
+        norm: f32,
+        bits: u32,
+        /// Signed quantization levels, `|level| ≤ 2^bits`.
+        levels: Vec<i32>,
+    },
+    /// TernGrad: scale `s = max|g|` + per-coordinate {-1, 0, +1}.
+    Ternary { d: u32, scale: f32, signs: Vec<i8> },
+}
+
+impl Compressed {
+    /// Dimension of the decoded vector.
+    pub fn dim(&self) -> usize {
+        match self {
+            Compressed::Dense(v) => v.len(),
+            Compressed::Sparse(s) => s.d as usize,
+            Compressed::Qsgd { d, .. } => *d as usize,
+            Compressed::Ternary { d, .. } => *d as usize,
+        }
+    }
+
+    /// Number of non-zero coordinates in the decoded vector.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Compressed::Dense(v) => v.iter().filter(|&&x| x != 0.0).count(),
+            Compressed::Sparse(s) => s.nnz(),
+            Compressed::Qsgd { levels, .. } => levels.iter().filter(|&&l| l != 0).count(),
+            Compressed::Ternary { signs, .. } => signs.iter().filter(|&&s| s != 0).count(),
+        }
+    }
+
+    /// `out += alpha * decode(self)`.
+    pub fn add_into(&self, alpha: f32, out: &mut [f32]) {
+        match self {
+            Compressed::Dense(v) => {
+                crate::tensor::axpy(alpha, v, out);
+            }
+            Compressed::Sparse(s) => s.add_into(alpha, out),
+            Compressed::Qsgd {
+                norm, bits, levels, ..
+            } => {
+                let unit = *norm / (1u32 << bits) as f32;
+                for (o, &l) in out.iter_mut().zip(levels.iter()) {
+                    if l != 0 {
+                        *o += alpha * unit * l as f32;
+                    }
+                }
+            }
+            Compressed::Ternary { scale, signs, .. } => {
+                for (o, &s) in out.iter_mut().zip(signs.iter()) {
+                    if s != 0 {
+                        *o += alpha * scale * s as f32;
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.dim()];
+        self.add_into(1.0, &mut out);
+        out
+    }
+
+    /// Squared ℓ2 norm of the decoded message (for the `var` metric).
+    pub fn norm2_sq(&self) -> f64 {
+        match self {
+            Compressed::Dense(v) => crate::tensor::norm2_sq(v) as f64,
+            Compressed::Sparse(s) => s.norm2_sq(),
+            Compressed::Qsgd {
+                norm, bits, levels, ..
+            } => {
+                let unit = (*norm / (1u32 << bits) as f32) as f64;
+                levels
+                    .iter()
+                    .map(|&l| {
+                        let v = unit * l as f64;
+                        v * v
+                    })
+                    .sum()
+            }
+            Compressed::Ternary { scale, signs, .. } => {
+                let s2 = (*scale as f64) * (*scale as f64);
+                signs.iter().filter(|&&s| s != 0).count() as f64 * s2
+            }
+        }
+    }
+}
+
+/// Per-step statistics reported by a compressor (feeds the paper's `var` and
+/// `spa` figure labels and the Fig 5–6 communication-cost x-axis).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CompressStats {
+    /// Expected sparsity `Σ_i p_i` (realized nnz for deterministic methods).
+    pub expected_nnz: f64,
+    /// Idealized coding length in bits for this message, per the paper's
+    /// §5.1 cost formulas (Theorem 4 hybrid cost for GSpar, `d·b` for dense,
+    /// `d·bits`+float for QSGD, 2 bits/coord for TernGrad…).
+    pub ideal_bits: u64,
+}
+
+/// A gradient compressor: one instance per worker (may carry state, e.g.
+/// 1-bit error feedback).
+pub trait Compressor: Send {
+    /// Compress `g`, drawing randomness from the worker's pre-generated
+    /// uniform array (the paper's §5.3 trick).
+    fn compress(&mut self, g: &[f32], rand: &mut RandArray) -> (Compressed, CompressStats);
+
+    /// Human-readable name for figure labels.
+    fn name(&self) -> &'static str;
+}
+
+/// Bits per float on the simulated wire (the paper's `b`). f32 everywhere.
+pub const FLOAT_BITS: u64 = 32;
+
+/// `⌈log2 d⌉` — index cost in bits used by the paper's coding-length model.
+pub fn index_bits(d: usize) -> u64 {
+    (usize::BITS - (d.max(2) - 1).leading_zeros()) as u64
+}
+
+/// The paper's GSpar compressor: greedy probabilities (Algorithm 3, the
+/// variant used in all experiments) or closed-form (Algorithm 2), then
+/// Bernoulli sampling and hybrid-coding cost accounting.
+pub struct GSparCompressor {
+    /// Target density ρ (greedy) — ignored by the closed-form variant.
+    pub rho: f32,
+    /// Variance budget ε (closed form).
+    pub eps: f32,
+    /// Greedy fixed-point iterations (paper: j = 2 suffices).
+    pub iters: usize,
+    /// Use Algorithm 2 (exact) instead of Algorithm 3 (greedy).
+    pub exact: bool,
+    /// Scratch probability vector (reused across steps — no hot-path alloc).
+    p_scratch: Vec<f32>,
+}
+
+impl GSparCompressor {
+    pub fn greedy(rho: f32, iters: usize) -> Self {
+        Self {
+            rho,
+            eps: 0.0,
+            iters,
+            exact: false,
+            p_scratch: Vec::new(),
+        }
+    }
+
+    pub fn closed_form(eps: f32) -> Self {
+        Self {
+            rho: 0.0,
+            eps,
+            iters: 0,
+            exact: true,
+            p_scratch: Vec::new(),
+        }
+    }
+
+    /// Compute the probability vector only (used by tests and the fused
+    /// L1-kernel cross-checks).
+    pub fn probabilities(&mut self, g: &[f32]) -> ProbVector {
+        if self.exact {
+            closed_form_probs(g, self.eps, &mut self.p_scratch)
+        } else {
+            greedy_probs(g, self.rho, self.iters, &mut self.p_scratch)
+        }
+    }
+}
+
+impl Compressor for GSparCompressor {
+    fn compress(&mut self, g: &[f32], rand: &mut RandArray) -> (Compressed, CompressStats) {
+        let pv = if self.exact {
+            closed_form_probs(g, self.eps, &mut self.p_scratch)
+        } else {
+            greedy_probs(g, self.rho, self.iters, &mut self.p_scratch)
+        };
+        let sg = sample_sparse(g, &self.p_scratch, pv.inv_lambda, rand);
+        let stats = CompressStats {
+            expected_nnz: pv.expected_nnz,
+            ideal_bits: hybrid_ideal_bits(
+                pv.num_exact as u64,
+                pv.expected_nnz - pv.num_exact as f64,
+                g.len(),
+            ),
+        };
+        (Compressed::Sparse(sg), stats)
+    }
+
+    fn name(&self) -> &'static str {
+        if self.exact {
+            "GSpar-exact"
+        } else {
+            "GSpar"
+        }
+    }
+}
+
+/// The paper's §5.1 idealized per-message cost for the hybrid coding:
+/// `Σ_{p_i=1}(b + log₂d) + min(2d, log₂d · Σ_{p_i<1} p_i) + b`.
+pub fn hybrid_ideal_bits(num_exact: u64, expected_qb: f64, d: usize) -> u64 {
+    let ib = index_bits(d);
+    let qa = num_exact * (FLOAT_BITS + ib);
+    let qb = ((expected_qb.max(0.0)) * ib as f64).min(2.0 * d as f64) as u64;
+    qa + qb + FLOAT_BITS
+}
+
+/// Dense-transmission cost: `d · b`.
+pub fn dense_ideal_bits(d: usize) -> u64 {
+    d as u64 * FLOAT_BITS
+}
+
+/// Build a compressor for a [`Method`].
+///
+/// `rho` is the target density (GSpar/UniSp/TopK), `eps` the variance budget
+/// (GSpar-exact), `qsgd_bits` the QSGD quantization width.
+pub fn build(method: Method, rho: f32, eps: f32, qsgd_bits: u32) -> Box<dyn Compressor> {
+    match method {
+        Method::Dense => Box::new(DenseCompressor),
+        Method::GSpar => Box::new(GSparCompressor::greedy(rho, 2)),
+        Method::GSparExact => Box::new(GSparCompressor::closed_form(eps)),
+        Method::UniSp => Box::new(UniformSampler::new(rho)),
+        Method::Qsgd => Box::new(QsgdCompressor::new(qsgd_bits)),
+        Method::TernGrad => Box::new(TernGradCompressor::new()),
+        Method::TopK => Box::new(TopKCompressor::new(rho)),
+        Method::OneBit => Box::new(OneBitSgd::new()),
+    }
+}
+
+/// Identity compressor (the paper's dense "baseline").
+pub struct DenseCompressor;
+
+impl Compressor for DenseCompressor {
+    fn compress(&mut self, g: &[f32], _rand: &mut RandArray) -> (Compressed, CompressStats) {
+        (
+            Compressed::Dense(g.to_vec()),
+            CompressStats {
+                expected_nnz: g.len() as f64,
+                ideal_bits: dense_ideal_bits(g.len()),
+            },
+        )
+    }
+
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngkit::RandArray;
+
+    #[test]
+    fn sparse_grad_decode_and_norm() {
+        let sg = SparseGrad {
+            d: 6,
+            exact: vec![(0, 2.0), (4, -1.0)],
+            shared: vec![(2, false), (5, true)],
+            shared_mag: 0.5,
+        };
+        assert_eq!(sg.nnz(), 4);
+        let dense = sg.to_dense();
+        assert_eq!(dense, vec![2.0, 0.0, 0.5, 0.0, -1.0, -0.5]);
+        let n2: f64 = dense.iter().map(|&v| (v as f64).powi(2)).sum();
+        assert!((sg.norm2_sq() - n2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compressed_dense_roundtrip() {
+        let g = vec![1.0, -2.0, 0.0, 3.0];
+        let c = Compressed::Dense(g.clone());
+        assert_eq!(c.to_dense(), g);
+        assert_eq!(c.nnz(), 3);
+        assert_eq!(c.dim(), 4);
+        assert!((c.norm2_sq() - 14.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn index_bits_values() {
+        assert_eq!(index_bits(2), 1);
+        assert_eq!(index_bits(1024), 10);
+        assert_eq!(index_bits(1025), 11);
+        assert_eq!(index_bits(2048), 11);
+    }
+
+    #[test]
+    fn dense_compressor_identity() {
+        let mut c = DenseCompressor;
+        let g = vec![0.5, -0.25, 0.0];
+        let mut ra = RandArray::from_seed(1, 64);
+        let (out, stats) = c.compress(&g, &mut ra);
+        assert_eq!(out.to_dense(), g);
+        assert_eq!(stats.expected_nnz, 3.0);
+        assert_eq!(stats.ideal_bits, 96);
+    }
+
+    #[test]
+    fn hybrid_bits_min_with_dense_symbols() {
+        // When expected QB mass is huge, cost is capped at 2d + QA + b.
+        let d = 1024;
+        let bits = hybrid_ideal_bits(0, 1e12, d);
+        assert_eq!(bits, 2 * d as u64 + FLOAT_BITS);
+    }
+
+    #[test]
+    fn factory_builds_every_method() {
+        let mut ra = RandArray::from_seed(2, 4096);
+        let g: Vec<f32> = (0..128).map(|i| ((i * 37 % 17) as f32 - 8.0) / 8.0).collect();
+        for &m in Method::all() {
+            let mut c = build(m, 0.2, 0.5, 4);
+            let (out, stats) = c.compress(&g, &mut ra);
+            assert_eq!(out.dim(), g.len(), "{m}");
+            assert!(stats.ideal_bits > 0, "{m}");
+            assert!(!c.name().is_empty());
+        }
+    }
+}

@@ -1,0 +1,509 @@
+//! The two solvers for the optimal probability vector `p_i = min(λ|g_i|, 1)`
+//! of Proposition 1: the closed form of Algorithm 2 and the greedy fixed
+//! point of Algorithm 3.
+
+/// Result of a probability computation. The probabilities themselves are
+/// written into the caller's scratch buffer (no hot-path allocation); this
+/// struct carries the scalars the sampler and coder need.
+#[derive(Debug, Clone, Copy)]
+pub struct ProbVector {
+    /// `1/λ` — the decoded magnitude shared by all survivors with `p_i < 1`.
+    /// Zero when no such coordinates exist.
+    pub inv_lambda: f32,
+    /// Number of coordinates with `p_i == 1` (the dominating set `S_k`).
+    pub num_exact: usize,
+    /// Expected sparsity `Σ_i p_i`.
+    pub expected_nnz: f64,
+    /// Variance bound `Σ_i g_i²/p_i` of the sparsified vector (f64; only
+    /// over `p_i > 0`).
+    pub variance: f64,
+}
+
+/// **Algorithm 2** (closed form). Finds the smallest `k` satisfying eq. (6)
+///
+/// ```text
+/// |g_(k+1)| · Σ_{i>k} |g_(i)|  ≤  ε Σ_i g_i² + Σ_{i>k} g_(i)²
+/// ```
+///
+/// then sets `p_(i) = 1` for `i ≤ k` and `p_(i) = λ|g_(i)|` otherwise, with
+/// `λ = Σ_{i>k}|g_(i)| / (ε Σ g² + Σ_{i>k} g_(i)²)` — eq. (7).
+///
+/// `eps ≥ 0` is the variance-increase budget. Runs in O(d log d) (full sort
+/// of magnitudes; the paper notes partial sorting suffices but the exact
+/// variant is used for validation, not the hot path).
+pub fn closed_form_probs(g: &[f32], eps: f32, p_out: &mut Vec<f32>) -> ProbVector {
+    let d = g.len();
+    p_out.clear();
+    p_out.resize(d, 0.0);
+    assert!(eps >= 0.0, "variance budget must be non-negative");
+
+    // Order coordinate indices by |g| descending.
+    let mut order: Vec<u32> = (0..d as u32).collect();
+    order.sort_unstable_by(|&a, &b| {
+        let (ma, mb) = (g[a as usize].abs(), g[b as usize].abs());
+        mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal)
+    });
+
+    // Suffix sums over the sorted order: tail_l1[k] = Σ_{i>k} |g_(i)|,
+    // tail_l2[k] = Σ_{i>k} g_(i)² (1-based k, i.e. after removing top-k).
+    let mut tail_l1 = vec![0.0f64; d + 1];
+    let mut tail_l2 = vec![0.0f64; d + 1];
+    for i in (0..d).rev() {
+        let m = g[order[i] as usize].abs() as f64;
+        tail_l1[i] = tail_l1[i + 1] + m;
+        tail_l2[i] = tail_l2[i + 1] + m * m;
+    }
+    let total_l2 = tail_l2[0];
+
+    if total_l2 == 0.0 {
+        // Zero gradient: nothing to keep.
+        return ProbVector {
+            inv_lambda: 0.0,
+            num_exact: 0,
+            expected_nnz: 0.0,
+            variance: 0.0,
+        };
+    }
+
+    // Smallest k in [0, d] with |g_(k+1)| · tail_l1[k] ≤ ε·total + tail_l2[k].
+    let budget = eps as f64 * total_l2;
+    let mut k = d; // fallback: keep everything exactly
+    for cand in 0..d {
+        let next_mag = g[order[cand] as usize].abs() as f64; // |g_(k+1)| for k = cand
+        if next_mag * tail_l1[cand] <= budget + tail_l2[cand] {
+            k = cand;
+            break;
+        }
+    }
+
+    let (lambda, inv_lambda) = if k == d || tail_l1[k] == 0.0 {
+        (0.0, 0.0)
+    } else {
+        let lam = tail_l1[k] / (budget + tail_l2[k]);
+        (lam, (1.0 / lam) as f32)
+    };
+
+    let mut expected_nnz = k as f64;
+    let mut variance = tail_l2[0] - tail_l2[k]; // exact coords contribute g².
+    let mut num_exact = k;
+    for &idx in &order[..k] {
+        p_out[idx as usize] = 1.0;
+    }
+    for &idx in &order[k..] {
+        let m = g[idx as usize].abs() as f64;
+        if m == 0.0 {
+            continue;
+        }
+        let p = (lambda * m).min(1.0);
+        p_out[idx as usize] = p as f32;
+        expected_nnz += p;
+        variance += m * m / p;
+        // Boundary coordinates where λ|g| ≥ 1 are kept with certainty and
+        // travel in the QA part — count them as exact for coding stats.
+        if p_out[idx as usize] >= 1.0 {
+            num_exact += 1;
+        }
+    }
+
+    ProbVector {
+        inv_lambda,
+        num_exact,
+        expected_nnz,
+        variance,
+    }
+}
+
+/// **Algorithm 3** (greedy). Targets expected density `ρ = Σ p_i / d`:
+///
+/// 1. `p⁰_i = min(ρ d |g_i| / ||g||₁, 1)`;
+/// 2. repeat: with active set `I = {i : p_i < 1}` (and `p_i > 0`), rescale
+///    `c = (ρd − d + |I|)/Σ_{I} p_i`; stop if `c ≤ 1`; else
+///    `p_i ← min(c·p_i, 1)`.
+///
+/// The paper observes `j = 2` iterations suffice in practice. The final `p`
+/// still has the Proposition-1 form `p_i = min(γ|g_i|, 1)` because every
+/// rescale multiplies all uncapped entries by the same factor; we track `γ`
+/// so the sampler can share `1/γ` across all `p_i < 1` survivors.
+///
+/// Runs in O(d · iters), allocation-free given the scratch buffer, and fully
+/// vectorizable (the paper's SIMD observation).
+pub fn greedy_probs(g: &[f32], rho: f32, iters: usize, p_out: &mut Vec<f32>) -> ProbVector {
+    let d = g.len();
+    assert!(rho > 0.0 && rho <= 1.0, "rho must be in (0, 1]");
+    p_out.clear();
+    p_out.resize(d, 0.0);
+
+    // ||g||₁ in f64 (d can be large and magnitudes tiny). 4-lane unrolled
+    // accumulation breaks the serial FP dependency chain so it vectorizes.
+    let mut acc = [0.0f64; 4];
+    let chunks = d / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += g[i].abs() as f64;
+        acc[1] += g[i + 1].abs() as f64;
+        acc[2] += g[i + 2].abs() as f64;
+        acc[3] += g[i + 3].abs() as f64;
+    }
+    let mut l1 = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for &x in &g[chunks * 4..] {
+        l1 += x.abs() as f64;
+    }
+    if l1 == 0.0 {
+        return ProbVector {
+            inv_lambda: 0.0,
+            num_exact: 0,
+            expected_nnz: 0.0,
+            variance: 0.0,
+        };
+    }
+
+    let target = rho as f64 * d as f64;
+    // γ accumulates the total scale so that p_i = min(γ|g_i|, 1).
+    let mut gamma = target / l1;
+    // Init pass in pure f32 (vectorizes; γ error ≪ the f32 probability ulp),
+    // fused with the first iteration's (Σ_{p<1} p, #capped) statistics so
+    // each fixed-point iteration makes exactly one pass over `p`.
+    let gf = gamma as f32;
+    let (mut active_sum, mut capped) = init_scale_pass(g, gf, p_out);
+
+    for _ in 0..iters {
+        let want = target - capped as f64; // ρd − d + |I| with zeros excluded
+        if want <= 0.0 || active_sum <= 0.0 {
+            break;
+        }
+        let c = want / active_sum;
+        if c <= 1.0 {
+            break;
+        }
+        gamma *= c;
+        let cf = c as f32;
+        // Scale pass fused with the next iteration's statistics.
+        let (next_sum, next_capped) = rescale_pass(p_out, cf);
+        active_sum = next_sum;
+        capped = next_capped;
+    }
+
+    // Final scalars — division-free (for p < 1, m²/p = m/γ — Prop. 1 form)
+    // and branchless (g = 0 ⇒ p = 0 ⇒ both select arms contribute 0), so
+    // the loop vectorizes.
+    let inv_gamma = 1.0 / gamma;
+    let mut expected_nnz = 0.0f64;
+    let mut variance = 0.0f64;
+    let mut num_exact = 0usize;
+    for (&p, &x) in p_out.iter().zip(g.iter()) {
+        let m = x.abs() as f64;
+        let is_capped = p >= 1.0;
+        num_exact += is_capped as usize;
+        expected_nnz += if is_capped { 1.0 } else { p as f64 };
+        variance += if is_capped { m * m } else { m * inv_gamma };
+    }
+
+    ProbVector {
+        inv_lambda: inv_gamma as f32,
+        num_exact,
+        expected_nnz,
+        variance,
+    }
+}
+
+/// `p_i = min(gf·|g_i|, 1)` plus `(Σ_{0<p<1} p, #{p ≥ 1})` in one pass.
+/// Branchless (selects) with 4-lane f64 accumulators so LLVM vectorizes.
+#[inline]
+fn init_scale_pass(g: &[f32], gf: f32, p_out: &mut [f32]) -> (f64, usize) {
+    let d = g.len();
+    let mut sum = [0.0f64; 4];
+    let mut cap = [0u64; 4];
+    let chunks = d / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        for lane in 0..4 {
+            let v = (gf * g[i + lane].abs()).min(1.0);
+            p_out[i + lane] = v;
+            let capped = v >= 1.0;
+            cap[lane] += capped as u64;
+            sum[lane] += if capped { 0.0 } else { v as f64 };
+        }
+    }
+    let mut active_sum = (sum[0] + sum[1]) + (sum[2] + sum[3]);
+    let mut capped = (cap[0] + cap[1] + cap[2] + cap[3]) as usize;
+    for i in chunks * 4..d {
+        let v = (gf * g[i].abs()).min(1.0);
+        p_out[i] = v;
+        if v >= 1.0 {
+            capped += 1;
+        } else {
+            active_sum += v as f64;
+        }
+    }
+    (active_sum, capped)
+}
+
+/// `p_i ← min(c·p_i, 1)` for uncapped entries, returning the next
+/// iteration's `(Σ_{0<p<1} p, #{p ≥ 1})` from the same pass. Branchless:
+/// capped entries multiply by 1 (min keeps them at 1.0 exactly).
+#[inline]
+fn rescale_pass(p_out: &mut [f32], cf: f32) -> (f64, usize) {
+    let d = p_out.len();
+    let mut sum = [0.0f64; 4];
+    let mut cap = [0u64; 4];
+    let chunks = d / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        for lane in 0..4 {
+            let v = p_out[i + lane];
+            // Capped entries stay exactly 1.0: 1.0*cf >= 1.0 since cf > 1.
+            let nv = (v * cf).min(1.0);
+            p_out[i + lane] = nv;
+            let capped = nv >= 1.0;
+            cap[lane] += capped as u64;
+            sum[lane] += if capped { 0.0 } else { nv as f64 };
+        }
+    }
+    let mut active_sum = (sum[0] + sum[1]) + (sum[2] + sum[3]);
+    let mut capped = (cap[0] + cap[1] + cap[2] + cap[3]) as usize;
+    for p in p_out[chunks * 4..].iter_mut() {
+        let nv = (*p * cf).min(1.0);
+        *p = nv;
+        if nv >= 1.0 {
+            capped += 1;
+        } else {
+            active_sum += nv as f64;
+        }
+    }
+    (active_sum, capped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_grad(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::rngkit::Xoshiro256pp::seed_from_u64(seed);
+        (0..d)
+            .map(|_| {
+                let u = rng.next_f32();
+                if u < 0.1 {
+                    (rng.next_gaussian() * 5.0) as f32
+                } else {
+                    (rng.next_gaussian() * 0.05) as f32
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn closed_form_satisfies_variance_budget() {
+        let g = sample_grad(512, 1);
+        let total: f64 = g.iter().map(|&x| (x as f64).powi(2)).sum();
+        for eps in [0.1f32, 0.5, 1.0, 3.0] {
+            let mut p = Vec::new();
+            let pv = closed_form_probs(&g, eps, &mut p);
+            // Variance constraint: Σ g²/p ≤ (1+ε) Σ g² (+ small slack).
+            assert!(
+                pv.variance <= (1.0 + eps as f64) * total * (1.0 + 1e-6),
+                "eps={eps}: var {} > budget {}",
+                pv.variance,
+                (1.0 + eps as f64) * total
+            );
+        }
+    }
+
+    #[test]
+    fn closed_form_prop1_shape() {
+        // p_i = min(λ|g_i|, 1): monotone in |g_i| and exactly 1 on S_k.
+        let g = sample_grad(256, 2);
+        let mut p = Vec::new();
+        let pv = closed_form_probs(&g, 0.5, &mut p);
+        let lam = if pv.inv_lambda > 0.0 {
+            1.0 / pv.inv_lambda as f64
+        } else {
+            0.0
+        };
+        let mut exact = 0;
+        for (i, &pi) in p.iter().enumerate() {
+            let m = g[i].abs() as f64;
+            if pi >= 1.0 {
+                exact += 1;
+            } else if m > 0.0 && lam > 0.0 {
+                assert!(
+                    (pi as f64 - (lam * m).min(1.0)).abs() < 1e-5,
+                    "p[{i}]={pi} vs λ|g|={}",
+                    lam * m
+                );
+            }
+        }
+        assert_eq!(exact, pv.num_exact);
+    }
+
+    #[test]
+    fn closed_form_larger_eps_sparser() {
+        let g = sample_grad(512, 3);
+        let mut p = Vec::new();
+        let lo = closed_form_probs(&g, 0.1, &mut p).expected_nnz;
+        let hi = closed_form_probs(&g, 2.0, &mut p).expected_nnz;
+        assert!(hi < lo, "eps=2 nnz {hi} !< eps=0.1 nnz {lo}");
+    }
+
+    #[test]
+    fn closed_form_zero_eps_keeps_everything() {
+        // ε = 0 allows no variance increase ⇒ p_i = 1 on all non-zeros.
+        let g = vec![1.0, -2.0, 0.0, 0.5];
+        let mut p = Vec::new();
+        let pv = closed_form_probs(&g, 0.0, &mut p);
+        assert_eq!(p, vec![1.0, 1.0, 0.0, 1.0]);
+        // All three non-zeros end at p = 1 (k may stop earlier when the
+        // boundary coordinate lands exactly at λ|g| = 1 — still exact).
+        assert_eq!(pv.num_exact, 3);
+        assert!((pv.expected_nnz - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn closed_form_zero_gradient() {
+        let g = vec![0.0; 16];
+        let mut p = Vec::new();
+        let pv = closed_form_probs(&g, 1.0, &mut p);
+        assert_eq!(pv.expected_nnz, 0.0);
+        assert!(p.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn greedy_hits_target_density() {
+        let g = sample_grad(2048, 4);
+        let mut p = Vec::new();
+        for rho in [0.02f32, 0.1, 0.3] {
+            let pv = greedy_probs(&g, rho, 2, &mut p);
+            let density = pv.expected_nnz / g.len() as f64;
+            // Greedy may undershoot after truncation but should be close
+            // after 2 iterations (paper's observation).
+            assert!(
+                density <= rho as f64 + 1e-3,
+                "rho={rho}: density {density} exceeds target"
+            );
+            assert!(
+                density >= rho as f64 * 0.75,
+                "rho={rho}: density {density} far below target"
+            );
+        }
+    }
+
+    #[test]
+    fn greedy_prop1_form() {
+        // Final p must satisfy p_i = min(γ|g_i|, 1) with γ = 1/inv_lambda.
+        let g = sample_grad(512, 5);
+        let mut p = Vec::new();
+        let pv = greedy_probs(&g, 0.1, 2, &mut p);
+        assert!(pv.inv_lambda > 0.0);
+        let gamma = 1.0 / pv.inv_lambda as f64;
+        for (i, &pi) in p.iter().enumerate() {
+            let expect = (gamma * g[i].abs() as f64).min(1.0);
+            assert!(
+                (pi as f64 - expect).abs() < 1e-4 * expect.max(1e-6),
+                "p[{i}]={pi} expect {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn greedy_rho_one_keeps_all_nonzero() {
+        let g = vec![0.5, -0.1, 0.0, 2.0];
+        let mut p = Vec::new();
+        let pv = greedy_probs(&g, 1.0, 4, &mut p);
+        // With ρ=1 the fixed point pushes every non-zero to p=1.
+        assert!(p[0] >= 0.99 && p[1] >= 0.99 && p[3] >= 0.99, "{p:?}");
+        assert_eq!(p[2], 0.0);
+        assert!(pv.expected_nnz > 2.9);
+    }
+
+    #[test]
+    fn greedy_zero_gradient() {
+        let g = vec![0.0; 8];
+        let mut p = Vec::new();
+        let pv = greedy_probs(&g, 0.5, 2, &mut p);
+        assert_eq!(pv.expected_nnz, 0.0);
+        assert_eq!(pv.inv_lambda, 0.0);
+    }
+
+    #[test]
+    fn greedy_more_iters_weakly_increases_density() {
+        let g = sample_grad(1024, 6);
+        let (mut p1, mut p2) = (Vec::new(), Vec::new());
+        let d1 = greedy_probs(&g, 0.05, 1, &mut p1).expected_nnz;
+        let d2 = greedy_probs(&g, 0.05, 4, &mut p2).expected_nnz;
+        assert!(d2 >= d1 - 1e-9, "more iterations should not lose density");
+    }
+
+    #[test]
+    fn greedy_variance_close_to_optimal() {
+        // At matched sparsity, greedy's variance should be within a small
+        // factor of the closed form's (it approximates the same optimum).
+        let g = sample_grad(1024, 7);
+        let mut p = Vec::new();
+        let greedy = greedy_probs(&g, 0.1, 2, &mut p);
+        // Find eps for closed-form that lands at similar nnz via bisection.
+        let (mut lo, mut hi) = (0.0f32, 50.0f32);
+        let mut pc = Vec::new();
+        for _ in 0..40 {
+            let mid = 0.5 * (lo + hi);
+            let nnz = closed_form_probs(&g, mid, &mut pc).expected_nnz;
+            if nnz > greedy.expected_nnz {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let exact = closed_form_probs(&g, 0.5 * (lo + hi), &mut pc);
+        assert!(
+            greedy.variance <= exact.variance * 1.10 + 1e-9,
+            "greedy var {} vs optimal {}",
+            greedy.variance,
+            exact.variance
+        );
+    }
+
+    #[test]
+    fn property_probabilities_valid_range() {
+        crate::proptest_lite::run("probs in (0,1] and zero iff g zero", 64, |gen| {
+            let d = gen.usize_in(1, 600);
+            let g = gen.gradient_vec(d);
+            let rho = gen.f32_in(0.01, 1.0);
+            let mut p = Vec::new();
+            greedy_probs(&g, rho, 2, &mut p);
+            for (i, &pi) in p.iter().enumerate() {
+                if !(0.0..=1.0).contains(&pi) {
+                    return Err(format!("greedy p[{i}]={pi} out of range"));
+                }
+                if g[i] == 0.0 && pi != 0.0 {
+                    return Err(format!("greedy p[{i}]={pi} but g=0"));
+                }
+                if g[i] != 0.0 && pi == 0.0 {
+                    return Err(format!("greedy p[{i}]=0 but g={}", g[i]));
+                }
+            }
+            let eps = gen.f32_in(0.0, 3.0);
+            closed_form_probs(&g, eps, &mut p);
+            for (i, &pi) in p.iter().enumerate() {
+                if !(0.0..=1.0).contains(&pi) {
+                    return Err(format!("closed p[{i}]={pi} out of range"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_closed_form_variance_budget() {
+        crate::proptest_lite::run("closed form respects (1+eps) variance", 48, |gen| {
+            let d = gen.usize_in(2, 400);
+            let g = gen.gradient_vec(d);
+            let eps = gen.f32_in(0.0, 4.0);
+            let total: f64 = g.iter().map(|&x| (x as f64).powi(2)).sum();
+            let mut p = Vec::new();
+            let pv = closed_form_probs(&g, eps, &mut p);
+            let budget = (1.0 + eps as f64) * total * (1.0 + 1e-5) + 1e-12;
+            if pv.variance > budget {
+                return Err(format!("variance {} > budget {budget}", pv.variance));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,218 @@
+//! Bernoulli coordinate selection + unbiased rescaling (`Q(g)_i = Z_i g_i /
+//! p_i`), producing the split [`SparseGrad`] representation the §3.3 hybrid
+//! coder transmits.
+
+use super::SparseGrad;
+use crate::rngkit::RandArray;
+
+/// Sample a sparsified gradient given the probability vector `p` (in the
+/// Proposition-1 form, i.e. `p_i = min(|g_i|/inv_lambda, 1)`).
+///
+/// * Coordinates with `p_i == 1` go to [`SparseGrad::exact`] with their true
+///   value (`g_i / 1`).
+/// * Coordinates with `0 < p_i < 1` survive a Bernoulli(`p_i`) draw from the
+///   pre-generated uniform array; survivors carry only index + sign because
+///   the rescaled value `g_i / p_i = sign(g_i) · inv_lambda` is shared.
+///
+/// One engineering trick from §5.3 is applied verbatim: no floating-point
+/// division happens per coordinate — the shared magnitude is `inv_lambda`
+/// computed once by the probability solver.
+pub fn sample_sparse(
+    g: &[f32],
+    p: &[f32],
+    inv_lambda: f32,
+    rand: &mut RandArray,
+) -> SparseGrad {
+    assert_eq!(g.len(), p.len());
+    let mut out = SparseGrad::empty(g.len());
+    out.shared_mag = inv_lambda;
+    for i in 0..g.len() {
+        let pi = p[i];
+        if pi <= 0.0 {
+            continue;
+        }
+        if pi >= 1.0 {
+            out.exact.push((i as u32, g[i]));
+        } else if rand.next() < pi {
+            out.shared.push((i as u32, g[i] < 0.0));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsify::probs::{closed_form_probs, greedy_probs};
+
+    fn gradient(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::rngkit::Xoshiro256pp::seed_from_u64(seed);
+        (0..d)
+            .map(|_| {
+                let u = rng.next_f32();
+                if u < 0.08 {
+                    (rng.next_gaussian() * 4.0) as f32
+                } else if u < 0.2 {
+                    0.0
+                } else {
+                    (rng.next_gaussian() * 0.03) as f32
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn unbiasedness_monte_carlo() {
+        // E[Q(g)] = g — the paper's central claim about Q.
+        let d = 64;
+        let g = gradient(d, 10);
+        let mut p = Vec::new();
+        let pv = greedy_probs(&g, 0.3, 2, &mut p);
+        let mut ra = RandArray::from_seed(99, 1 << 22);
+        let trials = 20_000;
+        let mut mean = vec![0.0f64; d];
+        for _ in 0..trials {
+            let sg = sample_sparse(&g, &p, pv.inv_lambda, &mut ra);
+            for &(i, v) in &sg.exact {
+                mean[i as usize] += v as f64;
+            }
+            for &(i, neg) in &sg.shared {
+                let v = if neg { -sg.shared_mag } else { sg.shared_mag };
+                mean[i as usize] += v as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= trials as f64;
+        }
+        // Tolerance: 4 sigma of the MC estimate of each coordinate.
+        for i in 0..d {
+            let pi = p[i] as f64;
+            if pi == 0.0 {
+                assert_eq!(mean[i], 0.0);
+                continue;
+            }
+            let gi = g[i] as f64;
+            let var = gi * gi * (1.0 - pi) / pi;
+            let tol = 4.0 * (var / trials as f64).sqrt() + 1e-9;
+            assert!(
+                (mean[i] - gi).abs() <= tol,
+                "coord {i}: mean {} vs g {} (tol {tol})",
+                mean[i],
+                gi
+            );
+        }
+    }
+
+    #[test]
+    fn realized_variance_matches_bound() {
+        // E||Q(g)||² should match Σ g_i²/p_i (Prop. 1's objective) closely.
+        let d = 128;
+        let g = gradient(d, 11);
+        let mut p = Vec::new();
+        let pv = closed_form_probs(&g, 0.8, &mut p);
+        let mut ra = RandArray::from_seed(7, 1 << 22);
+        let trials = 20_000;
+        let mut sum_sq = 0.0f64;
+        for _ in 0..trials {
+            let sg = sample_sparse(&g, &p, pv.inv_lambda, &mut ra);
+            sum_sq += sg.norm2_sq();
+        }
+        let measured = sum_sq / trials as f64;
+        assert!(
+            (measured - pv.variance).abs() / pv.variance < 0.05,
+            "measured E||Q||² {measured} vs predicted {}",
+            pv.variance
+        );
+    }
+
+    #[test]
+    fn realized_nnz_matches_expectation() {
+        let d = 256;
+        let g = gradient(d, 12);
+        let mut p = Vec::new();
+        let pv = greedy_probs(&g, 0.15, 2, &mut p);
+        let mut ra = RandArray::from_seed(8, 1 << 22);
+        let trials = 5_000;
+        let mut total = 0usize;
+        for _ in 0..trials {
+            total += sample_sparse(&g, &p, pv.inv_lambda, &mut ra).nnz();
+        }
+        let measured = total as f64 / trials as f64;
+        assert!(
+            (measured - pv.expected_nnz).abs() / pv.expected_nnz < 0.05,
+            "measured nnz {measured} vs expected {}",
+            pv.expected_nnz
+        );
+    }
+
+    #[test]
+    fn exact_coords_always_survive() {
+        // The closed form puts the dominating set S_k at exactly p = 1, so
+        // those coordinates must appear in every sample. (Greedy approaches
+        // p = 1 geometrically and may leave them in the shared part.)
+        let g = vec![10.0, -0.01, 0.02, -10.0];
+        let mut p = Vec::new();
+        // Tight variance budget forces the two big coordinates into S_k.
+        let pv = closed_form_probs(&g, 0.001, &mut p);
+        assert!(pv.num_exact >= 2, "big coords should dominate: {p:?}");
+        let mut ra = RandArray::from_seed(9, 4096);
+        for _ in 0..100 {
+            let sg = sample_sparse(&g, &p, pv.inv_lambda, &mut ra);
+            let exact_idx: Vec<u32> = sg.exact.iter().map(|&(i, _)| i).collect();
+            assert!(exact_idx.contains(&0));
+            assert!(exact_idx.contains(&3));
+        }
+    }
+
+    #[test]
+    fn shared_survivors_decode_with_correct_sign() {
+        let g = vec![0.01, -0.01, 0.02, -0.02, 0.03, -0.03];
+        let mut p = Vec::new();
+        let pv = greedy_probs(&g, 0.5, 2, &mut p);
+        let mut ra = RandArray::from_seed(10, 4096);
+        for _ in 0..200 {
+            let sg = sample_sparse(&g, &p, pv.inv_lambda, &mut ra);
+            let dense = sg.to_dense();
+            for (i, &v) in dense.iter().enumerate() {
+                if v != 0.0 {
+                    assert_eq!(v.signum(), g[i].signum(), "sign flip at {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_unbiased_small_dims() {
+        crate::proptest_lite::run("sampling is sign/zero-consistent", 48, |gen| {
+            let d = gen.usize_in(1, 200);
+            let g = gen.gradient_vec(d);
+            let rho = gen.f32_in(0.05, 1.0);
+            let mut p = Vec::new();
+            let pv = greedy_probs(&g, rho, 2, &mut p);
+            let mut ra = RandArray::new(
+                crate::rngkit::Xoshiro256pp::seed_from_u64(gen.u64()),
+                1 << 14,
+            );
+            let sg = sample_sparse(&g, &p, pv.inv_lambda, &mut ra);
+            if sg.nnz() > d {
+                return Err(format!("nnz {} > d {d}", sg.nnz()));
+            }
+            let dense = sg.to_dense();
+            for i in 0..d {
+                if g[i] == 0.0 && dense[i] != 0.0 {
+                    return Err(format!("zero coord {i} decoded non-zero"));
+                }
+                if dense[i] != 0.0 && dense[i].signum() != g[i].signum() {
+                    return Err(format!("sign flip at {i}"));
+                }
+            }
+            // Indices strictly ascending in both parts.
+            if sg.exact.windows(2).any(|w| w[0].0 >= w[1].0)
+                || sg.shared.windows(2).any(|w| w[0].0 >= w[1].0)
+            {
+                return Err("indices not strictly ascending".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,119 @@
+//! Row-major dense matrix used by the synthetic datasets and pure-Rust models.
+
+use super::{axpy, dot};
+
+/// Row-major `rows × cols` f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// `y = A x` (y allocated by caller, len = rows).
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            y[r] = dot(self.row(r), x);
+        }
+    }
+
+    /// `y += alpha * Aᵀ r` where `r` has len = rows, `y` len = cols.
+    pub fn matvec_t_acc(&self, alpha: f32, r: &[f32], y: &mut [f32]) {
+        assert_eq!(r.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        for (i, &ri) in r.iter().enumerate() {
+            if ri != 0.0 {
+                axpy(alpha * ri, self.row(i), y);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_and_transpose() {
+        // A = [[1,2],[3,4],[5,6]]
+        let a = Matrix::from_vec(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let x = [1.0, -1.0];
+        let mut y = [0.0; 3];
+        a.matvec_into(&x, &mut y);
+        assert_eq!(y, [-1.0, -1.0, -1.0]);
+
+        let r = [1.0, 0.0, 2.0];
+        let mut g = [0.0; 2];
+        a.matvec_t_acc(1.0, &r, &mut g);
+        // Aᵀ r = [1*1+5*2, 2*1+6*2] = [11, 14]
+        assert_eq!(g, [11.0, 14.0]);
+    }
+
+    #[test]
+    fn accessors() {
+        let mut m = Matrix::zeros(2, 3);
+        m.set(1, 2, 7.0);
+        assert_eq!(m.get(1, 2), 7.0);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.row(1), &[0.0, 0.0, 7.0]);
+        m.row_mut(0)[0] = 1.0;
+        assert_eq!(m.as_slice()[0], 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let _ = Matrix::from_vec(2, 2, vec![1.0; 3]);
+    }
+}

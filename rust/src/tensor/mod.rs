@@ -1,0 +1,180 @@
+//! Dense f32 linear algebra for the coordinator hot path and the pure-Rust
+//! reference models (logistic regression, SVM).
+//!
+//! Everything here is deliberately simple and allocation-free: flat `&[f32]`
+//! slices, row-major matrices, and loops written so LLVM auto-vectorizes them
+//! (the paper highlights SIMD-friendliness of the greedy sparsifier; the same
+//! applies to these kernels).
+
+mod matrix;
+pub use matrix::Matrix;
+
+/// `y += alpha * x`
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len());
+    // 4-way unrolled accumulation: breaks the sequential FP dependency chain
+    // so the loop vectorizes, and is more accurate than naive summation.
+    let mut acc = [0.0f32; 4];
+    let chunks = x.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += x[i] * y[i];
+        acc[1] += x[i + 1] * y[i + 1];
+        acc[2] += x[i + 2] * y[i + 2];
+        acc[3] += x[i + 3] * y[i + 3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for i in chunks * 4..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// Squared ℓ2 norm.
+#[inline]
+pub fn norm2_sq(x: &[f32]) -> f32 {
+    dot(x, x)
+}
+
+/// ℓ1 norm.
+#[inline]
+pub fn norm1(x: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let chunks = x.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += x[i].abs();
+        acc[1] += x[i + 1].abs();
+        acc[2] += x[i + 2].abs();
+        acc[3] += x[i + 3].abs();
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for i in chunks * 4..x.len() {
+        s += x[i].abs();
+    }
+    s
+}
+
+/// `x *= alpha`
+#[inline]
+pub fn scale(x: &mut [f32], alpha: f32) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Number of exactly-zero entries.
+#[inline]
+pub fn count_zeros(x: &[f32]) -> usize {
+    x.iter().filter(|&&v| v == 0.0).count()
+}
+
+/// Elementwise `z = x - y` into `z`.
+#[inline]
+pub fn sub_into(x: &[f32], y: &[f32], z: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), z.len());
+    for i in 0..x.len() {
+        z[i] = x[i] - y[i];
+    }
+}
+
+/// Numerically-stable sigmoid.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// `log(1 + exp(-x))`, stable for large |x| (logistic loss building block).
+#[inline]
+pub fn log1p_exp_neg(x: f32) -> f32 {
+    if x >= 0.0 {
+        (-x).exp().ln_1p()
+    } else {
+        -x + x.exp().ln_1p()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f32> = (0..37).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let y: Vec<f32> = (0..37).map(|i| (i as f32).sin()).collect();
+        let naive: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn norms() {
+        let x = [3.0, -4.0];
+        assert_eq!(norm2_sq(&x), 25.0);
+        assert_eq!(norm1(&x), 7.0);
+    }
+
+    #[test]
+    fn norm1_odd_len() {
+        let x = [1.0, -2.0, 3.0, -4.0, 5.0];
+        assert_eq!(norm1(&x), 15.0);
+    }
+
+    #[test]
+    fn scale_and_zeros() {
+        let mut x = [1.0, 0.0, 2.0, 0.0];
+        scale(&mut x, 3.0);
+        assert_eq!(x, [3.0, 0.0, 6.0, 0.0]);
+        assert_eq!(count_zeros(&x), 2);
+    }
+
+    #[test]
+    fn sigmoid_stable() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(100.0) > 0.999_999);
+        assert!(sigmoid(-100.0) < 1e-6);
+        assert!(sigmoid(-100.0) >= 0.0);
+    }
+
+    #[test]
+    fn log1p_exp_neg_stable() {
+        // log(1+exp(-0)) = ln 2
+        assert!((log1p_exp_neg(0.0) - std::f32::consts::LN_2).abs() < 1e-6);
+        // large positive -> ~0, large negative -> ~ -x
+        assert!(log1p_exp_neg(50.0) < 1e-6);
+        assert!((log1p_exp_neg(-50.0) - 50.0).abs() < 1e-4);
+        assert!(log1p_exp_neg(-1000.0).is_finite());
+    }
+
+    #[test]
+    fn sub_into_works() {
+        let x = [5.0, 6.0];
+        let y = [1.0, 2.0];
+        let mut z = [0.0; 2];
+        sub_into(&x, &y, &mut z);
+        assert_eq!(z, [4.0, 4.0]);
+    }
+}

@@ -1,0 +1,222 @@
+//! Cross-module integration tests that need no HLO artifacts: the full
+//! Algorithm-1 pipeline (data → model → sparsify → encode → allreduce →
+//! optimizer) and the Algorithm-4 async engine, exercised end to end.
+
+use gsparse::config::{AsyncSvmConfig, ConvexConfig, Method, UpdateScheme};
+use gsparse::coordinator::sync::{estimate_f_star, train_convex, OptKind, TrainOptions};
+use gsparse::coordinator::AsyncSvmEngine;
+use gsparse::data::{gen_logistic, gen_svm};
+use gsparse::model::{ConvexModel, LogisticModel, SvmModel};
+
+fn cfg(method: Method) -> ConvexConfig {
+    ConvexConfig {
+        n: 256,
+        d: 512,
+        c1: 0.6,
+        c2: 0.25,
+        reg: 1.0 / (10.0 * 256.0),
+        rho: 0.1,
+        workers: 4,
+        batch: 8,
+        epochs: 20,
+        lr: 1.0,
+        method,
+        seed: 1234,
+        qsgd_bits: 4,
+    }
+}
+
+#[test]
+fn full_pipeline_every_method_converges() {
+    let c = cfg(Method::GSpar);
+    let ds = gen_logistic(c.n, c.d, c.c1, c.c2, c.seed);
+    let model = LogisticModel::new(c.reg);
+    let f_star = estimate_f_star(&ds, &model, 300, 1.0);
+    for &method in Method::all() {
+        let mut c = cfg(method);
+        if method == Method::TernGrad || method == Method::OneBit {
+            c.lr = 0.5; // aggressive quantizers need a gentler base rate
+        }
+        let opts = TrainOptions {
+            f_star,
+            ..Default::default()
+        };
+        let curve = train_convex(&c, &opts, &ds, &model);
+        let first = curve.points.first().unwrap().loss;
+        let last = curve.final_loss();
+        // High-variance baselines (UniSp at ρ=0.1) legitimately converge
+        // slowly under η ∝ 1/(t·var) — that is the paper's point — so the
+        // smoke criterion is monotone progress, not speed.
+        assert!(
+            last < first * 0.92,
+            "{method}: suboptimality {first} -> {last}"
+        );
+        assert!(last.is_finite(), "{method}");
+    }
+}
+
+#[test]
+fn paper_ordering_gspar_between_dense_and_unisp() {
+    // Figures 1–2 shape: per data pass, dense ≤ GSpar ≤ UniSp in loss, and
+    // GSpar ≪ dense in bits.
+    let base = cfg(Method::Dense);
+    let ds = gen_logistic(base.n, base.d, base.c1, base.c2, base.seed);
+    let model = LogisticModel::new(base.reg);
+    let f_star = estimate_f_star(&ds, &model, 300, 1.0);
+    let run = |method| {
+        let c = cfg(method);
+        let opts = TrainOptions {
+            f_star,
+            ..Default::default()
+        };
+        train_convex(&c, &opts, &ds, &model)
+    };
+    let dense = run(Method::Dense);
+    let gspar = run(Method::GSpar);
+    let unisp = run(Method::UniSp);
+    assert!(dense.final_loss() <= gspar.final_loss() * 1.2);
+    assert!(gspar.final_loss() <= unisp.final_loss() * 1.05);
+    assert!(gspar.ledger.ideal_bits < dense.ledger.ideal_bits / 3);
+    assert!(gspar.var_ratio < unisp.var_ratio);
+}
+
+#[test]
+fn svrg_converges_faster_than_sgd_at_end() {
+    use gsparse::coordinator::sync::SvrgVariant;
+    let mut c = cfg(Method::GSpar);
+    c.epochs = 30;
+    let ds = gen_logistic(c.n, c.d, c.c1, c.c2, c.seed);
+    let model = LogisticModel::new(c.reg);
+    let f_star = estimate_f_star(&ds, &model, 500, 1.0);
+    let sgd = train_convex(
+        &c,
+        &TrainOptions {
+            f_star,
+            ..Default::default()
+        },
+        &ds,
+        &model,
+    );
+    let mut csvrg = c.clone();
+    csvrg.lr = 0.3;
+    let svrg = train_convex(
+        &csvrg,
+        &TrainOptions {
+            opt: OptKind::Svrg(SvrgVariant::SparsifyFull),
+            f_star,
+            ..Default::default()
+        },
+        &ds,
+        &model,
+    );
+    assert!(
+        svrg.final_loss() < sgd.final_loss() * 1.5,
+        "svrg {} vs sgd {}",
+        svrg.final_loss(),
+        sgd.final_loss()
+    );
+}
+
+#[test]
+fn async_engine_gspar_vs_dense_wallclock() {
+    // Figure 9 shape: sparsified updates reach a given loss in less wall
+    // time (fewer atomic conflicts + fewer writes).
+    let ds = gen_svm(4096, 256, 0.01, 0.9, 55);
+    let mk = |method| AsyncSvmConfig {
+        n: 4096,
+        d: 256,
+        c1: 0.01,
+        c2: 0.9,
+        reg: 0.1,
+        rho: 0.05,
+        threads: 8,
+        lr: 0.05,
+        method,
+        seed: 56,
+        total_steps: 30_000,
+        scheme: UpdateScheme::Atomic,
+    };
+    let dense = AsyncSvmEngine::new(mk(Method::Dense)).run(&ds);
+    let gspar = AsyncSvmEngine::new(mk(Method::GSpar)).run(&ds);
+    // The §5.3 mechanism: sparsification shrinks the set of shared-memory
+    // coordinates each step touches, which is what reduces conflicts on a
+    // real multicore. (On this 1-core testbed wall-clock ordering is not
+    // asserted — see DESIGN.md §Substitutions; the fig9 bench reports it.)
+    assert!(
+        (gspar.updates as f64) < 0.3 * dense.updates as f64,
+        "gspar touches {} coords vs dense {}",
+        gspar.updates,
+        dense.updates
+    );
+    assert!(
+        gspar.conflicts <= dense.conflicts,
+        "gspar conflicts {} vs dense {}",
+        gspar.conflicts,
+        dense.conflicts
+    );
+    // And still optimize.
+    let f0 = SvmModel::new(0.1).loss(&ds, &vec![0.0; 256]);
+    assert!(gspar.final_loss < f0, "loss {} vs f(0) {f0}", gspar.final_loss);
+}
+
+#[test]
+fn theory_lemma3_sparsity_bound_holds() {
+    // Construct (rho, s)-approximately sparse vectors and check
+    // E||Q(g)||_0 <= (1+rho)s with eps = rho (closed-form solver).
+    let mut rng = gsparse::rngkit::Xoshiro256pp::seed_from_u64(99);
+    for _ in 0..50 {
+        let d = 512;
+        let s = 16 + rng.next_below(48) as usize;
+        // s large coordinates, the rest tiny.
+        let mut g = vec![0.0f32; d];
+        for gi in g.iter_mut().take(s) {
+            *gi = 1.0 + rng.next_f32();
+        }
+        for gi in g.iter_mut().skip(s) {
+            *gi = rng.next_f32() * 0.002;
+        }
+        let l1_s: f64 = g[..s].iter().map(|&x| x.abs() as f64).sum();
+        let l1_sc: f64 = g[s..].iter().map(|&x| x.abs() as f64).sum();
+        let rho = (l1_sc / l1_s) as f32; // the tightest valid rho
+        let mut p = Vec::new();
+        let pv = gsparse::sparsify::closed_form_probs(&g, rho, &mut p);
+        let bound = (1.0 + rho as f64) * s as f64;
+        assert!(
+            pv.expected_nnz <= bound * (1.0 + 1e-5) + 1e-9,
+            "E nnz {} > (1+rho)s = {bound} (s={s}, rho={rho})",
+            pv.expected_nnz
+        );
+    }
+}
+
+#[test]
+fn theory_theorem4_coding_length_bound_holds() {
+    // For the same construction, the idealized message cost must respect
+    // s(b + log2 d) + min(rho s log2 d, d) + b.
+    let mut rng = gsparse::rngkit::Xoshiro256pp::seed_from_u64(101);
+    for _ in 0..50 {
+        let d = 1024;
+        let s = 8 + rng.next_below(56) as usize;
+        let mut g = vec![0.0f32; d];
+        for gi in g.iter_mut().take(s) {
+            *gi = 2.0 + rng.next_f32();
+        }
+        for gi in g.iter_mut().skip(s) {
+            *gi = rng.next_f32() * 0.001;
+        }
+        let l1_s: f64 = g[..s].iter().map(|&x| x.abs() as f64).sum();
+        let l1_sc: f64 = g[s..].iter().map(|&x| x.abs() as f64).sum();
+        let rho = (l1_sc / l1_s) as f32;
+        let mut p = Vec::new();
+        let pv = gsparse::sparsify::closed_form_probs(&g, rho, &mut p);
+        let qb_mass = pv.expected_nnz - pv.num_exact as f64;
+        let cost = gsparse::sparsify::hybrid_ideal_bits(pv.num_exact as u64, qb_mass, d);
+        let bound = gsparse::coding::theorem4_bound_bits(s, rho as f64, d);
+        // num_exact can be < s when the variance budget lets big coords
+        // drop; the bound is for keeping S_k = S, so allow equality slack.
+        assert!(
+            cost <= bound + 64,
+            "cost {cost} > Thm4 bound {bound} (s={s}, rho={rho})"
+        );
+    }
+}

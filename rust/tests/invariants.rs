@@ -1,0 +1,283 @@
+//! Property-test suite over the whole library's invariants (the
+//! proptest-substitute harness in `gsparse::proptest_lite`), plus failure
+//! injection on the wire codec and edge cases the unit tests don't reach.
+
+use gsparse::coding;
+use gsparse::proptest_lite::{run, Gen};
+use gsparse::rngkit::{RandArray, Xoshiro256pp};
+use gsparse::sparsify::{
+    self, closed_form_probs, greedy_probs, sample_sparse, Compressed, SparseGrad,
+};
+
+#[test]
+fn prop_closed_form_dominates_any_feasible_p() {
+    // Optimality spot check: the closed form's Σp must be ≤ the Σp of a
+    // uniform vector meeting the same variance budget.
+    run("closed form beats uniform at same variance", 64, |g: &mut Gen| {
+        let d = g.usize_in(4, 500);
+        let grad = g.gradient_vec(d);
+        let total: f64 = grad.iter().map(|&x| (x as f64).powi(2)).sum();
+        if total == 0.0 {
+            return Ok(());
+        }
+        let eps = g.f32_in(0.05, 2.0);
+        let mut p = Vec::new();
+        let pv = closed_form_probs(&grad, eps, &mut p);
+        // Uniform p = 1/(1+eps) over non-zeros achieves Σg²/p = (1+eps)Σg².
+        let nnz = grad.iter().filter(|&&x| x != 0.0).count() as f64;
+        let uniform_sum = nnz / (1.0 + eps as f64);
+        if pv.expected_nnz > uniform_sum * (1.0 + 1e-5) + 1e-9 {
+            return Err(format!(
+                "closed form Σp {} > uniform feasible {}",
+                pv.expected_nnz, uniform_sum
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_greedy_never_exceeds_variance_of_initial_scaling() {
+    // Rescaling toward the target density only ever *raises* probabilities,
+    // so greedy variance must be ≤ the variance of its own first pass.
+    run("greedy iterations only reduce variance", 64, |g: &mut Gen| {
+        let d = g.usize_in(2, 400);
+        let grad = g.gradient_vec(d);
+        let rho = g.f32_in(0.02, 0.9);
+        let mut p0 = Vec::new();
+        let v0 = greedy_probs(&grad, rho, 0, &mut p0).variance;
+        let mut p2 = Vec::new();
+        let v2 = greedy_probs(&grad, rho, 2, &mut p2).variance;
+        if v2 > v0 * (1.0 + 1e-6) + 1e-12 {
+            return Err(format!("variance rose: {v0} -> {v2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compress_decode_norm_consistency() {
+    // For every method: decoded norm² equals Compressed::norm2_sq.
+    run("norm2_sq matches dense decode", 48, |g: &mut Gen| {
+        let d = g.usize_in(1, 300);
+        let grad = g.gradient_vec(d);
+        let mut rand = RandArray::new(Xoshiro256pp::seed_from_u64(g.u64()), 1 << 14);
+        for &m in gsparse::config::Method::all() {
+            let mut c = sparsify::build(m, 0.3, 0.5, 3);
+            let (out, _) = c.compress(&grad, &mut rand);
+            let dense = out.to_dense();
+            let direct: f64 = dense.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            let via = out.norm2_sq();
+            if (direct - via).abs() > 1e-4 * (1.0 + direct) {
+                return Err(format!("{m}: norm mismatch {direct} vs {via}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_fuzz_never_panics() {
+    // Random byte mutations of valid messages must decode to Ok or a clean
+    // WireError — never panic or produce out-of-bounds structures.
+    run("codec survives fuzzed mutations", 128, |g: &mut Gen| {
+        let d = g.usize_in(1, 400);
+        let grad = g.gradient_vec(d);
+        let mut p = Vec::new();
+        let pv = greedy_probs(&grad, 0.3, 2, &mut p);
+        let mut rand = RandArray::new(Xoshiro256pp::seed_from_u64(g.u64()), 1 << 12);
+        let sg = sample_sparse(&grad, &p, pv.inv_lambda, &mut rand);
+        let mut buf = Vec::new();
+        coding::encode(&sg, &mut buf);
+        // Mutate up to 4 random bytes.
+        for _ in 0..g.usize_in(1, 5) {
+            let pos = g.usize_in(0, buf.len());
+            let val = (g.u64() & 0xFF) as u8;
+            buf[pos] = val;
+        }
+        match coding::decode(&buf) {
+            Err(_) => Ok(()),
+            Ok(decoded) => {
+                // If it decodes, its structure must be internally valid.
+                if decoded.nnz() > decoded.d as usize {
+                    return Err("decoded nnz exceeds d".into());
+                }
+                for &(i, _) in decoded.exact.iter() {
+                    if i >= decoded.d {
+                        return Err("decoded exact index out of bounds".into());
+                    }
+                }
+                for &(i, _) in decoded.shared.iter() {
+                    if i >= decoded.d {
+                        return Err("decoded shared index out of bounds".into());
+                    }
+                }
+                Ok(())
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_truncation_always_rejected() {
+    run("any strict prefix fails to decode", 64, |g: &mut Gen| {
+        let d = g.usize_in(2, 300);
+        let grad = g.gradient_vec(d);
+        let mut p = Vec::new();
+        let pv = greedy_probs(&grad, 0.4, 2, &mut p);
+        let mut rand = RandArray::new(Xoshiro256pp::seed_from_u64(g.u64()), 1 << 12);
+        let sg = sample_sparse(&grad, &p, pv.inv_lambda, &mut rand);
+        let mut buf = Vec::new();
+        coding::encode(&sg, &mut buf);
+        if buf.len() <= 1 {
+            return Ok(());
+        }
+        let cut = g.usize_in(0, buf.len() - 1);
+        match coding::decode(&buf[..cut]) {
+            Err(_) => Ok(()),
+            Ok(_) => Err(format!("prefix of {cut}/{} decoded successfully", buf.len())),
+        }
+    });
+}
+
+#[test]
+fn prop_aggregated_mean_matches_manual() {
+    use gsparse::comm::{Aggregator, NetworkModel, ReduceAlgo};
+    run("allreduce = arithmetic mean of decodes", 32, |g: &mut Gen| {
+        let d = g.usize_in(1, 200);
+        let m = g.usize_in(1, 6);
+        let mut grads = Vec::new();
+        let mut rand = RandArray::new(Xoshiro256pp::seed_from_u64(g.u64()), 1 << 12);
+        for _ in 0..m {
+            let gv = g.gradient_vec(d);
+            let mut p = Vec::new();
+            let pv = greedy_probs(&gv, 0.5, 2, &mut p);
+            grads.push(sample_sparse(&gv, &p, pv.inv_lambda, &mut rand));
+        }
+        let mut agg = Aggregator::new(NetworkModel::datacenter_10g(), ReduceAlgo::Sparse);
+        let mut out = vec![0.0f32; d];
+        agg.reduce(&grads, &mut out);
+        let mut manual = vec![0.0f64; d];
+        for sg in &grads {
+            for (i, v) in sg.to_dense().into_iter().enumerate() {
+                manual[i] += v as f64 / m as f64;
+            }
+        }
+        for i in 0..d {
+            if (out[i] as f64 - manual[i]).abs() > 1e-5 * (1.0 + manual[i].abs()) {
+                return Err(format!("coord {i}: {} vs {}", out[i], manual[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_optimizers_preserve_finiteness() {
+    use gsparse::opt::{Adam, LrSchedule, Sgd};
+    run("optimizers never produce NaN on finite input", 32, |g: &mut Gen| {
+        let d = g.usize_in(1, 100);
+        let mut w = g.gradient_vec(d);
+        let mut sgd = Sgd::new(LrSchedule::inv_t_var(g.f32_in(0.01, 2.0)));
+        let mut adam = Adam::new(d, g.f32_in(0.001, 0.1));
+        for _ in 0..20 {
+            let grad = g.gradient_vec(d);
+            sgd.step(&mut w, &grad, g.f64_in(0.5, 20.0));
+            adam.step(&mut w, &grad);
+        }
+        if w.iter().any(|x| !x.is_finite()) {
+            return Err("non-finite weight".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn edge_case_d_one() {
+    // Dimension 1: everything must still work.
+    let grad = [0.7f32];
+    let mut p = Vec::new();
+    let pv = greedy_probs(&grad, 0.5, 2, &mut p);
+    assert!(pv.expected_nnz > 0.0);
+    let mut rand = RandArray::from_seed(1, 64);
+    let sg = sample_sparse(&grad, &p, pv.inv_lambda, &mut rand);
+    let mut buf = Vec::new();
+    coding::encode(&sg, &mut buf);
+    assert_eq!(coding::decode(&buf).unwrap(), sg);
+}
+
+#[test]
+fn edge_case_all_equal_magnitudes() {
+    // |g_i| all equal: greedy should give p_i = rho exactly (no dominating
+    // set), and variance = Σg²/rho.
+    let d = 64;
+    let grad = vec![0.5f32; d];
+    let mut p = Vec::new();
+    let pv = greedy_probs(&grad, 0.25, 2, &mut p);
+    for &pi in &p {
+        assert!((pi - 0.25).abs() < 1e-5, "{pi}");
+    }
+    let expect_var = d as f64 * 0.25 / 0.25f64;
+    assert!((pv.variance - expect_var).abs() < 1e-3 * expect_var);
+}
+
+#[test]
+fn edge_case_single_huge_coordinate() {
+    // One dominant coordinate that *is* essentially the whole vector: the
+    // optimum is p = 1/(1+ε) — dropping it an ε-fraction of the time
+    // exactly meets the variance budget (λ|g₁| = Σ|g|·|g₁|/((1+ε)Σg²) ≈
+    // 1/(1+ε) < 1). Check that, and that the tiny budget pushes p → 1.
+    let mut grad = vec![1e-6f32; 128];
+    grad[17] = 100.0;
+    let mut p = Vec::new();
+    let pv = closed_form_probs(&grad, 0.1, &mut p);
+    assert!(
+        (p[17] - 1.0 / 1.1).abs() < 1e-3,
+        "expected ≈1/(1+ε), got {}",
+        p[17]
+    );
+    assert!(pv.variance <= 1.1 * 10_000.0 * (1.0 + 1e-5));
+    let pv_tight = closed_form_probs(&grad, 1e-4, &mut p);
+    assert!(p[17] > 0.999, "tight budget should keep it: {}", p[17]);
+    assert!(pv_tight.variance <= (1.0 + 1e-4) * 10_000.0 * (1.0 + 1e-5));
+    // Sampling still decodes with the right sign and unbiased magnitude.
+    let mut rand = RandArray::from_seed(2, 1024);
+    let sg = sample_sparse(&grad, &p, pv_tight.inv_lambda, &mut rand);
+    let dense = sg.to_dense();
+    assert!(dense[17] > 99.0, "decoded {} (g/p ≈ 100.0)", dense[17]);
+}
+
+#[test]
+fn edge_case_negative_zero_and_subnormals() {
+    let grad = vec![-0.0f32, f32::MIN_POSITIVE / 2.0, -1e-38, 0.5];
+    let mut p = Vec::new();
+    let pv = greedy_probs(&grad, 0.5, 2, &mut p);
+    assert_eq!(p[0], 0.0, "-0.0 must count as zero");
+    assert!(pv.variance.is_finite());
+    let mut rand = RandArray::from_seed(3, 256);
+    let sg = sample_sparse(&grad, &p, pv.inv_lambda, &mut rand);
+    let dense = sg.to_dense();
+    assert!(dense.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn compressed_variants_dim_consistency() {
+    for c in [
+        Compressed::Dense(vec![1.0, 2.0]),
+        Compressed::Sparse(SparseGrad::empty(5)),
+        Compressed::Qsgd {
+            d: 3,
+            norm: 1.0,
+            bits: 2,
+            levels: vec![0, 1, -1],
+        },
+        Compressed::Ternary {
+            d: 4,
+            scale: 0.5,
+            signs: vec![0, 1, -1, 0],
+        },
+    ] {
+        assert_eq!(c.to_dense().len(), c.dim());
+        assert!(c.nnz() <= c.dim());
+    }
+}
