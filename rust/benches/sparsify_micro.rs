@@ -1,56 +1,122 @@
 //! Microbenchmarks for the L3 hot path: probability computation (greedy &
-//! closed-form), Bernoulli sampling, and every baseline compressor, across
-//! gradient dimensions. These are the numbers EXPERIMENTS.md §Perf tracks.
+//! closed-form, sort-based vs. selection-based), Bernoulli sampling, the
+//! fused allocation-free engine (sequential and sharded), and every baseline
+//! compressor, across gradient dimensions. These are the numbers
+//! EXPERIMENTS.md §Perf tracks; a machine-readable copy is written to
+//! `BENCH_sparsify.json` (override the path with `GSPARSE_BENCH_OUT`) so the
+//! perf trajectory is tracked from PR to PR.
 
-use gsparse::benchkit::{black_box, section, Bencher};
+use gsparse::benchkit::{
+    allocation_count, black_box, section, skewed_gradient, Bencher, CountingAllocator, JsonReport,
+};
 use gsparse::config::Method;
-use gsparse::rngkit::{RandArray, Xoshiro256pp};
-use gsparse::sparsify::{self, closed_form_probs, greedy_probs, sample_sparse};
+use gsparse::rngkit::RandArray;
+use gsparse::sparsify::{
+    self, closed_form_probs_sorted, closed_form_probs_with, greedy_probs, sample_sparse,
+    CompressEngine, SelectScratch, SparseGrad,
+};
+
+// Counting allocator (shared with tests/alloc_free.rs via benchkit): proves
+// the fused path is allocation-free in steady state
+// (`compress_into_allocs_per_call` in the JSON report).
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
 
 fn gradient(d: usize, seed: u64) -> Vec<f32> {
-    let mut rng = Xoshiro256pp::seed_from_u64(seed);
-    (0..d)
-        .map(|_| {
-            let u = rng.next_f32();
-            if u < 0.1 {
-                (rng.next_gaussian() * 4.0) as f32
-            } else {
-                (rng.next_gaussian() * 0.05) as f32
-            }
-        })
-        .collect()
+    skewed_gradient(d, seed, 0.0)
 }
 
 fn main() {
     let b = Bencher::default();
+    let mut report = JsonReport::new();
 
     section("greedy probability computation (Algorithm 3, 2 iters)");
     for d in [2048usize, 16_384, 262_144, 1 << 21] {
         let g = gradient(d, 1);
         let mut p = Vec::new();
-        b.bench(&format!("greedy_probs d={d}"), Some(d as u64), || {
+        let s = b.bench(&format!("greedy_probs d={d}"), Some(d as u64), || {
             black_box(greedy_probs(black_box(&g), 0.05, 2, &mut p));
         });
+        report.push(&s);
     }
 
-    section("closed-form probability computation (Algorithm 2)");
+    section("closed-form: full sort (reference) vs selection (hot path)");
+    let mut speedup_262144 = 0.0f64;
     for d in [2048usize, 16_384, 262_144] {
         let g = gradient(d, 2);
         let mut p = Vec::new();
-        b.bench(&format!("closed_form d={d}"), Some(d as u64), || {
-            black_box(closed_form_probs(black_box(&g), 0.5, &mut p));
+        let sorted = b.bench(&format!("closed_form_sorted d={d}"), Some(d as u64), || {
+            black_box(closed_form_probs_sorted(black_box(&g), 0.5, &mut p));
         });
+        let mut scratch = SelectScratch::default();
+        let select = b.bench(&format!("closed_form_select d={d}"), Some(d as u64), || {
+            black_box(closed_form_probs_with(
+                black_box(&g),
+                0.5,
+                &mut p,
+                &mut scratch,
+            ));
+        });
+        let speedup = sorted.mean.as_secs_f64() / select.mean.as_secs_f64().max(1e-12);
+        println!("    -> selection speedup at d={d}: {speedup:.2}x");
+        report.push(&sorted);
+        report.push(&select);
+        report.push_metric(&format!("closed_form_select_speedup_d{d}"), speedup);
+        if d == 262_144 {
+            speedup_262144 = speedup;
+        }
     }
 
-    section("Bernoulli sampling + rescale");
+    section("Bernoulli sampling + rescale (legacy allocating path)");
     for d in [2048usize, 262_144] {
         let g = gradient(d, 3);
         let mut p = Vec::new();
         let pv = greedy_probs(&g, 0.05, 2, &mut p);
         let mut rand = RandArray::from_seed(4, 1 << 22);
-        b.bench(&format!("sample_sparse d={d}"), Some(d as u64), || {
+        let s = b.bench(&format!("sample_sparse d={d}"), Some(d as u64), || {
             black_box(sample_sparse(black_box(&g), &p, pv.inv_lambda, &mut rand));
         });
+        report.push(&s);
+    }
+
+    section("fused engine compress_into (probs + sample + encode, reused buffers)");
+    for d in [2048usize, 262_144, 1 << 21] {
+        let g = gradient(d, 4);
+        let mut rand = RandArray::from_seed(5, 1 << 22);
+        let mut engine = CompressEngine::greedy(0.05, 2).with_sharding(1 << 14, usize::MAX, 1);
+        engine.reserve(d);
+        let mut out = SparseGrad::empty(d);
+        let mut wire = Vec::new();
+        let s = b.bench(&format!("engine_seq d={d}"), Some(d as u64), || {
+            black_box(engine.compress_into(black_box(&g), &mut rand, &mut out, &mut wire));
+        });
+        report.push(&s);
+
+        // Steady-state allocation count on the sequential path.
+        engine.compress_into(&g, &mut rand, &mut out, &mut wire); // warm
+        let before = allocation_count();
+        let calls = 50;
+        for _ in 0..calls {
+            black_box(engine.compress_into(black_box(&g), &mut rand, &mut out, &mut wire));
+        }
+        let per_call = (allocation_count() - before) as f64 / calls as f64;
+        println!("    -> engine_seq d={d}: {per_call:.2} allocations/call (steady state)");
+        report.push_metric(&format!("compress_into_allocs_per_call_d{d}"), per_call);
+
+        if d >= 1 << 16 {
+            let mut par_engine = CompressEngine::greedy(0.05, 2).with_sharding(1 << 14, 1 << 16, 8);
+            par_engine.reserve(d);
+            let mut par_rand = RandArray::from_seed(5, 1 << 22);
+            let s = b.bench(&format!("engine_sharded d={d}"), Some(d as u64), || {
+                black_box(par_engine.compress_into(
+                    black_box(&g),
+                    &mut par_rand,
+                    &mut out,
+                    &mut wire,
+                ));
+            });
+            report.push(&s);
+        }
     }
 
     section("full compress step per method (d = 262144, rho = 0.05)");
@@ -59,8 +125,18 @@ fn main() {
     let mut rand = RandArray::from_seed(6, 1 << 22);
     for &m in Method::all() {
         let mut c = sparsify::build(m, 0.05, 0.5, 4);
-        b.bench(&format!("compress {m}"), Some(d as u64), || {
-            black_box(c.compress(black_box(&g), &mut rand));
+        let mut out = sparsify::Compressed::Sparse(SparseGrad::empty(d));
+        let s = b.bench(&format!("compress {m}"), Some(d as u64), || {
+            black_box(c.compress_into(black_box(&g), &mut rand, &mut out));
         });
+        report.push(&s);
+    }
+
+    let out_path =
+        std::env::var("GSPARSE_BENCH_OUT").unwrap_or_else(|_| "BENCH_sparsify.json".to_string());
+    report.push_metric("closed_form_select_speedup_d262144_gate", speedup_262144);
+    match report.write(&out_path) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
     }
 }

@@ -127,6 +127,148 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Machine-readable bench sink: collects [`Stats`] plus derived scalar
+/// metrics and writes one JSON document (hand-rolled — serde is unavailable
+/// offline). The perf trajectory of the hot path is tracked through these
+/// files (`BENCH_*.json`), which CI uploads as artifacts.
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    entries: Vec<String>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON has no `inf`/`NaN` tokens; non-finite values serialize as `null`.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl JsonReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a timed result.
+    pub fn push(&mut self, s: &Stats) {
+        let tp = s
+            .throughput()
+            .map(|t| format!(",\"items_per_s\":{}", json_num(t)))
+            .unwrap_or_default();
+        let items = s
+            .items
+            .map(|n| format!(",\"items\":{n}"))
+            .unwrap_or_default();
+        self.entries.push(format!(
+            "{{\"name\":\"{}\",\"kind\":\"timing\",\"iters\":{},\"mean_ns\":{},\
+             \"p50_ns\":{},\"p95_ns\":{},\"min_ns\":{}{items}{tp}}}",
+            json_escape(&s.name),
+            s.iters,
+            s.mean.as_nanos(),
+            s.p50.as_nanos(),
+            s.p95.as_nanos(),
+            s.min.as_nanos(),
+        ));
+    }
+
+    /// Record a derived scalar metric (speedups, allocation counts, ...).
+    pub fn push_metric(&mut self, name: &str, value: f64) {
+        self.entries.push(format!(
+            "{{\"name\":\"{}\",\"kind\":\"metric\",\"value\":{}}}",
+            json_escape(name),
+            json_num(value)
+        ));
+    }
+
+    /// Serialize the report document.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"schema\":\"gsparse-bench-v1\",\"results\":[\n");
+        out.push_str(&self.entries.join(",\n"));
+        out.push_str("\n]}\n");
+        out
+    }
+
+    /// Write to `path` (e.g. `BENCH_sparsify.json`).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+/// Counting wrapper around the system allocator, shared by the steady-state
+/// allocation test (`tests/alloc_free.rs`) and the `sparsify_micro` bench so
+/// both measure the same thing. A `#[global_allocator]` must live in the
+/// final binary, so declare it there:
+///
+/// ```text
+/// use gsparse::benchkit::{allocation_count, CountingAllocator};
+/// #[global_allocator]
+/// static GLOBAL: CountingAllocator = CountingAllocator;
+/// let before = allocation_count();
+/// // ... hot path ...
+/// let allocs = allocation_count() - before;
+/// ```
+pub struct CountingAllocator;
+
+static ALLOCATION_COUNT: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Total allocations (alloc + alloc_zeroed + realloc) observed so far by
+/// [`CountingAllocator`], if it is installed as the global allocator.
+pub fn allocation_count() -> u64 {
+    ALLOCATION_COUNT.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+unsafe impl std::alloc::GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: std::alloc::Layout) -> *mut u8 {
+        ALLOCATION_COUNT.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::alloc::System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: std::alloc::Layout) -> *mut u8 {
+        ALLOCATION_COUNT.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::alloc::System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: std::alloc::Layout, new_size: usize) -> *mut u8 {
+        ALLOCATION_COUNT.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::alloc::System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: std::alloc::Layout) {
+        std::alloc::System.dealloc(ptr, layout)
+    }
+}
+
+/// The skewed synthetic gradient the hot-path benches and tests share: ~10%
+/// large-magnitude coordinates (σ = 4), a `zero_frac` fraction of exact
+/// zeros, and small noise (σ = 0.05) elsewhere — the shape the paper's
+/// (ρ,s)-approximate-sparsity analysis targets.
+pub fn skewed_gradient(d: usize, seed: u64, zero_frac: f32) -> Vec<f32> {
+    let mut rng = crate::rngkit::Xoshiro256pp::seed_from_u64(seed);
+    (0..d)
+        .map(|_| {
+            let u = rng.next_f32();
+            if u < 0.1 {
+                (rng.next_gaussian() * 4.0) as f32
+            } else if u < 0.1 + zero_frac {
+                0.0
+            } else {
+                (rng.next_gaussian() * 0.05) as f32
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,6 +284,24 @@ mod tests {
         assert!(s.mean >= Duration::ZERO);
         assert!(s.throughput().unwrap() > 0.0);
         assert!(s.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let b = Bencher::new(3, 1);
+        let s = b.bench("fast \"op\"", Some(10), || {
+            black_box(1 + 1);
+        });
+        let mut rep = JsonReport::new();
+        rep.push(&s);
+        rep.push_metric("speedup", 2.5);
+        let doc = rep.to_json();
+        assert!(doc.starts_with('{') && doc.trim_end().ends_with('}'), "{doc}");
+        assert!(doc.contains("\\\"op\\\""), "name must be escaped: {doc}");
+        assert!(doc.contains("\"kind\":\"timing\""));
+        assert!(doc.contains("\"kind\":\"metric\""));
+        assert!(doc.contains("\"value\":2.5"));
+        assert!(doc.contains("\"mean_ns\":"));
     }
 
     #[test]

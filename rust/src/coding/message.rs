@@ -38,24 +38,40 @@ pub enum Encoding {
     DenseSymbols = 1,
 }
 
-/// Wire-format decode errors.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+/// Wire-format decode errors. (`Display`/`Error` are hand-written: the
+/// offline image has no `thiserror`.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WireError {
-    #[error("message too short: {0} bytes")]
     Truncated(usize),
-    #[error("bad magic")]
     BadMagic,
-    #[error("unsupported version {0}")]
     BadVersion(u8),
-    #[error("unknown encoding {0}")]
     BadEncoding(u8),
-    #[error("payload length mismatch: expected {expected}, got {got}")]
     LengthMismatch { expected: usize, got: usize },
-    #[error("index {index} out of bounds (d = {d})")]
     IndexOutOfBounds { index: u32, d: u32 },
-    #[error("indices not strictly ascending at position {0}")]
     IndicesNotSorted(usize),
 }
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated(n) => write!(f, "message too short: {n} bytes"),
+            WireError::BadMagic => write!(f, "bad magic"),
+            WireError::BadVersion(v) => write!(f, "unsupported version {v}"),
+            WireError::BadEncoding(e) => write!(f, "unknown encoding {e}"),
+            WireError::LengthMismatch { expected, got } => {
+                write!(f, "payload length mismatch: expected {expected}, got {got}")
+            }
+            WireError::IndexOutOfBounds { index, d } => {
+                write!(f, "index {index} out of bounds (d = {d})")
+            }
+            WireError::IndicesNotSorted(pos) => {
+                write!(f, "indices not strictly ascending at position {pos}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
 
 fn indexed_payload_len(nnz_a: usize, nnz_b: usize) -> usize {
     nnz_a * 8 + nnz_b * 4 + nnz_b.div_ceil(8)
@@ -72,17 +88,24 @@ pub fn encoded_len(sg: &SparseGrad) -> usize {
             .min(dense_payload_len(sg.d as usize, sg.exact.len()))
 }
 
-/// Encode into `out` (cleared first). Returns the encoding chosen.
+/// Encode into `out` (cleared first; capacity is reused across calls, so a
+/// steady-state encode performs no heap allocation). Returns the encoding
+/// chosen.
 pub fn encode(sg: &SparseGrad, out: &mut Vec<u8>) -> Encoding {
     let d = sg.d as usize;
     let (na, nb) = (sg.exact.len(), sg.shared.len());
-    let enc = if indexed_payload_len(na, nb) <= dense_payload_len(d, na) {
+    // Header math lives in one place: compute both payload lengths once,
+    // pick the cheaper encoding, and reserve via the same `encoded_len`
+    // formula the tests check against.
+    let indexed_len = indexed_payload_len(na, nb);
+    let dense_len = dense_payload_len(d, na);
+    let enc = if indexed_len <= dense_len {
         Encoding::Indexed
     } else {
         Encoding::DenseSymbols
     };
     out.clear();
-    out.reserve(HEADER_LEN + indexed_payload_len(na, nb).min(dense_payload_len(d, na)));
+    out.reserve(encoded_len(sg));
     out.extend_from_slice(MAGIC);
     out.push(VERSION);
     out.push(enc as u8);
@@ -98,7 +121,7 @@ pub fn encode(sg: &SparseGrad, out: &mut Vec<u8>) -> Encoding {
             // checks (measured 2.5x on the encode hot path — see
             // EXPERIMENTS.md §Perf).
             let start = out.len();
-            out.resize(start + indexed_payload_len(na, nb), 0);
+            out.resize(start + indexed_len, 0);
             let payload = &mut out[start..];
             let mut off = 0;
             for &(i, v) in &sg.exact {
@@ -117,18 +140,22 @@ pub fn encode(sg: &SparseGrad, out: &mut Vec<u8>) -> Encoding {
             }
         }
         Encoding::DenseSymbols => {
-            // 2-bit symbols.
-            let mut symbols = vec![0u8; d.div_ceil(4)];
-            for &(i, _) in &sg.exact {
-                let i = i as usize;
-                symbols[i / 4] |= 0b11 << (2 * (i % 4));
+            // 2-bit symbols, written in place in the output buffer (no
+            // temporary allocation on the hot path).
+            let sym_start = out.len();
+            out.resize(sym_start + d.div_ceil(4), 0);
+            {
+                let symbols = &mut out[sym_start..];
+                for &(i, _) in &sg.exact {
+                    let i = i as usize;
+                    symbols[i / 4] |= 0b11 << (2 * (i % 4));
+                }
+                for &(i, neg) in &sg.shared {
+                    let i = i as usize;
+                    let sym = if neg { 0b10 } else { 0b01 };
+                    symbols[i / 4] |= sym << (2 * (i % 4));
+                }
             }
-            for &(i, neg) in &sg.shared {
-                let i = i as usize;
-                let sym = if neg { 0b10 } else { 0b01 };
-                symbols[i / 4] |= sym << (2 * (i % 4));
-            }
-            out.extend_from_slice(&symbols);
             for &(_, v) in &sg.exact {
                 out.extend_from_slice(&v.to_le_bytes());
             }
@@ -137,9 +164,20 @@ pub fn encode(sg: &SparseGrad, out: &mut Vec<u8>) -> Encoding {
     enc
 }
 
-/// Decode a wire message back into a [`SparseGrad`]. Validates structure and
-/// rejects malformed input (the failure-injection tests exercise every arm).
+/// Decode a wire message back into a fresh [`SparseGrad`]. Validates
+/// structure and rejects malformed input (the failure-injection tests
+/// exercise every arm).
 pub fn decode(buf: &[u8]) -> Result<SparseGrad, WireError> {
+    let mut sg = SparseGrad::empty(0);
+    decode_into(buf, &mut sg)?;
+    Ok(sg)
+}
+
+/// Decode into a caller-provided [`SparseGrad`], reusing its buffers (the
+/// allocation-free path the [`crate::comm::Aggregator`] and coordinator use
+/// every round). On error `sg` may hold partially-decoded content and must
+/// not be interpreted.
+pub fn decode_into(buf: &[u8], sg: &mut SparseGrad) -> Result<(), WireError> {
     if buf.len() < HEADER_LEN {
         return Err(WireError::Truncated(buf.len()));
     }
@@ -160,7 +198,7 @@ pub fn decode(buf: &[u8]) -> Result<SparseGrad, WireError> {
     let shared_mag = f32::from_le_bytes(buf[20..24].try_into().unwrap());
     let payload = &buf[HEADER_LEN..];
 
-    let mut sg = SparseGrad::empty(d as usize);
+    sg.reset(d as usize);
     sg.shared_mag = shared_mag;
 
     match enc {
@@ -263,7 +301,7 @@ pub fn decode(buf: &[u8]) -> Result<SparseGrad, WireError> {
             }
         }
     }
-    Ok(sg)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -377,6 +415,85 @@ mod tests {
             let dense = HEADER_LEN + dense_payload_len(d, sg.exact.len());
             assert_eq!(buf.len(), indexed.min(dense), "d={d} rho={rho}");
         }
+    }
+
+    #[test]
+    fn property_dense_symbols_roundtrip_unaligned_d() {
+        // DenseSymbols packs 4 coordinates per byte; d % 4 != 0 leaves a
+        // partial final byte whose high lanes must be ignored on decode.
+        crate::proptest_lite::run("dense-symbol roundtrip, d % 4 != 0", 64, |gen| {
+            let d = gen.usize_in(1, 500) * 4 + gen.usize_in(1, 4); // never ≡ 0 (mod 4)
+            assert_ne!(d % 4, 0);
+            // High density forces the DenseSymbols encoding.
+            let sg = {
+                let mut rng = crate::rngkit::Xoshiro256pp::seed_from_u64(gen.u64());
+                let g: Vec<f32> = (0..d).map(|_| (rng.next_gaussian() * 0.5) as f32).collect();
+                let mut p = Vec::new();
+                let pv = greedy_probs(&g, 0.95, 2, &mut p);
+                let mut ra = RandArray::from_seed(gen.u64(), 1 << 14);
+                sample_sparse(&g, &p, pv.inv_lambda, &mut ra)
+            };
+            let mut buf = Vec::new();
+            let enc = encode(&sg, &mut buf);
+            if enc != Encoding::DenseSymbols {
+                return Err(format!("expected DenseSymbols at d={d}, got {enc:?}"));
+            }
+            if buf.len() != encoded_len(&sg) {
+                return Err(format!("encoded_len {} != {}", encoded_len(&sg), buf.len()));
+            }
+            match decode(&buf) {
+                Ok(back) if back == sg => Ok(()),
+                Ok(_) => Err(format!("roundtrip not identical at d={d}")),
+                Err(e) => Err(format!("decode failed at d={d}: {e}")),
+            }
+        });
+    }
+
+    #[test]
+    fn property_empty_and_zero_gradient_messages() {
+        // Zero gradients and empty messages must roundtrip at any d,
+        // including d % 4 != 0 and d = 1.
+        crate::proptest_lite::run("empty/zero-gradient roundtrip", 64, |gen| {
+            let d = gen.usize_in(1, 3000);
+            let sg = if gen.bool() {
+                SparseGrad::empty(d)
+            } else {
+                // Zero gradient through the full solver + sampler pipeline.
+                let g = vec![0.0f32; d];
+                let mut p = Vec::new();
+                let pv = greedy_probs(&g, 0.5, 2, &mut p);
+                let mut ra = RandArray::from_seed(gen.u64(), 1 << 12);
+                sample_sparse(&g, &p, pv.inv_lambda, &mut ra)
+            };
+            if sg.nnz() != 0 {
+                return Err("zero gradient produced survivors".into());
+            }
+            let mut buf = Vec::new();
+            encode(&sg, &mut buf);
+            match decode(&buf) {
+                Ok(back) if back == sg => Ok(()),
+                Ok(_) => Err("roundtrip not identical".into()),
+                Err(e) => Err(format!("decode failed: {e}")),
+            }
+        });
+    }
+
+    #[test]
+    fn decode_into_reuses_buffers_across_messages() {
+        // A big message followed by a small one into the same SparseGrad:
+        // the decode must fully reset length/contents (capacity persists).
+        let big = sample_message(2048, 0.6, 90);
+        let small = sample_message(64, 0.1, 91);
+        let mut buf = Vec::new();
+        let mut slot = SparseGrad::empty(0);
+        encode(&big, &mut buf);
+        decode_into(&buf, &mut slot).unwrap();
+        assert_eq!(slot, big);
+        let cap_before = slot.exact.capacity();
+        encode(&small, &mut buf);
+        decode_into(&buf, &mut slot).unwrap();
+        assert_eq!(slot, small);
+        assert!(slot.exact.capacity() >= cap_before, "capacity must be kept");
     }
 
     #[test]

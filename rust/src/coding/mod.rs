@@ -18,7 +18,7 @@ mod entropy;
 mod message;
 
 pub use entropy::{symbol_entropy_bits, SymbolCounts};
-pub use message::{decode, encode, encoded_len, Encoding, WireError, HEADER_LEN};
+pub use message::{decode, decode_into, encode, encoded_len, Encoding, WireError, HEADER_LEN};
 
 use crate::sparsify::{index_bits, SparseGrad, FLOAT_BITS};
 

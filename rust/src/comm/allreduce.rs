@@ -35,13 +35,18 @@ pub struct AggregateOutput {
 }
 
 /// Synchronous All-Reduce master (also usable as a worker-side mirror since
-/// the reduction is deterministic given the same messages).
+/// the reduction is deterministic given the same messages). All scratch —
+/// wire bytes, decoded messages, the dense reference buffer, and the
+/// per-worker byte ledger — is reused across rounds, so a steady-state
+/// [`Aggregator::reduce`] performs no heap allocation.
 pub struct Aggregator {
     pub net: NetworkModel,
     pub algo: ReduceAlgo,
     /// Scratch for decode (reused across rounds).
     decode_buf: Vec<SparseGrad>,
     wire_buf: Vec<u8>,
+    dense_scratch: Vec<f32>,
+    worker_bytes: Vec<u64>,
 }
 
 impl Aggregator {
@@ -51,6 +56,8 @@ impl Aggregator {
             algo,
             decode_buf: Vec::new(),
             wire_buf: Vec::new(),
+            dense_scratch: Vec::new(),
+            worker_bytes: Vec::new(),
         }
     }
 
@@ -63,22 +70,23 @@ impl Aggregator {
         let m = grads.len();
         assert!(m > 0, "no workers");
         let mut upload_bytes = 0u64;
-        self.decode_buf.clear();
-        for sg in grads {
+        if self.decode_buf.len() < m {
+            self.decode_buf.resize_with(m, || SparseGrad::empty(0));
+        }
+        for (sg, slot) in grads.iter().zip(self.decode_buf.iter_mut()) {
             coding::encode(sg, &mut self.wire_buf);
             upload_bytes += self.wire_buf.len() as u64;
-            let decoded = coding::decode(&self.wire_buf).expect("self-encoded message");
-            self.decode_buf.push(decoded);
+            coding::decode_into(&self.wire_buf, slot).expect("self-encoded message");
         }
         let decoded = std::mem::take(&mut self.decode_buf);
-        let res = self.reduce_decoded(&decoded, upload_bytes, out);
+        let res = self.reduce_decoded(&decoded[..m], upload_bytes, out);
         self.decode_buf = decoded;
         res
     }
 
     /// Average already-decoded messages into `out`.
     pub fn reduce_decoded(
-        &self,
+        &mut self,
         grads: &[SparseGrad],
         upload_bytes: u64,
         out: &mut [f32],
@@ -89,11 +97,12 @@ impl Aggregator {
         match self.algo {
             ReduceAlgo::Naive => {
                 // Decode each worker to dense then axpy (reference path).
-                let mut dense = vec![0.0f32; out.len()];
+                self.dense_scratch.resize(out.len(), 0.0);
+                let dense = &mut self.dense_scratch[..out.len()];
                 for sg in grads {
                     dense.fill(0.0);
-                    sg.add_into(1.0, &mut dense);
-                    crate::tensor::axpy(inv_m, &dense, out);
+                    sg.add_into(1.0, dense);
+                    crate::tensor::axpy(inv_m, dense, out);
                 }
             }
             ReduceAlgo::Sparse => {
@@ -107,16 +116,15 @@ impl Aggregator {
         // before calling this when enabled.
         let broadcast_bytes = (out.len() * 4) as u64;
         let per_worker = upload_bytes / m as u64;
-        let worker_bytes: Vec<u64> = (0..m)
-            .map(|i| {
-                // Distribute the remainder deterministically.
-                per_worker + if (i as u64) < upload_bytes % m as u64 { 1 } else { 0 }
-            })
-            .collect();
+        self.worker_bytes.clear();
+        self.worker_bytes.extend((0..m).map(|i| {
+            // Distribute the remainder deterministically.
+            per_worker + if (i as u64) < upload_bytes % m as u64 { 1 } else { 0 }
+        }));
         AggregateOutput {
             upload_bytes,
             broadcast_bytes,
-            sim_time_s: self.net.round_time_s(&worker_bytes, broadcast_bytes),
+            sim_time_s: self.net.round_time_s(&self.worker_bytes, broadcast_bytes),
         }
     }
 }

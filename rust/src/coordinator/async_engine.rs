@@ -21,7 +21,7 @@ use crate::data::Dataset;
 use crate::metrics::{CurvePoint, RunCurve};
 use crate::model::{ConvexModel, SvmModel};
 use crate::rngkit::{RandArray, Xoshiro256pp};
-use crate::sparsify;
+use crate::sparsify::CompressEngine;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -227,7 +227,11 @@ fn worker_loop(
     );
     let mut w_local = vec![0.0f32; d];
     let mut g = vec![0.0f32; d];
-    let mut p = Vec::with_capacity(d);
+    // Per-thread scratch-arena engine: probability solves reuse one buffer
+    // for the whole run (the updates are applied coordinate-wise, so only
+    // the probability stage of the engine is exercised here).
+    let mut engine = CompressEngine::greedy(cfg.rho, 2);
+    engine.reserve(d);
     let mut t_local = 0u64;
     let mut local_conflicts = 0u64;
     let mut local_updates = 0u64;
@@ -291,10 +295,12 @@ fn worker_loop(
                     }
                 }
                 _ => {
-                    // GSpar (greedy, 2 iterations — the paper's setting).
-                    let pv = sparsify::greedy_probs(&g, cfg.rho, 2, &mut p);
+                    // GSpar (greedy, 2 iterations — the paper's setting),
+                    // through the engine's reusable probability scratch.
+                    let pv = engine.probs(&g);
                     // §5.3 trick: constant magnitude, no division.
                     let shared_val = pv.inv_lambda;
+                    let p = engine.probabilities();
                     for i in 0..d {
                         let pi = p[i];
                         if pi <= 0.0 {

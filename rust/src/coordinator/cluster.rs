@@ -27,9 +27,13 @@ pub struct LayerUpdate {
     pub ideal_bits: u64,
 }
 
-/// Per-worker, per-layer communication state.
+/// Per-worker, per-layer communication state. `msgs[l]` is the reused
+/// compression buffer for layer `l` — `compress_into` fills it in place
+/// every round, so only the wire bytes (which cross the channel and must be
+/// owned) are freshly allocated.
 struct WorkerComm {
     compressors: Vec<Box<dyn Compressor>>,
+    msgs: Vec<Compressed>,
     rand: RandArray,
 }
 
@@ -56,6 +60,10 @@ impl Cluster {
             .map(|w| {
                 Some(WorkerComm {
                     compressors: layer_dims.iter().map(|_| make_compressor()).collect(),
+                    msgs: layer_dims
+                        .iter()
+                        .map(|&dim| Compressed::Sparse(crate::sparsify::SparseGrad::empty(dim)))
+                        .collect(),
                     rand: RandArray::new(
                         Xoshiro256pp::for_worker(seed ^ 0xC10C, w),
                         layer_dims.iter().sum::<usize>().max(1 << 12) * 2,
@@ -100,9 +108,11 @@ impl Cluster {
                     let mut msgs = Vec::with_capacity(layer_count);
                     for (l, g) in worker_grads.iter().enumerate() {
                         let g_norm = crate::tensor::norm2_sq(g) as f64;
-                        let (msg, stats) = st.compressors[l].compress(g, &mut st.rand);
+                        let stats =
+                            st.compressors[l].compress_into(g, &mut st.rand, &mut st.msgs[l]);
+                        let msg = &st.msgs[l];
                         let mut wire = Vec::new();
-                        let bytes = match &msg {
+                        let bytes = match msg {
                             Compressed::Sparse(sg) => {
                                 crate::coding::encode(sg, &mut wire);
                                 wire.len() as u64
@@ -153,12 +163,13 @@ impl Cluster {
             .collect();
         let inv_m = 1.0 / self.workers as f32;
         let mut per_worker_bytes = vec![0u64; self.workers];
+        let mut decode_slot = crate::sparsify::SparseGrad::empty(0);
         for (w, msgs) in rx.iter() {
             for (l, (wire, stats)) in msgs.into_iter().enumerate() {
                 let upd = &mut updates[l];
                 if stats.is_sparse {
-                    let sg = crate::coding::decode(&wire).expect("self-encoded");
-                    sg.add_into(inv_m, &mut upd.grad);
+                    crate::coding::decode_into(&wire, &mut decode_slot).expect("self-encoded");
+                    decode_slot.add_into(inv_m, &mut upd.grad);
                 } else {
                     // Dense f32 payload.
                     for (i, chunk) in wire.chunks_exact(4).enumerate() {

@@ -135,6 +135,10 @@ pub fn run_param_server(
                     sparsify::build(cfg.method, cfg.rho, 0.0, 4);
                 let mut w_local = vec![0.0f32; d];
                 let mut grad = vec![0.0f32; d];
+                // Reused across pushes: the compressor writes into `msg`
+                // in place; only the wire bytes are freshly allocated, since
+                // they are moved into the channel.
+                let mut msg = Compressed::Sparse(crate::sparsify::SparseGrad::empty(d));
                 let mut my_version = 0u64;
                 let (clock_mx, clock_cv) = &*clocks;
                 loop {
@@ -193,10 +197,10 @@ pub fn run_param_server(
                         .collect();
                     model.grad_minibatch(ds, &w_local, &idx, &mut grad);
                     let g_norm = crate::tensor::norm2_sq(&grad) as f64;
-                    let (msg, _stats) = compressor.compress(&grad, &mut rand);
+                    let _stats = compressor.compress_into(&grad, &mut rand, &mut msg);
                     let q_norm = msg.norm2_sq();
-                    let push = match msg {
-                        Compressed::Sparse(ref sg) => {
+                    let push = match &msg {
+                        Compressed::Sparse(sg) => {
                             let mut wire = Vec::new();
                             crate::coding::encode(sg, &mut wire);
                             Push {

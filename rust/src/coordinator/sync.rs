@@ -68,7 +68,9 @@ impl Default for TrainOptions {
     }
 }
 
-/// Per-worker state for the simulated cluster.
+/// Per-worker state for the simulated cluster. The message buffer is
+/// persistent: `compress_into` reuses it every round, so the steady-state
+/// compression path allocates nothing.
 struct Worker {
     shard: Vec<usize>,
     rng: Xoshiro256pp,
@@ -76,6 +78,7 @@ struct Worker {
     compressor: Box<dyn Compressor>,
     grad: Vec<f32>,
     ref_grad: Vec<f32>,
+    msg: Compressed,
 }
 
 impl Worker {
@@ -114,12 +117,13 @@ pub fn train_convex(
             compressor: sparsify::build(cfg.method, cfg.rho, cfg.c2 * cfg.c1, cfg.qsgd_bits),
             grad: vec![0.0; d],
             ref_grad: vec![0.0; d],
+            msg: Compressed::Sparse(SparseGrad::empty(d)),
         })
         .collect();
 
     let mut w = vec![0.0f32; d];
     let mut v = vec![0.0f32; d]; // averaged update
-    let agg = Aggregator::new(opts.net, ReduceAlgo::Sparse);
+    let mut agg = Aggregator::new(opts.net, ReduceAlgo::Sparse);
 
     // SVRG reference state.
     let is_svrg = matches!(opts.opt, OptKind::Svrg(_));
@@ -137,8 +141,13 @@ pub fn train_convex(
     let mut curve = RunCurve::new(method_label(cfg));
     let mut sim_time = 0.0f64;
     let mut batch_idx: Vec<usize> = Vec::with_capacity(cfg.batch);
-    let mut decoded: Vec<SparseGrad> = Vec::new();
-    let mut messages: Vec<Compressed> = Vec::new();
+    // Round-persistent scratch: decoded per-worker messages, the shared wire
+    // buffer, and the step-7 re-sparsification state. Nothing below is
+    // allocated inside the training loop.
+    let mut decoded: Vec<SparseGrad> = (0..m).map(|_| SparseGrad::empty(0)).collect();
+    let mut wire: Vec<u8> = Vec::new();
+    let mut resparsify_p: Vec<f32> = Vec::new();
+    let mut resparsify_sg = SparseGrad::empty(d);
 
     let schedule = match opts.opt {
         OptKind::Sgd => LrSchedule::inv_t_var(cfg.lr),
@@ -166,11 +175,9 @@ pub fn train_convex(
         }
 
         // ---- Algorithm 1 steps 3–5: local gradients + sparsification ----
-        messages.clear();
-        decoded.clear();
         let mut upload_bytes = 0u64;
-        let mut wire = Vec::new();
-        for worker in workers.iter_mut() {
+        let mut all_sparse = true;
+        for (worker, slot) in workers.iter_mut().zip(decoded.iter_mut()) {
             worker.sample_batch(cfg.batch, &mut batch_idx);
             model.grad_minibatch(ds, &w, &batch_idx, &mut worker.grad);
             if let OptKind::Svrg(variant) = opts.opt {
@@ -191,34 +198,40 @@ pub fn train_convex(
                 }
             }
             let g_norm = crate::tensor::norm2_sq(&worker.grad) as f64;
-            let (msg, stats) = worker.compressor.compress(&worker.grad, &mut worker.rand);
-            var_meter.record(msg.norm2_sq(), g_norm);
+            let stats =
+                worker
+                    .compressor
+                    .compress_into(&worker.grad, &mut worker.rand, &mut worker.msg);
+            var_meter.record(worker.msg.norm2_sq(), g_norm);
             spa_meter.record(stats.expected_nnz, d);
-            // Honest wire accounting: sparse messages round-trip the codec.
-            let msg_bytes = match &msg {
+            // Honest wire accounting: sparse messages round-trip the codec
+            // into this worker's reused decode slot.
+            let msg_bytes = match &worker.msg {
                 Compressed::Sparse(sg) => {
                     crate::coding::encode(sg, &mut wire);
-                    decoded.push(crate::coding::decode(&wire).expect("self-encoded"));
+                    crate::coding::decode_into(&wire, slot).expect("self-encoded");
                     wire.len() as u64
                 }
                 // Quantized/dense messages: idealized byte size.
-                _ => (stats.ideal_bits / 8).max(1),
+                _ => {
+                    all_sparse = false;
+                    (stats.ideal_bits / 8).max(1)
+                }
             };
             upload_bytes += msg_bytes;
             curve.ledger.record(stats.ideal_bits, msg_bytes);
-            messages.push(msg);
         }
 
         // ---- Step 6: All-Reduce v_t = (1/M) Σ Q(g^m) ----
-        if decoded.len() == messages.len() {
+        if all_sparse {
             let out = agg.reduce_decoded(&decoded, upload_bytes, &mut v);
             sim_time += out.sim_time_s;
         } else {
             // Mixed/dense/quantized messages: decode-accumulate directly.
             v.fill(0.0);
             let inv_m = 1.0 / m as f32;
-            for msg in &messages {
-                msg.add_into(inv_m, &mut v);
+            for worker in workers.iter() {
+                worker.msg.add_into(inv_m, &mut v);
             }
             sim_time += opts
                 .net
@@ -227,11 +240,16 @@ pub fn train_convex(
 
         // ---- Optional step 7: re-sparsify the average before broadcast ----
         if opts.resparsify_broadcast {
-            let mut p = Vec::new();
-            let pv = sparsify::greedy_probs(&v, cfg.rho, 2, &mut p);
-            let sg = sparsify::sample_sparse(&v, &p, pv.inv_lambda, &mut workers[0].rand);
+            let pv = sparsify::greedy_probs(&v, cfg.rho, 2, &mut resparsify_p);
+            sparsify::sample_sparse_into(
+                &v,
+                &resparsify_p,
+                pv.inv_lambda,
+                &mut workers[0].rand,
+                &mut resparsify_sg,
+            );
             v.fill(0.0);
-            sg.add_into(1.0, &mut v);
+            resparsify_sg.add_into(1.0, &mut v);
         }
 
         // SVRG eq. 15: master adds its exact full gradient after averaging.

@@ -11,7 +11,7 @@
 //! * [`OneBitSgd`] — 1Bit-SGD \[Seide et al. 2014\] with error feedback
 //!   (sign compression) ablation.
 
-use super::{index_bits, Compressed, CompressStats, Compressor, SparseGrad, FLOAT_BITS};
+use super::{index_bits, sparse_slot, Compressed, CompressStats, Compressor, FLOAT_BITS};
 use crate::rngkit::RandArray;
 
 /// **UniSp**: `p_i = ρ` for all `i`; survivors carry `g_i / ρ`.
@@ -27,8 +27,16 @@ impl UniformSampler {
 }
 
 impl Compressor for UniformSampler {
-    fn compress(&mut self, g: &[f32], rand: &mut RandArray) -> (Compressed, CompressStats) {
-        let mut sg = SparseGrad::empty(g.len());
+    fn compress_into(
+        &mut self,
+        g: &[f32],
+        rand: &mut RandArray,
+        out: &mut Compressed,
+    ) -> CompressStats {
+        let sg = sparse_slot(out, g.len());
+        // Realized nnz is data-dependent; reserving `d` up front makes the
+        // steady state deterministically allocation-free.
+        sg.exact.reserve(g.len());
         let inv_rho = 1.0 / self.rho;
         for (i, &gi) in g.iter().enumerate() {
             if gi != 0.0 && rand.next() < self.rho {
@@ -39,11 +47,10 @@ impl Compressor for UniformSampler {
             }
         }
         let nnz = sg.exact.len() as u64;
-        let stats = CompressStats {
+        CompressStats {
             expected_nnz: self.rho as f64 * g.iter().filter(|&&x| x != 0.0).count() as f64,
             ideal_bits: nnz * (FLOAT_BITS + index_bits(g.len())),
-        };
-        (Compressed::Sparse(sg), stats)
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -68,11 +75,37 @@ impl QsgdCompressor {
 }
 
 impl Compressor for QsgdCompressor {
-    fn compress(&mut self, g: &[f32], rand: &mut RandArray) -> (Compressed, CompressStats) {
+    fn compress_into(
+        &mut self,
+        g: &[f32],
+        rand: &mut RandArray,
+        out: &mut Compressed,
+    ) -> CompressStats {
         let d = g.len();
         let norm = crate::tensor::norm2_sq(g).sqrt();
+        // Reuse the level buffer when the previous message was QSGD too.
+        if !matches!(out, Compressed::Qsgd { .. }) {
+            *out = Compressed::Qsgd {
+                d: 0,
+                norm: 0.0,
+                bits: self.bits,
+                levels: Vec::new(),
+            };
+        }
+        let Compressed::Qsgd {
+            d: out_d,
+            norm: out_norm,
+            bits: out_bits,
+            levels,
+        } = out
+        else {
+            unreachable!("just set to Qsgd")
+        };
+        *out_d = d as u32;
+        *out_norm = norm;
+        *out_bits = self.bits;
+        levels.clear();
         let s = (1u32 << self.bits) as f32;
-        let mut levels = Vec::with_capacity(d);
         let mut expected_nnz = 0.0f64;
         if norm == 0.0 {
             levels.resize(d, 0);
@@ -89,20 +122,11 @@ impl Compressor for QsgdCompressor {
                 levels.push(signed);
             }
         }
-        let stats = CompressStats {
+        CompressStats {
             expected_nnz,
             // Paper's Fig-5 accounting: b bits per element + the norm float.
             ideal_bits: d as u64 * self.bits as u64 + FLOAT_BITS,
-        };
-        (
-            Compressed::Qsgd {
-                d: d as u32,
-                norm,
-                bits: self.bits,
-                levels,
-            },
-            stats,
-        )
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -122,10 +146,32 @@ impl TernGradCompressor {
 }
 
 impl Compressor for TernGradCompressor {
-    fn compress(&mut self, g: &[f32], rand: &mut RandArray) -> (Compressed, CompressStats) {
+    fn compress_into(
+        &mut self,
+        g: &[f32],
+        rand: &mut RandArray,
+        out: &mut Compressed,
+    ) -> CompressStats {
         let d = g.len();
         let scale = g.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
-        let mut signs = Vec::with_capacity(d);
+        if !matches!(out, Compressed::Ternary { .. }) {
+            *out = Compressed::Ternary {
+                d: 0,
+                scale: 0.0,
+                signs: Vec::new(),
+            };
+        }
+        let Compressed::Ternary {
+            d: out_d,
+            scale: out_scale,
+            signs,
+        } = out
+        else {
+            unreachable!("just set to Ternary")
+        };
+        *out_d = d as u32;
+        *out_scale = scale;
+        signs.clear();
         let mut expected_nnz = 0.0f64;
         if scale == 0.0 {
             signs.resize(d, 0i8);
@@ -140,18 +186,10 @@ impl Compressor for TernGradCompressor {
                 }
             }
         }
-        let stats = CompressStats {
+        CompressStats {
             expected_nnz,
             ideal_bits: 2 * d as u64 + FLOAT_BITS,
-        };
-        (
-            Compressed::Ternary {
-                d: d as u32,
-                scale,
-                signs,
-            },
-            stats,
-        )
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -178,7 +216,12 @@ impl TopKCompressor {
 }
 
 impl Compressor for TopKCompressor {
-    fn compress(&mut self, g: &[f32], _rand: &mut RandArray) -> (Compressed, CompressStats) {
+    fn compress_into(
+        &mut self,
+        g: &[f32],
+        _rand: &mut RandArray,
+        out: &mut Compressed,
+    ) -> CompressStats {
         let d = g.len();
         let k = ((self.rho as f64 * d as f64).ceil() as usize).clamp(1, d);
         self.scratch.clear();
@@ -190,19 +233,19 @@ impl Compressor for TopKCompressor {
                 .partial_cmp(&a.1.abs())
                 .unwrap_or(std::cmp::Ordering::Equal)
         });
-        let mut sg = SparseGrad::empty(d);
-        sg.exact = self.scratch[..k]
-            .iter()
-            .copied()
-            .filter(|&(_, v)| v != 0.0)
-            .collect();
+        let sg = sparse_slot(out, d);
+        sg.exact.extend(
+            self.scratch[..k]
+                .iter()
+                .copied()
+                .filter(|&(_, v)| v != 0.0),
+        );
         sg.exact.sort_unstable_by_key(|&(i, _)| i);
         let nnz = sg.exact.len() as u64;
-        let stats = CompressStats {
+        CompressStats {
             expected_nnz: nnz as f64,
             ideal_bits: nnz * (FLOAT_BITS + index_bits(d)),
-        };
-        (Compressed::Sparse(sg), stats)
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -225,7 +268,12 @@ impl OneBitSgd {
 }
 
 impl Compressor for OneBitSgd {
-    fn compress(&mut self, g: &[f32], _rand: &mut RandArray) -> (Compressed, CompressStats) {
+    fn compress_into(
+        &mut self,
+        g: &[f32],
+        _rand: &mut RandArray,
+        out: &mut Compressed,
+    ) -> CompressStats {
         let d = g.len();
         if self.error.len() != d {
             self.error = vec![0.0; d];
@@ -247,10 +295,17 @@ impl Compressor for OneBitSgd {
         }
         let pos_mag = if pos_n > 0 { (pos_sum / pos_n as f64) as f32 } else { 0.0 };
         let neg_mag = if neg_n > 0 { (neg_sum / neg_n as f64) as f32 } else { 0.0 };
-        // Encode as Ternary with per-message scale = the larger magnitude;
-        // we fold both magnitudes by snapping each sign to its side's mean.
-        // (Exact 1Bit-SGD uses two scalars; we transmit both — cost 2 floats.)
-        let mut signs = Vec::with_capacity(d);
+        // Two-sided magnitudes are not representable as Ternary (one scale),
+        // so the message travels in its decoded dense form, written straight
+        // into the reused output buffer; the cost model still accounts
+        // 1 bit/coordinate + the two scalars.
+        if !matches!(out, Compressed::Dense(_)) {
+            *out = Compressed::Dense(Vec::new());
+        }
+        let Compressed::Dense(dense) = out else {
+            unreachable!("just set to Dense")
+        };
+        dense.clear();
         let mut nnz = 0u64;
         for i in 0..d {
             let c = g[i] + self.error[i];
@@ -259,24 +314,16 @@ impl Compressor for OneBitSgd {
             if q != 0.0 {
                 nnz += 1;
             }
-            signs.push(if q == 0.0 { 0 } else { s });
-        }
-        // Represent via Dense decode values from two-sided magnitudes:
-        // use Ternary with asymmetric decode folded into a dense vector is
-        // not representable; emit Dense for correctness but account 1 bit.
-        let mut dense = vec![0.0f32; d];
-        for i in 0..d {
-            dense[i] = match signs[i] {
+            dense.push(match if q == 0.0 { 0 } else { s } {
                 1 => pos_mag,
                 -1 => -neg_mag,
                 _ => 0.0,
-            };
+            });
         }
-        let stats = CompressStats {
+        CompressStats {
             expected_nnz: nnz as f64,
             ideal_bits: d as u64 + 2 * FLOAT_BITS,
-        };
-        (Compressed::Dense(dense), stats)
+        }
     }
 
     fn name(&self) -> &'static str {

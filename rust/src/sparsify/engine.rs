@@ -1,0 +1,444 @@
+//! The allocation-free sparsification engine: one reusable scratch arena
+//! that fuses probability computation (Algorithm 2/3) → Bernoulli sampling →
+//! wire encoding, with sharded parallel compression for large gradients.
+//!
+//! Motivation (§5.3 of the paper, and the perf-sensitivity observations in
+//! Alistarh et al. 2018 / Basu et al. 2019): the communication win of
+//! sparsification only survives if compressor overhead stays sublinear in
+//! wall-clock. [`CompressEngine`] makes the rust_pallas hot path match that:
+//!
+//! * **No per-round allocation.** Probabilities, uniforms, the partial-
+//!   selection scratch, shard buffers, the output [`SparseGrad`] and the
+//!   wire buffer are all reused across rounds; a steady-state
+//!   [`CompressEngine::compress_into`] performs zero heap allocations (see
+//!   `tests/alloc_free.rs`).
+//! * **Selection, not sorting.** The closed-form solver runs through
+//!   [`closed_form_probs_with`] — O(d + k log k) exponential-search
+//!   quickselect instead of the O(d log d) full sort.
+//! * **Data-independent draw consumption.** The engine pre-fills one
+//!   uniform *per coordinate* from the worker's [`RandArray`] (the paper's
+//!   pre-generated-array trick) before sampling. Coordinate `i` always owns
+//!   draw `i`, so splitting the gradient into shards cannot change which
+//!   draw any coordinate sees — sharded output is **bitwise identical** to
+//!   the sequential path by construction.
+//! * **Sharded parallel compression.** Gradients with `d ≥ parallel_min_d`
+//!   are split into cache-sized chunks compressed concurrently under
+//!   `std::thread::scope` (the idiom the coordinator already uses), each
+//!   chunk appending into its own persistent shard buffer; shard outputs
+//!   concatenate in chunk order, which equals the sequential coordinate
+//!   order.
+
+use super::probs::{closed_form_probs_with, greedy_probs, ProbVector, SelectScratch};
+use super::{hybrid_ideal_bits, CompressStats, SparseGrad};
+use crate::coding::{self, Encoding};
+use crate::rngkit::RandArray;
+
+/// Default chunk size: 16 Ki coordinates ≈ 192 KiB of working set
+/// (gradient + probabilities + uniforms), sized to stay cache-resident.
+pub const DEFAULT_SHARD_LEN: usize = 1 << 14;
+
+/// Default dimension at which sharded parallel compression kicks in.
+pub const DEFAULT_PARALLEL_MIN_D: usize = 1 << 16;
+
+/// Which probability solver the engine runs.
+#[derive(Clone, Copy, Debug)]
+pub enum EngineMode {
+    /// Algorithm 3 (greedy fixed point) at target density `rho`.
+    Greedy { rho: f32, iters: usize },
+    /// Algorithm 2 (closed form) at variance budget `eps`, via the
+    /// selection-based solver.
+    ClosedForm { eps: f32 },
+}
+
+/// Per-shard output buffers, persistent across rounds.
+#[derive(Debug, Default, Clone)]
+struct ShardBuf {
+    exact: Vec<(u32, f32)>,
+    shared: Vec<(u32, bool)>,
+}
+
+/// Reusable, allocation-free sparsification engine. One per worker (it
+/// carries per-worker scratch); `Send` so coordinator threads can own one.
+#[derive(Debug)]
+pub struct CompressEngine {
+    mode: EngineMode,
+    shard_len: usize,
+    parallel_min_d: usize,
+    max_threads: usize,
+    /// Probability vector scratch (`p_i = min(λ|g_i|, 1)`).
+    p: Vec<f32>,
+    /// One pre-filled uniform per coordinate (draw `i` belongs to coord `i`).
+    uniforms: Vec<f32>,
+    /// Partial-selection scratch for the closed-form solver.
+    select: SelectScratch,
+    /// Per-chunk output buffers for the parallel path.
+    shards: Vec<ShardBuf>,
+}
+
+impl CompressEngine {
+    /// Engine running Algorithm 3 (the paper's experimental setting).
+    pub fn greedy(rho: f32, iters: usize) -> Self {
+        Self::new(EngineMode::Greedy { rho, iters })
+    }
+
+    /// Engine running Algorithm 2 via the selection-based solver.
+    pub fn closed_form(eps: f32) -> Self {
+        Self::new(EngineMode::ClosedForm { eps })
+    }
+
+    pub fn new(mode: EngineMode) -> Self {
+        Self {
+            mode,
+            shard_len: DEFAULT_SHARD_LEN,
+            parallel_min_d: DEFAULT_PARALLEL_MIN_D,
+            max_threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            p: Vec::new(),
+            uniforms: Vec::new(),
+            select: SelectScratch::default(),
+            shards: Vec::new(),
+        }
+    }
+
+    /// Override the sharding geometry (tests force both paths through this;
+    /// `max_threads = 1` or `parallel_min_d = usize::MAX` pins the engine to
+    /// the sequential path).
+    pub fn with_sharding(
+        mut self,
+        shard_len: usize,
+        parallel_min_d: usize,
+        max_threads: usize,
+    ) -> Self {
+        self.shard_len = shard_len.max(1);
+        self.parallel_min_d = parallel_min_d;
+        self.max_threads = max_threads.max(1);
+        self
+    }
+
+    pub fn mode(&self) -> EngineMode {
+        self.mode
+    }
+
+    /// Pre-size the engine's *internal* scratch (probabilities, uniforms,
+    /// selection buffers) for dimension `d`. For a fully allocation-free
+    /// sequential `compress_into`, the caller-held buffers need their own
+    /// worst-case reserve too: `out.exact`/`out.shared` up to `d` entries
+    /// and `wire` up to `coding::HEADER_LEN + 9 * d` bytes (see
+    /// `tests/alloc_free.rs` for the canonical setup).
+    pub fn reserve(&mut self, d: usize) {
+        self.p.reserve(d.saturating_sub(self.p.len()));
+        self.uniforms.reserve(d.saturating_sub(self.uniforms.len()));
+        self.select.reserve(d);
+    }
+
+    /// Compute the probability vector only (into internal scratch); used by
+    /// the shared-memory async engine, which applies updates coordinate-wise
+    /// and never materializes a [`SparseGrad`].
+    pub fn probs(&mut self, g: &[f32]) -> ProbVector {
+        self.compute_probs(g)
+    }
+
+    /// The probability vector from the most recent solve.
+    pub fn probabilities(&self) -> &[f32] {
+        &self.p
+    }
+
+    /// Per-message statistics under the paper's §5.1 hybrid-coding model.
+    pub fn stats_for(pv: &ProbVector, d: usize) -> CompressStats {
+        CompressStats {
+            expected_nnz: pv.expected_nnz,
+            ideal_bits: hybrid_ideal_bits(
+                pv.num_exact as u64,
+                pv.expected_nnz - pv.num_exact as f64,
+                d,
+            ),
+        }
+    }
+
+    /// Fused probabilities → sampling into a reused [`SparseGrad`].
+    ///
+    /// Draw convention: exactly `d + 1` uniforms are consumed from `rand`
+    /// per call — one per coordinate, whether or not the coordinate is
+    /// sampled (this data-independence is what makes the sharded and
+    /// sequential paths bitwise identical for the same [`RandArray`] state),
+    /// plus one spacer draw that decorrelates successive cyclic windows.
+    pub fn compress_sparse_into(
+        &mut self,
+        g: &[f32],
+        rand: &mut RandArray,
+        out: &mut SparseGrad,
+    ) -> ProbVector {
+        let d = g.len();
+        let pv = self.compute_probs(g);
+        out.reset(d);
+        out.shared_mag = pv.inv_lambda;
+        if d == 0 {
+            return pv;
+        }
+        if self.uniforms.len() < d {
+            self.uniforms.resize(d, 0.0);
+        }
+        rand.fill(&mut self.uniforms[..d]);
+        // Spacer draw: with exactly-d consumption per step, the cyclic array
+        // (whose length is typically a power of two or a multiple of d)
+        // would revisit identical uniform windows every few steps; one extra
+        // draw makes the stride d + 1, which is coprime with power-of-two
+        // lengths and walks the whole buffer — the same decorrelation
+        // rationale as `RandArray::reseed_offset`.
+        let _ = rand.next();
+
+        let shard_len = self.shard_len;
+        let nchunks = d.div_ceil(shard_len);
+        let p = &self.p[..d];
+        let u = &self.uniforms[..d];
+        let threads = self.max_threads.min(nchunks);
+        if d < self.parallel_min_d || threads <= 1 {
+            // Sequential path: same per-chunk kernel, run in chunk order.
+            for c in 0..nchunks {
+                let lo = c * shard_len;
+                let hi = (lo + shard_len).min(d);
+                sample_chunk(
+                    &g[lo..hi],
+                    &p[lo..hi],
+                    &u[lo..hi],
+                    lo as u32,
+                    &mut out.exact,
+                    &mut out.shared,
+                );
+            }
+        } else {
+            // Parallel path: each chunk appends into its own persistent
+            // buffer; concatenation in chunk order reproduces the
+            // sequential output exactly.
+            if self.shards.len() < nchunks {
+                self.shards.resize_with(nchunks, ShardBuf::default);
+            }
+            let shards = &mut self.shards[..nchunks];
+            let per = nchunks.div_ceil(threads);
+            std::thread::scope(|scope| {
+                for (t, group) in shards.chunks_mut(per).enumerate() {
+                    let first = t * per;
+                    scope.spawn(move || {
+                        for (j, sh) in group.iter_mut().enumerate() {
+                            let lo = (first + j) * shard_len;
+                            let hi = (lo + shard_len).min(d);
+                            sh.exact.clear();
+                            sh.shared.clear();
+                            sample_chunk(
+                                &g[lo..hi],
+                                &p[lo..hi],
+                                &u[lo..hi],
+                                lo as u32,
+                                &mut sh.exact,
+                                &mut sh.shared,
+                            );
+                        }
+                    });
+                }
+            });
+            for sh in shards.iter() {
+                out.exact.extend_from_slice(&sh.exact);
+                out.shared.extend_from_slice(&sh.shared);
+            }
+        }
+        pv
+    }
+
+    /// The full fused pass: probabilities → sampling → wire encoding, all
+    /// into caller-held reusable buffers. Returns the probability scalars
+    /// and the wire encoding chosen.
+    pub fn compress_into(
+        &mut self,
+        g: &[f32],
+        rand: &mut RandArray,
+        out: &mut SparseGrad,
+        wire: &mut Vec<u8>,
+    ) -> (ProbVector, Encoding) {
+        let pv = self.compress_sparse_into(g, rand, out);
+        let enc = coding::encode(out, wire);
+        (pv, enc)
+    }
+
+    fn compute_probs(&mut self, g: &[f32]) -> ProbVector {
+        match self.mode {
+            EngineMode::Greedy { rho, iters } => greedy_probs(g, rho, iters, &mut self.p),
+            EngineMode::ClosedForm { eps } => {
+                closed_form_probs_with(g, eps, &mut self.p, &mut self.select)
+            }
+        }
+    }
+}
+
+/// The per-chunk sampling kernel. `base` is the chunk's first coordinate
+/// index; `u[i]` is the pre-assigned uniform for coordinate `base + i`.
+#[inline]
+fn sample_chunk(
+    g: &[f32],
+    p: &[f32],
+    u: &[f32],
+    base: u32,
+    exact: &mut Vec<(u32, f32)>,
+    shared: &mut Vec<(u32, bool)>,
+) {
+    for i in 0..g.len() {
+        let pi = p[i];
+        if pi <= 0.0 {
+            continue;
+        }
+        if pi >= 1.0 {
+            exact.push((base + i as u32, g[i]));
+        } else if u[i] < pi {
+            shared.push((base + i as u32, g[i] < 0.0));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gradient(d: usize, seed: u64) -> Vec<f32> {
+        crate::benchkit::skewed_gradient(d, seed, 0.1)
+    }
+
+    #[test]
+    fn sharded_is_bitwise_identical_to_sequential() {
+        for (d, seed) in [(70_000usize, 1u64), (65_536, 2), (100_001, 3)] {
+            let g = gradient(d, seed);
+            for mode in [
+                EngineMode::Greedy { rho: 0.05, iters: 2 },
+                EngineMode::ClosedForm { eps: 0.5 },
+            ] {
+                // Sequential: threads pinned to 1.
+                let mut seq_engine =
+                    CompressEngine::new(mode).with_sharding(1 << 12, usize::MAX, 1);
+                let mut seq_rand = RandArray::from_seed(seed ^ 0xDEAD, 1 << 18);
+                let mut seq_out = SparseGrad::empty(0);
+                let mut seq_wire = Vec::new();
+                let (seq_pv, _) =
+                    seq_engine.compress_into(&g, &mut seq_rand, &mut seq_out, &mut seq_wire);
+
+                // Sharded: forced parallel, small chunks, several threads.
+                let mut par_engine = CompressEngine::new(mode).with_sharding(1 << 12, 1, 4);
+                let mut par_rand = RandArray::from_seed(seed ^ 0xDEAD, 1 << 18);
+                let mut par_out = SparseGrad::empty(0);
+                let mut par_wire = Vec::new();
+                let (par_pv, _) =
+                    par_engine.compress_into(&g, &mut par_rand, &mut par_out, &mut par_wire);
+
+                assert_eq!(seq_out, par_out, "d={d} mode={mode:?}");
+                assert_eq!(seq_wire, par_wire, "d={d} mode={mode:?}: wire bytes differ");
+                assert_eq!(seq_pv.num_exact, par_pv.num_exact);
+                assert!(seq_out.nnz() > 0, "degenerate test input");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_output_matches_probabilities_and_uniforms() {
+        // Membership law: exact ⇔ p = 1; shared ⇔ u < p < 1 with the
+        // coordinate's own pre-assigned uniform.
+        let d = 4096;
+        let g = gradient(d, 7);
+        let mut engine = CompressEngine::greedy(0.1, 2);
+        let mut rand = RandArray::from_seed(11, 1 << 16);
+        // Clone the RandArray to replay the exact uniforms the engine reads.
+        let mut replay = rand.clone();
+        let mut uniforms = vec![0.0f32; d];
+        let mut out = SparseGrad::empty(0);
+        let pv = engine.compress_sparse_into(&g, &mut rand, &mut out);
+        replay.fill(&mut uniforms);
+        let p = engine.probabilities();
+
+        let mut want_exact = Vec::new();
+        let mut want_shared = Vec::new();
+        for i in 0..d {
+            let pi = p[i];
+            if pi <= 0.0 {
+                continue;
+            }
+            if pi >= 1.0 {
+                want_exact.push((i as u32, g[i]));
+            } else if uniforms[i] < pi {
+                want_shared.push((i as u32, g[i] < 0.0));
+            }
+        }
+        assert_eq!(out.exact, want_exact);
+        assert_eq!(out.shared, want_shared);
+        assert_eq!(out.shared_mag, pv.inv_lambda);
+        assert_eq!(out.d, d as u32);
+    }
+
+    #[test]
+    fn wire_roundtrips_and_stats_are_consistent() {
+        let d = 2048;
+        let g = gradient(d, 9);
+        let mut engine = CompressEngine::closed_form(0.8);
+        let mut rand = RandArray::from_seed(13, 1 << 16);
+        let mut out = SparseGrad::empty(0);
+        let mut wire = Vec::new();
+        let (pv, _enc) = engine.compress_into(&g, &mut rand, &mut out, &mut wire);
+        let back = crate::coding::decode(&wire).unwrap();
+        assert_eq!(back, out);
+        let stats = CompressEngine::stats_for(&pv, d);
+        assert!(stats.ideal_bits > 0);
+        assert!(stats.expected_nnz > 0.0);
+        // Exact survivors are exactly the p = 1 set.
+        assert_eq!(
+            out.exact.len(),
+            engine.probabilities().iter().filter(|&&p| p >= 1.0).count()
+        );
+    }
+
+    #[test]
+    fn engine_unbiasedness_monte_carlo() {
+        // E[Q(g)] = g must survive the fused + pre-assigned-uniform path.
+        let d = 48;
+        let g = gradient(d, 21);
+        let mut engine = CompressEngine::greedy(0.3, 2);
+        let mut rand = RandArray::from_seed(22, (1 << 22) + 7);
+        let trials = 20_000;
+        let mut mean = vec![0.0f64; d];
+        let mut out = SparseGrad::empty(0);
+        for _ in 0..trials {
+            engine.compress_sparse_into(&g, &mut rand, &mut out);
+            for &(i, v) in &out.exact {
+                mean[i as usize] += v as f64;
+            }
+            for &(i, neg) in &out.shared {
+                let v = if neg { -out.shared_mag } else { out.shared_mag };
+                mean[i as usize] += v as f64;
+            }
+        }
+        let p = engine.probabilities().to_vec();
+        for i in 0..d {
+            let m = mean[i] / trials as f64;
+            let pi = p[i] as f64;
+            if pi == 0.0 {
+                assert_eq!(m, 0.0);
+                continue;
+            }
+            let gi = g[i] as f64;
+            let var = gi * gi * (1.0 - pi) / pi;
+            let tol = 4.0 * (var / trials as f64).sqrt() + 1e-9;
+            assert!((m - gi).abs() <= tol, "coord {i}: {m} vs {gi} (tol {tol})");
+        }
+    }
+
+    #[test]
+    fn empty_and_zero_gradients() {
+        let mut engine = CompressEngine::greedy(0.5, 2);
+        let mut rand = RandArray::from_seed(31, 1 << 10);
+        let mut out = SparseGrad::empty(0);
+        let mut wire = Vec::new();
+        let (pv, _) = engine.compress_into(&[], &mut rand, &mut out, &mut wire);
+        assert_eq!(out.nnz(), 0);
+        assert_eq!(pv.expected_nnz, 0.0);
+        let g = vec![0.0f32; 100];
+        let (pv, _) = engine.compress_into(&g, &mut rand, &mut out, &mut wire);
+        assert_eq!(out.nnz(), 0);
+        assert_eq!(pv.expected_nnz, 0.0);
+        assert_eq!(crate::coding::decode(&wire).unwrap(), out);
+    }
+}

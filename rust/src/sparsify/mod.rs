@@ -11,21 +11,31 @@
 //! the §3.3 hybrid coding exploits.
 //!
 //! This module provides:
-//! * [`probs`] — the two solvers for `p`: closed-form (Algorithm 2) and
-//!   greedy (Algorithm 3, the one used in all of the paper's experiments);
+//! * [`probs`] — the two solvers for `p`: closed-form (Algorithm 2, full-sort
+//!   reference plus the selection-based O(d + k log k) hot path) and greedy
+//!   (Algorithm 3, the one used in all of the paper's experiments);
 //! * [`sample`] — Bernoulli selection + unbiased rescaling into the
 //!   [`SparseGrad`] split representation;
+//! * [`engine`] — the allocation-free [`CompressEngine`] scratch arena
+//!   fusing probabilities → sampling → wire encoding, with sharded parallel
+//!   compression for large gradients;
 //! * [`Compressor`] implementations for the paper's method (GSpar) and every
 //!   baseline in the evaluation: uniform sampling (UniSp), QSGD, TernGrad,
-//!   deterministic top-k, and 1-bit SGD with error feedback.
+//!   deterministic top-k, and 1-bit SGD with error feedback — all reusing
+//!   caller-held message buffers via [`Compressor::compress_into`].
 
 pub mod baselines;
+pub mod engine;
 pub mod probs;
 pub mod sample;
 
 pub use baselines::{OneBitSgd, QsgdCompressor, TernGradCompressor, TopKCompressor, UniformSampler};
-pub use probs::{closed_form_probs, greedy_probs, ProbVector};
-pub use sample::sample_sparse;
+pub use engine::{CompressEngine, EngineMode};
+pub use probs::{
+    closed_form_probs, closed_form_probs_sorted, closed_form_probs_with, greedy_probs,
+    ProbVector, SelectScratch,
+};
+pub use sample::{sample_sparse, sample_sparse_into};
 
 use crate::config::Method;
 use crate::rngkit::RandArray;
@@ -50,6 +60,16 @@ pub struct SparseGrad {
 }
 
 impl SparseGrad {
+    /// Reset to an empty gradient of dimension `d`, keeping buffer capacity.
+    /// Every reuse path (sampler, codec decode, compressor slots) goes
+    /// through here so a future field cannot be left stale on one of them.
+    pub fn reset(&mut self, d: usize) {
+        self.d = d as u32;
+        self.exact.clear();
+        self.shared.clear();
+        self.shared_mag = 0.0;
+    }
+
     pub fn empty(d: usize) -> Self {
         Self {
             d: d as u32,
@@ -209,12 +229,43 @@ pub struct CompressStats {
 /// A gradient compressor: one instance per worker (may carry state, e.g.
 /// 1-bit error feedback).
 pub trait Compressor: Send {
-    /// Compress `g`, drawing randomness from the worker's pre-generated
-    /// uniform array (the paper's §5.3 trick).
-    fn compress(&mut self, g: &[f32], rand: &mut RandArray) -> (Compressed, CompressStats);
+    /// Compress `g` into a caller-held [`Compressed`], drawing randomness
+    /// from the worker's pre-generated uniform array (the paper's §5.3
+    /// trick). Implementations reuse the buffers inside `out` when its
+    /// variant matches their own — in steady state (same method, same `d`
+    /// round after round) this path performs no heap allocation.
+    fn compress_into(
+        &mut self,
+        g: &[f32],
+        rand: &mut RandArray,
+        out: &mut Compressed,
+    ) -> CompressStats;
+
+    /// Convenience wrapper allocating a fresh message (tests, one-shot use).
+    fn compress(&mut self, g: &[f32], rand: &mut RandArray) -> (Compressed, CompressStats) {
+        let mut out = Compressed::Sparse(SparseGrad::empty(g.len()));
+        let stats = self.compress_into(g, rand, &mut out);
+        (out, stats)
+    }
 
     /// Human-readable name for figure labels.
     fn name(&self) -> &'static str;
+}
+
+/// Reset `out` to an empty `Compressed::Sparse` of dimension `d`, reusing
+/// its buffers when the variant already matches; returns the inner
+/// [`SparseGrad`] ready to fill.
+pub(crate) fn sparse_slot(out: &mut Compressed, d: usize) -> &mut SparseGrad {
+    if !matches!(out, Compressed::Sparse(_)) {
+        *out = Compressed::Sparse(SparseGrad::empty(d));
+    }
+    match out {
+        Compressed::Sparse(sg) => {
+            sg.reset(d);
+            sg
+        }
+        _ => unreachable!("just set to Sparse"),
+    }
 }
 
 /// Bits per float on the simulated wire (the paper's `b`). f32 everywhere.
@@ -226,70 +277,66 @@ pub fn index_bits(d: usize) -> u64 {
 }
 
 /// The paper's GSpar compressor: greedy probabilities (Algorithm 3, the
-/// variant used in all experiments) or closed-form (Algorithm 2), then
-/// Bernoulli sampling and hybrid-coding cost accounting.
+/// variant used in all experiments) or closed-form (Algorithm 2, via the
+/// selection-based solver), then fused Bernoulli sampling and hybrid-coding
+/// cost accounting — a thin [`Compressor`] facade over [`CompressEngine`].
 pub struct GSparCompressor {
-    /// Target density ρ (greedy) — ignored by the closed-form variant.
-    pub rho: f32,
-    /// Variance budget ε (closed form).
-    pub eps: f32,
-    /// Greedy fixed-point iterations (paper: j = 2 suffices).
-    pub iters: usize,
     /// Use Algorithm 2 (exact) instead of Algorithm 3 (greedy).
     pub exact: bool,
-    /// Scratch probability vector (reused across steps — no hot-path alloc).
-    p_scratch: Vec<f32>,
+    engine: CompressEngine,
 }
 
 impl GSparCompressor {
     pub fn greedy(rho: f32, iters: usize) -> Self {
         Self {
-            rho,
-            eps: 0.0,
-            iters,
             exact: false,
-            p_scratch: Vec::new(),
+            engine: Self::worker_engine(CompressEngine::greedy(rho, iters)),
         }
     }
 
     pub fn closed_form(eps: f32) -> Self {
         Self {
-            rho: 0.0,
-            eps,
-            iters: 0,
             exact: true,
-            p_scratch: Vec::new(),
+            engine: Self::worker_engine(CompressEngine::closed_form(eps)),
         }
+    }
+
+    /// Per-worker compressors run *inside* coordinator threads (one per
+    /// simulated worker), so their embedded engine defaults to the
+    /// sequential path — nested sharding would spawn workers×cores scoped
+    /// threads per round and oversubscribe the box. Callers that own the
+    /// whole core budget (benches, single-stream pipelines) either use
+    /// [`CompressEngine`] directly or opt back in via [`Self::engine`].
+    fn worker_engine(engine: CompressEngine) -> CompressEngine {
+        engine.with_sharding(
+            engine::DEFAULT_SHARD_LEN,
+            engine::DEFAULT_PARALLEL_MIN_D,
+            1,
+        )
+    }
+
+    /// The scratch-arena engine backing this compressor.
+    pub fn engine(&mut self) -> &mut CompressEngine {
+        &mut self.engine
     }
 
     /// Compute the probability vector only (used by tests and the fused
     /// L1-kernel cross-checks).
     pub fn probabilities(&mut self, g: &[f32]) -> ProbVector {
-        if self.exact {
-            closed_form_probs(g, self.eps, &mut self.p_scratch)
-        } else {
-            greedy_probs(g, self.rho, self.iters, &mut self.p_scratch)
-        }
+        self.engine.probs(g)
     }
 }
 
 impl Compressor for GSparCompressor {
-    fn compress(&mut self, g: &[f32], rand: &mut RandArray) -> (Compressed, CompressStats) {
-        let pv = if self.exact {
-            closed_form_probs(g, self.eps, &mut self.p_scratch)
-        } else {
-            greedy_probs(g, self.rho, self.iters, &mut self.p_scratch)
-        };
-        let sg = sample_sparse(g, &self.p_scratch, pv.inv_lambda, rand);
-        let stats = CompressStats {
-            expected_nnz: pv.expected_nnz,
-            ideal_bits: hybrid_ideal_bits(
-                pv.num_exact as u64,
-                pv.expected_nnz - pv.num_exact as f64,
-                g.len(),
-            ),
-        };
-        (Compressed::Sparse(sg), stats)
+    fn compress_into(
+        &mut self,
+        g: &[f32],
+        rand: &mut RandArray,
+        out: &mut Compressed,
+    ) -> CompressStats {
+        let sg = sparse_slot(out, g.len());
+        let pv = self.engine.compress_sparse_into(g, rand, sg);
+        CompressEngine::stats_for(&pv, g.len())
     }
 
     fn name(&self) -> &'static str {
@@ -336,14 +383,23 @@ pub fn build(method: Method, rho: f32, eps: f32, qsgd_bits: u32) -> Box<dyn Comp
 pub struct DenseCompressor;
 
 impl Compressor for DenseCompressor {
-    fn compress(&mut self, g: &[f32], _rand: &mut RandArray) -> (Compressed, CompressStats) {
-        (
-            Compressed::Dense(g.to_vec()),
-            CompressStats {
-                expected_nnz: g.len() as f64,
-                ideal_bits: dense_ideal_bits(g.len()),
-            },
-        )
+    fn compress_into(
+        &mut self,
+        g: &[f32],
+        _rand: &mut RandArray,
+        out: &mut Compressed,
+    ) -> CompressStats {
+        match out {
+            Compressed::Dense(v) => {
+                v.clear();
+                v.extend_from_slice(g);
+            }
+            other => *other = Compressed::Dense(g.to_vec()),
+        }
+        CompressStats {
+            expected_nnz: g.len() as f64,
+            ideal_bits: dense_ideal_bits(g.len()),
+        }
     }
 
     fn name(&self) -> &'static str {

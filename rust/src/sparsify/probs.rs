@@ -19,7 +19,8 @@ pub struct ProbVector {
     pub variance: f64,
 }
 
-/// **Algorithm 2** (closed form). Finds the smallest `k` satisfying eq. (6)
+/// **Algorithm 2** (closed form), hot-path entry point: finds the smallest
+/// `k` satisfying eq. (6)
 ///
 /// ```text
 /// |g_(k+1)| · Σ_{i>k} |g_(i)|  ≤  ε Σ_i g_i² + Σ_{i>k} g_(i)²
@@ -28,10 +29,20 @@ pub struct ProbVector {
 /// then sets `p_(i) = 1` for `i ≤ k` and `p_(i) = λ|g_(i)|` otherwise, with
 /// `λ = Σ_{i>k}|g_(i)| / (ε Σ g² + Σ_{i>k} g_(i)²)` — eq. (7).
 ///
-/// `eps ≥ 0` is the variance-increase budget. Runs in O(d log d) (full sort
-/// of magnitudes; the paper notes partial sorting suffices but the exact
-/// variant is used for validation, not the hot path).
+/// Uses the selection-based solver (exponential search over the threshold
+/// with quickselect partitioning, O(d + k log k)) with a throwaway scratch;
+/// round-based callers should hold a [`SelectScratch`] and call
+/// [`closed_form_probs_with`] so no allocation happens per step.
 pub fn closed_form_probs(g: &[f32], eps: f32, p_out: &mut Vec<f32>) -> ProbVector {
+    let mut scratch = SelectScratch::default();
+    closed_form_probs_with(g, eps, p_out, &mut scratch)
+}
+
+/// Reference implementation of Algorithm 2 via a full O(d log d) sort.
+/// Kept for validation: the selection-based solver must reproduce its
+/// `ProbVector` and probabilities (see the equivalence tests); not used on
+/// the hot path.
+pub fn closed_form_probs_sorted(g: &[f32], eps: f32, p_out: &mut Vec<f32>) -> ProbVector {
     let d = g.len();
     p_out.clear();
     p_out.resize(d, 0.0);
@@ -91,6 +102,241 @@ pub fn closed_form_probs(g: &[f32], eps: f32, p_out: &mut Vec<f32>) -> ProbVecto
     }
     for &idx in &order[k..] {
         let m = g[idx as usize].abs() as f64;
+        if m == 0.0 {
+            continue;
+        }
+        let p = (lambda * m).min(1.0);
+        p_out[idx as usize] = p as f32;
+        expected_nnz += p;
+        variance += m * m / p;
+        // Boundary coordinates where λ|g| ≥ 1 are kept with certainty and
+        // travel in the QA part — count them as exact for coding stats.
+        if p_out[idx as usize] >= 1.0 {
+            num_exact += 1;
+        }
+    }
+
+    ProbVector {
+        inv_lambda,
+        num_exact,
+        expected_nnz,
+        variance,
+    }
+}
+
+/// Reusable scratch for [`closed_form_probs_with`]: the partial ordering of
+/// coordinate indices and the prefix sums over its sorted head. Holding one
+/// per worker makes the closed-form solver allocation-free across rounds.
+#[derive(Debug, Default, Clone)]
+pub struct SelectScratch {
+    /// Coordinate indices; `order[..sorted]` is the descending-magnitude
+    /// head during a solve.
+    order: Vec<u32>,
+    /// `prefix_l1[k] = Σ_{i<k} |g_(i)|` over the sorted head (f64).
+    prefix_l1: Vec<f64>,
+    /// `prefix_l2[k] = Σ_{i<k} g_(i)²` over the sorted head (f64).
+    prefix_l2: Vec<f64>,
+}
+
+impl SelectScratch {
+    /// Pre-size for dimension `d` so a subsequent solve performs no heap
+    /// allocation (buffers only ever grow).
+    pub fn reserve(&mut self, d: usize) {
+        self.order.reserve(d.saturating_sub(self.order.len()));
+        self.prefix_l1.reserve((d + 1).saturating_sub(self.prefix_l1.len()));
+        self.prefix_l2.reserve((d + 1).saturating_sub(self.prefix_l2.len()));
+    }
+}
+
+/// `(Σ|g_i|, Σ g_i²)` in one pass, 4-lane f64 accumulators (vectorizes).
+#[inline]
+fn abs_moment_sums(g: &[f32]) -> (f64, f64) {
+    let mut s1 = [0.0f64; 4];
+    let mut s2 = [0.0f64; 4];
+    let chunks = g.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        for lane in 0..4 {
+            let m = g[i + lane].abs() as f64;
+            s1[lane] += m;
+            s2[lane] += m * m;
+        }
+    }
+    let mut l1 = (s1[0] + s1[1]) + (s1[2] + s1[3]);
+    let mut l2 = (s2[0] + s2[1]) + (s2[2] + s2[3]);
+    for &x in &g[chunks * 4..] {
+        let m = x.abs() as f64;
+        l1 += m;
+        l2 += m * m;
+    }
+    (l1, l2)
+}
+
+/// **Algorithm 2** via partial selection — the hot-path solver.
+///
+/// The full sort in [`closed_form_probs_sorted`] only ever *reads* the top
+/// of the ordering: eq. (6) is monotone in `k`, so the smallest feasible `k`
+/// can be found by exponential search. We grow a sorted head of the
+/// magnitude ordering in doubling steps — each step is one quickselect
+/// partition of the unsorted suffix, O(d), plus a sort of the newly admitted
+/// elements — and stop as soon as a feasible `k` appears in the head.
+/// Total work is O(d + k log k) instead of O(d log d); for the typical
+/// `k ≪ d` regime the solver touches the suffix only through the partition
+/// passes and never orders it.
+///
+/// Results match [`closed_form_probs_sorted`] up to f64 summation order
+/// (prefix-minus-total vs. backward suffix sums); the equivalence tests pin
+/// this down.
+pub fn closed_form_probs_with(
+    g: &[f32],
+    eps: f32,
+    p_out: &mut Vec<f32>,
+    scratch: &mut SelectScratch,
+) -> ProbVector {
+    let d = g.len();
+    assert!(eps >= 0.0, "variance budget must be non-negative");
+    p_out.clear();
+    p_out.resize(d, 0.0);
+
+    let (total_l1, total_l2) = abs_moment_sums(g);
+    if total_l2 == 0.0 {
+        // Zero gradient: nothing to keep.
+        return ProbVector {
+            inv_lambda: 0.0,
+            num_exact: 0,
+            expected_nnz: 0.0,
+            variance: 0.0,
+        };
+    }
+    let budget = eps as f64 * total_l2;
+
+    let order = &mut scratch.order;
+    let prefix_l1 = &mut scratch.prefix_l1;
+    let prefix_l2 = &mut scratch.prefix_l2;
+    order.clear();
+    order.extend(0..d as u32);
+    prefix_l1.clear();
+    prefix_l1.push(0.0);
+    prefix_l2.clear();
+    prefix_l2.push(0.0);
+
+    let mag = |i: u32| g[i as usize].abs();
+    let desc = |a: &u32, b: &u32| {
+        mag(*b)
+            .partial_cmp(&mag(*a))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    };
+
+    let mut sorted = 0usize; // order[..sorted] = top-`sorted`, descending
+    let mut checked = 0usize; // candidates k < checked already failed eq. (6)
+    let mut k = d; // fallback: keep everything exactly
+    // First guess d/64: sorting it costs ≪ one partition pass, and it covers
+    // the common k ∝ d regime in a single doubling step.
+    let mut target = (d / 64).max(32).min(d);
+    loop {
+        if target > sorted {
+            if target < d {
+                // One quickselect partition brings the next largest
+                // (target - sorted) magnitudes to the front of the suffix.
+                order[sorted..].select_nth_unstable_by(target - sorted - 1, desc);
+            }
+            order[sorted..target].sort_unstable_by(desc);
+            let mut l1 = prefix_l1[sorted];
+            let mut l2 = prefix_l2[sorted];
+            for &idx in &order[sorted..target] {
+                let m = mag(idx) as f64;
+                l1 += m;
+                l2 += m * m;
+                prefix_l1.push(l1);
+                prefix_l2.push(l2);
+            }
+            sorted = target;
+        }
+        if sorted < d {
+            // Partial regime: smallest k in [checked, sorted) satisfying
+            // eq. (6), with total-minus-prefix tails. Their accumulated f64
+            // error grows like d·ulp·Σ, so allow a slack of that scale so a
+            // hairline tie is decided deterministically rather than by
+            // subtraction noise. The slack direction accepts the tie (one
+            // *smaller* k): at near-equality the boundary coordinate has
+            // λ|g_(k+1)| ≈ 1, so it is kept with probability ≈ 1 either way
+            // and the variance drift is O(slack). Genuine margins dwarf the
+            // slack, and the noise-dominated endgame (tails that are a
+            // vanishing fraction of the total) is handled by the exact scan
+            // below instead.
+            let slack = d as f64 * f64::EPSILON * total_l2;
+            let mut found = false;
+            for cand in checked..sorted {
+                let next_mag = mag(order[cand]) as f64; // |g_(k+1)| for k = cand
+                let tail1 = total_l1 - prefix_l1[cand];
+                let tail2 = total_l2 - prefix_l2[cand];
+                if next_mag * tail1 <= budget + tail2 + slack {
+                    k = cand;
+                    found = true;
+                    break;
+                }
+            }
+            if found {
+                break;
+            }
+            checked = sorted;
+            target = (sorted * 2).min(d);
+        } else {
+            // Full-sort regime: exact backward suffix accumulation, the same
+            // smallest-first summation order as the sorted reference, so the
+            // ε = 0 boundary (eq. (6) holds with exact equality at k = d−1)
+            // is decided identically. Eq. (6) is monotone in k, so the
+            // smallest feasible k is the bottom of the trailing run of
+            // successes in a descending scan.
+            let mut tail1 = 0.0f64;
+            let mut tail2 = 0.0f64;
+            for cand in (checked..d).rev() {
+                let m = mag(order[cand]) as f64;
+                tail1 += m;
+                tail2 += m * m;
+                if m * tail1 <= budget + tail2 {
+                    k = cand;
+                } else {
+                    break;
+                }
+            }
+            break;
+        }
+    }
+
+    // λ from *exact* tail sums: re-accumulate over the actual tail elements
+    // (backward, matching the reference solver) — the subtractive tails used
+    // during the search lose all precision when the kept set carries nearly
+    // the whole mass.
+    let (lambda, inv_lambda) = if k == d {
+        (0.0, 0.0)
+    } else {
+        let mut tail1 = 0.0f64;
+        let mut tail2 = 0.0f64;
+        for &idx in order[k..].iter().rev() {
+            let m = mag(idx) as f64;
+            tail1 += m;
+            tail2 += m * m;
+        }
+        if tail1 == 0.0 {
+            (0.0, 0.0)
+        } else {
+            let lam = tail1 / (budget + tail2);
+            (lam, (1.0 / lam) as f32)
+        }
+    };
+
+    let mut expected_nnz = k as f64;
+    let mut variance = prefix_l2[k.min(prefix_l2.len() - 1)]; // S_k contributes g².
+    let mut num_exact = k;
+    for &idx in &order[..k] {
+        p_out[idx as usize] = 1.0;
+    }
+    // order[k..sorted] is sorted, order[sorted..] is an arbitrary
+    // arrangement of the remaining (strictly smaller) magnitudes — together
+    // exactly the complement of S_k, which is all the final pass needs.
+    for &idx in &order[k..] {
+        let m = mag(idx) as f64;
         if m == 0.0 {
             continue;
         }
@@ -458,6 +704,94 @@ mod tests {
             greedy.variance,
             exact.variance
         );
+    }
+
+    /// Shared checker: the selection-based solver must reproduce the sorted
+    /// reference's `ProbVector` and probabilities (up to f64 summation
+    /// order).
+    fn assert_solvers_agree(g: &[f32], eps: f32) -> Result<(), String> {
+        let mut p_ref = Vec::new();
+        let pv_ref = closed_form_probs_sorted(g, eps, &mut p_ref);
+        let mut p_sel = Vec::new();
+        let mut scratch = SelectScratch::default();
+        let pv_sel = closed_form_probs_with(g, eps, &mut p_sel, &mut scratch);
+
+        let rel = |a: f64, b: f64| (a - b).abs() / a.abs().max(b.abs()).max(1e-12);
+        if (pv_sel.inv_lambda as f64 - pv_ref.inv_lambda as f64).abs()
+            > 1e-5 * (pv_ref.inv_lambda as f64).max(1e-12)
+        {
+            return Err(format!(
+                "inv_lambda: sel {} vs ref {}",
+                pv_sel.inv_lambda, pv_ref.inv_lambda
+            ));
+        }
+        if pv_sel.num_exact != pv_ref.num_exact {
+            return Err(format!(
+                "num_exact: sel {} vs ref {}",
+                pv_sel.num_exact, pv_ref.num_exact
+            ));
+        }
+        if rel(pv_sel.expected_nnz, pv_ref.expected_nnz) > 1e-9 {
+            return Err(format!(
+                "expected_nnz: sel {} vs ref {}",
+                pv_sel.expected_nnz, pv_ref.expected_nnz
+            ));
+        }
+        if rel(pv_sel.variance, pv_ref.variance) > 1e-9 {
+            return Err(format!(
+                "variance: sel {} vs ref {}",
+                pv_sel.variance, pv_ref.variance
+            ));
+        }
+        for i in 0..g.len() {
+            if (p_sel[i] - p_ref[i]).abs() > 1e-6 {
+                return Err(format!("p[{i}]: sel {} vs ref {}", p_sel[i], p_ref[i]));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn selection_solver_matches_sorted_reference() {
+        for seed in 0..6u64 {
+            let g = sample_grad(700 + 13 * seed as usize, 40 + seed);
+            for eps in [0.0f32, 0.1, 0.5, 1.0, 3.0] {
+                if let Err(e) = assert_solvers_agree(&g, eps) {
+                    panic!("seed {seed} eps {eps}: {e}");
+                }
+            }
+        }
+        // Degenerate shapes.
+        assert_solvers_agree(&[0.0; 32], 1.0).unwrap();
+        assert_solvers_agree(&[2.5], 0.5).unwrap();
+        assert_solvers_agree(&[1.0, -1.0, 1.0, -1.0], 0.7).unwrap(); // ties
+    }
+
+    #[test]
+    fn property_selection_equals_sorted() {
+        crate::proptest_lite::run("selection solver == sorted solver", 64, |gen| {
+            let d = gen.usize_in(1, 1500);
+            let g = gen.gradient_vec(d);
+            let eps = gen.f32_in(0.0, 4.0);
+            assert_solvers_agree(&g, eps)
+        });
+    }
+
+    #[test]
+    fn selection_scratch_is_reusable_across_dimensions() {
+        // Same scratch across shrinking/growing d must not leak state.
+        let mut scratch = SelectScratch::default();
+        let mut p = Vec::new();
+        for &(d, seed) in &[(512usize, 60u64), (33, 61), (2048, 62), (1, 63)] {
+            let g = sample_grad(d, seed);
+            let pv = closed_form_probs_with(&g, 0.5, &mut p, &mut scratch);
+            let mut p_ref = Vec::new();
+            let pv_ref = closed_form_probs_sorted(&g, 0.5, &mut p_ref);
+            assert_eq!(pv.num_exact, pv_ref.num_exact, "d={d}");
+            for i in 0..d {
+                assert!((p[i] - p_ref[i]).abs() < 1e-6, "d={d} p[{i}]");
+            }
+        }
     }
 
     #[test]

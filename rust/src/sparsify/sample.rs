@@ -23,8 +23,23 @@ pub fn sample_sparse(
     inv_lambda: f32,
     rand: &mut RandArray,
 ) -> SparseGrad {
-    assert_eq!(g.len(), p.len());
     let mut out = SparseGrad::empty(g.len());
+    sample_sparse_into(g, p, inv_lambda, rand, &mut out);
+    out
+}
+
+/// [`sample_sparse`] into a caller-provided [`SparseGrad`], reusing its
+/// buffers — the allocation-free form the compressors use every round. Draw
+/// consumption is unchanged: one uniform per coordinate with `0 < p_i < 1`.
+pub fn sample_sparse_into(
+    g: &[f32],
+    p: &[f32],
+    inv_lambda: f32,
+    rand: &mut RandArray,
+    out: &mut SparseGrad,
+) {
+    assert_eq!(g.len(), p.len());
+    out.reset(g.len());
     out.shared_mag = inv_lambda;
     for i in 0..g.len() {
         let pi = p[i];
@@ -37,7 +52,6 @@ pub fn sample_sparse(
             out.shared.push((i as u32, g[i] < 0.0));
         }
     }
-    out
 }
 
 #[cfg(test)]

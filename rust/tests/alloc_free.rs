@@ -1,0 +1,128 @@
+//! Steady-state allocation accounting for the compression hot path.
+//!
+//! A counting global allocator wraps the system allocator; after a warmup
+//! phase that grows every reusable buffer to its plateau, the fused
+//! `CompressEngine::compress_into` path and every `Compressor::compress_into`
+//! implementation must perform **zero** heap allocations per call (the
+//! acceptance criterion of the allocation-free engine work). The checks run
+//! inside a single `#[test]` so no concurrent test thread can pollute the
+//! counter.
+
+use gsparse::benchkit::{allocation_count, CountingAllocator};
+use gsparse::comm::{Aggregator, NetworkModel, ReduceAlgo};
+use gsparse::config::Method;
+use gsparse::rngkit::RandArray;
+use gsparse::sparsify::{self, Compressed, CompressEngine, SparseGrad};
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+fn gradient(d: usize, seed: u64) -> Vec<f32> {
+    gsparse::benchkit::skewed_gradient(d, seed, 0.1)
+}
+
+/// Run `f` `calls` times and return the number of allocations observed.
+fn count_allocs<F: FnMut()>(calls: usize, mut f: F) -> u64 {
+    let before = allocation_count();
+    for _ in 0..calls {
+        f();
+    }
+    allocation_count() - before
+}
+
+#[test]
+fn steady_state_compression_is_allocation_free() {
+    let d = 8192; // below the parallel threshold: the sequential fused path
+    let g = gradient(d, 1);
+    let calls = 64;
+
+    // --- Fused engine, greedy mode -------------------------------------
+    let mut engine = CompressEngine::greedy(0.05, 2);
+    engine.reserve(d);
+    let mut rand = RandArray::from_seed(2, 1 << 18);
+    let mut out = SparseGrad::empty(d);
+    // Worst-case capacity: every coordinate could survive.
+    out.exact.reserve(d);
+    out.shared.reserve(d);
+    let mut wire = Vec::with_capacity(gsparse::coding::HEADER_LEN + 9 * d);
+    for _ in 0..8 {
+        engine.compress_into(&g, &mut rand, &mut out, &mut wire); // warmup
+    }
+    let n = count_allocs(calls, || {
+        engine.compress_into(&g, &mut rand, &mut out, &mut wire);
+    });
+    assert_eq!(n, 0, "greedy engine compress_into allocated {n} times in {calls} calls");
+
+    // --- Fused engine, closed-form (selection solver) ------------------
+    let mut engine = CompressEngine::closed_form(0.5);
+    engine.reserve(d);
+    for _ in 0..8 {
+        engine.compress_into(&g, &mut rand, &mut out, &mut wire);
+    }
+    let n = count_allocs(calls, || {
+        engine.compress_into(&g, &mut rand, &mut out, &mut wire);
+    });
+    assert_eq!(n, 0, "closed-form engine compress_into allocated {n} times in {calls} calls");
+
+    // --- Every Compressor::compress_into implementation ----------------
+    for &method in Method::all() {
+        let mut c = sparsify::build(method, 0.1, 0.5, 4);
+        let mut msg = Compressed::Sparse(SparseGrad::empty(d));
+        for _ in 0..8 {
+            c.compress_into(&g, &mut rand, &mut msg); // warmup grows buffers
+        }
+        let n = count_allocs(calls, || {
+            c.compress_into(&g, &mut rand, &mut msg);
+        });
+        assert_eq!(
+            n, 0,
+            "{method}: compress_into allocated {n} times in {calls} calls"
+        );
+    }
+
+    // --- Aggregator reduce (encode → decode_into → average) ------------
+    let mut engine = CompressEngine::greedy(0.05, 2);
+    let mut grads: Vec<SparseGrad> = Vec::new();
+    for wseed in 0..4 {
+        let gw = gradient(d, 100 + wseed);
+        let mut sg = SparseGrad::empty(d);
+        engine.compress_sparse_into(&gw, &mut rand, &mut sg);
+        grads.push(sg);
+    }
+    let mut agg = Aggregator::new(NetworkModel::datacenter_10g(), ReduceAlgo::Sparse);
+    let mut v = vec![0.0f32; d];
+    for _ in 0..4 {
+        agg.reduce(&grads, &mut v); // warmup
+    }
+    let n = count_allocs(16, || {
+        agg.reduce(&grads, &mut v);
+    });
+    assert_eq!(n, 0, "Aggregator::reduce allocated {n} times in 16 calls");
+
+    // --- Sharded path: shard buffers reused ----------------------------
+    // (Same #[test] on purpose: a concurrent test thread would pollute the
+    // global counter.) The parallel path allocates for thread spawning —
+    // inherent to std::thread::scope — but its shard buffers must be
+    // reused, so the per-call count stays bounded and far below one
+    // allocation per coordinate.
+    let d = 1 << 17;
+    let g = gradient(d, 7);
+    let mut engine = CompressEngine::greedy(0.05, 2).with_sharding(1 << 14, 1, 4);
+    let mut rand = RandArray::from_seed(8, 1 << 20);
+    let mut out = SparseGrad::empty(d);
+    let mut wire = Vec::new();
+    for _ in 0..4 {
+        engine.compress_into(&g, &mut rand, &mut out, &mut wire);
+    }
+    let calls = 8;
+    let n = count_allocs(calls, || {
+        engine.compress_into(&g, &mut rand, &mut out, &mut wire);
+    });
+    let per_call = n as f64 / calls as f64;
+    // Budget: ~4 thread spawns/call at ≲ 16 allocations each, nothing per
+    // shard or per coordinate (d = 131072 here).
+    assert!(
+        per_call < 256.0,
+        "sharded path: {per_call} allocations/call — shard buffers not reused?"
+    );
+}
