@@ -1,0 +1,113 @@
+//! Transport microbench: frame-codec throughput plus whole-cluster runs on
+//! both backends, reporting the **measured** byte column (actual framed
+//! bytes on the link) next to the idealized ledger. Writes
+//! `BENCH_transport.json` (override with `GSPARSE_BENCH_OUT`); CI uploads
+//! it alongside `BENCH_sparsify.json` to track the transport's overhead
+//! trajectory.
+
+use gsparse::benchkit::{black_box, section, Bencher, JsonReport};
+use gsparse::coordinator::dist::{self, DistConfig};
+use gsparse::rngkit::RandArray;
+use gsparse::sparsify::{greedy_probs, sample_sparse};
+use gsparse::transport::frame::{self, GradHeader, MsgView};
+use gsparse::transport::{InProcTransport, TcpTransport, FRAME_OVERHEAD};
+use std::time::Instant;
+
+fn bench_frame_codec(report: &mut JsonReport) {
+    section("frame codec (grad message, d = 2048, rho = 0.1)");
+    let d = 2048;
+    let g = gsparse::benchkit::skewed_gradient(d, 11, 0.1);
+    let mut p = Vec::new();
+    let pv = greedy_probs(&g, 0.1, 2, &mut p);
+    let mut rand = RandArray::from_seed(12, 1 << 16);
+    let sg = sample_sparse(&g, &p, pv.inv_lambda, &mut rand);
+    let mut wire = Vec::new();
+    gsparse::coding::encode(&sg, &mut wire);
+    let header = GradHeader {
+        based_on: 1,
+        g_norm_sq: 2.0,
+        q_norm_sq: 2.5,
+        expected_nnz: pv.expected_nnz,
+        ideal_bits: 12345,
+        kind: 0,
+    };
+    let bench = Bencher::default();
+    let mut frame_buf = Vec::new();
+    let s = bench.bench("frame encode_grad", Some(wire.len() as u64), || {
+        frame::encode_grad(&mut frame_buf, &header, black_box(&wire));
+    });
+    report.push(&s);
+    let s = bench.bench("frame decode(grad)", Some(frame_buf.len() as u64), || {
+        match frame::decode(black_box(&frame_buf)).unwrap() {
+            MsgView::Grad { payload, .. } => {
+                black_box(payload.len());
+            }
+            _ => unreachable!(),
+        }
+    });
+    report.push(&s);
+    report.push_metric("frame_overhead_bytes", FRAME_OVERHEAD as f64);
+}
+
+fn bench_cluster(report: &mut JsonReport, backend: &str) {
+    let cfg = DistConfig {
+        workers: 2,
+        rounds: 150,
+        n: 512,
+        d: 1024,
+        batch: 8,
+        seed: 9,
+        reg: 1.0 / (10.0 * 512.0),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let rep = match backend {
+        "inproc" => dist::run_threads(InProcTransport::new(), "bench", &cfg),
+        "tcp" => dist::run_threads(TcpTransport::new(), "127.0.0.1:0", &cfg),
+        other => panic!("unknown backend {other}"),
+    }
+    .expect("cluster run");
+    let wall_s = t0.elapsed().as_secs_f64();
+    let pushes = (cfg.rounds * cfg.workers) as f64;
+    let ledger = &rep.curve.ledger;
+    let overhead = ledger.measured_bytes as f64 / ledger.wire_bytes.max(1) as f64;
+    println!(
+        "{backend:>7}: {pushes} pushes in {:.1} ms  wire {} B  measured {} B \
+         ({overhead:.3}x incl. weights+framing)  final loss {:.6}",
+        wall_s * 1e3,
+        ledger.wire_bytes,
+        ledger.measured_bytes,
+        rep.final_loss,
+    );
+    report.push_metric(&format!("{backend}_wall_s"), wall_s);
+    report.push_metric(&format!("{backend}_pushes_per_s"), pushes / wall_s);
+    report.push_metric(&format!("{backend}_wire_bytes"), ledger.wire_bytes as f64);
+    report.push_metric(
+        &format!("{backend}_measured_bytes"),
+        ledger.measured_bytes as f64,
+    );
+    report.push_metric(
+        &format!("{backend}_measured_bytes_per_push"),
+        ledger.measured_bytes as f64 / pushes,
+    );
+    report.push_metric(&format!("{backend}_framing_overhead_x"), overhead);
+    report.push_metric(&format!("{backend}_sim_net_s"), rep.sim_time_s);
+    report.push_metric(
+        &format!("{backend}_grad_digest_low32"),
+        (rep.grad_digest & 0xFFFF_FFFF) as f64,
+    );
+}
+
+fn main() {
+    let mut report = JsonReport::new();
+    bench_frame_codec(&mut report);
+    section("distributed parameter server, 2 workers x 150 rounds (d = 1024)");
+    bench_cluster(&mut report, "inproc");
+    bench_cluster(&mut report, "tcp");
+    let out_path = std::env::var("GSPARSE_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_transport.json".to_string());
+    match report.write(&out_path) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
+    }
+}

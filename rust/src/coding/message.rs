@@ -40,7 +40,7 @@ pub enum Encoding {
 
 /// Wire-format decode errors. (`Display`/`Error` are hand-written: the
 /// offline image has no `thiserror`.)
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum WireError {
     Truncated(usize),
     BadMagic,
@@ -49,6 +49,12 @@ pub enum WireError {
     LengthMismatch { expected: usize, got: usize },
     IndexOutOfBounds { index: u32, d: u32 },
     IndicesNotSorted(usize),
+    /// Header claims more survivors than coordinates (`na + nb > d`) — an
+    /// adversarial or corrupted message; rejected before any buffer grows.
+    CountsExceedDim { na: u32, nb: u32, d: u32 },
+    /// `shared_mag` is NaN or ±∞ — decoding would poison every QB
+    /// coordinate, so the message is rejected at the header.
+    NonFiniteSharedMag(f32),
 }
 
 impl std::fmt::Display for WireError {
@@ -66,6 +72,12 @@ impl std::fmt::Display for WireError {
             }
             WireError::IndicesNotSorted(pos) => {
                 write!(f, "indices not strictly ascending at position {pos}")
+            }
+            WireError::CountsExceedDim { na, nb, d } => {
+                write!(f, "survivor counts {na} + {nb} exceed dimension {d}")
+            }
+            WireError::NonFiniteSharedMag(v) => {
+                write!(f, "shared magnitude {v} is not finite")
             }
         }
     }
@@ -196,6 +208,21 @@ pub fn decode_into(buf: &[u8], sg: &mut SparseGrad) -> Result<(), WireError> {
     let na = u32::from_le_bytes(buf[12..16].try_into().unwrap()) as usize;
     let nb = u32::from_le_bytes(buf[16..20].try_into().unwrap()) as usize;
     let shared_mag = f32::from_le_bytes(buf[20..24].try_into().unwrap());
+    // Adversarial-header gates (bytes may arrive from a socket): the
+    // survivor counts must fit the dimension — checked before any reserve,
+    // so a hostile header cannot trigger a huge allocation — and the shared
+    // magnitude must be finite, or every QB coordinate would decode to
+    // NaN/∞ and poison the weight vector.
+    if na as u64 + nb as u64 > d as u64 {
+        return Err(WireError::CountsExceedDim {
+            na: na as u32,
+            nb: nb as u32,
+            d,
+        });
+    }
+    if !shared_mag.is_finite() {
+        return Err(WireError::NonFiniteSharedMag(shared_mag));
+    }
     let payload = &buf[HEADER_LEN..];
 
     sg.reset(d as usize);
@@ -403,6 +430,55 @@ mod tests {
             decode(&buf),
             Err(WireError::IndicesNotSorted(_)) | Err(WireError::IndexOutOfBounds { .. })
         ));
+    }
+
+    #[test]
+    fn rejects_counts_exceeding_dimension() {
+        // Adversarial header: na + nb > d must be rejected *before* the
+        // payload-length check (so no hostile reserve can happen either).
+        let mut sg = SparseGrad::empty(16);
+        sg.exact.push((3, 1.0));
+        let mut buf = Vec::new();
+        encode(&sg, &mut buf);
+        buf[12..16].copy_from_slice(&12u32.to_le_bytes()); // na = 12
+        buf[16..20].copy_from_slice(&5u32.to_le_bytes()); // nb = 5, 17 > 16
+        assert_eq!(
+            decode(&buf),
+            Err(WireError::CountsExceedDim {
+                na: 12,
+                nb: 5,
+                d: 16
+            })
+        );
+        // Saturating case: both counts u32::MAX must not overflow the check.
+        buf[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        buf[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            decode(&buf),
+            Err(WireError::CountsExceedDim { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_non_finite_shared_mag() {
+        let mut sg = SparseGrad::empty(64);
+        sg.exact.push((1, 2.0));
+        sg.shared.push((5, false));
+        sg.shared.push((9, true));
+        sg.shared_mag = 0.5;
+        let mut buf = Vec::new();
+        encode(&sg, &mut buf);
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut corrupt = buf.clone();
+            corrupt[20..24].copy_from_slice(&bad.to_le_bytes());
+            assert!(
+                matches!(
+                    decode(&corrupt),
+                    Err(WireError::NonFiniteSharedMag(_))
+                ),
+                "shared_mag {bad} must be rejected"
+            );
+        }
     }
 
     #[test]

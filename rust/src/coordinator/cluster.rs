@@ -6,8 +6,10 @@
 //! *communication path* is real concurrency: each worker's per-layer
 //! gradients are sparsified + encoded on a scoped worker thread (the
 //! compressors and RNG streams are per-worker state, exactly as on a real
-//! cluster), the encoded bytes cross a channel to the leader, and the leader
-//! decodes and averages.
+//! cluster), the framed bytes cross the worker's [`crate::transport`] link,
+//! and the leader receives, decodes and averages **in worker-id order** —
+//! deterministic float accumulation, and the links' byte counters give the
+//! ledger its measured column.
 //!
 //! §5.2 semantics: "the sparsification is done independently over each
 //! layer" — every layer has its own probability vector, its own λ, and its
@@ -17,7 +19,8 @@ use crate::comm::NetworkModel;
 use crate::metrics::{CommLedger, SparsityMeter, VarianceRatio};
 use crate::rngkit::{RandArray, Xoshiro256pp};
 use crate::sparsify::{Compressed, Compressor};
-use std::sync::mpsc;
+use crate::transport::frame::{self, GradHeader, MsgView};
+use crate::transport::{Connection, Hello, InProcTransport, Transport};
 
 /// Averaged update for one layer plus round statistics.
 #[derive(Debug, Clone)]
@@ -29,12 +32,18 @@ pub struct LayerUpdate {
 
 /// Per-worker, per-layer communication state. `msgs[l]` is the reused
 /// compression buffer for layer `l` — `compress_into` fills it in place
-/// every round, so only the wire bytes (which cross the channel and must be
-/// owned) are freshly allocated.
+/// every round — and the byte buffers (`wire`, `frame_buf`, …) are reused
+/// too, so a worker's steady-state round only allocates inside the
+/// transport (one owned frame per message crossing the link).
 struct WorkerComm {
     compressors: Vec<Box<dyn Compressor>>,
     msgs: Vec<Compressed>,
     rand: RandArray,
+    conn: Box<dyn Connection>,
+    wire: Vec<u8>,
+    frame_buf: Vec<u8>,
+    dense_tx: Vec<f32>,
+    dense_bytes: Vec<u8>,
 }
 
 /// The synchronous cluster communication fabric.
@@ -42,6 +51,8 @@ pub struct Cluster {
     pub workers: usize,
     pub layers: Vec<usize>,
     comm: Vec<Option<WorkerComm>>,
+    /// Leader-side ends of the per-worker transport links, by worker id.
+    leader_links: Vec<Box<dyn Connection>>,
     pub net: NetworkModel,
     pub var_meter: VarianceRatio,
     pub spa_meter: SparsityMeter,
@@ -56,7 +67,9 @@ impl Cluster {
     where
         F: FnMut() -> Box<dyn Compressor>,
     {
-        let comm = (0..workers)
+        let transport = InProcTransport::new();
+        let mut listener = transport.listen("cluster").expect("in-process listen");
+        let comm: Vec<Option<WorkerComm>> = (0..workers)
             .map(|w| {
                 Some(WorkerComm {
                     compressors: layer_dims.iter().map(|_| make_compressor()).collect(),
@@ -68,13 +81,23 @@ impl Cluster {
                         Xoshiro256pp::for_worker(seed ^ 0xC10C, w),
                         layer_dims.iter().sum::<usize>().max(1 << 12) * 2,
                     ),
+                    conn: transport
+                        .connect("cluster", &Hello::new(w as u32))
+                        .expect("in-process connect"),
+                    wire: Vec::new(),
+                    frame_buf: Vec::new(),
+                    dense_tx: Vec::new(),
+                    dense_bytes: Vec::new(),
                 })
             })
             .collect();
+        let leader_links: Vec<Box<dyn Connection>> =
+            crate::transport::accept_n(listener.as_mut(), workers).expect("in-process accept");
         Self {
             workers,
             layers: layer_dims.to_vec(),
             comm,
+            leader_links,
             net: NetworkModel::commodity_1g(),
             var_meter: VarianceRatio::default(),
             spa_meter: SparsityMeter::default(),
@@ -84,15 +107,17 @@ impl Cluster {
     }
 
     /// One synchronization round. `grads[w][l]` is worker `w`'s gradient for
-    /// layer `l`. Sparsification + encoding run on one scoped thread per
-    /// worker; the leader decodes and averages. Returns per-layer updates.
+    /// layer `l`. Sparsification + encoding + sending run on one scoped
+    /// thread per worker; the leader receives from each link in worker-id
+    /// order, decodes and averages. Returns per-layer updates.
     pub fn round(&mut self, grads: &[Vec<Vec<f32>>]) -> Vec<LayerUpdate> {
         assert_eq!(grads.len(), self.workers);
         let layers = self.layers.clone();
-        let (tx, rx) = mpsc::channel::<(usize, Vec<(Vec<u8>, WireStats)>)>();
 
         // Move each worker's comm state into its thread; all workers encode
-        // concurrently, then the states come back via the join handles.
+        // and send concurrently, then the states come back via the joins.
+        // (The link buffers the frames, so workers never block on the
+        // leader.)
         let states: Vec<WorkerComm> = self
             .comm
             .iter_mut()
@@ -101,44 +126,42 @@ impl Cluster {
         let returned: Vec<WorkerComm> = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(self.workers);
             for (w, mut st) in states.into_iter().enumerate() {
-                let tx = tx.clone();
                 let worker_grads = &grads[w];
-                let layer_count = layers.len();
                 handles.push(scope.spawn(move || {
-                    let mut msgs = Vec::with_capacity(layer_count);
                     for (l, g) in worker_grads.iter().enumerate() {
                         let g_norm = crate::tensor::norm2_sq(g) as f64;
                         let stats =
                             st.compressors[l].compress_into(g, &mut st.rand, &mut st.msgs[l]);
                         let msg = &st.msgs[l];
-                        let mut wire = Vec::new();
-                        let bytes = match msg {
+                        let (kind, q_norm): (u8, f64) = match msg {
                             Compressed::Sparse(sg) => {
-                                crate::coding::encode(sg, &mut wire);
-                                wire.len() as u64
+                                crate::coding::encode(sg, &mut st.wire);
+                                (0, msg.norm2_sq())
                             }
-                            _ => (stats.ideal_bits / 8).max(1),
+                            other => {
+                                // Non-sparse messages travel as their
+                                // decoded dense form (their wire-ledger
+                                // entry stays the idealized size).
+                                other.dense_le_bytes_into(
+                                    &mut st.dense_tx,
+                                    &mut st.dense_bytes,
+                                );
+                                (1, msg.norm2_sq())
+                            }
                         };
-                        // Non-sparse messages travel as their decoded dense
-                        // form (bytes still accounted via ideal size).
-                        if wire.is_empty() {
-                            let mut dense = vec![0.0f32; g.len()];
-                            msg.add_into(1.0, &mut dense);
-                            wire = dense.iter().flat_map(|v| v.to_le_bytes()).collect();
-                        }
-                        msgs.push((
-                            wire,
-                            WireStats {
-                                q_norm_sq: msg.norm2_sq(),
-                                g_norm_sq: g_norm,
-                                expected_nnz: stats.expected_nnz,
-                                ideal_bits: stats.ideal_bits,
-                                upload_bytes: bytes,
-                                is_sparse: matches!(msg, Compressed::Sparse(_)),
-                            },
-                        ));
+                        let header = GradHeader {
+                            based_on: l as u64,
+                            g_norm_sq: g_norm,
+                            q_norm_sq: q_norm,
+                            expected_nnz: stats.expected_nnz,
+                            ideal_bits: stats.ideal_bits,
+                            kind,
+                        };
+                        let payload: &[u8] =
+                            if kind == 0 { &st.wire } else { &st.dense_bytes };
+                        frame::encode_grad(&mut st.frame_buf, &header, payload);
+                        st.conn.send(&st.frame_buf).expect("leader link alive");
                     }
-                    tx.send((w, msgs)).expect("leader alive");
                     st
                 }));
             }
@@ -147,12 +170,11 @@ impl Cluster {
                 .map(|h| h.join().expect("worker thread"))
                 .collect()
         });
-        drop(tx);
         for (slot, st) in self.comm.iter_mut().zip(returned) {
             *slot = Some(st);
         }
 
-        // Leader: decode + average.
+        // Leader: receive in worker-id order, decode + average.
         let mut updates: Vec<LayerUpdate> = layers
             .iter()
             .map(|&dim| LayerUpdate {
@@ -164,41 +186,43 @@ impl Cluster {
         let inv_m = 1.0 / self.workers as f32;
         let mut per_worker_bytes = vec![0u64; self.workers];
         let mut decode_slot = crate::sparsify::SparseGrad::empty(0);
-        for (w, msgs) in rx.iter() {
-            for (l, (wire, stats)) in msgs.into_iter().enumerate() {
-                let upd = &mut updates[l];
-                if stats.is_sparse {
-                    crate::coding::decode_into(&wire, &mut decode_slot).expect("self-encoded");
+        let mut rx_frame: Vec<u8> = Vec::new();
+        for (w, link) in self.leader_links.iter_mut().enumerate() {
+            for (l, upd) in updates.iter_mut().enumerate() {
+                link.recv(&mut rx_frame).expect("worker frame");
+                let (header, payload) = match frame::decode(&rx_frame).expect("self-encoded") {
+                    MsgView::Grad { header, payload } => (header, payload),
+                    other => panic!("unexpected message from worker: {other:?}"),
+                };
+                let upload = if header.kind == 0 {
+                    crate::coding::decode_into(payload, &mut decode_slot)
+                        .expect("self-encoded");
                     decode_slot.add_into(inv_m, &mut upd.grad);
+                    payload.len() as u64
                 } else {
-                    // Dense f32 payload.
-                    for (i, chunk) in wire.chunks_exact(4).enumerate() {
-                        upd.grad[i] +=
-                            inv_m * f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
-                    }
-                }
-                upd.upload_bytes += stats.upload_bytes;
-                upd.ideal_bits += stats.ideal_bits;
-                per_worker_bytes[w] += stats.upload_bytes;
-                self.var_meter.record(stats.q_norm_sq, stats.g_norm_sq);
-                self.spa_meter.record(stats.expected_nnz, layers[l].max(1));
-                self.ledger.record(stats.ideal_bits, stats.upload_bytes);
+                    frame::add_dense_le(payload, inv_m, &mut upd.grad);
+                    (header.ideal_bits / 8).max(1)
+                };
+                upd.upload_bytes += upload;
+                upd.ideal_bits += header.ideal_bits;
+                per_worker_bytes[w] += upload;
+                self.var_meter.record(header.q_norm_sq, header.g_norm_sq);
+                self.spa_meter.record(header.expected_nnz, layers[l].max(1));
+                self.ledger.record(header.ideal_bits, upload);
             }
         }
         let broadcast: u64 = layers.iter().map(|&dim| (dim * 4) as u64).sum();
         self.sim_time_s += self.net.round_time_s(&per_worker_bytes, broadcast);
+        // Counters are cumulative across rounds; overwrite the measured
+        // column with their current totals.
+        let measured = self
+            .leader_links
+            .iter()
+            .map(|c| c.counters().bytes_total())
+            .sum();
+        self.ledger.set_measured(measured);
         updates
     }
-}
-
-#[derive(Debug, Clone, Copy)]
-struct WireStats {
-    q_norm_sq: f64,
-    g_norm_sq: f64,
-    expected_nnz: f64,
-    ideal_bits: u64,
-    upload_bytes: u64,
-    is_sparse: bool,
 }
 
 #[cfg(test)]
@@ -233,6 +257,7 @@ mod tests {
             }
         }
         assert!(cluster.ledger.wire_bytes > 0);
+        assert!(cluster.ledger.measured_bytes > 0);
     }
 
     #[test]
@@ -283,5 +308,28 @@ mod tests {
         let upd = cluster.round(&grads);
         assert!(upd[1].grad.iter().all(|&v| v == 0.0));
         assert!(upd[0].upload_bytes >= upd[1].upload_bytes);
+    }
+
+    #[test]
+    fn rounds_are_deterministic_and_measured_bytes_grow() {
+        let dims = [64usize, 32];
+        let grads = grads_for(2, &dims, 56);
+        let run = || {
+            let mut cluster = Cluster::new(2, &dims, 57, || {
+                sparsify::build(Method::GSpar, 0.4, 0.0, 4)
+            });
+            let a = cluster.round(&grads);
+            let m1 = cluster.ledger.measured_bytes;
+            let b = cluster.round(&grads);
+            let m2 = cluster.ledger.measured_bytes;
+            assert!(m2 > m1, "measured column must accumulate across rounds");
+            (a, b, m2)
+        };
+        let (a1, b1, m1) = run();
+        let (a2, b2, m2) = run();
+        for (x, y) in a1.iter().zip(&a2).chain(b1.iter().zip(&b2)) {
+            assert_eq!(x.grad, y.grad, "leader aggregation must be deterministic");
+        }
+        assert_eq!(m1, m2);
     }
 }

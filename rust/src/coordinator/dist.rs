@@ -1,0 +1,574 @@
+//! The multi-process parameter-server runtime: the same SSP-style loop as
+//! [`super::param_server`], but every interaction — weight pulls, gradient
+//! pushes, config distribution, shutdown — crosses a
+//! [`crate::transport::Connection`], so the server and its workers can be
+//! threads in one process ([`run_threads`] over `InProc` or loopback TCP)
+//! or genuinely separate OS processes ([`run_processes`] + the `server` /
+//! `worker` CLI subcommands).
+//!
+//! ## Deterministic round schedule
+//!
+//! The server drives a fixed two-phase schedule per round: first it answers
+//! one weight pull per worker (all against the same weight version), then
+//! it applies one gradient per worker **in worker-id order** (`w ← w − η_t
+//! Q(g)`, stamping a new version each). Workers therefore compute
+//! concurrently — over TCP, in real parallelism — while the *sequence of
+//! weight vectors any worker ever observes* is a pure function of the
+//! config and seed. That is what makes the acceptance criterion testable:
+//! the compressed gradient bytes of every round are bitwise identical
+//! across `InProc` and `Tcp`, and across threads and processes. Staleness
+//! is bounded by construction: a gradient applied at version `v` was based
+//! on a version at least `v − (M−1)`, the classic SSP window for M workers.
+//!
+//! ## Byte accounting
+//!
+//! Next to the α-β *simulated* time the ledger always had, the run reports
+//! a **measured** column: the framed bytes that actually crossed the links
+//! (handshakes, pulls, weights, gradients, shutdowns — payload plus length
+//! prefixes), summed from the per-link [`LinkCounters`].
+
+use crate::config::Method;
+use crate::coordinator::sync::estimate_f_star;
+use crate::data::gen_logistic;
+use crate::metrics::{CurvePoint, RunCurve, SparsityMeter, VarianceRatio};
+use crate::model::{ConvexModel, LogisticModel};
+use crate::rngkit::{RandArray, Xoshiro256pp};
+use crate::sparsify::{self, Compressed, SparseGrad};
+use crate::transport::frame::{self, GradHeader, MsgView};
+use crate::transport::{
+    Connection, Hello, LinkCounters, Listener, TcpTransport, Transport,
+};
+use std::time::Instant;
+
+/// Everything a worker needs to reproduce the run — the server ships this
+/// in the `CONFIG` frame right after accepting, so worker processes only
+/// need an address and an id on their command line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DistConfig {
+    pub workers: usize,
+    /// Synchronization rounds; total pushes = `rounds × workers`.
+    pub rounds: usize,
+    pub method: Method,
+    pub rho: f32,
+    /// QSGD quantization width (only for `Method::Qsgd`).
+    pub qsgd_bits: u32,
+    pub batch: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// Synthetic logistic-regression dataset parameters (every participant
+    /// regenerates the dataset locally — it is seed-deterministic).
+    pub n: usize,
+    pub d: usize,
+    pub c1: f32,
+    pub c2: f32,
+    pub reg: f32,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            rounds: 500,
+            method: Method::GSpar,
+            rho: 0.1,
+            qsgd_bits: 4,
+            batch: 8,
+            lr: 0.5,
+            seed: 42,
+            n: 1024,
+            d: 2048,
+            c1: 0.6,
+            c2: 0.25,
+            reg: 1.0 / (10.0 * 1024.0),
+        }
+    }
+}
+
+const CONFIG_VERSION: u8 = 1;
+
+impl DistConfig {
+    /// Serialize for the `CONFIG` frame (fixed-width LE fields).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64);
+        out.push(CONFIG_VERSION);
+        let method = Method::all()
+            .iter()
+            .position(|&m| m == self.method)
+            .expect("method in Method::all") as u8;
+        out.push(method);
+        for v in [
+            self.workers as u32,
+            self.rounds as u32,
+            self.batch as u32,
+            self.n as u32,
+            self.d as u32,
+            self.qsgd_bits,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        for v in [self.rho, self.lr, self.c1, self.c2, self.reg] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> anyhow::Result<Self> {
+        anyhow::ensure!(buf.len() == 2 + 6 * 4 + 8 + 5 * 4, "config frame length");
+        anyhow::ensure!(buf[0] == CONFIG_VERSION, "config version {}", buf[0]);
+        let method = *Method::all()
+            .get(buf[1] as usize)
+            .ok_or_else(|| anyhow::anyhow!("unknown method id {}", buf[1]))?;
+        let u32_at = |i: usize| {
+            u32::from_le_bytes(buf[2 + 4 * i..2 + 4 * (i + 1)].try_into().unwrap())
+        };
+        let f_base = 2 + 6 * 4 + 8;
+        let f32_at = |i: usize| {
+            f32::from_le_bytes(buf[f_base + 4 * i..f_base + 4 * (i + 1)].try_into().unwrap())
+        };
+        Ok(Self {
+            workers: u32_at(0) as usize,
+            rounds: u32_at(1) as usize,
+            batch: u32_at(2) as usize,
+            n: u32_at(3) as usize,
+            d: u32_at(4) as usize,
+            qsgd_bits: u32_at(5),
+            method,
+            seed: u64::from_le_bytes(buf[26..34].try_into().unwrap()),
+            rho: f32_at(0),
+            lr: f32_at(1),
+            c1: f32_at(2),
+            c2: f32_at(3),
+            reg: f32_at(4),
+        })
+    }
+}
+
+/// Outcome of a distributed run, as observed by the server.
+#[derive(Debug, Clone)]
+pub struct DistReport {
+    pub curve: RunCurve,
+    pub final_loss: f64,
+    /// Server-side weight version (== total applied pushes).
+    pub versions: u64,
+    /// Max `applied_version − based_on` over all pushes (≤ workers − 1 by
+    /// the round schedule).
+    pub max_observed_staleness: u64,
+    /// FNV-1a over every gradient payload in apply order — two backends
+    /// producing the same digest shipped bitwise-identical gradients.
+    pub grad_digest: u64,
+    /// Final weights (for cross-backend parity assertions).
+    pub final_w: Vec<f32>,
+    /// Measured framed bytes the server sent / received across all links.
+    pub measured_tx_bytes: u64,
+    pub measured_rx_bytes: u64,
+    /// α-β simulated communication time over the gradient payload bytes.
+    pub sim_time_s: f64,
+}
+
+fn fnv1a(mut hash: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    hash
+}
+
+/// Run the server side: accept `cfg.workers` connections, ship the config,
+/// drive the round schedule, and report. The caller owns the listener, so
+/// backends and tests control the address.
+pub fn serve(listener: &mut dyn Listener, cfg: &DistConfig) -> anyhow::Result<DistReport> {
+    let d = cfg.d;
+    let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
+    let model = LogisticModel::new(cfg.reg);
+
+    // ---- accept + config distribution ----
+    let mut conns: Vec<Box<dyn Connection>> = crate::transport::accept_n(listener, cfg.workers)?;
+    let counters: Vec<LinkCounters> = conns.iter().map(|c| c.counters()).collect();
+    let cfg_bytes = cfg.encode();
+    let mut txbuf = Vec::new();
+    for conn in conns.iter_mut() {
+        frame::encode_config(&mut txbuf, &cfg_bytes);
+        conn.send(&txbuf)?;
+    }
+
+    // ---- training state ----
+    let mut w = vec![0.0f32; d];
+    let mut version = 0u64;
+    let mut t = 0u64;
+    let total = (cfg.rounds * cfg.workers) as u64;
+    let record_every = (total / 50).max(1);
+    let mut curve = RunCurve::new(format!("dist-{}(M={})", cfg.method, cfg.workers));
+    let mut var_meter = VarianceRatio::default();
+    let mut spa_meter = SparsityMeter::default();
+    let net = crate::comm::NetworkModel::commodity_1g();
+    let mut sim_time = 0.0f64;
+    let mut max_stale = 0u64;
+    let mut digest = 0xCBF2_9CE4_8422_2325u64; // FNV-1a offset basis
+    let mut rxbuf = Vec::new();
+    let mut sg = SparseGrad::empty(0);
+    let mut round_bytes = vec![0u64; cfg.workers];
+    let start = Instant::now();
+
+    for _round in 0..cfg.rounds {
+        // Phase 1: answer one pull per worker, all at the same version —
+        // the weights frame is identical for everyone, so encode it once.
+        frame::encode_weights(&mut txbuf, version, &w);
+        for conn in conns.iter_mut() {
+            conn.recv(&mut rxbuf)?;
+            match frame::decode(&rxbuf)? {
+                MsgView::Pull => {}
+                _ => anyhow::bail!("expected pull from {}", conn.peer()),
+            }
+            conn.send(&txbuf)?;
+        }
+        // Phase 2: apply one gradient per worker, in worker-id order.
+        for (wid, conn) in conns.iter_mut().enumerate() {
+            conn.recv(&mut rxbuf)?;
+            let (header, payload) = match frame::decode(&rxbuf)? {
+                MsgView::Grad { header, payload } => (header, payload),
+                _ => anyhow::bail!("expected gradient from {}", conn.peer()),
+            };
+            t += 1;
+            let eta = cfg.lr / (1.0 + t as f32 / cfg.workers as f32);
+            if header.kind == 0 {
+                crate::coding::decode_into(payload, &mut sg)?;
+                // The codec only checks internal consistency; the declared
+                // dimension must also match ours or `add_into` would panic.
+                anyhow::ensure!(
+                    sg.d as usize == d,
+                    "gradient dimension {} != configured {d}",
+                    sg.d
+                );
+                sg.add_into(-eta, &mut w);
+            } else {
+                anyhow::ensure!(payload.len() == 4 * d, "dense payload length");
+                frame::add_dense_le(payload, -eta, &mut w);
+            }
+            max_stale = max_stale.max(version.saturating_sub(header.based_on));
+            version += 1;
+            digest = fnv1a(digest, payload);
+            var_meter.record(header.q_norm_sq, header.g_norm_sq);
+            spa_meter.record(header.expected_nnz, d);
+            // Wire-column convention shared with sync/cluster: sparse
+            // messages cost their codec bytes; quantized/dense fallbacks
+            // (which travel as raw f32 only because no byte codec exists
+            // for them) are ledgered at their idealized size. The measured
+            // column records what actually crossed the link either way.
+            let upload = if header.kind == 0 {
+                payload.len() as u64
+            } else {
+                (header.ideal_bits / 8).max(1)
+            };
+            curve.ledger.record(header.ideal_bits, upload);
+            round_bytes[wid] = upload;
+            if t % record_every == 0 || t == total {
+                curve.points.push(CurvePoint {
+                    data_passes: (t * cfg.batch as u64) as f64 / ds.n() as f64,
+                    loss: model.loss(&ds, &w),
+                    comm_bits: curve.ledger.wire_bytes * 8,
+                    wall_ms: start.elapsed().as_secs_f64() * 1e3,
+                });
+            }
+        }
+        sim_time += net.round_time_s(&round_bytes, (d * 4) as u64);
+    }
+
+    // ---- shutdown: each worker sends one final pull ----
+    for conn in conns.iter_mut() {
+        conn.recv(&mut rxbuf)?;
+        match frame::decode(&rxbuf)? {
+            MsgView::Pull => {}
+            _ => anyhow::bail!("expected final pull from {}", conn.peer()),
+        }
+        frame::encode_shutdown(&mut txbuf);
+        conn.send(&txbuf)?;
+    }
+
+    let measured_tx: u64 = counters.iter().map(|c| c.bytes_tx()).sum();
+    let measured_rx: u64 = counters.iter().map(|c| c.bytes_rx()).sum();
+    curve.ledger.measured_bytes = measured_tx + measured_rx;
+    curve.var_ratio = var_meter.value();
+    curve.sparsity = spa_meter.value();
+    let final_loss = model.loss(&ds, &w);
+    Ok(DistReport {
+        curve,
+        final_loss,
+        versions: version,
+        max_observed_staleness: max_stale,
+        grad_digest: digest,
+        final_w: w,
+        measured_tx_bytes: measured_tx,
+        measured_rx_bytes: measured_rx,
+        sim_time_s: sim_time,
+    })
+}
+
+/// Run the worker side over an established connection. `worker_id` must
+/// match the id in the connection's hello (it seeds the RNG streams).
+pub fn run_worker(conn: &mut dyn Connection, worker_id: u32) -> anyhow::Result<()> {
+    let mut rxbuf = Vec::new();
+    let mut txbuf = Vec::new();
+    conn.recv(&mut rxbuf)?;
+    let cfg = match frame::decode(&rxbuf)? {
+        MsgView::Config { bytes } => DistConfig::decode(bytes)?,
+        _ => anyhow::bail!("expected config from server"),
+    };
+    let d = cfg.d;
+    let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
+    let model = LogisticModel::new(cfg.reg);
+    // Same per-worker RNG streams as the in-process parameter server, so a
+    // worker's gradient sequence is comparable across deployments.
+    let mut rng = Xoshiro256pp::for_worker(cfg.seed, worker_id as usize);
+    let mut rand = RandArray::new(
+        Xoshiro256pp::for_worker(cfg.seed ^ 0x9511, worker_id as usize),
+        (4 * d).max(1 << 12),
+    );
+    // Same compressor construction as the sync trainer (eps = C1·C2 for
+    // GSpar-exact), so sync-vs-dist comparisons compare like with like.
+    let mut compressor = sparsify::build(cfg.method, cfg.rho, cfg.c1 * cfg.c2, cfg.qsgd_bits);
+    let mut msg = Compressed::Sparse(SparseGrad::empty(d));
+    let mut w_local: Vec<f32> = Vec::with_capacity(d);
+    let mut grad = vec![0.0f32; d];
+    let mut wire = Vec::new();
+    let mut dense_tx: Vec<f32> = Vec::new();
+    let mut dense_scratch: Vec<u8> = Vec::new();
+    let mut idx = Vec::with_capacity(cfg.batch);
+
+    loop {
+        frame::encode_pull(&mut txbuf);
+        conn.send(&txbuf)?;
+        conn.recv(&mut rxbuf)?;
+        let (version, w_bytes) = match frame::decode(&rxbuf)? {
+            MsgView::Shutdown => break,
+            MsgView::Weights { version, w_bytes } => (version, w_bytes),
+            _ => anyhow::bail!("expected weights or shutdown"),
+        };
+        anyhow::ensure!(w_bytes.len() == 4 * d, "weights length");
+        frame::weights_into(w_bytes, &mut w_local);
+        idx.clear();
+        for _ in 0..cfg.batch {
+            idx.push(rng.next_below(ds.n() as u64) as usize);
+        }
+        model.grad_minibatch(&ds, &w_local, &idx, &mut grad);
+        let g_norm_sq = crate::tensor::norm2_sq(&grad) as f64;
+        let stats = compressor.compress_into(&grad, &mut rand, &mut msg);
+        let q_norm_sq = msg.norm2_sq();
+        let (kind, payload): (u8, &[u8]) = match &msg {
+            Compressed::Sparse(sg) => {
+                crate::coding::encode(sg, &mut wire);
+                (0, &wire)
+            }
+            other => {
+                // Quantized/dense methods travel as raw dense f32 — our
+                // byte codec covers the sparse format only. Both buffers
+                // are persistent across rounds.
+                other.dense_le_bytes_into(&mut dense_tx, &mut dense_scratch);
+                (1, &dense_scratch)
+            }
+        };
+        let header = GradHeader {
+            based_on: version,
+            g_norm_sq,
+            q_norm_sq,
+            expected_nnz: stats.expected_nnz,
+            ideal_bits: stats.ideal_bits,
+            kind,
+        };
+        frame::encode_grad(&mut txbuf, &header, payload);
+        conn.send(&txbuf)?;
+    }
+    Ok(())
+}
+
+/// Launch a full cluster as threads in this process: one server plus
+/// `cfg.workers` workers, all talking through `transport` (use
+/// [`crate::transport::InProcTransport`] for channels or [`TcpTransport`]
+/// with a `127.0.0.1:0` bind for real loopback sockets).
+pub fn run_threads<T>(transport: T, bind_addr: &str, cfg: &DistConfig) -> anyhow::Result<DistReport>
+where
+    T: Transport + Clone + 'static,
+{
+    let mut listener = transport.listen(bind_addr)?;
+    let addr = listener.local_addr();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for wid in 0..cfg.workers {
+            let transport = transport.clone();
+            let addr = addr.clone();
+            handles.push(scope.spawn(move || -> anyhow::Result<()> {
+                let mut conn = transport.connect(&addr, &Hello::new(wid as u32))?;
+                run_worker(conn.as_mut(), wid as u32)
+            }));
+        }
+        let report = serve(listener.as_mut(), cfg);
+        // Join every worker before propagating, and surface the server's
+        // error first — it is the root cause when both sides fail.
+        let worker_results: Vec<anyhow::Result<()>> = handles
+            .into_iter()
+            .map(|h| h.join().expect("worker thread panicked"))
+            .collect();
+        let report = report?;
+        for r in worker_results {
+            r?;
+        }
+        Ok(report)
+    })
+}
+
+/// Launch a real multi-process cluster over loopback TCP: the server runs
+/// in this process, and each worker is spawned as `bin worker --addr …
+/// --id …` (pass [`std::env::current_exe`] for `bin` from the `gsparse`
+/// binary itself, or `CARGO_BIN_EXE_gsparse` from integration tests).
+pub fn run_processes(
+    bin: &std::path::Path,
+    bind_addr: &str,
+    cfg: &DistConfig,
+) -> anyhow::Result<DistReport> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+
+    let transport = TcpTransport::new();
+    let mut listener = transport.listen(bind_addr)?;
+    let addr = listener.local_addr();
+    let mut children = Vec::with_capacity(cfg.workers);
+    for wid in 0..cfg.workers {
+        let child = std::process::Command::new(bin)
+            .arg("worker")
+            .arg("--addr")
+            .arg(&addr)
+            .arg("--id")
+            .arg(wid.to_string())
+            .stdin(std::process::Stdio::null())
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("spawning worker {wid} ({}): {e}", bin.display()))?;
+        children.push(child);
+    }
+    // Watchdog: `serve` blocks in accept/recv, so a worker that dies
+    // before (or instead of) participating would hang the server forever.
+    // On an unsuccessful early exit, poison the listener with an
+    // out-of-range hello — serve's validation turns that into a clean
+    // error, which unwinds the whole launch.
+    let children = Arc::new(Mutex::new(children));
+    let done = Arc::new(AtomicBool::new(false));
+    let watchdog = {
+        let children = Arc::clone(&children);
+        let done = Arc::clone(&done);
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            while !done.load(Ordering::Acquire) {
+                let failed = {
+                    let mut kids = children.lock().expect("children lock");
+                    kids.iter_mut().any(|c| {
+                        matches!(c.try_wait(), Ok(Some(status)) if !status.success())
+                    })
+                };
+                if failed {
+                    let _ = TcpTransport::new().connect(&addr, &Hello::new(u32::MAX));
+                    return;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+        })
+    };
+    let report = serve(listener.as_mut(), cfg);
+    done.store(true, Ordering::Release);
+    let _ = watchdog.join();
+    let mut kids = children.lock().expect("children lock");
+    for (wid, child) in kids.iter_mut().enumerate() {
+        if report.is_err() {
+            let _ = child.kill();
+        }
+        let status = child.wait()?;
+        if report.is_ok() {
+            anyhow::ensure!(status.success(), "worker {wid} exited with {status}");
+        }
+    }
+    report
+}
+
+/// Convenience wrapper used by the figure drivers and the example: run the
+/// distributed logistic-regression workload and also report the dense
+/// baseline `f*` so losses print as suboptimality.
+pub fn f_star_for(cfg: &DistConfig) -> f64 {
+    let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
+    let model = LogisticModel::new(cfg.reg);
+    estimate_f_star(&ds, &model, 200, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::InProcTransport;
+
+    fn small_cfg() -> DistConfig {
+        DistConfig {
+            workers: 3,
+            rounds: 60,
+            n: 192,
+            d: 96,
+            batch: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn config_roundtrip() {
+        let cfg = DistConfig {
+            method: Method::Qsgd,
+            seed: 0xDEADBEEF,
+            ..small_cfg()
+        };
+        let bytes = cfg.encode();
+        assert_eq!(DistConfig::decode(&bytes).unwrap(), cfg);
+        assert!(DistConfig::decode(&bytes[..bytes.len() - 1]).is_err());
+        let mut bad = bytes.clone();
+        bad[1] = 200;
+        assert!(DistConfig::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn inproc_cluster_converges_and_counts_bytes() {
+        let cfg = small_cfg();
+        let report = run_threads(InProcTransport::new(), "ps", &cfg).unwrap();
+        let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
+        let model = LogisticModel::new(cfg.reg);
+        let f0 = model.loss(&ds, &vec![0.0; cfg.d]);
+        assert!(report.final_loss < f0, "{f0} -> {}", report.final_loss);
+        assert_eq!(report.versions, (cfg.rounds * cfg.workers) as u64);
+        assert!(report.max_observed_staleness <= cfg.workers as u64 - 1);
+        assert!(report.curve.ledger.wire_bytes > 0);
+        // Measured framing must exceed the payload bytes it carries.
+        assert!(report.curve.ledger.measured_bytes > report.curve.ledger.wire_bytes);
+        assert!(report.sim_time_s > 0.0);
+        assert!(!report.curve.points.is_empty());
+    }
+
+    #[test]
+    fn inproc_runs_are_deterministic() {
+        let cfg = small_cfg();
+        let a = run_threads(InProcTransport::new(), "a", &cfg).unwrap();
+        let b = run_threads(InProcTransport::new(), "b", &cfg).unwrap();
+        assert_eq!(a.grad_digest, b.grad_digest);
+        assert_eq!(a.final_w, b.final_w);
+        assert_eq!(
+            a.curve.ledger.measured_bytes,
+            b.curve.ledger.measured_bytes
+        );
+    }
+
+    #[test]
+    fn dense_method_travels_as_raw_f32() {
+        let cfg = DistConfig {
+            method: Method::Dense,
+            rounds: 4,
+            ..small_cfg()
+        };
+        let report = run_threads(InProcTransport::new(), "dense", &cfg).unwrap();
+        // Every gradient frame carries d × 4 payload bytes.
+        assert_eq!(
+            report.curve.ledger.wire_bytes,
+            (cfg.rounds * cfg.workers * cfg.d * 4) as u64
+        );
+    }
+}

@@ -16,12 +16,19 @@
 //!   gradients over channels (§2's deployment style, §3's "asynchronous
 //!   algorithms can also be used with our technique").
 
+//! * [`dist`] — the same parameter-server loop over the pluggable
+//!   [`crate::transport`] layer, deployable as threads (`InProc` or loopback
+//!   TCP) or as genuinely separate OS processes (`gsparse server` /
+//!   `gsparse worker`).
+
 pub mod async_engine;
 pub mod cluster;
+pub mod dist;
 pub mod param_server;
 pub mod sync;
 
 pub use async_engine::{AsyncReport, AsyncSvmEngine};
 pub use cluster::{Cluster, LayerUpdate};
+pub use dist::{DistConfig, DistReport};
 pub use param_server::{run_param_server, PsConfig, PsReport};
 pub use sync::{train_convex, OptKind, SvrgVariant, TrainOptions};

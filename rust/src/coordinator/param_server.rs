@@ -5,10 +5,13 @@
 //!
 //! Topology: one server thread owns the weights; W worker threads loop
 //! { pull weights → minibatch gradient → sparsify → **encode** → push }.
-//! Messages cross real `mpsc` channels as wire bytes (the same §3.3 codec
-//! as the synchronous path), so this is an honest distributed-system
-//! simulation at the process level. The server applies updates as they
-//! arrive (`w ← w − η_t Q(g)`) and stamps each weight version. The
+//! Pushes cross the in-process [`crate::transport`] as framed wire bytes
+//! (the same §3.3 codec as the synchronous path, behind the same
+//! `Transport` abstraction the TCP runtime uses), so this is an honest
+//! distributed-system simulation at the process level, and the transport's
+//! per-link counters give the report a *measured* byte column. The server
+//! applies updates as they arrive (`w ← w − η_t Q(g)`) and stamps each
+//! weight version. The
 //! **stale-synchronous-parallel bound** gates the *fastest* worker: worker
 //! `m` may start its `c`-th iteration only while
 //! `c − min_m' clock(m') ≤ max_staleness`, the classic SSP condition — the
@@ -20,8 +23,10 @@ use crate::metrics::{CurvePoint, RunCurve, VarianceRatio};
 use crate::model::ConvexModel;
 use crate::rngkit::{RandArray, Xoshiro256pp};
 use crate::sparsify::{self, Compressed};
+use crate::transport::frame::{self, GradHeader, MsgView};
+use crate::transport::{Connection, Hello, InProcTransport, Mux, Transport};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 /// Parameter-server run configuration.
@@ -66,21 +71,14 @@ pub struct PsReport {
     /// Max observed staleness at pull time.
     pub max_observed_staleness: u64,
     pub wire_bytes: u64,
+    /// Measured framed bytes on the worker→server links (payloads plus
+    /// length prefixes plus handshakes), from the transport counters.
+    pub measured_bytes: u64,
 }
 
 /// Shared weight store with versioning (server publishes, workers pull).
 struct WeightStore {
     state: Mutex<(Vec<f32>, u64)>, // (weights, version)
-}
-
-/// A worker → server message: encoded gradient + the version it was
-/// computed against (for staleness accounting).
-struct Push {
-    wire: Vec<u8>,
-    dense_fallback: Option<Vec<f32>>,
-    based_on: u64,
-    q_norm_sq: f64,
-    g_norm_sq: f64,
 }
 
 /// Run the asynchronous parameter server on a convex model.
@@ -106,7 +104,30 @@ pub fn run_param_server(
     // backlog so "staleness" cannot hide as pipeline lag while the server
     // is busy (e.g. taking a loss snapshot).
     let sent = Arc::new(AtomicU64::new(0));
-    let (tx, rx) = mpsc::channel::<Push>();
+    // Worker → server pushes travel through the transport layer: one
+    // framed in-process link per worker, multiplexed into arrival order at
+    // the server — same abstraction, different backend, as the TCP runtime.
+    let transport = InProcTransport::new();
+    let mut listener = transport.listen("ssp-ps").expect("in-process listen");
+    let mut worker_conns: Vec<Option<Box<dyn Connection>>> = (0..cfg.workers)
+        .map(|wid| {
+            Some(
+                transport
+                    .connect("ssp-ps", &Hello::new(wid as u32))
+                    .expect("in-process connect"),
+            )
+        })
+        .collect();
+    let server_ends = crate::transport::accept_n(listener.as_mut(), cfg.workers)
+        .expect("in-process accept");
+    let link_counters: Vec<_> = server_ends.iter().map(|c| c.counters()).collect();
+    let mut mux = Mux::new(
+        server_ends
+            .into_iter()
+            .enumerate()
+            .map(|(wid, conn)| (wid as u32, conn))
+            .collect(),
+    );
     let start = Instant::now();
 
     let mut curve = RunCurve::new(format!("ps-{}(st={})", cfg.method, cfg.max_staleness));
@@ -123,7 +144,7 @@ pub fn run_param_server(
             let clocks = Arc::clone(&clocks);
             let applied = Arc::clone(&applied);
             let sent = Arc::clone(&sent);
-            let tx = tx.clone();
+            let mut conn = worker_conns[wid].take().expect("connection unclaimed");
             let cfg = cfg.clone();
             scope.spawn(move || {
                 let mut rng = Xoshiro256pp::for_worker(cfg.seed, wid);
@@ -139,6 +160,12 @@ pub fn run_param_server(
                 // in place; only the wire bytes are freshly allocated, since
                 // they are moved into the channel.
                 let mut msg = Compressed::Sparse(crate::sparsify::SparseGrad::empty(d));
+                // Reused per-push buffers: codec bytes, the dense fallback,
+                // and the framed message (the transport copies the frame
+                // into the link).
+                let mut wire: Vec<u8> = Vec::new();
+                let mut dense_tx: Vec<f32> = Vec::new();
+                let mut frame_buf: Vec<u8> = Vec::new();
                 let mut my_version = 0u64;
                 let (clock_mx, clock_cv) = &*clocks;
                 loop {
@@ -197,30 +224,31 @@ pub fn run_param_server(
                         .collect();
                     model.grad_minibatch(ds, &w_local, &idx, &mut grad);
                     let g_norm = crate::tensor::norm2_sq(&grad) as f64;
-                    let _stats = compressor.compress_into(&grad, &mut rand, &mut msg);
+                    let stats = compressor.compress_into(&grad, &mut rand, &mut msg);
                     let q_norm = msg.norm2_sq();
-                    let push = match &msg {
+                    let (kind, payload): (u8, &[u8]) = match &msg {
                         Compressed::Sparse(sg) => {
-                            let mut wire = Vec::new();
                             crate::coding::encode(sg, &mut wire);
-                            Push {
-                                wire,
-                                dense_fallback: None,
-                                based_on: my_version,
-                                q_norm_sq: q_norm,
-                                g_norm_sq: g_norm,
-                            }
+                            (0, &wire)
                         }
-                        other => Push {
-                            wire: Vec::new(),
-                            dense_fallback: Some(other.to_dense()),
-                            based_on: my_version,
-                            q_norm_sq: q_norm,
-                            g_norm_sq: g_norm,
-                        },
+                        other => {
+                            // Quantized/dense fallback: raw f32 LE bytes,
+                            // through the persistent scratch buffers.
+                            other.dense_le_bytes_into(&mut dense_tx, &mut wire);
+                            (1, &wire)
+                        }
                     };
+                    let header = GradHeader {
+                        based_on: my_version,
+                        g_norm_sq: g_norm,
+                        q_norm_sq: q_norm,
+                        expected_nnz: stats.expected_nnz,
+                        ideal_bits: stats.ideal_bits,
+                        kind,
+                    };
+                    frame::encode_grad(&mut frame_buf, &header, payload);
                     sent.fetch_add(1, Ordering::Release);
-                    let send_failed = tx.send(push).is_err();
+                    let send_failed = conn.send(&frame_buf).is_err();
                     // Advance this worker's SSP clock and wake gated peers.
                     {
                         let mut cl = clock_mx.lock().unwrap();
@@ -239,23 +267,28 @@ pub fn run_param_server(
                 clock_cv.notify_all();
             });
         }
-        drop(tx);
-
         // ---- server (this thread) ----
         let mut t = 0u64;
         let record_every = (cfg.total_pushes / 50).max(1) as u64;
-        for push in rx.iter() {
+        let mut decode_slot = crate::sparsify::SparseGrad::empty(0);
+        while let Some((_wid, frame_bytes)) = mux.recv() {
+            let frame_bytes = frame_bytes.expect("worker link healthy");
+            let (header, payload) = match frame::decode(&frame_bytes).expect("worker-encoded") {
+                MsgView::Grad { header, payload } => (header, payload),
+                other => panic!("unexpected message from worker: {other:?}"),
+            };
             t += 1;
             let eta = cfg.lr / (1.0 + (t as f32 / cfg.workers as f32));
             {
                 let mut guard = store.state.lock().unwrap();
                 let (ref mut w, ref mut version) = *guard;
-                if let Some(dense) = &push.dense_fallback {
-                    crate::tensor::axpy(-eta, dense, w);
+                if header.kind == 0 {
+                    crate::coding::decode_into(payload, &mut decode_slot)
+                        .expect("worker-encoded");
+                    decode_slot.add_into(-eta, w);
+                    wire_bytes += payload.len() as u64;
                 } else {
-                    let sg = crate::coding::decode(&push.wire).expect("worker-encoded");
-                    sg.add_into(-eta, w);
-                    wire_bytes += push.wire.len() as u64;
+                    frame::add_dense_le(payload, -eta, w);
                 }
                 *version += 1;
             }
@@ -268,8 +301,8 @@ pub fn run_param_server(
                 drop(clock_mx.lock().unwrap());
                 clock_cv.notify_all();
             }
-            var_meter.record(push.q_norm_sq, push.g_norm_sq);
-            let _ = push.based_on;
+            var_meter.record(header.q_norm_sq, header.g_norm_sq);
+            let _ = header.based_on;
             if t % record_every == 0 {
                 let w_snapshot = store.state.lock().unwrap().0.clone();
                 curve.points.push(CurvePoint {
@@ -284,7 +317,9 @@ pub fn run_param_server(
 
     let (w, versions) = store.state.lock().unwrap().clone();
     let final_loss = model.loss(ds, &w);
+    let measured_bytes: u64 = link_counters.iter().map(|c| c.bytes_total()).sum();
     curve.var_ratio = var_meter.value();
+    curve.ledger.set_measured(measured_bytes);
     PsReport {
         curve,
         final_loss,
@@ -292,6 +327,7 @@ pub fn run_param_server(
         staleness_stalls: stalls.load(Ordering::Relaxed),
         max_observed_staleness: max_stale.load(Ordering::Relaxed),
         wire_bytes,
+        measured_bytes,
     }
 }
 

@@ -16,6 +16,8 @@ use crate::model::ConvexModel;
 use crate::opt::LrSchedule;
 use crate::rngkit::{RandArray, Xoshiro256pp};
 use crate::sparsify::{self, Compressed, Compressor, SparseGrad};
+use crate::transport::frame::{self, GradHeader, MsgView};
+use crate::transport::{Connection, Hello, InProcTransport, Transport};
 use std::time::Instant;
 
 /// Which optimizer the synchronous loop runs.
@@ -70,7 +72,8 @@ impl Default for TrainOptions {
 
 /// Per-worker state for the simulated cluster. The message buffer is
 /// persistent: `compress_into` reuses it every round, so the steady-state
-/// compression path allocates nothing.
+/// compression path allocates nothing. The worker's end of the in-process
+/// transport link carries every message to the master as framed bytes.
 struct Worker {
     shard: Vec<usize>,
     rng: Xoshiro256pp,
@@ -79,6 +82,7 @@ struct Worker {
     grad: Vec<f32>,
     ref_grad: Vec<f32>,
     msg: Compressed,
+    conn: Box<dyn Connection>,
 }
 
 impl Worker {
@@ -106,6 +110,11 @@ pub fn train_convex(
     let m = cfg.workers;
     let start = Instant::now();
 
+    // Worker → master messages cross the in-process transport as framed
+    // wire bytes, so the ledger gains a measured column next to the
+    // idealized one (same trait, same framing as the TCP runtime).
+    let transport = InProcTransport::new();
+    let mut listener = transport.listen("sync").expect("in-process listen");
     let mut workers: Vec<Worker> = (0..m)
         .map(|w| Worker {
             shard: shard_indices(ds.n(), w, m),
@@ -118,8 +127,14 @@ pub fn train_convex(
             grad: vec![0.0; d],
             ref_grad: vec![0.0; d],
             msg: Compressed::Sparse(SparseGrad::empty(d)),
+            conn: transport
+                .connect("sync", &Hello::new(w as u32))
+                .expect("in-process connect"),
         })
         .collect();
+    let mut master_links: Vec<Box<dyn Connection>> =
+        crate::transport::accept_n(listener.as_mut(), m).expect("in-process accept");
+    let link_counters: Vec<_> = master_links.iter().map(|c| c.counters()).collect();
 
     let mut w = vec![0.0f32; d];
     let mut v = vec![0.0f32; d]; // averaged update
@@ -146,6 +161,12 @@ pub fn train_convex(
     // allocated inside the training loop.
     let mut decoded: Vec<SparseGrad> = (0..m).map(|_| SparseGrad::empty(0)).collect();
     let mut wire: Vec<u8> = Vec::new();
+    let mut frame_buf: Vec<u8> = Vec::new();
+    let mut rx_frame: Vec<u8> = Vec::new();
+    let mut dense_tx: Vec<f32> = vec![0.0; d];
+    let mut dense_bytes: Vec<u8> = Vec::new();
+    let mut dense_rx: Vec<Vec<f32>> = (0..m).map(|_| Vec::new()).collect();
+    let mut kinds: Vec<u8> = vec![0; m];
     let mut resparsify_p: Vec<f32> = Vec::new();
     let mut resparsify_sg = SparseGrad::empty(d);
 
@@ -177,7 +198,7 @@ pub fn train_convex(
         // ---- Algorithm 1 steps 3–5: local gradients + sparsification ----
         let mut upload_bytes = 0u64;
         let mut all_sparse = true;
-        for (worker, slot) in workers.iter_mut().zip(decoded.iter_mut()) {
+        for (widx, (worker, slot)) in workers.iter_mut().zip(decoded.iter_mut()).enumerate() {
             worker.sample_batch(cfg.batch, &mut batch_idx);
             model.grad_minibatch(ds, &w, &batch_idx, &mut worker.grad);
             if let OptKind::Svrg(variant) = opts.opt {
@@ -202,22 +223,48 @@ pub fn train_convex(
                 worker
                     .compressor
                     .compress_into(&worker.grad, &mut worker.rand, &mut worker.msg);
-            var_meter.record(worker.msg.norm2_sq(), g_norm);
+            let q_norm = worker.msg.norm2_sq();
+            var_meter.record(q_norm, g_norm);
             spa_meter.record(stats.expected_nnz, d);
-            // Honest wire accounting: sparse messages round-trip the codec
-            // into this worker's reused decode slot.
-            let msg_bytes = match &worker.msg {
+            // Honest wire accounting: every message is framed and shipped
+            // over the worker's transport link; the master decodes from
+            // what actually arrived. Sparse messages travel as codec
+            // bytes; quantized/dense ones as raw f32 (their wire ledger
+            // entry stays the idealized byte size, as before).
+            let (kind, msg_bytes): (u8, u64) = match &worker.msg {
                 Compressed::Sparse(sg) => {
                     crate::coding::encode(sg, &mut wire);
-                    crate::coding::decode_into(&wire, slot).expect("self-encoded");
-                    wire.len() as u64
+                    (0, wire.len() as u64)
                 }
-                // Quantized/dense messages: idealized byte size.
-                _ => {
+                other => {
                     all_sparse = false;
-                    (stats.ideal_bits / 8).max(1)
+                    other.dense_le_bytes_into(&mut dense_tx, &mut dense_bytes);
+                    (1, (stats.ideal_bits / 8).max(1))
                 }
             };
+            let header = GradHeader {
+                based_on: t as u64,
+                g_norm_sq: g_norm,
+                q_norm_sq: q_norm,
+                expected_nnz: stats.expected_nnz,
+                ideal_bits: stats.ideal_bits,
+                kind,
+            };
+            let payload: &[u8] = if kind == 0 { &wire } else { &dense_bytes };
+            frame::encode_grad(&mut frame_buf, &header, payload);
+            worker.conn.send(&frame_buf).expect("master link alive");
+            master_links[widx].recv(&mut rx_frame).expect("worker frame");
+            match frame::decode(&rx_frame).expect("self-encoded") {
+                MsgView::Grad { header: h, payload } => {
+                    if h.kind == 0 {
+                        crate::coding::decode_into(payload, slot).expect("self-encoded");
+                    } else {
+                        frame::weights_into(payload, &mut dense_rx[widx]);
+                    }
+                    kinds[widx] = h.kind;
+                }
+                other => panic!("unexpected message from worker: {other:?}"),
+            }
             upload_bytes += msg_bytes;
             curve.ledger.record(stats.ideal_bits, msg_bytes);
         }
@@ -227,11 +274,16 @@ pub fn train_convex(
             let out = agg.reduce_decoded(&decoded, upload_bytes, &mut v);
             sim_time += out.sim_time_s;
         } else {
-            // Mixed/dense/quantized messages: decode-accumulate directly.
+            // Mixed/dense/quantized messages: accumulate what arrived on
+            // the links (decoded sparse slots or raw dense payloads).
             v.fill(0.0);
             let inv_m = 1.0 / m as f32;
-            for worker in workers.iter() {
-                worker.msg.add_into(inv_m, &mut v);
+            for ((kind, dec), den) in kinds.iter().zip(&decoded).zip(&dense_rx) {
+                if *kind == 0 {
+                    dec.add_into(inv_m, &mut v);
+                } else {
+                    crate::tensor::axpy(inv_m, den, &mut v);
+                }
             }
             sim_time += opts
                 .net
@@ -278,6 +330,9 @@ pub fn train_convex(
 
     curve.var_ratio = var_meter.value();
     curve.sparsity = spa_meter.value();
+    curve
+        .ledger
+        .set_measured(link_counters.iter().map(|c| c.bytes_total()).sum());
     let _ = start;
     curve
 }
@@ -364,6 +419,9 @@ mod tests {
         assert!(curve.sparsity < 0.2, "expected sparse transmission");
         assert!(curve.ledger.ideal_bits > 0);
         assert!(curve.ledger.wire_bytes > 0);
+        // The transport counters must have seen every payload byte plus
+        // framing (length prefixes + handshakes).
+        assert!(curve.ledger.measured_bytes > curve.ledger.wire_bytes);
     }
 
     #[test]

@@ -14,6 +14,8 @@
 //!   Algorithm 3) and every baseline (uniform, QSGD, TernGrad, top-k, 1-bit);
 //! * [`coding`] — the §3.3 hybrid wire format and Theorem-4 bit accounting;
 //! * [`comm`] — a simulated cluster (All-Reduce / Broadcast, α-β cost model);
+//! * [`transport`] — the real one: a pluggable framed transport (`InProc`
+//!   channels / TCP sockets) with per-link byte counters, behind one trait;
 //! * [`opt`] — SGD / SVRG / Adam with the paper's variance-scaled step sizes;
 //! * [`coordinator`] — synchronous data-parallel training (Algorithm 1), the
 //!   SVRG master variant (eq. 15), and the §5.3 asynchronous shared-memory
@@ -44,6 +46,7 @@ pub mod rngkit;
 pub mod runtime;
 pub mod sparsify;
 pub mod tensor;
+pub mod transport;
 
 /// Crate version string (reported by the CLI).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

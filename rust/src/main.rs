@@ -6,15 +6,21 @@
 //! * `train [--method ...] [--rho ...] ...` — one synchronous convex run;
 //! * `async-svm [--threads ...] [--scheme ...]` — one Algorithm-4 run;
 //! * `e2e` — the transformer end-to-end driver (same code as the example);
+//! * `server` / `worker` — one role of the real multi-process parameter
+//!   server (TCP; workers receive the full config from the server);
+//! * `dist` — launch a whole loopback cluster from one command (threads by
+//!   default, `--procs` spawns genuine worker processes);
 //! * `version`.
 
 use gsparse::cli::Args;
 use gsparse::config::{AsyncSvmConfig, ConvexConfig, Method, UpdateScheme};
+use gsparse::coordinator::dist::{self, DistConfig};
 use gsparse::coordinator::sync::{estimate_f_star, train_convex, OptKind, TrainOptions};
 use gsparse::coordinator::AsyncSvmEngine;
 use gsparse::data::{gen_logistic, gen_svm};
 use gsparse::metrics::{ascii_plot, XAxis};
 use gsparse::model::LogisticModel;
+use gsparse::transport::{Hello, InProcTransport, Listener, TcpTransport, Transport};
 
 fn main() {
     let args = Args::from_env();
@@ -23,6 +29,9 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("async-svm") => cmd_async(&args),
         Some("e2e") => cmd_e2e(&args),
+        Some("server") => cmd_server(&args),
+        Some("worker") => cmd_worker(&args),
+        Some("dist") => cmd_dist(&args),
         Some("version") => {
             println!("gsparse {}", gsparse::VERSION);
             Ok(())
@@ -49,6 +58,9 @@ fn print_help() {
            train [--method M] [--rho R] [--epochs E] [--svrg] ...\n\
            async-svm [--threads T] [--scheme lock|atomic|wild] [--method M]\n\
            e2e [--steps N] [--workers M] [--rho R]   transformer end-to-end\n\
+           server [--addr H:P] [--workers M] [--rounds R] [--method M] ...\n\
+           worker --addr H:P --id N      one worker process (config from server)\n\
+           dist [--transport inproc|tcp] [--procs] [--workers M] ...\n\
            version",
         gsparse::VERSION
     );
@@ -134,4 +146,107 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
     let workers = args.get_parse("workers", 4usize);
     let rho = args.get_parse("rho", 0.05f32);
     gsparse::figures::run_transformer_e2e(steps, workers, rho)
+}
+
+/// Build the distributed-run config shared by `server` and `dist` from CLI
+/// options (workers receive it over the wire, so `worker` takes none).
+fn dist_cfg_from_args(args: &Args) -> anyhow::Result<DistConfig> {
+    let mut cfg = DistConfig::default();
+    cfg.workers = args.get_parse("workers", cfg.workers);
+    cfg.rounds = args.get_parse("rounds", cfg.rounds);
+    cfg.rho = args.get_parse("rho", cfg.rho);
+    cfg.qsgd_bits = args.get_parse("qsgd-bits", cfg.qsgd_bits);
+    cfg.batch = args.get_parse("batch", cfg.batch);
+    cfg.lr = args.get_parse("lr", cfg.lr);
+    cfg.seed = args.get_parse("seed", cfg.seed);
+    cfg.n = args.get_parse("n", cfg.n);
+    cfg.d = args.get_parse("d", cfg.d);
+    cfg.c1 = args.get_parse("c1", cfg.c1);
+    cfg.c2 = args.get_parse("c2", cfg.c2);
+    cfg.reg = args.get_parse("reg", 1.0 / (10.0 * cfg.n as f32));
+    if let Some(m) = args.get("method") {
+        cfg.method = Method::parse(m).ok_or_else(|| anyhow::anyhow!("unknown method {m}"))?;
+    }
+    Ok(cfg)
+}
+
+fn print_dist_report(report: &gsparse::coordinator::DistReport) {
+    println!("{}", report.curve.label());
+    println!(
+        "final loss {:.6}; versions {}; max staleness {}",
+        report.final_loss, report.versions, report.max_observed_staleness
+    );
+    let ledger = &report.curve.ledger;
+    let overhead = if ledger.wire_bytes > 0 {
+        ledger.measured_bytes as f64 / ledger.wire_bytes as f64
+    } else {
+        f64::NAN
+    };
+    println!(
+        "bytes: wire {} (payloads), measured {} on the links ({overhead:.2}x incl. \
+         weights+framing); ideal bits {}; sim net {:.1} ms",
+        ledger.wire_bytes,
+        ledger.measured_bytes,
+        ledger.ideal_bits,
+        report.sim_time_s * 1e3,
+    );
+    println!("gradient digest {:#018x}", report.grad_digest);
+}
+
+fn cmd_server(args: &Args) -> anyhow::Result<()> {
+    let cfg = dist_cfg_from_args(args)?;
+    let addr = args.get_or("addr", "127.0.0.1:0");
+    let transport = TcpTransport::new();
+    let mut listener = transport.listen(addr)?;
+    println!(
+        "gsparse server listening on {} — waiting for {} worker(s):",
+        listener.local_addr(),
+        cfg.workers
+    );
+    for wid in 0..cfg.workers {
+        println!(
+            "  {} worker --addr {} --id {wid}",
+            std::env::args().next().unwrap_or_else(|| "gsparse".into()),
+            listener.local_addr()
+        );
+    }
+    let report = dist::serve(listener.as_mut(), &cfg)?;
+    print_dist_report(&report);
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("worker requires --addr host:port"))?;
+    let id: u32 = args.get_parse("id", u32::MAX);
+    anyhow::ensure!(id != u32::MAX, "worker requires --id N");
+    let transport = TcpTransport::new();
+    let mut conn = transport.connect(addr, &Hello::new(id))?;
+    gsparse::coordinator::dist::run_worker(conn.as_mut(), id)
+}
+
+fn cmd_dist(args: &Args) -> anyhow::Result<()> {
+    let cfg = dist_cfg_from_args(args)?;
+    let backend = args.get_or("transport", "inproc");
+    let report = if args.flag("procs") {
+        let bin = std::env::current_exe()?;
+        println!(
+            "launching 1 server + {} worker processes over loopback TCP...",
+            cfg.workers
+        );
+        dist::run_processes(&bin, "127.0.0.1:0", &cfg)?
+    } else {
+        match backend {
+            "inproc" => dist::run_threads(InProcTransport::new(), "dist", &cfg)?,
+            "tcp" => dist::run_threads(TcpTransport::new(), "127.0.0.1:0", &cfg)?,
+            other => anyhow::bail!("unknown transport {other} (inproc|tcp)"),
+        }
+    };
+    print_dist_report(&report);
+    print!(
+        "{}",
+        ascii_plot(&[report.curve], 72, 12, XAxis::DataPasses)
+    );
+    Ok(())
 }

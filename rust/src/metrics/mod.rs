@@ -61,6 +61,11 @@ pub struct CommLedger {
     pub ideal_bits: u64,
     /// Actual encoded message bytes produced by `coding::`.
     pub wire_bytes: u64,
+    /// **Measured** framed bytes observed by the transport layer's per-link
+    /// counters (payloads + length prefixes + handshakes) — what actually
+    /// crossed the socket or channel, as opposed to the modeled columns
+    /// above. Zero for runs that never touched a transport.
+    pub measured_bytes: u64,
     /// Number of messages (one per worker per step).
     pub messages: u64,
 }
@@ -72,9 +77,16 @@ impl CommLedger {
         self.messages += 1;
     }
 
+    /// Set the measured column from transport counters (counters are
+    /// cumulative, so this overwrites rather than accumulates).
+    pub fn set_measured(&mut self, measured_bytes: u64) {
+        self.measured_bytes = measured_bytes;
+    }
+
     pub fn merge(&mut self, other: &CommLedger) {
         self.ideal_bits += other.ideal_bits;
         self.wire_bytes += other.wire_bytes;
+        self.measured_bytes += other.measured_bytes;
         self.messages += other.messages;
     }
 }
@@ -247,11 +259,14 @@ mod tests {
     fn ledger_merge() {
         let mut a = CommLedger::default();
         a.record(100, 16);
+        a.set_measured(40);
         let mut b = CommLedger::default();
         b.record(50, 8);
+        b.set_measured(10);
         a.merge(&b);
         assert_eq!(a.ideal_bits, 150);
         assert_eq!(a.wire_bytes, 24);
+        assert_eq!(a.measured_bytes, 50);
         assert_eq!(a.messages, 2);
     }
 

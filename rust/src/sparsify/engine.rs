@@ -22,12 +22,15 @@
 //!   draw any coordinate sees — sharded output is **bitwise identical** to
 //!   the sequential path by construction.
 //! * **Sharded parallel compression.** Gradients with `d ≥ parallel_min_d`
-//!   are split into cache-sized chunks compressed concurrently under
-//!   `std::thread::scope` (the idiom the coordinator already uses), each
-//!   chunk appending into its own persistent shard buffer; shard outputs
-//!   concatenate in chunk order, which equals the sequential coordinate
-//!   order.
+//!   are split into cache-sized chunks compressed concurrently on a
+//!   **persistent [`ShardPool`]** (threads are spawned once, on the first
+//!   parallel call, and reused for the lifetime of the engine — no
+//!   per-round spawn/join cost), each chunk appending into its own
+//!   persistent shard buffer; shard outputs concatenate in chunk order,
+//!   which equals the sequential coordinate order, so which thread ran a
+//!   chunk cannot change any output byte.
 
+use super::pool::ShardPool;
 use super::probs::{closed_form_probs_with, greedy_probs, ProbVector, SelectScratch};
 use super::{hybrid_ideal_bits, CompressStats, SparseGrad};
 use crate::coding::{self, Encoding};
@@ -73,6 +76,9 @@ pub struct CompressEngine {
     select: SelectScratch,
     /// Per-chunk output buffers for the parallel path.
     shards: Vec<ShardBuf>,
+    /// Persistent worker threads for the parallel path, created lazily on
+    /// the first compress that crosses `parallel_min_d`.
+    pool: Option<ShardPool>,
 }
 
 impl CompressEngine {
@@ -98,6 +104,7 @@ impl CompressEngine {
             uniforms: Vec::new(),
             select: SelectScratch::default(),
             shards: Vec::new(),
+            pool: None,
         }
     }
 
@@ -113,6 +120,8 @@ impl CompressEngine {
         self.shard_len = shard_len.max(1);
         self.parallel_min_d = parallel_min_d;
         self.max_threads = max_threads.max(1);
+        // A resized pool would mispartition; rebuild lazily at the new size.
+        self.pool = None;
         self
     }
 
@@ -210,33 +219,40 @@ impl CompressEngine {
         } else {
             // Parallel path: each chunk appends into its own persistent
             // buffer; concatenation in chunk order reproduces the
-            // sequential output exactly.
+            // sequential output exactly. The chunk → buffer assignment is
+            // fixed by index, so the pool's scheduling freedom (which
+            // thread runs which group) cannot affect the output.
             if self.shards.len() < nchunks {
                 self.shards.resize_with(nchunks, ShardBuf::default);
             }
+            let want_threads = self.max_threads;
+            let pool = self
+                .pool
+                .get_or_insert_with(|| ShardPool::new(want_threads));
             let shards = &mut self.shards[..nchunks];
             let per = nchunks.div_ceil(threads);
-            std::thread::scope(|scope| {
-                for (t, group) in shards.chunks_mut(per).enumerate() {
-                    let first = t * per;
-                    scope.spawn(move || {
-                        for (j, sh) in group.iter_mut().enumerate() {
-                            let lo = (first + j) * shard_len;
-                            let hi = (lo + shard_len).min(d);
-                            sh.exact.clear();
-                            sh.shared.clear();
-                            sample_chunk(
-                                &g[lo..hi],
-                                &p[lo..hi],
-                                &u[lo..hi],
-                                lo as u32,
-                                &mut sh.exact,
-                                &mut sh.shared,
-                            );
-                        }
-                    });
-                }
-            });
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(nchunks.div_ceil(per));
+            for (t, group) in shards.chunks_mut(per).enumerate() {
+                let first = t * per;
+                jobs.push(Box::new(move || {
+                    for (j, sh) in group.iter_mut().enumerate() {
+                        let lo = (first + j) * shard_len;
+                        let hi = (lo + shard_len).min(d);
+                        sh.exact.clear();
+                        sh.shared.clear();
+                        sample_chunk(
+                            &g[lo..hi],
+                            &p[lo..hi],
+                            &u[lo..hi],
+                            lo as u32,
+                            &mut sh.exact,
+                            &mut sh.shared,
+                        );
+                    }
+                }));
+            }
+            pool.run(jobs);
             for sh in shards.iter() {
                 out.exact.extend_from_slice(&sh.exact);
                 out.shared.extend_from_slice(&sh.shared);
@@ -333,6 +349,27 @@ mod tests {
                 assert!(seq_out.nnz() > 0, "degenerate test input");
             }
         }
+    }
+
+    #[test]
+    fn parallel_path_creates_one_pool_and_reuses_it() {
+        let d = 40_000;
+        let g = gradient(d, 5);
+        let mut engine = CompressEngine::greedy(0.05, 2).with_sharding(1 << 12, 1, 3);
+        assert!(engine.pool.is_none(), "pool is lazy");
+        let mut rand = RandArray::from_seed(6, 1 << 18);
+        let mut out = SparseGrad::empty(0);
+        engine.compress_sparse_into(&g, &mut rand, &mut out);
+        let threads = engine.pool.as_ref().expect("pool created").threads();
+        assert_eq!(threads, 3);
+        for _ in 0..4 {
+            engine.compress_sparse_into(&g, &mut rand, &mut out);
+        }
+        // Still the same pool object (threads were not respawned).
+        assert_eq!(engine.pool.as_ref().unwrap().threads(), 3);
+        // Regeometrizing drops the stale pool.
+        let engine = engine.with_sharding(1 << 12, 1, 2);
+        assert!(engine.pool.is_none());
     }
 
     #[test]

@@ -26,11 +26,13 @@
 
 pub mod baselines;
 pub mod engine;
+pub mod pool;
 pub mod probs;
 pub mod sample;
 
 pub use baselines::{OneBitSgd, QsgdCompressor, TernGradCompressor, TopKCompressor, UniformSampler};
 pub use engine::{CompressEngine, EngineMode};
+pub use pool::ShardPool;
 pub use probs::{
     closed_form_probs, closed_form_probs_sorted, closed_form_probs_with, greedy_probs,
     ProbVector, SelectScratch,
@@ -187,6 +189,22 @@ impl Compressed {
         let mut out = vec![0.0; self.dim()];
         self.add_into(1.0, &mut out);
         out
+    }
+
+    /// Serialize the decoded dense form as `f32` LE bytes into `out`
+    /// (cleared first), reusing `scratch` for the decode — the `kind = 1`
+    /// transport payload for messages that have no byte codec of their own
+    /// (QSGD / TernGrad / dense). Both buffers keep their capacity, so the
+    /// steady-state path does not allocate.
+    pub fn dense_le_bytes_into(&self, scratch: &mut Vec<f32>, out: &mut Vec<u8>) {
+        scratch.resize(self.dim(), 0.0);
+        scratch.fill(0.0);
+        self.add_into(1.0, scratch);
+        out.clear();
+        out.reserve(4 * scratch.len());
+        for &v in scratch.iter() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
     }
 
     /// Squared ℓ2 norm of the decoded message (for the `var` metric).

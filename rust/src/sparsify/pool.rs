@@ -1,0 +1,207 @@
+//! Persistent worker thread pool for the sharded compression path.
+//!
+//! The engine used to spawn fresh scoped threads (`std::thread::scope`) on
+//! every large `compress_into` call; at the 10–100 µs scale of one
+//! compression round, thread spawn/join is a measurable fixed cost (tens of
+//! µs on this box). [`ShardPool`] keeps the threads alive across calls and
+//! hands them borrowed closures through a scoped-execution API whose
+//! blocking semantics make the lifetime erasure sound: [`ShardPool::run`]
+//! does not return until every submitted job has finished, so borrows
+//! captured by the jobs provably outlive their execution.
+//!
+//! Work partitioning is the caller's: the engine still assigns chunks to
+//! shard buffers by chunk index, so which pool thread runs a job cannot
+//! change any output byte — sharded compression stays bitwise identical to
+//! the sequential path (asserted by the engine's determinism tests, which
+//! now exercise the pool).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size pool of persistent worker threads executing borrowed jobs
+/// to completion ([`ShardPool::run`]). Dropping the pool joins the threads.
+pub struct ShardPool {
+    job_tx: Option<Sender<Job>>,
+    done_rx: Receiver<Result<(), String>>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for ShardPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardPool")
+            .field("threads", &self.threads.len())
+            .finish()
+    }
+}
+
+impl ShardPool {
+    /// Spawn `threads` persistent workers (at least one).
+    pub fn new(threads: usize) -> Self {
+        let (job_tx, job_rx) = channel::<Job>();
+        let (done_tx, done_rx) = channel::<Result<(), String>>();
+        // The job queue is shared work-stealing style: whichever worker is
+        // free locks the receiver and takes the next job. Jobs are coarse
+        // (a group of shards), so the lock is uncontended in practice.
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let threads = (0..threads.max(1))
+            .map(|_| {
+                let job_rx = Arc::clone(&job_rx);
+                let done_tx = done_tx.clone();
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let guard = job_rx.lock().expect("pool queue lock");
+                        guard.recv()
+                    };
+                    let Ok(job) = job else {
+                        break; // pool dropped
+                    };
+                    let result = catch_unwind(AssertUnwindSafe(job)).map_err(|payload| {
+                        payload
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "non-string panic payload".into())
+                    });
+                    if done_tx.send(result).is_err() {
+                        break;
+                    }
+                })
+            })
+            .collect();
+        Self {
+            job_tx: Some(job_tx),
+            done_rx,
+            threads,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads.len()
+    }
+
+    /// Execute `jobs` on the pool and block until all of them finished.
+    /// A panic inside any job is re-raised here — after every other job has
+    /// completed, so no borrow is left running.
+    pub fn run<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        let n = jobs.len();
+        let tx = self.job_tx.as_ref().expect("pool is alive until drop");
+        for job in jobs {
+            // SAFETY: lifetime erasure only. This function blocks below
+            // until all `n` jobs report completion, and pool workers report
+            // *after* the job has returned (or unwound), so everything the
+            // job borrows from `'env` strictly outlives its execution. The
+            // completion loop can only exit early by panicking out of
+            // `recv()`, which requires every worker thread to have exited —
+            // and workers exit only when the pool itself is dropped.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+            };
+            tx.send(job).expect("pool workers alive");
+        }
+        let mut panicked: Option<String> = None;
+        for _ in 0..n {
+            match self.done_rx.recv().expect("pool workers alive") {
+                Ok(()) => {}
+                Err(msg) => panicked = Some(msg),
+            }
+        }
+        if let Some(msg) = panicked {
+            panic!("shard pool job panicked: {msg}");
+        }
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        // Disconnect the queue so idle workers observe `Err` and exit.
+        drop(self.job_tx.take());
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_borrowed_jobs_to_completion() {
+        let pool = ShardPool::new(4);
+        let mut outputs = vec![0usize; 16];
+        for round in 1..=3 {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = outputs
+                .chunks_mut(4)
+                .enumerate()
+                .map(|(i, chunk)| {
+                    let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        for (j, slot) in chunk.iter_mut().enumerate() {
+                            *slot = round * 100 + i * 10 + j;
+                        }
+                    });
+                    job
+                })
+                .collect();
+            pool.run(jobs);
+        }
+        for (k, &v) in outputs.iter().enumerate() {
+            assert_eq!(v, 300 + (k / 4) * 10 + k % 4);
+        }
+    }
+
+    #[test]
+    fn reuses_the_same_threads_across_calls() {
+        let pool = ShardPool::new(2);
+        assert_eq!(pool.threads(), 2);
+        let seen = AtomicUsize::new(0);
+        for _ in 0..8 {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+                .map(|_| {
+                    let seen = &seen;
+                    let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        seen.fetch_add(1, Ordering::Relaxed);
+                    });
+                    job
+                })
+                .collect();
+            pool.run(jobs);
+        }
+        assert_eq!(seen.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "shard pool job panicked")]
+    fn job_panic_propagates_after_all_jobs_finish() {
+        let pool = ShardPool::new(2);
+        let ok = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|i| {
+                let ok = &ok;
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    if i == 1 {
+                        panic!("boom");
+                    }
+                    ok.fetch_add(1, Ordering::Relaxed);
+                });
+                job
+            })
+            .collect();
+        pool.run(jobs);
+    }
+
+    #[test]
+    fn zero_thread_request_still_works() {
+        let pool = ShardPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        let mut x = 0u64;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![Box::new(|| x = 7)];
+        pool.run(jobs);
+        drop(pool);
+        assert_eq!(x, 7);
+    }
+}

@@ -1,0 +1,375 @@
+//! Frame and protocol-message codec shared by every transport backend.
+//!
+//! Wire layout of one frame: `u32 LE payload length` + payload. The payload
+//! of the first frame on a connection is the handshake ([`Hello`]); every
+//! later payload is a tagged protocol message:
+//!
+//! ```text
+//! offset  size  field
+//! 0       1     tag
+//! 1       ...   body (per-tag layout below)
+//! ```
+//!
+//! * `PULL` — empty body; a worker requesting the current weights.
+//! * `WEIGHTS` — `u64 version` + `d × f32 LE` weights.
+//! * `GRAD` — `u64 based_on` + `f64 g_norm_sq` + `f64 q_norm_sq` +
+//!   `f64 expected_nnz` + `u64 ideal_bits` + `u8 kind` + payload, where
+//!   `kind = 0` means the payload is [`crate::coding`] wire bytes and
+//!   `kind = 1` means raw dense `f32 LE` (the fallback for quantized
+//!   methods whose codec is not implemented as bytes).
+//! * `SHUTDOWN` — empty body; the server ending a worker's run.
+//! * `CONFIG` — opaque config bytes (the deployment layer defines the
+//!   layout; the transport just ships them).
+//!
+//! Everything here is plain byte shuffling over caller-held buffers — no
+//! allocation beyond growing the reused `Vec<u8>`s to their plateau.
+
+use super::TransportError;
+
+/// Bytes of framing prepended to every payload (the `u32` length prefix).
+pub const FRAME_OVERHEAD: usize = 4;
+
+/// Hard cap on a single frame's payload, enforced on receive *before*
+/// allocating — an adversarial length prefix must not OOM the server.
+pub const MAX_FRAME_LEN: usize = 1 << 28; // 256 MiB
+
+/// Transport protocol version carried in every handshake.
+pub const TRANSPORT_VERSION: u8 = 1;
+
+/// Handshake magic (first frame on every connection).
+pub const HELLO_MAGIC: &[u8; 4] = b"GSTP";
+
+const TAG_PULL: u8 = 0x10;
+const TAG_WEIGHTS: u8 = 0x11;
+const TAG_GRAD: u8 = 0x12;
+const TAG_SHUTDOWN: u8 = 0x13;
+const TAG_CONFIG: u8 = 0x14;
+
+/// The handshake sent by the connecting side as its first frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hello {
+    pub version: u8,
+    pub worker_id: u32,
+}
+
+impl Hello {
+    pub fn new(worker_id: u32) -> Self {
+        Self {
+            version: TRANSPORT_VERSION,
+            worker_id,
+        }
+    }
+
+    /// Encode into `out` (cleared first).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.extend_from_slice(HELLO_MAGIC);
+        out.push(self.version);
+        out.extend_from_slice(&self.worker_id.to_le_bytes());
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, TransportError> {
+        if buf.len() != 9 {
+            return Err(TransportError::BadHandshake("wrong hello length"));
+        }
+        if &buf[0..4] != HELLO_MAGIC {
+            return Err(TransportError::BadHandshake("bad magic"));
+        }
+        let version = buf[4];
+        if version != TRANSPORT_VERSION {
+            return Err(TransportError::VersionMismatch {
+                ours: TRANSPORT_VERSION,
+                theirs: version,
+            });
+        }
+        Ok(Self {
+            version,
+            worker_id: u32::from_le_bytes(buf[5..9].try_into().unwrap()),
+        })
+    }
+}
+
+/// Gradient-message metadata (everything in a `GRAD` frame but the payload).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GradHeader {
+    /// Weight version the gradient was computed against.
+    pub based_on: u64,
+    /// `‖g‖²` before compression (the server can't recompute it).
+    pub g_norm_sq: f64,
+    /// `‖Q(g)‖²` after compression.
+    pub q_norm_sq: f64,
+    /// Expected survivors `Σ_i p_i` (feeds the `spa` meter).
+    pub expected_nnz: f64,
+    /// Idealized coding length under the paper's bit model.
+    pub ideal_bits: u64,
+    /// 0 = sparse [`crate::coding`] wire bytes, 1 = raw dense `f32 LE`.
+    pub kind: u8,
+}
+
+const GRAD_HEADER_LEN: usize = 1 + 8 + 8 + 8 + 8 + 8 + 1;
+
+/// A decoded view of one protocol message, borrowing from the recv buffer.
+#[derive(Debug, PartialEq)]
+pub enum MsgView<'a> {
+    Pull,
+    Weights { version: u64, w_bytes: &'a [u8] },
+    Grad { header: GradHeader, payload: &'a [u8] },
+    Shutdown,
+    Config { bytes: &'a [u8] },
+}
+
+/// Encode a `PULL` message into `out` (cleared first).
+pub fn encode_pull(out: &mut Vec<u8>) {
+    out.clear();
+    out.push(TAG_PULL);
+}
+
+/// Encode a `WEIGHTS` message into `out` (cleared first).
+pub fn encode_weights(out: &mut Vec<u8>, version: u64, w: &[f32]) {
+    out.clear();
+    out.reserve(1 + 8 + 4 * w.len());
+    out.push(TAG_WEIGHTS);
+    out.extend_from_slice(&version.to_le_bytes());
+    for &x in w {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Encode a `GRAD` message into `out` (cleared first).
+pub fn encode_grad(out: &mut Vec<u8>, header: &GradHeader, payload: &[u8]) {
+    out.clear();
+    out.reserve(GRAD_HEADER_LEN + payload.len());
+    out.push(TAG_GRAD);
+    out.extend_from_slice(&header.based_on.to_le_bytes());
+    out.extend_from_slice(&header.g_norm_sq.to_le_bytes());
+    out.extend_from_slice(&header.q_norm_sq.to_le_bytes());
+    out.extend_from_slice(&header.expected_nnz.to_le_bytes());
+    out.extend_from_slice(&header.ideal_bits.to_le_bytes());
+    out.push(header.kind);
+    out.extend_from_slice(payload);
+}
+
+/// Encode a `SHUTDOWN` message into `out` (cleared first).
+pub fn encode_shutdown(out: &mut Vec<u8>) {
+    out.clear();
+    out.push(TAG_SHUTDOWN);
+}
+
+/// Encode a `CONFIG` message into `out` (cleared first).
+pub fn encode_config(out: &mut Vec<u8>, bytes: &[u8]) {
+    out.clear();
+    out.reserve(1 + bytes.len());
+    out.push(TAG_CONFIG);
+    out.extend_from_slice(bytes);
+}
+
+/// Decode one protocol message from a received frame payload.
+pub fn decode(buf: &[u8]) -> Result<MsgView<'_>, TransportError> {
+    let (&tag, body) = buf
+        .split_first()
+        .ok_or(TransportError::UnexpectedMessage("empty frame"))?;
+    match tag {
+        TAG_PULL => {
+            if !body.is_empty() {
+                return Err(TransportError::UnexpectedMessage("pull with body"));
+            }
+            Ok(MsgView::Pull)
+        }
+        TAG_WEIGHTS => {
+            if body.len() < 8 || (body.len() - 8) % 4 != 0 {
+                return Err(TransportError::UnexpectedMessage("weights body length"));
+            }
+            Ok(MsgView::Weights {
+                version: u64::from_le_bytes(body[0..8].try_into().unwrap()),
+                w_bytes: &body[8..],
+            })
+        }
+        TAG_GRAD => {
+            if buf.len() < GRAD_HEADER_LEN {
+                return Err(TransportError::UnexpectedMessage("grad header truncated"));
+            }
+            let kind = buf[GRAD_HEADER_LEN - 1];
+            if kind > 1 {
+                return Err(TransportError::UnexpectedMessage("grad kind"));
+            }
+            Ok(MsgView::Grad {
+                header: GradHeader {
+                    based_on: u64::from_le_bytes(buf[1..9].try_into().unwrap()),
+                    g_norm_sq: f64::from_le_bytes(buf[9..17].try_into().unwrap()),
+                    q_norm_sq: f64::from_le_bytes(buf[17..25].try_into().unwrap()),
+                    expected_nnz: f64::from_le_bytes(buf[25..33].try_into().unwrap()),
+                    ideal_bits: u64::from_le_bytes(buf[33..41].try_into().unwrap()),
+                    kind,
+                },
+                payload: &buf[GRAD_HEADER_LEN..],
+            })
+        }
+        TAG_SHUTDOWN => {
+            if !body.is_empty() {
+                return Err(TransportError::UnexpectedMessage("shutdown with body"));
+            }
+            Ok(MsgView::Shutdown)
+        }
+        TAG_CONFIG => Ok(MsgView::Config { bytes: body }),
+        _ => Err(TransportError::UnexpectedMessage("unknown tag")),
+    }
+}
+
+/// Copy a `WEIGHTS` body into a caller-held `f32` buffer (resized to fit).
+pub fn weights_into(w_bytes: &[u8], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(w_bytes.len() / 4);
+    for chunk in w_bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+}
+
+/// `out[i] += alpha · f32_le(payload[4i..])` — the apply side of a
+/// `kind = 1` dense gradient payload (the encode side is
+/// `Compressed::dense_le_bytes_into`). Stops at the shorter of the two
+/// lengths; callers that require an exact match check it first.
+pub fn add_dense_le(payload: &[u8], alpha: f32, out: &mut [f32]) {
+    for (o, chunk) in out.iter_mut().zip(payload.chunks_exact(4)) {
+        *o += alpha * f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_roundtrip_and_rejections() {
+        let h = Hello::new(3);
+        let mut buf = Vec::new();
+        h.encode(&mut buf);
+        assert_eq!(Hello::decode(&buf).unwrap(), h);
+
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(matches!(
+            Hello::decode(&bad),
+            Err(TransportError::BadHandshake(_))
+        ));
+        let mut bad = buf.clone();
+        bad[4] = 9;
+        assert!(matches!(
+            Hello::decode(&bad),
+            Err(TransportError::VersionMismatch { theirs: 9, .. })
+        ));
+        assert!(matches!(
+            Hello::decode(&buf[..5]),
+            Err(TransportError::BadHandshake(_))
+        ));
+    }
+
+    #[test]
+    fn message_roundtrips() {
+        let mut buf = Vec::new();
+        encode_pull(&mut buf);
+        assert_eq!(decode(&buf).unwrap(), MsgView::Pull);
+
+        let w = [1.0f32, -2.5, 0.0];
+        encode_weights(&mut buf, 7, &w);
+        match decode(&buf).unwrap() {
+            MsgView::Weights { version, w_bytes } => {
+                assert_eq!(version, 7);
+                let mut back = Vec::new();
+                weights_into(w_bytes, &mut back);
+                assert_eq!(back, w);
+            }
+            other => panic!("{other:?}"),
+        }
+
+        let header = GradHeader {
+            based_on: 11,
+            g_norm_sq: 2.5,
+            q_norm_sq: 3.25,
+            expected_nnz: 14.5,
+            ideal_bits: 999,
+            kind: 0,
+        };
+        encode_grad(&mut buf, &header, b"payload-bytes");
+        match decode(&buf).unwrap() {
+            MsgView::Grad { header: h, payload } => {
+                assert_eq!(h, header);
+                assert_eq!(payload, b"payload-bytes");
+            }
+            other => panic!("{other:?}"),
+        }
+
+        encode_shutdown(&mut buf);
+        assert_eq!(decode(&buf).unwrap(), MsgView::Shutdown);
+
+        encode_config(&mut buf, b"cfg");
+        assert_eq!(decode(&buf).unwrap(), MsgView::Config { bytes: b"cfg" });
+    }
+
+    #[test]
+    fn decode_rejects_malformed() {
+        assert!(decode(&[]).is_err());
+        assert!(decode(&[0xFF]).is_err());
+        assert!(decode(&[TAG_PULL, 1]).is_err());
+        assert!(decode(&[TAG_SHUTDOWN, 0]).is_err());
+        assert!(decode(&[TAG_WEIGHTS, 1, 2]).is_err());
+        // Weights body not a multiple of 4 after the version.
+        let mut buf = Vec::new();
+        encode_weights(&mut buf, 1, &[1.0]);
+        buf.push(0);
+        assert!(decode(&buf).is_err());
+        // Grad header truncated / bad kind.
+        let mut buf = Vec::new();
+        encode_grad(
+            &mut buf,
+            &GradHeader {
+                based_on: 0,
+                g_norm_sq: 0.0,
+                q_norm_sq: 0.0,
+                expected_nnz: 0.0,
+                ideal_bits: 0,
+                kind: 0,
+            },
+            b"",
+        );
+        assert!(decode(&buf[..buf.len() - 1]).is_err());
+        let mut bad = buf.clone();
+        bad[GRAD_HEADER_LEN - 1] = 9;
+        assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn add_dense_le_applies_scaled_payload() {
+        let vals = [1.0f32, -2.0, 0.5];
+        let mut payload = Vec::new();
+        for v in vals {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut out = vec![10.0f32; 3];
+        add_dense_le(&payload, 2.0, &mut out);
+        assert_eq!(out, vec![12.0, 6.0, 11.0]);
+    }
+
+    #[test]
+    fn property_grad_roundtrip() {
+        crate::proptest_lite::run("grad frame roundtrip", 64, |gen| {
+            let header = GradHeader {
+                based_on: gen.u64(),
+                g_norm_sq: gen.f64_in(0.0, 1e9),
+                q_norm_sq: gen.f64_in(0.0, 1e9),
+                expected_nnz: gen.f64_in(0.0, 1e6),
+                ideal_bits: gen.u64() >> 16,
+                kind: u8::from(gen.bool()),
+            };
+            let len = gen.usize_in(0, 4096);
+            let payload: Vec<u8> = (0..len).map(|_| gen.u64() as u8).collect();
+            let mut buf = Vec::new();
+            encode_grad(&mut buf, &header, &payload);
+            match decode(&buf) {
+                Ok(MsgView::Grad { header: h, payload: p }) if h == header && p == payload => {
+                    Ok(())
+                }
+                other => Err(format!("bad roundtrip: {other:?}")),
+            }
+        });
+    }
+}

@@ -1,0 +1,195 @@
+//! In-process transport backend: `mpsc` channels behind the [`Transport`]
+//! trait.
+//!
+//! This preserves what the coordinators always did (threads exchanging
+//! messages inside one process, deterministic and dependency-free) but
+//! pushes every message through the same framing as the TCP backend: the
+//! handshake and each payload are real encoded bytes, and the counters add
+//! the same 4-byte length prefix per frame. A run over `InProc` therefore
+//! produces a measured-byte ledger **identical** to the same run over
+//! loopback TCP — the invariant `tests/transport_tcp.rs` asserts.
+
+use super::{Connection, Hello, Listener, LinkCounters, Transport, TransportError};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+type Registry = Arc<Mutex<HashMap<String, mpsc::Sender<InProcConn>>>>;
+
+/// The in-process backend. Cloning shares the address registry, so workers
+/// on other threads can `connect` to a name this instance `listen`ed on.
+#[derive(Clone, Default)]
+pub struct InProcTransport {
+    registry: Registry,
+}
+
+impl InProcTransport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+struct InProcConn {
+    tx: mpsc::Sender<Vec<u8>>,
+    rx: mpsc::Receiver<Vec<u8>>,
+    counters: LinkCounters,
+    peer: String,
+}
+
+impl Connection for InProcConn {
+    fn send(&mut self, payload: &[u8]) -> Result<(), TransportError> {
+        // Mirror the TCP backend's cap exactly — backend parity includes
+        // the failure modes, not just the bytes.
+        if payload.len() > super::MAX_FRAME_LEN {
+            return Err(TransportError::FrameTooLarge(payload.len() as u64));
+        }
+        self.tx
+            .send(payload.to_vec())
+            .map_err(|_| TransportError::Closed)?;
+        self.counters.add_tx(payload.len());
+        Ok(())
+    }
+
+    fn recv(&mut self, buf: &mut Vec<u8>) -> Result<(), TransportError> {
+        let frame = self.rx.recv().map_err(|_| TransportError::Closed)?;
+        self.counters.add_rx(frame.len());
+        *buf = frame;
+        Ok(())
+    }
+
+    fn counters(&self) -> LinkCounters {
+        self.counters.clone()
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+struct InProcListener {
+    rx: mpsc::Receiver<InProcConn>,
+    addr: String,
+}
+
+impl Listener for InProcListener {
+    fn accept(&mut self) -> Result<(Box<dyn Connection>, Hello), TransportError> {
+        let mut conn = self.rx.recv().map_err(|_| TransportError::Closed)?;
+        let mut buf = Vec::new();
+        conn.recv(&mut buf)?;
+        let hello = Hello::decode(&buf)?;
+        Ok((Box::new(conn), hello))
+    }
+
+    fn local_addr(&self) -> String {
+        self.addr.clone()
+    }
+}
+
+impl Transport for InProcTransport {
+    fn listen(&self, addr: &str) -> Result<Box<dyn Listener>, TransportError> {
+        let (tx, rx) = mpsc::channel();
+        self.registry
+            .lock()
+            .expect("registry lock")
+            .insert(addr.to_string(), tx);
+        Ok(Box::new(InProcListener {
+            rx,
+            addr: addr.to_string(),
+        }))
+    }
+
+    fn connect(&self, addr: &str, hello: &Hello) -> Result<Box<dyn Connection>, TransportError> {
+        let pending = {
+            let reg = self.registry.lock().expect("registry lock");
+            reg.get(addr)
+                .cloned()
+                .ok_or_else(|| TransportError::NoSuchAddress(addr.to_string()))?
+        };
+        // Two crossed channels form the bidirectional link.
+        let (tx_c2s, rx_c2s) = mpsc::channel();
+        let (tx_s2c, rx_s2c) = mpsc::channel();
+        let mut client = InProcConn {
+            tx: tx_c2s,
+            rx: rx_s2c,
+            counters: LinkCounters::new(),
+            peer: format!("inproc:{addr}"),
+        };
+        let server = InProcConn {
+            tx: tx_s2c,
+            rx: rx_c2s,
+            counters: LinkCounters::new(),
+            peer: format!("inproc:{addr}#w{}", hello.worker_id),
+        };
+        // The handshake travels (and is counted) like any other frame.
+        let mut hello_frame = Vec::new();
+        hello.encode(&mut hello_frame);
+        client.send(&hello_frame)?;
+        pending
+            .send(server)
+            .map_err(|_| TransportError::NoSuchAddress(addr.to_string()))?;
+        Ok(Box::new(client))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::FRAME_OVERHEAD;
+
+    #[test]
+    fn connect_accept_send_recv() {
+        let t = InProcTransport::new();
+        let mut listener = t.listen("ps").unwrap();
+        let t2 = t.clone();
+        let client = std::thread::spawn(move || {
+            let mut conn = t2.connect("ps", &Hello::new(5)).unwrap();
+            conn.send(b"from-client").unwrap();
+            let mut buf = Vec::new();
+            conn.recv(&mut buf).unwrap();
+            assert_eq!(buf, b"from-server");
+            conn.counters()
+        });
+        let (mut conn, hello) = listener.accept().unwrap();
+        assert_eq!(hello.worker_id, 5);
+        let mut buf = Vec::new();
+        conn.recv(&mut buf).unwrap();
+        assert_eq!(buf, b"from-client");
+        conn.send(b"from-server").unwrap();
+        let client_counters = client.join().unwrap();
+        // Client: hello (9) + "from-client" (11) sent, "from-server" (11) recvd.
+        assert_eq!(
+            client_counters.bytes_tx(),
+            (9 + 11 + 2 * FRAME_OVERHEAD) as u64
+        );
+        assert_eq!(client_counters.bytes_rx(), (11 + FRAME_OVERHEAD) as u64);
+        // Server side counts the mirror image (hello counted on accept).
+        assert_eq!(
+            conn.counters().bytes_rx(),
+            (9 + 11 + 2 * FRAME_OVERHEAD) as u64
+        );
+        assert!(conn.peer().contains("w5"));
+    }
+
+    #[test]
+    fn connect_unknown_address_fails() {
+        let t = InProcTransport::new();
+        assert!(matches!(
+            t.connect("nowhere", &Hello::new(0)),
+            Err(TransportError::NoSuchAddress(_))
+        ));
+    }
+
+    #[test]
+    fn recv_after_peer_drop_is_closed() {
+        let t = InProcTransport::new();
+        let mut listener = t.listen("x").unwrap();
+        let conn = t.connect("x", &Hello::new(0)).unwrap();
+        let (mut server, _) = listener.accept().unwrap();
+        drop(conn);
+        let mut buf = Vec::new();
+        assert!(matches!(
+            server.recv(&mut buf),
+            Err(TransportError::Closed)
+        ));
+    }
+}

@@ -1,0 +1,350 @@
+//! Pluggable point-to-point transport for the distributed runtime.
+//!
+//! The paper's claims are about *real* communication cost, so the byte
+//! ledger needs a column that was actually measured on a link rather than
+//! derived from the α-β model. This module provides that link: a
+//! [`Transport`] builds length-delimited framed connections
+//! ([`Connection`]) that carry the existing [`crate::coding`] wire bytes,
+//! with per-link byte counters ([`LinkCounters`]) accumulating every framed
+//! byte — payload plus the 4-byte length prefix plus the handshake.
+//!
+//! Two backends implement the trait:
+//!
+//! * [`InProcTransport`] — `mpsc` channels inside one process. This wraps
+//!   what the coordinators always did, but through the same framing (the
+//!   handshake and every message are encoded to bytes), so its counters are
+//!   **byte-for-byte identical** to the TCP backend's — the property the
+//!   transport-parity tests pin down.
+//! * [`TcpTransport`] — `std::net` sockets over loopback or a real NIC,
+//!   with a tiny handshake carrying the protocol version and worker id.
+//!
+//! The deployment layer on top (connect/accept ordering, config exchange,
+//! round scheduling) lives in [`crate::coordinator::dist`].
+
+pub mod frame;
+mod inproc;
+mod tcp;
+
+pub use frame::{Hello, MsgView, FRAME_OVERHEAD, MAX_FRAME_LEN, TRANSPORT_VERSION};
+pub use inproc::InProcTransport;
+pub use tcp::TcpTransport;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Transport-layer errors. (`Display`/`Error` are hand-written: the offline
+/// image has no `thiserror`.)
+#[derive(Debug)]
+pub enum TransportError {
+    /// The peer hung up (socket EOF / channel disconnected).
+    Closed,
+    /// Underlying socket error.
+    Io(std::io::Error),
+    /// A frame declared a length above [`MAX_FRAME_LEN`].
+    FrameTooLarge(u64),
+    /// The first frame was not a well-formed hello.
+    BadHandshake(&'static str),
+    /// The peer speaks a different protocol version.
+    VersionMismatch { ours: u8, theirs: u8 },
+    /// No listener is bound at the requested in-process address.
+    NoSuchAddress(String),
+    /// A frame arrived that the protocol state machine did not expect.
+    UnexpectedMessage(&'static str),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Closed => write!(f, "connection closed by peer"),
+            TransportError::Io(e) => write!(f, "socket error: {e}"),
+            TransportError::FrameTooLarge(n) => {
+                write!(f, "frame length {n} exceeds cap {MAX_FRAME_LEN}")
+            }
+            TransportError::BadHandshake(why) => write!(f, "bad handshake: {why}"),
+            TransportError::VersionMismatch { ours, theirs } => {
+                write!(f, "protocol version mismatch: ours {ours}, theirs {theirs}")
+            }
+            TransportError::NoSuchAddress(a) => write!(f, "no listener bound at {a:?}"),
+            TransportError::UnexpectedMessage(what) => write!(f, "unexpected message: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TransportError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> Self {
+        match e.kind() {
+            std::io::ErrorKind::UnexpectedEof
+            | std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::BrokenPipe => TransportError::Closed,
+            _ => TransportError::Io(e),
+        }
+    }
+}
+
+/// Shared per-link byte/frame counters. Cloning yields another handle to the
+/// same counters, so a caller can keep reading after the connection moved
+/// into a worker thread or a [`Mux`].
+#[derive(Debug, Clone, Default)]
+pub struct LinkCounters {
+    inner: Arc<CounterCells>,
+}
+
+#[derive(Debug, Default)]
+struct CounterCells {
+    bytes_tx: AtomicU64,
+    bytes_rx: AtomicU64,
+    frames_tx: AtomicU64,
+    frames_rx: AtomicU64,
+}
+
+impl LinkCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub(crate) fn add_tx(&self, frame_payload_len: usize) {
+        self.inner
+            .bytes_tx
+            .fetch_add(frame_payload_len as u64 + FRAME_OVERHEAD as u64, Ordering::Relaxed);
+        self.inner.frames_tx.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_rx(&self, frame_payload_len: usize) {
+        self.inner
+            .bytes_rx
+            .fetch_add(frame_payload_len as u64 + FRAME_OVERHEAD as u64, Ordering::Relaxed);
+        self.inner.frames_rx.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Framed bytes sent on this link (payload + length prefixes).
+    pub fn bytes_tx(&self) -> u64 {
+        self.inner.bytes_tx.load(Ordering::Relaxed)
+    }
+
+    /// Framed bytes received on this link.
+    pub fn bytes_rx(&self) -> u64 {
+        self.inner.bytes_rx.load(Ordering::Relaxed)
+    }
+
+    pub fn frames_tx(&self) -> u64 {
+        self.inner.frames_tx.load(Ordering::Relaxed)
+    }
+
+    pub fn frames_rx(&self) -> u64 {
+        self.inner.frames_rx.load(Ordering::Relaxed)
+    }
+
+    /// Total framed bytes that crossed the link in either direction.
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_tx() + self.bytes_rx()
+    }
+}
+
+/// One framed, bidirectional link. `send`/`recv` move whole frames; the
+/// payload bytes are opaque to the transport (the coordinators put
+/// [`frame`]-encoded protocol messages in them).
+pub trait Connection: Send {
+    /// Send one frame (the payload; the transport adds the length prefix).
+    fn send(&mut self, payload: &[u8]) -> Result<(), TransportError>;
+
+    /// Receive one frame into `buf` (cleared/overwritten; capacity reused).
+    fn recv(&mut self, buf: &mut Vec<u8>) -> Result<(), TransportError>;
+
+    /// A handle to this link's byte counters.
+    fn counters(&self) -> LinkCounters;
+
+    /// Human-readable peer description (for errors and logs).
+    fn peer(&self) -> String;
+}
+
+/// Accepts inbound connections. The transport consumes the hello frame
+/// during `accept` (validating magic + version); protocol-level agreement
+/// (worker count, dimensions, config) is the caller's job.
+pub trait Listener: Send {
+    fn accept(&mut self) -> Result<(Box<dyn Connection>, Hello), TransportError>;
+
+    /// The address workers should `connect` to (e.g. `127.0.0.1:40319`).
+    fn local_addr(&self) -> String;
+}
+
+/// A connection factory: one per backend.
+pub trait Transport: Send {
+    fn listen(&self, addr: &str) -> Result<Box<dyn Listener>, TransportError>;
+
+    /// Connect and send the hello frame; returns the established link.
+    fn connect(&self, addr: &str, hello: &Hello) -> Result<Box<dyn Connection>, TransportError>;
+}
+
+/// Accept exactly `n` connections and return them ordered by handshake
+/// worker id, rejecting out-of-range and duplicate ids — the shared accept
+/// phase of every coordinator (arrival order is scheduler-dependent; the
+/// id ordering is what makes runs deterministic).
+pub fn accept_n(
+    listener: &mut dyn Listener,
+    n: usize,
+) -> Result<Vec<Box<dyn Connection>>, TransportError> {
+    let mut slots: Vec<Option<Box<dyn Connection>>> = (0..n).map(|_| None).collect();
+    for _ in 0..n {
+        let (conn, hello) = listener.accept()?;
+        let wid = hello.worker_id as usize;
+        if wid >= n {
+            return Err(TransportError::BadHandshake("worker id out of range"));
+        }
+        if slots[wid].is_some() {
+            return Err(TransportError::BadHandshake("duplicate worker id"));
+        }
+        slots[wid] = Some(conn);
+    }
+    Ok(slots
+        .into_iter()
+        .map(|s| s.expect("all slots filled"))
+        .collect())
+}
+
+/// Arrival-order multiplexer over many connections: one reader thread per
+/// link feeds `(id, frame)` pairs into a single queue — how the SSP
+/// parameter server consumes pushes from any worker, whichever finishes
+/// first (the transport equivalent of the `mpsc` the server used to own).
+///
+/// The mux owns its connections; callers keep [`LinkCounters`] handles for
+/// byte accounting. Iteration ends when every peer has closed its link.
+pub struct Mux {
+    rx: Option<mpsc::Receiver<(u32, Result<Vec<u8>, TransportError>)>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Mux {
+    pub fn new(conns: Vec<(u32, Box<dyn Connection>)>) -> Self {
+        let (tx, rx) = mpsc::channel();
+        let handles = conns
+            .into_iter()
+            .map(|(id, mut conn)| {
+                let tx = tx.clone();
+                std::thread::spawn(move || loop {
+                    let mut buf = Vec::new();
+                    match conn.recv(&mut buf) {
+                        Ok(()) => {
+                            if tx.send((id, Ok(buf))).is_err() {
+                                break; // mux consumer gone
+                            }
+                        }
+                        Err(TransportError::Closed) => break,
+                        Err(e) => {
+                            let _ = tx.send((id, Err(e)));
+                            break;
+                        }
+                    }
+                })
+            })
+            .collect();
+        Self {
+            rx: Some(rx),
+            handles,
+        }
+    }
+
+    /// Next frame from any link, in arrival order; `None` once every link
+    /// has closed.
+    pub fn recv(&mut self) -> Option<(u32, Result<Vec<u8>, TransportError>)> {
+        self.rx.as_ref().and_then(|rx| rx.recv().ok())
+    }
+}
+
+impl Drop for Mux {
+    fn drop(&mut self) {
+        // Disconnect the queue first so a reader's next send observes the
+        // closed consumer, then reap only the readers that have already
+        // exited. A reader still parked in a blocking `recv()` on a live
+        // link is detached rather than joined — it exits on its own when
+        // the peer closes — so dropping a Mux mid-run (e.g. during a panic
+        // unwind) can never hang the process.
+        drop(self.rx.take());
+        for h in self.handles.drain(..) {
+            if h.is_finished() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_framed_bytes() {
+        let c = LinkCounters::new();
+        c.add_tx(100);
+        c.add_tx(0);
+        c.add_rx(24);
+        assert_eq!(c.bytes_tx(), 100 + 2 * FRAME_OVERHEAD as u64);
+        assert_eq!(c.bytes_rx(), 24 + FRAME_OVERHEAD as u64);
+        assert_eq!(c.frames_tx(), 2);
+        assert_eq!(c.frames_rx(), 1);
+        let clone = c.clone();
+        c.add_rx(1);
+        assert_eq!(clone.frames_rx(), 2, "clones share the same cells");
+        assert_eq!(clone.bytes_total(), clone.bytes_tx() + clone.bytes_rx());
+    }
+
+    #[test]
+    fn accept_n_orders_by_worker_id_and_rejects_bad_ids() {
+        let t = InProcTransport::new();
+        let mut listener = t.listen("acc").unwrap();
+        // Connect out of order; accept_n must hand back id order.
+        for wid in [2u32, 0, 1] {
+            let _ = t.connect("acc", &Hello::new(wid)).unwrap();
+        }
+        let conns = accept_n(listener.as_mut(), 3).unwrap();
+        for (wid, conn) in conns.iter().enumerate() {
+            assert!(conn.peer().contains(&format!("w{wid}")), "{}", conn.peer());
+        }
+        // Out-of-range and duplicate ids are clean handshake errors.
+        let mut listener = t.listen("acc2").unwrap();
+        let _ = t.connect("acc2", &Hello::new(9)).unwrap();
+        assert!(matches!(
+            accept_n(listener.as_mut(), 2),
+            Err(TransportError::BadHandshake(_))
+        ));
+        let mut listener = t.listen("acc3").unwrap();
+        let _ = t.connect("acc3", &Hello::new(0)).unwrap();
+        let _ = t.connect("acc3", &Hello::new(0)).unwrap();
+        assert!(matches!(
+            accept_n(listener.as_mut(), 2),
+            Err(TransportError::BadHandshake(_))
+        ));
+    }
+
+    #[test]
+    fn io_error_eof_maps_to_closed() {
+        let eof = std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "eof");
+        assert!(matches!(TransportError::from(eof), TransportError::Closed));
+        let other = std::io::Error::new(std::io::ErrorKind::PermissionDenied, "no");
+        assert!(matches!(TransportError::from(other), TransportError::Io(_)));
+    }
+
+    #[test]
+    fn errors_display() {
+        let msgs = [
+            TransportError::Closed.to_string(),
+            TransportError::FrameTooLarge(1 << 40).to_string(),
+            TransportError::BadHandshake("x").to_string(),
+            TransportError::VersionMismatch { ours: 1, theirs: 2 }.to_string(),
+            TransportError::NoSuchAddress("ps".into()).to_string(),
+            TransportError::UnexpectedMessage("weights").to_string(),
+        ];
+        for m in msgs {
+            assert!(!m.is_empty());
+        }
+    }
+}

@@ -101,9 +101,10 @@ fn steady_state_compression_is_allocation_free() {
 
     // --- Sharded path: shard buffers reused ----------------------------
     // (Same #[test] on purpose: a concurrent test thread would pollute the
-    // global counter.) The parallel path allocates for thread spawning —
-    // inherent to std::thread::scope — but its shard buffers must be
-    // reused, so the per-call count stays bounded and far below one
+    // global counter.) The parallel path runs on the persistent ShardPool —
+    // threads are spawned once, not per call — so the steady-state cost is
+    // a handful of job boxes and queue nodes per call; shard buffers must
+    // be reused, keeping the per-call count bounded and far below one
     // allocation per coordinate.
     let d = 1 << 17;
     let g = gradient(d, 7);
