@@ -74,6 +74,10 @@ fn main() {
     let Some(backend) = args.get("transport") else {
         return;
     };
+    let codec = args
+        .get("codec")
+        .map(|s| gsparse::coding::WireCodec::parse(s).expect("codec raw|entropy"))
+        .unwrap_or_default();
     let cfg = DistConfig {
         workers: args.get_parse("dist-workers", 2),
         rounds: args.get_parse("rounds", 300),
@@ -88,6 +92,7 @@ fn main() {
         c1: base.c1,
         c2: base.c2,
         reg: base.reg,
+        codec,
     };
     println!(
         "\nDistributed runtime: {} workers x {} rounds over '{backend}' vs 'inproc'...",

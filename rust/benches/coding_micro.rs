@@ -1,8 +1,13 @@
 //! Microbenchmarks for the §3.3 wire codec: encode, decode, and the
-//! all-reduce merge, across densities (both encodings get exercised).
+//! all-reduce merge, across densities (all encodings get exercised) and
+//! across both [`WireCodec`]s. Besides timings, this writes the
+//! **measured-bytes / ideal-bits** ratio per (codec, d, ρ) point to
+//! `BENCH_coding.json` (override with `GSPARSE_BENCH_OUT`) — the trajectory
+//! that shows the entropy coder closing the gap to the Theorem-4 bound;
+//! the acceptance point is d = 2²⁰, ρ = 0.01.
 
-use gsparse::benchkit::{black_box, section, Bencher};
-use gsparse::coding;
+use gsparse::benchkit::{black_box, section, Bencher, JsonReport};
+use gsparse::coding::{self, WireCodec};
 use gsparse::comm::{Aggregator, NetworkModel, ReduceAlgo};
 use gsparse::rngkit::{RandArray, Xoshiro256pp};
 use gsparse::sparsify::{greedy_probs, sample_sparse, SparseGrad};
@@ -12,40 +17,82 @@ fn message(d: usize, rho: f32, seed: u64) -> SparseGrad {
     let g: Vec<f32> = (0..d).map(|_| (rng.next_gaussian() * 0.3) as f32).collect();
     let mut p = Vec::new();
     let pv = greedy_probs(&g, rho, 2, &mut p);
-    let mut rand = RandArray::from_seed(seed ^ 1, 1 << 20);
+    let mut rand = RandArray::from_seed(seed ^ 1, 1 << 22);
     sample_sparse(&g, &p, pv.inv_lambda, &mut rand)
 }
 
 fn main() {
     let b = Bencher::default();
+    let mut report = JsonReport::new();
 
-    section("encode / decode (d = 262144)");
-    let d = 262_144;
-    for rho in [0.01f32, 0.05, 0.5] {
-        let sg = message(d, rho, 10);
-        let mut buf = Vec::new();
-        let enc = coding::encode(&sg, &mut buf);
-        b.bench(
-            &format!("encode rho={rho} ({enc:?}, {} B)", buf.len()),
-            Some(sg.nnz() as u64),
-            || {
-                black_box(coding::encode(black_box(&sg), &mut buf));
-            },
-        );
-        b.bench(&format!("decode rho={rho}"), Some(sg.nnz() as u64), || {
-            black_box(coding::decode(black_box(&buf)).unwrap());
-        });
+    for codec in [WireCodec::Raw, WireCodec::Entropy] {
+        section(&format!("encode / decode, codec = {codec} (d = 262144)"));
+        let d = 262_144;
+        for rho in [0.01f32, 0.05, 0.5] {
+            let sg = message(d, rho, 10);
+            let mut buf = Vec::new();
+            let enc = coding::encode_with(&sg, codec, &mut buf);
+            let s = b.bench(
+                &format!("encode[{codec}] rho={rho} ({enc:?}, {} B)", buf.len()),
+                Some(sg.nnz() as u64),
+                || {
+                    black_box(coding::encode_with(black_box(&sg), codec, &mut buf));
+                },
+            );
+            report.push(&s);
+            let s = b.bench(
+                &format!("decode[{codec}] rho={rho}"),
+                Some(sg.nnz() as u64),
+                || {
+                    black_box(coding::decode(black_box(&buf)).unwrap());
+                },
+            );
+            report.push(&s);
+        }
+    }
+
+    // ---- the gap to the ideal-bit model, per codec ---------------------
+    section("measured bytes / Theorem-4 ideal bits");
+    for (d, rho) in [(1usize << 20, 0.01f32), (1 << 18, 0.01), (1 << 16, 0.05)] {
+        let sg = message(d, rho, 30);
+        let ideal_bits = coding::ideal_message_bits(&sg);
+        for codec in [WireCodec::Raw, WireCodec::Entropy] {
+            let mut buf = Vec::new();
+            coding::encode_with(&sg, codec, &mut buf);
+            let ratio = (buf.len() as f64 * 8.0) / ideal_bits as f64;
+            println!(
+                "  codec={codec:<7} d=2^{:<2} rho={rho:<5} nnz={:<7} \
+                 measured {:>9} B  ideal {:>9} bits  ratio {ratio:.3}",
+                d.trailing_zeros(),
+                sg.nnz(),
+                buf.len(),
+                ideal_bits,
+            );
+            report.push_metric(
+                &format!("bytes_over_ideal_bits/{codec}/d{d}_rho{rho}"),
+                ratio,
+            );
+        }
     }
 
     section("all-reduce merge of M=4 encoded messages (d = 262144)");
+    let d = 262_144;
     for rho in [0.01f32, 0.05] {
         let grads: Vec<SparseGrad> = (0..4).map(|m| message(d, rho, 20 + m)).collect();
         let mut out = vec![0.0f32; d];
         for algo in [ReduceAlgo::Naive, ReduceAlgo::Sparse] {
             let mut agg = Aggregator::new(NetworkModel::datacenter_10g(), algo);
-            b.bench(&format!("reduce {algo:?} rho={rho}"), Some(d as u64), || {
+            let s = b.bench(&format!("reduce {algo:?} rho={rho}"), Some(d as u64), || {
                 black_box(agg.reduce(black_box(&grads), &mut out));
             });
+            report.push(&s);
         }
+    }
+
+    let out_path =
+        std::env::var("GSPARSE_BENCH_OUT").unwrap_or_else(|_| "BENCH_coding.json".to_string());
+    match report.write(&out_path) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
     }
 }

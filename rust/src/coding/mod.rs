@@ -11,14 +11,23 @@
 //!   symbol per coordinate (0 = dropped, ±1 = QB survivor with sign,
 //!   2 = QA survivor) followed by the QA floats in coordinate order.
 //!
-//! [`entropy`] provides the entropy-coded size bound
-//! `Σ_ℓ d_ℓ log₂(d/d_ℓ) ≤ 2d` the paper cites for `q̃`.
+//! The negotiated [`WireCodec`] widens that choice: under
+//! [`WireCodec::Entropy`] the encoder may also emit **IndexedRice** —
+//! sorted index streams delta-coded and Golomb-Rice compressed ([`rice`]),
+//! with the per-message parameters carried in the header — which is what
+//! actually closes the gap between measured wire bytes and the Theorem-4
+//! ideal bits that [`entropy`]'s bound
+//! `Σ_ℓ d_ℓ log₂(d/d_ℓ) ≤ 2d` only accounts.
 
 mod entropy;
 mod message;
+pub mod rice;
 
 pub use entropy::{symbol_entropy_bits, SymbolCounts};
-pub use message::{decode, decode_into, encode, encoded_len, Encoding, WireError, HEADER_LEN};
+pub use message::{
+    decode, decode_into, encode, encode_with, encoded_len, encoded_len_with, Encoding, WireCodec,
+    WireError, HEADER_LEN,
+};
 
 use crate::sparsify::{index_bits, SparseGrad, FLOAT_BITS};
 

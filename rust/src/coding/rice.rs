@@ -1,0 +1,295 @@
+//! Golomb-Rice coding of index-gap streams — the bit-level half of the
+//! `Entropy` wire codec.
+//!
+//! A sorted, strictly-ascending index sequence `i_0 < i_1 < …` is turned
+//! into non-negative *gaps* (`g_0 = i_0`, `g_j = i_j − i_{j−1} − 1`), which
+//! for the sparsifier's near-uniform survivor pattern are approximately
+//! geometric — exactly the distribution Rice codes are optimal for. Each gap
+//! is written as `q = g >> k` one-bits, a terminating zero bit, then the `k`
+//! low bits of `g` (LSB first); `k` is chosen per stream from the observed
+//! gap distribution and carried in the message header.
+//!
+//! Bit order is LSB-first within each byte (the same convention as the
+//! 2-bit dense-symbol packing), and the stream is zero-padded to a byte
+//! boundary — the decoder rejects non-zero padding so every message has
+//! exactly one canonical byte form (what the golden-fixture tests pin).
+//!
+//! Everything here is branch-simple byte shuffling over caller-held
+//! buffers: encoding appends to a reused `Vec<u8>`, decoding borrows the
+//! stream, and neither path allocates.
+
+/// Largest accepted Rice parameter: indices are `u32`, so `k ≥ 32` can never
+/// shorten a codeword and is rejected on decode as adversarial.
+pub const MAX_RICE_PARAM: u8 = 31;
+
+/// Decode-side failures of the bit stream itself (the message layer maps
+/// these onto `WireError`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RiceError {
+    /// The stream ended in the middle of a codeword.
+    Truncated,
+    /// A unary quotient run exceeded the caller's bound — the gap it
+    /// encodes could not fit the dimension, so the scan stops early
+    /// instead of walking an adversarial all-ones payload.
+    QuotientOverflow,
+}
+
+/// Total bits a gap stream costs at parameter `k` (`q + 1 + k` per gap).
+pub fn stream_bits<I: Iterator<Item = u32>>(gaps: I, k: u32) -> u64 {
+    gaps.map(|g| (g >> k) as u64 + 1 + k as u64).sum()
+}
+
+/// Pick the Rice parameter for a gap stream: seed `k` from the mean gap
+/// (the classic `⌊log₂(mean+1)⌋` estimate), then refine by exact cost over
+/// the neighbouring parameters. Returns `(k, total stream bits at k)` so
+/// the caller never has to re-walk the stream for the winning cost. `gaps`
+/// is a factory so the caller can hand over a recomputable iterator instead
+/// of a buffered stream — choosing the parameter allocates nothing.
+pub fn choose_param<F, I>(gaps: F) -> (u8, u64)
+where
+    F: Fn() -> I,
+    I: Iterator<Item = u32>,
+{
+    let (mut n, mut sum) = (0u64, 0u64);
+    for g in gaps() {
+        n += 1;
+        sum += g as u64;
+    }
+    if n == 0 {
+        return (0, 0);
+    }
+    let mean = sum / n;
+    let k0 = 63 - (mean + 1).leading_zeros() as i64; // ⌊log₂(mean+1)⌋
+    let mut best_k = 0u8;
+    let mut best_cost = u64::MAX;
+    for k in [k0 - 1, k0, k0 + 1] {
+        let k = k.clamp(0, MAX_RICE_PARAM as i64) as u32;
+        let cost = stream_bits(gaps(), k);
+        // Strict `<` keeps the lowest k on ties (deterministic bytes).
+        if cost < best_cost {
+            best_cost = cost;
+            best_k = k as u8;
+        }
+    }
+    (best_k, best_cost)
+}
+
+/// Append-only bit sink over a byte buffer (LSB-first within each byte).
+pub struct BitWriter<'a> {
+    out: &'a mut Vec<u8>,
+    cur: u8,
+    nbits: u32,
+}
+
+impl<'a> BitWriter<'a> {
+    pub fn new(out: &'a mut Vec<u8>) -> Self {
+        Self {
+            out,
+            cur: 0,
+            nbits: 0,
+        }
+    }
+
+    #[inline]
+    fn push_bit(&mut self, bit: bool) {
+        if bit {
+            self.cur |= 1 << self.nbits;
+        }
+        self.nbits += 1;
+        if self.nbits == 8 {
+            self.out.push(self.cur);
+            self.cur = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Write one Rice codeword for `gap` at parameter `k`.
+    pub fn write_rice(&mut self, gap: u32, k: u32) {
+        let q = gap >> k;
+        for _ in 0..q {
+            self.push_bit(true);
+        }
+        self.push_bit(false);
+        for b in 0..k {
+            self.push_bit(gap & (1 << b) != 0);
+        }
+    }
+
+    /// Flush the partial final byte (zero-padded) into the buffer.
+    pub fn finish(self) {
+        if self.nbits > 0 {
+            self.out.push(self.cur);
+        }
+    }
+}
+
+/// Bounds-checked bit reader over a received stream.
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    /// Next bit to read, in bits from the start of `data`.
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        Self { data, pos: 0 }
+    }
+
+    #[inline]
+    fn read_bit(&mut self) -> Option<bool> {
+        let byte = *self.data.get(self.pos / 8)?;
+        let bit = byte & (1 << (self.pos % 8)) != 0;
+        self.pos += 1;
+        Some(bit)
+    }
+
+    /// Read one Rice codeword at parameter `k`, rejecting unary quotients
+    /// above `q_max` (gaps are bounded by the dimension, so anything larger
+    /// is a malformed or adversarial stream).
+    pub fn read_rice(&mut self, k: u32, q_max: u32) -> Result<u32, RiceError> {
+        let mut q: u32 = 0;
+        loop {
+            match self.read_bit() {
+                None => return Err(RiceError::Truncated),
+                Some(false) => break,
+                Some(true) => {
+                    q += 1;
+                    if q > q_max {
+                        return Err(RiceError::QuotientOverflow);
+                    }
+                }
+            }
+        }
+        let mut rem: u32 = 0;
+        for b in 0..k {
+            match self.read_bit() {
+                None => return Err(RiceError::Truncated),
+                Some(bit) => {
+                    if bit {
+                        rem |= 1 << b;
+                    }
+                }
+            }
+        }
+        Ok((q << k) | rem)
+    }
+
+    /// Bytes fully or partially consumed so far.
+    pub fn consumed_bytes(&self) -> usize {
+        self.pos.div_ceil(8)
+    }
+
+    /// True iff every remaining bit of the partially-consumed final byte is
+    /// zero — the canonical-padding requirement.
+    pub fn padding_is_zero(&self) -> bool {
+        let end = self.consumed_bytes() * 8;
+        let mut probe = BitReader {
+            data: self.data,
+            pos: self.pos,
+        };
+        while probe.pos < end {
+            if probe.read_bit() == Some(true) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(gaps: &[u32], k: u32) {
+        let mut buf = Vec::new();
+        let mut w = BitWriter::new(&mut buf);
+        for &g in gaps {
+            w.write_rice(g, k);
+        }
+        w.finish();
+        assert_eq!(
+            buf.len() as u64,
+            stream_bits(gaps.iter().copied(), k).div_ceil(8),
+            "stream_bits must predict the byte length exactly"
+        );
+        let mut r = BitReader::new(&buf);
+        for &g in gaps {
+            assert_eq!(r.read_rice(k, u32::MAX).unwrap(), g, "k={k}");
+        }
+        assert_eq!(r.consumed_bytes(), buf.len());
+        assert!(r.padding_is_zero());
+    }
+
+    #[test]
+    fn rice_roundtrips_across_parameters() {
+        for k in [0u32, 1, 3, 7, 15, 31] {
+            roundtrip(&[0, 1, 2, 5, 100, 0, 63, 1 << 16], k);
+            roundtrip(&[], k);
+            roundtrip(&[0], k);
+        }
+        // A gap needing all 32 bits at k = 31.
+        roundtrip(&[u32::MAX], 31);
+    }
+
+    #[test]
+    fn choose_param_tracks_the_gap_scale() {
+        // Mean gap ~1 → small k; mean gap ~1000 → k near 10.
+        let (small, _) = choose_param(|| [0u32, 1, 2, 1, 0, 3].into_iter());
+        assert!(small <= 2, "{small}");
+        let (big, _) = choose_param(|| std::iter::repeat(1000u32).take(64));
+        assert!((8..=11).contains(&big), "{big}");
+        assert_eq!(choose_param(|| std::iter::empty::<u32>()), (0, 0));
+    }
+
+    #[test]
+    fn chosen_param_is_locally_optimal_and_cost_is_exact() {
+        // The refined choice must never lose to its immediate neighbours,
+        // and the returned cost must equal the recomputed stream bits.
+        let gaps: Vec<u32> = (0..200u32).map(|i| (i * 37) % 513).collect();
+        let (k, cost) = choose_param(|| gaps.iter().copied());
+        let k = k as u32;
+        assert_eq!(cost, stream_bits(gaps.iter().copied(), k));
+        for nk in [k.saturating_sub(1), k + 1] {
+            if nk != k && nk <= MAX_RICE_PARAM as u32 {
+                assert!(cost <= stream_bits(gaps.iter().copied(), nk));
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_and_overflowing_streams_error() {
+        let mut buf = Vec::new();
+        let mut w = BitWriter::new(&mut buf);
+        w.write_rice(77, 2);
+        w.finish();
+        // Truncation: drop the final byte.
+        let mut r = BitReader::new(&buf[..buf.len() - 1]);
+        assert!(matches!(
+            r.read_rice(2, u32::MAX),
+            Err(RiceError::Truncated) | Ok(_)
+        ));
+        // All-ones stream: the quotient bound stops the scan.
+        let ones = [0xFFu8; 16];
+        let mut r = BitReader::new(&ones);
+        assert_eq!(r.read_rice(0, 100), Err(RiceError::QuotientOverflow));
+        // Empty stream is truncation, not a panic.
+        let mut r = BitReader::new(&[]);
+        assert_eq!(r.read_rice(3, 10), Err(RiceError::Truncated));
+    }
+
+    #[test]
+    fn padding_check_flags_nonzero_tail() {
+        let mut buf = Vec::new();
+        let mut w = BitWriter::new(&mut buf);
+        w.write_rice(1, 0); // 2 bits: "10" → one byte with 6 padding bits
+        w.finish();
+        let mut r = BitReader::new(&buf);
+        r.read_rice(0, 10).unwrap();
+        assert!(r.padding_is_zero());
+        let mut bad = buf.clone();
+        bad[0] |= 0x80; // flip the top padding bit
+        let mut r = BitReader::new(&bad);
+        r.read_rice(0, 10).unwrap();
+        assert!(!r.padding_is_zero());
+    }
+}

@@ -15,6 +15,7 @@
 //! layer" — every layer has its own probability vector, its own λ, and its
 //! own message.
 
+use crate::coding::WireCodec;
 use crate::comm::NetworkModel;
 use crate::metrics::{CommLedger, SparsityMeter, VarianceRatio};
 use crate::rngkit::{RandArray, Xoshiro256pp};
@@ -53,6 +54,8 @@ pub struct Cluster {
     comm: Vec<Option<WorkerComm>>,
     /// Leader-side ends of the per-worker transport links, by worker id.
     leader_links: Vec<Box<dyn Connection>>,
+    /// Negotiated wire codec for every per-layer sparse message.
+    pub codec: WireCodec,
     pub net: NetworkModel,
     pub var_meter: VarianceRatio,
     pub spa_meter: SparsityMeter,
@@ -63,7 +66,23 @@ pub struct Cluster {
 impl Cluster {
     /// `layer_dims[l]` = flat size of layer `l`; one compressor per
     /// (worker, layer), built by `make_compressor` (e.g. GSpar at ρ).
-    pub fn new<F>(workers: usize, layer_dims: &[usize], seed: u64, mut make_compressor: F) -> Self
+    /// Messages travel under [`WireCodec::Raw`]; see [`Cluster::with_codec`].
+    pub fn new<F>(workers: usize, layer_dims: &[usize], seed: u64, make_compressor: F) -> Self
+    where
+        F: FnMut() -> Box<dyn Compressor>,
+    {
+        Self::with_codec(workers, layer_dims, seed, WireCodec::Raw, make_compressor)
+    }
+
+    /// [`Cluster::new`] with an explicit wire codec, negotiated into every
+    /// worker's handshake.
+    pub fn with_codec<F>(
+        workers: usize,
+        layer_dims: &[usize],
+        seed: u64,
+        codec: WireCodec,
+        mut make_compressor: F,
+    ) -> Self
     where
         F: FnMut() -> Box<dyn Compressor>,
     {
@@ -82,7 +101,7 @@ impl Cluster {
                         layer_dims.iter().sum::<usize>().max(1 << 12) * 2,
                     ),
                     conn: transport
-                        .connect("cluster", &Hello::new(w as u32))
+                        .connect("cluster", &Hello::with_codec(w as u32, codec))
                         .expect("in-process connect"),
                     wire: Vec::new(),
                     frame_buf: Vec::new(),
@@ -92,12 +111,14 @@ impl Cluster {
             })
             .collect();
         let leader_links: Vec<Box<dyn Connection>> =
-            crate::transport::accept_n(listener.as_mut(), workers).expect("in-process accept");
+            crate::transport::accept_n(listener.as_mut(), workers, codec)
+                .expect("in-process accept");
         Self {
             workers,
             layers: layer_dims.to_vec(),
             comm,
             leader_links,
+            codec,
             net: NetworkModel::commodity_1g(),
             var_meter: VarianceRatio::default(),
             spa_meter: SparsityMeter::default(),
@@ -123,6 +144,7 @@ impl Cluster {
             .iter_mut()
             .map(|s| s.take().expect("worker state present"))
             .collect();
+        let codec = self.codec;
         let returned: Vec<WorkerComm> = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(self.workers);
             for (w, mut st) in states.into_iter().enumerate() {
@@ -135,7 +157,7 @@ impl Cluster {
                         let msg = &st.msgs[l];
                         let (kind, q_norm): (u8, f64) = match msg {
                             Compressed::Sparse(sg) => {
-                                crate::coding::encode(sg, &mut st.wire);
+                                crate::coding::encode_with(sg, codec, &mut st.wire);
                                 (0, msg.norm2_sq())
                             }
                             other => {
@@ -208,7 +230,8 @@ impl Cluster {
                 per_worker_bytes[w] += upload;
                 self.var_meter.record(header.q_norm_sq, header.g_norm_sq);
                 self.spa_meter.record(header.expected_nnz, layers[l].max(1));
-                self.ledger.record(header.ideal_bits, upload);
+                let msg_codec = if header.kind == 0 { codec } else { WireCodec::Raw };
+                self.ledger.record_codec(header.ideal_bits, upload, msg_codec);
             }
         }
         let broadcast: u64 = layers.iter().map(|&dim| (dim * 4) as u64).sum();
@@ -292,6 +315,36 @@ mod tests {
         }
         assert!(cluster.var_meter.value() > 1.0);
         assert!(cluster.spa_meter.value() < 0.5);
+    }
+
+    #[test]
+    fn entropy_codec_same_updates_fewer_bytes() {
+        let dims = [512usize, 128];
+        let grads = grads_for(2, &dims, 58);
+        let run = |codec| {
+            let mut cluster = Cluster::with_codec(2, &dims, 59, codec, || {
+                sparsify::build(Method::GSpar, 0.1, 0.0, 4)
+            });
+            let upd = cluster.round(&grads);
+            (upd, cluster.ledger.clone())
+        };
+        let (raw_upd, raw_ledger) = run(WireCodec::Raw);
+        let (ent_upd, ent_ledger) = run(WireCodec::Entropy);
+        // Identical decoded per-layer updates, strictly fewer bytes.
+        for (a, b) in raw_upd.iter().zip(&ent_upd) {
+            assert_eq!(a.grad, b.grad);
+        }
+        assert!(
+            ent_ledger.wire_bytes < raw_ledger.wire_bytes,
+            "entropy {} !< raw {}",
+            ent_ledger.wire_bytes,
+            raw_ledger.wire_bytes
+        );
+        assert!(ent_ledger.measured_bytes < raw_ledger.measured_bytes);
+        assert_eq!(
+            ent_ledger.wire_bytes_by_codec[WireCodec::Entropy.index()],
+            ent_ledger.wire_bytes
+        );
     }
 
     #[test]

@@ -27,6 +27,7 @@
 //! (handshakes, pulls, weights, gradients, shutdowns — payload plus length
 //! prefixes), summed from the per-link [`LinkCounters`].
 
+use crate::coding::WireCodec;
 use crate::config::Method;
 use crate::coordinator::sync::estimate_f_star;
 use crate::data::gen_logistic;
@@ -62,6 +63,9 @@ pub struct DistConfig {
     pub c1: f32,
     pub c2: f32,
     pub reg: f32,
+    /// Wire codec for sparse gradient payloads; every worker's handshake
+    /// must announce the same one or the accept phase refuses the link.
+    pub codec: WireCodec,
 }
 
 impl Default for DistConfig {
@@ -80,11 +84,14 @@ impl Default for DistConfig {
             c1: 0.6,
             c2: 0.25,
             reg: 1.0 / (10.0 * 1024.0),
+            codec: WireCodec::Raw,
         }
     }
 }
 
-const CONFIG_VERSION: u8 = 1;
+/// Version 2 appended the wire-codec byte.
+const CONFIG_VERSION: u8 = 2;
+const CONFIG_LEN: usize = 2 + 6 * 4 + 8 + 5 * 4 + 1;
 
 impl DistConfig {
     /// Serialize for the `CONFIG` frame (fixed-width LE fields).
@@ -110,11 +117,12 @@ impl DistConfig {
         for v in [self.rho, self.lr, self.c1, self.c2, self.reg] {
             out.extend_from_slice(&v.to_le_bytes());
         }
+        out.push(self.codec.index() as u8);
         out
     }
 
     pub fn decode(buf: &[u8]) -> anyhow::Result<Self> {
-        anyhow::ensure!(buf.len() == 2 + 6 * 4 + 8 + 5 * 4, "config frame length");
+        anyhow::ensure!(buf.len() == CONFIG_LEN, "config frame length");
         anyhow::ensure!(buf[0] == CONFIG_VERSION, "config version {}", buf[0]);
         let method = *Method::all()
             .get(buf[1] as usize)
@@ -126,6 +134,8 @@ impl DistConfig {
         let f32_at = |i: usize| {
             f32::from_le_bytes(buf[f_base + 4 * i..f_base + 4 * (i + 1)].try_into().unwrap())
         };
+        let codec = WireCodec::from_u8(buf[CONFIG_LEN - 1])
+            .ok_or_else(|| anyhow::anyhow!("unknown codec id {}", buf[CONFIG_LEN - 1]))?;
         Ok(Self {
             workers: u32_at(0) as usize,
             rounds: u32_at(1) as usize,
@@ -140,6 +150,7 @@ impl DistConfig {
             c1: f32_at(2),
             c2: f32_at(3),
             reg: f32_at(4),
+            codec,
         })
     }
 }
@@ -182,8 +193,9 @@ pub fn serve(listener: &mut dyn Listener, cfg: &DistConfig) -> anyhow::Result<Di
     let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
     let model = LogisticModel::new(cfg.reg);
 
-    // ---- accept + config distribution ----
-    let mut conns: Vec<Box<dyn Connection>> = crate::transport::accept_n(listener, cfg.workers)?;
+    // ---- accept + config distribution (codec agreement checked here) ----
+    let mut conns: Vec<Box<dyn Connection>> =
+        crate::transport::accept_n(listener, cfg.workers, cfg.codec)?;
     let counters: Vec<LinkCounters> = conns.iter().map(|c| c.counters()).collect();
     let cfg_bytes = cfg.encode();
     let mut txbuf = Vec::new();
@@ -251,16 +263,19 @@ pub fn serve(listener: &mut dyn Listener, cfg: &DistConfig) -> anyhow::Result<Di
             var_meter.record(header.q_norm_sq, header.g_norm_sq);
             spa_meter.record(header.expected_nnz, d);
             // Wire-column convention shared with sync/cluster: sparse
-            // messages cost their codec bytes; quantized/dense fallbacks
-            // (which travel as raw f32 only because no byte codec exists
-            // for them) are ledgered at their idealized size. The measured
-            // column records what actually crossed the link either way.
+            // messages cost their codec bytes (ledgered under the
+            // negotiated codec's column); quantized/dense fallbacks (which
+            // travel as raw f32 only because no byte codec exists for
+            // them) are ledgered at their idealized size under `Raw`. The
+            // measured column records what actually crossed the link
+            // either way.
             let upload = if header.kind == 0 {
                 payload.len() as u64
             } else {
                 (header.ideal_bits / 8).max(1)
             };
-            curve.ledger.record(header.ideal_bits, upload);
+            let msg_codec = if header.kind == 0 { cfg.codec } else { WireCodec::Raw };
+            curve.ledger.record_codec(header.ideal_bits, upload, msg_codec);
             round_bytes[wid] = upload;
             if t % record_every == 0 || t == total {
                 curve.points.push(CurvePoint {
@@ -304,9 +319,15 @@ pub fn serve(listener: &mut dyn Listener, cfg: &DistConfig) -> anyhow::Result<Di
     })
 }
 
-/// Run the worker side over an established connection. `worker_id` must
-/// match the id in the connection's hello (it seeds the RNG streams).
-pub fn run_worker(conn: &mut dyn Connection, worker_id: u32) -> anyhow::Result<()> {
+/// Run the worker side over an established connection. `worker_id` and
+/// `codec` must match the hello this connection was opened with (the id
+/// seeds the RNG streams; the codec was negotiated at accept time, and the
+/// server-shipped config must agree with it).
+pub fn run_worker(
+    conn: &mut dyn Connection,
+    worker_id: u32,
+    codec: WireCodec,
+) -> anyhow::Result<()> {
     let mut rxbuf = Vec::new();
     let mut txbuf = Vec::new();
     conn.recv(&mut rxbuf)?;
@@ -314,6 +335,11 @@ pub fn run_worker(conn: &mut dyn Connection, worker_id: u32) -> anyhow::Result<(
         MsgView::Config { bytes } => DistConfig::decode(bytes)?,
         _ => anyhow::bail!("expected config from server"),
     };
+    anyhow::ensure!(
+        cfg.codec == codec,
+        "server config says codec {}, this worker negotiated {codec}",
+        cfg.codec
+    );
     let d = cfg.d;
     let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
     let model = LogisticModel::new(cfg.reg);
@@ -356,7 +382,7 @@ pub fn run_worker(conn: &mut dyn Connection, worker_id: u32) -> anyhow::Result<(
         let q_norm_sq = msg.norm2_sq();
         let (kind, payload): (u8, &[u8]) = match &msg {
             Compressed::Sparse(sg) => {
-                crate::coding::encode(sg, &mut wire);
+                crate::coding::encode_with(sg, codec, &mut wire);
                 (0, &wire)
             }
             other => {
@@ -396,9 +422,11 @@ where
         for wid in 0..cfg.workers {
             let transport = transport.clone();
             let addr = addr.clone();
+            let codec = cfg.codec;
             handles.push(scope.spawn(move || -> anyhow::Result<()> {
-                let mut conn = transport.connect(&addr, &Hello::new(wid as u32))?;
-                run_worker(conn.as_mut(), wid as u32)
+                let mut conn =
+                    transport.connect(&addr, &Hello::with_codec(wid as u32, codec))?;
+                run_worker(conn.as_mut(), wid as u32, codec)
             }));
         }
         let report = serve(listener.as_mut(), cfg);
@@ -439,6 +467,8 @@ pub fn run_processes(
             .arg(&addr)
             .arg("--id")
             .arg(wid.to_string())
+            .arg("--codec")
+            .arg(cfg.codec.to_string())
             .stdin(std::process::Stdio::null())
             .spawn()
             .map_err(|e| anyhow::anyhow!("spawning worker {wid} ({}): {e}", bin.display()))?;
@@ -455,6 +485,7 @@ pub fn run_processes(
         let children = Arc::clone(&children);
         let done = Arc::clone(&done);
         let addr = addr.clone();
+        let codec = cfg.codec;
         std::thread::spawn(move || {
             while !done.load(Ordering::Acquire) {
                 let failed = {
@@ -464,7 +495,10 @@ pub fn run_processes(
                     })
                 };
                 if failed {
-                    let _ = TcpTransport::new().connect(&addr, &Hello::new(u32::MAX));
+                    // The poison hello matches the negotiated codec so it
+                    // reaches the id check and fails there cleanly.
+                    let _ = TcpTransport::new()
+                        .connect(&addr, &Hello::with_codec(u32::MAX, codec));
                     return;
                 }
                 std::thread::sleep(std::time::Duration::from_millis(50));
@@ -514,17 +548,57 @@ mod tests {
 
     #[test]
     fn config_roundtrip() {
-        let cfg = DistConfig {
-            method: Method::Qsgd,
-            seed: 0xDEADBEEF,
+        for codec in [WireCodec::Raw, WireCodec::Entropy] {
+            let cfg = DistConfig {
+                method: Method::Qsgd,
+                seed: 0xDEADBEEF,
+                codec,
+                ..small_cfg()
+            };
+            let bytes = cfg.encode();
+            assert_eq!(DistConfig::decode(&bytes).unwrap(), cfg);
+            assert!(DistConfig::decode(&bytes[..bytes.len() - 1]).is_err());
+            let mut bad = bytes.clone();
+            bad[1] = 200;
+            assert!(DistConfig::decode(&bad).is_err());
+            let mut bad = bytes.clone();
+            *bad.last_mut().unwrap() = 9; // unknown codec id
+            assert!(DistConfig::decode(&bad).is_err());
+        }
+    }
+
+    #[test]
+    fn entropy_codec_reaches_identical_weights_with_fewer_bytes() {
+        // Same seeds, same schedule, different wire codec: the decoded
+        // gradients are identical, so the weight trajectory is bitwise
+        // equal — only the bytes on the wire shrink.
+        let raw_cfg = small_cfg();
+        let ent_cfg = DistConfig {
+            codec: WireCodec::Entropy,
             ..small_cfg()
         };
-        let bytes = cfg.encode();
-        assert_eq!(DistConfig::decode(&bytes).unwrap(), cfg);
-        assert!(DistConfig::decode(&bytes[..bytes.len() - 1]).is_err());
-        let mut bad = bytes.clone();
-        bad[1] = 200;
-        assert!(DistConfig::decode(&bad).is_err());
+        let raw = run_threads(InProcTransport::new(), "raw", &raw_cfg).unwrap();
+        let ent = run_threads(InProcTransport::new(), "ent", &ent_cfg).unwrap();
+        assert_eq!(raw.final_w, ent.final_w);
+        assert_eq!(raw.versions, ent.versions);
+        assert!(
+            ent.curve.ledger.wire_bytes < raw.curve.ledger.wire_bytes,
+            "entropy {} !< raw {}",
+            ent.curve.ledger.wire_bytes,
+            raw.curve.ledger.wire_bytes
+        );
+        assert!(
+            ent.curve.ledger.measured_bytes < raw.curve.ledger.measured_bytes,
+            "entropy framed {} !< raw framed {}",
+            ent.curve.ledger.measured_bytes,
+            raw.curve.ledger.measured_bytes
+        );
+        // Every sparse byte lands in the entropy column of the ledger.
+        assert_eq!(
+            ent.curve.ledger.wire_bytes_by_codec[WireCodec::Entropy.index()],
+            ent.curve.ledger.wire_bytes
+        );
+        assert_eq!(ent.curve.ledger.wire_bytes_by_codec[WireCodec::Raw.index()], 0);
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! `c − min_m' clock(m') ≤ max_staleness`, the classic SSP condition — the
 //! slowest worker is always runnable, so the protocol cannot deadlock.
 
+use crate::coding::WireCodec;
 use crate::config::Method;
 use crate::data::Dataset;
 use crate::metrics::{CurvePoint, RunCurve, VarianceRatio};
@@ -42,6 +43,9 @@ pub struct PsConfig {
     pub batch: usize,
     pub lr: f32,
     pub seed: u64,
+    /// Wire codec for sparse gradient pushes (negotiated in each worker's
+    /// handshake, exactly as on the TCP runtime).
+    pub codec: WireCodec,
 }
 
 impl Default for PsConfig {
@@ -55,6 +59,7 @@ impl Default for PsConfig {
             batch: 8,
             lr: 0.5,
             seed: 42,
+            codec: WireCodec::Raw,
         }
     }
 }
@@ -71,6 +76,10 @@ pub struct PsReport {
     /// Max observed staleness at pull time.
     pub max_observed_staleness: u64,
     pub wire_bytes: u64,
+    /// `wire_bytes` split by the codec each push was encoded under
+    /// (indexed by [`WireCodec::index`]; dense/quantized fallbacks land in
+    /// the `Raw` column).
+    pub wire_bytes_by_codec: [u64; 2],
     /// Measured framed bytes on the worker→server links (payloads plus
     /// length prefixes plus handshakes), from the transport counters.
     pub measured_bytes: u64,
@@ -113,12 +122,12 @@ pub fn run_param_server(
         .map(|wid| {
             Some(
                 transport
-                    .connect("ssp-ps", &Hello::new(wid as u32))
+                    .connect("ssp-ps", &Hello::with_codec(wid as u32, cfg.codec))
                     .expect("in-process connect"),
             )
         })
         .collect();
-    let server_ends = crate::transport::accept_n(listener.as_mut(), cfg.workers)
+    let server_ends = crate::transport::accept_n(listener.as_mut(), cfg.workers, cfg.codec)
         .expect("in-process accept");
     let link_counters: Vec<_> = server_ends.iter().map(|c| c.counters()).collect();
     let mut mux = Mux::new(
@@ -228,7 +237,7 @@ pub fn run_param_server(
                     let q_norm = msg.norm2_sq();
                     let (kind, payload): (u8, &[u8]) = match &msg {
                         Compressed::Sparse(sg) => {
-                            crate::coding::encode(sg, &mut wire);
+                            crate::coding::encode_with(sg, cfg.codec, &mut wire);
                             (0, &wire)
                         }
                         other => {
@@ -292,6 +301,16 @@ pub fn run_param_server(
                 }
                 *version += 1;
             }
+            // Same wire-column convention as the other coordinators: codec
+            // bytes under the negotiated codec, dense fallbacks at their
+            // idealized size under `Raw`.
+            if header.kind == 0 {
+                curve
+                    .ledger
+                    .record_codec(header.ideal_bits, payload.len() as u64, cfg.codec);
+            } else {
+                curve.ledger.record(header.ideal_bits, (header.ideal_bits / 8).max(1));
+            }
             // Publish the applied counter and wake SSP-gated workers. The
             // empty lock acquisition orders the publish against a worker's
             // gate check, preventing a missed wakeup.
@@ -320,6 +339,7 @@ pub fn run_param_server(
     let measured_bytes: u64 = link_counters.iter().map(|c| c.bytes_total()).sum();
     curve.var_ratio = var_meter.value();
     curve.ledger.set_measured(measured_bytes);
+    let wire_bytes_by_codec = curve.ledger.wire_bytes_by_codec;
     PsReport {
         curve,
         final_loss,
@@ -327,6 +347,7 @@ pub fn run_param_server(
         staleness_stalls: stalls.load(Ordering::Relaxed),
         max_observed_staleness: max_stale.load(Ordering::Relaxed),
         wire_bytes,
+        wire_bytes_by_codec,
         measured_bytes,
     }
 }
@@ -360,6 +381,39 @@ mod tests {
         assert!(report.wire_bytes > 0);
         assert!(report.curve.var_ratio > 1.0);
         assert!(!report.curve.points.is_empty());
+    }
+
+    #[test]
+    fn ps_entropy_codec_converges_with_fewer_wire_bytes() {
+        let (ds, model) = setup();
+        let mk = |codec| PsConfig {
+            total_pushes: 2000,
+            codec,
+            ..Default::default()
+        };
+        let raw = run_param_server(&mk(WireCodec::Raw), &ds, &model);
+        let ent = run_param_server(&mk(WireCodec::Entropy), &ds, &model);
+        let f0 = model.loss(&ds, &vec![0.0; 128]);
+        assert!(ent.final_loss < f0 * 0.8, "{f0} -> {}", ent.final_loss);
+        assert_eq!(ent.versions, 2000);
+        // The async schedule is nondeterministic, so the two runs push
+        // *different* gradient populations and this is a statistical
+        // comparison, not a per-message invariant: at this workload the
+        // entropy encoding averages ~30% fewer bytes per push, and the
+        // totals are means over 2000 pushes each, so the ordering holds
+        // with enormous margin. (The bitwise per-message guarantee is
+        // pinned by the deterministic sync/dist/cluster tests instead.)
+        assert!(
+            ent.wire_bytes < raw.wire_bytes,
+            "entropy {} !< raw {}",
+            ent.wire_bytes,
+            raw.wire_bytes
+        );
+        assert_eq!(ent.wire_bytes_by_codec[WireCodec::Raw.index()], 0);
+        assert_eq!(
+            ent.wire_bytes_by_codec[WireCodec::Entropy.index()],
+            ent.curve.ledger.wire_bytes
+        );
     }
 
     #[test]

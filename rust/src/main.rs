@@ -13,6 +13,7 @@
 //! * `version`.
 
 use gsparse::cli::Args;
+use gsparse::coding::WireCodec;
 use gsparse::config::{AsyncSvmConfig, ConvexConfig, Method, UpdateScheme};
 use gsparse::coordinator::dist::{self, DistConfig};
 use gsparse::coordinator::sync::{estimate_f_star, train_convex, OptKind, TrainOptions};
@@ -55,12 +56,12 @@ fn print_help() {
          \n\
          SUBCOMMANDS:\n\
            fig <1-9|theory|all> [--paper]   regenerate a paper figure\n\
-           train [--method M] [--rho R] [--epochs E] [--svrg] ...\n\
+           train [--method M] [--rho R] [--epochs E] [--codec raw|entropy] [--svrg] ...\n\
            async-svm [--threads T] [--scheme lock|atomic|wild] [--method M]\n\
            e2e [--steps N] [--workers M] [--rho R]   transformer end-to-end\n\
-           server [--addr H:P] [--workers M] [--rounds R] [--method M] ...\n\
-           worker --addr H:P --id N      one worker process (config from server)\n\
-           dist [--transport inproc|tcp] [--procs] [--workers M] ...\n\
+           server [--addr H:P] [--workers M] [--rounds R] [--codec C] ...\n\
+           worker --addr H:P --id N [--codec C]   one worker process (config from server)\n\
+           dist [--transport inproc|tcp] [--procs] [--codec raw|entropy] ...\n\
            version",
         gsparse::VERSION
     );
@@ -100,6 +101,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             OptKind::Sgd
         },
         f_star,
+        codec: parse_codec(args)?,
         ..Default::default()
     };
     let curve = train_convex(&cfg, &opts, &ds, &model);
@@ -148,8 +150,19 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
     gsparse::figures::run_transformer_e2e(steps, workers, rho)
 }
 
+/// `--codec raw|entropy` (default raw).
+fn parse_codec(args: &Args) -> anyhow::Result<WireCodec> {
+    match args.get("codec") {
+        None => Ok(WireCodec::Raw),
+        Some(s) => {
+            WireCodec::parse(s).ok_or_else(|| anyhow::anyhow!("unknown codec {s} (raw|entropy)"))
+        }
+    }
+}
+
 /// Build the distributed-run config shared by `server` and `dist` from CLI
-/// options (workers receive it over the wire, so `worker` takes none).
+/// options (workers receive it over the wire, so `worker` takes only the
+/// handshake-negotiated `--codec`).
 fn dist_cfg_from_args(args: &Args) -> anyhow::Result<DistConfig> {
     let mut cfg = DistConfig::default();
     cfg.workers = args.get_parse("workers", cfg.workers);
@@ -164,6 +177,7 @@ fn dist_cfg_from_args(args: &Args) -> anyhow::Result<DistConfig> {
     cfg.c1 = args.get_parse("c1", cfg.c1);
     cfg.c2 = args.get_parse("c2", cfg.c2);
     cfg.reg = args.get_parse("reg", 1.0 / (10.0 * cfg.n as f32));
+    cfg.codec = parse_codec(args)?;
     if let Some(m) = args.get("method") {
         cfg.method = Method::parse(m).ok_or_else(|| anyhow::anyhow!("unknown method {m}"))?;
     }
@@ -183,11 +197,14 @@ fn print_dist_report(report: &gsparse::coordinator::DistReport) {
         f64::NAN
     };
     println!(
-        "bytes: wire {} (payloads), measured {} on the links ({overhead:.2}x incl. \
-         weights+framing); ideal bits {}; sim net {:.1} ms",
+        "bytes: wire {} (raw {}, entropy {}), measured {} on the links ({overhead:.2}x \
+         incl. weights+framing); ideal bits {} (wire/ideal {:.3}); sim net {:.1} ms",
         ledger.wire_bytes,
+        ledger.wire_bytes_by_codec[WireCodec::Raw.index()],
+        ledger.wire_bytes_by_codec[WireCodec::Entropy.index()],
         ledger.measured_bytes,
         ledger.ideal_bits,
+        ledger.wire_bits_over_ideal(),
         report.sim_time_s * 1e3,
     );
     println!("gradient digest {:#018x}", report.grad_digest);
@@ -205,9 +222,10 @@ fn cmd_server(args: &Args) -> anyhow::Result<()> {
     );
     for wid in 0..cfg.workers {
         println!(
-            "  {} worker --addr {} --id {wid}",
+            "  {} worker --addr {} --id {wid} --codec {}",
             std::env::args().next().unwrap_or_else(|| "gsparse".into()),
-            listener.local_addr()
+            listener.local_addr(),
+            cfg.codec
         );
     }
     let report = dist::serve(listener.as_mut(), &cfg)?;
@@ -221,9 +239,10 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("worker requires --addr host:port"))?;
     let id: u32 = args.get_parse("id", u32::MAX);
     anyhow::ensure!(id != u32::MAX, "worker requires --id N");
+    let codec = parse_codec(args)?;
     let transport = TcpTransport::new();
-    let mut conn = transport.connect(addr, &Hello::new(id))?;
-    gsparse::coordinator::dist::run_worker(conn.as_mut(), id)
+    let mut conn = transport.connect(addr, &Hello::with_codec(id, codec))?;
+    gsparse::coordinator::dist::run_worker(conn.as_mut(), id, codec)
 }
 
 fn cmd_dist(args: &Args) -> anyhow::Result<()> {

@@ -2,6 +2,7 @@
 //! (`var` in Figures 1–4) and realized sparsity (`spa`), communication-cost
 //! ledgers, and CSV/JSONL writers for the figure drivers.
 
+use crate::coding::WireCodec;
 use std::fmt::Write as _;
 use std::io::Write as _;
 use std::path::Path;
@@ -61,6 +62,10 @@ pub struct CommLedger {
     pub ideal_bits: u64,
     /// Actual encoded message bytes produced by `coding::`.
     pub wire_bytes: u64,
+    /// `wire_bytes` split by the [`WireCodec`] each message was encoded
+    /// under (indexed by [`WireCodec::index`]) — the per-codec column that
+    /// shows the measured-vs-ideal gap closing as runs move to `Entropy`.
+    pub wire_bytes_by_codec: [u64; 2],
     /// **Measured** framed bytes observed by the transport layer's per-link
     /// counters (payloads + length prefixes + handshakes) — what actually
     /// crossed the socket or channel, as opposed to the modeled columns
@@ -71,9 +76,17 @@ pub struct CommLedger {
 }
 
 impl CommLedger {
+    /// Record a message ledgered under [`WireCodec::Raw`] (dense/quantized
+    /// fallbacks and legacy call sites).
     pub fn record(&mut self, ideal_bits: u64, wire_bytes: u64) {
+        self.record_codec(ideal_bits, wire_bytes, WireCodec::Raw);
+    }
+
+    /// Record a message encoded under `codec`.
+    pub fn record_codec(&mut self, ideal_bits: u64, wire_bytes: u64, codec: WireCodec) {
         self.ideal_bits += ideal_bits;
         self.wire_bytes += wire_bytes;
+        self.wire_bytes_by_codec[codec.index()] += wire_bytes;
         self.messages += 1;
     }
 
@@ -83,9 +96,23 @@ impl CommLedger {
         self.measured_bytes = measured_bytes;
     }
 
+    /// Wire-bytes (encoded payload, in bits) over ideal-bits — the gap the
+    /// entropy codec closes (`NaN` before anything was recorded). Framing
+    /// overhead is the separate `measured_bytes` column.
+    pub fn wire_bits_over_ideal(&self) -> f64 {
+        (self.wire_bytes * 8) as f64 / self.ideal_bits as f64
+    }
+
     pub fn merge(&mut self, other: &CommLedger) {
         self.ideal_bits += other.ideal_bits;
         self.wire_bytes += other.wire_bytes;
+        for (mine, theirs) in self
+            .wire_bytes_by_codec
+            .iter_mut()
+            .zip(other.wire_bytes_by_codec)
+        {
+            *mine += theirs;
+        }
         self.measured_bytes += other.measured_bytes;
         self.messages += other.messages;
     }
@@ -261,13 +288,25 @@ mod tests {
         a.record(100, 16);
         a.set_measured(40);
         let mut b = CommLedger::default();
-        b.record(50, 8);
+        b.record_codec(50, 8, WireCodec::Entropy);
         b.set_measured(10);
         a.merge(&b);
         assert_eq!(a.ideal_bits, 150);
         assert_eq!(a.wire_bytes, 24);
+        assert_eq!(a.wire_bytes_by_codec, [16, 8]);
         assert_eq!(a.measured_bytes, 50);
         assert_eq!(a.messages, 2);
+    }
+
+    #[test]
+    fn ledger_per_codec_column_and_ratio() {
+        let mut l = CommLedger::default();
+        assert!(l.wire_bits_over_ideal().is_nan());
+        l.record_codec(64, 16, WireCodec::Raw);
+        l.record_codec(64, 8, WireCodec::Entropy);
+        assert_eq!(l.wire_bytes, 24);
+        assert_eq!(l.wire_bytes_by_codec, [16, 8]);
+        assert!((l.wire_bits_over_ideal() - 1.5).abs() < 1e-12);
     }
 
     #[test]

@@ -33,11 +33,15 @@ pub const FRAME_OVERHEAD: usize = 4;
 /// allocating — an adversarial length prefix must not OOM the server.
 pub const MAX_FRAME_LEN: usize = 1 << 28; // 256 MiB
 
-/// Transport protocol version carried in every handshake.
-pub const TRANSPORT_VERSION: u8 = 1;
+/// Transport protocol version carried in every handshake. Version 2 added
+/// the negotiated wire-codec byte to the hello.
+pub const TRANSPORT_VERSION: u8 = 2;
 
 /// Handshake magic (first frame on every connection).
 pub const HELLO_MAGIC: &[u8; 4] = b"GSTP";
+
+/// Encoded hello length: magic + version + worker id + codec.
+pub const HELLO_LEN: usize = 10;
 
 const TAG_PULL: u8 = 0x10;
 const TAG_WEIGHTS: u8 = 0x11;
@@ -45,19 +49,38 @@ const TAG_GRAD: u8 = 0x12;
 const TAG_SHUTDOWN: u8 = 0x13;
 const TAG_CONFIG: u8 = 0x14;
 
-/// The handshake sent by the connecting side as its first frame.
+/// The handshake sent by the connecting side as its first frame. Besides
+/// identifying the worker it pins the protocol version *and* the wire codec
+/// the peer will encode gradients with — both sides must agree before any
+/// gradient crosses the link, so codec mismatches fail at accept time with
+/// a clean error instead of as undecodable payloads mid-run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Hello {
     pub version: u8,
     pub worker_id: u32,
+    /// The [`crate::coding::WireCodec`] the sender will use, as `u8`.
+    pub codec: u8,
 }
 
 impl Hello {
+    /// A hello under the default [`WireCodec::Raw`](crate::coding::WireCodec).
     pub fn new(worker_id: u32) -> Self {
+        Self::with_codec(worker_id, crate::coding::WireCodec::Raw)
+    }
+
+    pub fn with_codec(worker_id: u32, codec: crate::coding::WireCodec) -> Self {
         Self {
             version: TRANSPORT_VERSION,
             worker_id,
+            codec: codec.index() as u8,
         }
+    }
+
+    /// The decoded codec (`decode` validated the byte, so this never fails
+    /// on a received hello).
+    pub fn wire_codec(&self) -> crate::coding::WireCodec {
+        crate::coding::WireCodec::from_u8(self.codec)
+            .expect("codec byte validated during decode")
     }
 
     /// Encode into `out` (cleared first).
@@ -66,10 +89,15 @@ impl Hello {
         out.extend_from_slice(HELLO_MAGIC);
         out.push(self.version);
         out.extend_from_slice(&self.worker_id.to_le_bytes());
+        out.push(self.codec);
     }
 
     pub fn decode(buf: &[u8]) -> Result<Self, TransportError> {
-        if buf.len() != 9 {
+        // Magic + version are validated before the exact-length check so a
+        // peer speaking an older protocol (whose hello is a different
+        // length, e.g. the 9-byte version-1 form) still gets the
+        // informative VersionMismatch instead of a generic length error.
+        if buf.len() < 5 {
             return Err(TransportError::BadHandshake("wrong hello length"));
         }
         if &buf[0..4] != HELLO_MAGIC {
@@ -82,9 +110,17 @@ impl Hello {
                 theirs: version,
             });
         }
+        if buf.len() != HELLO_LEN {
+            return Err(TransportError::BadHandshake("wrong hello length"));
+        }
+        let codec = buf[9];
+        if crate::coding::WireCodec::from_u8(codec).is_none() {
+            return Err(TransportError::BadHandshake("unknown wire codec"));
+        }
         Ok(Self {
             version,
             worker_id: u32::from_le_bytes(buf[5..9].try_into().unwrap()),
+            codec,
         })
     }
 }
@@ -260,6 +296,30 @@ mod tests {
         assert!(matches!(
             Hello::decode(&buf[..5]),
             Err(TransportError::BadHandshake(_))
+        ));
+        // The codec byte is validated like the version.
+        let mut bad = buf.clone();
+        bad[9] = 7;
+        assert!(matches!(
+            Hello::decode(&bad),
+            Err(TransportError::BadHandshake(_))
+        ));
+        let entropy = Hello::with_codec(4, crate::coding::WireCodec::Entropy);
+        entropy.encode(&mut buf);
+        assert_eq!(buf.len(), HELLO_LEN);
+        let back = Hello::decode(&buf).unwrap();
+        assert_eq!(back, entropy);
+        assert_eq!(back.wire_codec(), crate::coding::WireCodec::Entropy);
+        // A version-1 peer's 9-byte hello must surface the version skew,
+        // not a generic length error, even though its length differs.
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(HELLO_MAGIC);
+        v1.push(1);
+        v1.extend_from_slice(&7u32.to_le_bytes());
+        assert_eq!(v1.len(), 9);
+        assert!(matches!(
+            Hello::decode(&v1),
+            Err(TransportError::VersionMismatch { ours: 2, theirs: 1 })
         ));
     }
 

@@ -156,16 +156,16 @@ mod tests {
         assert_eq!(buf, b"from-client");
         conn.send(b"from-server").unwrap();
         let client_counters = client.join().unwrap();
-        // Client: hello (9) + "from-client" (11) sent, "from-server" (11) recvd.
+        // Client: hello + "from-client" (11) sent, "from-server" (11) recvd.
         assert_eq!(
             client_counters.bytes_tx(),
-            (9 + 11 + 2 * FRAME_OVERHEAD) as u64
+            (crate::transport::HELLO_LEN + 11 + 2 * FRAME_OVERHEAD) as u64
         );
         assert_eq!(client_counters.bytes_rx(), (11 + FRAME_OVERHEAD) as u64);
         // Server side counts the mirror image (hello counted on accept).
         assert_eq!(
             conn.counters().bytes_rx(),
-            (9 + 11 + 2 * FRAME_OVERHEAD) as u64
+            (crate::transport::HELLO_LEN + 11 + 2 * FRAME_OVERHEAD) as u64
         );
         assert!(conn.peer().contains("w5"));
     }

@@ -25,7 +25,7 @@ pub mod frame;
 mod inproc;
 mod tcp;
 
-pub use frame::{Hello, MsgView, FRAME_OVERHEAD, MAX_FRAME_LEN, TRANSPORT_VERSION};
+pub use frame::{Hello, MsgView, FRAME_OVERHEAD, HELLO_LEN, MAX_FRAME_LEN, TRANSPORT_VERSION};
 pub use inproc::InProcTransport;
 pub use tcp::TcpTransport;
 
@@ -47,6 +47,10 @@ pub enum TransportError {
     BadHandshake(&'static str),
     /// The peer speaks a different protocol version.
     VersionMismatch { ours: u8, theirs: u8 },
+    /// The peer announced a different wire codec than this side was
+    /// configured with — gradients would be undecodable, so the link is
+    /// refused during the handshake.
+    CodecMismatch { ours: u8, theirs: u8 },
     /// No listener is bound at the requested in-process address.
     NoSuchAddress(String),
     /// A frame arrived that the protocol state machine did not expect.
@@ -64,6 +68,9 @@ impl std::fmt::Display for TransportError {
             TransportError::BadHandshake(why) => write!(f, "bad handshake: {why}"),
             TransportError::VersionMismatch { ours, theirs } => {
                 write!(f, "protocol version mismatch: ours {ours}, theirs {theirs}")
+            }
+            TransportError::CodecMismatch { ours, theirs } => {
+                write!(f, "wire codec mismatch: ours {ours}, theirs {theirs}")
             }
             TransportError::NoSuchAddress(a) => write!(f, "no listener bound at {a:?}"),
             TransportError::UnexpectedMessage(what) => write!(f, "unexpected message: {what}"),
@@ -186,16 +193,25 @@ pub trait Transport: Send {
 }
 
 /// Accept exactly `n` connections and return them ordered by handshake
-/// worker id, rejecting out-of-range and duplicate ids — the shared accept
-/// phase of every coordinator (arrival order is scheduler-dependent; the
-/// id ordering is what makes runs deterministic).
+/// worker id, rejecting out-of-range and duplicate ids and any peer whose
+/// announced wire codec differs from `codec` — the shared accept phase of
+/// every coordinator (arrival order is scheduler-dependent; the id ordering
+/// is what makes runs deterministic, and the codec agreement is what makes
+/// every later gradient frame decodable).
 pub fn accept_n(
     listener: &mut dyn Listener,
     n: usize,
+    codec: crate::coding::WireCodec,
 ) -> Result<Vec<Box<dyn Connection>>, TransportError> {
     let mut slots: Vec<Option<Box<dyn Connection>>> = (0..n).map(|_| None).collect();
     for _ in 0..n {
         let (conn, hello) = listener.accept()?;
+        if hello.codec != codec.index() as u8 {
+            return Err(TransportError::CodecMismatch {
+                ours: codec.index() as u8,
+                theirs: hello.codec,
+            });
+        }
         let wid = hello.worker_id as usize;
         if wid >= n {
             return Err(TransportError::BadHandshake("worker id out of range"));
@@ -299,13 +315,14 @@ mod tests {
 
     #[test]
     fn accept_n_orders_by_worker_id_and_rejects_bad_ids() {
+        use crate::coding::WireCodec;
         let t = InProcTransport::new();
         let mut listener = t.listen("acc").unwrap();
         // Connect out of order; accept_n must hand back id order.
         for wid in [2u32, 0, 1] {
             let _ = t.connect("acc", &Hello::new(wid)).unwrap();
         }
-        let conns = accept_n(listener.as_mut(), 3).unwrap();
+        let conns = accept_n(listener.as_mut(), 3, WireCodec::Raw).unwrap();
         for (wid, conn) in conns.iter().enumerate() {
             assert!(conn.peer().contains(&format!("w{wid}")), "{}", conn.peer());
         }
@@ -313,16 +330,49 @@ mod tests {
         let mut listener = t.listen("acc2").unwrap();
         let _ = t.connect("acc2", &Hello::new(9)).unwrap();
         assert!(matches!(
-            accept_n(listener.as_mut(), 2),
+            accept_n(listener.as_mut(), 2, WireCodec::Raw),
             Err(TransportError::BadHandshake(_))
         ));
         let mut listener = t.listen("acc3").unwrap();
         let _ = t.connect("acc3", &Hello::new(0)).unwrap();
         let _ = t.connect("acc3", &Hello::new(0)).unwrap();
         assert!(matches!(
-            accept_n(listener.as_mut(), 2),
+            accept_n(listener.as_mut(), 2, WireCodec::Raw),
             Err(TransportError::BadHandshake(_))
         ));
+    }
+
+    #[test]
+    fn accept_n_rejects_codec_mismatch() {
+        use crate::coding::WireCodec;
+        let t = InProcTransport::new();
+        // A raw-codec worker knocking on an entropy-codec server (and the
+        // reverse) is refused during the handshake, not mid-run.
+        let mut listener = t.listen("codec").unwrap();
+        let _ = t.connect("codec", &Hello::new(0)).unwrap();
+        assert!(matches!(
+            accept_n(listener.as_mut(), 1, WireCodec::Entropy),
+            Err(TransportError::CodecMismatch { ours: 1, theirs: 0 })
+        ));
+        let mut listener = t.listen("codec2").unwrap();
+        let _ = t
+            .connect("codec2", &Hello::with_codec(0, WireCodec::Entropy))
+            .unwrap();
+        assert!(matches!(
+            accept_n(listener.as_mut(), 1, WireCodec::Raw),
+            Err(TransportError::CodecMismatch { ours: 0, theirs: 1 })
+        ));
+        // Matching codecs proceed.
+        let mut listener = t.listen("codec3").unwrap();
+        let _ = t
+            .connect("codec3", &Hello::with_codec(0, WireCodec::Entropy))
+            .unwrap();
+        assert_eq!(
+            accept_n(listener.as_mut(), 1, WireCodec::Entropy)
+                .unwrap()
+                .len(),
+            1
+        );
     }
 
     #[test]
@@ -340,6 +390,7 @@ mod tests {
             TransportError::FrameTooLarge(1 << 40).to_string(),
             TransportError::BadHandshake("x").to_string(),
             TransportError::VersionMismatch { ours: 1, theirs: 2 }.to_string(),
+            TransportError::CodecMismatch { ours: 0, theirs: 1 }.to_string(),
             TransportError::NoSuchAddress("ps".into()).to_string(),
             TransportError::UnexpectedMessage("weights").to_string(),
         ];

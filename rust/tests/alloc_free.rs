@@ -9,6 +9,7 @@
 //! counter.
 
 use gsparse::benchkit::{allocation_count, CountingAllocator};
+use gsparse::coding::{self, WireCodec, WireError};
 use gsparse::comm::{Aggregator, NetworkModel, ReduceAlgo};
 use gsparse::config::Method;
 use gsparse::rngkit::RandArray;
@@ -98,6 +99,77 @@ fn steady_state_compression_is_allocation_free() {
         agg.reduce(&grads, &mut v);
     });
     assert_eq!(n, 0, "Aggregator::reduce allocated {n} times in 16 calls");
+
+    // --- Both wire codecs: steady-state encode + decode ----------------
+    // (Still the same #[test]: the counter is global.) After warmup, the
+    // encode → decode_into cycle must be allocation-free for Raw and
+    // Entropy alike — the Rice bit writer works in the caller's buffer.
+    {
+        let d = 8192;
+        let g = gradient(d, 21);
+        let mut engine = CompressEngine::greedy(0.02, 2);
+        engine.reserve(d);
+        let mut rand = RandArray::from_seed(22, 1 << 18);
+        let mut sg = SparseGrad::empty(d);
+        sg.exact.reserve(d);
+        sg.shared.reserve(d);
+        engine.compress_sparse_into(&g, &mut rand, &mut sg);
+        let mut wire = Vec::with_capacity(coding::HEADER_LEN + 9 * d);
+        let mut slot = SparseGrad::empty(0);
+        slot.exact.reserve(d);
+        slot.shared.reserve(d);
+        for &codec in WireCodec::all() {
+            for _ in 0..4 {
+                coding::encode_with(&sg, codec, &mut wire); // warmup
+                coding::decode_into(&wire, &mut slot).unwrap();
+            }
+            let n = count_allocs(32, || {
+                coding::encode_with(&sg, codec, &mut wire);
+                coding::decode_into(&wire, &mut slot).unwrap();
+            });
+            assert_eq!(n, 0, "{codec}: encode+decode allocated {n} times in 32 calls");
+            assert_eq!(slot, sg, "{codec}: roundtrip drifted");
+        }
+
+        // Adversarial decodes must reject *without allocating*, exactly
+        // like the CountsExceedDim gate: build the corrupted buffers
+        // first, then count only the decode calls.
+        let enc = coding::encode_with(&sg, WireCodec::Entropy, &mut wire);
+        assert_eq!(enc, coding::Encoding::IndexedRice, "workload must pick rice");
+        let mut bad_param = wire.clone();
+        bad_param[7] = 33;
+        let truncated: Vec<u8> = wire[..wire.len() - 1].to_vec();
+        let mut bad_counts = wire.clone();
+        bad_counts[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        // A hand-built rice message whose final byte provably has five
+        // padding bits, with the top one flipped (see the codec unit
+        // tests for the layout).
+        let mut bad_pad: Vec<u8> = Vec::new();
+        bad_pad.extend_from_slice(b"GSPR");
+        bad_pad.extend_from_slice(&[1, 2, 0, 0]);
+        bad_pad.extend_from_slice(&8u32.to_le_bytes());
+        bad_pad.extend_from_slice(&0u32.to_le_bytes());
+        bad_pad.extend_from_slice(&1u32.to_le_bytes());
+        bad_pad.extend_from_slice(&1.0f32.to_le_bytes());
+        bad_pad.push(0); // sign bitmap
+        bad_pad.push(0b1000_0011); // gap 2, nonzero padding bit
+        let n = count_allocs(16, || {
+            assert_eq!(
+                coding::decode_into(&bad_param, &mut slot),
+                Err(WireError::BadRiceParam(33))
+            );
+            assert!(coding::decode_into(&truncated, &mut slot).is_err());
+            assert_eq!(
+                coding::decode_into(&bad_pad, &mut slot),
+                Err(WireError::BadRiceStream("nonzero padding"))
+            );
+            assert!(matches!(
+                coding::decode_into(&bad_counts, &mut slot),
+                Err(WireError::CountsExceedDim { .. })
+            ));
+        });
+        assert_eq!(n, 0, "adversarial decodes allocated {n} times in 16 calls");
+    }
 
     // --- Sharded path: shard buffers reused ----------------------------
     // (Same #[test] on purpose: a concurrent test thread would pollute the

@@ -1,0 +1,176 @@
+//! Golden wire-format snapshots: hand-constructed messages with their
+//! encoded bytes committed as hex, one fixture per (message, codec) pair.
+//!
+//! These pin the *byte-level* format of both codecs — header layout,
+//! encoding choice, Rice parameter selection, bit order, padding — so any
+//! drift breaks this test before it breaks cross-version TCP
+//! compatibility. The messages are hand-built (not sampled) so the
+//! fixtures cannot rot when solver or RNG internals change; drift here
+//! means the *codec* changed and the wire version must be bumped.
+
+use gsparse::coding::{self, Encoding, WireCodec};
+use gsparse::sparsify::SparseGrad;
+
+struct Fixture {
+    name: &'static str,
+    msg: SparseGrad,
+    raw_hex: &'static str,
+    raw_enc: Encoding,
+    entropy_hex: &'static str,
+    entropy_enc: Encoding,
+}
+
+fn msg(d: usize, exact: &[(u32, f32)], shared: &[(u32, bool)], mag: f32) -> SparseGrad {
+    let mut sg = SparseGrad::empty(d);
+    sg.exact.extend_from_slice(exact);
+    sg.shared.extend_from_slice(shared);
+    sg.shared_mag = mag;
+    sg
+}
+
+fn fixtures() -> Vec<Fixture> {
+    vec![
+        Fixture {
+            name: "empty_d100",
+            msg: msg(100, &[], &[], 0.0),
+            raw_hex: "475350520100000064000000000000000000000000000000",
+            raw_enc: Encoding::Indexed,
+            entropy_hex: "475350520100000064000000000000000000000000000000",
+            entropy_enc: Encoding::Indexed,
+        },
+        Fixture {
+            name: "mixed_d1000",
+            msg: msg(
+                1000,
+                &[(3, 1.5), (701, -2.25)],
+                &[(0, false), (17, true), (250, false), (999, true)],
+                0.5,
+            ),
+            raw_hex: "4753505201000000e803000002000000040000000000003f0300000000\
+                      00c03fbd020000000010c00000000011000000fa000000e70300000a",
+            raw_enc: Encoding::Indexed,
+            entropy_hex: "4753505201020807e803000002000000040000000000003f0000c03f\
+                          000010c00a06960b0012fa6303",
+            entropy_enc: Encoding::IndexedRice,
+        },
+        Fixture {
+            name: "dense_d16",
+            msg: msg(
+                16,
+                &[(1, 1.0)],
+                &[
+                    (0, true),
+                    (2, false),
+                    (5, false),
+                    (6, true),
+                    (9, false),
+                    (11, true),
+                    (13, false),
+                    (15, true),
+                ],
+                0.25,
+            ),
+            raw_hex: "47535052010100001000000001000000080000000000803e1e2484840000803f",
+            raw_enc: Encoding::DenseSymbols,
+            entropy_hex: "47535052010100001000000001000000080000000000803e1e2484840000803f",
+            entropy_enc: Encoding::DenseSymbols,
+        },
+        Fixture {
+            name: "rice_d4096",
+            msg: msg(
+                4096,
+                &[(100, 3.0), (2000, -4.5)],
+                &[
+                    (64, false),
+                    (320, true),
+                    (576, false),
+                    (832, false),
+                    (1088, true),
+                    (1344, false),
+                    (1600, true),
+                    (1856, false),
+                    (2112, false),
+                    (2368, true),
+                    (2624, false),
+                    (2880, false),
+                    (3136, true),
+                    (3392, false),
+                    (3648, true),
+                    (3904, false),
+                ],
+                0.125,
+            ),
+            raw_hex: "47535052010000000010000002000000100000000000003e6400000000004040\
+                      d0070000000090c040000000400100004002000040030000400400004005000040\
+                      060000400700004008000040090000400a0000400b0000400c0000400d0000400e\
+                      0000400f00005252",
+            raw_enc: Encoding::Indexed,
+            entropy_hex: "47535052010209070010000002000000100000000000003e0000404000\
+                          0090c05252c8dc5ac0fefdfbf7efdfbf7ffffefdfbf7efdfbf3f",
+            entropy_enc: Encoding::IndexedRice,
+        },
+    ]
+}
+
+fn from_hex(s: &str) -> Vec<u8> {
+    let clean: String = s.chars().filter(|c| !c.is_whitespace()).collect();
+    assert_eq!(clean.len() % 2, 0, "odd hex fixture length");
+    (0..clean.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&clean[i..i + 2], 16).expect("hex digit"))
+        .collect()
+}
+
+fn to_hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+#[test]
+fn golden_bytes_have_not_drifted() {
+    for f in fixtures() {
+        for (codec, hex, want_enc) in [
+            (WireCodec::Raw, f.raw_hex, f.raw_enc),
+            (WireCodec::Entropy, f.entropy_hex, f.entropy_enc),
+        ] {
+            let mut buf = Vec::new();
+            let enc = coding::encode_with(&f.msg, codec, &mut buf);
+            assert_eq!(enc, want_enc, "{}/{codec}: encoding choice drifted", f.name);
+            let want = from_hex(hex);
+            assert_eq!(
+                buf,
+                want,
+                "{}/{codec}: byte drift\n  have {}\n  want {}",
+                f.name,
+                to_hex(&buf),
+                to_hex(&want),
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_bytes_decode_to_the_fixture_messages() {
+    // The committed bytes — not freshly encoded ones — must decode to the
+    // exact message, so an old peer's frames stay readable as long as this
+    // test passes.
+    for f in fixtures() {
+        for (codec, hex) in [(WireCodec::Raw, f.raw_hex), (WireCodec::Entropy, f.entropy_hex)] {
+            let bytes = from_hex(hex);
+            let back = coding::decode(&bytes)
+                .unwrap_or_else(|e| panic!("{}/{codec}: fixture undecodable: {e}", f.name));
+            assert_eq!(back, f.msg, "{}/{codec}: decoded message drifted", f.name);
+        }
+    }
+}
+
+#[test]
+fn golden_entropy_fixture_is_smaller_where_rice_engages() {
+    for f in fixtures() {
+        let raw = from_hex(f.raw_hex).len();
+        let ent = from_hex(f.entropy_hex).len();
+        assert!(ent <= raw, "{}: entropy fixture larger than raw", f.name);
+        if f.entropy_enc == Encoding::IndexedRice {
+            assert!(ent < raw, "{}: rice engaged but saved nothing", f.name);
+        }
+    }
+}

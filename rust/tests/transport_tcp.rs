@@ -11,6 +11,7 @@
 //! * the frame codec survives empty, large, and corrupted frames over real
 //!   sockets.
 
+use gsparse::coding::WireCodec;
 use gsparse::coordinator::dist::{self, DistConfig};
 use gsparse::data::gen_logistic;
 use gsparse::model::LogisticModel;
@@ -19,6 +20,9 @@ use gsparse::transport::{
     Connection, Hello, InProcTransport, Listener, TcpTransport, Transport, TransportError,
 };
 
+/// The shared suite honours the CI `codec: [raw, entropy]` matrix via
+/// `GSPARSE_CODEC`; the explicit `*_entropy_codec` tests below pin the
+/// entropy variant regardless of the environment.
 fn test_cfg() -> DistConfig {
     DistConfig {
         workers: 2,
@@ -28,15 +32,21 @@ fn test_cfg() -> DistConfig {
         batch: 8,
         seed: 71,
         reg: 1.0 / (10.0 * 256.0),
+        codec: WireCodec::from_env(),
         ..Default::default()
     }
 }
 
-#[test]
-fn tcp_backend_matches_inproc_bitwise() {
-    let cfg = test_cfg();
-    let inproc = dist::run_threads(InProcTransport::new(), "parity", &cfg).unwrap();
-    let tcp = dist::run_threads(TcpTransport::new(), "127.0.0.1:0", &cfg).unwrap();
+fn entropy_cfg() -> DistConfig {
+    DistConfig {
+        codec: WireCodec::Entropy,
+        ..test_cfg()
+    }
+}
+
+fn assert_backend_parity(cfg: &DistConfig) {
+    let inproc = dist::run_threads(InProcTransport::new(), "parity", cfg).unwrap();
+    let tcp = dist::run_threads(TcpTransport::new(), "127.0.0.1:0", cfg).unwrap();
 
     // Identical compressed gradient bytes, in apply order.
     assert_eq!(tcp.grad_digest, inproc.grad_digest);
@@ -48,6 +58,7 @@ fn tcp_backend_matches_inproc_bitwise() {
     let (a, b) = (&inproc.curve.ledger, &tcp.curve.ledger);
     assert_eq!(a.ideal_bits, b.ideal_bits);
     assert_eq!(a.wire_bytes, b.wire_bytes);
+    assert_eq!(a.wire_bytes_by_codec, b.wire_bytes_by_codec);
     assert_eq!(a.measured_bytes, b.measured_bytes);
     assert_eq!(a.messages, b.messages);
     // And the loss curves agree point-for-point.
@@ -59,13 +70,42 @@ fn tcp_backend_matches_inproc_bitwise() {
 }
 
 #[test]
+fn tcp_backend_matches_inproc_bitwise() {
+    assert_backend_parity(&test_cfg());
+}
+
+#[test]
+fn tcp_backend_matches_inproc_bitwise_entropy_codec() {
+    // The `--codec entropy` variant of the parity criterion: same codec ⇒
+    // identical bytes across backends, with every sparse byte ledgered in
+    // the entropy column.
+    let cfg = entropy_cfg();
+    assert_backend_parity(&cfg);
+    let rep = dist::run_threads(InProcTransport::new(), "parity-e", &cfg).unwrap();
+    assert_eq!(
+        rep.curve.ledger.wire_bytes_by_codec[WireCodec::Entropy.index()],
+        rep.curve.ledger.wire_bytes
+    );
+}
+
+#[test]
 fn multi_process_cluster_matches_in_process_run() {
+    multi_process_parity(&test_cfg());
+}
+
+#[test]
+fn multi_process_cluster_matches_in_process_run_entropy_codec() {
+    // 1 server + 2 worker processes negotiating `--codec entropy` on their
+    // real command lines — the smoke test's entropy variant.
+    multi_process_parity(&entropy_cfg());
+}
+
+fn multi_process_parity(cfg: &DistConfig) {
     // One server (this test) + two genuine worker OS processes over
     // loopback TCP — the repo's "real multi-process cluster" smoke test.
-    let cfg = test_cfg();
     let bin = std::path::PathBuf::from(env!("CARGO_BIN_EXE_gsparse"));
-    let procs = dist::run_processes(&bin, "127.0.0.1:0", &cfg).unwrap();
-    let inproc = dist::run_threads(InProcTransport::new(), "mp-ref", &cfg).unwrap();
+    let procs = dist::run_processes(&bin, "127.0.0.1:0", cfg).unwrap();
+    let inproc = dist::run_threads(InProcTransport::new(), "mp-ref", cfg).unwrap();
 
     // Converged at all?
     let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
@@ -205,6 +245,35 @@ fn server_rejects_corrupted_gradient_frames() {
         "expected a wire decode error, got: {msg}"
     );
     evil.join().unwrap();
+}
+
+#[test]
+fn server_refuses_codec_mismatched_worker() {
+    // An entropy-codec server must refuse a raw-codec hello during accept,
+    // before any config or gradient flows — "negotiated like the version
+    // field".
+    let cfg = DistConfig {
+        workers: 1,
+        rounds: 3,
+        n: 64,
+        d: 32,
+        codec: WireCodec::Entropy,
+        ..Default::default()
+    };
+    let t = TcpTransport::new();
+    let mut listener = t.listen("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr();
+    let stale = std::thread::spawn(move || {
+        let mut conn = t.connect(&addr, &Hello::new(0)).unwrap(); // raw hello
+        let mut buf = Vec::new();
+        let _ = conn.recv(&mut buf); // server drops the link
+    });
+    let err = dist::serve(listener.as_mut(), &cfg).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("codec mismatch"),
+        "expected codec mismatch, got: {err:#}"
+    );
+    stale.join().unwrap();
 }
 
 #[test]
