@@ -7,9 +7,8 @@
 //! cargo run --release --example cnn_cifar_like -- --steps 15
 //! ```
 
+use gsparse::api::{MethodSpec, Session};
 use gsparse::cli::Args;
-use gsparse::config::Method;
-use gsparse::coordinator::Cluster;
 use gsparse::data::CifarLike;
 use gsparse::model::hlo::HloTrainStep;
 use gsparse::opt::Adam;
@@ -31,14 +30,23 @@ fn main() -> anyhow::Result<()> {
     );
     let ds = CifarLike::generate(512, 3);
     let bsz = step.x_dims[0];
-    let layer_dims: Vec<usize> = step.params.iter().map(|p| p.elements()).collect();
+    let layer_dims = step.layer_dims();
+    let batch_layers = args.flag("batch-layers");
 
     for rho in [1.0f32, 0.05, 0.004] {
         let mut params = step.init_params(&mut rt, 0)?;
-        let method = if rho >= 1.0 { Method::Dense } else { Method::GSpar };
-        let mut cluster = Cluster::new(workers, &layer_dims, 4, || {
-            gsparse::sparsify::build(method, rho.min(1.0), 0.0, 4)
-        });
+        let method = if rho >= 1.0 {
+            MethodSpec::Dense
+        } else {
+            MethodSpec::GSpar { rho: rho.min(1.0), iters: 2 }
+        };
+        let session = Session::builder()
+            .method(method)
+            .workers(workers)
+            .seed(4)
+            .batch_layers(batch_layers)
+            .build();
+        let mut cluster = session.cluster(&layer_dims);
         let mut adams: Vec<Adam> = layer_dims.iter().map(|&d| Adam::new(d, 0.02)).collect();
         let mut rng = Xoshiro256pp::seed_from_u64(5);
         let mut x = vec![0.0f32; bsz * CifarLike::PIXELS];

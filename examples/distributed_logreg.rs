@@ -13,48 +13,44 @@
 //! cargo run --release --example distributed_logreg -- --transport tcp
 //! ```
 
-use gsparse::config::{ConvexConfig, Method};
-use gsparse::coordinator::dist::{self, DistConfig};
-use gsparse::coordinator::sync::{estimate_f_star, train_convex, OptKind, TrainOptions};
+use gsparse::api::{DistTask, MethodSpec, Session, SyncTask};
+use gsparse::config::Method;
+use gsparse::coordinator::sync::{estimate_f_star, OptKind};
 use gsparse::data::gen_logistic;
 use gsparse::metrics::{ascii_plot, XAxis};
 use gsparse::model::LogisticModel;
 use gsparse::transport::{InProcTransport, TcpTransport};
 
 fn main() {
-    let base = ConvexConfig {
-        n: 1024,
-        d: 2048,
-        c1: 0.9,
-        c2: 0.0625, // 4^-2: strong gradient sparsity
-        reg: 1.0 / (10.0 * 1024.0),
-        rho: 0.1,
-        workers: 4,
+    // The paper's §5.1 workload: N=1024, d=2048, C1=0.9, C2=4^-2 (strong
+    // gradient sparsity), M=4 workers, minibatch 8.
+    let (n, d) = (1024usize, 2048usize);
+    let (c1, c2) = (0.9f32, 0.0625f32);
+    let reg = 1.0 / (10.0 * 1024.0);
+    let (rho, workers, seed) = (0.1f32, 4usize, 2018u64);
+    println!(
+        "N={n} d={d} M={workers} batch=8 C1={c1} C2={c2} — generating data + estimating f*..."
+    );
+    let ds = gen_logistic(n, d, c1, c2, seed);
+    let model = LogisticModel::new(reg);
+    let f_star = estimate_f_star(&ds, &model, 400, 1.0);
+    let task = SyncTask {
         batch: 8,
         epochs: 20,
         lr: 1.0,
-        method: Method::Dense,
-        seed: 2018,
-        qsgd_bits: 4,
-    };
-    println!(
-        "N={} d={} M={} batch={} C1={} C2={} — generating data + estimating f*...",
-        base.n, base.d, base.workers, base.batch, base.c1, base.c2
-    );
-    let ds = gen_logistic(base.n, base.d, base.c1, base.c2, base.seed);
-    let model = LogisticModel::new(base.reg);
-    let f_star = estimate_f_star(&ds, &model, 400, 1.0);
-    let opts = TrainOptions {
         opt: OptKind::Sgd,
         f_star,
-        ..Default::default()
+        ..SyncTask::default()
     };
 
     let mut curves = Vec::new();
     for method in [Method::Dense, Method::GSpar, Method::UniSp] {
-        let mut cfg = base.clone();
-        cfg.method = method;
-        let curve = train_convex(&cfg, &opts, &ds, &model);
+        let session = Session::builder()
+            .method(MethodSpec::from_parts(method, rho, c2 * c1, 4))
+            .workers(workers)
+            .seed(seed)
+            .build();
+        let curve = session.train_convex(&task, &ds, &model);
         println!(
             "{:<24} final suboptimality {:.4e}   ideal bits {:>12.3e}   sim net {:>8.1} ms",
             curve.label(),
@@ -78,32 +74,35 @@ fn main() {
         .get("codec")
         .map(|s| gsparse::coding::WireCodec::parse(s).expect("codec raw|entropy"))
         .unwrap_or_default();
-    let cfg = DistConfig {
-        workers: args.get_parse("dist-workers", 2),
+    let dist_session = Session::builder()
+        .method(MethodSpec::GSpar { rho, iters: 2 })
+        .codec(codec)
+        .workers(args.get_parse("dist-workers", 2))
+        .seed(seed)
+        .build();
+    let dist_task = DistTask {
         rounds: args.get_parse("rounds", 300),
-        method: Method::GSpar,
-        rho: base.rho,
-        qsgd_bits: base.qsgd_bits,
-        batch: base.batch,
-        lr: base.lr,
-        seed: base.seed,
-        n: base.n,
-        d: base.d,
-        c1: base.c1,
-        c2: base.c2,
-        reg: base.reg,
-        codec,
+        batch: 8,
+        lr: 1.0,
+        n,
+        d,
+        c1,
+        c2,
+        reg,
     };
     println!(
         "\nDistributed runtime: {} workers x {} rounds over '{backend}' vs 'inproc'...",
-        cfg.workers, cfg.rounds
+        dist_session.workers(),
+        dist_task.rounds
     );
-    let inproc = dist::run_threads(InProcTransport::new(), "logreg", &cfg)
+    let inproc = dist_session
+        .dist_threads(InProcTransport::new(), "logreg", &dist_task)
         .expect("inproc cluster");
     let other = match backend {
         "inproc" => None,
         "tcp" => Some(
-            dist::run_threads(TcpTransport::new(), "127.0.0.1:0", &cfg)
+            dist_session
+                .dist_threads(TcpTransport::new(), "127.0.0.1:0", &dist_task)
                 .expect("tcp loopback cluster"),
         ),
         b => panic!("unknown transport {b} (inproc|tcp)"),

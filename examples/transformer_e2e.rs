@@ -23,5 +23,5 @@ fn main() -> anyhow::Result<()> {
     let steps = args.get_parse("steps", 200usize);
     let workers = args.get_parse("workers", 4usize);
     let rho = args.get_parse("rho", 0.05f32);
-    gsparse::figures::run_transformer_e2e(steps, workers, rho)
+    gsparse::figures::run_transformer_e2e(steps, workers, rho, args.flag("batch-layers"))
 }

@@ -1,0 +1,160 @@
+//! Batched-vs-per-layer microbench: for a CNN-shaped layer list it measures
+//! (a) wire bytes per model update under both codecs, (b) transport frames
+//! and measured framed bytes per cluster round, and (c) the engine-level
+//! wall time of one fused batch invocation vs one invocation per layer.
+//! Writes `BENCH_batch.json` (override with `GSPARSE_BENCH_OUT`); CI
+//! uploads it next to the other bench JSONs.
+
+use gsparse::api::{MethodSpec, Session};
+use gsparse::benchkit::{black_box, section, Bencher, JsonReport};
+use gsparse::coding::WireCodec;
+use gsparse::rngkit::RandArray;
+use gsparse::sparsify::{BatchCompressEngine, CompressEngine, SparseGrad};
+
+/// A §5.2-shaped layer list: conv stacks + a large FC layer.
+const DIMS: [usize; 6] = [1 << 16, 3 << 15, 1 << 15, 1 << 14, 1 << 14, 1 << 15];
+const RHO: f32 = 0.01;
+
+fn layer_list() -> Vec<Vec<f32>> {
+    DIMS.iter()
+        .enumerate()
+        .map(|(l, &d)| gsparse::benchkit::skewed_gradient(d, 31 + l as u64, 0.1))
+        .collect()
+}
+
+fn bench_wire_bytes(report: &mut JsonReport) {
+    section("wire bytes per model update: WireBatch vs per-layer messages");
+    let layers = layer_list();
+    let refs: Vec<&[f32]> = layers.iter().map(|g| g.as_slice()).collect();
+    let mut engine = BatchCompressEngine::greedy(RHO, 2);
+    let rand = RandArray::from_seed(5, 1 << 19);
+    let (mut outs, mut pvs, mut wire) = (Vec::new(), Vec::new(), Vec::new());
+    for codec in [WireCodec::Raw, WireCodec::Entropy] {
+        let mut rand2 = rand.clone();
+        engine.compress_batch_into(&refs, codec, &mut rand2, &mut outs, &mut wire, &mut pvs);
+        let batch = wire.len();
+        let singles: usize = outs
+            .iter()
+            .map(|sg| gsparse::coding::encoded_len_with(sg, codec))
+            .sum();
+        println!(
+            "  codec={codec:<7} L={} d_total={} batch {batch:>8} B  \
+             per-layer {singles:>8} B  saved {:>6} B/round/worker",
+            DIMS.len(),
+            DIMS.iter().sum::<usize>(),
+            singles as i64 - batch as i64,
+        );
+        report.push_metric(&format!("batch_bytes/{codec}"), batch as f64);
+        report.push_metric(&format!("per_layer_bytes/{codec}"), singles as f64);
+        report.push_metric(
+            &format!("batch_over_per_layer/{codec}"),
+            batch as f64 / singles.max(1) as f64,
+        );
+    }
+}
+
+fn bench_cluster_frames(report: &mut JsonReport) {
+    section("cluster round: frames + measured bytes, batched vs per-layer");
+    let workers = 2usize;
+    let grads: Vec<Vec<Vec<f32>>> = (0..workers)
+        .map(|w| {
+            DIMS.iter()
+                .enumerate()
+                .map(|(l, &d)| {
+                    gsparse::benchkit::skewed_gradient(d, (w * 13 + l) as u64, 0.1)
+                })
+                .collect()
+        })
+        .collect();
+    for codec in [WireCodec::Raw, WireCodec::Entropy] {
+        for batch in [false, true] {
+            let mut cluster = Session::builder()
+                .method(MethodSpec::GSpar { rho: RHO, iters: 2 })
+                .codec(codec)
+                .workers(workers)
+                .seed(77)
+                .batch_layers(batch)
+                .build()
+                .cluster(&DIMS);
+            let rounds = 4u64;
+            for _ in 0..rounds {
+                black_box(cluster.round(&grads));
+            }
+            let label = if batch { "batched" } else { "per_layer" };
+            let frames = cluster.frames_received() - workers as u64; // minus hellos
+            println!(
+                "  codec={codec:<7} {label:<9} frames/round {:>4}  wire {:>9} B  \
+                 measured {:>9} B",
+                frames / rounds,
+                cluster.ledger.wire_bytes / rounds,
+                cluster.ledger.measured_bytes / rounds,
+            );
+            report.push_metric(
+                &format!("frames_per_round/{codec}/{label}"),
+                (frames / rounds) as f64,
+            );
+            report.push_metric(
+                &format!("wire_bytes_per_round/{codec}/{label}"),
+                (cluster.ledger.wire_bytes / rounds) as f64,
+            );
+            report.push_metric(
+                &format!("measured_bytes_per_round/{codec}/{label}"),
+                (cluster.ledger.measured_bytes / rounds) as f64,
+            );
+        }
+    }
+}
+
+fn bench_engine_time(report: &mut JsonReport) {
+    section("engine invocation: one fused batch vs one call per layer");
+    let b = Bencher::default();
+    let layers = layer_list();
+    let refs: Vec<&[f32]> = layers.iter().map(|g| g.as_slice()).collect();
+    let total: u64 = DIMS.iter().sum::<usize>() as u64;
+
+    let mut batch_engine = BatchCompressEngine::greedy(RHO, 2);
+    let mut rand = RandArray::from_seed(6, 1 << 19);
+    let (mut outs, mut pvs, mut wire) = (Vec::new(), Vec::new(), Vec::new());
+    let s = b.bench("batched compress+encode (6 layers)", Some(total), || {
+        batch_engine.compress_batch_into(
+            black_box(&refs),
+            WireCodec::Entropy,
+            &mut rand,
+            &mut outs,
+            &mut wire,
+            &mut pvs,
+        );
+    });
+    report.push(&s);
+
+    let mut engines: Vec<CompressEngine> = DIMS
+        .iter()
+        .map(|_| CompressEngine::greedy(RHO, 2))
+        .collect();
+    let mut rand = RandArray::from_seed(6, 1 << 19);
+    let mut sgs: Vec<SparseGrad> = DIMS.iter().map(|_| SparseGrad::empty(0)).collect();
+    let mut wires: Vec<Vec<u8>> = DIMS.iter().map(|_| Vec::new()).collect();
+    let s = b.bench("per-layer compress+encode (6 calls)", Some(total), || {
+        for ((engine, g), (sg, w)) in engines
+            .iter_mut()
+            .zip(refs.iter())
+            .zip(sgs.iter_mut().zip(wires.iter_mut()))
+        {
+            black_box(engine.compress_into_with(g, WireCodec::Entropy, &mut rand, sg, w));
+        }
+    });
+    report.push(&s);
+}
+
+fn main() {
+    let mut report = JsonReport::new();
+    bench_wire_bytes(&mut report);
+    bench_cluster_frames(&mut report);
+    bench_engine_time(&mut report);
+    let out_path =
+        std::env::var("GSPARSE_BENCH_OUT").unwrap_or_else(|_| "BENCH_batch.json".to_string());
+    match report.write(&out_path) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
+    }
+}

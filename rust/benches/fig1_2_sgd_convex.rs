@@ -22,31 +22,28 @@ fn main() {
     section("end-to-end wall time of one Fig-1 cell");
     let b = Bencher::heavy();
     b.bench("fig1 cell (3 methods)", None, || {
-        let s = ConvexFigureScale {
-            n: 256,
-            d: 512,
-            epochs: 6,
-            seed: 1,
-        };
         // One cell = the grid function with a single (reg, C2) pair; reuse
-        // fig1's internals via the public train path.
-        let _ = s;
-        use gsparse::config::{ConvexConfig, Method};
-        use gsparse::coordinator::sync::{train_convex, TrainOptions};
+        // fig1's internals via the public Session train path.
+        use gsparse::api::{MethodSpec, Session, SyncTask};
+        use gsparse::config::Method;
         use gsparse::data::gen_logistic;
         use gsparse::model::LogisticModel;
-        let cfg = ConvexConfig {
-            n: 256,
-            d: 512,
+        let (n, d, seed) = (256usize, 512usize, 42u64);
+        let (c1, c2) = (0.6f32, 0.25f32);
+        let ds = gen_logistic(n, d, c1, c2, seed);
+        let model = LogisticModel::new(1.0 / (10.0 * n as f32));
+        let task = SyncTask {
             epochs: 6,
-            ..Default::default()
+            lr: 0.5,
+            ..SyncTask::default()
         };
-        let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
-        let model = LogisticModel::new(cfg.reg);
         for m in [Method::Dense, Method::GSpar, Method::UniSp] {
-            let mut c = cfg.clone();
-            c.method = m;
-            train_convex(&c, &TrainOptions::default(), &ds, &model);
+            let session = Session::builder()
+                .method(MethodSpec::from_parts(m, 0.1, c2 * c1, 4))
+                .workers(4)
+                .seed(seed)
+                .build();
+            session.train_convex(&task, &ds, &model);
         }
     });
 }

@@ -3,9 +3,9 @@
 //! two SVRG sparsification placements (§5.1: sparsify-everything vs the
 //! eq. 15 master-kept-full-gradient variant).
 
+use gsparse::api::{MethodSpec, Session, SyncTask};
 use gsparse::benchkit::{section, Bencher};
-use gsparse::config::{ConvexConfig, Method};
-use gsparse::coordinator::sync::{train_convex, OptKind, SvrgVariant, TrainOptions};
+use gsparse::coordinator::sync::{OptKind, SvrgVariant};
 use gsparse::data::gen_logistic;
 use gsparse::figures::{fig3, fig4, ConvexFigureScale};
 use gsparse::model::LogisticModel;
@@ -21,22 +21,23 @@ fn main() {
     fig4(&scale);
 
     section("ablation: SVRG sparsification placement (§5.1)");
-    let cfg = ConvexConfig {
-        n: 512,
-        d: 1024,
+    let (n, d, seed) = (512usize, 1024usize, 42u64);
+    let (c1, c2) = (0.6f32, 0.25f32);
+    let session = Session::builder()
+        .method(MethodSpec::GSpar { rho: 0.1, iters: 2 })
+        .workers(4)
+        .seed(seed)
+        .build();
+    let ds = gen_logistic(n, d, c1, c2, seed);
+    let model = LogisticModel::new(1.0 / (10.0 * 1024.0));
+    let task_for = |variant| SyncTask {
         epochs: 15,
-        method: Method::GSpar,
         lr: 0.25,
-        ..Default::default()
+        opt: OptKind::Svrg(variant),
+        ..SyncTask::default()
     };
-    let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
-    let model = LogisticModel::new(cfg.reg);
     for variant in [SvrgVariant::SparsifyFull, SvrgVariant::MasterFullGrad] {
-        let opts = TrainOptions {
-            opt: OptKind::Svrg(variant),
-            ..Default::default()
-        };
-        let curve = train_convex(&cfg, &opts, &ds, &model);
+        let curve = session.train_convex(&task_for(variant), &ds, &model);
         println!(
             "  {variant:?}: final loss {:.4e}, var {:.3}, bits {:.3e}",
             curve.final_loss(),
@@ -47,10 +48,6 @@ fn main() {
 
     let b = Bencher::heavy();
     b.bench("svrg cell end-to-end", None, || {
-        let opts = TrainOptions {
-            opt: OptKind::Svrg(SvrgVariant::SparsifyFull),
-            ..Default::default()
-        };
-        train_convex(&cfg, &opts, &ds, &model);
+        session.train_convex(&task_for(SvrgVariant::SparsifyFull), &ds, &model);
     });
 }

@@ -5,11 +5,12 @@
 
 fn main() {
     let quick = std::env::var("GSPARSE_PAPER").is_err();
-    if let Err(e) = gsparse::figures::fig7(quick) {
+    let batch = std::env::var("GSPARSE_BATCH_LAYERS").is_ok();
+    if let Err(e) = gsparse::figures::fig7(quick, batch) {
         eprintln!("fig7 failed (did you run `make artifacts`?): {e:#}");
         std::process::exit(1);
     }
-    if let Err(e) = gsparse::figures::fig8(quick) {
+    if let Err(e) = gsparse::figures::fig8(quick, batch) {
         eprintln!("fig8: {e:#}");
     }
 }

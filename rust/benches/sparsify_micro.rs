@@ -124,7 +124,7 @@ fn main() {
     let g = gradient(d, 5);
     let mut rand = RandArray::from_seed(6, 1 << 22);
     for &m in Method::all() {
-        let mut c = sparsify::build(m, 0.05, 0.5, 4);
+        let mut c = gsparse::api::MethodSpec::from_parts(m, 0.05, 0.5, 4).build();
         let mut out = sparsify::Compressed::Sparse(SparseGrad::empty(d));
         let s = b.bench(&format!("compress {m}"), Some(d as u64), || {
             black_box(c.compress_into(black_box(&g), &mut rand, &mut out));

@@ -6,7 +6,7 @@
 //! trajectory.
 
 use gsparse::benchkit::{black_box, section, Bencher, JsonReport};
-use gsparse::coordinator::dist::{self, DistConfig};
+use gsparse::coordinator::dist::{self, RunPlan};
 use gsparse::rngkit::RandArray;
 use gsparse::sparsify::{greedy_probs, sample_sparse};
 use gsparse::transport::frame::{self, GradHeader, MsgView};
@@ -50,7 +50,7 @@ fn bench_frame_codec(report: &mut JsonReport) {
 }
 
 fn bench_cluster(report: &mut JsonReport, backend: &str) {
-    let cfg = DistConfig {
+    let cfg = RunPlan {
         workers: 2,
         rounds: 150,
         n: 512,

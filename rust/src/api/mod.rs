@@ -1,0 +1,664 @@
+//! The unified public API: one [`Session`] that owns every cross-coordinator
+//! choice (compression method, wire codec, RNG seed, worker topology,
+//! network model, layer batching) exactly once, and is consumed by **all
+//! four** coordinators — the synchronous trainer, the SSP parameter server,
+//! the threaded cluster, and the TCP distributed runtime.
+//!
+//! Before this module the same five knobs were duplicated across four
+//! near-identical config structs (`TrainOptions`, `PsConfig`, `DistConfig`,
+//! `Cluster::with_codec`) plus the positional
+//! `sparsify::build(method, rho, eps, qsgd_bits)` factory, whose unlabeled
+//! `f32` arguments were an accident waiting to happen. The replacement:
+//!
+//! * [`MethodSpec`] — a typed compressor specification: every method carries
+//!   exactly the parameters it uses, by name (`MethodSpec::GSpar { rho,
+//!   iters }`), so ρ cannot be passed where ε was meant;
+//! * [`SessionBuilder`] → [`Session`] — the shared run context, built once:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla_extension rpath on this image)
+//! use gsparse::api::{MethodSpec, Session, SyncTask};
+//! use gsparse::coding::WireCodec;
+//!
+//! let session = Session::builder()
+//!     .method(MethodSpec::GSpar { rho: 0.1, iters: 2 })
+//!     .codec(WireCodec::Entropy)
+//!     .workers(4)
+//!     .seed(2018)
+//!     .build();
+//! let ds = gsparse::data::gen_logistic(256, 512, 0.6, 0.25, 2018);
+//! let model = gsparse::model::LogisticModel::new(1.0 / 2560.0);
+//! let task = SyncTask { epochs: 2, ..SyncTask::default() };
+//! let curve = session.train_convex(&task, &ds, &model);
+//! assert!(curve.final_loss().is_finite());
+//! ```
+//!
+//! The per-run knobs that are *not* shared across coordinators (epochs,
+//! learning rate, push budgets, dataset shape) live in small task structs
+//! ([`SyncTask`], [`PsTask`], [`DistTask`]) taken by the corresponding
+//! `Session` method. The old config structs survive as `#[deprecated]`
+//! shims that forward here, so downstream code migrates on its own
+//! schedule.
+//!
+//! Layer batching: [`SessionBuilder::batch_layers`] turns on the batched
+//! multi-layer model-update pipeline for [`Session::cluster`] — one engine
+//! invocation and **one** `WireBatch` transport frame per worker per round
+//! instead of one frame per layer (see [`crate::coding::batch`]). Peers
+//! that negotiated transport version 2 fall back to per-layer frames
+//! automatically.
+
+use crate::coding::WireCodec;
+use crate::comm::NetworkModel;
+use crate::config::Method;
+use crate::coordinator::cluster::Cluster;
+use crate::coordinator::dist::{self, DistReport, RunPlan};
+use crate::coordinator::param_server::PsReport;
+use crate::coordinator::sync::OptKind;
+use crate::data::Dataset;
+use crate::metrics::RunCurve;
+use crate::model::ConvexModel;
+use crate::sparsify::{
+    Compressor, DenseCompressor, GSparCompressor, OneBitSgd, QsgdCompressor, TernGradCompressor,
+    TopKCompressor, UniformSampler,
+};
+use crate::transport::{Listener, Transport, TRANSPORT_VERSION};
+
+/// Typed compressor specification — the replacement for the positional
+/// `sparsify::build(method, rho, eps, qsgd_bits)` factory. Each variant
+/// names exactly the parameters its method consumes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MethodSpec {
+    /// No compression (the paper's dense "baseline").
+    Dense,
+    /// The paper's sparsifier with the greedy solver (Algorithm 3, the
+    /// variant used in all of its experiments) at target density `rho`.
+    GSpar {
+        /// Target density ρ ∈ (0, 1].
+        rho: f32,
+        /// Fixed-point iterations of Algorithm 3 (the paper uses 2).
+        iters: usize,
+    },
+    /// The closed-form solver (Algorithm 2) at variance budget `eps`.
+    GSparExact {
+        /// Variance budget ε of the closed-form solve.
+        eps: f32,
+    },
+    /// Uniform-probability sampling baseline at density `rho`.
+    UniSp {
+        /// Keep probability for every coordinate.
+        rho: f32,
+    },
+    /// QSGD stochastic quantization at `bits` levels per coordinate.
+    Qsgd {
+        /// Quantization width in bits.
+        bits: u32,
+    },
+    /// TernGrad {-1, 0, +1} ternarization.
+    TernGrad,
+    /// Deterministic (biased) top-k at density `rho`.
+    TopK {
+        /// Kept fraction of coordinates.
+        rho: f32,
+    },
+    /// 1-bit SGD with error feedback.
+    OneBit,
+}
+
+impl MethodSpec {
+    /// The untyped [`Method`] tag this spec builds (labels, wire configs).
+    pub fn method(&self) -> Method {
+        match self {
+            MethodSpec::Dense => Method::Dense,
+            MethodSpec::GSpar { .. } => Method::GSpar,
+            MethodSpec::GSparExact { .. } => Method::GSparExact,
+            MethodSpec::UniSp { .. } => Method::UniSp,
+            MethodSpec::Qsgd { .. } => Method::Qsgd,
+            MethodSpec::TernGrad => Method::TernGrad,
+            MethodSpec::TopK { .. } => Method::TopK,
+            MethodSpec::OneBit => Method::OneBit,
+        }
+    }
+
+    /// Bridge from the old positional convention: `rho` is the density
+    /// (GSpar/UniSp/TopK), `eps` the variance budget (GSpar-exact), and
+    /// `qsgd_bits` the QSGD width — with the same defaults the deprecated
+    /// `sparsify::build` applied (2 greedy iterations).
+    pub fn from_parts(method: Method, rho: f32, eps: f32, qsgd_bits: u32) -> Self {
+        match method {
+            Method::Dense => MethodSpec::Dense,
+            Method::GSpar => MethodSpec::GSpar { rho, iters: 2 },
+            Method::GSparExact => MethodSpec::GSparExact { eps },
+            Method::UniSp => MethodSpec::UniSp { rho },
+            Method::Qsgd => MethodSpec::Qsgd { bits: qsgd_bits },
+            Method::TernGrad => MethodSpec::TernGrad,
+            Method::TopK => MethodSpec::TopK { rho },
+            Method::OneBit => MethodSpec::OneBit,
+        }
+    }
+
+    /// Target transmission density, for the methods that have one.
+    pub fn density(&self) -> Option<f32> {
+        match *self {
+            MethodSpec::GSpar { rho, .. }
+            | MethodSpec::UniSp { rho }
+            | MethodSpec::TopK { rho } => Some(rho),
+            _ => None,
+        }
+    }
+
+    /// QSGD quantization width, defaulting to the historical 4 bits — what
+    /// the wire-shipped [`RunPlan`] carries for non-QSGD methods.
+    pub fn qsgd_bits(&self) -> u32 {
+        match *self {
+            MethodSpec::Qsgd { bits } => bits,
+            _ => 4,
+        }
+    }
+
+    /// Whether this method supports the batched multi-layer pipeline: it
+    /// must produce sparse (`SparseGrad`) messages — the only payload the
+    /// `WireBatch` frame packs — and hold no per-layer state (1-bit error
+    /// feedback keeps a per-dimension residual, so one instance cannot be
+    /// shared across a layer list).
+    pub fn batchable(&self) -> bool {
+        matches!(
+            self,
+            MethodSpec::GSpar { .. }
+                | MethodSpec::GSparExact { .. }
+                | MethodSpec::UniSp { .. }
+                | MethodSpec::TopK { .. }
+        )
+    }
+
+    /// Build a fresh compressor instance for this spec (one per worker —
+    /// some methods carry per-worker state).
+    pub fn build(&self) -> Box<dyn Compressor> {
+        match *self {
+            MethodSpec::Dense => Box::new(DenseCompressor),
+            MethodSpec::GSpar { rho, iters } => Box::new(GSparCompressor::greedy(rho, iters)),
+            MethodSpec::GSparExact { eps } => Box::new(GSparCompressor::closed_form(eps)),
+            MethodSpec::UniSp { rho } => Box::new(UniformSampler::new(rho)),
+            MethodSpec::Qsgd { bits } => Box::new(QsgdCompressor::new(bits)),
+            MethodSpec::TernGrad => Box::new(TernGradCompressor::new()),
+            MethodSpec::TopK { rho } => Box::new(TopKCompressor::new(rho)),
+            MethodSpec::OneBit => Box::new(OneBitSgd::new()),
+        }
+    }
+}
+
+impl std::fmt::Display for MethodSpec {
+    /// Figure-label form, matching the labels the coordinators always used.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            MethodSpec::Dense => f.write_str("baseline"),
+            MethodSpec::GSpar { rho, .. } => write!(f, "GSpar(rho={rho})"),
+            MethodSpec::GSparExact { .. } => f.write_str("GSpar-exact"),
+            MethodSpec::UniSp { rho } => write!(f, "UniSp(rho={rho})"),
+            MethodSpec::Qsgd { bits } => write!(f, "QSGD({bits})"),
+            MethodSpec::TernGrad => f.write_str("TernGrad"),
+            MethodSpec::TopK { rho } => write!(f, "TopK(rho={rho})"),
+            MethodSpec::OneBit => f.write_str("1Bit"),
+        }
+    }
+}
+
+/// Builder for [`Session`]. Every field has the historical default, so
+/// `Session::builder().build()` reproduces the old `Default` configs.
+#[derive(Clone, Debug)]
+pub struct SessionBuilder {
+    method: MethodSpec,
+    codec: WireCodec,
+    seed: u64,
+    workers: usize,
+    net: NetworkModel,
+    batch_layers: bool,
+    transport_version: u8,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        Self {
+            method: MethodSpec::GSpar { rho: 0.1, iters: 2 },
+            codec: WireCodec::Raw,
+            seed: 42,
+            workers: 4,
+            net: NetworkModel::commodity_1g(),
+            batch_layers: false,
+            transport_version: TRANSPORT_VERSION,
+        }
+    }
+}
+
+impl SessionBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The gradient compression method (see [`MethodSpec`]).
+    pub fn method(mut self, method: MethodSpec) -> Self {
+        self.method = method;
+        self
+    }
+
+    /// The negotiated wire codec every transport handshake announces.
+    pub fn codec(mut self, codec: WireCodec) -> Self {
+        self.codec = codec;
+        self
+    }
+
+    /// Root RNG seed; workers derive their streams from it by id.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Worker count M (threads in one process, or remote processes).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// The α-β network model backing the simulated-time column.
+    pub fn net(mut self, net: NetworkModel) -> Self {
+        self.net = net;
+        self
+    }
+
+    /// Enable the batched multi-layer pipeline: multi-layer coordinators
+    /// compress a model's whole layer list in one engine invocation and
+    /// ship it as one `WireBatch` frame per round (methods that cannot
+    /// batch — see [`MethodSpec::batchable`] — fall back per layer).
+    pub fn batch_layers(mut self, on: bool) -> Self {
+        self.batch_layers = on;
+        self
+    }
+
+    /// Compatibility override: announce an older transport version in this
+    /// session's handshakes (clamped to the supported window). Version 2
+    /// peers cannot receive `WireBatch` frames, so batching falls back to
+    /// per-layer messages on such links.
+    pub fn transport_version(mut self, version: u8) -> Self {
+        self.transport_version =
+            version.clamp(crate::transport::MIN_TRANSPORT_VERSION, TRANSPORT_VERSION);
+        self
+    }
+
+    pub fn build(self) -> Session {
+        Session {
+            method: self.method,
+            codec: self.codec,
+            seed: self.seed,
+            workers: self.workers,
+            net: self.net,
+            batch_layers: self.batch_layers,
+            transport_version: self.transport_version,
+        }
+    }
+}
+
+/// The shared run context consumed by all four coordinators. Construct via
+/// [`Session::builder`]; the per-run knobs go into [`SyncTask`] /
+/// [`PsTask`] / [`DistTask`] at call time.
+#[derive(Clone, Debug)]
+pub struct Session {
+    method: MethodSpec,
+    codec: WireCodec,
+    seed: u64,
+    workers: usize,
+    net: NetworkModel,
+    batch_layers: bool,
+    transport_version: u8,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    pub fn method(&self) -> MethodSpec {
+        self.method
+    }
+
+    pub fn codec(&self) -> WireCodec {
+        self.codec
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn net(&self) -> NetworkModel {
+        self.net
+    }
+
+    pub fn batch_layers(&self) -> bool {
+        self.batch_layers
+    }
+
+    pub fn transport_version(&self) -> u8 {
+        self.transport_version
+    }
+
+    /// A fresh per-worker compressor for this session's method.
+    pub fn compressor(&self) -> Box<dyn Compressor> {
+        self.method.build()
+    }
+
+    /// Run the synchronous Algorithm-1 trainer (or its SVRG variants) on a
+    /// convex model — the session-owned replacement for the deprecated
+    /// `train_convex(&ConvexConfig, &TrainOptions, …)`.
+    pub fn train_convex(
+        &self,
+        task: &SyncTask,
+        ds: &Dataset,
+        model: &dyn ConvexModel,
+    ) -> RunCurve {
+        crate::coordinator::sync::run_session(self, task, ds, model)
+    }
+
+    /// Run the asynchronous SSP parameter server — the session-owned
+    /// replacement for the deprecated `run_param_server(&PsConfig, …)`.
+    pub fn param_server(
+        &self,
+        task: &PsTask,
+        ds: &Dataset,
+        model: &(dyn ConvexModel + Sync),
+    ) -> PsReport {
+        crate::coordinator::param_server::run_session(self, task, ds, model)
+    }
+
+    /// Build the threaded leader/worker cluster for a multi-layer model —
+    /// the session-owned replacement for the deprecated `Cluster::new` /
+    /// `Cluster::with_codec`. Honors [`SessionBuilder::batch_layers`].
+    pub fn cluster(&self, layer_dims: &[usize]) -> Cluster {
+        Cluster::for_session(self, layer_dims)
+    }
+
+    /// Compile this session plus a [`DistTask`] into the wire-shipped
+    /// [`RunPlan`] the distributed runtime's CONFIG frame carries.
+    ///
+    /// The CONFIG wire format (v2) carries only the [`Method`] tag, the
+    /// density and the QSGD width — as the runtime always has — so the
+    /// solver knobs a [`MethodSpec`] can override locally are rebuilt from
+    /// the historical defaults on the worker: GSpar runs 2 greedy
+    /// iterations and GSpar-exact derives ε = C1·C2 from the shipped
+    /// dataset parameters, regardless of what `GSpar { iters }` /
+    /// `GSparExact { eps }` say here.
+    pub fn dist_plan(&self, task: &DistTask) -> RunPlan {
+        RunPlan {
+            workers: self.workers,
+            rounds: task.rounds,
+            method: self.method.method(),
+            rho: self.method.density().unwrap_or(1.0),
+            qsgd_bits: self.method.qsgd_bits(),
+            batch: task.batch,
+            lr: task.lr,
+            seed: self.seed,
+            n: task.n,
+            d: task.d,
+            c1: task.c1,
+            c2: task.c2,
+            reg: task.reg,
+            codec: self.codec,
+        }
+    }
+
+    /// Launch the distributed runtime as threads in this process (InProc
+    /// channels or loopback TCP) — see [`dist::run_threads`].
+    pub fn dist_threads<T>(
+        &self,
+        transport: T,
+        bind_addr: &str,
+        task: &DistTask,
+    ) -> anyhow::Result<DistReport>
+    where
+        T: Transport + Clone + 'static,
+    {
+        dist::run_threads(transport, bind_addr, &self.dist_plan(task))
+    }
+
+    /// Launch a real multi-process cluster over loopback TCP — see
+    /// [`dist::run_processes`].
+    pub fn dist_processes(
+        &self,
+        bin: &std::path::Path,
+        bind_addr: &str,
+        task: &DistTask,
+    ) -> anyhow::Result<DistReport> {
+        dist::run_processes(bin, bind_addr, &self.dist_plan(task))
+    }
+
+    /// Run only the server side of the distributed runtime on an
+    /// already-bound listener — see [`dist::serve`].
+    pub fn dist_serve(
+        &self,
+        listener: &mut dyn Listener,
+        task: &DistTask,
+    ) -> anyhow::Result<DistReport> {
+        dist::serve(listener, &self.dist_plan(task))
+    }
+}
+
+/// Per-run knobs of the synchronous trainer (everything the deprecated
+/// `ConvexConfig` + `TrainOptions` pair carried that is not session state).
+#[derive(Clone, Debug)]
+pub struct SyncTask {
+    /// Minibatch size per worker.
+    pub batch: usize,
+    /// Data passes to run.
+    pub epochs: usize,
+    /// Base learning rate.
+    pub lr: f32,
+    /// Optimizer (SGD / SGD-1/t / SVRG variants).
+    pub opt: OptKind,
+    /// Record a curve point every this many synchronization rounds.
+    pub record_every: usize,
+    /// Subtract this from reported losses (suboptimality); 0 = raw.
+    pub f_star: f64,
+    /// Re-sparsify the averaged gradient before broadcast (Alg. 1 step 7).
+    pub resparsify_broadcast: bool,
+    /// Density of the step-7 re-sparsification. `None` uses the session
+    /// method's own density ([`MethodSpec::density`]), falling back to 1.0
+    /// (no thinning) for methods without one; the deprecated shim sets it
+    /// to the old `ConvexConfig::rho` so its behavior is preserved exactly.
+    pub resparsify_rho: Option<f32>,
+    /// SVRG inner-loop length in rounds (default: one data pass).
+    pub svrg_inner: Option<usize>,
+}
+
+impl Default for SyncTask {
+    fn default() -> Self {
+        Self {
+            batch: 8,
+            epochs: 30,
+            lr: 0.5,
+            opt: OptKind::Sgd,
+            record_every: 8,
+            f_star: 0.0,
+            resparsify_broadcast: false,
+            resparsify_rho: None,
+            svrg_inner: None,
+        }
+    }
+}
+
+/// Per-run knobs of the SSP parameter server.
+#[derive(Clone, Debug)]
+pub struct PsTask {
+    /// Total pushes across all workers.
+    pub total_pushes: usize,
+    /// SSP bound: max versions a worker's weights may lag the server.
+    pub max_staleness: u64,
+    /// Minibatch size per worker.
+    pub batch: usize,
+    /// Base learning rate.
+    pub lr: f32,
+}
+
+impl Default for PsTask {
+    fn default() -> Self {
+        Self {
+            total_pushes: 2000,
+            max_staleness: 8,
+            batch: 8,
+            lr: 0.5,
+        }
+    }
+}
+
+/// Per-run knobs of the distributed (TCP / multi-process) runtime: the
+/// round budget plus the seed-deterministic synthetic workload every
+/// participant regenerates locally.
+#[derive(Clone, Debug)]
+pub struct DistTask {
+    /// Synchronization rounds; total pushes = rounds × workers.
+    pub rounds: usize,
+    /// Minibatch size per worker.
+    pub batch: usize,
+    /// Base learning rate.
+    pub lr: f32,
+    /// Dataset size N.
+    pub n: usize,
+    /// Dimension d.
+    pub d: usize,
+    /// Magnitude shrink factor C1.
+    pub c1: f32,
+    /// Shrink threshold C2.
+    pub c2: f32,
+    /// ℓ2 regularization.
+    pub reg: f32,
+}
+
+impl Default for DistTask {
+    fn default() -> Self {
+        Self {
+            rounds: 500,
+            batch: 8,
+            lr: 0.5,
+            n: 1024,
+            d: 2048,
+            c1: 0.6,
+            c2: 0.25,
+            reg: 1.0 / (10.0 * 1024.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngkit::RandArray;
+    use crate::sparsify::{Compressed, SparseGrad};
+
+    #[test]
+    fn method_spec_round_trips_the_method_tag() {
+        for &m in Method::all() {
+            let spec = MethodSpec::from_parts(m, 0.2, 0.5, 6);
+            assert_eq!(spec.method(), m, "{m}");
+            assert!(!spec.to_string().is_empty());
+        }
+        assert_eq!(MethodSpec::Qsgd { bits: 6 }.qsgd_bits(), 6);
+        assert_eq!(MethodSpec::Dense.qsgd_bits(), 4);
+        assert_eq!(MethodSpec::GSpar { rho: 0.3, iters: 2 }.density(), Some(0.3));
+        assert_eq!(MethodSpec::TernGrad.density(), None);
+    }
+
+    #[test]
+    fn batchable_methods_are_the_sparse_stateless_ones() {
+        assert!(MethodSpec::GSpar { rho: 0.1, iters: 2 }.batchable());
+        assert!(MethodSpec::GSparExact { eps: 0.5 }.batchable());
+        assert!(MethodSpec::UniSp { rho: 0.1 }.batchable());
+        assert!(MethodSpec::TopK { rho: 0.1 }.batchable());
+        assert!(!MethodSpec::Dense.batchable());
+        assert!(!MethodSpec::Qsgd { bits: 4 }.batchable());
+        assert!(!MethodSpec::TernGrad.batchable());
+        assert!(!MethodSpec::OneBit.batchable());
+    }
+
+    /// The satellite guarantee for the deprecated positional factory: for
+    /// every method, `sparsify::build(m, rho, eps, bits)` and
+    /// `MethodSpec::from_parts(m, rho, eps, bits).build()` construct
+    /// compressors that produce identical messages and statistics.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_build_and_method_spec_build_identical_compressors() {
+        let g: Vec<f32> = (0..512)
+            .map(|i| ((i * 37 % 29) as f32 - 14.0) / 10.0)
+            .collect();
+        for &m in Method::all() {
+            let mut old = crate::sparsify::build(m, 0.2, 0.5, 5);
+            let mut new = MethodSpec::from_parts(m, 0.2, 0.5, 5).build();
+            let mut rand_old = RandArray::from_seed(97, 1 << 14);
+            let mut rand_new = rand_old.clone();
+            let mut msg_old = Compressed::Sparse(SparseGrad::empty(g.len()));
+            let mut msg_new = Compressed::Sparse(SparseGrad::empty(g.len()));
+            for _ in 0..3 {
+                let s_old = old.compress_into(&g, &mut rand_old, &mut msg_old);
+                let s_new = new.compress_into(&g, &mut rand_new, &mut msg_new);
+                assert_eq!(s_old.expected_nnz, s_new.expected_nnz, "{m}");
+                assert_eq!(s_old.ideal_bits, s_new.ideal_bits, "{m}");
+                assert_eq!(
+                    format!("{msg_old:?}"),
+                    format!("{msg_new:?}"),
+                    "{m}: messages differ"
+                );
+            }
+            assert_eq!(old.name(), new.name(), "{m}");
+        }
+    }
+
+    #[test]
+    fn builder_defaults_and_overrides() {
+        let s = Session::builder().build();
+        assert_eq!(s.workers(), 4);
+        assert_eq!(s.seed(), 42);
+        assert_eq!(s.codec(), WireCodec::Raw);
+        assert!(!s.batch_layers());
+        assert_eq!(s.transport_version(), TRANSPORT_VERSION);
+
+        let s = Session::builder()
+            .method(MethodSpec::TopK { rho: 0.05 })
+            .codec(WireCodec::Entropy)
+            .workers(0) // clamped to 1
+            .seed(7)
+            .batch_layers(true)
+            .transport_version(0) // clamped to the supported window
+            .build();
+        assert_eq!(s.workers(), 1);
+        assert_eq!(s.seed(), 7);
+        assert_eq!(s.codec(), WireCodec::Entropy);
+        assert!(s.batch_layers());
+        assert_eq!(s.transport_version(), crate::transport::MIN_TRANSPORT_VERSION);
+        assert_eq!(s.method().method(), Method::TopK);
+        assert!(!s.compressor().name().is_empty());
+    }
+
+    #[test]
+    fn dist_plan_compiles_session_and_task() {
+        let session = Session::builder()
+            .method(MethodSpec::Qsgd { bits: 6 })
+            .codec(WireCodec::Entropy)
+            .workers(3)
+            .seed(99)
+            .build();
+        let task = DistTask {
+            rounds: 17,
+            d: 64,
+            ..DistTask::default()
+        };
+        let plan = session.dist_plan(&task);
+        assert_eq!(plan.workers, 3);
+        assert_eq!(plan.rounds, 17);
+        assert_eq!(plan.method, Method::Qsgd);
+        assert_eq!(plan.qsgd_bits, 6);
+        assert_eq!(plan.seed, 99);
+        assert_eq!(plan.d, 64);
+        assert_eq!(plan.codec, WireCodec::Entropy);
+        // The plan survives its own wire encoding (the CONFIG frame).
+        assert_eq!(RunPlan::decode(&plan.encode()).unwrap(), plan);
+    }
+}

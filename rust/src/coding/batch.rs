@@ -1,0 +1,479 @@
+//! `WireBatch`: one wire message for a whole model's layer list.
+//!
+//! The paper's §5.2 experiments sparsify CNN gradients **layer by layer**,
+//! so a synchronization round used to ship one framed single-tensor message
+//! (see [`crate::coding::encode_with`]) per layer — paying a 24-byte codec
+//! header, a per-message Rice parameter search, and a transport frame per
+//! layer. `WireBatch` packs all per-layer sub-messages behind one batch
+//! header with **shared Rice parameters** (chosen once from the pooled gap
+//! distribution of every layer's index streams), so a whole model update
+//! travels as a single length-delimited transport frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "GSPB"
+//! 4       1     version (1)
+//! 5       1     codec the batch was encoded under (0 = raw, 1 = entropy)
+//! 6       1     ka — shared Rice parameter for every QA index stream
+//! 7       1     kb — shared Rice parameter for every QB index stream
+//! 8       4     L — number of layers (u32 LE)
+//! 12      ...   L sub-messages, concatenated in layer order
+//! ```
+//!
+//! Each sub-message drops the magic/version/Rice-parameter bytes the
+//! single-message header repeats (17 bytes instead of 24 + frame):
+//!
+//! ```text
+//! offset  size  field
+//! 0       1     encoding (0 = Indexed, 1 = DenseSymbols, 2 = IndexedRice)
+//! 1       4     d            (u32 LE)
+//! 5       4     nnz_a        (u32 LE)
+//! 9       4     nnz_b        (u32 LE)
+//! 13      4     shared_mag   (f32 LE, = 1/λ)
+//! 17      ...   payload — byte-identical to the single-message layouts,
+//!               with `IndexedRice` reading the shared ka/kb above
+//! ```
+//!
+//! Sub-message payloads have no explicit length: the fixed-layout encodings
+//! derive theirs from `(d, nnz_a, nnz_b)`, and the Rice stream ends after
+//! exactly `nnz_a + nnz_b` codewords plus canonical zero padding — the same
+//! self-delimiting property the single-message decoder already enforces.
+//! The encoder still chooses the cheapest admissible encoding per layer
+//! (falling back to the raw layouts when the shared parameters don't pay),
+//! mirroring the Theorem-4 `min(·,·)` per layer. Header bytes 6–7 must be
+//! zero when no sub-message uses `IndexedRice`, so every batch has exactly
+//! one canonical byte form per codec.
+
+use super::message::{
+    self, dense_payload_len, gaps_of, indexed_payload_len, rice_payload_len, Encoding, WireCodec,
+    WireError,
+};
+use super::rice::{self, MAX_RICE_PARAM};
+use crate::sparsify::SparseGrad;
+
+/// Magic of a batched message ("GSPB" vs the single-message "GSPR").
+pub const BATCH_MAGIC: &[u8; 4] = b"GSPB";
+pub const BATCH_VERSION: u8 = 1;
+/// Fixed batch-header length in bytes.
+pub const BATCH_HEADER_LEN: usize = 12;
+/// Fixed per-layer sub-header length in bytes.
+pub const SUB_HEADER_LEN: usize = 17;
+
+/// The shared Rice parameters the `Entropy` codec would use for this layer
+/// list: one `(ka, kb)` pair chosen from the pooled gap distributions of
+/// every layer's QA / QB index streams.
+fn shared_rice_params(sgs: &[&SparseGrad]) -> (u8, u8) {
+    let (ka, _) = rice::choose_param(|| sgs.iter().flat_map(|sg| gaps_of(&sg.exact)));
+    let (kb, _) = rice::choose_param(|| sgs.iter().flat_map(|sg| gaps_of(&sg.shared)));
+    (ka, kb)
+}
+
+/// Cheapest admissible encoding for one layer under the batch's shared
+/// Rice parameters; returns the encoding and its payload length.
+fn choose_sub(sg: &SparseGrad, codec: WireCodec, ka: u8, kb: u8) -> (Encoding, usize) {
+    let (na, nb) = (sg.exact.len(), sg.shared.len());
+    let indexed = indexed_payload_len(na, nb);
+    let dense = dense_payload_len(sg.d as usize, na);
+    let raw = indexed.min(dense);
+    let rice_len = match codec {
+        WireCodec::Raw => usize::MAX,
+        WireCodec::Entropy => {
+            let bits = rice::stream_bits(gaps_of(&sg.exact), ka as u32)
+                + rice::stream_bits(gaps_of(&sg.shared), kb as u32);
+            rice_payload_len(na, nb, bits)
+        }
+    };
+    if rice_len < raw {
+        (Encoding::IndexedRice, rice_len)
+    } else if indexed <= dense {
+        (Encoding::Indexed, indexed)
+    } else {
+        (Encoding::DenseSymbols, dense)
+    }
+}
+
+/// Byte length [`encode_batch`] will produce for this layer list.
+pub fn encoded_batch_len(sgs: &[&SparseGrad], codec: WireCodec) -> usize {
+    let (ka, kb) = match codec {
+        WireCodec::Raw => (0, 0),
+        WireCodec::Entropy => shared_rice_params(sgs),
+    };
+    BATCH_HEADER_LEN
+        + sgs
+            .iter()
+            .map(|sg| SUB_HEADER_LEN + choose_sub(sg, codec, ka, kb).1)
+            .sum::<usize>()
+}
+
+/// Encode a layer list into one `WireBatch` message (cleared `out`, whose
+/// capacity is reused across rounds). Per-round cost beyond the byte
+/// writes: one L-element encoding-plan buffer (one byte per *layer*, never
+/// per coordinate). The per-layer sub-messages are written straight from
+/// the [`SparseGrad`]s — no intermediate per-layer message is materialized.
+pub fn encode_batch(sgs: &[&SparseGrad], codec: WireCodec, out: &mut Vec<u8>) {
+    let (ka, kb) = match codec {
+        WireCodec::Raw => (0, 0),
+        WireCodec::Entropy => shared_rice_params(sgs),
+    };
+    // Sizing pass: per-layer encoding choices (cached — the Entropy cost
+    // model walks both gap streams, so recomputing it during the write
+    // pass would double the O(nnz) work), the total length for one
+    // reserve, and whether Rice engages anywhere — header bytes 6–7 are
+    // zero otherwise, keeping one canonical byte form per (layer list,
+    // codec).
+    let mut total = BATCH_HEADER_LEN;
+    let mut any_rice = false;
+    let plan: Vec<Encoding> = sgs
+        .iter()
+        .map(|sg| {
+            let (enc, len) = choose_sub(sg, codec, ka, kb);
+            any_rice |= enc == Encoding::IndexedRice;
+            total += SUB_HEADER_LEN + len;
+            enc
+        })
+        .collect();
+    let (hka, hkb) = if any_rice { (ka, kb) } else { (0, 0) };
+
+    out.clear();
+    out.reserve(total);
+    out.extend_from_slice(BATCH_MAGIC);
+    out.push(BATCH_VERSION);
+    out.push(codec.index() as u8);
+    out.push(hka);
+    out.push(hkb);
+    out.extend_from_slice(&(sgs.len() as u32).to_le_bytes());
+    for (sg, &enc) in sgs.iter().zip(plan.iter()) {
+        out.push(enc as u8);
+        out.extend_from_slice(&sg.d.to_le_bytes());
+        out.extend_from_slice(&(sg.exact.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(sg.shared.len() as u32).to_le_bytes());
+        out.extend_from_slice(&sg.shared_mag.to_le_bytes());
+        message::write_payload(sg, enc, ka, kb, out);
+    }
+    debug_assert_eq!(out.len(), total);
+}
+
+/// Decode a `WireBatch` into caller-held per-layer [`SparseGrad`]s
+/// (buffers reused; `out` is resized to the layer count). `sub_lens`
+/// receives each sub-message's total byte length (header + payload) — the
+/// per-layer share of the batch the coordinators ledger. On error both
+/// outputs may hold partial content and must not be interpreted.
+pub fn decode_batch_into(
+    buf: &[u8],
+    out: &mut Vec<SparseGrad>,
+    sub_lens: &mut Vec<usize>,
+) -> Result<(), WireError> {
+    sub_lens.clear();
+    if buf.len() < BATCH_HEADER_LEN {
+        return Err(WireError::Truncated(buf.len()));
+    }
+    if &buf[0..4] != BATCH_MAGIC {
+        return Err(WireError::BadMagic);
+    }
+    if buf[4] != BATCH_VERSION {
+        return Err(WireError::BadVersion(buf[4]));
+    }
+    let codec = WireCodec::from_u8(buf[5]).ok_or(WireError::BadEncoding(buf[5]))?;
+    let (ka, kb) = (buf[6], buf[7]);
+    if ka > MAX_RICE_PARAM {
+        return Err(WireError::BadRiceParam(ka));
+    }
+    if kb > MAX_RICE_PARAM {
+        return Err(WireError::BadRiceParam(kb));
+    }
+    if codec == WireCodec::Raw && (ka != 0 || kb != 0) {
+        return Err(WireError::NonZeroReserved(if ka != 0 { ka } else { kb }));
+    }
+    let nlayers = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+    // A hostile layer count must not drive the resize below: every claimed
+    // sub-message costs at least its fixed header, so the buffer itself
+    // bounds the count before any allocation happens.
+    let min_total = BATCH_HEADER_LEN as u64 + nlayers as u64 * SUB_HEADER_LEN as u64;
+    if (buf.len() as u64) < min_total {
+        return Err(WireError::Truncated(buf.len()));
+    }
+    if out.len() < nlayers {
+        out.resize_with(nlayers, || SparseGrad::empty(0));
+    }
+    out.truncate(nlayers);
+
+    let mut off = BATCH_HEADER_LEN;
+    let mut any_rice = false;
+    for slot in out.iter_mut() {
+        if buf.len() < off + SUB_HEADER_LEN {
+            return Err(WireError::Truncated(buf.len()));
+        }
+        let h = &buf[off..off + SUB_HEADER_LEN];
+        let enc = match h[0] {
+            0 => Encoding::Indexed,
+            1 => Encoding::DenseSymbols,
+            2 => Encoding::IndexedRice,
+            e => return Err(WireError::BadEncoding(e)),
+        };
+        if enc == Encoding::IndexedRice {
+            if codec == WireCodec::Raw {
+                // A raw-codec batch may not smuggle Rice sub-messages.
+                return Err(WireError::BadEncoding(2));
+            }
+            any_rice = true;
+        }
+        let d = u32::from_le_bytes(h[1..5].try_into().unwrap());
+        let na = u32::from_le_bytes(h[5..9].try_into().unwrap()) as usize;
+        let nb = u32::from_le_bytes(h[9..13].try_into().unwrap()) as usize;
+        let shared_mag = f32::from_le_bytes(h[13..17].try_into().unwrap());
+        // Same adversarial-header gates as the single-message decoder,
+        // before any per-layer reserve.
+        if na as u64 + nb as u64 > d as u64 {
+            return Err(WireError::CountsExceedDim {
+                na: na as u32,
+                nb: nb as u32,
+                d,
+            });
+        }
+        if !shared_mag.is_finite() {
+            return Err(WireError::NonFiniteSharedMag(shared_mag));
+        }
+        slot.reset(d as usize);
+        slot.shared_mag = shared_mag;
+        let consumed =
+            message::read_payload(enc, d, na, nb, ka, kb, &buf[off + SUB_HEADER_LEN..], slot)?;
+        sub_lens.push(SUB_HEADER_LEN + consumed);
+        off += SUB_HEADER_LEN + consumed;
+    }
+    if off != buf.len() {
+        return Err(WireError::LengthMismatch {
+            expected: off,
+            got: buf.len(),
+        });
+    }
+    if !any_rice && (ka != 0 || kb != 0) {
+        return Err(WireError::NonZeroReserved(if ka != 0 { ka } else { kb }));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngkit::RandArray;
+    use crate::sparsify::{greedy_probs, sample_sparse};
+
+    fn sample_layer(d: usize, rho: f32, seed: u64) -> SparseGrad {
+        let mut rng = crate::rngkit::Xoshiro256pp::seed_from_u64(seed);
+        let g: Vec<f32> = (0..d).map(|_| (rng.next_gaussian() * 0.5) as f32).collect();
+        let mut p = Vec::new();
+        let pv = greedy_probs(&g, rho, 2, &mut p);
+        let mut ra = RandArray::from_seed(seed ^ 1, 1 << 16);
+        sample_sparse(&g, &p, pv.inv_lambda, &mut ra)
+    }
+
+    fn roundtrip(layers: &[SparseGrad], codec: WireCodec) -> (Vec<u8>, Vec<usize>) {
+        let refs: Vec<&SparseGrad> = layers.iter().collect();
+        let mut buf = Vec::new();
+        encode_batch(&refs, codec, &mut buf);
+        assert_eq!(buf.len(), encoded_batch_len(&refs, codec), "{codec}");
+        let mut back = Vec::new();
+        let mut sub_lens = Vec::new();
+        decode_batch_into(&buf, &mut back, &mut sub_lens).unwrap_or_else(|e| {
+            panic!("batch decode failed under {codec}: {e}");
+        });
+        assert_eq!(back.len(), layers.len());
+        for (l, (a, b)) in layers.iter().zip(&back).enumerate() {
+            assert_eq!(a, b, "layer {l} drifted under {codec}");
+        }
+        assert_eq!(
+            sub_lens.iter().sum::<usize>() + BATCH_HEADER_LEN,
+            buf.len(),
+            "sub lengths must tile the batch"
+        );
+        (buf, sub_lens)
+    }
+
+    #[test]
+    fn multi_layer_roundtrips_both_codecs() {
+        let layers = vec![
+            sample_layer(4096, 0.01, 7),
+            SparseGrad::empty(100),
+            sample_layer(257, 0.9, 8), // d % 4 != 0, DenseSymbols
+            sample_layer(1 << 14, 0.02, 9),
+        ];
+        for codec in [WireCodec::Raw, WireCodec::Entropy] {
+            roundtrip(&layers, codec);
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_single_layer_batch() {
+        for codec in [WireCodec::Raw, WireCodec::Entropy] {
+            let (buf, _) = roundtrip(&[], codec);
+            assert_eq!(buf.len(), BATCH_HEADER_LEN);
+            roundtrip(&[SparseGrad::empty(1)], codec);
+            roundtrip(&[sample_layer(2048, 0.05, 11)], codec);
+        }
+    }
+
+    #[test]
+    fn raw_batch_beats_per_layer_headers() {
+        // Under the raw codec the sub-payloads are byte-identical to the
+        // single-message payloads, so the batch wins exactly the header
+        // bytes: 17 per layer instead of 24, plus one 12-byte batch header.
+        let layers = vec![
+            sample_layer(2048, 0.02, 21),
+            sample_layer(1024, 0.05, 22),
+            sample_layer(512, 0.1, 23),
+        ];
+        let refs: Vec<&SparseGrad> = layers.iter().collect();
+        let batch = encoded_batch_len(&refs, WireCodec::Raw);
+        let singles: usize = layers
+            .iter()
+            .map(|sg| super::super::encoded_len_with(sg, WireCodec::Raw))
+            .sum();
+        assert_eq!(
+            batch,
+            singles + BATCH_HEADER_LEN
+                - layers.len() * (super::super::HEADER_LEN - SUB_HEADER_LEN),
+        );
+        assert!(batch < singles);
+    }
+
+    #[test]
+    fn entropy_batch_never_larger_than_raw_batch() {
+        let layers: Vec<SparseGrad> = (0..4).map(|i| sample_layer(1 << 13, 0.02, 30 + i)).collect();
+        let refs: Vec<&SparseGrad> = layers.iter().collect();
+        let raw = encoded_batch_len(&refs, WireCodec::Raw);
+        let ent = encoded_batch_len(&refs, WireCodec::Entropy);
+        assert!(ent <= raw, "entropy batch {ent} > raw batch {raw}");
+        // At this sparsity Rice must actually engage.
+        let mut buf = Vec::new();
+        encode_batch(&refs, WireCodec::Entropy, &mut buf);
+        assert!(buf[6] > 0 || buf[7] > 0, "expected shared Rice params");
+        assert!(ent < raw);
+    }
+
+    #[test]
+    fn rejects_malformed_batches() {
+        let layers = vec![sample_layer(512, 0.05, 41), SparseGrad::empty(9)];
+        let refs: Vec<&SparseGrad> = layers.iter().collect();
+        let mut buf = Vec::new();
+        encode_batch(&refs, WireCodec::Raw, &mut buf);
+        let mut out = Vec::new();
+        let mut lens = Vec::new();
+
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert_eq!(
+            decode_batch_into(&bad, &mut out, &mut lens),
+            Err(WireError::BadMagic)
+        );
+        let mut bad = buf.clone();
+        bad[4] = 9;
+        assert_eq!(
+            decode_batch_into(&bad, &mut out, &mut lens),
+            Err(WireError::BadVersion(9))
+        );
+        let mut bad = buf.clone();
+        bad[5] = 7; // unknown codec byte
+        assert_eq!(
+            decode_batch_into(&bad, &mut out, &mut lens),
+            Err(WireError::BadEncoding(7))
+        );
+        // Raw batch with nonzero Rice parameters is non-canonical.
+        let mut bad = buf.clone();
+        bad[6] = 3;
+        assert_eq!(
+            decode_batch_into(&bad, &mut out, &mut lens),
+            Err(WireError::NonZeroReserved(3))
+        );
+        // Hostile layer count: not backed by payload bytes.
+        let mut bad = buf.clone();
+        bad[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_batch_into(&bad, &mut out, &mut lens),
+            Err(WireError::Truncated(_))
+        ));
+        // Trailing bytes after the final sub-message.
+        let mut bad = buf.clone();
+        bad.push(0);
+        assert!(matches!(
+            decode_batch_into(&bad, &mut out, &mut lens),
+            Err(WireError::LengthMismatch { .. })
+        ));
+        // An empty sub-message claiming the Rice encoding is non-canonical
+        // (it would let the shared-parameter header bytes float freely).
+        let empty = vec![SparseGrad::empty(9)];
+        let refs: Vec<&SparseGrad> = empty.iter().collect();
+        let mut ebuf = Vec::new();
+        encode_batch(&refs, WireCodec::Entropy, &mut ebuf);
+        let sub0_enc = BATCH_HEADER_LEN; // first sub-message's encoding byte
+        assert_eq!(ebuf[sub0_enc], Encoding::Indexed as u8);
+        let mut bad = ebuf.clone();
+        bad[sub0_enc] = Encoding::IndexedRice as u8;
+        assert_eq!(
+            decode_batch_into(&bad, &mut out, &mut lens),
+            Err(WireError::BadRiceStream("empty rice message"))
+        );
+        // Truncation anywhere inside the sub-messages.
+        assert!(decode_batch_into(&buf[..buf.len() - 1], &mut out, &mut lens).is_err());
+        assert!(decode_batch_into(&buf[..BATCH_HEADER_LEN + 3], &mut out, &mut lens).is_err());
+    }
+
+    #[test]
+    fn decode_reuses_buffers_across_batches() {
+        let big = vec![sample_layer(4096, 0.2, 50), sample_layer(2048, 0.1, 51)];
+        let small = vec![SparseGrad::empty(7)];
+        let mut buf = Vec::new();
+        let mut out = Vec::new();
+        let mut lens = Vec::new();
+        let refs: Vec<&SparseGrad> = big.iter().collect();
+        encode_batch(&refs, WireCodec::Raw, &mut buf);
+        decode_batch_into(&buf, &mut out, &mut lens).unwrap();
+        assert_eq!(out, big);
+        let refs: Vec<&SparseGrad> = small.iter().collect();
+        encode_batch(&refs, WireCodec::Raw, &mut buf);
+        decode_batch_into(&buf, &mut out, &mut lens).unwrap();
+        assert_eq!(out, small);
+        assert_eq!(lens.len(), 1);
+    }
+
+    #[test]
+    fn property_batches_roundtrip_bitwise() {
+        crate::proptest_lite::run("wire-batch roundtrip is exact", 48, |gen| {
+            let nlayers = gen.usize_in(0, 6);
+            let layers: Vec<SparseGrad> = (0..nlayers)
+                .map(|_| {
+                    let d = gen.usize_in(1, 1500);
+                    if gen.bool() {
+                        SparseGrad::empty(d)
+                    } else {
+                        let rho = gen.f32_in(0.01, 1.0);
+                        let g = gen.gradient_vec(d);
+                        let mut p = Vec::new();
+                        let pv = greedy_probs(&g, rho, 2, &mut p);
+                        let mut ra = RandArray::new(
+                            crate::rngkit::Xoshiro256pp::seed_from_u64(gen.u64()),
+                            1 << 14,
+                        );
+                        sample_sparse(&g, &p, pv.inv_lambda, &mut ra)
+                    }
+                })
+                .collect();
+            let refs: Vec<&SparseGrad> = layers.iter().collect();
+            for codec in [WireCodec::Raw, WireCodec::Entropy] {
+                let mut buf = Vec::new();
+                encode_batch(&refs, codec, &mut buf);
+                if buf.len() != encoded_batch_len(&refs, codec) {
+                    return Err(format!("length mismatch under {codec}"));
+                }
+                let mut back = Vec::new();
+                let mut lens = Vec::new();
+                if let Err(e) = decode_batch_into(&buf, &mut back, &mut lens) {
+                    return Err(format!("decode failed under {codec}: {e}"));
+                }
+                if back != layers {
+                    return Err(format!("roundtrip not identical under {codec}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

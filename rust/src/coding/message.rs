@@ -176,21 +176,21 @@ impl std::fmt::Display for WireError {
 
 impl std::error::Error for WireError {}
 
-fn indexed_payload_len(nnz_a: usize, nnz_b: usize) -> usize {
+pub(crate) fn indexed_payload_len(nnz_a: usize, nnz_b: usize) -> usize {
     nnz_a * 8 + nnz_b * 4 + nnz_b.div_ceil(8)
 }
 
-fn dense_payload_len(d: usize, nnz_a: usize) -> usize {
+pub(crate) fn dense_payload_len(d: usize, nnz_a: usize) -> usize {
     d.div_ceil(4) + nnz_a * 4
 }
 
-fn rice_payload_len(nnz_a: usize, nnz_b: usize, stream_bits: u64) -> usize {
+pub(crate) fn rice_payload_len(nnz_a: usize, nnz_b: usize, stream_bits: u64) -> usize {
     nnz_a * 4 + nnz_b.div_ceil(8) + stream_bits.div_ceil(8) as usize
 }
 
 /// Index gaps of a strictly-ascending `(index, _)` slice: first element is
 /// the index itself, later ones `i_j − i_{j−1} − 1`.
-fn gaps_of<T: Copy>(pairs: &[(u32, T)]) -> impl Iterator<Item = u32> + '_ {
+pub(crate) fn gaps_of<T: Copy>(pairs: &[(u32, T)]) -> impl Iterator<Item = u32> + '_ {
     pairs.iter().enumerate().map(|(j, &(i, _))| {
         if j == 0 {
             i
@@ -278,11 +278,24 @@ pub fn encode_with(sg: &SparseGrad, codec: WireCodec, out: &mut Vec<u8>) -> Enco
     out.extend_from_slice(&(nb as u32).to_le_bytes());
     out.extend_from_slice(&sg.shared_mag.to_le_bytes());
 
+    write_payload(sg, enc, ka, kb, out);
+    debug_assert_eq!(out.len(), encoded_len_with(sg, codec));
+    enc
+}
+
+/// Append the payload bytes of `sg` under `enc` to `out` (no header). The
+/// Rice parameters are the *caller's*: the single-message encoder passes
+/// the per-message optimum, the [`super::batch`] encoder the batch-shared
+/// pair — the byte layout is identical either way.
+pub(crate) fn write_payload(sg: &SparseGrad, enc: Encoding, ka: u8, kb: u8, out: &mut Vec<u8>) {
+    let d = sg.d as usize;
+    let nb = sg.shared.len();
     match enc {
         Encoding::Indexed => {
             // Pre-size once and write at offsets: avoids per-entry capacity
             // checks (measured 2.5x on the encode hot path — see
             // EXPERIMENTS.md §Perf).
+            let indexed_len = indexed_payload_len(sg.exact.len(), nb);
             let start = out.len();
             out.resize(start + indexed_len, 0);
             let payload = &mut out[start..];
@@ -347,8 +360,6 @@ pub fn encode_with(sg: &SparseGrad, codec: WireCodec, out: &mut Vec<u8>) -> Enco
             w.finish();
         }
     }
-    debug_assert_eq!(out.len(), encoded_len_with(sg, codec));
-    enc
 }
 
 /// Decode a wire message back into a fresh [`SparseGrad`]. Validates
@@ -414,15 +425,56 @@ pub fn decode_into(buf: &[u8], sg: &mut SparseGrad) -> Result<(), WireError> {
     sg.reset(d as usize);
     sg.shared_mag = shared_mag;
 
+    let (ka, kb) = (buf[6], buf[7]);
+    if enc == Encoding::IndexedRice {
+        // Validated here (not in `read_payload`) so every header-derived
+        // gate still runs before any buffer grows.
+        if ka > MAX_RICE_PARAM {
+            return Err(WireError::BadRiceParam(ka));
+        }
+        if kb > MAX_RICE_PARAM {
+            return Err(WireError::BadRiceParam(kb));
+        }
+    }
+    let consumed = read_payload(enc, d, na, nb, ka, kb, payload, sg)?;
+    if consumed != payload.len() {
+        return Err(WireError::LengthMismatch {
+            expected: consumed,
+            got: payload.len(),
+        });
+    }
+    Ok(())
+}
+
+/// Decode one payload under `enc` from the front of `buf` into `sg`
+/// (already reset to dimension `d` with its shared magnitude set), and
+/// return the number of bytes consumed. `buf` may extend past the payload —
+/// the [`super::batch`] decoder hands the rest of the batch buffer — so
+/// fixed-layout encodings consume exactly their computed length and the
+/// Rice encoding consumes exactly its codewords plus canonical padding.
+/// The caller has validated the header fields (`na + nb ≤ d`, finite
+/// magnitude, Rice parameters in range).
+#[allow(clippy::too_many_arguments)] // one flat call per decoded sub-message
+pub(crate) fn read_payload(
+    enc: Encoding,
+    d: u32,
+    na: usize,
+    nb: usize,
+    ka: u8,
+    kb: u8,
+    buf: &[u8],
+    sg: &mut SparseGrad,
+) -> Result<usize, WireError> {
     match enc {
         Encoding::Indexed => {
             let expected = indexed_payload_len(na, nb);
-            if payload.len() != expected {
+            if buf.len() < expected {
                 return Err(WireError::LengthMismatch {
                     expected,
-                    got: payload.len(),
+                    got: buf.len(),
                 });
             }
+            let payload = &buf[..expected];
             let mut off = 0;
             sg.exact.reserve(na);
             let mut prev: i64 = -1;
@@ -456,15 +508,17 @@ pub fn decode_into(buf: &[u8], sg: &mut SparseGrad) -> Result<(), WireError> {
                 let neg = bitmap[pos / 8] & (1 << (pos % 8)) != 0;
                 sg.shared.push((i, neg));
             }
+            Ok(expected)
         }
         Encoding::DenseSymbols => {
             let expected = dense_payload_len(d as usize, na);
-            if payload.len() != expected {
+            if buf.len() < expected {
                 return Err(WireError::LengthMismatch {
                     expected,
-                    got: payload.len(),
+                    got: buf.len(),
                 });
             }
+            let payload = &buf[..expected];
             let symbols = &payload[..(d as usize).div_ceil(4)];
             let values = &payload[(d as usize).div_ceil(4)..];
             sg.exact.reserve(na);
@@ -512,40 +566,42 @@ pub fn decode_into(buf: &[u8], sg: &mut SparseGrad) -> Result<(), WireError> {
                     got: sg.exact.len() + sg.shared.len(),
                 });
             }
+            Ok(expected)
         }
         Encoding::IndexedRice => {
-            // All header-derived gates run before any buffer grows, in the
-            // same spirit as `CountsExceedDim`: the Rice parameters must be
-            // representable, and the payload must be at least the fixed
-            // part plus the provable minimum of `(k+1)` bits per gap — so a
-            // hostile header cannot make the reserve below exceed what the
-            // (frame-capped) payload itself already paid for. The resulting
-            // decoded-memory amplification is bounded and proportional:
-            // each QA entry is corroborated by ≥ 4 payload bytes and each
-            // QB entry by ≥ 2 payload bits (1 bitmap bit + ≥ 1 stream
-            // bit) — i.e. at most ~32 decoded bytes per payload byte, the
-            // same exposure the 2-bit DenseSymbols encoding has always
-            // had, never the unbounded header-only reserve that
-            // `CountsExceedDim` guards against.
-            let (ka, kb) = (buf[6], buf[7]);
-            if ka > MAX_RICE_PARAM {
-                return Err(WireError::BadRiceParam(ka));
+            // An empty message has no gap streams, and the encoder always
+            // prefers the raw encodings for it (Rice is only chosen when
+            // strictly smaller) — so an empty Rice payload is
+            // non-canonical and would otherwise let the Rice-parameter
+            // header bytes carry arbitrary values.
+            if na == 0 && nb == 0 {
+                return Err(WireError::BadRiceStream("empty rice message"));
             }
-            if kb > MAX_RICE_PARAM {
-                return Err(WireError::BadRiceParam(kb));
-            }
+            // All header-derived gates have run before any buffer grows, in
+            // the same spirit as `CountsExceedDim`: the caller validated
+            // the Rice parameters, and the payload must be at least the
+            // fixed part plus the provable minimum of `(k+1)` bits per
+            // gap — so a hostile header cannot make the reserve below
+            // exceed what the (frame-capped) payload itself already paid
+            // for. The resulting decoded-memory amplification is bounded
+            // and proportional: each QA entry is corroborated by ≥ 4
+            // payload bytes and each QB entry by ≥ 2 payload bits (1
+            // bitmap bit + ≥ 1 stream bit) — i.e. at most ~32 decoded
+            // bytes per payload byte, the same exposure the 2-bit
+            // DenseSymbols encoding has always had, never the unbounded
+            // header-only reserve that `CountsExceedDim` guards against.
             let fixed = na * 4 + nb.div_ceil(8);
             let min_stream_bits = na as u64 * (ka as u64 + 1) + nb as u64 * (kb as u64 + 1);
             let min_len = fixed + min_stream_bits.div_ceil(8) as usize;
-            if payload.len() < min_len {
+            if buf.len() < min_len {
                 return Err(WireError::LengthMismatch {
                     expected: min_len,
-                    got: payload.len(),
+                    got: buf.len(),
                 });
             }
-            let values = &payload[..na * 4];
-            let bitmap = &payload[na * 4..fixed];
-            let stream = &payload[fixed..];
+            let values = &buf[..na * 4];
+            let bitmap = &buf[na * 4..fixed];
+            let stream = &buf[fixed..];
             sg.exact.reserve(na);
             sg.shared.reserve(nb);
             let mut reader = BitReader::new(stream);
@@ -584,20 +640,17 @@ pub fn decode_into(buf: &[u8], sg: &mut SparseGrad) -> Result<(), WireError> {
                 let neg = bitmap[pos / 8] & (1 << (pos % 8)) != 0;
                 sg.shared.push((idx as u32, neg));
             }
-            // Canonical form: the stream holds exactly the codewords (no
-            // trailing bytes) and the final byte's padding bits are zero.
-            if reader.consumed_bytes() != stream.len() {
-                return Err(WireError::LengthMismatch {
-                    expected: fixed + reader.consumed_bytes(),
-                    got: payload.len(),
-                });
-            }
+            // Canonical form: the final partial byte's padding bits are
+            // zero. (Whether trailing bytes may follow is the caller's
+            // call: the single-message decoder requires the payload to end
+            // exactly here, the batch decoder continues into the next
+            // sub-message.)
             if !reader.padding_is_zero() {
                 return Err(WireError::BadRiceStream("nonzero padding"));
             }
+            Ok(fixed + reader.consumed_bytes())
         }
     }
-    Ok(())
 }
 
 #[cfg(test)]

@@ -16,13 +16,32 @@
 //! sorted index streams delta-coded and Golomb-Rice compressed ([`rice`]),
 //! with the per-message parameters carried in the header — which is what
 //! actually closes the gap between measured wire bytes and the Theorem-4
-//! ideal bits that [`entropy`]'s bound
+//! ideal bits that the symbol-entropy bound
 //! `Σ_ℓ d_ℓ log₂(d/d_ℓ) ≤ 2d` only accounts.
+//!
+//! For multi-layer models, [`batch`] packs a whole layer list behind a
+//! single `WireBatch` header with batch-shared Rice parameters — one
+//! transport frame per model update instead of one per layer:
+//!
+//! ```text
+//! WireBatch     ┌ "GSPB" ┬ ver ┬ codec ┬ ka ┬ kb ┬ L ┐  12-byte header
+//!               └────────┴─────┴───────┴────┴────┴───┘
+//! sub-message   ┌ enc ┬ d ┬ nnz_a ┬ nnz_b ┬ 1/λ ┬ payload ┐  × L layers
+//!               └─────┴───┴───────┴───────┴─────┴─────────┘  17 B + payload
+//! ```
+//!
+//! Sub-payloads are byte-identical to the single-message layouts; only the
+//! repeated header bytes and per-message Rice parameters are shared.
 
+pub mod batch;
 mod entropy;
 mod message;
 pub mod rice;
 
+pub use batch::{
+    decode_batch_into, encode_batch, encoded_batch_len, BATCH_HEADER_LEN, BATCH_MAGIC,
+    BATCH_VERSION, SUB_HEADER_LEN,
+};
 pub use entropy::{symbol_entropy_bits, SymbolCounts};
 pub use message::{
     decode, decode_into, encode, encode_with, encoded_len, encoded_len_with, Encoding, WireCodec,

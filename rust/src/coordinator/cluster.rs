@@ -14,31 +14,63 @@
 //! §5.2 semantics: "the sparsification is done independently over each
 //! layer" — every layer has its own probability vector, its own λ, and its
 //! own message.
+//!
+//! ## Batched rounds
+//!
+//! A cluster built from a [`Session`] with
+//! [`batch_layers`](crate::api::SessionBuilder::batch_layers) compresses a
+//! worker's whole layer list in **one** engine invocation
+//! ([`Compressor::compress_batch_into`]) and ships it as **one**
+//! `WireBatch` transport frame per round — per-layer math (own λ, own
+//! probability vector) with none of the per-layer fixed costs. The decoded
+//! per-layer updates are bitwise identical to the per-layer path (pinned
+//! by tests), while each round ships fewer frames and fewer header bytes.
+//! Peers whose handshake announced transport version 2 — and methods that
+//! cannot batch (see [`crate::api::MethodSpec::batchable`]) — fall back to
+//! per-layer frames transparently.
+//!
+//! Meter granularity differs between the two flavors: the batch frame
+//! carries layer-*summed* statistics, so `var`/`spa` record one pooled
+//! sample per worker per round (a size-weighted density) where the
+//! per-layer path records one sample per layer (an unweighted mean), and
+//! [`LayerUpdate::ideal_bits`] switches from compressor expectations to
+//! the exact per-message bit model. The decoded updates — the training
+//! math — are identical either way.
 
+use crate::api::Session;
 use crate::coding::WireCodec;
 use crate::comm::NetworkModel;
 use crate::metrics::{CommLedger, SparsityMeter, VarianceRatio};
 use crate::rngkit::{RandArray, Xoshiro256pp};
-use crate::sparsify::{Compressed, Compressor};
+use crate::sparsify::{Compressed, CompressStats, Compressor, SparseGrad};
 use crate::transport::frame::{self, GradHeader, MsgView};
-use crate::transport::{Connection, Hello, InProcTransport, Transport};
+use crate::transport::{Connection, Hello, InProcTransport, Transport, TRANSPORT_VERSION};
 
 /// Averaged update for one layer plus round statistics.
 #[derive(Debug, Clone)]
 pub struct LayerUpdate {
     pub grad: Vec<f32>,
+    /// Wire bytes this layer's messages cost (in batched rounds: the
+    /// layer's sub-message share of the batch).
     pub upload_bytes: u64,
+    /// Idealized bits (per-layer compressor stats in per-layer rounds; the
+    /// exact per-message bit model of the decoded messages in batched
+    /// rounds, where the frame carries only layer-summed stats).
     pub ideal_bits: u64,
 }
 
-/// Per-worker, per-layer communication state. `msgs[l]` is the reused
-/// compression buffer for layer `l` — `compress_into` fills it in place
-/// every round — and the byte buffers (`wire`, `frame_buf`, …) are reused
-/// too, so a worker's steady-state round only allocates inside the
-/// transport (one owned frame per message crossing the link).
+/// Per-worker communication state. `msgs[l]` is the reused compression
+/// buffer for layer `l` — both round flavors fill it in place — and the
+/// byte buffers (`wire`, `frame_buf`, …) are reused too, so a worker's
+/// steady-state round only allocates inside the transport (one owned frame
+/// per message crossing the link) plus, in batched rounds, a few L-sized
+/// reference lists (pointers per *layer*, never per coordinate). In
+/// batched mode `compressors` holds a single instance driving the whole
+/// layer list; otherwise one per layer.
 struct WorkerComm {
     compressors: Vec<Box<dyn Compressor>>,
     msgs: Vec<Compressed>,
+    stats_buf: Vec<CompressStats>,
     rand: RandArray,
     conn: Box<dyn Connection>,
     wire: Vec<u8>,
@@ -54,7 +86,12 @@ pub struct Cluster {
     comm: Vec<Option<WorkerComm>>,
     /// Leader-side ends of the per-worker transport links, by worker id.
     leader_links: Vec<Box<dyn Connection>>,
-    /// Negotiated wire codec for every per-layer sparse message.
+    /// Whether this cluster compresses + ships whole layer lists.
+    batch: bool,
+    /// Per-link negotiated capability: did worker `w`'s hello announce a
+    /// batch-capable transport version?
+    peer_batch: Vec<bool>,
+    /// Negotiated wire codec for every sparse message.
     pub codec: WireCodec,
     pub net: NetworkModel,
     pub var_meter: VarianceRatio,
@@ -66,21 +103,78 @@ pub struct Cluster {
 impl Cluster {
     /// `layer_dims[l]` = flat size of layer `l`; one compressor per
     /// (worker, layer), built by `make_compressor` (e.g. GSpar at ρ).
-    /// Messages travel under [`WireCodec::Raw`]; see [`Cluster::with_codec`].
+    /// Messages travel under [`WireCodec::Raw`].
+    #[deprecated(
+        since = "0.2.0",
+        note = "build a gsparse::api::Session and call Session::cluster"
+    )]
     pub fn new<F>(workers: usize, layer_dims: &[usize], seed: u64, make_compressor: F) -> Self
     where
         F: FnMut() -> Box<dyn Compressor>,
     {
-        Self::with_codec(workers, layer_dims, seed, WireCodec::Raw, make_compressor)
+        Self::build(
+            workers,
+            layer_dims,
+            seed,
+            WireCodec::Raw,
+            TRANSPORT_VERSION,
+            false,
+            make_compressor,
+        )
     }
 
-    /// [`Cluster::new`] with an explicit wire codec, negotiated into every
-    /// worker's handshake.
+    /// `new` with an explicit wire codec, negotiated into every worker's
+    /// handshake.
+    #[deprecated(
+        since = "0.2.0",
+        note = "build a gsparse::api::Session (with .codec(..)) and call Session::cluster"
+    )]
     pub fn with_codec<F>(
         workers: usize,
         layer_dims: &[usize],
         seed: u64,
         codec: WireCodec,
+        make_compressor: F,
+    ) -> Self
+    where
+        F: FnMut() -> Box<dyn Compressor>,
+    {
+        Self::build(
+            workers,
+            layer_dims,
+            seed,
+            codec,
+            TRANSPORT_VERSION,
+            false,
+            make_compressor,
+        )
+    }
+
+    /// The session-owned constructor behind [`Session::cluster`]: method,
+    /// codec, seed, worker count, network model, transport version, and
+    /// layer batching all come from the session.
+    pub fn for_session(session: &Session, layer_dims: &[usize]) -> Self {
+        let batch = session.batch_layers() && session.method().batchable();
+        let mut cluster = Self::build(
+            session.workers(),
+            layer_dims,
+            session.seed(),
+            session.codec(),
+            session.transport_version(),
+            batch,
+            || session.compressor(),
+        );
+        cluster.net = session.net();
+        cluster
+    }
+
+    fn build<F>(
+        workers: usize,
+        layer_dims: &[usize],
+        seed: u64,
+        codec: WireCodec,
+        hello_version: u8,
+        batch: bool,
         mut make_compressor: F,
     ) -> Self
     where
@@ -90,18 +184,26 @@ impl Cluster {
         let mut listener = transport.listen("cluster").expect("in-process listen");
         let comm: Vec<Option<WorkerComm>> = (0..workers)
             .map(|w| {
+                // Batched mode drives the whole layer list through one
+                // compressor (batchable methods are stateless across
+                // layers); per-layer mode keeps one per layer.
+                let n_comp = if batch { 1 } else { layer_dims.len() };
                 Some(WorkerComm {
-                    compressors: layer_dims.iter().map(|_| make_compressor()).collect(),
+                    compressors: (0..n_comp).map(|_| make_compressor()).collect(),
                     msgs: layer_dims
                         .iter()
-                        .map(|&dim| Compressed::Sparse(crate::sparsify::SparseGrad::empty(dim)))
+                        .map(|&dim| Compressed::Sparse(SparseGrad::empty(dim)))
                         .collect(),
+                    stats_buf: Vec::new(),
                     rand: RandArray::new(
                         Xoshiro256pp::for_worker(seed ^ 0xC10C, w),
                         layer_dims.iter().sum::<usize>().max(1 << 12) * 2,
                     ),
                     conn: transport
-                        .connect("cluster", &Hello::with_codec(w as u32, codec))
+                        .connect(
+                            "cluster",
+                            &Hello::with_version(w as u32, codec, hello_version),
+                        )
                         .expect("in-process connect"),
                     wire: Vec::new(),
                     frame_buf: Vec::new(),
@@ -110,14 +212,21 @@ impl Cluster {
                 })
             })
             .collect();
-        let leader_links: Vec<Box<dyn Connection>> =
-            crate::transport::accept_n(listener.as_mut(), workers, codec)
-                .expect("in-process accept");
+        let accepted = crate::transport::accept_n_hello(listener.as_mut(), workers, codec)
+            .expect("in-process accept");
+        let mut leader_links = Vec::with_capacity(workers);
+        let mut peer_batch = Vec::with_capacity(workers);
+        for (conn, hello) in accepted {
+            peer_batch.push(hello.supports_batch());
+            leader_links.push(conn);
+        }
         Self {
             workers,
             layers: layer_dims.to_vec(),
             comm,
             leader_links,
+            batch,
+            peer_batch,
             codec,
             net: NetworkModel::commodity_1g(),
             var_meter: VarianceRatio::default(),
@@ -127,6 +236,11 @@ impl Cluster {
         }
     }
 
+    /// Whether worker `w`'s messages travel as one `WireBatch` frame.
+    fn batched_link(&self, w: usize) -> bool {
+        self.batch && self.peer_batch[w]
+    }
+
     /// One synchronization round. `grads[w][l]` is worker `w`'s gradient for
     /// layer `l`. Sparsification + encoding + sending run on one scoped
     /// thread per worker; the leader receives from each link in worker-id
@@ -134,6 +248,7 @@ impl Cluster {
     pub fn round(&mut self, grads: &[Vec<Vec<f32>>]) -> Vec<LayerUpdate> {
         assert_eq!(grads.len(), self.workers);
         let layers = self.layers.clone();
+        let use_batch: Vec<bool> = (0..self.workers).map(|w| self.batched_link(w)).collect();
 
         // Move each worker's comm state into its thread; all workers encode
         // and send concurrently, then the states come back via the joins.
@@ -149,40 +264,12 @@ impl Cluster {
             let mut handles = Vec::with_capacity(self.workers);
             for (w, mut st) in states.into_iter().enumerate() {
                 let worker_grads = &grads[w];
+                let batched = use_batch[w];
                 handles.push(scope.spawn(move || {
-                    for (l, g) in worker_grads.iter().enumerate() {
-                        let g_norm = crate::tensor::norm2_sq(g) as f64;
-                        let stats =
-                            st.compressors[l].compress_into(g, &mut st.rand, &mut st.msgs[l]);
-                        let msg = &st.msgs[l];
-                        let (kind, q_norm): (u8, f64) = match msg {
-                            Compressed::Sparse(sg) => {
-                                crate::coding::encode_with(sg, codec, &mut st.wire);
-                                (0, msg.norm2_sq())
-                            }
-                            other => {
-                                // Non-sparse messages travel as their
-                                // decoded dense form (their wire-ledger
-                                // entry stays the idealized size).
-                                other.dense_le_bytes_into(
-                                    &mut st.dense_tx,
-                                    &mut st.dense_bytes,
-                                );
-                                (1, msg.norm2_sq())
-                            }
-                        };
-                        let header = GradHeader {
-                            based_on: l as u64,
-                            g_norm_sq: g_norm,
-                            q_norm_sq: q_norm,
-                            expected_nnz: stats.expected_nnz,
-                            ideal_bits: stats.ideal_bits,
-                            kind,
-                        };
-                        let payload: &[u8] =
-                            if kind == 0 { &st.wire } else { &st.dense_bytes };
-                        frame::encode_grad(&mut st.frame_buf, &header, payload);
-                        st.conn.send(&st.frame_buf).expect("leader link alive");
+                    if batched {
+                        worker_round_batched(&mut st, worker_grads, codec);
+                    } else {
+                        worker_round_per_layer(&mut st, worker_grads, codec);
                     }
                     st
                 }));
@@ -206,32 +293,60 @@ impl Cluster {
             })
             .collect();
         let inv_m = 1.0 / self.workers as f32;
+        let total_d: usize = layers.iter().sum();
         let mut per_worker_bytes = vec![0u64; self.workers];
-        let mut decode_slot = crate::sparsify::SparseGrad::empty(0);
+        let mut decode_slot = SparseGrad::empty(0);
+        let mut batch_slots: Vec<SparseGrad> = Vec::new();
+        let mut sub_lens: Vec<usize> = Vec::new();
         let mut rx_frame: Vec<u8> = Vec::new();
         for (w, link) in self.leader_links.iter_mut().enumerate() {
-            for (l, upd) in updates.iter_mut().enumerate() {
+            if use_batch[w] {
+                // One frame carries the whole model update.
                 link.recv(&mut rx_frame).expect("worker frame");
                 let (header, payload) = match frame::decode(&rx_frame).expect("self-encoded") {
-                    MsgView::Grad { header, payload } => (header, payload),
+                    MsgView::GradBatch { header, payload } => (header, payload),
                     other => panic!("unexpected message from worker: {other:?}"),
                 };
-                let upload = if header.kind == 0 {
-                    crate::coding::decode_into(payload, &mut decode_slot)
-                        .expect("self-encoded");
-                    decode_slot.add_into(inv_m, &mut upd.grad);
-                    payload.len() as u64
-                } else {
-                    frame::add_dense_le(payload, inv_m, &mut upd.grad);
-                    (header.ideal_bits / 8).max(1)
-                };
-                upd.upload_bytes += upload;
-                upd.ideal_bits += header.ideal_bits;
-                per_worker_bytes[w] += upload;
+                crate::coding::decode_batch_into(payload, &mut batch_slots, &mut sub_lens)
+                    .expect("self-encoded");
+                assert_eq!(batch_slots.len(), updates.len(), "layer count drifted");
+                for ((sg, upd), sub_len) in
+                    batch_slots.iter().zip(updates.iter_mut()).zip(&sub_lens)
+                {
+                    sg.add_into(inv_m, &mut upd.grad);
+                    upd.upload_bytes += *sub_len as u64;
+                    upd.ideal_bits += crate::coding::ideal_message_bits(sg);
+                }
+                per_worker_bytes[w] += payload.len() as u64;
                 self.var_meter.record(header.q_norm_sq, header.g_norm_sq);
-                self.spa_meter.record(header.expected_nnz, layers[l].max(1));
-                let msg_codec = if header.kind == 0 { codec } else { WireCodec::Raw };
-                self.ledger.record_codec(header.ideal_bits, upload, msg_codec);
+                self.spa_meter.record(header.expected_nnz, total_d.max(1));
+                self.ledger
+                    .record_codec(header.ideal_bits, payload.len() as u64, codec);
+            } else {
+                for (l, upd) in updates.iter_mut().enumerate() {
+                    link.recv(&mut rx_frame).expect("worker frame");
+                    let (header, payload) = match frame::decode(&rx_frame).expect("self-encoded")
+                    {
+                        MsgView::Grad { header, payload } => (header, payload),
+                        other => panic!("unexpected message from worker: {other:?}"),
+                    };
+                    let upload = if header.kind == 0 {
+                        crate::coding::decode_into(payload, &mut decode_slot)
+                            .expect("self-encoded");
+                        decode_slot.add_into(inv_m, &mut upd.grad);
+                        payload.len() as u64
+                    } else {
+                        frame::add_dense_le(payload, inv_m, &mut upd.grad);
+                        (header.ideal_bits / 8).max(1)
+                    };
+                    upd.upload_bytes += upload;
+                    upd.ideal_bits += header.ideal_bits;
+                    per_worker_bytes[w] += upload;
+                    self.var_meter.record(header.q_norm_sq, header.g_norm_sq);
+                    self.spa_meter.record(header.expected_nnz, layers[l].max(1));
+                    let msg_codec = if header.kind == 0 { codec } else { WireCodec::Raw };
+                    self.ledger.record_codec(header.ideal_bits, upload, msg_codec);
+                }
             }
         }
         let broadcast: u64 = layers.iter().map(|&dim| (dim * 4) as u64).sum();
@@ -246,13 +361,107 @@ impl Cluster {
         self.ledger.set_measured(measured);
         updates
     }
+
+    /// Transport frames the leader has received so far (cumulative across
+    /// rounds, including each worker's one handshake frame) — the "fewer
+    /// frames per round" half of the batched-path win.
+    pub fn frames_received(&self) -> u64 {
+        self.leader_links
+            .iter()
+            .map(|c| c.counters().frames_rx())
+            .sum()
+    }
+}
+
+/// Per-layer round: one `GRAD` frame per layer (the historical path, and
+/// the fallback for v2 peers / non-batchable methods). With a single
+/// shared compressor (batched cluster talking to a v2 peer) every layer
+/// runs through instance 0 — identical messages for the stateless
+/// batchable methods.
+fn worker_round_per_layer(st: &mut WorkerComm, worker_grads: &[Vec<f32>], codec: WireCodec) {
+    let shared_comp = st.compressors.len() == 1;
+    for (l, g) in worker_grads.iter().enumerate() {
+        let ci = if shared_comp { 0 } else { l };
+        let g_norm = crate::tensor::norm2_sq(g) as f64;
+        let stats = st.compressors[ci].compress_into(g, &mut st.rand, &mut st.msgs[l]);
+        let msg = &st.msgs[l];
+        let (kind, q_norm): (u8, f64) = match msg {
+            Compressed::Sparse(sg) => {
+                crate::coding::encode_with(sg, codec, &mut st.wire);
+                (0, msg.norm2_sq())
+            }
+            other => {
+                // Non-sparse messages travel as their decoded dense form
+                // (their wire-ledger entry stays the idealized size).
+                other.dense_le_bytes_into(&mut st.dense_tx, &mut st.dense_bytes);
+                (1, msg.norm2_sq())
+            }
+        };
+        let header = GradHeader {
+            based_on: l as u64,
+            g_norm_sq: g_norm,
+            q_norm_sq: q_norm,
+            expected_nnz: stats.expected_nnz,
+            ideal_bits: stats.ideal_bits,
+            kind,
+        };
+        let payload: &[u8] = if kind == 0 { &st.wire } else { &st.dense_bytes };
+        frame::encode_grad(&mut st.frame_buf, &header, payload);
+        st.conn.send(&st.frame_buf).expect("leader link alive");
+    }
+}
+
+/// Batched round: one engine invocation over the whole layer list, one
+/// `WireBatch` payload, one `GRAD_BATCH` frame. The header carries the
+/// layer-summed statistics; the sub-messages carry each layer's own λ and
+/// survivors, exactly as the per-layer path would have produced them.
+fn worker_round_batched(st: &mut WorkerComm, worker_grads: &[Vec<f32>], codec: WireCodec) {
+    let layer_refs: Vec<&[f32]> = worker_grads.iter().map(|g| g.as_slice()).collect();
+    st.compressors[0].compress_batch_into(
+        &layer_refs,
+        &mut st.rand,
+        &mut st.msgs,
+        &mut st.stats_buf,
+    );
+    let mut g_norm = 0.0f64;
+    let mut q_norm = 0.0f64;
+    let mut expected_nnz = 0.0f64;
+    let mut ideal_bits = 0u64;
+    for ((g, msg), stats) in worker_grads
+        .iter()
+        .zip(st.msgs.iter())
+        .zip(st.stats_buf.iter())
+    {
+        g_norm += crate::tensor::norm2_sq(g) as f64;
+        q_norm += msg.norm2_sq();
+        expected_nnz += stats.expected_nnz;
+        ideal_bits += stats.ideal_bits;
+    }
+    let sgs: Vec<&SparseGrad> = st
+        .msgs
+        .iter()
+        .map(|m| match m {
+            Compressed::Sparse(sg) => sg,
+            other => unreachable!("batchable methods produce sparse messages, got {other:?}"),
+        })
+        .collect();
+    crate::coding::encode_batch(&sgs, codec, &mut st.wire);
+    let header = GradHeader {
+        based_on: 0,
+        g_norm_sq: g_norm,
+        q_norm_sq: q_norm,
+        expected_nnz,
+        ideal_bits,
+        kind: 0,
+    };
+    frame::encode_grad_batch(&mut st.frame_buf, &header, &st.wire);
+    st.conn.send(&st.frame_buf).expect("leader link alive");
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Method;
-    use crate::sparsify;
+    use crate::api::{MethodSpec, Session};
 
     fn grads_for(workers: usize, dims: &[usize], seed: u64) -> Vec<Vec<Vec<f32>>> {
         let mut rng = Xoshiro256pp::seed_from_u64(seed);
@@ -265,13 +474,19 @@ mod tests {
             .collect()
     }
 
+    fn session(method: MethodSpec, workers: usize, seed: u64) -> Session {
+        Session::builder()
+            .method(method)
+            .workers(workers)
+            .seed(seed)
+            .build()
+    }
+
     #[test]
     fn dense_round_is_exact_mean() {
         let dims = [32usize, 64];
         let grads = grads_for(3, &dims, 50);
-        let mut cluster = Cluster::new(3, &dims, 51, || {
-            sparsify::build(Method::Dense, 1.0, 0.0, 4)
-        });
+        let mut cluster = session(MethodSpec::Dense, 3, 51).cluster(&dims);
         let updates = cluster.round(&grads);
         for (l, upd) in updates.iter().enumerate() {
             for i in 0..dims[l] {
@@ -288,9 +503,7 @@ mod tests {
         // Average many rounds of the same gradients: mean → true mean.
         let dims = [128usize];
         let grads = grads_for(2, &dims, 52);
-        let mut cluster = Cluster::new(2, &dims, 53, || {
-            sparsify::build(Method::GSpar, 0.3, 0.0, 4)
-        });
+        let mut cluster = session(MethodSpec::GSpar { rho: 0.3, iters: 2 }, 2, 53).cluster(&dims);
         let rounds = 3000;
         let mut acc = vec![0.0f64; 128];
         for _ in 0..rounds {
@@ -322,9 +535,13 @@ mod tests {
         let dims = [512usize, 128];
         let grads = grads_for(2, &dims, 58);
         let run = |codec| {
-            let mut cluster = Cluster::with_codec(2, &dims, 59, codec, || {
-                sparsify::build(Method::GSpar, 0.1, 0.0, 4)
-            });
+            let mut cluster = Session::builder()
+                .method(MethodSpec::GSpar { rho: 0.1, iters: 2 })
+                .workers(2)
+                .seed(59)
+                .codec(codec)
+                .build()
+                .cluster(&dims);
             let upd = cluster.round(&grads);
             (upd, cluster.ledger.clone())
         };
@@ -355,9 +572,7 @@ mod tests {
         for w in 0..2 {
             grads[w][1].fill(0.0);
         }
-        let mut cluster = Cluster::new(2, &dims, 55, || {
-            sparsify::build(Method::GSpar, 0.5, 0.0, 4)
-        });
+        let mut cluster = session(MethodSpec::GSpar { rho: 0.5, iters: 2 }, 2, 55).cluster(&dims);
         let upd = cluster.round(&grads);
         assert!(upd[1].grad.iter().all(|&v| v == 0.0));
         assert!(upd[0].upload_bytes >= upd[1].upload_bytes);
@@ -368,9 +583,8 @@ mod tests {
         let dims = [64usize, 32];
         let grads = grads_for(2, &dims, 56);
         let run = || {
-            let mut cluster = Cluster::new(2, &dims, 57, || {
-                sparsify::build(Method::GSpar, 0.4, 0.0, 4)
-            });
+            let mut cluster =
+                session(MethodSpec::GSpar { rho: 0.4, iters: 2 }, 2, 57).cluster(&dims);
             let a = cluster.round(&grads);
             let m1 = cluster.ledger.measured_bytes;
             let b = cluster.round(&grads);
@@ -384,5 +598,119 @@ mod tests {
             assert_eq!(x.grad, y.grad, "leader aggregation must be deterministic");
         }
         assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn batched_round_updates_match_per_layer_bitwise() {
+        // The batched pipeline is a wire/engine optimization, not a math
+        // change: same session seed ⇒ identical decoded per-layer updates,
+        // with fewer frames and fewer measured bytes per round.
+        let dims = [700usize, 256, 128, 64];
+        let grads = grads_for(2, &dims, 61);
+        let run = |batch: bool, codec: WireCodec| {
+            let mut cluster = Session::builder()
+                .method(MethodSpec::GSpar { rho: 0.05, iters: 2 })
+                .workers(2)
+                .seed(62)
+                .codec(codec)
+                .batch_layers(batch)
+                .build()
+                .cluster(&dims);
+            let upd = cluster.round(&grads);
+            (upd, cluster.ledger.clone(), cluster.frames_received())
+        };
+        for codec in [WireCodec::Raw, WireCodec::Entropy] {
+            let (per_layer, pl_ledger, pl_frames) = run(false, codec);
+            let (batched, b_ledger, b_frames) = run(true, codec);
+            for (l, (a, b)) in per_layer.iter().zip(&batched).enumerate() {
+                assert_eq!(a.grad, b.grad, "layer {l} drifted under {codec}");
+            }
+            assert!(
+                b_frames < pl_frames,
+                "{codec}: batched frames {b_frames} !< per-layer {pl_frames}"
+            );
+            assert!(
+                b_ledger.measured_bytes < pl_ledger.measured_bytes,
+                "{codec}: batched measured {} !< per-layer {}",
+                b_ledger.measured_bytes,
+                pl_ledger.measured_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn batched_cluster_falls_back_per_layer_for_v2_peers() {
+        // A session pinned to transport version 2 cannot ship WireBatch
+        // frames even with batching requested — the negotiated fallback.
+        let dims = [96usize, 32];
+        let grads = grads_for(2, &dims, 63);
+        let mk = |version: u8, batch: bool| {
+            Session::builder()
+                .method(MethodSpec::GSpar { rho: 0.2, iters: 2 })
+                .workers(2)
+                .seed(64)
+                .batch_layers(batch)
+                .transport_version(version)
+                .build()
+                .cluster(&dims)
+        };
+        let mut v2 = mk(2, true);
+        let v2_upd = v2.round(&grads);
+        // Per-layer frames: one hello + one frame per layer, per worker.
+        assert_eq!(v2.frames_received(), (2 * (1 + dims.len())) as u64);
+        let mut v3 = mk(3, true);
+        let v3_upd = v3.round(&grads);
+        assert_eq!(
+            v3.frames_received(),
+            2 * (1 + 1),
+            "one hello + one batch frame per worker"
+        );
+        // Fallback is wire-level only: the decoded updates stay identical.
+        for (a, b) in v2_upd.iter().zip(&v3_upd) {
+            assert_eq!(a.grad, b.grad);
+        }
+    }
+
+    #[test]
+    fn non_batchable_methods_ignore_batch_layers() {
+        let dims = [48usize, 16];
+        let grads = grads_for(2, &dims, 65);
+        let mut cluster = Session::builder()
+            .method(MethodSpec::Qsgd { bits: 4 })
+            .workers(2)
+            .seed(66)
+            .batch_layers(true)
+            .build()
+            .cluster(&dims);
+        let upd = cluster.round(&grads);
+        assert_eq!(upd.len(), dims.len());
+        // Quantized fallback still ships per-layer frames (plus hellos).
+        assert_eq!(cluster.frames_received(), (2 * (1 + dims.len())) as u64);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_constructors_match_session_clusters() {
+        // The shim guarantee: `Cluster::with_codec` (and `new`) produce the
+        // same rounds as a Session-built cluster with the same knobs.
+        let dims = [120usize, 40];
+        let grads = grads_for(2, &dims, 67);
+        let mut old = Cluster::with_codec(2, &dims, 68, WireCodec::Entropy, || {
+            MethodSpec::GSpar { rho: 0.3, iters: 2 }.build()
+        });
+        let mut new = Session::builder()
+            .method(MethodSpec::GSpar { rho: 0.3, iters: 2 })
+            .workers(2)
+            .seed(68)
+            .codec(WireCodec::Entropy)
+            .build()
+            .cluster(&dims);
+        let a = old.round(&grads);
+        let b = new.round(&grads);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.grad, y.grad);
+            assert_eq!(x.upload_bytes, y.upload_bytes);
+        }
+        assert_eq!(old.ledger.wire_bytes, new.ledger.wire_bytes);
     }
 }

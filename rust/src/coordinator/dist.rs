@@ -34,7 +34,8 @@ use crate::data::gen_logistic;
 use crate::metrics::{CurvePoint, RunCurve, SparsityMeter, VarianceRatio};
 use crate::model::{ConvexModel, LogisticModel};
 use crate::rngkit::{RandArray, Xoshiro256pp};
-use crate::sparsify::{self, Compressed, SparseGrad};
+use crate::api::MethodSpec;
+use crate::sparsify::{Compressed, SparseGrad};
 use crate::transport::frame::{self, GradHeader, MsgView};
 use crate::transport::{
     Connection, Hello, LinkCounters, Listener, TcpTransport, Transport,
@@ -44,8 +45,12 @@ use std::time::Instant;
 /// Everything a worker needs to reproduce the run — the server ships this
 /// in the `CONFIG` frame right after accepting, so worker processes only
 /// need an address and an id on their command line.
+///
+/// Construct via [`crate::api::Session::dist_plan`] (session +
+/// [`crate::api::DistTask`]); the old `DistConfig` name survives as a
+/// deprecated alias.
 #[derive(Clone, Debug, PartialEq)]
-pub struct DistConfig {
+pub struct RunPlan {
     pub workers: usize,
     /// Synchronization rounds; total pushes = `rounds × workers`.
     pub rounds: usize,
@@ -68,7 +73,15 @@ pub struct DistConfig {
     pub codec: WireCodec,
 }
 
-impl Default for DistConfig {
+/// Deprecated name of [`RunPlan`].
+#[deprecated(
+    since = "0.2.0",
+    note = "use gsparse::api::Session::dist_plan / dist_threads / dist_processes (the struct \
+            itself is now coordinator::dist::RunPlan)"
+)]
+pub type DistConfig = RunPlan;
+
+impl Default for RunPlan {
     fn default() -> Self {
         Self {
             workers: 2,
@@ -93,7 +106,7 @@ impl Default for DistConfig {
 const CONFIG_VERSION: u8 = 2;
 const CONFIG_LEN: usize = 2 + 6 * 4 + 8 + 5 * 4 + 1;
 
-impl DistConfig {
+impl RunPlan {
     /// Serialize for the `CONFIG` frame (fixed-width LE fields).
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(64);
@@ -188,7 +201,7 @@ fn fnv1a(mut hash: u64, bytes: &[u8]) -> u64 {
 /// Run the server side: accept `cfg.workers` connections, ship the config,
 /// drive the round schedule, and report. The caller owns the listener, so
 /// backends and tests control the address.
-pub fn serve(listener: &mut dyn Listener, cfg: &DistConfig) -> anyhow::Result<DistReport> {
+pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistReport> {
     let d = cfg.d;
     let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
     let model = LogisticModel::new(cfg.reg);
@@ -332,7 +345,7 @@ pub fn run_worker(
     let mut txbuf = Vec::new();
     conn.recv(&mut rxbuf)?;
     let cfg = match frame::decode(&rxbuf)? {
-        MsgView::Config { bytes } => DistConfig::decode(bytes)?,
+        MsgView::Config { bytes } => RunPlan::decode(bytes)?,
         _ => anyhow::bail!("expected config from server"),
     };
     anyhow::ensure!(
@@ -352,7 +365,8 @@ pub fn run_worker(
     );
     // Same compressor construction as the sync trainer (eps = C1·C2 for
     // GSpar-exact), so sync-vs-dist comparisons compare like with like.
-    let mut compressor = sparsify::build(cfg.method, cfg.rho, cfg.c1 * cfg.c2, cfg.qsgd_bits);
+    let mut compressor =
+        MethodSpec::from_parts(cfg.method, cfg.rho, cfg.c1 * cfg.c2, cfg.qsgd_bits).build();
     let mut msg = Compressed::Sparse(SparseGrad::empty(d));
     let mut w_local: Vec<f32> = Vec::with_capacity(d);
     let mut grad = vec![0.0f32; d];
@@ -411,7 +425,7 @@ pub fn run_worker(
 /// `cfg.workers` workers, all talking through `transport` (use
 /// [`crate::transport::InProcTransport`] for channels or [`TcpTransport`]
 /// with a `127.0.0.1:0` bind for real loopback sockets).
-pub fn run_threads<T>(transport: T, bind_addr: &str, cfg: &DistConfig) -> anyhow::Result<DistReport>
+pub fn run_threads<T>(transport: T, bind_addr: &str, cfg: &RunPlan) -> anyhow::Result<DistReport>
 where
     T: Transport + Clone + 'static,
 {
@@ -451,7 +465,7 @@ where
 pub fn run_processes(
     bin: &std::path::Path,
     bind_addr: &str,
-    cfg: &DistConfig,
+    cfg: &RunPlan,
 ) -> anyhow::Result<DistReport> {
     use std::sync::atomic::{AtomicBool, Ordering};
     use std::sync::{Arc, Mutex};
@@ -524,7 +538,7 @@ pub fn run_processes(
 /// Convenience wrapper used by the figure drivers and the example: run the
 /// distributed logistic-regression workload and also report the dense
 /// baseline `f*` so losses print as suboptimality.
-pub fn f_star_for(cfg: &DistConfig) -> f64 {
+pub fn f_star_for(cfg: &RunPlan) -> f64 {
     let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
     let model = LogisticModel::new(cfg.reg);
     estimate_f_star(&ds, &model, 200, 1.0)
@@ -535,8 +549,8 @@ mod tests {
     use super::*;
     use crate::transport::InProcTransport;
 
-    fn small_cfg() -> DistConfig {
-        DistConfig {
+    fn small_cfg() -> RunPlan {
+        RunPlan {
             workers: 3,
             rounds: 60,
             n: 192,
@@ -549,21 +563,21 @@ mod tests {
     #[test]
     fn config_roundtrip() {
         for codec in [WireCodec::Raw, WireCodec::Entropy] {
-            let cfg = DistConfig {
+            let cfg = RunPlan {
                 method: Method::Qsgd,
                 seed: 0xDEADBEEF,
                 codec,
                 ..small_cfg()
             };
             let bytes = cfg.encode();
-            assert_eq!(DistConfig::decode(&bytes).unwrap(), cfg);
-            assert!(DistConfig::decode(&bytes[..bytes.len() - 1]).is_err());
+            assert_eq!(RunPlan::decode(&bytes).unwrap(), cfg);
+            assert!(RunPlan::decode(&bytes[..bytes.len() - 1]).is_err());
             let mut bad = bytes.clone();
             bad[1] = 200;
-            assert!(DistConfig::decode(&bad).is_err());
+            assert!(RunPlan::decode(&bad).is_err());
             let mut bad = bytes.clone();
             *bad.last_mut().unwrap() = 9; // unknown codec id
-            assert!(DistConfig::decode(&bad).is_err());
+            assert!(RunPlan::decode(&bad).is_err());
         }
     }
 
@@ -573,7 +587,7 @@ mod tests {
         // gradients are identical, so the weight trajectory is bitwise
         // equal — only the bytes on the wire shrink.
         let raw_cfg = small_cfg();
-        let ent_cfg = DistConfig {
+        let ent_cfg = RunPlan {
             codec: WireCodec::Entropy,
             ..small_cfg()
         };
@@ -633,7 +647,7 @@ mod tests {
 
     #[test]
     fn dense_method_travels_as_raw_f32() {
-        let cfg = DistConfig {
+        let cfg = RunPlan {
             method: Method::Dense,
             rounds: 4,
             ..small_cfg()

@@ -1,5 +1,10 @@
 //! The distributed training coordinator — the paper's system layer.
 //!
+//! All four coordinators are driven from one [`crate::api::Session`]
+//! (method, codec, seed, topology, network model, layer batching), with
+//! per-run knobs in the `api` task structs; the pre-Session config structs
+//! remain as deprecated shims.
+//!
 //! * [`sync`] — Algorithm 1: synchronous data-parallel SGD with per-worker
 //!   gradient sparsification, honest encode → All-Reduce → Broadcast rounds,
 //!   and the paper's `η_t ∝ 1/(t·var)` step size. Also the SVRG variant
@@ -29,6 +34,15 @@ pub mod sync;
 
 pub use async_engine::{AsyncReport, AsyncSvmEngine};
 pub use cluster::{Cluster, LayerUpdate};
-pub use dist::{DistConfig, DistReport};
-pub use param_server::{run_param_server, PsConfig, PsReport};
-pub use sync::{train_convex, OptKind, SvrgVariant, TrainOptions};
+pub use dist::{DistReport, RunPlan};
+pub use param_server::PsReport;
+pub use sync::{OptKind, SvrgVariant};
+
+// Deprecated shims of the pre-Session config surface, re-exported so the
+// old paths keep resolving during migration.
+#[allow(deprecated)]
+pub use dist::DistConfig;
+#[allow(deprecated)]
+pub use param_server::{run_param_server, PsConfig};
+#[allow(deprecated)]
+pub use sync::{train_convex, TrainOptions};

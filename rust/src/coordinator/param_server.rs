@@ -16,21 +16,30 @@
 //! `m` may start its `c`-th iteration only while
 //! `c − min_m' clock(m') ≤ max_staleness`, the classic SSP condition — the
 //! slowest worker is always runnable, so the protocol cannot deadlock.
+//!
+//! Entry point: [`crate::api::Session::param_server`] with a [`PsTask`];
+//! the old [`PsConfig`] struct survives as a deprecated shim.
 
+use crate::api::{MethodSpec, PsTask, Session};
 use crate::coding::WireCodec;
 use crate::config::Method;
 use crate::data::Dataset;
 use crate::metrics::{CurvePoint, RunCurve, VarianceRatio};
 use crate::model::ConvexModel;
 use crate::rngkit::{RandArray, Xoshiro256pp};
-use crate::sparsify::{self, Compressed};
+use crate::sparsify::Compressed;
 use crate::transport::frame::{self, GradHeader, MsgView};
 use crate::transport::{Connection, Hello, InProcTransport, Mux, Transport};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
-/// Parameter-server run configuration.
+/// Parameter-server run configuration (deprecated shim of the Session API).
+#[deprecated(
+    since = "0.2.0",
+    note = "build a gsparse::api::Session (method/codec/seed/workers) and pass the \
+            remaining knobs via gsparse::api::PsTask to Session::param_server"
+)]
 #[derive(Clone, Debug)]
 pub struct PsConfig {
     pub workers: usize,
@@ -48,6 +57,7 @@ pub struct PsConfig {
     pub codec: WireCodec,
 }
 
+#[allow(deprecated)]
 impl Default for PsConfig {
     fn default() -> Self {
         Self {
@@ -90,21 +100,52 @@ struct WeightStore {
     state: Mutex<(Vec<f32>, u64)>, // (weights, version)
 }
 
-/// Run the asynchronous parameter server on a convex model.
+/// Run the asynchronous parameter server under the old config struct.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a gsparse::api::Session and call Session::param_server with a PsTask"
+)]
+#[allow(deprecated)]
 pub fn run_param_server(
     cfg: &PsConfig,
     ds: &Dataset,
     model: &(dyn ConvexModel + Sync),
 ) -> PsReport {
+    let session = Session::builder()
+        .method(MethodSpec::from_parts(cfg.method, cfg.rho, 0.0, 4))
+        .codec(cfg.codec)
+        .seed(cfg.seed)
+        .workers(cfg.workers)
+        .build();
+    let task = PsTask {
+        total_pushes: cfg.total_pushes,
+        max_staleness: cfg.max_staleness,
+        batch: cfg.batch,
+        lr: cfg.lr,
+    };
+    session.param_server(&task, ds, model)
+}
+
+/// The canonical SSP runner behind [`Session::param_server`].
+pub(crate) fn run_session(
+    session: &Session,
+    task: &PsTask,
+    ds: &Dataset,
+    model: &(dyn ConvexModel + Sync),
+) -> PsReport {
     let d = ds.d();
+    let workers = session.workers();
+    let codec = session.codec();
+    let seed = session.seed();
+    let spec = session.method();
     let store = Arc::new(WeightStore {
         state: Mutex::new((vec![0.0f32; d], 0)),
     });
-    let budget = Arc::new(AtomicU64::new(cfg.total_pushes as u64));
+    let budget = Arc::new(AtomicU64::new(task.total_pushes as u64));
     let stalls = Arc::new(AtomicU64::new(0));
     let max_stale = Arc::new(AtomicU64::new(0));
     // SSP clocks: per-worker iteration counters (u64::MAX = exited).
-    let clocks = Arc::new((Mutex::new(vec![0u64; cfg.workers]), Condvar::new()));
+    let clocks = Arc::new((Mutex::new(vec![0u64; workers]), Condvar::new()));
     // Server-side applied-update counter: the gate also bounds how far any
     // worker may run ahead of what the server has *applied*, which caps the
     // channel backlog (otherwise "staleness" is unbounded pipeline lag).
@@ -118,16 +159,16 @@ pub fn run_param_server(
     // the server — same abstraction, different backend, as the TCP runtime.
     let transport = InProcTransport::new();
     let mut listener = transport.listen("ssp-ps").expect("in-process listen");
-    let mut worker_conns: Vec<Option<Box<dyn Connection>>> = (0..cfg.workers)
+    let mut worker_conns: Vec<Option<Box<dyn Connection>>> = (0..workers)
         .map(|wid| {
             Some(
                 transport
-                    .connect("ssp-ps", &Hello::with_codec(wid as u32, cfg.codec))
+                    .connect("ssp-ps", &Hello::with_codec(wid as u32, codec))
                     .expect("in-process connect"),
             )
         })
         .collect();
-    let server_ends = crate::transport::accept_n(listener.as_mut(), cfg.workers, cfg.codec)
+    let server_ends = crate::transport::accept_n(listener.as_mut(), workers, codec)
         .expect("in-process accept");
     let link_counters: Vec<_> = server_ends.iter().map(|c| c.counters()).collect();
     let mut mux = Mux::new(
@@ -139,13 +180,20 @@ pub fn run_param_server(
     );
     let start = Instant::now();
 
-    let mut curve = RunCurve::new(format!("ps-{}(st={})", cfg.method, cfg.max_staleness));
+    let mut curve = RunCurve::new(format!(
+        "ps-{}(st={})",
+        spec.method(),
+        task.max_staleness
+    ));
     let mut var_meter = VarianceRatio::default();
     let mut wire_bytes = 0u64;
 
+    let (total_pushes, max_staleness, batch, lr) =
+        (task.total_pushes, task.max_staleness, task.batch, task.lr);
+
     std::thread::scope(|scope| {
         // ---- workers ----
-        for wid in 0..cfg.workers {
+        for wid in 0..workers {
             let store = Arc::clone(&store);
             let budget = Arc::clone(&budget);
             let stalls = Arc::clone(&stalls);
@@ -154,15 +202,13 @@ pub fn run_param_server(
             let applied = Arc::clone(&applied);
             let sent = Arc::clone(&sent);
             let mut conn = worker_conns[wid].take().expect("connection unclaimed");
-            let cfg = cfg.clone();
             scope.spawn(move || {
-                let mut rng = Xoshiro256pp::for_worker(cfg.seed, wid);
+                let mut rng = Xoshiro256pp::for_worker(seed, wid);
                 let mut rand = RandArray::new(
-                    Xoshiro256pp::for_worker(cfg.seed ^ 0x9511, wid),
+                    Xoshiro256pp::for_worker(seed ^ 0x9511, wid),
                     (4 * d).max(1 << 12),
                 );
-                let mut compressor =
-                    sparsify::build(cfg.method, cfg.rho, 0.0, 4);
+                let mut compressor = spec.build();
                 let mut w_local = vec![0.0f32; d];
                 let mut grad = vec![0.0f32; d];
                 // Reused across pushes: the compressor writes into `msg`
@@ -204,12 +250,12 @@ pub fn run_param_server(
                             // (b) backlog: ≤ workers·(max_staleness+1)
                             //     sent-but-unapplied pushes (global units).
                             let ssp_violated =
-                                cl[wid].saturating_sub(min_clock) > cfg.max_staleness;
+                                cl[wid].saturating_sub(min_clock) > max_staleness;
                             let backlog = sent
                                 .load(Ordering::Acquire)
                                 .saturating_sub(applied.load(Ordering::Acquire));
-                            let backlog_violated = backlog
-                                > cfg.workers as u64 * (cfg.max_staleness + 1);
+                            let backlog_violated =
+                                backlog > workers as u64 * (max_staleness + 1);
                             if ssp_violated || backlog_violated {
                                 stalls.fetch_add(1, Ordering::Relaxed);
                                 cl = clock_cv.wait(cl).unwrap();
@@ -228,7 +274,7 @@ pub fn run_param_server(
                         my_version = version;
                     }
                     // Local gradient.
-                    let idx: Vec<usize> = (0..cfg.batch)
+                    let idx: Vec<usize> = (0..batch)
                         .map(|_| rng.next_below(ds.n() as u64) as usize)
                         .collect();
                     model.grad_minibatch(ds, &w_local, &idx, &mut grad);
@@ -237,7 +283,7 @@ pub fn run_param_server(
                     let q_norm = msg.norm2_sq();
                     let (kind, payload): (u8, &[u8]) = match &msg {
                         Compressed::Sparse(sg) => {
-                            crate::coding::encode_with(sg, cfg.codec, &mut wire);
+                            crate::coding::encode_with(sg, codec, &mut wire);
                             (0, &wire)
                         }
                         other => {
@@ -278,7 +324,7 @@ pub fn run_param_server(
         }
         // ---- server (this thread) ----
         let mut t = 0u64;
-        let record_every = (cfg.total_pushes / 50).max(1) as u64;
+        let record_every = (total_pushes / 50).max(1) as u64;
         let mut decode_slot = crate::sparsify::SparseGrad::empty(0);
         while let Some((_wid, frame_bytes)) = mux.recv() {
             let frame_bytes = frame_bytes.expect("worker link healthy");
@@ -287,7 +333,7 @@ pub fn run_param_server(
                 other => panic!("unexpected message from worker: {other:?}"),
             };
             t += 1;
-            let eta = cfg.lr / (1.0 + (t as f32 / cfg.workers as f32));
+            let eta = lr / (1.0 + (t as f32 / workers as f32));
             {
                 let mut guard = store.state.lock().unwrap();
                 let (ref mut w, ref mut version) = *guard;
@@ -307,7 +353,7 @@ pub fn run_param_server(
             if header.kind == 0 {
                 curve
                     .ledger
-                    .record_codec(header.ideal_bits, payload.len() as u64, cfg.codec);
+                    .record_codec(header.ideal_bits, payload.len() as u64, codec);
             } else {
                 curve.ledger.record(header.ideal_bits, (header.ideal_bits / 8).max(1));
             }
@@ -325,7 +371,7 @@ pub fn run_param_server(
             if t % record_every == 0 {
                 let w_snapshot = store.state.lock().unwrap().0.clone();
                 curve.points.push(CurvePoint {
-                    data_passes: (t * cfg.batch as u64) as f64 / ds.n() as f64,
+                    data_passes: (t * batch as u64) as f64 / ds.n() as f64,
                     loss: model.loss(ds, &w_snapshot),
                     comm_bits: wire_bytes * 8,
                     wall_ms: start.elapsed().as_secs_f64() * 1e3,
@@ -363,14 +409,27 @@ mod tests {
         (ds, LogisticModel::new(1.0 / (10.0 * 256.0)))
     }
 
+    fn session(codec: WireCodec, workers: usize, method: MethodSpec) -> Session {
+        Session::builder()
+            .method(method)
+            .codec(codec)
+            .workers(workers)
+            .seed(42)
+            .build()
+    }
+
+    fn gspar() -> MethodSpec {
+        MethodSpec::GSpar { rho: 0.1, iters: 2 }
+    }
+
     #[test]
     fn ps_converges_with_gspar() {
         let (ds, model) = setup();
-        let cfg = PsConfig {
+        let task = PsTask {
             total_pushes: 3000,
-            ..Default::default()
+            ..PsTask::default()
         };
-        let report = run_param_server(&cfg, &ds, &model);
+        let report = session(WireCodec::Raw, 4, gspar()).param_server(&task, &ds, &model);
         let f0 = model.loss(&ds, &vec![0.0; 128]);
         assert!(
             report.final_loss < f0 * 0.8,
@@ -386,13 +445,12 @@ mod tests {
     #[test]
     fn ps_entropy_codec_converges_with_fewer_wire_bytes() {
         let (ds, model) = setup();
-        let mk = |codec| PsConfig {
+        let task = PsTask {
             total_pushes: 2000,
-            codec,
-            ..Default::default()
+            ..PsTask::default()
         };
-        let raw = run_param_server(&mk(WireCodec::Raw), &ds, &model);
-        let ent = run_param_server(&mk(WireCodec::Entropy), &ds, &model);
+        let raw = session(WireCodec::Raw, 4, gspar()).param_server(&task, &ds, &model);
+        let ent = session(WireCodec::Entropy, 4, gspar()).param_server(&task, &ds, &model);
         let f0 = model.loss(&ds, &vec![0.0; 128]);
         assert!(ent.final_loss < f0 * 0.8, "{f0} -> {}", ent.final_loss);
         assert_eq!(ent.versions, 2000);
@@ -419,13 +477,12 @@ mod tests {
     #[test]
     fn ps_dense_and_sparse_reach_similar_loss() {
         let (ds, model) = setup();
-        let mk = |method| PsConfig {
-            method,
+        let task = PsTask {
             total_pushes: 3000,
-            ..Default::default()
+            ..PsTask::default()
         };
-        let dense = run_param_server(&mk(Method::Dense), &ds, &model);
-        let gspar = run_param_server(&mk(Method::GSpar), &ds, &model);
+        let dense = session(WireCodec::Raw, 4, MethodSpec::Dense).param_server(&task, &ds, &model);
+        let gspar = session(WireCodec::Raw, 4, gspar()).param_server(&task, &ds, &model);
         assert!(
             gspar.final_loss < dense.final_loss * 1.5,
             "gspar {} vs dense {}",
@@ -439,13 +496,12 @@ mod tests {
         // Workers pull every step, so observed staleness stays small and
         // the version counter equals the push budget exactly.
         let (ds, model) = setup();
-        let cfg = PsConfig {
-            workers: 6,
+        let task = PsTask {
             total_pushes: 1200,
             max_staleness: 4,
-            ..Default::default()
+            ..PsTask::default()
         };
-        let report = run_param_server(&cfg, &ds, &model);
+        let report = session(WireCodec::Raw, 6, gspar()).param_server(&task, &ds, &model);
         assert_eq!(report.versions, 1200);
         // Provable worst case between one worker's consecutive pulls: each
         // peer advances ≤ max_staleness+2 (SSP clock gate), plus the full
@@ -458,13 +514,12 @@ mod tests {
             report.max_observed_staleness
         );
         // And the gate must actually have engaged on this contended box.
-        let loose = PsConfig {
-            workers: 6,
+        let loose = PsTask {
             total_pushes: 1200,
             max_staleness: 10_000,
-            ..Default::default()
+            ..PsTask::default()
         };
-        let ungated = run_param_server(&loose, &ds, &model);
+        let ungated = session(WireCodec::Raw, 6, gspar()).param_server(&loose, &ds, &model);
         assert!(
             report.max_observed_staleness <= ungated.max_observed_staleness.max(100),
             "gated {} should not exceed ungated {}",
@@ -476,20 +531,35 @@ mod tests {
     #[test]
     fn ps_single_worker_is_sequential_sgd() {
         let (ds, model) = setup();
-        let cfg = PsConfig {
-            workers: 1,
+        let task = PsTask {
             total_pushes: 1500,
-            method: Method::Dense,
-            ..Default::default()
+            ..PsTask::default()
         };
-        let report = run_param_server(&cfg, &ds, &model);
+        let report =
+            session(WireCodec::Raw, 1, MethodSpec::Dense).param_server(&task, &ds, &model);
         // One worker: the backlog gate caps sent-but-unapplied pushes at
         // workers·(max_staleness+1), so pull lag is bounded by that window.
         assert!(
-            report.max_observed_staleness <= cfg.max_staleness + 2,
+            report.max_observed_staleness <= task.max_staleness + 2,
             "staleness {}",
             report.max_observed_staleness
         );
+        let f0 = model.loss(&ds, &vec![0.0; 128]);
+        assert!(report.final_loss < f0);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_ps_config_shim_still_runs() {
+        // The shim forwards to the Session path; the async schedule is
+        // nondeterministic, so assert convergence + bookkeeping, not bytes.
+        let (ds, model) = setup();
+        let cfg = PsConfig {
+            total_pushes: 800,
+            ..Default::default()
+        };
+        let report = run_param_server(&cfg, &ds, &model);
+        assert_eq!(report.versions, 800);
         let f0 = model.loss(&ds, &vec![0.0; 128]);
         assert!(report.final_loss < f0);
     }

@@ -7,7 +7,13 @@
 //! worker takes the same descent step — exactly the loop in Algorithm 1,
 //! with byte-accurate communication accounting. Deterministic given the
 //! seed (workers iterate in index order), so figure runs are reproducible.
+//!
+//! Entry point: [`crate::api::Session::train_convex`] with a
+//! [`SyncTask`] — the session owns method/codec/seed/topology/net, the task
+//! the per-run knobs. The old `(ConvexConfig, TrainOptions)` pair survives
+//! as a deprecated shim ([`train_convex`]).
 
+use crate::api::{MethodSpec, Session, SyncTask};
 use crate::coding::WireCodec;
 use crate::comm::{Aggregator, NetworkModel, ReduceAlgo};
 use crate::config::ConvexConfig;
@@ -43,7 +49,12 @@ pub enum SvrgVariant {
     MasterFullGrad,
 }
 
-/// Knobs beyond [`ConvexConfig`].
+/// Knobs beyond [`ConvexConfig`] (deprecated shim of the Session API).
+#[deprecated(
+    since = "0.2.0",
+    note = "build a gsparse::api::Session (method/codec/net/seed/workers) and pass the \
+            remaining knobs via gsparse::api::SyncTask to Session::train_convex"
+)]
 #[derive(Clone, Debug)]
 pub struct TrainOptions {
     pub opt: OptKind,
@@ -61,6 +72,7 @@ pub struct TrainOptions {
     pub codec: WireCodec,
 }
 
+#[allow(deprecated)]
 impl Default for TrainOptions {
     fn default() -> Self {
         Self {
@@ -100,19 +112,60 @@ impl Worker {
     }
 }
 
-/// Run Algorithm 1 (or its SVRG variant) and return the training curve.
-///
-/// The returned [`RunCurve`] carries the paper's figure statistics: the
-/// realized variance ratio `var`, the realized sparsity `spa`, the idealized
-/// communication bits (Fig 5–6 x-axis) and the simulated network time.
+/// Run Algorithm 1 (or its SVRG variant) under the old config pair.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a gsparse::api::Session and call Session::train_convex with a SyncTask"
+)]
+#[allow(deprecated)]
 pub fn train_convex(
     cfg: &ConvexConfig,
     opts: &TrainOptions,
     ds: &Dataset,
     model: &dyn ConvexModel,
 ) -> RunCurve {
+    let session = Session::builder()
+        .method(MethodSpec::from_parts(
+            cfg.method,
+            cfg.rho,
+            cfg.c2 * cfg.c1,
+            cfg.qsgd_bits,
+        ))
+        .codec(opts.codec)
+        .net(opts.net)
+        .seed(cfg.seed)
+        .workers(cfg.workers)
+        .build();
+    let task = SyncTask {
+        batch: cfg.batch,
+        epochs: cfg.epochs,
+        lr: cfg.lr,
+        opt: opts.opt,
+        record_every: opts.record_every,
+        f_star: opts.f_star,
+        resparsify_broadcast: opts.resparsify_broadcast,
+        // The old path re-sparsified at cfg.rho regardless of method.
+        resparsify_rho: Some(cfg.rho),
+        svrg_inner: opts.svrg_inner,
+    };
+    session.train_convex(&task, ds, model)
+}
+
+/// The canonical synchronous runner behind [`Session::train_convex`].
+///
+/// The returned [`RunCurve`] carries the paper's figure statistics: the
+/// realized variance ratio `var`, the realized sparsity `spa`, the idealized
+/// communication bits (Fig 5–6 x-axis) and the simulated network time.
+pub(crate) fn run_session(
+    session: &Session,
+    task: &SyncTask,
+    ds: &Dataset,
+    model: &dyn ConvexModel,
+) -> RunCurve {
     let d = ds.d();
-    let m = cfg.workers;
+    let m = session.workers();
+    let codec = session.codec();
+    let net = session.net();
     let start = Instant::now();
 
     // Worker → master messages cross the in-process transport as framed
@@ -123,44 +176,52 @@ pub fn train_convex(
     let mut workers: Vec<Worker> = (0..m)
         .map(|w| Worker {
             shard: shard_indices(ds.n(), w, m),
-            rng: Xoshiro256pp::for_worker(cfg.seed, w),
+            rng: Xoshiro256pp::for_worker(session.seed(), w),
             rand: RandArray::new(
-                Xoshiro256pp::for_worker(cfg.seed ^ 0x5EED_0001, w),
+                Xoshiro256pp::for_worker(session.seed() ^ 0x5EED_0001, w),
                 (4 * d).max(1 << 14),
             ),
-            compressor: sparsify::build(cfg.method, cfg.rho, cfg.c2 * cfg.c1, cfg.qsgd_bits),
+            compressor: session.compressor(),
             grad: vec![0.0; d],
             ref_grad: vec![0.0; d],
             msg: Compressed::Sparse(SparseGrad::empty(d)),
             conn: transport
-                .connect("sync", &Hello::with_codec(w as u32, opts.codec))
+                .connect("sync", &Hello::with_codec(w as u32, codec))
                 .expect("in-process connect"),
         })
         .collect();
     let mut master_links: Vec<Box<dyn Connection>> =
-        crate::transport::accept_n(listener.as_mut(), m, opts.codec).expect("in-process accept");
+        crate::transport::accept_n(listener.as_mut(), m, codec).expect("in-process accept");
     let link_counters: Vec<_> = master_links.iter().map(|c| c.counters()).collect();
 
     let mut w = vec![0.0f32; d];
     let mut v = vec![0.0f32; d]; // averaged update
-    let mut agg = Aggregator::new(opts.net, ReduceAlgo::Sparse);
+    let mut agg = Aggregator::new(net, ReduceAlgo::Sparse);
 
     // SVRG reference state.
-    let is_svrg = matches!(opts.opt, OptKind::Svrg(_));
+    let is_svrg = matches!(task.opt, OptKind::Svrg(_));
     let mut w_ref = vec![0.0f32; d];
     let mut full_ref = vec![0.0f32; d];
-    let svrg_inner = opts
+    let svrg_inner = task
         .svrg_inner
-        .unwrap_or_else(|| (ds.n() / (m * cfg.batch)).max(1));
+        .unwrap_or_else(|| (ds.n() / (m * task.batch)).max(1));
 
-    let rounds_per_pass = (ds.n() as f64 / (m * cfg.batch) as f64).max(1e-9);
-    let total_rounds = (cfg.epochs as f64 * rounds_per_pass).ceil() as usize;
+    let rounds_per_pass = (ds.n() as f64 / (m * task.batch) as f64).max(1e-9);
+    let total_rounds = (task.epochs as f64 * rounds_per_pass).ceil() as usize;
+
+    // Step-7 re-sparsification density: an explicit task override, else the
+    // session method's density when it has one (GSpar/UniSp/TopK), else no
+    // thinning.
+    let resparsify_rho = task
+        .resparsify_rho
+        .or_else(|| session.method().density())
+        .unwrap_or(1.0);
 
     let mut var_meter = VarianceRatio::default();
     let mut spa_meter = SparsityMeter::default();
-    let mut curve = RunCurve::new(method_label(cfg));
+    let mut curve = RunCurve::new(session.method().to_string());
     let mut sim_time = 0.0f64;
-    let mut batch_idx: Vec<usize> = Vec::with_capacity(cfg.batch);
+    let mut batch_idx: Vec<usize> = Vec::with_capacity(task.batch);
     // Round-persistent scratch: decoded per-worker messages, the shared wire
     // buffer, and the step-7 re-sparsification state. Nothing below is
     // allocated inside the training loop.
@@ -175,16 +236,16 @@ pub fn train_convex(
     let mut resparsify_p: Vec<f32> = Vec::new();
     let mut resparsify_sg = SparseGrad::empty(d);
 
-    let schedule = match opts.opt {
-        OptKind::Sgd => LrSchedule::inv_t_var(cfg.lr),
-        OptKind::SgdInvT => LrSchedule::inv_t(cfg.lr),
-        OptKind::Svrg(_) => LrSchedule::constant(cfg.lr),
+    let schedule = match task.opt {
+        OptKind::Sgd => LrSchedule::inv_t_var(task.lr),
+        OptKind::SgdInvT => LrSchedule::inv_t(task.lr),
+        OptKind::Svrg(_) => LrSchedule::constant(task.lr),
     };
 
     // Record the starting point.
     curve.points.push(CurvePoint {
         data_passes: 0.0,
-        loss: model.loss(ds, &w) - opts.f_star,
+        loss: model.loss(ds, &w) - task.f_star,
         comm_bits: 0,
         wall_ms: 0.0,
     });
@@ -197,16 +258,16 @@ pub fn train_convex(
             // One dense synchronization round for the reference broadcast.
             let bytes = (d * 4) as u64;
             curve.ledger.record(sparsify::dense_ideal_bits(d), bytes);
-            sim_time += opts.net.round_time_s(&vec![bytes; m], bytes);
+            sim_time += net.round_time_s(&vec![bytes; m], bytes);
         }
 
         // ---- Algorithm 1 steps 3–5: local gradients + sparsification ----
         let mut upload_bytes = 0u64;
         let mut all_sparse = true;
         for (widx, (worker, slot)) in workers.iter_mut().zip(decoded.iter_mut()).enumerate() {
-            worker.sample_batch(cfg.batch, &mut batch_idx);
+            worker.sample_batch(task.batch, &mut batch_idx);
             model.grad_minibatch(ds, &w, &batch_idx, &mut worker.grad);
-            if let OptKind::Svrg(variant) = opts.opt {
+            if let OptKind::Svrg(variant) = task.opt {
                 model.grad_minibatch(ds, &w_ref, &batch_idx, &mut worker.ref_grad);
                 match variant {
                     SvrgVariant::SparsifyFull => {
@@ -238,7 +299,7 @@ pub fn train_convex(
             // entry stays the idealized byte size, as before).
             let (kind, msg_bytes): (u8, u64) = match &worker.msg {
                 Compressed::Sparse(sg) => {
-                    crate::coding::encode_with(sg, opts.codec, &mut wire);
+                    crate::coding::encode_with(sg, codec, &mut wire);
                     (0, wire.len() as u64)
                 }
                 other => {
@@ -271,7 +332,7 @@ pub fn train_convex(
                 other => panic!("unexpected message from worker: {other:?}"),
             }
             upload_bytes += msg_bytes;
-            let msg_codec = if kind == 0 { opts.codec } else { WireCodec::Raw };
+            let msg_codec = if kind == 0 { codec } else { WireCodec::Raw };
             curve.ledger.record_codec(stats.ideal_bits, msg_bytes, msg_codec);
         }
 
@@ -291,14 +352,12 @@ pub fn train_convex(
                     crate::tensor::axpy(inv_m, den, &mut v);
                 }
             }
-            sim_time += opts
-                .net
-                .round_time_s(&vec![upload_bytes / m as u64; m], (d * 4) as u64);
+            sim_time += net.round_time_s(&vec![upload_bytes / m as u64; m], (d * 4) as u64);
         }
 
         // ---- Optional step 7: re-sparsify the average before broadcast ----
-        if opts.resparsify_broadcast {
-            let pv = sparsify::greedy_probs(&v, cfg.rho, 2, &mut resparsify_p);
+        if task.resparsify_broadcast {
+            let pv = sparsify::greedy_probs(&v, resparsify_rho, 2, &mut resparsify_p);
             sparsify::sample_sparse_into(
                 &v,
                 &resparsify_p,
@@ -311,23 +370,23 @@ pub fn train_convex(
         }
 
         // SVRG eq. 15: master adds its exact full gradient after averaging.
-        if matches!(opts.opt, OptKind::Svrg(SvrgVariant::MasterFullGrad)) {
+        if matches!(task.opt, OptKind::Svrg(SvrgVariant::MasterFullGrad)) {
             crate::tensor::axpy(1.0, &full_ref, &mut v);
         }
 
         // ---- Steps 8–9: broadcast + descent on every worker ----
         let var_now = var_meter.value().max(1e-12);
-        let eta = match opts.opt {
+        let eta = match task.opt {
             OptKind::Sgd => schedule.eta(t as u64, var_now),
             OptKind::SgdInvT => schedule.eta(t as u64, 1.0),
             OptKind::Svrg(_) => schedule.eta_constant(var_now),
         };
         crate::tensor::axpy(-eta, &v, &mut w);
 
-        if t % opts.record_every == 0 || t == total_rounds {
+        if t % task.record_every == 0 || t == total_rounds {
             curve.points.push(CurvePoint {
                 data_passes: t as f64 / rounds_per_pass,
-                loss: model.loss(ds, &w) - opts.f_star,
+                loss: model.loss(ds, &w) - task.f_star,
                 comm_bits: curve.ledger.ideal_bits,
                 wall_ms: sim_time * 1e3,
             });
@@ -341,20 +400,6 @@ pub fn train_convex(
         .set_measured(link_counters.iter().map(|c| c.bytes_total()).sum());
     let _ = start;
     curve
-}
-
-fn method_label(cfg: &ConvexConfig) -> String {
-    use crate::config::Method;
-    match cfg.method {
-        Method::Dense => "baseline".to_string(),
-        Method::GSpar => format!("GSpar(rho={})", cfg.rho),
-        Method::GSparExact => "GSpar-exact".to_string(),
-        Method::UniSp => format!("UniSp(rho={})", cfg.rho),
-        Method::Qsgd => format!("QSGD({})", cfg.qsgd_bits),
-        Method::TernGrad => "TernGrad".to_string(),
-        Method::TopK => format!("TopK(rho={})", cfg.rho),
-        Method::OneBit => "1Bit".to_string(),
-    }
 }
 
 /// Estimate `f* = min_w f(w)` by running many full-gradient steps (shared by
@@ -382,42 +427,49 @@ pub fn estimate_f_star(ds: &Dataset, model: &dyn ConvexModel, iters: usize, lr: 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ConvexConfig, Method};
+    use crate::config::Method;
     use crate::data::gen_logistic;
     use crate::model::LogisticModel;
 
-    fn small_cfg(method: Method) -> ConvexConfig {
-        ConvexConfig {
-            n: 128,
-            d: 256,
-            c1: 0.6,
-            c2: 0.25,
-            reg: 1.0 / (10.0 * 128.0),
-            rho: 0.1,
-            workers: 4,
+    fn small_session(spec: MethodSpec) -> Session {
+        Session::builder()
+            .method(spec)
+            .workers(4)
+            .seed(77)
+            .build()
+    }
+
+    fn small_task() -> SyncTask {
+        SyncTask {
             batch: 8,
             epochs: 12,
             lr: 1.0,
-            method,
-            seed: 77,
-            qsgd_bits: 4,
+            ..SyncTask::default()
         }
     }
 
-    fn run(method: Method, opt: OptKind) -> RunCurve {
-        let cfg = small_cfg(method);
-        let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
-        let model = LogisticModel::new(cfg.reg);
-        let opts = TrainOptions {
+    fn small_data() -> (Dataset, LogisticModel) {
+        let ds = gen_logistic(128, 256, 0.6, 0.25, 77);
+        let model = LogisticModel::new(1.0 / (10.0 * 128.0));
+        (ds, model)
+    }
+
+    fn run(spec: MethodSpec, opt: OptKind) -> RunCurve {
+        let (ds, model) = small_data();
+        let task = SyncTask {
             opt,
-            ..Default::default()
+            ..small_task()
         };
-        train_convex(&cfg, &opts, &ds, &model)
+        small_session(spec).train_convex(&task, &ds, &model)
+    }
+
+    fn gspar() -> MethodSpec {
+        MethodSpec::GSpar { rho: 0.1, iters: 2 }
     }
 
     #[test]
     fn sgd_gspar_reduces_loss() {
-        let curve = run(Method::GSpar, OptKind::Sgd);
+        let curve = run(gspar(), OptKind::Sgd);
         let first = curve.points.first().unwrap().loss;
         let last = curve.final_loss();
         assert!(last < first * 0.9, "loss {first} -> {last}");
@@ -436,15 +488,15 @@ mod tests {
         // values: the training trajectory must match the raw run bitwise,
         // while both the wire and measured columns shrink — the Fig-1
         // logreg workload where `Entropy` must beat `Raw`.
-        let cfg = small_cfg(Method::GSpar);
-        let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
-        let model = LogisticModel::new(cfg.reg);
+        let (ds, model) = small_data();
         let run_with = |codec| {
-            let opts = TrainOptions {
-                codec,
-                ..Default::default()
-            };
-            train_convex(&cfg, &opts, &ds, &model)
+            let session = Session::builder()
+                .method(gspar())
+                .workers(4)
+                .seed(77)
+                .codec(codec)
+                .build();
+            session.train_convex(&small_task(), &ds, &model)
         };
         let raw = run_with(WireCodec::Raw);
         let ent = run_with(WireCodec::Entropy);
@@ -467,15 +519,13 @@ mod tests {
     #[test]
     fn svrg_both_variants_reduce_loss() {
         for variant in [SvrgVariant::SparsifyFull, SvrgVariant::MasterFullGrad] {
-            let mut cfg = small_cfg(Method::GSpar);
-            cfg.lr = 0.25;
-            let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
-            let model = LogisticModel::new(cfg.reg);
-            let opts = TrainOptions {
+            let (ds, model) = small_data();
+            let task = SyncTask {
                 opt: OptKind::Svrg(variant),
-                ..Default::default()
+                lr: 0.25,
+                ..small_task()
             };
-            let curve = train_convex(&cfg, &opts, &ds, &model);
+            let curve = small_session(gspar()).train_convex(&task, &ds, &model);
             let first = curve.points.first().unwrap().loss;
             let last = curve.final_loss();
             assert!(last < first * 0.9, "{variant:?}: {first} -> {last}");
@@ -486,8 +536,8 @@ mod tests {
     fn gspar_beats_unisp_at_same_density() {
         // The paper's core empirical claim (Figures 1–4): at matched spa,
         // GSpar has lower var and converges faster than UniSp.
-        let gspar = run(Method::GSpar, OptKind::Sgd);
-        let unisp = run(Method::UniSp, OptKind::Sgd);
+        let gspar = run(gspar(), OptKind::Sgd);
+        let unisp = run(MethodSpec::UniSp { rho: 0.1 }, OptKind::Sgd);
         assert!(
             gspar.var_ratio < unisp.var_ratio,
             "var: gspar {} vs unisp {}",
@@ -504,8 +554,8 @@ mod tests {
 
     #[test]
     fn dense_baseline_fastest_per_iteration_but_most_bits() {
-        let dense = run(Method::Dense, OptKind::Sgd);
-        let gspar = run(Method::GSpar, OptKind::Sgd);
+        let dense = run(MethodSpec::Dense, OptKind::Sgd);
+        let gspar = run(gspar(), OptKind::Sgd);
         assert!(dense.var_ratio <= 1.0 + 1e-9);
         assert!(
             gspar.ledger.ideal_bits < dense.ledger.ideal_bits / 2,
@@ -517,32 +567,59 @@ mod tests {
 
     #[test]
     fn deterministic_given_seed() {
-        let a = run(Method::GSpar, OptKind::Sgd);
-        let b = run(Method::GSpar, OptKind::Sgd);
+        let a = run(gspar(), OptKind::Sgd);
+        let b = run(gspar(), OptKind::Sgd);
         assert_eq!(a.final_loss(), b.final_loss());
         assert_eq!(a.ledger.ideal_bits, b.ledger.ideal_bits);
     }
 
     #[test]
     fn resparsify_broadcast_still_converges() {
-        let cfg = small_cfg(Method::GSpar);
-        let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
-        let model = LogisticModel::new(cfg.reg);
-        let opts = TrainOptions {
+        let (ds, model) = small_data();
+        let task = SyncTask {
             resparsify_broadcast: true,
-            ..Default::default()
+            ..small_task()
         };
-        let curve = train_convex(&cfg, &opts, &ds, &model);
+        let curve = small_session(gspar()).train_convex(&task, &ds, &model);
         assert!(curve.final_loss() < curve.points[0].loss);
     }
 
     #[test]
+    #[allow(deprecated)]
+    fn deprecated_shim_matches_session_run_bitwise() {
+        // The migration guarantee: `train_convex(&ConvexConfig,
+        // &TrainOptions, …)` is a pure forwarding shim — identical curve,
+        // identical ledger.
+        let cfg = ConvexConfig {
+            n: 128,
+            d: 256,
+            c1: 0.6,
+            c2: 0.25,
+            reg: 1.0 / (10.0 * 128.0),
+            rho: 0.1,
+            workers: 4,
+            batch: 8,
+            epochs: 12,
+            lr: 1.0,
+            method: Method::GSpar,
+            seed: 77,
+            qsgd_bits: 4,
+        };
+        let (ds, model) = small_data();
+        let old = train_convex(&cfg, &TrainOptions::default(), &ds, &model);
+        let new = small_session(gspar()).train_convex(&small_task(), &ds, &model);
+        assert_eq!(old.final_loss(), new.final_loss());
+        assert_eq!(old.ledger.ideal_bits, new.ledger.ideal_bits);
+        assert_eq!(old.ledger.wire_bytes, new.ledger.wire_bytes);
+        assert_eq!(old.ledger.measured_bytes, new.ledger.measured_bytes);
+        assert_eq!(old.name, new.name);
+    }
+
+    #[test]
     fn f_star_estimate_below_sgd_losses() {
-        let cfg = small_cfg(Method::Dense);
-        let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
-        let model = LogisticModel::new(cfg.reg);
+        let (ds, model) = small_data();
         let f_star = estimate_f_star(&ds, &model, 400, 1.0);
-        let curve = run(Method::Dense, OptKind::Sgd);
+        let curve = run(MethodSpec::Dense, OptKind::Sgd);
         assert!(f_star <= curve.final_loss() + 1e-6);
         assert!(f_star.is_finite());
     }

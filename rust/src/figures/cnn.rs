@@ -7,17 +7,16 @@
 //! (synthetic CIFAR-like data, reduced steps on the 1-core testbed) is
 //! documented in DESIGN.md §Substitutions.
 
-use crate::config::Method;
-use crate::coordinator::Cluster;
+use crate::api::{MethodSpec, Session};
 use crate::data::CifarLike;
 use crate::metrics::{write_csv, CurvePoint, RunCurve};
 use crate::model::hlo::HloTrainStep;
 use crate::opt::Adam;
 use crate::runtime::Runtime;
-use crate::sparsify;
 
 /// One training run of `cnn<channels>_step` with per-layer compressor ρ.
-/// `rho = 1.0` means dense.
+/// `rho = 1.0` means dense. With `batch` the whole layer list travels as
+/// one `WireBatch` frame per worker per round (`--batch-layers`).
 fn train_cnn(
     rt: &mut Runtime,
     channels: usize,
@@ -25,16 +24,25 @@ fn train_cnn(
     steps: usize,
     workers: usize,
     seed: u64,
+    batch: bool,
 ) -> anyhow::Result<RunCurve> {
     let step = HloTrainStep::from_manifest(rt, &format!("cnn{channels}_step"))?;
     let mut params = step.init_params(rt, seed as i32)?;
     let ds = CifarLike::generate(512, seed ^ 0xC1FA);
     let bsz = step.x_dims[0];
-    let layer_dims: Vec<usize> = step.params.iter().map(|p| p.elements()).collect();
-    let method = if rho >= 1.0 { Method::Dense } else { Method::GSpar };
-    let mut cluster = Cluster::new(workers, &layer_dims, seed, || {
-        sparsify::build(method, rho.min(1.0), 0.0, 4)
-    });
+    let layer_dims = step.layer_dims();
+    let method = if rho >= 1.0 {
+        MethodSpec::Dense
+    } else {
+        MethodSpec::GSpar { rho: rho.min(1.0), iters: 2 }
+    };
+    let session = Session::builder()
+        .method(method)
+        .workers(workers)
+        .seed(seed)
+        .batch_layers(batch)
+        .build();
+    let mut cluster = session.cluster(&layer_dims);
     let mut adams: Vec<Adam> = layer_dims.iter().map(|&d| Adam::new(d, 0.02)).collect();
     let mut rng = crate::rngkit::Xoshiro256pp::seed_from_u64(seed ^ 0xADA);
     let mut x = vec![0.0f32; bsz * CifarLike::PIXELS];
@@ -77,7 +85,7 @@ fn train_cnn(
     Ok(curve)
 }
 
-fn run_fig(name: &str, channel_set: &[usize], quick: bool) -> anyhow::Result<()> {
+fn run_fig(name: &str, channel_set: &[usize], quick: bool, batch: bool) -> anyhow::Result<()> {
     println!("\n================ {name} ================");
     let mut rt = Runtime::cpu()?.with_artifact_dir("artifacts")?;
     let available = rt.manifest_names();
@@ -96,7 +104,7 @@ fn run_fig(name: &str, channel_set: &[usize], quick: bool) -> anyhow::Result<()>
             continue;
         }
         for &rho in &rhos {
-            let curve = train_cnn(&mut rt, ch, rho, steps, 2, 7)?;
+            let curve = train_cnn(&mut rt, ch, rho, steps, 2, 7, batch)?;
             println!(
                 "  {:<22} loss {:.3} -> {:.3}   var {:.2}  spa {:.4}  Mbits {:.2}",
                 curve.name,
@@ -115,13 +123,15 @@ fn run_fig(name: &str, channel_set: &[usize], quick: bool) -> anyhow::Result<()>
     Ok(())
 }
 
-/// Figure 7: channels 32 (top) and 24 (bottom).
-pub fn fig7(quick: bool) -> anyhow::Result<()> {
-    run_fig("fig7_cnn_32_24", &[32, 24], quick)
+/// Figure 7: channels 32 (top) and 24 (bottom). `batch` enables the
+/// batched multi-layer wire path (`--batch-layers`).
+pub fn fig7(quick: bool, batch: bool) -> anyhow::Result<()> {
+    run_fig("fig7_cnn_32_24", &[32, 24], quick, batch)
 }
 
 /// Figure 8: channels 64 (top) and 48 (bottom) — requires
-/// `make artifacts-full`.
-pub fn fig8(quick: bool) -> anyhow::Result<()> {
-    run_fig("fig8_cnn_64_48", &[64, 48], quick)
+/// `make artifacts-full`. `batch` enables the batched multi-layer wire
+/// path (`--batch-layers`).
+pub fn fig8(quick: bool, batch: bool) -> anyhow::Result<()> {
+    run_fig("fig8_cnn_64_48", &[64, 48], quick, batch)
 }

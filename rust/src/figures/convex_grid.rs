@@ -6,8 +6,9 @@
 //! Series: GSpar vs UniSp vs dense baseline, labeled with the realized
 //! `var` and `spa` statistics; x-axis = data passes, y-axis = suboptimality.
 
-use crate::config::{ConvexConfig, Method};
-use crate::coordinator::sync::{estimate_f_star, train_convex, OptKind, SvrgVariant, TrainOptions};
+use crate::api::{MethodSpec, Session, SyncTask};
+use crate::config::Method;
+use crate::coordinator::sync::{estimate_f_star, OptKind, SvrgVariant};
 use crate::data::gen_logistic;
 use crate::metrics::{ascii_plot, write_csv, RunCurve, XAxis};
 use crate::model::LogisticModel;
@@ -52,35 +53,26 @@ fn grid_cell(
     rho: f32,
 ) -> Vec<RunCurve> {
     let reg = reg_factor / scale.n as f32;
-    let base = ConvexConfig {
-        n: scale.n,
-        d: scale.d,
-        c1,
-        c2,
-        reg,
-        rho,
-        workers: 4,
+    let ds = gen_logistic(scale.n, scale.d, c1, c2, scale.seed);
+    let model = LogisticModel::new(reg);
+    let f_star = estimate_f_star(&ds, &model, 400, 1.0);
+    let task = SyncTask {
         batch: 8,
         epochs: scale.epochs,
         lr: if matches!(opt, OptKind::Svrg(_)) { 0.25 } else { 1.0 },
-        method: Method::Dense,
-        seed: scale.seed,
-        qsgd_bits: 4,
-    };
-    let ds = gen_logistic(base.n, base.d, c1, c2, base.seed);
-    let model = LogisticModel::new(reg);
-    let f_star = estimate_f_star(&ds, &model, 400, 1.0);
-    let opts = TrainOptions {
         opt,
         f_star,
-        ..Default::default()
+        ..SyncTask::default()
     };
     [Method::Dense, Method::GSpar, Method::UniSp]
         .iter()
         .map(|&method| {
-            let mut cfg = base.clone();
-            cfg.method = method;
-            train_convex(&cfg, &opts, &ds, &model)
+            let session = Session::builder()
+                .method(MethodSpec::from_parts(method, rho, c2 * c1, 4))
+                .workers(4)
+                .seed(scale.seed)
+                .build();
+            session.train_convex(&task, &ds, &model)
         })
         .collect()
 }

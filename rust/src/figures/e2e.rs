@@ -6,20 +6,24 @@
 //! Used by both `gsparse e2e` and `examples/transformer_e2e.rs`; the run is
 //! recorded in EXPERIMENTS.md.
 
-use crate::config::Method;
-use crate::coordinator::Cluster;
+use crate::api::{MethodSpec, Session};
 use crate::data::ByteCorpus;
 use crate::metrics::{write_csv, CurvePoint, RunCurve};
 use crate::model::hlo::HloTrainStep;
 use crate::opt::Adam;
 use crate::runtime::Runtime;
-use crate::sparsify;
 
 /// Train the transformer artifact for `steps` rounds with `workers`
 /// simulated data-parallel workers and per-layer GSpar at density `rho`
-/// (`rho >= 1.0` = dense). Prints the loss curve; writes
+/// (`rho >= 1.0` = dense); `batch` ships each round as one `WireBatch`
+/// frame per worker (`--batch-layers`). Prints the loss curve; writes
 /// `results/e2e_transformer.csv`.
-pub fn run_transformer_e2e(steps: usize, workers: usize, rho: f32) -> anyhow::Result<()> {
+pub fn run_transformer_e2e(
+    steps: usize,
+    workers: usize,
+    rho: f32,
+    batch: bool,
+) -> anyhow::Result<()> {
     let mut rt = Runtime::cpu()?.with_artifact_dir("artifacts")?;
     let step = HloTrainStep::from_manifest(&mut rt, "transformer_step")?;
     let total_params = step.total_params();
@@ -39,11 +43,19 @@ pub fn run_transformer_e2e(steps: usize, workers: usize, rho: f32) -> anyhow::Re
         (64f64).ln()
     );
 
-    let layer_dims: Vec<usize> = step.params.iter().map(|p| p.elements()).collect();
-    let method = if rho >= 1.0 { Method::Dense } else { Method::GSpar };
-    let mut cluster = Cluster::new(workers, &layer_dims, 99, || {
-        sparsify::build(method, rho.min(1.0), 0.0, 4)
-    });
+    let layer_dims = step.layer_dims();
+    let method = if rho >= 1.0 {
+        MethodSpec::Dense
+    } else {
+        MethodSpec::GSpar { rho: rho.min(1.0), iters: 2 }
+    };
+    let session = Session::builder()
+        .method(method)
+        .workers(workers)
+        .seed(99)
+        .batch_layers(batch)
+        .build();
+    let mut cluster = session.cluster(&layer_dims);
     let mut adams: Vec<Adam> = layer_dims.iter().map(|&d| Adam::new(d, 3e-3)).collect();
     let mut rng = crate::rngkit::Xoshiro256pp::seed_from_u64(1);
 

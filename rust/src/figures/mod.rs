@@ -30,8 +30,10 @@ pub fn results_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("results"))
 }
 
-/// Run one figure by number (1–9), `theory`, or `all`.
-pub fn run(which: &str, quick: bool) -> anyhow::Result<()> {
+/// Run one figure by number (1–9), `theory`, or `all`. `batch` turns on
+/// the batched multi-layer wire path for the cluster-backed figures (7–8);
+/// the single-tensor convex figures ignore it.
+pub fn run(which: &str, quick: bool, batch: bool) -> anyhow::Result<()> {
     let scale = if quick {
         ConvexFigureScale::quick()
     } else {
@@ -44,13 +46,13 @@ pub fn run(which: &str, quick: bool) -> anyhow::Result<()> {
         "4" => fig4(&scale),
         "5" => fig5(&scale),
         "6" => fig6(&scale),
-        "7" => fig7(quick)?,
-        "8" => fig8(quick)?,
+        "7" => fig7(quick, batch)?,
+        "8" => fig8(quick, batch)?,
         "9" => fig9(quick),
         "theory" => theory_bounds(),
         "all" => {
             for f in ["1", "2", "3", "4", "5", "6", "7", "8", "9", "theory"] {
-                run(f, quick)?;
+                run(f, quick, batch)?;
             }
         }
         other => anyhow::bail!("unknown figure `{other}` (1-9, theory, all)"),

@@ -6,8 +6,9 @@
 //! Fig 5 uses C₁ = 0.6, Fig 6 uses C₁ = 0.9.
 
 use super::convex_grid::ConvexFigureScale;
-use crate::config::{ConvexConfig, Method};
-use crate::coordinator::sync::{estimate_f_star, train_convex, OptKind, TrainOptions};
+use crate::api::{MethodSpec, Session, SyncTask};
+use crate::config::Method;
+use crate::coordinator::sync::{estimate_f_star, OptKind};
 use crate::data::gen_logistic;
 use crate::metrics::{ascii_plot, write_csv, RunCurve, XAxis};
 use crate::model::LogisticModel;
@@ -19,28 +20,16 @@ fn run_cell(
     reg_factor: f32,
 ) -> Vec<RunCurve> {
     let reg = reg_factor / scale.n as f32;
-    let base = ConvexConfig {
-        n: scale.n,
-        d: scale.d,
-        c1,
-        c2,
-        reg,
-        rho: 0.1,
-        workers: 4,
+    let ds = gen_logistic(scale.n, scale.d, c1, c2, scale.seed);
+    let model = LogisticModel::new(reg);
+    let f_star = estimate_f_star(&ds, &model, 400, 1.0);
+    let task = SyncTask {
         batch: 8,
         epochs: scale.epochs,
         lr: 1.0,
-        method: Method::Dense,
-        seed: scale.seed,
-        qsgd_bits: 4,
-    };
-    let ds = gen_logistic(base.n, base.d, c1, c2, base.seed);
-    let model = LogisticModel::new(reg);
-    let f_star = estimate_f_star(&ds, &model, 400, 1.0);
-    let opts = TrainOptions {
         opt: OptKind::SgdInvT, // η ∝ 1/t for both methods (paper's setting)
         f_star,
-        ..Default::default()
+        ..SyncTask::default()
     };
     let mut curves = Vec::new();
     for (method, bits) in [
@@ -50,10 +39,12 @@ fn run_cell(
         (Method::Qsgd, 4),
         (Method::Qsgd, 8),
     ] {
-        let mut cfg = base.clone();
-        cfg.method = method;
-        cfg.qsgd_bits = bits;
-        let mut c = train_convex(&cfg, &opts, &ds, &model);
+        let session = Session::builder()
+            .method(MethodSpec::from_parts(method, 0.1, c2 * c1, bits))
+            .workers(4)
+            .seed(scale.seed)
+            .build();
+        let mut c = session.train_convex(&task, &ds, &model);
         if method == Method::Qsgd {
             c.name = format!("QSGD({bits})");
         }

@@ -10,6 +10,9 @@
 //! (`p_i = min(λ|g_i|, 1)`, Proposition 1). On top of that primitive it
 //! provides the full training system the paper evaluates:
 //!
+//! * [`api`] — the unified front door: a typed [`api::MethodSpec`] and one
+//!   [`api::Session`] (method, codec, seed, topology, batching) consumed by
+//!   every coordinator;
 //! * [`sparsify`] — the optimal sparsifiers (closed-form Algorithm 2, greedy
 //!   Algorithm 3) and every baseline (uniform, QSGD, TernGrad, top-k, 1-bit);
 //! * [`coding`] — the §3.3 hybrid wire format and Theorem-4 bit accounting;
@@ -30,6 +33,7 @@
 //! request path is pure Rust. See `DESIGN.md` for the architecture and
 //! `EXPERIMENTS.md` for reproduction results.
 
+pub mod api;
 pub mod benchkit;
 pub mod cli;
 pub mod coding;

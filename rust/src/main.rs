@@ -12,11 +12,11 @@
 //!   default, `--procs` spawns genuine worker processes);
 //! * `version`.
 
+use gsparse::api::{DistTask, MethodSpec, Session, SyncTask};
 use gsparse::cli::Args;
 use gsparse::coding::WireCodec;
-use gsparse::config::{AsyncSvmConfig, ConvexConfig, Method, UpdateScheme};
-use gsparse::coordinator::dist::{self, DistConfig};
-use gsparse::coordinator::sync::{estimate_f_star, train_convex, OptKind, TrainOptions};
+use gsparse::config::{AsyncSvmConfig, Method, UpdateScheme};
+use gsparse::coordinator::sync::{estimate_f_star, OptKind};
 use gsparse::coordinator::AsyncSvmEngine;
 use gsparse::data::{gen_logistic, gen_svm};
 use gsparse::metrics::{ascii_plot, XAxis};
@@ -55,10 +55,10 @@ fn print_help() {
          USAGE: gsparse <SUBCOMMAND> [OPTIONS]\n\
          \n\
          SUBCOMMANDS:\n\
-           fig <1-9|theory|all> [--paper]   regenerate a paper figure\n\
+           fig <1-9|theory|all> [--paper] [--batch-layers]   regenerate a paper figure\n\
            train [--method M] [--rho R] [--epochs E] [--codec raw|entropy] [--svrg] ...\n\
            async-svm [--threads T] [--scheme lock|atomic|wild] [--method M]\n\
-           e2e [--steps N] [--workers M] [--rho R]   transformer end-to-end\n\
+           e2e [--steps N] [--workers M] [--rho R] [--batch-layers]   transformer end-to-end\n\
            server [--addr H:P] [--workers M] [--rounds R] [--codec C] ...\n\
            worker --addr H:P --id N [--codec C]   one worker process (config from server)\n\
            dist [--transport inproc|tcp] [--procs] [--codec raw|entropy] ...\n\
@@ -73,38 +73,42 @@ fn cmd_fig(args: &Args) -> anyhow::Result<()> {
         .first()
         .map(String::as_str)
         .unwrap_or("all");
-    gsparse::figures::run(which, !args.flag("paper"))
+    gsparse::figures::run(which, !args.flag("paper"), args.flag("batch-layers"))
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let mut cfg = ConvexConfig::default();
-    cfg.n = args.get_parse("n", cfg.n);
-    cfg.d = args.get_parse("d", cfg.d);
-    cfg.c1 = args.get_parse("c1", cfg.c1);
-    cfg.c2 = args.get_parse("c2", cfg.c2);
-    cfg.rho = args.get_parse("rho", cfg.rho);
-    cfg.workers = args.get_parse("workers", cfg.workers);
-    cfg.epochs = args.get_parse("epochs", cfg.epochs);
-    cfg.lr = args.get_parse("lr", cfg.lr);
-    cfg.seed = args.get_parse("seed", cfg.seed);
-    cfg.reg = args.get_parse("reg", 1.0 / (10.0 * cfg.n as f32));
+    let n: usize = args.get_parse("n", 1024);
+    let d: usize = args.get_parse("d", 2048);
+    let c1: f32 = args.get_parse("c1", 0.6);
+    let c2: f32 = args.get_parse("c2", 0.25);
+    let rho: f32 = args.get_parse("rho", 0.1);
+    let reg: f32 = args.get_parse("reg", 1.0 / (10.0 * n as f32));
+    let seed: u64 = args.get_parse("seed", 42);
+    let mut method = Method::GSpar;
     if let Some(m) = args.get("method") {
-        cfg.method = Method::parse(m).ok_or_else(|| anyhow::anyhow!("unknown method {m}"))?;
+        method = Method::parse(m).ok_or_else(|| anyhow::anyhow!("unknown method {m}"))?;
     }
-    let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
-    let model = LogisticModel::new(cfg.reg);
+    let session = Session::builder()
+        .method(MethodSpec::from_parts(method, rho, c2 * c1, 4))
+        .codec(parse_codec(args)?)
+        .workers(args.get_parse("workers", 4))
+        .seed(seed)
+        .build();
+    let ds = gen_logistic(n, d, c1, c2, seed);
+    let model = LogisticModel::new(reg);
     let f_star = estimate_f_star(&ds, &model, 400, 1.0);
-    let opts = TrainOptions {
+    let task = SyncTask {
+        epochs: args.get_parse("epochs", 30),
+        lr: args.get_parse("lr", 0.5),
         opt: if args.flag("svrg") {
             OptKind::Svrg(gsparse::coordinator::sync::SvrgVariant::SparsifyFull)
         } else {
             OptKind::Sgd
         },
         f_star,
-        codec: parse_codec(args)?,
-        ..Default::default()
+        ..SyncTask::default()
     };
-    let curve = train_convex(&cfg, &opts, &ds, &model);
+    let curve = session.train_convex(&task, &ds, &model);
     println!("{}", curve.label());
     println!(
         "final suboptimality {:.4e}; {:.3e} ideal bits; {:.3e} wire bytes; sim net {:.1} ms",
@@ -147,7 +151,7 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
     let steps = args.get_parse("steps", 200usize);
     let workers = args.get_parse("workers", 4usize);
     let rho = args.get_parse("rho", 0.05f32);
-    gsparse::figures::run_transformer_e2e(steps, workers, rho)
+    gsparse::figures::run_transformer_e2e(steps, workers, rho, args.flag("batch-layers"))
 }
 
 /// `--codec raw|entropy` (default raw).
@@ -160,28 +164,32 @@ fn parse_codec(args: &Args) -> anyhow::Result<WireCodec> {
     }
 }
 
-/// Build the distributed-run config shared by `server` and `dist` from CLI
-/// options (workers receive it over the wire, so `worker` takes only the
-/// handshake-negotiated `--codec`).
-fn dist_cfg_from_args(args: &Args) -> anyhow::Result<DistConfig> {
-    let mut cfg = DistConfig::default();
-    cfg.workers = args.get_parse("workers", cfg.workers);
-    cfg.rounds = args.get_parse("rounds", cfg.rounds);
-    cfg.rho = args.get_parse("rho", cfg.rho);
-    cfg.qsgd_bits = args.get_parse("qsgd-bits", cfg.qsgd_bits);
-    cfg.batch = args.get_parse("batch", cfg.batch);
-    cfg.lr = args.get_parse("lr", cfg.lr);
-    cfg.seed = args.get_parse("seed", cfg.seed);
-    cfg.n = args.get_parse("n", cfg.n);
-    cfg.d = args.get_parse("d", cfg.d);
-    cfg.c1 = args.get_parse("c1", cfg.c1);
-    cfg.c2 = args.get_parse("c2", cfg.c2);
-    cfg.reg = args.get_parse("reg", 1.0 / (10.0 * cfg.n as f32));
-    cfg.codec = parse_codec(args)?;
+/// Build the distributed-run session + task shared by `server` and `dist`
+/// from CLI options (workers receive the compiled plan over the wire, so
+/// `worker` takes only the handshake-negotiated `--codec`).
+fn dist_session_from_args(args: &Args) -> anyhow::Result<(Session, DistTask)> {
+    let mut task = DistTask::default();
+    task.rounds = args.get_parse("rounds", task.rounds);
+    task.batch = args.get_parse("batch", task.batch);
+    task.lr = args.get_parse("lr", task.lr);
+    task.n = args.get_parse("n", task.n);
+    task.d = args.get_parse("d", task.d);
+    task.c1 = args.get_parse("c1", task.c1);
+    task.c2 = args.get_parse("c2", task.c2);
+    task.reg = args.get_parse("reg", 1.0 / (10.0 * task.n as f32));
+    let mut method = Method::GSpar;
     if let Some(m) = args.get("method") {
-        cfg.method = Method::parse(m).ok_or_else(|| anyhow::anyhow!("unknown method {m}"))?;
+        method = Method::parse(m).ok_or_else(|| anyhow::anyhow!("unknown method {m}"))?;
     }
-    Ok(cfg)
+    let rho: f32 = args.get_parse("rho", 0.1);
+    let qsgd_bits: u32 = args.get_parse("qsgd-bits", 4);
+    let session = Session::builder()
+        .method(MethodSpec::from_parts(method, rho, task.c1 * task.c2, qsgd_bits))
+        .codec(parse_codec(args)?)
+        .workers(args.get_parse("workers", 2))
+        .seed(args.get_parse("seed", 42))
+        .build();
+    Ok((session, task))
 }
 
 fn print_dist_report(report: &gsparse::coordinator::DistReport) {
@@ -211,24 +219,24 @@ fn print_dist_report(report: &gsparse::coordinator::DistReport) {
 }
 
 fn cmd_server(args: &Args) -> anyhow::Result<()> {
-    let cfg = dist_cfg_from_args(args)?;
+    let (session, task) = dist_session_from_args(args)?;
     let addr = args.get_or("addr", "127.0.0.1:0");
     let transport = TcpTransport::new();
     let mut listener = transport.listen(addr)?;
     println!(
         "gsparse server listening on {} — waiting for {} worker(s):",
         listener.local_addr(),
-        cfg.workers
+        session.workers()
     );
-    for wid in 0..cfg.workers {
+    for wid in 0..session.workers() {
         println!(
             "  {} worker --addr {} --id {wid} --codec {}",
             std::env::args().next().unwrap_or_else(|| "gsparse".into()),
             listener.local_addr(),
-            cfg.codec
+            session.codec()
         );
     }
-    let report = dist::serve(listener.as_mut(), &cfg)?;
+    let report = session.dist_serve(listener.as_mut(), &task)?;
     print_dist_report(&report);
     Ok(())
 }
@@ -246,19 +254,19 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_dist(args: &Args) -> anyhow::Result<()> {
-    let cfg = dist_cfg_from_args(args)?;
+    let (session, task) = dist_session_from_args(args)?;
     let backend = args.get_or("transport", "inproc");
     let report = if args.flag("procs") {
         let bin = std::env::current_exe()?;
         println!(
             "launching 1 server + {} worker processes over loopback TCP...",
-            cfg.workers
+            session.workers()
         );
-        dist::run_processes(&bin, "127.0.0.1:0", &cfg)?
+        session.dist_processes(&bin, "127.0.0.1:0", &task)?
     } else {
         match backend {
-            "inproc" => dist::run_threads(InProcTransport::new(), "dist", &cfg)?,
-            "tcp" => dist::run_threads(TcpTransport::new(), "127.0.0.1:0", &cfg)?,
+            "inproc" => session.dist_threads(InProcTransport::new(), "dist", &task)?,
+            "tcp" => session.dist_threads(TcpTransport::new(), "127.0.0.1:0", &task)?,
             other => anyhow::bail!("unknown transport {other} (inproc|tcp)"),
         }
     };

@@ -81,6 +81,13 @@ impl HloTrainStep {
         self.params.iter().map(|p| p.elements()).sum()
     }
 
+    /// Flat per-layer sizes, in parameter order — the layer list the
+    /// per-layer (and batched) gradient pipelines compress against
+    /// (`Session::cluster(&step.layer_dims())`).
+    pub fn layer_dims(&self) -> Vec<usize> {
+        self.params.iter().map(|p| p.elements()).collect()
+    }
+
     /// Initialize parameters by running `<model>_init` (artifact name is the
     /// step name with `_step` replaced by `_init`), seeded by `seed`.
     pub fn init_params(&self, rt: &mut Runtime, seed: i32) -> Result<Vec<Vec<f32>>> {

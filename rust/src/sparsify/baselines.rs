@@ -508,7 +508,7 @@ mod tests {
         let g = vec![0.0f32; 50];
         let mut ra = RandArray::from_seed(32, 1024);
         for m in crate::config::Method::all() {
-            let mut c = crate::sparsify::build(*m, 0.2, 0.5, 4);
+            let mut c = crate::api::MethodSpec::from_parts(*m, 0.2, 0.5, 4).build();
             let (out, stats) = c.compress(&g, &mut ra);
             assert!(
                 out.to_dense().iter().all(|&v| v == 0.0),

@@ -1,0 +1,387 @@
+//! The batched multi-layer engine: one scratch-arena invocation for a whole
+//! model's layer list.
+//!
+//! §5.2 sparsifies each layer **independently** — its own probability
+//! vector, its own λ, its own message — but independence of the *math* does
+//! not require independence of the *machinery*. [`BatchCompressEngine`]
+//! runs the per-layer closed-form / greedy solves back to back over one
+//! shared scratch arena, draws every layer's uniforms from the worker's
+//! single pre-generated stream, and dispatches the sampling of **all**
+//! layers' chunks to the persistent [`ShardPool`] in one `run` call —
+//! instead of re-entering the single-tensor engine (and its pool) once per
+//! layer.
+//!
+//! Bitwise contract: for the same [`RandArray`] state, compressing a layer
+//! list through this engine produces exactly the [`SparseGrad`]s the
+//! single-tensor [`CompressEngine`] produces when called once per layer in
+//! order. The engine consumes `d_ℓ + 1` uniforms per layer — `d_ℓ` loaded
+//! up front, plus the same spacer draw — and assigns chunk output buffers
+//! by (layer, chunk) index, so pool scheduling cannot reorder a byte. The
+//! cluster coordinator's batched-vs-per-layer parity tests pin this.
+//!
+//! The fused wire path ([`BatchCompressEngine::compress_batch_into`])
+//! encodes the resulting layer list straight into one `WireBatch` message
+//! ([`crate::coding::batch`]) — probabilities → sampling → entropy coding
+//! in a single pass, with no intermediate per-layer message materialized.
+
+use super::engine::{sample_chunk, CompressEngine, EngineMode};
+use super::pool::ShardPool;
+use super::probs::ProbVector;
+use super::SparseGrad;
+use crate::coding::{self, WireCodec};
+use crate::rngkit::RandArray;
+
+/// One (layer, chunk) work item of the batched sampling pass.
+#[derive(Clone, Copy, Debug)]
+struct ChunkMeta {
+    /// Which layer this chunk belongs to.
+    layer: usize,
+    /// Chunk bounds in layer-local coordinates (so survivor indices match
+    /// the per-layer path exactly).
+    lo: usize,
+    hi: usize,
+    /// The layer's offset into the concatenated probability/uniform arena.
+    goff: usize,
+}
+
+/// Per-chunk output buffers, persistent across rounds (mirrors the
+/// single-tensor engine's shard buffers).
+#[derive(Debug, Default)]
+struct ShardBuf {
+    exact: Vec<(u32, f32)>,
+    shared: Vec<(u32, bool)>,
+}
+
+/// Reusable batched engine: a [`CompressEngine`] (solver + per-layer
+/// scratch) plus concatenated probability/uniform arenas sized for the
+/// whole layer list. One per worker; `Send` so coordinator threads can own
+/// one.
+#[derive(Debug)]
+pub struct BatchCompressEngine {
+    engine: CompressEngine,
+    /// Concatenated probability vectors, one segment per layer.
+    p_all: Vec<f32>,
+    /// Concatenated pre-assigned uniforms, one segment per layer.
+    u_all: Vec<f32>,
+    /// The (layer, chunk) plan of the current call.
+    chunk_meta: Vec<ChunkMeta>,
+    /// Per-chunk output buffers for the pooled path.
+    shards: Vec<ShardBuf>,
+    /// Persistent worker threads, created lazily on the first pooled call.
+    pool: Option<ShardPool>,
+}
+
+impl BatchCompressEngine {
+    /// Batched engine running Algorithm 3 (greedy) per layer.
+    pub fn greedy(rho: f32, iters: usize) -> Self {
+        Self::new(EngineMode::Greedy { rho, iters })
+    }
+
+    /// Batched engine running Algorithm 2 (closed form) per layer.
+    pub fn closed_form(eps: f32) -> Self {
+        Self::new(EngineMode::ClosedForm { eps })
+    }
+
+    pub fn new(mode: EngineMode) -> Self {
+        Self {
+            engine: CompressEngine::new(mode),
+            p_all: Vec::new(),
+            u_all: Vec::new(),
+            chunk_meta: Vec::new(),
+            shards: Vec::new(),
+            pool: None,
+        }
+    }
+
+    /// Override the sharding geometry (shared with the inner single-tensor
+    /// engine; `max_threads = 1` pins both to the sequential path).
+    pub fn with_sharding(
+        mut self,
+        shard_len: usize,
+        parallel_min_d: usize,
+        max_threads: usize,
+    ) -> Self {
+        self.engine = self.engine.with_sharding(shard_len, parallel_min_d, max_threads);
+        self.pool = None;
+        self
+    }
+
+    /// The inner single-tensor engine (single-layer compress, probability
+    /// solves, scratch reservation).
+    pub fn engine(&mut self) -> &mut CompressEngine {
+        &mut self.engine
+    }
+
+    /// Fused per-layer solve → batched sampling into the caller's reused
+    /// [`SparseGrad`] slots (`outs[ℓ]` receives layer `ℓ`). Appends one
+    /// [`ProbVector`] per layer to `pvs` (cleared first).
+    ///
+    /// Draw convention: identical to calling
+    /// [`CompressEngine::compress_sparse_into`] once per layer in order —
+    /// `d_ℓ` uniforms plus one spacer per non-empty layer — which is what
+    /// makes the batched and per-layer paths bitwise interchangeable.
+    pub fn compress_batch_sparse_into(
+        &mut self,
+        layers: &[&[f32]],
+        rand: &mut RandArray,
+        outs: &mut [&mut SparseGrad],
+        pvs: &mut Vec<ProbVector>,
+    ) {
+        assert_eq!(layers.len(), outs.len(), "one output slot per layer");
+        pvs.clear();
+        let total: usize = layers.iter().map(|g| g.len()).sum();
+        if self.p_all.len() < total {
+            self.p_all.resize(total, 0.0);
+        }
+        if self.u_all.len() < total {
+            self.u_all.resize(total, 0.0);
+        }
+
+        // Phase 1 — per-layer solves into the shared arena, consuming the
+        // uniform stream exactly like the per-layer path.
+        let mut off = 0usize;
+        for (g, out) in layers.iter().zip(outs.iter_mut()) {
+            let d = g.len();
+            let pv = self.engine.probs(g);
+            out.reset(d);
+            out.shared_mag = pv.inv_lambda;
+            pvs.push(pv);
+            if d > 0 {
+                self.p_all[off..off + d].copy_from_slice(&self.engine.probabilities()[..d]);
+                rand.fill(&mut self.u_all[off..off + d]);
+                // Same spacer draw as the single-tensor engine (stride
+                // d + 1 through the cyclic array).
+                let _ = rand.next();
+            }
+            off += d;
+        }
+
+        // Phase 2 — one sampling pass over every layer's chunks.
+        let (shard_len, parallel_min_d, max_threads) = self.engine.geometry();
+        self.chunk_meta.clear();
+        let mut goff = 0usize;
+        for (l, g) in layers.iter().enumerate() {
+            let d = g.len();
+            let mut lo = 0usize;
+            while lo < d {
+                let hi = (lo + shard_len).min(d);
+                self.chunk_meta.push(ChunkMeta { layer: l, lo, hi, goff });
+                lo = hi;
+            }
+            goff += d;
+        }
+        let nchunks = self.chunk_meta.len();
+        let threads = max_threads.min(nchunks.max(1));
+        if total < parallel_min_d || threads <= 1 {
+            // Sequential: chunk order == concatenated coordinate order.
+            for meta in &self.chunk_meta {
+                let g = layers[meta.layer];
+                let a = meta.goff + meta.lo;
+                let b = meta.goff + meta.hi;
+                let out = &mut *outs[meta.layer];
+                sample_chunk(
+                    &g[meta.lo..meta.hi],
+                    &self.p_all[a..b],
+                    &self.u_all[a..b],
+                    meta.lo as u32,
+                    &mut out.exact,
+                    &mut out.shared,
+                );
+            }
+        } else {
+            // Pooled: ONE dispatch for the whole layer list. Chunks are
+            // pre-assigned to buffers by index, so scheduling freedom
+            // cannot affect any output byte; concatenation below runs in
+            // (layer, chunk) order, reproducing the sequential output.
+            if self.shards.len() < nchunks {
+                self.shards.resize_with(nchunks, ShardBuf::default);
+            }
+            let pool = self.pool.get_or_insert_with(|| ShardPool::new(max_threads));
+            let per = nchunks.div_ceil(threads);
+            let p_all = &self.p_all;
+            let u_all = &self.u_all;
+            let metas = &self.chunk_meta;
+            let shards = &mut self.shards[..nchunks];
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(nchunks.div_ceil(per));
+            for (group, metas_group) in shards.chunks_mut(per).zip(metas.chunks(per)) {
+                jobs.push(Box::new(move || {
+                    for (sh, meta) in group.iter_mut().zip(metas_group) {
+                        sh.exact.clear();
+                        sh.shared.clear();
+                        let g = layers[meta.layer];
+                        let a = meta.goff + meta.lo;
+                        let b = meta.goff + meta.hi;
+                        sample_chunk(
+                            &g[meta.lo..meta.hi],
+                            &p_all[a..b],
+                            &u_all[a..b],
+                            meta.lo as u32,
+                            &mut sh.exact,
+                            &mut sh.shared,
+                        );
+                    }
+                }));
+            }
+            pool.run(jobs);
+            for (sh, meta) in self.shards[..nchunks].iter().zip(self.chunk_meta.iter()) {
+                let out = &mut *outs[meta.layer];
+                out.exact.extend_from_slice(&sh.exact);
+                out.shared.extend_from_slice(&sh.shared);
+            }
+        }
+    }
+
+    /// The fully fused batched pass: per-layer solves → one sampling
+    /// dispatch → one `WireBatch` encode, all into caller-held reusable
+    /// buffers (`outs` is resized to the layer count; `wire` receives the
+    /// encoded batch). No intermediate per-layer message is materialized
+    /// between the sampler and the encoder.
+    pub fn compress_batch_into(
+        &mut self,
+        layers: &[&[f32]],
+        codec: WireCodec,
+        rand: &mut RandArray,
+        outs: &mut Vec<SparseGrad>,
+        wire: &mut Vec<u8>,
+        pvs: &mut Vec<ProbVector>,
+    ) {
+        if outs.len() < layers.len() {
+            outs.resize_with(layers.len(), || SparseGrad::empty(0));
+        }
+        outs.truncate(layers.len());
+        {
+            let mut slots: Vec<&mut SparseGrad> = outs.iter_mut().collect();
+            self.compress_batch_sparse_into(layers, rand, &mut slots, pvs);
+        }
+        let refs: Vec<&SparseGrad> = outs.iter().collect();
+        coding::encode_batch(&refs, codec, wire);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsify::CompressEngine;
+
+    fn layer_list(dims: &[usize], seed: u64) -> Vec<Vec<f32>> {
+        dims.iter()
+            .enumerate()
+            .map(|(i, &d)| crate::benchkit::skewed_gradient(d, seed + i as u64, 0.1))
+            .collect()
+    }
+
+    fn run_per_layer(
+        mode: EngineMode,
+        layers: &[Vec<f32>],
+        seed: u64,
+    ) -> (Vec<SparseGrad>, Vec<ProbVector>) {
+        // The reference path: a fresh single-tensor engine per layer (as
+        // the per-layer cluster keeps one compressor per layer), one
+        // shared RandArray consumed in layer order.
+        let mut rand = RandArray::from_seed(seed, 1 << 18);
+        let mut outs = Vec::new();
+        let mut pvs = Vec::new();
+        for g in layers {
+            let mut engine = CompressEngine::new(mode).with_sharding(1 << 10, usize::MAX, 1);
+            let mut sg = SparseGrad::empty(0);
+            pvs.push(engine.compress_sparse_into(g, &mut rand, &mut sg));
+            outs.push(sg);
+        }
+        (outs, pvs)
+    }
+
+    #[test]
+    fn batched_is_bitwise_identical_to_per_layer() {
+        let dims = [5000usize, 0, 12_288, 700, 16_384];
+        let layers = layer_list(&dims, 11);
+        let refs: Vec<&[f32]> = layers.iter().map(|g| g.as_slice()).collect();
+        for mode in [
+            EngineMode::Greedy { rho: 0.05, iters: 2 },
+            EngineMode::ClosedForm { eps: 0.5 },
+        ] {
+            let (want, want_pvs) = run_per_layer(mode, &layers, 0xBA7C);
+            // Sequential batched path.
+            let mut seq = BatchCompressEngine::new(mode).with_sharding(1 << 10, usize::MAX, 1);
+            let mut rand = RandArray::from_seed(0xBA7C, 1 << 18);
+            let mut outs = Vec::new();
+            let mut pvs = Vec::new();
+            let mut wire = Vec::new();
+            seq.compress_batch_into(
+                &refs,
+                WireCodec::Raw,
+                &mut rand,
+                &mut outs,
+                &mut wire,
+                &mut pvs,
+            );
+            assert_eq!(outs, want, "sequential batched path drifted ({mode:?})");
+            // Pooled batched path: small chunks, several threads, forced on.
+            let mut par = BatchCompressEngine::new(mode).with_sharding(1 << 10, 1, 4);
+            let mut rand = RandArray::from_seed(0xBA7C, 1 << 18);
+            let mut outs_p = Vec::new();
+            let mut pvs_p = Vec::new();
+            let mut wire_p = Vec::new();
+            par.compress_batch_into(
+                &refs,
+                WireCodec::Raw,
+                &mut rand,
+                &mut outs_p,
+                &mut wire_p,
+                &mut pvs_p,
+            );
+            assert_eq!(outs_p, want, "pooled batched path drifted ({mode:?})");
+            assert_eq!(wire, wire_p, "wire bytes differ between pooled and sequential");
+            for (a, b) in pvs.iter().zip(&want_pvs) {
+                assert_eq!(a.num_exact, b.num_exact);
+                assert_eq!(a.inv_lambda, b.inv_lambda);
+            }
+            // And the batch decodes back to the same layers.
+            let mut back = Vec::new();
+            let mut lens = Vec::new();
+            coding::decode_batch_into(&wire, &mut back, &mut lens).unwrap();
+            assert_eq!(back, want);
+        }
+    }
+
+    #[test]
+    fn fused_entropy_batch_matches_separate_encode() {
+        let dims = [1 << 14, 1 << 13];
+        let layers = layer_list(&dims, 23);
+        let refs: Vec<&[f32]> = layers.iter().map(|g| g.as_slice()).collect();
+        let mut engine = BatchCompressEngine::greedy(0.02, 2).with_sharding(1 << 12, usize::MAX, 1);
+        let mut rand = RandArray::from_seed(99, 1 << 18);
+        let mut outs = Vec::new();
+        let mut pvs = Vec::new();
+        let mut wire = Vec::new();
+        engine.compress_batch_into(
+            &refs,
+            WireCodec::Entropy,
+            &mut rand,
+            &mut outs,
+            &mut wire,
+            &mut pvs,
+        );
+        let sg_refs: Vec<&SparseGrad> = outs.iter().collect();
+        let mut expect = Vec::new();
+        coding::encode_batch(&sg_refs, WireCodec::Entropy, &mut expect);
+        assert_eq!(wire, expect);
+        assert!(wire.len() < dims.iter().sum::<usize>()); // sanity: sparse
+    }
+
+    #[test]
+    fn empty_layer_list_is_a_valid_batch() {
+        let mut engine = BatchCompressEngine::greedy(0.1, 2);
+        let mut rand = RandArray::from_seed(1, 1 << 10);
+        let mut outs = vec![SparseGrad::empty(5)]; // stale slot must be dropped
+        let mut pvs = Vec::new();
+        let mut wire = Vec::new();
+        engine.compress_batch_into(&[], WireCodec::Raw, &mut rand, &mut outs, &mut wire, &mut pvs);
+        assert!(outs.is_empty());
+        assert!(pvs.is_empty());
+        let mut back = Vec::new();
+        let mut lens = Vec::new();
+        coding::decode_batch_into(&wire, &mut back, &mut lens).unwrap();
+        assert!(back.is_empty());
+    }
+}

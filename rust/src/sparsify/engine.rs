@@ -33,7 +33,7 @@
 use super::pool::ShardPool;
 use super::probs::{closed_form_probs_with, greedy_probs, ProbVector, SelectScratch};
 use super::{hybrid_ideal_bits, CompressStats, SparseGrad};
-use crate::coding::{self, Encoding};
+use crate::coding::{self, Encoding, WireCodec};
 use crate::rngkit::RandArray;
 
 /// Default chunk size: 16 Ki coordinates ≈ 192 KiB of working set
@@ -263,7 +263,9 @@ impl CompressEngine {
 
     /// The full fused pass: probabilities → sampling → wire encoding, all
     /// into caller-held reusable buffers. Returns the probability scalars
-    /// and the wire encoding chosen.
+    /// and the wire encoding chosen. Encodes under [`WireCodec::Raw`]; use
+    /// [`Self::compress_into_with`] to fuse the entropy (Rice) encoder into
+    /// the same pass.
     pub fn compress_into(
         &mut self,
         g: &[f32],
@@ -271,9 +273,31 @@ impl CompressEngine {
         out: &mut SparseGrad,
         wire: &mut Vec<u8>,
     ) -> (ProbVector, Encoding) {
+        self.compress_into_with(g, WireCodec::Raw, rand, out, wire)
+    }
+
+    /// [`Self::compress_into`] under an explicit [`WireCodec`]: the fused
+    /// probabilities → sampling → wire pass may emit the entropy-coded
+    /// encodings directly, without materializing any intermediate message
+    /// representation between the sampler and the encoder.
+    pub fn compress_into_with(
+        &mut self,
+        g: &[f32],
+        codec: WireCodec,
+        rand: &mut RandArray,
+        out: &mut SparseGrad,
+        wire: &mut Vec<u8>,
+    ) -> (ProbVector, Encoding) {
         let pv = self.compress_sparse_into(g, rand, out);
-        let enc = coding::encode(out, wire);
+        let enc = coding::encode_with(out, codec, wire);
         (pv, enc)
+    }
+
+    /// The sharding geometry `(shard_len, parallel_min_d, max_threads)` —
+    /// shared with [`super::batch::BatchCompressEngine`] so the batched
+    /// path chunks exactly like the single-tensor path.
+    pub(crate) fn geometry(&self) -> (usize, usize, usize) {
+        (self.shard_len, self.parallel_min_d, self.max_threads)
     }
 
     fn compute_probs(&mut self, g: &[f32]) -> ProbVector {
@@ -288,8 +312,9 @@ impl CompressEngine {
 
 /// The per-chunk sampling kernel. `base` is the chunk's first coordinate
 /// index; `u[i]` is the pre-assigned uniform for coordinate `base + i`.
+/// Shared with the batched engine, whose chunks are layer-local.
 #[inline]
-fn sample_chunk(
+pub(crate) fn sample_chunk(
     g: &[f32],
     p: &[f32],
     u: &[f32],

@@ -19,18 +19,23 @@
 //! * [`engine`] — the allocation-free [`CompressEngine`] scratch arena
 //!   fusing probabilities → sampling → wire encoding, with sharded parallel
 //!   compression for large gradients;
+//! * [`batch`] — the batched multi-layer [`BatchCompressEngine`]: one
+//!   invocation (and one shard-pool dispatch) for a whole model's layer
+//!   list, feeding the `WireBatch` wire format;
 //! * [`Compressor`] implementations for the paper's method (GSpar) and every
 //!   baseline in the evaluation: uniform sampling (UniSp), QSGD, TernGrad,
 //!   deterministic top-k, and 1-bit SGD with error feedback — all reusing
 //!   caller-held message buffers via [`Compressor::compress_into`].
 
 pub mod baselines;
+pub mod batch;
 pub mod engine;
 pub mod pool;
 pub mod probs;
 pub mod sample;
 
 pub use baselines::{OneBitSgd, QsgdCompressor, TernGradCompressor, TopKCompressor, UniformSampler};
+pub use batch::BatchCompressEngine;
 pub use engine::{CompressEngine, EngineMode};
 pub use pool::ShardPool;
 pub use probs::{
@@ -266,6 +271,31 @@ pub trait Compressor: Send {
         (out, stats)
     }
 
+    /// Compress a whole model's layer list in one call: `out[ℓ]` receives
+    /// layer `ℓ`'s message (slots reused; `out` is resized to the layer
+    /// count) and `stats` one entry per layer. The default implementation
+    /// loops [`Compressor::compress_into`] over the layers on this one
+    /// instance — correct for stateless compressors, and exactly what the
+    /// per-layer wire path does; GSpar overrides it with the fused
+    /// [`BatchCompressEngine`] (shared uniform stream, per-layer solves,
+    /// one shard-pool dispatch), producing bitwise-identical messages.
+    fn compress_batch_into(
+        &mut self,
+        layers: &[&[f32]],
+        rand: &mut RandArray,
+        out: &mut Vec<Compressed>,
+        stats: &mut Vec<CompressStats>,
+    ) {
+        if out.len() < layers.len() {
+            out.resize_with(layers.len(), || Compressed::Sparse(SparseGrad::empty(0)));
+        }
+        out.truncate(layers.len());
+        stats.clear();
+        for (g, slot) in layers.iter().zip(out.iter_mut()) {
+            stats.push(self.compress_into(g, rand, slot));
+        }
+    }
+
     /// Human-readable name for figure labels.
     fn name(&self) -> &'static str;
 }
@@ -297,25 +327,31 @@ pub fn index_bits(d: usize) -> u64 {
 /// The paper's GSpar compressor: greedy probabilities (Algorithm 3, the
 /// variant used in all experiments) or closed-form (Algorithm 2, via the
 /// selection-based solver), then fused Bernoulli sampling and hybrid-coding
-/// cost accounting — a thin [`Compressor`] facade over [`CompressEngine`].
+/// cost accounting — a thin [`Compressor`] facade over
+/// [`BatchCompressEngine`] (whose inner [`CompressEngine`] serves the
+/// single-tensor path).
 pub struct GSparCompressor {
     /// Use Algorithm 2 (exact) instead of Algorithm 3 (greedy).
     pub exact: bool,
-    engine: CompressEngine,
+    batch: BatchCompressEngine,
+    /// Per-call probability-scalar scratch for the batched path.
+    pv_scratch: Vec<ProbVector>,
 }
 
 impl GSparCompressor {
     pub fn greedy(rho: f32, iters: usize) -> Self {
         Self {
             exact: false,
-            engine: Self::worker_engine(CompressEngine::greedy(rho, iters)),
+            batch: Self::worker_engine(BatchCompressEngine::greedy(rho, iters)),
+            pv_scratch: Vec::new(),
         }
     }
 
     pub fn closed_form(eps: f32) -> Self {
         Self {
             exact: true,
-            engine: Self::worker_engine(CompressEngine::closed_form(eps)),
+            batch: Self::worker_engine(BatchCompressEngine::closed_form(eps)),
+            pv_scratch: Vec::new(),
         }
     }
 
@@ -325,7 +361,7 @@ impl GSparCompressor {
     /// threads per round and oversubscribe the box. Callers that own the
     /// whole core budget (benches, single-stream pipelines) either use
     /// [`CompressEngine`] directly or opt back in via [`Self::engine`].
-    fn worker_engine(engine: CompressEngine) -> CompressEngine {
+    fn worker_engine(engine: BatchCompressEngine) -> BatchCompressEngine {
         engine.with_sharding(
             engine::DEFAULT_SHARD_LEN,
             engine::DEFAULT_PARALLEL_MIN_D,
@@ -333,15 +369,22 @@ impl GSparCompressor {
         )
     }
 
-    /// The scratch-arena engine backing this compressor.
+    /// The scratch-arena engine backing this compressor's single-tensor
+    /// path.
     pub fn engine(&mut self) -> &mut CompressEngine {
-        &mut self.engine
+        self.batch.engine()
+    }
+
+    /// The batched multi-layer engine backing
+    /// [`Compressor::compress_batch_into`].
+    pub fn batch_engine(&mut self) -> &mut BatchCompressEngine {
+        &mut self.batch
     }
 
     /// Compute the probability vector only (used by tests and the fused
     /// L1-kernel cross-checks).
     pub fn probabilities(&mut self, g: &[f32]) -> ProbVector {
-        self.engine.probs(g)
+        self.batch.engine().probs(g)
     }
 }
 
@@ -353,8 +396,34 @@ impl Compressor for GSparCompressor {
         out: &mut Compressed,
     ) -> CompressStats {
         let sg = sparse_slot(out, g.len());
-        let pv = self.engine.compress_sparse_into(g, rand, sg);
+        let pv = self.batch.engine().compress_sparse_into(g, rand, sg);
         CompressEngine::stats_for(&pv, g.len())
+    }
+
+    fn compress_batch_into(
+        &mut self,
+        layers: &[&[f32]],
+        rand: &mut RandArray,
+        out: &mut Vec<Compressed>,
+        stats: &mut Vec<CompressStats>,
+    ) {
+        if out.len() < layers.len() {
+            out.resize_with(layers.len(), || Compressed::Sparse(SparseGrad::empty(0)));
+        }
+        out.truncate(layers.len());
+        {
+            let mut slots: Vec<&mut SparseGrad> = out
+                .iter_mut()
+                .zip(layers.iter())
+                .map(|(slot, g)| sparse_slot(slot, g.len()))
+                .collect();
+            self.batch
+                .compress_batch_sparse_into(layers, rand, &mut slots, &mut self.pv_scratch);
+        }
+        stats.clear();
+        for (pv, g) in self.pv_scratch.iter().zip(layers.iter()) {
+            stats.push(CompressEngine::stats_for(pv, g.len()));
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -384,17 +453,19 @@ pub fn dense_ideal_bits(d: usize) -> u64 {
 ///
 /// `rho` is the target density (GSpar/UniSp/TopK), `eps` the variance budget
 /// (GSpar-exact), `qsgd_bits` the QSGD quantization width.
+///
+/// Deprecated: the three positional `f32`/`u32` arguments are unlabeled and
+/// most of them are ignored by most methods — use the typed
+/// [`crate::api::MethodSpec`] instead, whose variants carry exactly the
+/// parameters their method consumes. Equivalence between the two paths is
+/// pinned by a test in `api`.
+#[deprecated(
+    since = "0.2.0",
+    note = "use gsparse::api::MethodSpec (e.g. `MethodSpec::GSpar { rho, iters: 2 }.build()` \
+            or `MethodSpec::from_parts(method, rho, eps, qsgd_bits).build()`)"
+)]
 pub fn build(method: Method, rho: f32, eps: f32, qsgd_bits: u32) -> Box<dyn Compressor> {
-    match method {
-        Method::Dense => Box::new(DenseCompressor),
-        Method::GSpar => Box::new(GSparCompressor::greedy(rho, 2)),
-        Method::GSparExact => Box::new(GSparCompressor::closed_form(eps)),
-        Method::UniSp => Box::new(UniformSampler::new(rho)),
-        Method::Qsgd => Box::new(QsgdCompressor::new(qsgd_bits)),
-        Method::TernGrad => Box::new(TernGradCompressor::new()),
-        Method::TopK => Box::new(TopKCompressor::new(rho)),
-        Method::OneBit => Box::new(OneBitSgd::new()),
-    }
+    crate::api::MethodSpec::from_parts(method, rho, eps, qsgd_bits).build()
 }
 
 /// Identity compressor (the paper's dense "baseline").
@@ -487,11 +558,54 @@ mod tests {
         let mut ra = RandArray::from_seed(2, 4096);
         let g: Vec<f32> = (0..128).map(|i| ((i * 37 % 17) as f32 - 8.0) / 8.0).collect();
         for &m in Method::all() {
-            let mut c = build(m, 0.2, 0.5, 4);
+            let mut c = crate::api::MethodSpec::from_parts(m, 0.2, 0.5, 4).build();
             let (out, stats) = c.compress(&g, &mut ra);
             assert_eq!(out.dim(), g.len(), "{m}");
             assert!(stats.ideal_bits > 0, "{m}");
             assert!(!c.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn default_batch_impl_equals_per_layer_loop() {
+        // The trait's default `compress_batch_into` must agree with looping
+        // `compress_into` for every method (same draws, same messages) —
+        // and GSpar's fused override must agree with the default.
+        // (No zero-size layer here: top-k is undefined at d = 0; the
+        // GSpar batch tests cover empty layers.)
+        let dims = [96usize, 64, 200];
+        let layers: Vec<Vec<f32>> = dims
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| {
+                (0..d)
+                    .map(|j| (((i * 131 + j * 37) % 23) as f32 - 11.0) / 9.0)
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = layers.iter().map(|g| g.as_slice()).collect();
+        for &m in Method::all() {
+            let spec = crate::api::MethodSpec::from_parts(m, 0.3, 0.5, 4);
+            let mut batched = spec.build();
+            let mut looped = spec.build();
+            let mut rand_b = RandArray::from_seed(777, 1 << 14);
+            let mut rand_l = rand_b.clone();
+            let mut out_b: Vec<Compressed> = Vec::new();
+            let mut stats_b: Vec<CompressStats> = Vec::new();
+            batched.compress_batch_into(&refs, &mut rand_b, &mut out_b, &mut stats_b);
+            assert_eq!(out_b.len(), layers.len(), "{m}");
+            assert_eq!(stats_b.len(), layers.len(), "{m}");
+            for (l, g) in refs.iter().enumerate() {
+                let mut slot = Compressed::Sparse(SparseGrad::empty(g.len()));
+                let stats = looped.compress_into(g, &mut rand_l, &mut slot);
+                assert_eq!(stats.expected_nnz, stats_b[l].expected_nnz, "{m} layer {l}");
+                assert_eq!(stats.ideal_bits, stats_b[l].ideal_bits, "{m} layer {l}");
+                assert_eq!(
+                    format!("{slot:?}"),
+                    format!("{:?}", out_b[l]),
+                    "{m} layer {l}: messages differ"
+                );
+            }
         }
     }
 }

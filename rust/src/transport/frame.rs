@@ -34,8 +34,16 @@ pub const FRAME_OVERHEAD: usize = 4;
 pub const MAX_FRAME_LEN: usize = 1 << 28; // 256 MiB
 
 /// Transport protocol version carried in every handshake. Version 2 added
-/// the negotiated wire-codec byte to the hello.
-pub const TRANSPORT_VERSION: u8 = 2;
+/// the negotiated wire-codec byte to the hello; version 3 added the
+/// batched `GRAD_BATCH` frame (same 10-byte hello layout, so v2 and v3
+/// peers interoperate — a v3 side simply never sends batch frames to a
+/// peer whose hello announced v2).
+pub const TRANSPORT_VERSION: u8 = 3;
+
+/// Oldest hello this side still accepts. Version-2 peers speak the same
+/// frame grammar minus `GRAD_BATCH`, so they remain first-class citizens;
+/// anything older predates the codec negotiation and is refused.
+pub const MIN_TRANSPORT_VERSION: u8 = 2;
 
 /// Handshake magic (first frame on every connection).
 pub const HELLO_MAGIC: &[u8; 4] = b"GSTP";
@@ -48,6 +56,7 @@ const TAG_WEIGHTS: u8 = 0x11;
 const TAG_GRAD: u8 = 0x12;
 const TAG_SHUTDOWN: u8 = 0x13;
 const TAG_CONFIG: u8 = 0x14;
+const TAG_GRAD_BATCH: u8 = 0x15;
 
 /// The handshake sent by the connecting side as its first frame. Besides
 /// identifying the worker it pins the protocol version *and* the wire codec
@@ -74,6 +83,24 @@ impl Hello {
             worker_id,
             codec: codec.index() as u8,
         }
+    }
+
+    /// A hello announcing an explicit (older) protocol version — how a
+    /// session configured for v2 compatibility connects, and how the
+    /// fallback tests impersonate a v2 peer. Clamped to the supported
+    /// window so an out-of-range request cannot produce an undecodable
+    /// hello.
+    pub fn with_version(worker_id: u32, codec: crate::coding::WireCodec, version: u8) -> Self {
+        Self {
+            version: version.clamp(MIN_TRANSPORT_VERSION, TRANSPORT_VERSION),
+            worker_id,
+            codec: codec.index() as u8,
+        }
+    }
+
+    /// Whether this peer may be sent `GRAD_BATCH` frames (hello ≥ v3).
+    pub fn supports_batch(&self) -> bool {
+        self.version >= 3
     }
 
     /// The decoded codec (`decode` validated the byte, so this never fails
@@ -104,7 +131,7 @@ impl Hello {
             return Err(TransportError::BadHandshake("bad magic"));
         }
         let version = buf[4];
-        if version != TRANSPORT_VERSION {
+        if !(MIN_TRANSPORT_VERSION..=TRANSPORT_VERSION).contains(&version) {
             return Err(TransportError::VersionMismatch {
                 ours: TRANSPORT_VERSION,
                 theirs: version,
@@ -150,6 +177,10 @@ pub enum MsgView<'a> {
     Pull,
     Weights { version: u64, w_bytes: &'a [u8] },
     Grad { header: GradHeader, payload: &'a [u8] },
+    /// A whole model update in one frame: the header carries the
+    /// layer-summed statistics, the payload is a
+    /// [`crate::coding::batch`] `WireBatch` (v3 links only).
+    GradBatch { header: GradHeader, payload: &'a [u8] },
     Shutdown,
     Config { bytes: &'a [u8] },
 }
@@ -173,9 +204,22 @@ pub fn encode_weights(out: &mut Vec<u8>, version: u64, w: &[f32]) {
 
 /// Encode a `GRAD` message into `out` (cleared first).
 pub fn encode_grad(out: &mut Vec<u8>, header: &GradHeader, payload: &[u8]) {
+    encode_grad_tagged(out, TAG_GRAD, header, payload);
+}
+
+/// Encode a `GRAD_BATCH` message into `out` (cleared first): the same
+/// header layout as `GRAD` with layer-summed statistics, followed by a
+/// `WireBatch` payload. Batches are always sparse wire bytes, so
+/// `header.kind` must be 0.
+pub fn encode_grad_batch(out: &mut Vec<u8>, header: &GradHeader, payload: &[u8]) {
+    debug_assert_eq!(header.kind, 0, "batch frames carry sparse wire bytes");
+    encode_grad_tagged(out, TAG_GRAD_BATCH, header, payload);
+}
+
+fn encode_grad_tagged(out: &mut Vec<u8>, tag: u8, header: &GradHeader, payload: &[u8]) {
     out.clear();
     out.reserve(GRAD_HEADER_LEN + payload.len());
-    out.push(TAG_GRAD);
+    out.push(tag);
     out.extend_from_slice(&header.based_on.to_le_bytes());
     out.extend_from_slice(&header.g_norm_sq.to_le_bytes());
     out.extend_from_slice(&header.q_norm_sq.to_le_bytes());
@@ -220,25 +264,28 @@ pub fn decode(buf: &[u8]) -> Result<MsgView<'_>, TransportError> {
                 w_bytes: &body[8..],
             })
         }
-        TAG_GRAD => {
+        TAG_GRAD | TAG_GRAD_BATCH => {
             if buf.len() < GRAD_HEADER_LEN {
                 return Err(TransportError::UnexpectedMessage("grad header truncated"));
             }
             let kind = buf[GRAD_HEADER_LEN - 1];
-            if kind > 1 {
+            if kind > 1 || (tag == TAG_GRAD_BATCH && kind != 0) {
                 return Err(TransportError::UnexpectedMessage("grad kind"));
             }
-            Ok(MsgView::Grad {
-                header: GradHeader {
-                    based_on: u64::from_le_bytes(buf[1..9].try_into().unwrap()),
-                    g_norm_sq: f64::from_le_bytes(buf[9..17].try_into().unwrap()),
-                    q_norm_sq: f64::from_le_bytes(buf[17..25].try_into().unwrap()),
-                    expected_nnz: f64::from_le_bytes(buf[25..33].try_into().unwrap()),
-                    ideal_bits: u64::from_le_bytes(buf[33..41].try_into().unwrap()),
-                    kind,
-                },
-                payload: &buf[GRAD_HEADER_LEN..],
-            })
+            let header = GradHeader {
+                based_on: u64::from_le_bytes(buf[1..9].try_into().unwrap()),
+                g_norm_sq: f64::from_le_bytes(buf[9..17].try_into().unwrap()),
+                q_norm_sq: f64::from_le_bytes(buf[17..25].try_into().unwrap()),
+                expected_nnz: f64::from_le_bytes(buf[25..33].try_into().unwrap()),
+                ideal_bits: u64::from_le_bytes(buf[33..41].try_into().unwrap()),
+                kind,
+            };
+            let payload = &buf[GRAD_HEADER_LEN..];
+            if tag == TAG_GRAD {
+                Ok(MsgView::Grad { header, payload })
+            } else {
+                Ok(MsgView::GradBatch { header, payload })
+            }
         }
         TAG_SHUTDOWN => {
             if !body.is_empty() {
@@ -319,7 +366,31 @@ mod tests {
         assert_eq!(v1.len(), 9);
         assert!(matches!(
             Hello::decode(&v1),
-            Err(TransportError::VersionMismatch { ours: 2, theirs: 1 })
+            Err(TransportError::VersionMismatch { ours: 3, theirs: 1 })
+        ));
+    }
+
+    #[test]
+    fn v2_hellos_still_decode_and_disable_batching() {
+        // The v2↔v3 compatibility window: a version-2 hello (same 10-byte
+        // layout) is accepted, reports itself batch-incapable, and a
+        // version beyond ours is still refused.
+        let v2 = Hello::with_version(5, crate::coding::WireCodec::Entropy, 2);
+        assert_eq!(v2.version, 2);
+        let mut buf = Vec::new();
+        v2.encode(&mut buf);
+        let back = Hello::decode(&buf).unwrap();
+        assert_eq!(back, v2);
+        assert!(!back.supports_batch());
+        assert!(Hello::new(0).supports_batch());
+        // with_version clamps into the supported window.
+        assert_eq!(Hello::with_version(0, crate::coding::WireCodec::Raw, 0).version, 2);
+        assert_eq!(Hello::with_version(0, crate::coding::WireCodec::Raw, 9).version, 3);
+        let mut future = buf.clone();
+        future[4] = 4;
+        assert!(matches!(
+            Hello::decode(&future),
+            Err(TransportError::VersionMismatch { ours: 3, theirs: 4 })
         ));
     }
 
@@ -363,6 +434,33 @@ mod tests {
 
         encode_config(&mut buf, b"cfg");
         assert_eq!(decode(&buf).unwrap(), MsgView::Config { bytes: b"cfg" });
+    }
+
+    #[test]
+    fn grad_batch_roundtrips_and_rejects_dense_kind() {
+        let header = GradHeader {
+            based_on: 3,
+            g_norm_sq: 1.5,
+            q_norm_sq: 2.0,
+            expected_nnz: 9.0,
+            ideal_bits: 4242,
+            kind: 0,
+        };
+        let mut buf = Vec::new();
+        encode_grad_batch(&mut buf, &header, b"wire-batch-bytes");
+        match decode(&buf).unwrap() {
+            MsgView::GradBatch { header: h, payload } => {
+                assert_eq!(h, header);
+                assert_eq!(payload, b"wire-batch-bytes");
+            }
+            other => panic!("{other:?}"),
+        }
+        // A batch frame claiming a dense payload is malformed.
+        let kind_off = GRAD_HEADER_LEN - 1;
+        let mut bad = buf.clone();
+        bad[kind_off] = 1;
+        assert!(decode(&bad).is_err());
+        assert!(decode(&buf[..GRAD_HEADER_LEN - 1]).is_err());
     }
 
     #[test]

@@ -25,7 +25,10 @@ pub mod frame;
 mod inproc;
 mod tcp;
 
-pub use frame::{Hello, MsgView, FRAME_OVERHEAD, HELLO_LEN, MAX_FRAME_LEN, TRANSPORT_VERSION};
+pub use frame::{
+    Hello, MsgView, FRAME_OVERHEAD, HELLO_LEN, MAX_FRAME_LEN, MIN_TRANSPORT_VERSION,
+    TRANSPORT_VERSION,
+};
 pub use inproc::InProcTransport;
 pub use tcp::TcpTransport;
 
@@ -203,7 +206,22 @@ pub fn accept_n(
     n: usize,
     codec: crate::coding::WireCodec,
 ) -> Result<Vec<Box<dyn Connection>>, TransportError> {
-    let mut slots: Vec<Option<Box<dyn Connection>>> = (0..n).map(|_| None).collect();
+    Ok(accept_n_hello(listener, n, codec)?
+        .into_iter()
+        .map(|(conn, _)| conn)
+        .collect())
+}
+
+/// [`accept_n`], but keeping each peer's validated [`Hello`] next to its
+/// connection — callers that negotiate per-link capabilities (e.g. whether
+/// a v2 peer may receive `GRAD_BATCH` frames) read the announced version
+/// from it.
+pub fn accept_n_hello(
+    listener: &mut dyn Listener,
+    n: usize,
+    codec: crate::coding::WireCodec,
+) -> Result<Vec<(Box<dyn Connection>, Hello)>, TransportError> {
+    let mut slots: Vec<Option<(Box<dyn Connection>, Hello)>> = (0..n).map(|_| None).collect();
     for _ in 0..n {
         let (conn, hello) = listener.accept()?;
         if hello.codec != codec.index() as u8 {
@@ -219,7 +237,7 @@ pub fn accept_n(
         if slots[wid].is_some() {
             return Err(TransportError::BadHandshake("duplicate worker id"));
         }
-        slots[wid] = Some(conn);
+        slots[wid] = Some((conn, hello));
     }
     Ok(slots
         .into_iter()

@@ -13,7 +13,7 @@ use gsparse::coding::{self, WireCodec, WireError};
 use gsparse::comm::{Aggregator, NetworkModel, ReduceAlgo};
 use gsparse::config::Method;
 use gsparse::rngkit::RandArray;
-use gsparse::sparsify::{self, Compressed, CompressEngine, SparseGrad};
+use gsparse::sparsify::{Compressed, CompressEngine, SparseGrad};
 
 #[global_allocator]
 static GLOBAL: CountingAllocator = CountingAllocator;
@@ -67,7 +67,7 @@ fn steady_state_compression_is_allocation_free() {
 
     // --- Every Compressor::compress_into implementation ----------------
     for &method in Method::all() {
-        let mut c = sparsify::build(method, 0.1, 0.5, 4);
+        let mut c = gsparse::api::MethodSpec::from_parts(method, 0.1, 0.5, 4).build();
         let mut msg = Compressed::Sparse(SparseGrad::empty(d));
         for _ in 0..8 {
             c.compress_into(&g, &mut rand, &mut msg); // warmup grows buffers

@@ -1,0 +1,216 @@
+//! Acceptance tests of the unified Session API + batched multi-layer
+//! pipeline (this PR's headline criteria):
+//!
+//! * for a ≥ 4-layer model at `d_total ≥ 2^18`, ρ = 0.01, the batched path
+//!   decodes **bitwise-identical** per-layer updates while shipping
+//!   **strictly fewer wire bytes** and **strictly fewer transport frames**
+//!   per round, under both codecs;
+//! * all four coordinators (sync, SSP parameter server, threaded cluster,
+//!   TCP dist runtime) run from one [`Session`];
+//! * the batched engine's messages equal the per-layer engine's messages
+//!   for the same RNG stream.
+
+use gsparse::api::{DistTask, MethodSpec, PsTask, Session, SyncTask};
+use gsparse::coding::WireCodec;
+use gsparse::model::ConvexModel;
+use gsparse::rngkit::RandArray;
+use gsparse::sparsify::{BatchCompressEngine, CompressEngine, SparseGrad};
+use gsparse::transport::InProcTransport;
+
+/// The headline criterion: ≥ 4 layers, `d_total = 2^18`, ρ = 0.01.
+#[test]
+fn batched_rounds_identical_updates_fewer_bytes_fewer_frames() {
+    let dims = [1usize << 15; 8]; // 8 layers, d_total = 2^18
+    assert!(dims.len() >= 4 && dims.iter().sum::<usize>() >= 1 << 18);
+    let workers = 2;
+    let grads: Vec<Vec<Vec<f32>>> = (0..workers)
+        .map(|w| {
+            dims.iter()
+                .enumerate()
+                .map(|(l, &d)| {
+                    gsparse::benchkit::skewed_gradient(d, (w * 17 + l) as u64, 0.1)
+                })
+                .collect()
+        })
+        .collect();
+
+    for codec in [WireCodec::Raw, WireCodec::Entropy] {
+        let run = |batch: bool| {
+            let mut cluster = Session::builder()
+                .method(MethodSpec::GSpar { rho: 0.01, iters: 2 })
+                .codec(codec)
+                .workers(workers)
+                .seed(2024)
+                .batch_layers(batch)
+                .build()
+                .cluster(&dims);
+            let upd = cluster.round(&grads);
+            (upd, cluster.ledger.clone(), cluster.frames_received())
+        };
+        let (per_layer, pl_ledger, pl_frames) = run(false);
+        let (batched, b_ledger, b_frames) = run(true);
+
+        // Bitwise-identical decoded per-layer updates.
+        for (l, (a, b)) in per_layer.iter().zip(&batched).enumerate() {
+            assert_eq!(a.grad, b.grad, "{codec}: layer {l} decoded update drifted");
+        }
+        // Strictly fewer wire bytes…
+        assert!(
+            b_ledger.wire_bytes < pl_ledger.wire_bytes,
+            "{codec}: batched wire {} !< per-layer {}",
+            b_ledger.wire_bytes,
+            pl_ledger.wire_bytes
+        );
+        // …and strictly fewer measured (framed) bytes…
+        assert!(
+            b_ledger.measured_bytes < pl_ledger.measured_bytes,
+            "{codec}: batched measured {} !< per-layer {}",
+            b_ledger.measured_bytes,
+            pl_ledger.measured_bytes
+        );
+        // …and strictly fewer transport frames per round: per-layer ships
+        // workers × L gradient frames, batched ships workers (handshakes
+        // are identical on both sides).
+        assert!(
+            b_frames < pl_frames,
+            "{codec}: batched frames {b_frames} !< per-layer {pl_frames}"
+        );
+        assert_eq!(b_frames, (workers * 2) as u64, "{codec}: hello + one batch frame");
+        assert_eq!(
+            pl_frames,
+            (workers * (1 + dims.len())) as u64,
+            "{codec}: hello + one frame per layer"
+        );
+    }
+}
+
+/// The engine-level half of the criterion: one fused batch invocation
+/// produces exactly the messages the per-layer engine produces.
+#[test]
+fn batch_engine_bitwise_matches_per_layer_engine_at_2e18() {
+    // Six uneven layers totalling exactly 2^18 coordinates.
+    let dims = [1usize << 16, 3 << 15, 1 << 15, 1 << 14, 1 << 14, 1 << 15];
+    assert_eq!(dims.iter().sum::<usize>(), 1 << 18);
+    let layers: Vec<Vec<f32>> =
+        dims.iter()
+            .enumerate()
+            .map(|(l, &d)| gsparse::benchkit::skewed_gradient(d, 7 + l as u64, 0.1))
+            .collect();
+    let refs: Vec<&[f32]> = layers.iter().map(|g| g.as_slice()).collect();
+
+    // Per-layer reference: fresh engine per layer, one shared uniform
+    // stream, layer order.
+    let mut rand = RandArray::from_seed(0xACCE97, 1 << 19);
+    let mut want = Vec::new();
+    for g in &layers {
+        let mut engine = CompressEngine::greedy(0.01, 2).with_sharding(1 << 14, usize::MAX, 1);
+        let mut sg = SparseGrad::empty(0);
+        engine.compress_sparse_into(g, &mut rand, &mut sg);
+        want.push(sg);
+    }
+
+    // Batched: same seed, one invocation, pooled path forced on.
+    let mut engine = BatchCompressEngine::greedy(0.01, 2).with_sharding(1 << 14, 1, 4);
+    let mut rand = RandArray::from_seed(0xACCE97, 1 << 19);
+    let (mut outs, mut pvs, mut wire) = (Vec::new(), Vec::new(), Vec::new());
+    engine.compress_batch_into(
+        &refs,
+        WireCodec::Entropy,
+        &mut rand,
+        &mut outs,
+        &mut wire,
+        &mut pvs,
+    );
+    assert_eq!(outs, want, "batched messages drifted from the per-layer engine");
+
+    // And the fused wire batch decodes back to the same messages while
+    // undercutting the per-layer encodings.
+    let mut back = Vec::new();
+    let mut sub_lens = Vec::new();
+    gsparse::coding::decode_batch_into(&wire, &mut back, &mut sub_lens).unwrap();
+    assert_eq!(back, want);
+    let singles: usize = want
+        .iter()
+        .map(|sg| gsparse::coding::encoded_len_with(sg, WireCodec::Entropy))
+        .sum();
+    assert!(
+        wire.len() < singles,
+        "batch {} !< per-layer encodings {singles}",
+        wire.len()
+    );
+}
+
+/// One `SessionBuilder` drives all four coordinators.
+#[test]
+fn one_session_runs_all_four_coordinators() {
+    let session = Session::builder()
+        .method(MethodSpec::GSpar { rho: 0.1, iters: 2 })
+        .codec(WireCodec::from_env())
+        .workers(2)
+        .seed(7)
+        .build();
+
+    // 1. Synchronous Algorithm-1 trainer.
+    let ds = gsparse::data::gen_logistic(128, 96, 0.6, 0.25, 7);
+    let model = gsparse::model::LogisticModel::new(1.0 / (10.0 * 128.0));
+    let f0 = model.loss(&ds, &vec![0.0; 96]);
+    let sync_curve = session.train_convex(
+        &SyncTask {
+            epochs: 6,
+            lr: 1.0,
+            ..SyncTask::default()
+        },
+        &ds,
+        &model,
+    );
+    assert!(sync_curve.final_loss() < f0);
+    assert!(sync_curve.ledger.measured_bytes > 0);
+
+    // 2. SSP parameter server.
+    let ps = session.param_server(
+        &PsTask {
+            total_pushes: 400,
+            ..PsTask::default()
+        },
+        &ds,
+        &model,
+    );
+    assert_eq!(ps.versions, 400);
+    assert!(ps.final_loss < f0);
+
+    // 3. Threaded multi-layer cluster.
+    let dims = [64usize, 32];
+    let grads: Vec<Vec<Vec<f32>>> = (0..2)
+        .map(|w| {
+            dims.iter()
+                .map(|&d| gsparse::benchkit::skewed_gradient(d, 40 + w as u64, 0.1))
+                .collect()
+        })
+        .collect();
+    let mut cluster = session.cluster(&dims);
+    let upd = cluster.round(&grads);
+    assert_eq!(upd.len(), dims.len());
+    assert!(cluster.ledger.measured_bytes > 0);
+
+    // 4. Distributed runtime (threads over the in-process transport).
+    let report = session
+        .dist_threads(
+            InProcTransport::new(),
+            "batch-api-dist",
+            &DistTask {
+                rounds: 20,
+                n: 128,
+                d: 96,
+                reg: 1.0 / (10.0 * 128.0),
+                ..DistTask::default()
+            },
+        )
+        .expect("dist run");
+    assert_eq!(report.versions, 40);
+    assert!(report.final_loss < f0);
+    // The compiled plan carries the session's knobs onto the wire.
+    let plan = session.dist_plan(&DistTask::default());
+    assert_eq!(plan.workers, 2);
+    assert_eq!(plan.seed, 7);
+    assert_eq!(plan.codec, session.codec());
+}

@@ -2,46 +2,49 @@
 //! Algorithm-1 pipeline (data → model → sparsify → encode → allreduce →
 //! optimizer) and the Algorithm-4 async engine, exercised end to end.
 
-use gsparse::config::{AsyncSvmConfig, ConvexConfig, Method, UpdateScheme};
-use gsparse::coordinator::sync::{estimate_f_star, train_convex, OptKind, TrainOptions};
+use gsparse::api::{MethodSpec, Session, SyncTask};
+use gsparse::config::{AsyncSvmConfig, Method, UpdateScheme};
+use gsparse::coordinator::sync::{estimate_f_star, OptKind};
 use gsparse::coordinator::AsyncSvmEngine;
 use gsparse::data::{gen_logistic, gen_svm};
 use gsparse::model::{ConvexModel, LogisticModel, SvmModel};
 
-fn cfg(method: Method) -> ConvexConfig {
-    ConvexConfig {
-        n: 256,
-        d: 512,
-        c1: 0.6,
-        c2: 0.25,
-        reg: 1.0 / (10.0 * 256.0),
-        rho: 0.1,
-        workers: 4,
+const N: usize = 256;
+const D: usize = 512;
+const C1: f32 = 0.6;
+const C2: f32 = 0.25;
+const REG: f32 = 1.0 / (10.0 * 256.0);
+const SEED: u64 = 1234;
+
+fn session(method: Method) -> Session {
+    Session::builder()
+        .method(MethodSpec::from_parts(method, 0.1, C2 * C1, 4))
+        .workers(4)
+        .seed(SEED)
+        .build()
+}
+
+fn task(f_star: f64) -> SyncTask {
+    SyncTask {
         batch: 8,
         epochs: 20,
         lr: 1.0,
-        method,
-        seed: 1234,
-        qsgd_bits: 4,
+        f_star,
+        ..SyncTask::default()
     }
 }
 
 #[test]
 fn full_pipeline_every_method_converges() {
-    let c = cfg(Method::GSpar);
-    let ds = gen_logistic(c.n, c.d, c.c1, c.c2, c.seed);
-    let model = LogisticModel::new(c.reg);
+    let ds = gen_logistic(N, D, C1, C2, SEED);
+    let model = LogisticModel::new(REG);
     let f_star = estimate_f_star(&ds, &model, 300, 1.0);
     for &method in Method::all() {
-        let mut c = cfg(method);
+        let mut t = task(f_star);
         if method == Method::TernGrad || method == Method::OneBit {
-            c.lr = 0.5; // aggressive quantizers need a gentler base rate
+            t.lr = 0.5; // aggressive quantizers need a gentler base rate
         }
-        let opts = TrainOptions {
-            f_star,
-            ..Default::default()
-        };
-        let curve = train_convex(&c, &opts, &ds, &model);
+        let curve = session(method).train_convex(&t, &ds, &model);
         let first = curve.points.first().unwrap().loss;
         let last = curve.final_loss();
         // High-variance baselines (UniSp at ρ=0.1) legitimately converge
@@ -59,18 +62,10 @@ fn full_pipeline_every_method_converges() {
 fn paper_ordering_gspar_between_dense_and_unisp() {
     // Figures 1–2 shape: per data pass, dense ≤ GSpar ≤ UniSp in loss, and
     // GSpar ≪ dense in bits.
-    let base = cfg(Method::Dense);
-    let ds = gen_logistic(base.n, base.d, base.c1, base.c2, base.seed);
-    let model = LogisticModel::new(base.reg);
+    let ds = gen_logistic(N, D, C1, C2, SEED);
+    let model = LogisticModel::new(REG);
     let f_star = estimate_f_star(&ds, &model, 300, 1.0);
-    let run = |method| {
-        let c = cfg(method);
-        let opts = TrainOptions {
-            f_star,
-            ..Default::default()
-        };
-        train_convex(&c, &opts, &ds, &model)
-    };
+    let run = |method| session(method).train_convex(&task(f_star), &ds, &model);
     let dense = run(Method::Dense);
     let gspar = run(Method::GSpar);
     let unisp = run(Method::UniSp);
@@ -83,32 +78,16 @@ fn paper_ordering_gspar_between_dense_and_unisp() {
 #[test]
 fn svrg_converges_faster_than_sgd_at_end() {
     use gsparse::coordinator::sync::SvrgVariant;
-    let mut c = cfg(Method::GSpar);
-    c.epochs = 30;
-    let ds = gen_logistic(c.n, c.d, c.c1, c.c2, c.seed);
-    let model = LogisticModel::new(c.reg);
+    let ds = gen_logistic(N, D, C1, C2, SEED);
+    let model = LogisticModel::new(REG);
     let f_star = estimate_f_star(&ds, &model, 500, 1.0);
-    let sgd = train_convex(
-        &c,
-        &TrainOptions {
-            f_star,
-            ..Default::default()
-        },
-        &ds,
-        &model,
-    );
-    let mut csvrg = c.clone();
-    csvrg.lr = 0.3;
-    let svrg = train_convex(
-        &csvrg,
-        &TrainOptions {
-            opt: OptKind::Svrg(SvrgVariant::SparsifyFull),
-            f_star,
-            ..Default::default()
-        },
-        &ds,
-        &model,
-    );
+    let mut sgd_task = task(f_star);
+    sgd_task.epochs = 30;
+    let sgd = session(Method::GSpar).train_convex(&sgd_task, &ds, &model);
+    let mut svrg_task = sgd_task.clone();
+    svrg_task.lr = 0.3;
+    svrg_task.opt = OptKind::Svrg(SvrgVariant::SparsifyFull);
+    let svrg = session(Method::GSpar).train_convex(&svrg_task, &ds, &model);
     assert!(
         svrg.final_loss() < sgd.final_loss() * 1.5,
         "svrg {} vs sgd {}",

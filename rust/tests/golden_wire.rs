@@ -174,3 +174,185 @@ fn golden_entropy_fixture_is_smaller_where_rice_engages() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// WireBatch fixtures: the batched multi-layer frame, one hex snapshot per
+// (layer list, codec). Batch sub-payloads are byte-identical to the
+// single-message payloads above (only the headers and Rice-parameter
+// placement differ), so the expected bytes are derived from the committed
+// single-message fixtures — any drift here is codec drift, not fixture rot.
+// ---------------------------------------------------------------------------
+
+struct BatchFixture {
+    name: &'static str,
+    layers: Vec<SparseGrad>,
+    raw_hex: &'static str,
+    entropy_hex: &'static str,
+}
+
+fn mixed_d1000() -> SparseGrad {
+    msg(
+        1000,
+        &[(3, 1.5), (701, -2.25)],
+        &[(0, false), (17, true), (250, false), (999, true)],
+        0.5,
+    )
+}
+
+/// `d % 4 != 0` layer that encodes as DenseSymbols (high density).
+fn dense_d5() -> SparseGrad {
+    msg(
+        5,
+        &[(0, 1.0)],
+        &[(1, false), (2, true), (3, false), (4, true)],
+        0.25,
+    )
+}
+
+fn batch_fixtures() -> Vec<BatchFixture> {
+    vec![
+        // Single empty layer: Indexed sub-message, zero Rice params.
+        BatchFixture {
+            name: "batch_empty_d100",
+            layers: vec![msg(100, &[], &[], 0.0)],
+            raw_hex: "475350420100000001000000\
+                      0064000000000000000000000000000000",
+            entropy_hex: "475350420101000001000000\
+                          0064000000000000000000000000000000",
+        },
+        // Single mixed layer: the sub-payloads are exactly the
+        // single-message `mixed_d1000` payloads; under entropy the shared
+        // Rice parameters equal the per-message ones (same gap streams).
+        BatchFixture {
+            name: "batch_mixed_d1000",
+            layers: vec![mixed_d1000()],
+            raw_hex: "475350420100000001000000\
+                      00e803000002000000040000000000003f\
+                      030000000000c03fbd020000000010c000000000\
+                      11000000fa000000e70300000a",
+            entropy_hex: "475350420101080701000000\
+                          02e803000002000000040000000000003f\
+                          0000c03f000010c00a06960b0012fa6303",
+        },
+        // DenseSymbols layer with d % 4 != 0 plus an empty layer: no
+        // sub-message uses Rice, so header bytes 6–7 stay zero under both
+        // codecs and the encodings coincide byte-for-byte (bar the codec
+        // byte).
+        BatchFixture {
+            name: "batch_dense_d5_plus_empty_d3",
+            layers: vec![dense_d5(), msg(3, &[], &[], 0.0)],
+            raw_hex: "475350420100000002000000\
+                      010500000001000000040000000000803e\
+                      67020000803f\
+                      0003000000000000000000000000000000",
+            entropy_hex: "475350420101000002000000\
+                          010500000001000000040000000000803e\
+                          67020000803f\
+                          0003000000000000000000000000000000",
+        },
+        // Two identical layers: the pooled gap distribution doubles every
+        // count, so the shared parameters match the per-message optimum
+        // and both sub-messages reuse the single-message Rice payload.
+        BatchFixture {
+            name: "batch_two_mixed_d1000",
+            layers: vec![mixed_d1000(), mixed_d1000()],
+            raw_hex: "475350420100000002000000\
+                      00e803000002000000040000000000003f\
+                      030000000000c03fbd020000000010c000000000\
+                      11000000fa000000e70300000a\
+                      00e803000002000000040000000000003f\
+                      030000000000c03fbd020000000010c000000000\
+                      11000000fa000000e70300000a",
+            entropy_hex: "475350420101080702000000\
+                          02e803000002000000040000000000003f\
+                          0000c03f000010c00a06960b0012fa6303\
+                          02e803000002000000040000000000003f\
+                          0000c03f000010c00a06960b0012fa6303",
+        },
+    ]
+}
+
+#[test]
+fn golden_batch_bytes_have_not_drifted() {
+    for f in batch_fixtures() {
+        let refs: Vec<&SparseGrad> = f.layers.iter().collect();
+        for (codec, hex) in [
+            (WireCodec::Raw, f.raw_hex),
+            (WireCodec::Entropy, f.entropy_hex),
+        ] {
+            let mut buf = Vec::new();
+            coding::encode_batch(&refs, codec, &mut buf);
+            assert_eq!(
+                buf.len(),
+                coding::encoded_batch_len(&refs, codec),
+                "{}/{codec}: length formula drifted",
+                f.name
+            );
+            let want = from_hex(hex);
+            assert_eq!(
+                buf,
+                want,
+                "{}/{codec}: byte drift\n  have {}\n  want {}",
+                f.name,
+                to_hex(&buf),
+                to_hex(&want),
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_batch_bytes_decode_to_the_fixture_layers() {
+    // The committed bytes — not freshly encoded ones — must decode to the
+    // exact layer lists, so an old peer's batch frames stay readable.
+    for f in batch_fixtures() {
+        for (codec, hex) in [
+            (WireCodec::Raw, f.raw_hex),
+            (WireCodec::Entropy, f.entropy_hex),
+        ] {
+            let bytes = from_hex(hex);
+            let mut out = Vec::new();
+            let mut sub_lens = Vec::new();
+            coding::decode_batch_into(&bytes, &mut out, &mut sub_lens)
+                .unwrap_or_else(|e| panic!("{}/{codec}: fixture undecodable: {e}", f.name));
+            assert_eq!(out, f.layers, "{}/{codec}: decoded layers drifted", f.name);
+            assert_eq!(
+                sub_lens.iter().sum::<usize>() + coding::BATCH_HEADER_LEN,
+                bytes.len(),
+                "{}/{codec}: sub lengths must tile the batch",
+                f.name
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_batch_headers_beat_per_layer_headers() {
+    // The point of the format: for every fixture the batch is at most as
+    // large as the framed sum of its single-message encodings, and strictly
+    // smaller whenever there is more than one layer.
+    for f in batch_fixtures() {
+        let refs: Vec<&SparseGrad> = f.layers.iter().collect();
+        for codec in [WireCodec::Raw, WireCodec::Entropy] {
+            let batch = coding::encoded_batch_len(&refs, codec);
+            let singles: usize = f
+                .layers
+                .iter()
+                .map(|sg| coding::encoded_len_with(sg, codec))
+                .sum();
+            if f.layers.len() > 1 {
+                assert!(
+                    batch < singles,
+                    "{}/{codec}: batch {batch} !< singles {singles}",
+                    f.name
+                );
+            } else {
+                assert!(
+                    batch <= singles + coding::BATCH_HEADER_LEN,
+                    "{}/{codec}: batch overhead out of bounds",
+                    f.name
+                );
+            }
+        }
+    }
+}

@@ -149,10 +149,13 @@ fn cnn_step_trains_through_cluster() {
 
     let ds = gsparse::data::CifarLike::generate(64, 3);
     let bsz = step.x_dims[0];
-    let layer_dims: Vec<usize> = step.params.iter().map(|p| p.elements()).collect();
-    let mut cluster = gsparse::coordinator::Cluster::new(2, &layer_dims, 4, || {
-        gsparse::sparsify::build(gsparse::config::Method::GSpar, 0.05, 0.0, 4)
-    });
+    let layer_dims = step.layer_dims();
+    let session = gsparse::api::Session::builder()
+        .method(gsparse::api::MethodSpec::GSpar { rho: 0.05, iters: 2 })
+        .workers(2)
+        .seed(4)
+        .build();
+    let mut cluster = session.cluster(&layer_dims);
     let mut adams: Vec<gsparse::opt::Adam> = layer_dims
         .iter()
         .map(|&dim| gsparse::opt::Adam::new(dim, 0.02))

@@ -5,9 +5,7 @@
 use gsparse::coding::{self, WireCodec, WireError};
 use gsparse::proptest_lite::{run, Gen};
 use gsparse::rngkit::{RandArray, Xoshiro256pp};
-use gsparse::sparsify::{
-    self, closed_form_probs, greedy_probs, sample_sparse, Compressed, SparseGrad,
-};
+use gsparse::sparsify::{closed_form_probs, greedy_probs, sample_sparse, Compressed, SparseGrad};
 
 /// A random structurally-valid message for codec properties: covers empty,
 /// all-exact, all-shared, mixed, `d % 4 != 0`, single-coordinate, and
@@ -108,7 +106,7 @@ fn prop_compress_decode_norm_consistency() {
         let grad = g.gradient_vec(d);
         let mut rand = RandArray::new(Xoshiro256pp::seed_from_u64(g.u64()), 1 << 14);
         for &m in gsparse::config::Method::all() {
-            let mut c = sparsify::build(m, 0.3, 0.5, 3);
+            let mut c = gsparse::api::MethodSpec::from_parts(m, 0.3, 0.5, 3).build();
             let (out, _) = c.compress(&grad, &mut rand);
             let dense = out.to_dense();
             let direct: f64 = dense.iter().map(|&v| (v as f64) * (v as f64)).sum();

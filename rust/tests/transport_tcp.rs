@@ -12,7 +12,7 @@
 //!   sockets.
 
 use gsparse::coding::WireCodec;
-use gsparse::coordinator::dist::{self, DistConfig};
+use gsparse::coordinator::dist::{self, RunPlan};
 use gsparse::data::gen_logistic;
 use gsparse::model::LogisticModel;
 use gsparse::transport::frame::{self, MsgView};
@@ -23,8 +23,8 @@ use gsparse::transport::{
 /// The shared suite honours the CI `codec: [raw, entropy]` matrix via
 /// `GSPARSE_CODEC`; the explicit `*_entropy_codec` tests below pin the
 /// entropy variant regardless of the environment.
-fn test_cfg() -> DistConfig {
-    DistConfig {
+fn test_cfg() -> RunPlan {
+    RunPlan {
         workers: 2,
         rounds: 150,
         n: 256,
@@ -37,14 +37,14 @@ fn test_cfg() -> DistConfig {
     }
 }
 
-fn entropy_cfg() -> DistConfig {
-    DistConfig {
+fn entropy_cfg() -> RunPlan {
+    RunPlan {
         codec: WireCodec::Entropy,
         ..test_cfg()
     }
 }
 
-fn assert_backend_parity(cfg: &DistConfig) {
+fn assert_backend_parity(cfg: &RunPlan) {
     let inproc = dist::run_threads(InProcTransport::new(), "parity", cfg).unwrap();
     let tcp = dist::run_threads(TcpTransport::new(), "127.0.0.1:0", cfg).unwrap();
 
@@ -100,7 +100,7 @@ fn multi_process_cluster_matches_in_process_run_entropy_codec() {
     multi_process_parity(&entropy_cfg());
 }
 
-fn multi_process_parity(cfg: &DistConfig) {
+fn multi_process_parity(cfg: &RunPlan) {
     // One server (this test) + two genuine worker OS processes over
     // loopback TCP — the repo's "real multi-process cluster" smoke test.
     let bin = std::path::PathBuf::from(env!("CARGO_BIN_EXE_gsparse"));
@@ -203,7 +203,7 @@ fn server_rejects_corrupted_gradient_frames() {
     // a gradient whose codec payload is garbage: the server must fail with
     // a decode error (the hardened `coding::decode_into` path), not panic
     // or apply junk.
-    let cfg = DistConfig {
+    let cfg = RunPlan {
         workers: 1,
         rounds: 5,
         n: 64,
@@ -252,7 +252,7 @@ fn server_refuses_codec_mismatched_worker() {
     // An entropy-codec server must refuse a raw-codec hello during accept,
     // before any config or gradient flows — "negotiated like the version
     // field".
-    let cfg = DistConfig {
+    let cfg = RunPlan {
         workers: 1,
         rounds: 3,
         n: 64,
@@ -273,6 +273,78 @@ fn server_refuses_codec_mismatched_worker() {
         format!("{err:#}").contains("codec mismatch"),
         "expected codec mismatch, got: {err:#}"
     );
+    stale.join().unwrap();
+}
+
+#[test]
+fn v2_workers_interoperate_with_a_v3_server_bitwise() {
+    // The v2↔v3 handshake fallback: a server running the version-3
+    // transport must accept version-2 hellos (same 10-byte layout, no
+    // batch capability) and drive the run to bitwise-identical results —
+    // v2 links simply never see `GRAD_BATCH` frames. A pre-codec (v1)
+    // hello is still refused.
+    let cfg = RunPlan {
+        workers: 2,
+        rounds: 40,
+        n: 128,
+        d: 64,
+        batch: 4,
+        seed: 91,
+        reg: 1.0 / (10.0 * 128.0),
+        ..Default::default()
+    };
+    let t = TcpTransport::new();
+    let mut listener = t.listen("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr();
+    let mut handles = Vec::new();
+    for wid in 0..cfg.workers {
+        let t = TcpTransport::new();
+        let addr = addr.clone();
+        let codec = cfg.codec;
+        handles.push(std::thread::spawn(move || {
+            // Impersonate an old peer: same frames, version byte 2.
+            let hello = Hello::with_version(wid as u32, codec, 2);
+            assert_eq!(hello.version, 2);
+            assert!(!hello.supports_batch());
+            let mut conn = t.connect(&addr, &hello).unwrap();
+            dist::run_worker(conn.as_mut(), wid as u32, codec)
+        }));
+    }
+    let v2_report = dist::serve(listener.as_mut(), &cfg).unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    // Reference run with current-version workers.
+    let v3_report = dist::run_threads(TcpTransport::new(), "127.0.0.1:0", &cfg).unwrap();
+    assert_eq!(v2_report.grad_digest, v3_report.grad_digest);
+    assert_eq!(v2_report.final_w, v3_report.final_w);
+    assert_eq!(
+        v2_report.curve.ledger.measured_bytes,
+        v3_report.curve.ledger.measured_bytes,
+        "the v2 hello is the same length, so framed bytes must match too"
+    );
+
+    // v1 peers (9-byte hello, version 1) are refused at accept.
+    let mut listener = t.listen("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr();
+    let stale = std::thread::spawn(move || {
+        use std::io::Write;
+        let mut sock = std::net::TcpStream::connect(addr).unwrap();
+        let mut hello = Vec::new();
+        hello.extend_from_slice(b"GSTP");
+        hello.push(1); // version 1
+        hello.extend_from_slice(&0u32.to_le_bytes());
+        let mut framed = Vec::new();
+        framed.extend_from_slice(&(hello.len() as u32).to_le_bytes());
+        framed.extend_from_slice(&hello);
+        sock.write_all(&framed).unwrap();
+        // Server drops the link after refusing the handshake.
+        let _ = sock.shutdown(std::net::Shutdown::Both);
+    });
+    assert!(matches!(
+        listener.accept(),
+        Err(TransportError::VersionMismatch { ours: 3, theirs: 1 })
+    ));
     stale.join().unwrap();
 }
 
