@@ -1,0 +1,126 @@
+//! Error-feedback + local-step microbench: (a) the convergence headline —
+//! top-k with residual memory vs the unbiased sparsifier at matched wire
+//! bytes on the deterministic logreg workload; (b) bytes-per-epoch as a
+//! function of the local-step period H; (c) the adapter's per-call
+//! overhead around a compressor. Writes `BENCH_feedback.json` (override
+//! with `GSPARSE_BENCH_OUT`); CI uploads it next to the other bench JSONs.
+
+use gsparse::api::{MethodSpec, Session, SyncTask};
+use gsparse::benchkit::{section, Bencher, JsonReport};
+use gsparse::coordinator::sync::OptKind;
+use gsparse::data::gen_logistic;
+use gsparse::feedback::{FeedbackConfig, WithFeedback};
+use gsparse::model::LogisticModel;
+use gsparse::rngkit::RandArray;
+use gsparse::sparsify::{Compressed, Compressor, SparseGrad, TopKCompressor};
+
+fn bench_convergence_at_matched_bytes(report: &mut JsonReport) {
+    section("top-k ρ=0.001: error feedback vs plain vs unbiased GSpar (equal-ish bytes)");
+    let ds = gen_logistic(256, 2048, 0.6, 0.25, 515);
+    let model = LogisticModel::new(1.0 / (10.0 * 256.0));
+    let task = SyncTask {
+        batch: 8,
+        epochs: 100,
+        lr: 1.0,
+        opt: OptKind::SgdInvT,
+        ..SyncTask::default()
+    };
+    let run = |label: &str, spec: MethodSpec, feedback: bool| {
+        let mut builder = Session::builder().method(spec).workers(4).seed(515);
+        if feedback {
+            builder = builder.feedback(FeedbackConfig::default());
+        }
+        let curve = builder.build().train_convex(&task, &ds, &model);
+        println!(
+            "  {label:<18} final loss {:.5}  wire {:>9} B  measured {:>9} B",
+            curve.final_loss(),
+            curve.ledger.wire_bytes,
+            curve.ledger.measured_bytes
+        );
+        curve
+    };
+    let plain = run("topk", MethodSpec::TopK { rho: 0.001 }, false);
+    let fb = run("topk+feedback", MethodSpec::TopK { rho: 0.001 }, true);
+    // The unbiased method at a density whose wire cost lands in the same
+    // ballpark (GSpar messages carry an extra shared-magnitude structure).
+    let gspar = run("gspar", MethodSpec::GSpar { rho: 0.001, iters: 2 }, false);
+    report.push_metric("final_loss/topk_rho0.001", plain.final_loss());
+    report.push_metric("final_loss/topk_feedback_rho0.001", fb.final_loss());
+    report.push_metric("final_loss/gspar_rho0.001", gspar.final_loss());
+    report.push_metric("wire_bytes/topk_rho0.001", plain.ledger.wire_bytes as f64);
+    report.push_metric("wire_bytes/topk_feedback_rho0.001", fb.ledger.wire_bytes as f64);
+    report.push_metric("wire_bytes/gspar_rho0.001", gspar.ledger.wire_bytes as f64);
+    report.push_metric(
+        "loss_ratio/feedback_over_plain",
+        fb.final_loss() / plain.final_loss(),
+    );
+}
+
+fn bench_bytes_per_epoch_vs_h(report: &mut JsonReport) {
+    section("bytes per epoch vs local-step period H (GSpar ρ=0.1, 4 workers)");
+    let ds = gen_logistic(256, 1024, 0.6, 0.25, 77);
+    let model = LogisticModel::new(1.0 / (10.0 * 256.0));
+    let epochs = 16usize;
+    let task = SyncTask {
+        batch: 8,
+        epochs,
+        lr: 1.0,
+        ..SyncTask::default()
+    };
+    for h in [1usize, 2, 4, 8] {
+        let curve = Session::builder()
+            .method(MethodSpec::GSpar { rho: 0.1, iters: 2 })
+            .workers(4)
+            .seed(77)
+            .local_steps(h)
+            .build()
+            .train_convex(&task, &ds, &model);
+        let wire_per_epoch = curve.ledger.wire_bytes as f64 / epochs as f64;
+        let measured_per_epoch = curve.ledger.measured_bytes as f64 / epochs as f64;
+        println!(
+            "  H={h}: wire {wire_per_epoch:>10.0} B/epoch  measured {measured_per_epoch:>10.0} \
+             B/epoch  frames {}  final loss {:.5}",
+            curve.ledger.measured_frames,
+            curve.final_loss()
+        );
+        report.push_metric(&format!("wire_bytes_per_epoch/H={h}"), wire_per_epoch);
+        report.push_metric(&format!("measured_bytes_per_epoch/H={h}"), measured_per_epoch);
+        report.push_metric(&format!("measured_frames/H={h}"), curve.ledger.measured_frames as f64);
+        report.push_metric(&format!("final_loss/H={h}"), curve.final_loss());
+    }
+}
+
+fn bench_adapter_overhead(report: &mut JsonReport) {
+    section("WithFeedback adapter overhead (top-k, d = 2^16)");
+    let d = 1 << 16;
+    let g = gsparse::benchkit::skewed_gradient(d, 9, 0.1);
+    let bencher = Bencher::new(48, 8);
+
+    let mut plain = TopKCompressor::new(0.01);
+    let mut rand = RandArray::from_seed(10, 1 << 18);
+    let mut msg = Compressed::Sparse(SparseGrad::empty(d));
+    let s = bencher.bench("topk/compress_into", Some(d as u64), || {
+        plain.compress_into(&g, &mut rand, &mut msg);
+    });
+    report.push(&s);
+    let plain_s = s.mean.as_secs_f64();
+
+    let mut fb = WithFeedback::new(TopKCompressor::new(0.01));
+    let s = bencher.bench("topk+feedback/compress_into", Some(d as u64), || {
+        fb.compress_into(&g, &mut rand, &mut msg);
+    });
+    report.push(&s);
+    let ratio = s.mean.as_secs_f64() / plain_s.max(1e-12);
+    println!("  adapter overhead: {ratio:.2}x over the bare compressor");
+    report.push_metric("feedback_overhead_ratio", ratio);
+}
+
+fn main() {
+    let mut report = JsonReport::new();
+    bench_convergence_at_matched_bytes(&mut report);
+    bench_bytes_per_epoch_vs_h(&mut report);
+    bench_adapter_overhead(&mut report);
+    let out = std::env::var("GSPARSE_BENCH_OUT").unwrap_or_else(|_| "BENCH_feedback.json".into());
+    report.write(&out).expect("write bench json");
+    println!("wrote {out}");
+}

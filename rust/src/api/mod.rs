@@ -46,10 +46,19 @@
 //! instead of one frame per layer (see [`crate::coding::batch`]). Peers
 //! that negotiated transport version 2 fall back to per-layer frames
 //! automatically.
+//!
+//! Error feedback + local steps: [`SessionBuilder::feedback`] wraps every
+//! worker's compressor in the shared residual memory
+//! ([`crate::feedback::WithFeedback`]), and
+//! [`SessionBuilder::local_steps`] makes workers synchronize only every
+//! `H` rounds (local gradient steps in between, zero wire traffic on
+//! non-communication rounds) — both honored by all four coordinators; see
+//! [`crate::feedback`].
 
 use crate::coding::WireCodec;
 use crate::comm::NetworkModel;
 use crate::config::Method;
+use crate::feedback::{CommSchedule, FeedbackConfig, WithFeedback};
 use crate::coordinator::cluster::Cluster;
 use crate::coordinator::dist::{self, DistReport, RunPlan};
 use crate::coordinator::param_server::PsReport;
@@ -157,9 +166,11 @@ impl MethodSpec {
 
     /// Whether this method supports the batched multi-layer pipeline: it
     /// must produce sparse (`SparseGrad`) messages — the only payload the
-    /// `WireBatch` frame packs — and hold no per-layer state (1-bit error
-    /// feedback keeps a per-dimension residual, so one instance cannot be
-    /// shared across a layer list).
+    /// `WireBatch` frame packs. (1-bit SGD's residual now lives in the
+    /// shared [`crate::feedback`] subsystem, which handles per-layer
+    /// layouts fine, but its sign messages are dense, so it still cannot
+    /// batch. Session-level error feedback composes with every batchable
+    /// method.)
     pub fn batchable(&self) -> bool {
         matches!(
             self,
@@ -183,6 +194,26 @@ impl MethodSpec {
             MethodSpec::TopK { rho } => Box::new(TopKCompressor::new(rho)),
             MethodSpec::OneBit => Box::new(OneBitSgd::new()),
         }
+    }
+}
+
+/// [`MethodSpec::build`] plus the session's error-feedback wrap — the one
+/// construction path every coordinator (and the wire-shipped dist worker)
+/// uses, so feedback state exists wherever a compressor does.
+///
+/// 1Bit-SGD is *already* `WithFeedback<SignCompressor>` by definition, so
+/// a session-level feedback config is applied to its one residual memory
+/// (via [`OneBitSgd::with_config`]) instead of stacking a second adapter
+/// on top — which would silently compute a different algorithm than
+/// either the baseline or single error feedback.
+pub(crate) fn build_compressor(
+    spec: MethodSpec,
+    feedback: Option<FeedbackConfig>,
+) -> Box<dyn Compressor> {
+    match feedback {
+        None => spec.build(),
+        Some(cfg) if spec == MethodSpec::OneBit => Box::new(OneBitSgd::with_config(cfg)),
+        Some(cfg) => Box::new(WithFeedback::with_config(spec.build(), cfg)),
     }
 }
 
@@ -213,6 +244,8 @@ pub struct SessionBuilder {
     net: NetworkModel,
     batch_layers: bool,
     transport_version: u8,
+    feedback: Option<FeedbackConfig>,
+    local_steps: usize,
 }
 
 impl Default for SessionBuilder {
@@ -225,6 +258,8 @@ impl Default for SessionBuilder {
             net: NetworkModel::commodity_1g(),
             batch_layers: false,
             transport_version: TRANSPORT_VERSION,
+            feedback: None,
+            local_steps: 1,
         }
     }
 }
@@ -283,6 +318,30 @@ impl SessionBuilder {
         self
     }
 
+    /// Wrap this session's compressors in the shared error-feedback memory
+    /// ([`crate::feedback::WithFeedback`]): every worker compresses the
+    /// error-corrected gradient `g + e` and carries the compression error
+    /// to its next step. Applies to **all four** coordinators, including
+    /// the batched `WireBatch` pipeline (per-layer residual layout) and
+    /// the wire-shipped distributed workers (the config frame carries it).
+    /// For [`MethodSpec::OneBit`] — which carries its own residual by
+    /// definition — the config (e.g. a decay) is applied to that one
+    /// residual memory rather than stacking a second adapter.
+    pub fn feedback(mut self, cfg: FeedbackConfig) -> Self {
+        self.feedback = Some(cfg);
+        self
+    }
+
+    /// Synchronize only every `h` rounds (Qsparse-local-SGD style): between
+    /// synchronizations workers take local gradient steps and accumulate;
+    /// non-communication rounds ship **zero frames and zero bytes** on
+    /// every coordinator. `h = 1` (the default) is the historical
+    /// every-round behavior.
+    pub fn local_steps(mut self, h: usize) -> Self {
+        self.local_steps = h.max(1);
+        self
+    }
+
     pub fn build(self) -> Session {
         Session {
             method: self.method,
@@ -292,6 +351,8 @@ impl SessionBuilder {
             net: self.net,
             batch_layers: self.batch_layers,
             transport_version: self.transport_version,
+            feedback: self.feedback,
+            local_steps: self.local_steps,
         }
     }
 }
@@ -308,6 +369,8 @@ pub struct Session {
     net: NetworkModel,
     batch_layers: bool,
     transport_version: u8,
+    feedback: Option<FeedbackConfig>,
+    local_steps: usize,
 }
 
 impl Session {
@@ -343,9 +406,25 @@ impl Session {
         self.transport_version
     }
 
-    /// A fresh per-worker compressor for this session's method.
+    /// The error-feedback configuration, if enabled.
+    pub fn feedback(&self) -> Option<FeedbackConfig> {
+        self.feedback
+    }
+
+    /// The local-step period `H` (1 = synchronize every round).
+    pub fn local_steps(&self) -> usize {
+        self.local_steps
+    }
+
+    /// The communication schedule implied by [`Self::local_steps`].
+    pub fn comm_schedule(&self) -> CommSchedule {
+        CommSchedule::every(self.local_steps)
+    }
+
+    /// A fresh per-worker compressor for this session's method, wrapped in
+    /// the error-feedback memory when [`SessionBuilder::feedback`] was set.
     pub fn compressor(&self) -> Box<dyn Compressor> {
-        self.method.build()
+        build_compressor(self.method, self.feedback)
     }
 
     /// Run the synchronous Algorithm-1 trainer (or its SVRG variants) on a
@@ -404,6 +483,8 @@ impl Session {
             c2: task.c2,
             reg: task.reg,
             codec: self.codec,
+            local_steps: self.local_steps,
+            feedback: self.feedback,
         }
     }
 
@@ -489,7 +570,9 @@ impl Default for SyncTask {
 /// Per-run knobs of the SSP parameter server.
 #[derive(Clone, Debug)]
 pub struct PsTask {
-    /// Total pushes across all workers.
+    /// Total gradient iterations across all workers. With
+    /// [`SessionBuilder::local_steps`]` = H > 1` each wire push covers up
+    /// to `H` of them, so the applied-push count is ≈ `total_pushes / H`.
     pub total_pushes: usize,
     /// SSP bound: max versions a worker's weights may lag the server.
     pub max_staleness: u64,
@@ -619,6 +702,9 @@ mod tests {
         assert_eq!(s.codec(), WireCodec::Raw);
         assert!(!s.batch_layers());
         assert_eq!(s.transport_version(), TRANSPORT_VERSION);
+        assert_eq!(s.feedback(), None);
+        assert_eq!(s.local_steps(), 1);
+        assert_eq!(s.comm_schedule(), crate::feedback::CommSchedule::every_round());
 
         let s = Session::builder()
             .method(MethodSpec::TopK { rho: 0.05 })
@@ -627,6 +713,8 @@ mod tests {
             .seed(7)
             .batch_layers(true)
             .transport_version(0) // clamped to the supported window
+            .feedback(FeedbackConfig::with_decay(0.9))
+            .local_steps(0) // clamped to 1
             .build();
         assert_eq!(s.workers(), 1);
         assert_eq!(s.seed(), 7);
@@ -634,7 +722,40 @@ mod tests {
         assert!(s.batch_layers());
         assert_eq!(s.transport_version(), crate::transport::MIN_TRANSPORT_VERSION);
         assert_eq!(s.method().method(), Method::TopK);
+        assert_eq!(s.feedback(), Some(FeedbackConfig::with_decay(0.9)));
+        assert_eq!(s.local_steps(), 1);
         assert!(!s.compressor().name().is_empty());
+    }
+
+    #[test]
+    fn session_compressor_is_feedback_wrapped() {
+        // A feedback session's TopK compressor must behave like
+        // WithFeedback<TopK>: repeated compressions of the same gradient
+        // change the message (the residual keeps injecting the dropped
+        // mass), whereas the plain compressor is idempotent.
+        let g: Vec<f32> = (0..64)
+            .map(|i| ((i * 37 % 29) as f32 - 14.0) / 10.0)
+            .collect();
+        let rand = RandArray::from_seed(5, 1 << 10);
+        let run = |session: &Session| {
+            let mut c = session.compressor();
+            let mut out = Compressed::Sparse(SparseGrad::empty(g.len()));
+            let mut rand = rand.clone();
+            c.compress_into(&g, &mut rand, &mut out);
+            let first = format!("{out:?}");
+            c.compress_into(&g, &mut rand, &mut out);
+            (first, format!("{out:?}"))
+        };
+        let plain = Session::builder().method(MethodSpec::TopK { rho: 0.05 }).build();
+        let fb = Session::builder()
+            .method(MethodSpec::TopK { rho: 0.05 })
+            .feedback(FeedbackConfig::default())
+            .build();
+        let (p1, p2) = run(&plain);
+        assert_eq!(p1, p2, "plain top-k is deterministic and memoryless");
+        let (f1, f2) = run(&fb);
+        assert_eq!(p1, f1, "first feedback step sees zero residual");
+        assert_ne!(f1, f2, "the residual must alter the second message");
     }
 
     #[test]

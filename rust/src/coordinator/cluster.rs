@@ -40,6 +40,7 @@
 use crate::api::Session;
 use crate::coding::WireCodec;
 use crate::comm::NetworkModel;
+use crate::feedback::CommSchedule;
 use crate::metrics::{CommLedger, SparsityMeter, VarianceRatio};
 use crate::rngkit::{RandArray, Xoshiro256pp};
 use crate::sparsify::{Compressed, CompressStats, Compressor, SparseGrad};
@@ -91,6 +92,17 @@ pub struct Cluster {
     /// Per-link negotiated capability: did worker `w`'s hello announce a
     /// batch-capable transport version?
     peer_batch: Vec<bool>,
+    /// Local-step schedule: rounds between synchronizations accumulate
+    /// worker gradients locally and ship nothing.
+    schedule: CommSchedule,
+    /// 1-based count of [`Cluster::round`] calls (drives the schedule).
+    rounds_seen: u64,
+    /// `rounds_seen` at the last synchronization (tracks whether a partial
+    /// block is pending for [`Cluster::flush`]).
+    last_comm: u64,
+    /// `acc[w][l]`: worker `w`'s gradient sum for layer `l` since the last
+    /// synchronization (allocated lazily, only under local-step schedules).
+    acc: Vec<Vec<Vec<f32>>>,
     /// Negotiated wire codec for every sparse message.
     pub codec: WireCodec,
     pub net: NetworkModel,
@@ -119,6 +131,7 @@ impl Cluster {
             WireCodec::Raw,
             TRANSPORT_VERSION,
             false,
+            CommSchedule::every_round(),
             make_compressor,
         )
     }
@@ -146,13 +159,15 @@ impl Cluster {
             codec,
             TRANSPORT_VERSION,
             false,
+            CommSchedule::every_round(),
             make_compressor,
         )
     }
 
     /// The session-owned constructor behind [`Session::cluster`]: method,
-    /// codec, seed, worker count, network model, transport version, and
-    /// layer batching all come from the session.
+    /// codec, seed, worker count, network model, transport version, layer
+    /// batching, error feedback, and local-step schedule all come from the
+    /// session.
     pub fn for_session(session: &Session, layer_dims: &[usize]) -> Self {
         let batch = session.batch_layers() && session.method().batchable();
         let mut cluster = Self::build(
@@ -162,12 +177,14 @@ impl Cluster {
             session.codec(),
             session.transport_version(),
             batch,
+            session.comm_schedule(),
             || session.compressor(),
         );
         cluster.net = session.net();
         cluster
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn build<F>(
         workers: usize,
         layer_dims: &[usize],
@@ -175,6 +192,7 @@ impl Cluster {
         codec: WireCodec,
         hello_version: u8,
         batch: bool,
+        schedule: CommSchedule,
         mut make_compressor: F,
     ) -> Self
     where
@@ -227,6 +245,10 @@ impl Cluster {
             leader_links,
             batch,
             peer_batch,
+            schedule,
+            rounds_seen: 0,
+            last_comm: 0,
+            acc: Vec::new(),
             codec,
             net: NetworkModel::commodity_1g(),
             var_meter: VarianceRatio::default(),
@@ -236,17 +258,95 @@ impl Cluster {
         }
     }
 
+    /// The local-step schedule this cluster runs under.
+    pub fn comm_schedule(&self) -> CommSchedule {
+        self.schedule
+    }
+
     /// Whether worker `w`'s messages travel as one `WireBatch` frame.
     fn batched_link(&self, w: usize) -> bool {
         self.batch && self.peer_batch[w]
     }
 
-    /// One synchronization round. `grads[w][l]` is worker `w`'s gradient for
-    /// layer `l`. Sparsification + encoding + sending run on one scoped
-    /// thread per worker; the leader receives from each link in worker-id
-    /// order, decodes and averages. Returns per-layer updates.
+    /// One training round. `grads[w][l]` is worker `w`'s gradient for
+    /// layer `l`.
+    ///
+    /// Under the default every-round schedule this synchronizes
+    /// immediately. Under a local-step schedule
+    /// ([`crate::api::SessionBuilder::local_steps`]) non-communication
+    /// rounds accumulate each worker's gradients locally and return
+    /// all-zero updates **without touching any link** — zero frames, zero
+    /// bytes, provable from [`Cluster::frames_received`] and the ledger's
+    /// measured columns — while every `H`-th round ships the accumulated
+    /// sums through the normal compression + transport path.
     pub fn round(&mut self, grads: &[Vec<Vec<f32>>]) -> Vec<LayerUpdate> {
         assert_eq!(grads.len(), self.workers);
+        self.rounds_seen += 1;
+        if self.schedule.period() == 1 {
+            return self.comm_round(grads);
+        }
+        if self.acc.is_empty() {
+            self.acc = (0..self.workers)
+                .map(|_| self.layers.iter().map(|&dim| vec![0.0; dim]).collect())
+                .collect();
+        }
+        for (aw, gw) in self.acc.iter_mut().zip(grads) {
+            for (al, gl) in aw.iter_mut().zip(gw) {
+                crate::tensor::axpy(1.0, gl, al);
+            }
+        }
+        if !self.schedule.is_comm_round(self.rounds_seen) {
+            // Local round: nothing crosses any link. (The zero updates are
+            // freshly allocated because the caller takes ownership; at one
+            // O(d) allocation it is the same order as the accumulation
+            // pass above — acceptable for the simulation-side path.)
+            return self
+                .layers
+                .iter()
+                .map(|&dim| LayerUpdate {
+                    grad: vec![0.0; dim],
+                    upload_bytes: 0,
+                    ideal_bits: 0,
+                })
+                .collect();
+        }
+        self.synchronize_acc()
+    }
+
+    /// Flush a pending partial local-step block: if any rounds accumulated
+    /// since the last synchronization, ship them now (one normal comm
+    /// round) and return the updates. The cluster is round-driven and has
+    /// no horizon of its own, so drivers that stop between scheduled
+    /// synchronization points call this at the end of training — the
+    /// analogue of the final-round flush the sync/dist coordinators do —
+    /// or the tail gradients would be dropped. No-op (`None`) under the
+    /// every-round schedule or when nothing is pending.
+    pub fn flush(&mut self) -> Option<Vec<LayerUpdate>> {
+        if self.schedule.period() == 1 || self.rounds_seen == self.last_comm {
+            return None;
+        }
+        Some(self.synchronize_acc())
+    }
+
+    /// Ship the accumulated sums through one comm round and reset them.
+    fn synchronize_acc(&mut self) -> Vec<LayerUpdate> {
+        self.last_comm = self.rounds_seen;
+        let acc = std::mem::take(&mut self.acc);
+        let updates = self.comm_round(&acc);
+        self.acc = acc;
+        for aw in self.acc.iter_mut() {
+            for al in aw.iter_mut() {
+                al.fill(0.0);
+            }
+        }
+        updates
+    }
+
+    /// One synchronization round over `grads` (the accumulated sums under
+    /// a local-step schedule). Sparsification + encoding + sending run on
+    /// one scoped thread per worker; the leader receives from each link in
+    /// worker-id order, decodes and averages. Returns per-layer updates.
+    fn comm_round(&mut self, grads: &[Vec<Vec<f32>>]) -> Vec<LayerUpdate> {
         let layers = self.layers.clone();
         let use_batch: Vec<bool> = (0..self.workers).map(|w| self.batched_link(w)).collect();
 
@@ -352,13 +452,14 @@ impl Cluster {
         let broadcast: u64 = layers.iter().map(|&dim| (dim * 4) as u64).sum();
         self.sim_time_s += self.net.round_time_s(&per_worker_bytes, broadcast);
         // Counters are cumulative across rounds; overwrite the measured
-        // column with their current totals.
+        // columns with their current totals.
         let measured = self
             .leader_links
             .iter()
             .map(|c| c.counters().bytes_total())
             .sum();
         self.ledger.set_measured(measured);
+        self.ledger.set_measured_frames(self.frames_received());
         updates
     }
 
@@ -375,15 +476,26 @@ impl Cluster {
 
 /// Per-layer round: one `GRAD` frame per layer (the historical path, and
 /// the fallback for v2 peers / non-batchable methods). With a single
-/// shared compressor (batched cluster talking to a v2 peer) every layer
-/// runs through instance 0 — identical messages for the stateless
-/// batchable methods.
+/// shared compressor (batched cluster talking to a v2 peer) the whole
+/// layer list runs through [`Compressor::compress_batch_into`] on instance
+/// 0 — identical messages for the stateless batchable methods (pinned by
+/// the batch-equivalence tests), and the *required* entry point for
+/// error-feedback wrappers, whose per-layer residual layout lives in that
+/// one instance.
 fn worker_round_per_layer(st: &mut WorkerComm, worker_grads: &[Vec<f32>], codec: WireCodec) {
-    let shared_comp = st.compressors.len() == 1;
+    if st.compressors.len() == 1 {
+        let refs: Vec<&[f32]> = worker_grads.iter().map(|g| g.as_slice()).collect();
+        st.compressors[0].compress_batch_into(&refs, &mut st.rand, &mut st.msgs, &mut st.stats_buf);
+    } else {
+        st.stats_buf.clear();
+        for (l, g) in worker_grads.iter().enumerate() {
+            let stats = st.compressors[l].compress_into(g, &mut st.rand, &mut st.msgs[l]);
+            st.stats_buf.push(stats);
+        }
+    }
     for (l, g) in worker_grads.iter().enumerate() {
-        let ci = if shared_comp { 0 } else { l };
+        let stats = st.stats_buf[l];
         let g_norm = crate::tensor::norm2_sq(g) as f64;
-        let stats = st.compressors[ci].compress_into(g, &mut st.rand, &mut st.msgs[l]);
         let msg = &st.msgs[l];
         let (kind, q_norm): (u8, f64) = match msg {
             Compressed::Sparse(sg) => {

@@ -27,14 +27,15 @@
 //! (handshakes, pulls, weights, gradients, shutdowns — payload plus length
 //! prefixes), summed from the per-link [`LinkCounters`].
 
+use crate::api::MethodSpec;
 use crate::coding::WireCodec;
 use crate::config::Method;
 use crate::coordinator::sync::estimate_f_star;
 use crate::data::gen_logistic;
+use crate::feedback::{CommSchedule, FeedbackConfig};
 use crate::metrics::{CurvePoint, RunCurve, SparsityMeter, VarianceRatio};
 use crate::model::{ConvexModel, LogisticModel};
 use crate::rngkit::{RandArray, Xoshiro256pp};
-use crate::api::MethodSpec;
 use crate::sparsify::{Compressed, SparseGrad};
 use crate::transport::frame::{self, GradHeader, MsgView};
 use crate::transport::{
@@ -71,6 +72,15 @@ pub struct RunPlan {
     /// Wire codec for sparse gradient payloads; every worker's handshake
     /// must announce the same one or the accept phase refuses the link.
     pub codec: WireCodec,
+    /// Local-step period `H` (Qsparse-local-SGD style): each worker pulls
+    /// once, runs `H` local gradient steps, and pushes one compressed
+    /// accumulated gradient — `rounds` counts *local* rounds, so the wire
+    /// carries `⌈rounds / H⌉` pull/push pairs per worker. `1` (the
+    /// default) is the historical round-per-push schedule.
+    pub local_steps: usize,
+    /// Error-feedback memory around every worker's compressor (ships to
+    /// worker processes in the CONFIG frame like everything else).
+    pub feedback: Option<FeedbackConfig>,
 }
 
 /// Deprecated name of [`RunPlan`].
@@ -98,13 +108,19 @@ impl Default for RunPlan {
             c2: 0.25,
             reg: 1.0 / (10.0 * 1024.0),
             codec: WireCodec::Raw,
+            local_steps: 1,
+            feedback: None,
         }
     }
 }
 
-/// Version 2 appended the wire-codec byte.
-const CONFIG_VERSION: u8 = 2;
-const CONFIG_LEN: usize = 2 + 6 * 4 + 8 + 5 * 4 + 1;
+/// Version 2 appended the wire-codec byte; version 3 appended the
+/// local-step period and the error-feedback toggle + decay.
+const CONFIG_VERSION: u8 = 3;
+/// Offset of the codec byte: version + method + 6×u32 + u64 seed + 5×f32.
+const CONFIG_CODEC_AT: usize = 2 + 6 * 4 + 8 + 5 * 4;
+/// Codec byte + u32 local_steps + feedback flag + f32 decay.
+const CONFIG_LEN: usize = CONFIG_CODEC_AT + 1 + 4 + 1 + 4;
 
 impl RunPlan {
     /// Serialize for the `CONFIG` frame (fixed-width LE fields).
@@ -131,6 +147,11 @@ impl RunPlan {
             out.extend_from_slice(&v.to_le_bytes());
         }
         out.push(self.codec.index() as u8);
+        out.extend_from_slice(&(self.local_steps.max(1) as u32).to_le_bytes());
+        out.push(u8::from(self.feedback.is_some()));
+        out.extend_from_slice(
+            &self.feedback.map(|f| f.decay).unwrap_or(0.0).to_le_bytes(),
+        );
         out
     }
 
@@ -147,8 +168,25 @@ impl RunPlan {
         let f32_at = |i: usize| {
             f32::from_le_bytes(buf[f_base + 4 * i..f_base + 4 * (i + 1)].try_into().unwrap())
         };
-        let codec = WireCodec::from_u8(buf[CONFIG_LEN - 1])
-            .ok_or_else(|| anyhow::anyhow!("unknown codec id {}", buf[CONFIG_LEN - 1]))?;
+        let codec_at = CONFIG_CODEC_AT;
+        let codec = WireCodec::from_u8(buf[codec_at])
+            .ok_or_else(|| anyhow::anyhow!("unknown codec id {}", buf[codec_at]))?;
+        let local_steps = u32::from_le_bytes(
+            buf[codec_at + 1..codec_at + 5].try_into().unwrap(),
+        ) as usize;
+        anyhow::ensure!(local_steps >= 1, "local_steps must be ≥ 1");
+        let fb_flag = buf[codec_at + 5];
+        anyhow::ensure!(fb_flag <= 1, "unknown feedback flag {fb_flag}");
+        let decay = f32::from_le_bytes(buf[codec_at + 6..codec_at + 10].try_into().unwrap());
+        let feedback = if fb_flag == 1 {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&decay),
+                "feedback decay {decay} out of [0, 1]"
+            );
+            Some(FeedbackConfig::with_decay(decay))
+        } else {
+            None
+        };
         Ok(Self {
             workers: u32_at(0) as usize,
             rounds: u32_at(1) as usize,
@@ -164,6 +202,8 @@ impl RunPlan {
             c2: f32_at(3),
             reg: f32_at(4),
             codec,
+            local_steps,
+            feedback,
         })
     }
 }
@@ -206,9 +246,15 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
     let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
     let model = LogisticModel::new(cfg.reg);
 
-    // ---- accept + config distribution (codec agreement checked here) ----
-    let mut conns: Vec<Box<dyn Connection>> =
-        crate::transport::accept_n(listener, cfg.workers, cfg.codec)?;
+    // ---- accept + config distribution (codec agreement checked here; the
+    // per-peer hello version decides the weights-frame flavor below) ----
+    let accepted = crate::transport::accept_n_hello(listener, cfg.workers, cfg.codec)?;
+    let mut conns: Vec<Box<dyn Connection>> = Vec::with_capacity(cfg.workers);
+    let mut peer_batch: Vec<bool> = Vec::with_capacity(cfg.workers);
+    for (conn, hello) in accepted {
+        peer_batch.push(hello.supports_batch());
+        conns.push(conn);
+    }
     let counters: Vec<LinkCounters> = conns.iter().map(|c| c.counters()).collect();
     let cfg_bytes = cfg.encode();
     let mut txbuf = Vec::new();
@@ -218,10 +264,12 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
     }
 
     // ---- training state ----
+    let schedule = CommSchedule::every(cfg.local_steps);
+    let blocks = schedule.blocks(cfg.rounds);
     let mut w = vec![0.0f32; d];
     let mut version = 0u64;
     let mut t = 0u64;
-    let total = (cfg.rounds * cfg.workers) as u64;
+    let total = (blocks * cfg.workers) as u64;
     let record_every = (total / 50).max(1);
     let mut curve = RunCurve::new(format!("dist-{}(M={})", cfg.method, cfg.workers));
     let mut var_meter = VarianceRatio::default();
@@ -233,21 +281,52 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
     let mut rxbuf = Vec::new();
     let mut sg = SparseGrad::empty(0);
     let mut round_bytes = vec![0u64; cfg.workers];
+    let mut samples_done = 0u64;
+    let mut txbuf_batch = Vec::new();
     let start = Instant::now();
 
-    for _round in 0..cfg.rounds {
+    // One pull/push pair per worker per *block* of `local_steps` rounds:
+    // the rounds inside a block happen entirely on the workers (local
+    // gradient steps, zero wire traffic) — visible below as the frame and
+    // byte counters scaling with `blocks`, not `rounds`.
+    for block in 0..blocks {
+        let block_len = schedule.block_len(block, cfg.rounds) as u64;
         // Phase 1: answer one pull per worker, all at the same version —
-        // the weights frame is identical for everyone, so encode it once.
-        frame::encode_weights(&mut txbuf, version, &w);
-        for conn in conns.iter_mut() {
+        // encode each weights flavor at most once. A *multi-tensor* weight
+        // set goes to batch-capable (v3) peers as one WEIGHTS_BATCH frame
+        // (the download sibling of GRAD_BATCH — one frame per round-trip
+        // regardless of the tensor count), with the plain per-tensor
+        // WEIGHTS fallback for v2 peers. This runtime's model is a single
+        // flat vector, for which plain WEIGHTS is already one frame per
+        // round-trip and 8 bytes cheaper, so everyone gets it; the
+        // negotiation and both decode paths are in place for the
+        // multi-tensor models the ROADMAP targets (run_worker accepts
+        // either flavor).
+        let weight_tensors: &[&[f32]] = &[w.as_slice()];
+        let mut plain_encoded = false;
+        let mut batch_encoded = false;
+        for (wid, conn) in conns.iter_mut().enumerate() {
             conn.recv(&mut rxbuf)?;
             match frame::decode(&rxbuf)? {
                 MsgView::Pull => {}
                 _ => anyhow::bail!("expected pull from {}", conn.peer()),
             }
-            conn.send(&txbuf)?;
+            if peer_batch[wid] && weight_tensors.len() > 1 {
+                if !batch_encoded {
+                    frame::encode_weights_batch(&mut txbuf_batch, version, weight_tensors);
+                    batch_encoded = true;
+                }
+                conn.send(&txbuf_batch)?;
+            } else {
+                if !plain_encoded {
+                    frame::encode_weights(&mut txbuf, version, &w);
+                    plain_encoded = true;
+                }
+                conn.send(&txbuf)?;
+            }
         }
-        // Phase 2: apply one gradient per worker, in worker-id order.
+        // Phase 2: apply one (accumulated) gradient per worker, in
+        // worker-id order.
         for (wid, conn) in conns.iter_mut().enumerate() {
             conn.recv(&mut rxbuf)?;
             let (header, payload) = match frame::decode(&rxbuf)? {
@@ -290,9 +369,10 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
             let msg_codec = if header.kind == 0 { cfg.codec } else { WireCodec::Raw };
             curve.ledger.record_codec(header.ideal_bits, upload, msg_codec);
             round_bytes[wid] = upload;
+            samples_done += block_len * cfg.batch as u64;
             if t % record_every == 0 || t == total {
                 curve.points.push(CurvePoint {
-                    data_passes: (t * cfg.batch as u64) as f64 / ds.n() as f64,
+                    data_passes: samples_done as f64 / ds.n() as f64,
                     loss: model.loss(&ds, &w),
                     comm_bits: curve.ledger.wire_bytes * 8,
                     wall_ms: start.elapsed().as_secs_f64() * 1e3,
@@ -316,6 +396,9 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
     let measured_tx: u64 = counters.iter().map(|c| c.bytes_tx()).sum();
     let measured_rx: u64 = counters.iter().map(|c| c.bytes_rx()).sum();
     curve.ledger.measured_bytes = measured_tx + measured_rx;
+    curve
+        .ledger
+        .set_measured_frames(counters.iter().map(|c| c.frames_tx() + c.frames_rx()).sum());
     curve.var_ratio = var_meter.value();
     curve.sparsity = spa_meter.value();
     let final_loss = model.loss(&ds, &w);
@@ -356,6 +439,8 @@ pub fn run_worker(
     let d = cfg.d;
     let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
     let model = LogisticModel::new(cfg.reg);
+    let schedule = CommSchedule::every(cfg.local_steps);
+    let h = schedule.period();
     // Same per-worker RNG streams as the in-process parameter server, so a
     // worker's gradient sequence is comparable across deployments.
     let mut rng = Xoshiro256pp::for_worker(cfg.seed, worker_id as usize);
@@ -364,35 +449,66 @@ pub fn run_worker(
         (4 * d).max(1 << 12),
     );
     // Same compressor construction as the sync trainer (eps = C1·C2 for
-    // GSpar-exact), so sync-vs-dist comparisons compare like with like.
-    let mut compressor =
-        MethodSpec::from_parts(cfg.method, cfg.rho, cfg.c1 * cfg.c2, cfg.qsgd_bits).build();
+    // GSpar-exact), wrapped in the config-shipped error-feedback memory
+    // when the plan asks for it, so sync-vs-dist comparisons compare like
+    // with like.
+    let mut compressor = crate::api::build_compressor(
+        MethodSpec::from_parts(cfg.method, cfg.rho, cfg.c1 * cfg.c2, cfg.qsgd_bits),
+        cfg.feedback,
+    );
     let mut msg = Compressed::Sparse(SparseGrad::empty(d));
     let mut w_local: Vec<f32> = Vec::with_capacity(d);
     let mut grad = vec![0.0f32; d];
+    let mut acc = vec![0.0f32; d];
     let mut wire = Vec::new();
     let mut dense_tx: Vec<f32> = Vec::new();
     let mut dense_scratch: Vec<u8> = Vec::new();
     let mut idx = Vec::with_capacity(cfg.batch);
+    let mut rounds_done = 0usize;
 
     loop {
         frame::encode_pull(&mut txbuf);
         conn.send(&txbuf)?;
         conn.recv(&mut rxbuf)?;
-        let (version, w_bytes) = match frame::decode(&rxbuf)? {
+        let version = match frame::decode(&rxbuf)? {
             MsgView::Shutdown => break,
-            MsgView::Weights { version, w_bytes } => (version, w_bytes),
+            MsgView::Weights { version, w_bytes } => {
+                anyhow::ensure!(w_bytes.len() == 4 * d, "weights length");
+                frame::weights_into(w_bytes, &mut w_local);
+                version
+            }
+            MsgView::WeightsBatch { version, batch } => {
+                // The batched pull (one frame for the whole tensor list);
+                // this runtime's model is one flat vector, so the
+                // concatenated arena must match `d` exactly.
+                frame::weights_batch_into(batch, &mut w_local);
+                anyhow::ensure!(w_local.len() == d, "weights batch total length");
+                version
+            }
             _ => anyhow::bail!("expected weights or shutdown"),
         };
-        anyhow::ensure!(w_bytes.len() == 4 * d, "weights length");
-        frame::weights_into(w_bytes, &mut w_local);
-        idx.clear();
-        for _ in 0..cfg.batch {
-            idx.push(rng.next_below(ds.n() as u64) as usize);
+        // One block of `H` local rounds (fewer on the trailing partial
+        // block): gradient + local step per round, one compressed
+        // accumulated push at the end — nothing else touches the wire.
+        let block_len = h.min(cfg.rounds - rounds_done);
+        acc.fill(0.0);
+        for s in 0..block_len {
+            idx.clear();
+            for _ in 0..cfg.batch {
+                idx.push(rng.next_below(ds.n() as u64) as usize);
+            }
+            model.grad_minibatch(&ds, &w_local, &idx, &mut grad);
+            crate::tensor::axpy(1.0, &grad, &mut acc);
+            // The next block starts by pulling fresh weights, so the last
+            // iteration's local step would be dead work.
+            if h > 1 && s + 1 < block_len {
+                let eta_local = cfg.lr / (1.0 + version as f32 / cfg.workers as f32);
+                crate::tensor::axpy(-eta_local, &grad, &mut w_local);
+            }
         }
-        model.grad_minibatch(&ds, &w_local, &idx, &mut grad);
-        let g_norm_sq = crate::tensor::norm2_sq(&grad) as f64;
-        let stats = compressor.compress_into(&grad, &mut rand, &mut msg);
+        rounds_done += block_len;
+        let g_norm_sq = crate::tensor::norm2_sq(&acc) as f64;
+        let stats = compressor.compress_into(&acc, &mut rand, &mut msg);
         let q_norm_sq = msg.norm2_sq();
         let (kind, payload): (u8, &[u8]) = match &msg {
             Compressed::Sparse(sg) => {
@@ -562,11 +678,14 @@ mod tests {
 
     #[test]
     fn config_roundtrip() {
+        let codec_at = CONFIG_CODEC_AT;
         for codec in [WireCodec::Raw, WireCodec::Entropy] {
             let cfg = RunPlan {
                 method: Method::Qsgd,
                 seed: 0xDEADBEEF,
                 codec,
+                local_steps: 3,
+                feedback: Some(FeedbackConfig::with_decay(0.75)),
                 ..small_cfg()
             };
             let bytes = cfg.encode();
@@ -576,9 +695,90 @@ mod tests {
             bad[1] = 200;
             assert!(RunPlan::decode(&bad).is_err());
             let mut bad = bytes.clone();
-            *bad.last_mut().unwrap() = 9; // unknown codec id
+            bad[codec_at] = 9; // unknown codec id
+            assert!(RunPlan::decode(&bad).is_err());
+            let mut bad = bytes.clone();
+            bad[codec_at + 5] = 7; // unknown feedback flag
+            assert!(RunPlan::decode(&bad).is_err());
+            // local_steps = 0 is not a valid shipped schedule.
+            let mut bad = bytes.clone();
+            bad[codec_at + 1..codec_at + 5].copy_from_slice(&0u32.to_le_bytes());
             assert!(RunPlan::decode(&bad).is_err());
         }
+        // The default plan (no feedback, every-round) roundtrips too.
+        let cfg = small_cfg();
+        assert_eq!(RunPlan::decode(&cfg.encode()).unwrap(), cfg);
+    }
+
+    #[test]
+    fn local_steps_ship_fewer_frames_and_bytes_deterministically() {
+        // H = 4 over the same total local-round budget: every wire column
+        // must scale with blocks (⌈rounds/H⌉), not rounds — local rounds
+        // provably ship nothing — and the run stays deterministic and
+        // bitwise identical across backends (tests/feedback.rs covers the
+        // TCP leg).
+        let base = RunPlan {
+            rounds: 64,
+            ..small_cfg()
+        };
+        let h4 = RunPlan {
+            local_steps: 4,
+            ..base.clone()
+        };
+        let every = run_threads(InProcTransport::new(), "ls-1", &base).unwrap();
+        let local = run_threads(InProcTransport::new(), "ls-4", &h4).unwrap();
+        let local2 = run_threads(InProcTransport::new(), "ls-4b", &h4).unwrap();
+        assert_eq!(local.grad_digest, local2.grad_digest);
+        assert_eq!(local.final_w, local2.final_w);
+        // 64 rounds → 16 blocks → 16 pushes per worker.
+        assert_eq!(local.versions, 16 * base.workers as u64);
+        assert_eq!(every.versions, 64 * base.workers as u64);
+        assert_eq!(
+            local.curve.ledger.messages * 4,
+            every.curve.ledger.messages
+        );
+        // Per-link frames: 1 hello + 1 config + (blocks + 1) pulls +
+        // blocks weights + blocks grads + 1 shutdown = 3·blocks + 4.
+        let frames_for = |blocks: u64| (3 * blocks + 4) * base.workers as u64;
+        assert_eq!(local.curve.ledger.measured_frames, frames_for(16));
+        assert_eq!(every.curve.ledger.measured_frames, frames_for(64));
+        assert!(
+            local.curve.ledger.measured_bytes < every.curve.ledger.measured_bytes / 3,
+            "H=4 measured {} should be well under a third of H=1's {}",
+            local.curve.ledger.measured_bytes,
+            every.curve.ledger.measured_bytes
+        );
+        // Still optimizes: the accumulated-gradient schedule must reach a
+        // loss comparable to (here: below a loose multiple of) every-round.
+        let ds = gen_logistic(base.n, base.d, base.c1, base.c2, base.seed);
+        let model = LogisticModel::new(base.reg);
+        let f0 = model.loss(&ds, &vec![0.0; base.d]);
+        assert!(local.final_loss < f0, "{f0} -> {}", local.final_loss);
+    }
+
+    #[test]
+    fn feedback_plan_converges_and_is_deterministic() {
+        let cfg = RunPlan {
+            method: Method::TopK,
+            rho: 0.05,
+            feedback: Some(FeedbackConfig::default()),
+            ..small_cfg()
+        };
+        let a = run_threads(InProcTransport::new(), "fb-a", &cfg).unwrap();
+        let b = run_threads(InProcTransport::new(), "fb-b", &cfg).unwrap();
+        assert_eq!(a.grad_digest, b.grad_digest);
+        assert_eq!(a.final_w, b.final_w);
+        let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
+        let model = LogisticModel::new(cfg.reg);
+        let f0 = model.loss(&ds, &vec![0.0; cfg.d]);
+        assert!(a.final_loss < f0, "{f0} -> {}", a.final_loss);
+        // And the feedback run genuinely differs from the memoryless one.
+        let plain = RunPlan {
+            feedback: None,
+            ..cfg.clone()
+        };
+        let p = run_threads(InProcTransport::new(), "fb-p", &plain).unwrap();
+        assert_ne!(p.grad_digest, a.grad_digest);
     }
 
     #[test]

@@ -138,6 +138,12 @@ pub(crate) fn run_session(
     let codec = session.codec();
     let seed = session.seed();
     let spec = session.method();
+    let feedback = session.feedback();
+    // Local-step scheduling: each worker claims up to H iterations from
+    // the push budget, pulls once, runs them locally (accumulating the
+    // gradient sum, stepping its own iterate), and pushes the compressed
+    // accumulation — one pull + one push per H iterations on the wire.
+    let h = session.local_steps();
     let store = Arc::new(WeightStore {
         state: Mutex::new((vec![0.0f32; d], 0)),
     });
@@ -154,6 +160,9 @@ pub(crate) fn run_session(
     // backlog so "staleness" cannot hide as pipeline lag while the server
     // is busy (e.g. taking a loss snapshot).
     let sent = Arc::new(AtomicU64::new(0));
+    // Gradient iterations actually computed (the data-passes numerator:
+    // a worker's trailing block may claim fewer than H iterations).
+    let iterations_done = Arc::new(AtomicU64::new(0));
     // Worker → server pushes travel through the transport layer: one
     // framed in-process link per worker, multiplexed into arrival order at
     // the server — same abstraction, different backend, as the TCP runtime.
@@ -201,6 +210,7 @@ pub(crate) fn run_session(
             let clocks = Arc::clone(&clocks);
             let applied = Arc::clone(&applied);
             let sent = Arc::clone(&sent);
+            let iterations_done = Arc::clone(&iterations_done);
             let mut conn = worker_conns[wid].take().expect("connection unclaimed");
             scope.spawn(move || {
                 let mut rng = Xoshiro256pp::for_worker(seed, wid);
@@ -208,9 +218,12 @@ pub(crate) fn run_session(
                     Xoshiro256pp::for_worker(seed ^ 0x9511, wid),
                     (4 * d).max(1 << 12),
                 );
-                let mut compressor = spec.build();
+                let mut compressor = crate::api::build_compressor(spec, feedback);
                 let mut w_local = vec![0.0f32; d];
                 let mut grad = vec![0.0f32; d];
+                // Gradient sum accumulated over one local-step block (for
+                // H = 1 this is bitwise the single minibatch gradient).
+                let mut acc = vec![0.0f32; d];
                 // Reused across pushes: the compressor writes into `msg`
                 // in place; only the wire bytes are freshly allocated, since
                 // they are moved into the channel.
@@ -224,13 +237,19 @@ pub(crate) fn run_session(
                 let mut my_version = 0u64;
                 let (clock_mx, clock_cv) = &*clocks;
                 loop {
-                    // Claim a push from the budget.
-                    if budget
-                        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| {
-                            b.checked_sub(1)
-                        })
-                        .is_err()
+                    // Claim up to H iterations from the budget (H = 1:
+                    // exactly the historical one-claim-per-push loop).
+                    let mut claimed = 0usize;
+                    while claimed < h
+                        && budget
+                            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| {
+                                b.checked_sub(1)
+                            })
+                            .is_ok()
                     {
+                        claimed += 1;
+                    }
+                    if claimed == 0 {
                         break;
                     }
                     // SSP gate: block while this worker is more than
@@ -273,13 +292,26 @@ pub(crate) fn run_session(
                         w_local.copy_from_slice(w);
                         my_version = version;
                     }
-                    // Local gradient.
-                    let idx: Vec<usize> = (0..batch)
-                        .map(|_| rng.next_below(ds.n() as u64) as usize)
-                        .collect();
-                    model.grad_minibatch(ds, &w_local, &idx, &mut grad);
-                    let g_norm = crate::tensor::norm2_sq(&grad) as f64;
-                    let stats = compressor.compress_into(&grad, &mut rand, &mut msg);
+                    // Local block: `claimed` gradient computations against
+                    // the worker's own iterate, no wire traffic until the
+                    // accumulated sum is pushed below.
+                    acc.fill(0.0);
+                    for s in 0..claimed {
+                        let idx: Vec<usize> = (0..batch)
+                            .map(|_| rng.next_below(ds.n() as u64) as usize)
+                            .collect();
+                        model.grad_minibatch(ds, &w_local, &idx, &mut grad);
+                        crate::tensor::axpy(1.0, &grad, &mut acc);
+                        // The next block starts with a fresh pull, so the
+                        // last iteration's local step would be dead work.
+                        if h > 1 && s + 1 < claimed {
+                            let eta_local = lr / (1.0 + my_version as f32 / workers as f32);
+                            crate::tensor::axpy(-eta_local, &grad, &mut w_local);
+                        }
+                    }
+                    iterations_done.fetch_add(claimed as u64, Ordering::Relaxed);
+                    let g_norm = crate::tensor::norm2_sq(&acc) as f64;
+                    let stats = compressor.compress_into(&acc, &mut rand, &mut msg);
                     let q_norm = msg.norm2_sq();
                     let (kind, payload): (u8, &[u8]) = match &msg {
                         Compressed::Sparse(sg) => {
@@ -370,8 +402,11 @@ pub(crate) fn run_session(
             let _ = header.based_on;
             if t % record_every == 0 {
                 let w_snapshot = store.state.lock().unwrap().0.clone();
+                let iters = iterations_done.load(Ordering::Relaxed);
                 curve.points.push(CurvePoint {
-                    data_passes: (t * batch as u64) as f64 / ds.n() as f64,
+                    // Iterations actually computed (each push covers up to
+                    // H minibatches; trailing partial blocks fewer).
+                    data_passes: (iters * batch as u64) as f64 / ds.n() as f64,
                     loss: model.loss(ds, &w_snapshot),
                     comm_bits: wire_bytes * 8,
                     wall_ms: start.elapsed().as_secs_f64() * 1e3,
@@ -385,6 +420,9 @@ pub(crate) fn run_session(
     let measured_bytes: u64 = link_counters.iter().map(|c| c.bytes_total()).sum();
     curve.var_ratio = var_meter.value();
     curve.ledger.set_measured(measured_bytes);
+    curve.ledger.set_measured_frames(
+        link_counters.iter().map(|c| c.frames_rx() + c.frames_tx()).sum(),
+    );
     let wire_bytes_by_codec = curve.ledger.wire_bytes_by_codec;
     PsReport {
         curve,

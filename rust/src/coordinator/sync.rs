@@ -98,6 +98,13 @@ struct Worker {
     compressor: Box<dyn Compressor>,
     grad: Vec<f32>,
     ref_grad: Vec<f32>,
+    /// The worker's local iterate: equals the global `w` when `H = 1`, and
+    /// drifts through local gradient steps between synchronizations when
+    /// the session schedules local steps (`H > 1`).
+    w_local: Vec<f32>,
+    /// Gradient sum accumulated since the last synchronization; what gets
+    /// compressed and transmitted on a communication round.
+    acc: Vec<f32>,
     msg: Compressed,
     conn: Box<dyn Connection>,
 }
@@ -184,6 +191,8 @@ pub(crate) fn run_session(
             compressor: session.compressor(),
             grad: vec![0.0; d],
             ref_grad: vec![0.0; d],
+            w_local: vec![0.0; d],
+            acc: vec![0.0; d],
             msg: Compressed::Sparse(SparseGrad::empty(d)),
             conn: transport
                 .connect("sync", &Hello::with_codec(w as u32, codec))
@@ -242,6 +251,17 @@ pub(crate) fn run_session(
         OptKind::Svrg(_) => LrSchedule::constant(task.lr),
     };
 
+    // Local-step scheduling (Qsparse-local-SGD style): workers synchronize
+    // only on communication rounds; in between they take local gradient
+    // steps and accumulate, and *nothing* crosses any link. The final
+    // round always flushes so no tail gradient is lost.
+    let h = session.local_steps();
+    let comm_schedule = session.comm_schedule();
+    assert!(
+        h == 1 || !is_svrg,
+        "local-step scheduling (H > 1) is not defined for the SVRG variants"
+    );
+
     // Record the starting point.
     curve.points.push(CurvePoint {
         data_passes: 0.0,
@@ -261,12 +281,13 @@ pub(crate) fn run_session(
             sim_time += net.round_time_s(&vec![bytes; m], bytes);
         }
 
-        // ---- Algorithm 1 steps 3–5: local gradients + sparsification ----
-        let mut upload_bytes = 0u64;
-        let mut all_sparse = true;
-        for (widx, (worker, slot)) in workers.iter_mut().zip(decoded.iter_mut()).enumerate() {
+        let comm = comm_schedule.is_comm_round(t as u64) || t == total_rounds;
+
+        // ---- Algorithm 1 steps 3–4: local gradients (+ local steps) ----
+        let var_before = var_meter.value().max(1e-12);
+        for worker in workers.iter_mut() {
             worker.sample_batch(task.batch, &mut batch_idx);
-            model.grad_minibatch(ds, &w, &batch_idx, &mut worker.grad);
+            model.grad_minibatch(ds, &worker.w_local, &batch_idx, &mut worker.grad);
             if let OptKind::Svrg(variant) = task.opt {
                 model.grad_minibatch(ds, &w_ref, &batch_idx, &mut worker.ref_grad);
                 match variant {
@@ -284,104 +305,131 @@ pub(crate) fn run_session(
                     }
                 }
             }
-            let g_norm = crate::tensor::norm2_sq(&worker.grad) as f64;
-            let stats =
-                worker
-                    .compressor
-                    .compress_into(&worker.grad, &mut worker.rand, &mut worker.msg);
-            let q_norm = worker.msg.norm2_sq();
-            var_meter.record(q_norm, g_norm);
-            spa_meter.record(stats.expected_nnz, d);
-            // Honest wire accounting: every message is framed and shipped
-            // over the worker's transport link; the master decodes from
-            // what actually arrived. Sparse messages travel as codec
-            // bytes; quantized/dense ones as raw f32 (their wire ledger
-            // entry stays the idealized byte size, as before).
-            let (kind, msg_bytes): (u8, u64) = match &worker.msg {
-                Compressed::Sparse(sg) => {
-                    crate::coding::encode_with(sg, codec, &mut wire);
-                    (0, wire.len() as u64)
-                }
-                other => {
-                    all_sparse = false;
-                    other.dense_le_bytes_into(&mut dense_tx, &mut dense_bytes);
-                    (1, (stats.ideal_bits / 8).max(1))
-                }
-            };
-            let header = GradHeader {
-                based_on: t as u64,
-                g_norm_sq: g_norm,
-                q_norm_sq: q_norm,
-                expected_nnz: stats.expected_nnz,
-                ideal_bits: stats.ideal_bits,
-                kind,
-            };
-            let payload: &[u8] = if kind == 0 { &wire } else { &dense_bytes };
-            frame::encode_grad(&mut frame_buf, &header, payload);
-            worker.conn.send(&frame_buf).expect("master link alive");
-            master_links[widx].recv(&mut rx_frame).expect("worker frame");
-            match frame::decode(&rx_frame).expect("self-encoded") {
-                MsgView::Grad { header: h, payload } => {
-                    if h.kind == 0 {
-                        crate::coding::decode_into(payload, slot).expect("self-encoded");
-                    } else {
-                        frame::weights_into(payload, &mut dense_rx[widx]);
+            crate::tensor::axpy(1.0, &worker.grad, &mut worker.acc);
+            // (On a comm round `w_local` is about to be overwritten by the
+            // fresh global `w`, so the local step would be dead work.)
+            if h > 1 && !comm {
+                // Local step on the worker's own iterate; the accumulated
+                // gradient (not the local trajectory) is what synchronizes.
+                let eta_local = match task.opt {
+                    OptKind::Sgd => schedule.eta(t as u64, var_before),
+                    OptKind::SgdInvT => schedule.eta(t as u64, 1.0),
+                    OptKind::Svrg(_) => unreachable!("SVRG is gated to H = 1"),
+                };
+                crate::tensor::axpy(-eta_local, &worker.grad, &mut worker.w_local);
+            }
+        }
+
+        // ---- Local rounds end here: zero frames, zero bytes on the wire.
+        if comm {
+            // ---- Step 5: sparsify + ship the accumulated gradients ----
+            let mut upload_bytes = 0u64;
+            let mut all_sparse = true;
+            for (widx, (worker, slot)) in workers.iter_mut().zip(decoded.iter_mut()).enumerate() {
+                let g_norm = crate::tensor::norm2_sq(&worker.acc) as f64;
+                let stats =
+                    worker
+                        .compressor
+                        .compress_into(&worker.acc, &mut worker.rand, &mut worker.msg);
+                let q_norm = worker.msg.norm2_sq();
+                var_meter.record(q_norm, g_norm);
+                spa_meter.record(stats.expected_nnz, d);
+                // Honest wire accounting: every message is framed and shipped
+                // over the worker's transport link; the master decodes from
+                // what actually arrived. Sparse messages travel as codec
+                // bytes; quantized/dense ones as raw f32 (their wire ledger
+                // entry stays the idealized byte size, as before).
+                let (kind, msg_bytes): (u8, u64) = match &worker.msg {
+                    Compressed::Sparse(sg) => {
+                        crate::coding::encode_with(sg, codec, &mut wire);
+                        (0, wire.len() as u64)
                     }
-                    kinds[widx] = h.kind;
+                    other => {
+                        all_sparse = false;
+                        other.dense_le_bytes_into(&mut dense_tx, &mut dense_bytes);
+                        (1, (stats.ideal_bits / 8).max(1))
+                    }
+                };
+                let header = GradHeader {
+                    based_on: t as u64,
+                    g_norm_sq: g_norm,
+                    q_norm_sq: q_norm,
+                    expected_nnz: stats.expected_nnz,
+                    ideal_bits: stats.ideal_bits,
+                    kind,
+                };
+                let payload: &[u8] = if kind == 0 { &wire } else { &dense_bytes };
+                frame::encode_grad(&mut frame_buf, &header, payload);
+                worker.conn.send(&frame_buf).expect("master link alive");
+                master_links[widx].recv(&mut rx_frame).expect("worker frame");
+                match frame::decode(&rx_frame).expect("self-encoded") {
+                    MsgView::Grad { header: hd, payload } => {
+                        if hd.kind == 0 {
+                            crate::coding::decode_into(payload, slot).expect("self-encoded");
+                        } else {
+                            frame::weights_into(payload, &mut dense_rx[widx]);
+                        }
+                        kinds[widx] = hd.kind;
+                    }
+                    other => panic!("unexpected message from worker: {other:?}"),
                 }
-                other => panic!("unexpected message from worker: {other:?}"),
+                upload_bytes += msg_bytes;
+                let msg_codec = if kind == 0 { codec } else { WireCodec::Raw };
+                curve.ledger.record_codec(stats.ideal_bits, msg_bytes, msg_codec);
             }
-            upload_bytes += msg_bytes;
-            let msg_codec = if kind == 0 { codec } else { WireCodec::Raw };
-            curve.ledger.record_codec(stats.ideal_bits, msg_bytes, msg_codec);
-        }
 
-        // ---- Step 6: All-Reduce v_t = (1/M) Σ Q(g^m) ----
-        if all_sparse {
-            let out = agg.reduce_decoded(&decoded, upload_bytes, &mut v);
-            sim_time += out.sim_time_s;
-        } else {
-            // Mixed/dense/quantized messages: accumulate what arrived on
-            // the links (decoded sparse slots or raw dense payloads).
-            v.fill(0.0);
-            let inv_m = 1.0 / m as f32;
-            for ((kind, dec), den) in kinds.iter().zip(&decoded).zip(&dense_rx) {
-                if *kind == 0 {
-                    dec.add_into(inv_m, &mut v);
-                } else {
-                    crate::tensor::axpy(inv_m, den, &mut v);
+            // ---- Step 6: All-Reduce v_t = (1/M) Σ Q(Σ_local g^m) ----
+            if all_sparse {
+                let out = agg.reduce_decoded(&decoded, upload_bytes, &mut v);
+                sim_time += out.sim_time_s;
+            } else {
+                // Mixed/dense/quantized messages: accumulate what arrived on
+                // the links (decoded sparse slots or raw dense payloads).
+                v.fill(0.0);
+                let inv_m = 1.0 / m as f32;
+                for ((kind, dec), den) in kinds.iter().zip(&decoded).zip(&dense_rx) {
+                    if *kind == 0 {
+                        dec.add_into(inv_m, &mut v);
+                    } else {
+                        crate::tensor::axpy(inv_m, den, &mut v);
+                    }
                 }
+                sim_time += net.round_time_s(&vec![upload_bytes / m as u64; m], (d * 4) as u64);
             }
-            sim_time += net.round_time_s(&vec![upload_bytes / m as u64; m], (d * 4) as u64);
-        }
 
-        // ---- Optional step 7: re-sparsify the average before broadcast ----
-        if task.resparsify_broadcast {
-            let pv = sparsify::greedy_probs(&v, resparsify_rho, 2, &mut resparsify_p);
-            sparsify::sample_sparse_into(
-                &v,
-                &resparsify_p,
-                pv.inv_lambda,
-                &mut workers[0].rand,
-                &mut resparsify_sg,
-            );
-            v.fill(0.0);
-            resparsify_sg.add_into(1.0, &mut v);
-        }
+            // ---- Optional step 7: re-sparsify the average pre-broadcast ----
+            if task.resparsify_broadcast {
+                let pv = sparsify::greedy_probs(&v, resparsify_rho, 2, &mut resparsify_p);
+                sparsify::sample_sparse_into(
+                    &v,
+                    &resparsify_p,
+                    pv.inv_lambda,
+                    &mut workers[0].rand,
+                    &mut resparsify_sg,
+                );
+                v.fill(0.0);
+                resparsify_sg.add_into(1.0, &mut v);
+            }
 
-        // SVRG eq. 15: master adds its exact full gradient after averaging.
-        if matches!(task.opt, OptKind::Svrg(SvrgVariant::MasterFullGrad)) {
-            crate::tensor::axpy(1.0, &full_ref, &mut v);
-        }
+            // SVRG eq. 15: master adds its exact full gradient after
+            // averaging.
+            if matches!(task.opt, OptKind::Svrg(SvrgVariant::MasterFullGrad)) {
+                crate::tensor::axpy(1.0, &full_ref, &mut v);
+            }
 
-        // ---- Steps 8–9: broadcast + descent on every worker ----
-        let var_now = var_meter.value().max(1e-12);
-        let eta = match task.opt {
-            OptKind::Sgd => schedule.eta(t as u64, var_now),
-            OptKind::SgdInvT => schedule.eta(t as u64, 1.0),
-            OptKind::Svrg(_) => schedule.eta_constant(var_now),
-        };
-        crate::tensor::axpy(-eta, &v, &mut w);
+            // ---- Steps 8–9: broadcast + descent on every worker ----
+            let var_now = var_meter.value().max(1e-12);
+            let eta = match task.opt {
+                OptKind::Sgd => schedule.eta(t as u64, var_now),
+                OptKind::SgdInvT => schedule.eta(t as u64, 1.0),
+                OptKind::Svrg(_) => schedule.eta_constant(var_now),
+            };
+            crate::tensor::axpy(-eta, &v, &mut w);
+            for worker in workers.iter_mut() {
+                worker.w_local.copy_from_slice(&w);
+                worker.acc.fill(0.0);
+            }
+        }
 
         if t % task.record_every == 0 || t == total_rounds {
             curve.points.push(CurvePoint {
@@ -398,6 +446,9 @@ pub(crate) fn run_session(
     curve
         .ledger
         .set_measured(link_counters.iter().map(|c| c.bytes_total()).sum());
+    curve.ledger.set_measured_frames(
+        link_counters.iter().map(|c| c.frames_rx() + c.frames_tx()).sum(),
+    );
     let _ = start;
     curve
 }

@@ -1,0 +1,612 @@
+//! Error-feedback memory and local-step scheduling — the two composition
+//! primitives that unlock the aggressive-compression regimes the paper's
+//! unbiased sparsifiers deliberately avoid.
+//!
+//! The paper keeps `E[Q(g)] = g` so plain SGD analysis applies, but the
+//! related work shows the *biased* operating points (top-k at ρ ≪ 0.01,
+//! sign compression, infrequent communication) converge at full SGD rates
+//! **only** when the compression error is remembered and re-injected:
+//! "The Convergence of Sparsified Gradient Methods" (Alistarh et al., 2018)
+//! proves top-k + error memory matches SGD, and "Qsparse-local-SGD" (Basu
+//! et al., 2019) composes sparsification with local steps *and* error
+//! compensation. This module makes both first-class:
+//!
+//! * [`FeedbackState`] — a per-worker residual arena with a per-layer
+//!   layout (one contiguous buffer, offsets per layer) and scratch-reuse
+//!   discipline matching [`crate::sparsify::CompressEngine`]: after the
+//!   layout stabilizes, a steady-state single-tensor step performs no heap
+//!   allocation (pinned in `tests/alloc_free.rs`; the batched path allows
+//!   itself one layer-count pointer list per call, like the batched
+//!   cluster round).
+//! * [`WithFeedback`] — an adapter wrapping **any**
+//!   [`Compressor`](crate::sparsify::Compressor): each step compresses the
+//!   error-corrected gradient `c = g + e` and accumulates the new residual
+//!   `e ← β · (c − decode(compress(c)))`, where `β` is an optional
+//!   momentum-style decay (`β = 1` is the classic error feedback of
+//!   1Bit-SGD; `β < 1` forgets stale error, useful under non-stationarity).
+//!   Works on the single-tensor *and* the batched multi-layer path
+//!   ([`Compressor::compress_batch_into`](crate::sparsify::Compressor::compress_batch_into)),
+//!   where the residual arena is laid out per layer so the fused
+//!   `BatchCompressEngine`/`WireBatch` pipeline keeps its bitwise parity
+//!   with the per-layer path.
+//! * [`CommSchedule`] — every-round vs. every-`H`-rounds synchronization à
+//!   la Qsparse-local-SGD. Coordinators built from a
+//!   [`Session`](crate::api::Session) with
+//!   [`local_steps(H)`](crate::api::SessionBuilder::local_steps) run `H`
+//!   rounds per synchronization; non-communication rounds send **zero
+//!   frames and zero bytes** (visible in the
+//!   [`CommLedger`](crate::metrics::CommLedger) frame/byte counters and
+//!   the transport link counters). The sync trainer and the PS/dist
+//!   runtimes take true local gradient steps on per-worker iterates
+//!   between synchronizations; the round-driven
+//!   [`Cluster`](crate::coordinator::cluster::Cluster) — whose caller owns
+//!   the model — accumulates gradients between synchronizations instead,
+//!   and drivers that stop off-schedule flush the pending partial block
+//!   via `Cluster::flush`.
+//!
+//! The historical [`OneBitSgd`](crate::sparsify::OneBitSgd) baseline is now
+//! a plain sign compressor ([`crate::sparsify::SignCompressor`]) composed
+//! with this subsystem — bitwise-identical to its former bespoke residual
+//! loop (pinned by `tests/feedback.rs`).
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla_extension rpath on this image)
+//! use gsparse::api::{MethodSpec, Session, SyncTask};
+//! use gsparse::feedback::FeedbackConfig;
+//!
+//! // Biased top-k at ρ = 0.001 — divergent on its own, SGD-rate with
+//! // error feedback — synchronizing every 4 rounds.
+//! let session = Session::builder()
+//!     .method(MethodSpec::TopK { rho: 0.001 })
+//!     .feedback(FeedbackConfig::default())
+//!     .local_steps(4)
+//!     .build();
+//! let ds = gsparse::data::gen_logistic(256, 2048, 0.6, 0.25, 7);
+//! let model = gsparse::model::LogisticModel::new(1.0 / 2560.0);
+//! let curve = session.train_convex(&SyncTask::default(), &ds, &model);
+//! assert!(curve.final_loss().is_finite());
+//! ```
+
+use crate::rngkit::RandArray;
+use crate::sparsify::{Compressed, CompressStats, Compressor};
+
+/// Configuration of the error-feedback memory.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FeedbackConfig {
+    /// Residual decay `β`: the carried error is `β · (c − decode(Q(c)))`.
+    /// `1.0` (the default) is classic error feedback — no information is
+    /// ever dropped; `β < 1` forgets stale error geometrically.
+    pub decay: f32,
+}
+
+impl Default for FeedbackConfig {
+    fn default() -> Self {
+        Self { decay: 1.0 }
+    }
+}
+
+impl FeedbackConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_decay(decay: f32) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&decay),
+            "feedback decay must be in [0, 1], got {decay}"
+        );
+        Self { decay }
+    }
+
+    /// The toggle named by `GSPARSE_FEEDBACK` (unset/`off`/`0`/`false` →
+    /// `None`) — how the shared test suites run once per leg of the CI
+    /// feedback matrix, exactly like `WireCodec::from_env` serves the codec
+    /// matrix.
+    pub fn from_env() -> Option<Self> {
+        match std::env::var("GSPARSE_FEEDBACK") {
+            Err(_) => None,
+            Ok(s) => match s.to_ascii_lowercase().as_str() {
+                "" | "0" | "off" | "false" => None,
+                "1" | "on" | "true" => Some(Self::default()),
+                other => panic!("GSPARSE_FEEDBACK={other:?} is not a toggle (on|off)"),
+            },
+        }
+    }
+}
+
+/// When workers synchronize: every round, or every `H` rounds with local
+/// steps in between (Qsparse-local-SGD style). Rounds are 1-based; round
+/// `t` communicates iff `t % H == 0` (coordinators with a known horizon
+/// also flush on the final round so no tail gradient is lost).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CommSchedule {
+    period: usize,
+}
+
+impl Default for CommSchedule {
+    fn default() -> Self {
+        Self::every_round()
+    }
+}
+
+impl CommSchedule {
+    /// Synchronize every round (`H = 1`) — the historical behavior.
+    pub fn every_round() -> Self {
+        Self { period: 1 }
+    }
+
+    /// Synchronize every `h` rounds (`h` is clamped to ≥ 1).
+    pub fn every(h: usize) -> Self {
+        Self { period: h.max(1) }
+    }
+
+    /// The local-step period `H`.
+    pub fn period(self) -> usize {
+        self.period
+    }
+
+    /// Whether 1-based round `round` is a communication round.
+    pub fn is_comm_round(self, round: u64) -> bool {
+        round % self.period as u64 == 0
+    }
+
+    /// Number of communication rounds (blocks) in `total_rounds` rounds,
+    /// counting a trailing partial block.
+    pub fn blocks(self, total_rounds: usize) -> usize {
+        total_rounds.div_ceil(self.period)
+    }
+
+    /// Length of 0-based block `block` within `total_rounds` rounds: the
+    /// full period except possibly for the trailing partial block.
+    pub fn block_len(self, block: usize, total_rounds: usize) -> usize {
+        let start = block * self.period;
+        assert!(start < total_rounds, "block {block} out of range");
+        self.period.min(total_rounds - start)
+    }
+}
+
+impl std::fmt::Display for CommSchedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.period == 1 {
+            f.write_str("every-round")
+        } else {
+            write!(f, "every-{}-rounds", self.period)
+        }
+    }
+}
+
+/// Per-worker residual arena with a per-layer layout.
+///
+/// One contiguous buffer holds every layer's residual (`offsets[l] ..
+/// offsets[l + 1]` is layer `l`'s segment), mirroring the concatenated
+/// arenas of [`crate::sparsify::BatchCompressEngine`], plus the corrected
+/// (`c = g + e`) and decode scratch buffers. All buffers are reused across
+/// steps; the arena only reallocates when the layer layout itself changes
+/// (which also zeroes the residual — stale error from a different model
+/// shape must not leak into a new one).
+#[derive(Debug, Clone)]
+pub struct FeedbackState {
+    decay: f32,
+    /// Layer offsets into the arenas; `offsets.len()` = layer count + 1.
+    offsets: Vec<usize>,
+    /// The residual `e`, concatenated per layer.
+    residual: Vec<f32>,
+    /// The corrected gradient `c = g + e` of the current step.
+    corrected: Vec<f32>,
+    /// Dense decode scratch (sized to the largest layer).
+    decoded: Vec<f32>,
+}
+
+impl FeedbackState {
+    pub fn new(cfg: FeedbackConfig) -> Self {
+        Self {
+            decay: cfg.decay,
+            offsets: vec![0],
+            residual: Vec::new(),
+            corrected: Vec::new(),
+            decoded: Vec::new(),
+        }
+    }
+
+    pub fn decay(&self) -> f32 {
+        self.decay
+    }
+
+    /// Number of layers in the current layout.
+    pub fn layers(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Total residual dimension across all layers.
+    pub fn total_dim(&self) -> usize {
+        *self.offsets.last().expect("offsets never empty")
+    }
+
+    /// The whole residual arena (concatenated per-layer segments).
+    pub fn residual(&self) -> &[f32] {
+        &self.residual[..self.total_dim()]
+    }
+
+    /// Layer `l`'s residual segment.
+    pub fn layer_residual(&self, l: usize) -> &[f32] {
+        &self.residual[self.offsets[l]..self.offsets[l + 1]]
+    }
+
+    /// `‖e‖²` over the whole arena (f64 accumulation).
+    pub fn residual_norm2_sq(&self) -> f64 {
+        self.residual()
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum()
+    }
+
+    fn layout_is(&self, dims: &[usize]) -> bool {
+        self.offsets.len() == dims.len() + 1
+            && dims
+                .iter()
+                .enumerate()
+                .all(|(l, &d)| self.offsets[l + 1] - self.offsets[l] == d)
+    }
+
+    /// Adopt the layer layout `dims`, zeroing the residual if it changed
+    /// (matching the historical 1Bit-SGD reset on a dimension change).
+    pub fn ensure_layout(&mut self, dims: &[usize]) {
+        if self.layout_is(dims) {
+            return;
+        }
+        self.rebuild_layout(dims.iter().copied());
+    }
+
+    /// [`Self::ensure_layout`] straight from a layer list (no intermediate
+    /// dimension vector, so the steady state allocates nothing).
+    fn ensure_layout_for(&mut self, layers: &[&[f32]]) {
+        let matches = self.offsets.len() == layers.len() + 1
+            && layers
+                .iter()
+                .enumerate()
+                .all(|(l, g)| self.offsets[l + 1] - self.offsets[l] == g.len());
+        if matches {
+            return;
+        }
+        self.rebuild_layout(layers.iter().map(|g| g.len()));
+    }
+
+    /// Rebuild offsets + arenas for a new layout; the residual starts from
+    /// zero (stale error from a different model shape must not leak).
+    fn rebuild_layout(&mut self, dims: impl Iterator<Item = usize>) {
+        self.offsets.clear();
+        self.offsets.push(0);
+        let mut total = 0usize;
+        let mut max_d = 0usize;
+        for d in dims {
+            total += d;
+            max_d = max_d.max(d);
+            self.offsets.push(total);
+        }
+        self.residual.clear();
+        self.residual.resize(total, 0.0);
+        self.corrected.clear();
+        self.corrected.resize(total, 0.0);
+        if self.decoded.len() < max_d {
+            self.decoded.resize(max_d, 0.0);
+        }
+    }
+
+    /// `corrected[l] = g + e[l]` — the error-corrected gradient the wrapped
+    /// compressor sees.
+    fn correct(&mut self, l: usize, g: &[f32]) {
+        let lo = self.offsets[l];
+        let hi = self.offsets[l + 1];
+        assert_eq!(g.len(), hi - lo, "layer {l} gradient/layout mismatch");
+        for i in 0..g.len() {
+            self.corrected[lo + i] = g[i] + self.residual[lo + i];
+        }
+    }
+
+    /// Layer `l`'s corrected gradient from the current step.
+    fn corrected_layer(&self, l: usize) -> &[f32] {
+        &self.corrected[self.offsets[l]..self.offsets[l + 1]]
+    }
+
+    /// Absorb the compression error of layer `l`:
+    /// `e[l] ← decay · (c[l] − decode(msg))`.
+    fn absorb(&mut self, l: usize, msg: &Compressed) {
+        let lo = self.offsets[l];
+        let hi = self.offsets[l + 1];
+        let d = hi - lo;
+        assert_eq!(msg.dim(), d, "layer {l} message/layout mismatch");
+        if self.decoded.len() < d {
+            self.decoded.resize(d, 0.0);
+        }
+        let dec = &mut self.decoded[..d];
+        dec.fill(0.0);
+        msg.add_into(1.0, dec);
+        let decay = self.decay;
+        for i in 0..d {
+            self.residual[lo + i] = decay * (self.corrected[lo + i] - dec[i]);
+        }
+    }
+}
+
+/// Error-feedback adapter around any [`Compressor`]: compresses `c = g + e`
+/// and carries `e ← β(c − decode(Q(c)))` to the next step. Per-step output
+/// is whatever the inner compressor produces (so the wire path, the
+/// batched `WireBatch` pipeline, and the ledger conventions all apply
+/// unchanged); across steps the accumulated decoded signal tracks the
+/// accumulated true signal — the invariant that makes biased compressors
+/// converge.
+///
+/// One instance per worker (it carries the worker's residual). On the
+/// batched path the residual arena is laid out per layer, so batched and
+/// per-layer rounds stay bitwise interchangeable (see `tests/feedback.rs`).
+#[derive(Debug)]
+pub struct WithFeedback<C> {
+    inner: C,
+    state: FeedbackState,
+}
+
+impl<C: Compressor> WithFeedback<C> {
+    /// Wrap with the default configuration (decay 1 — classic feedback).
+    pub fn new(inner: C) -> Self {
+        Self::with_config(inner, FeedbackConfig::default())
+    }
+
+    pub fn with_config(inner: C, cfg: FeedbackConfig) -> Self {
+        Self {
+            inner,
+            state: FeedbackState::new(cfg),
+        }
+    }
+
+    pub fn inner(&self) -> &C {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut C {
+        &mut self.inner
+    }
+
+    /// The residual memory (read-only; tests assert bitwise determinism on
+    /// it across backends).
+    pub fn state(&self) -> &FeedbackState {
+        &self.state
+    }
+}
+
+impl<C: Compressor> Compressor for WithFeedback<C> {
+    fn compress_into(
+        &mut self,
+        g: &[f32],
+        rand: &mut RandArray,
+        out: &mut Compressed,
+    ) -> CompressStats {
+        self.state.ensure_layout(&[g.len()]);
+        let WithFeedback { inner, state } = self;
+        state.correct(0, g);
+        let stats = inner.compress_into(state.corrected_layer(0), rand, out);
+        state.absorb(0, out);
+        stats
+    }
+
+    fn compress_batch_into(
+        &mut self,
+        layers: &[&[f32]],
+        rand: &mut RandArray,
+        out: &mut Vec<Compressed>,
+        stats: &mut Vec<CompressStats>,
+    ) {
+        let WithFeedback { inner, state } = self;
+        state.ensure_layout_for(layers);
+        for (l, g) in layers.iter().enumerate() {
+            state.correct(l, g);
+        }
+        {
+            // L pointers per call (one per *layer*, never per coordinate) —
+            // the same small allowance the batched cluster round makes.
+            let corrected: Vec<&[f32]> =
+                (0..layers.len()).map(|l| state.corrected_layer(l)).collect();
+            inner.compress_batch_into(&corrected, rand, out, stats);
+        }
+        for (l, msg) in out.iter().enumerate() {
+            state.absorb(l, msg);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsify::{GSparCompressor, SparseGrad, TopKCompressor};
+
+    fn gradient(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::rngkit::Xoshiro256pp::seed_from_u64(seed);
+        (0..d).map(|_| (rng.next_gaussian() * 0.3) as f32).collect()
+    }
+
+    #[test]
+    fn schedule_arithmetic() {
+        let every = CommSchedule::every_round();
+        assert_eq!(every.period(), 1);
+        assert!(every.is_comm_round(1) && every.is_comm_round(7));
+        assert_eq!(every.blocks(10), 10);
+        assert_eq!(every.to_string(), "every-round");
+
+        let h4 = CommSchedule::every(4);
+        assert_eq!(h4.period(), 4);
+        assert!(!h4.is_comm_round(1));
+        assert!(!h4.is_comm_round(3));
+        assert!(h4.is_comm_round(4) && h4.is_comm_round(8));
+        assert_eq!(h4.blocks(10), 3);
+        assert_eq!(h4.block_len(0, 10), 4);
+        assert_eq!(h4.block_len(1, 10), 4);
+        assert_eq!(h4.block_len(2, 10), 2);
+        assert_eq!(h4.to_string(), "every-4-rounds");
+
+        // Clamped to ≥ 1.
+        assert_eq!(CommSchedule::every(0).period(), 1);
+    }
+
+    #[test]
+    fn feedback_config_decay_validation() {
+        assert_eq!(FeedbackConfig::default().decay, 1.0);
+        assert_eq!(FeedbackConfig::with_decay(0.5).decay, 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "feedback decay")]
+    fn feedback_config_rejects_out_of_range_decay() {
+        let _ = FeedbackConfig::with_decay(1.5);
+    }
+
+    #[test]
+    fn state_layout_and_reset() {
+        let mut st = FeedbackState::new(FeedbackConfig::default());
+        st.ensure_layout(&[4, 2]);
+        assert_eq!(st.layers(), 2);
+        assert_eq!(st.total_dim(), 6);
+        assert_eq!(st.layer_residual(0).len(), 4);
+        assert_eq!(st.layer_residual(1).len(), 2);
+        // Absorb something so the residual is non-zero…
+        st.correct(1, &[1.0, -2.0]);
+        st.absorb(1, &Compressed::Sparse(SparseGrad::empty(2)));
+        assert!(st.residual_norm2_sq() > 0.0);
+        // …same layout keeps it, a new layout zeroes it.
+        st.ensure_layout(&[4, 2]);
+        assert!(st.residual_norm2_sq() > 0.0);
+        st.ensure_layout(&[3, 3]);
+        assert_eq!(st.residual_norm2_sq(), 0.0);
+        assert_eq!(st.total_dim(), 6);
+    }
+
+    #[test]
+    fn no_error_leaks_over_many_steps_topk() {
+        // The defining invariant: Σ_t decode(Q_t) + e_T = Σ_t g_t exactly
+        // (up to float rounding) — the error never escapes the loop.
+        let g = gradient(64, 11);
+        let mut c = WithFeedback::new(TopKCompressor::new(0.05));
+        let mut ra = RandArray::from_seed(12, 1 << 10);
+        let steps = 400;
+        let mut decoded_sum = vec![0.0f64; g.len()];
+        for _ in 0..steps {
+            let (out, _) = c.compress(&g, &mut ra);
+            for (s, v) in decoded_sum.iter_mut().zip(out.to_dense()) {
+                *s += v as f64;
+            }
+        }
+        for i in 0..g.len() {
+            let true_sum = g[i] as f64 * steps as f64;
+            let leak = (decoded_sum[i] + c.state().residual()[i] as f64) - true_sum;
+            assert!(
+                leak.abs() < 2e-2 * steps as f64 * (g[i].abs() as f64).max(0.05),
+                "coord {i}: leak {leak}"
+            );
+        }
+    }
+
+    #[test]
+    fn decay_shrinks_the_residual() {
+        let g = gradient(128, 21);
+        let run = |decay: f32| {
+            let mut c = WithFeedback::with_config(
+                TopKCompressor::new(0.02),
+                FeedbackConfig::with_decay(decay),
+            );
+            let mut ra = RandArray::from_seed(22, 1 << 10);
+            let mut out = Compressed::Sparse(SparseGrad::empty(g.len()));
+            for _ in 0..50 {
+                c.compress_into(&g, &mut ra, &mut out);
+            }
+            c.state().residual_norm2_sq()
+        };
+        let full = run(1.0);
+        let decayed = run(0.5);
+        assert!(
+            decayed < full,
+            "decay 0.5 residual {decayed} should be below decay 1.0 residual {full}"
+        );
+    }
+
+    #[test]
+    fn batched_path_matches_per_layer_path_bitwise() {
+        // One WithFeedback over a layer list (per-layer residual arena)
+        // must produce exactly the messages of independent per-layer
+        // WithFeedback instances consuming the same uniform stream in
+        // layer order — the contract that keeps the batched cluster round
+        // interchangeable with the per-layer one.
+        let dims = [96usize, 40, 200];
+        let layers: Vec<Vec<f32>> = dims
+            .iter()
+            .enumerate()
+            .map(|(l, &d)| gradient(d, 30 + l as u64))
+            .collect();
+        let refs: Vec<&[f32]> = layers.iter().map(|g| g.as_slice()).collect();
+        let steps = 5;
+
+        // Batched: one adapter over the whole list.
+        let mut batched = WithFeedback::new(GSparCompressor::greedy(0.1, 2));
+        let mut rand_b = RandArray::from_seed(77, 1 << 16);
+        let mut out_b: Vec<Compressed> = Vec::new();
+        let mut stats_b: Vec<CompressStats> = Vec::new();
+
+        // Per-layer: independent adapters, same stream consumed in order.
+        let mut per_layer: Vec<WithFeedback<GSparCompressor>> = dims
+            .iter()
+            .map(|_| WithFeedback::new(GSparCompressor::greedy(0.1, 2)))
+            .collect();
+        let mut rand_l = rand_b.clone();
+        let mut out_l: Vec<Compressed> = dims
+            .iter()
+            .map(|&d| Compressed::Sparse(SparseGrad::empty(d)))
+            .collect();
+
+        for step in 0..steps {
+            batched.compress_batch_into(&refs, &mut rand_b, &mut out_b, &mut stats_b);
+            for (l, g) in refs.iter().copied().enumerate() {
+                per_layer[l].compress_into(g, &mut rand_l, &mut out_l[l]);
+            }
+            for l in 0..dims.len() {
+                assert_eq!(
+                    format!("{:?}", out_b[l]),
+                    format!("{:?}", out_l[l]),
+                    "step {step} layer {l}: messages diverged"
+                );
+                assert_eq!(
+                    batched.state().layer_residual(l),
+                    per_layer[l].state().residual(),
+                    "step {step} layer {l}: residuals diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_inner_compressor_keeps_zero_residual() {
+        // Lossless inner compressor ⇒ decode(Q(c)) = c ⇒ e stays 0.
+        let g = gradient(32, 41);
+        let mut c = WithFeedback::new(crate::sparsify::DenseCompressor);
+        let mut ra = RandArray::from_seed(42, 1 << 8);
+        let mut out = Compressed::Dense(Vec::new());
+        for _ in 0..3 {
+            c.compress_into(&g, &mut ra, &mut out);
+        }
+        assert_eq!(c.state().residual_norm2_sq(), 0.0);
+        assert_eq!(out.to_dense(), g);
+    }
+
+    #[test]
+    fn from_env_parses_toggles() {
+        // Not set in the test environment by default; the explicit values
+        // go through the same parser the CI matrix uses. (Avoid mutating
+        // the process environment — other tests read it concurrently.)
+        match std::env::var("GSPARSE_FEEDBACK") {
+            Err(_) => assert!(FeedbackConfig::from_env().is_none()),
+            Ok(_) => {
+                let _ = FeedbackConfig::from_env(); // must not panic on CI values
+            }
+        }
+    }
+}

@@ -15,6 +15,9 @@
 //!   every coordinator;
 //! * [`sparsify`] — the optimal sparsifiers (closed-form Algorithm 2, greedy
 //!   Algorithm 3) and every baseline (uniform, QSGD, TernGrad, top-k, 1-bit);
+//! * [`feedback`] — error-feedback residual memory ([`feedback::WithFeedback`]
+//!   around any compressor) and local-step scheduling
+//!   ([`feedback::CommSchedule`]) for the biased/aggressive regimes;
 //! * [`coding`] — the §3.3 hybrid wire format and Theorem-4 bit accounting;
 //! * [`comm`] — a simulated cluster (All-Reduce / Broadcast, α-β cost model);
 //! * [`transport`] — the real one: a pluggable framed transport (`InProc`
@@ -41,6 +44,7 @@ pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod feedback;
 pub mod figures;
 pub mod metrics;
 pub mod model;

@@ -56,12 +56,15 @@ fn print_help() {
          \n\
          SUBCOMMANDS:\n\
            fig <1-9|theory|all> [--paper] [--batch-layers]   regenerate a paper figure\n\
-           train [--method M] [--rho R] [--epochs E] [--codec raw|entropy] [--svrg] ...\n\
+           train [--method M] [--rho R] [--epochs E] [--codec raw|entropy] [--svrg]\n\
+                 [--feedback] [--feedback-decay B] [--local-steps H] ...\n\
            async-svm [--threads T] [--scheme lock|atomic|wild] [--method M]\n\
            e2e [--steps N] [--workers M] [--rho R] [--batch-layers]   transformer end-to-end\n\
-           server [--addr H:P] [--workers M] [--rounds R] [--codec C] ...\n\
+           server [--addr H:P] [--workers M] [--rounds R] [--codec C]\n\
+                  [--feedback] [--local-steps H] ...\n\
            worker --addr H:P --id N [--codec C]   one worker process (config from server)\n\
-           dist [--transport inproc|tcp] [--procs] [--codec raw|entropy] ...\n\
+           dist [--transport inproc|tcp] [--procs] [--codec raw|entropy]\n\
+                [--feedback] [--feedback-decay B] [--local-steps H] ...\n\
            version",
         gsparse::VERSION
     );
@@ -88,12 +91,22 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if let Some(m) = args.get("method") {
         method = Method::parse(m).ok_or_else(|| anyhow::anyhow!("unknown method {m}"))?;
     }
-    let session = Session::builder()
+    let local_steps: usize = args.get_parse("local-steps", 1);
+    anyhow::ensure!(
+        !(args.flag("svrg") && local_steps > 1),
+        "--svrg cannot be combined with --local-steps > 1 (local-step scheduling is \
+         not defined for the SVRG variants)"
+    );
+    let mut builder = Session::builder()
         .method(MethodSpec::from_parts(method, rho, c2 * c1, 4))
         .codec(parse_codec(args)?)
         .workers(args.get_parse("workers", 4))
-        .seed(seed)
-        .build();
+        .local_steps(local_steps)
+        .seed(seed);
+    if let Some(cfg) = parse_feedback(args)? {
+        builder = builder.feedback(cfg);
+    }
+    let session = builder.build();
     let ds = gen_logistic(n, d, c1, c2, seed);
     let model = LogisticModel::new(reg);
     let f_star = estimate_f_star(&ds, &model, 400, 1.0);
@@ -164,6 +177,22 @@ fn parse_codec(args: &Args) -> anyhow::Result<WireCodec> {
     }
 }
 
+/// `--feedback` (optionally `--feedback-decay B`) → error-feedback config,
+/// with the range checked here so bad input gets the CLI error path, not a
+/// library assert.
+fn parse_feedback(args: &Args) -> anyhow::Result<Option<gsparse::feedback::FeedbackConfig>> {
+    if args.flag("feedback") || args.get("feedback-decay").is_some() {
+        let decay: f32 = args.get_parse("feedback-decay", 1.0f32);
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&decay),
+            "--feedback-decay must be in [0, 1], got {decay}"
+        );
+        Ok(Some(gsparse::feedback::FeedbackConfig::with_decay(decay)))
+    } else {
+        Ok(None)
+    }
+}
+
 /// Build the distributed-run session + task shared by `server` and `dist`
 /// from CLI options (workers receive the compiled plan over the wire, so
 /// `worker` takes only the handshake-negotiated `--codec`).
@@ -183,13 +212,16 @@ fn dist_session_from_args(args: &Args) -> anyhow::Result<(Session, DistTask)> {
     }
     let rho: f32 = args.get_parse("rho", 0.1);
     let qsgd_bits: u32 = args.get_parse("qsgd-bits", 4);
-    let session = Session::builder()
+    let mut builder = Session::builder()
         .method(MethodSpec::from_parts(method, rho, task.c1 * task.c2, qsgd_bits))
         .codec(parse_codec(args)?)
         .workers(args.get_parse("workers", 2))
-        .seed(args.get_parse("seed", 42))
-        .build();
-    Ok((session, task))
+        .local_steps(args.get_parse("local-steps", 1))
+        .seed(args.get_parse("seed", 42));
+    if let Some(cfg) = parse_feedback(args)? {
+        builder = builder.feedback(cfg);
+    }
+    Ok((builder.build(), task))
 }
 
 fn print_dist_report(report: &gsparse::coordinator::DistReport) {

@@ -71,6 +71,11 @@ pub struct CommLedger {
     /// crossed the socket or channel, as opposed to the modeled columns
     /// above. Zero for runs that never touched a transport.
     pub measured_bytes: u64,
+    /// **Measured** transport frames on the same counters (both
+    /// directions, handshakes included). Together with `measured_bytes`
+    /// this is what proves a local-step round shipped *nothing*: rounds
+    /// scheduled between synchronizations leave both columns unchanged.
+    pub measured_frames: u64,
     /// Number of messages (one per worker per step).
     pub messages: u64,
 }
@@ -96,6 +101,12 @@ impl CommLedger {
         self.measured_bytes = measured_bytes;
     }
 
+    /// Set the measured frame column from transport counters (cumulative —
+    /// overwrites, like [`Self::set_measured`]).
+    pub fn set_measured_frames(&mut self, measured_frames: u64) {
+        self.measured_frames = measured_frames;
+    }
+
     /// Wire-bytes (encoded payload, in bits) over ideal-bits — the gap the
     /// entropy codec closes (`NaN` before anything was recorded). Framing
     /// overhead is the separate `measured_bytes` column.
@@ -114,6 +125,7 @@ impl CommLedger {
             *mine += theirs;
         }
         self.measured_bytes += other.measured_bytes;
+        self.measured_frames += other.measured_frames;
         self.messages += other.messages;
     }
 }
@@ -287,14 +299,17 @@ mod tests {
         let mut a = CommLedger::default();
         a.record(100, 16);
         a.set_measured(40);
+        a.set_measured_frames(3);
         let mut b = CommLedger::default();
         b.record_codec(50, 8, WireCodec::Entropy);
         b.set_measured(10);
+        b.set_measured_frames(2);
         a.merge(&b);
         assert_eq!(a.ideal_bits, 150);
         assert_eq!(a.wire_bytes, 24);
         assert_eq!(a.wire_bytes_by_codec, [16, 8]);
         assert_eq!(a.measured_bytes, 50);
+        assert_eq!(a.measured_frames, 5);
         assert_eq!(a.messages, 2);
     }
 

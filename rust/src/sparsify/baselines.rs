@@ -8,8 +8,9 @@
 //! * [`TernGradCompressor`] — TernGrad \[Wen et al. 2017\] {−1, 0, +1}
 //!   ternarization (related work the paper discusses);
 //! * [`TopKCompressor`] — deterministic top-k (biased) ablation;
-//! * [`OneBitSgd`] — 1Bit-SGD \[Seide et al. 2014\] with error feedback
-//!   (sign compression) ablation.
+//! * [`SignCompressor`] — plain two-sided sign compression (no memory);
+//! * [`OneBitSgd`] — 1Bit-SGD \[Seide et al. 2014\]: the sign compressor
+//!   composed with the shared [`crate::feedback`] error-memory subsystem.
 
 use super::{index_bits, sparse_slot, Compressed, CompressStats, Compressor, FLOAT_BITS};
 use crate::rngkit::RandArray;
@@ -253,21 +254,22 @@ impl Compressor for TopKCompressor {
     }
 }
 
-/// **1Bit-SGD** with error feedback: transmit `sign(g + e)` scaled by the
-/// mean absolute magnitude of the same-sign residual; the quantization error
-/// `e` is carried to the next step. Biased per-step but compensated.
-pub struct OneBitSgd {
-    error: Vec<f32>,
-}
+/// Plain two-sided **sign compression** (the quantizer inside 1Bit-SGD,
+/// *without* any memory): transmit `sign(c)` scaled by the mean absolute
+/// magnitude of the same-sign coordinates. Biased and lossy — on its own it
+/// does not converge; compose it with
+/// [`WithFeedback`](crate::feedback::WithFeedback) (which is exactly what
+/// [`OneBitSgd`] is) to recover SGD behavior.
+pub struct SignCompressor;
 
-impl OneBitSgd {
+impl SignCompressor {
     #[allow(clippy::new_without_default)]
     pub fn new() -> Self {
-        Self { error: Vec::new() }
+        Self
     }
 }
 
-impl Compressor for OneBitSgd {
+impl Compressor for SignCompressor {
     fn compress_into(
         &mut self,
         g: &[f32],
@@ -275,16 +277,11 @@ impl Compressor for OneBitSgd {
         out: &mut Compressed,
     ) -> CompressStats {
         let d = g.len();
-        if self.error.len() != d {
-            self.error = vec![0.0; d];
-        }
-        // Corrected gradient.
         let mut pos_sum = 0.0f64;
         let mut pos_n = 0u64;
         let mut neg_sum = 0.0f64;
         let mut neg_n = 0u64;
-        for i in 0..d {
-            let c = g[i] + self.error[i];
+        for &c in g {
             if c >= 0.0 {
                 pos_sum += c as f64;
                 pos_n += 1;
@@ -307,10 +304,8 @@ impl Compressor for OneBitSgd {
         };
         dense.clear();
         let mut nnz = 0u64;
-        for i in 0..d {
-            let c = g[i] + self.error[i];
+        for &c in g {
             let (s, q) = if c >= 0.0 { (1i8, pos_mag) } else { (-1i8, -neg_mag) };
-            self.error[i] = c - q;
             if q != 0.0 {
                 nnz += 1;
             }
@@ -324,6 +319,65 @@ impl Compressor for OneBitSgd {
             expected_nnz: nnz as f64,
             ideal_bits: d as u64 + 2 * FLOAT_BITS,
         }
+    }
+
+    fn name(&self) -> &'static str {
+        "Sign"
+    }
+}
+
+/// **1Bit-SGD** \[Seide et al. 2014\]: [`SignCompressor`] composed with the
+/// shared error-feedback subsystem — `Q(g + e)` with `e ← (g + e) − Q(g+e)`
+/// carried to the next step. This used to be a bespoke residual loop inside
+/// this type; it is now literally `WithFeedback<SignCompressor>`, and the
+/// refactor is bitwise-identical to the old implementation (pinned by
+/// `tests/feedback.rs`).
+pub struct OneBitSgd {
+    inner: crate::feedback::WithFeedback<SignCompressor>,
+}
+
+impl OneBitSgd {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Self {
+            inner: crate::feedback::WithFeedback::new(SignCompressor),
+        }
+    }
+
+    /// 1Bit-SGD under an explicit feedback configuration (e.g. a residual
+    /// decay β < 1) — how a session-level
+    /// [`FeedbackConfig`](crate::feedback::FeedbackConfig) reaches this
+    /// method without stacking a second residual memory on top.
+    pub fn with_config(cfg: crate::feedback::FeedbackConfig) -> Self {
+        Self {
+            inner: crate::feedback::WithFeedback::with_config(SignCompressor, cfg),
+        }
+    }
+
+    /// The carried residual `e` (for tests and diagnostics).
+    pub fn residual(&self) -> &[f32] {
+        self.inner.state().residual()
+    }
+}
+
+impl Compressor for OneBitSgd {
+    fn compress_into(
+        &mut self,
+        g: &[f32],
+        rand: &mut RandArray,
+        out: &mut Compressed,
+    ) -> CompressStats {
+        self.inner.compress_into(g, rand, out)
+    }
+
+    fn compress_batch_into(
+        &mut self,
+        layers: &[&[f32]],
+        rand: &mut RandArray,
+        out: &mut Vec<Compressed>,
+        stats: &mut Vec<CompressStats>,
+    ) {
+        self.inner.compress_batch_into(layers, rand, out, stats)
     }
 
     fn name(&self) -> &'static str {
@@ -495,7 +549,7 @@ mod tests {
         }
         for i in 0..g.len() {
             let true_sum = g[i] as f64 * steps as f64;
-            let leak = (decoded_sum[i] + c.error[i] as f64) - true_sum;
+            let leak = (decoded_sum[i] + c.residual()[i] as f64) - true_sum;
             assert!(
                 leak.abs() < 2e-2 * steps as f64 * g[i].abs().max(0.05) as f64,
                 "coord {i}: leak {leak}"

@@ -29,9 +29,18 @@
 //!   persistent shard buffer; shard outputs concatenate in chunk order,
 //!   which equals the sequential coordinate order, so which thread ran a
 //!   chunk cannot change any output byte.
+//! * **Pooled solver passes.** The greedy solver's ‖g‖₁ / init / rescale /
+//!   statistics passes run over a fixed chunk grid on the same pool: each
+//!   chunk writes partial f64 sums that are reduced sequentially in chunk
+//!   order, so the pooled probabilities are bitwise identical to the
+//!   single-threaded ones (and independent of the sampling shard
+//!   geometry).
 
 use super::pool::ShardPool;
-use super::probs::{closed_form_probs_with, greedy_probs, ProbVector, SelectScratch};
+use super::probs::{
+    closed_form_probs_with, greedy_stats_pass, init_scale_pass, l1_norm_pass, rescale_pass,
+    ProbVector, SelectScratch,
+};
 use super::{hybrid_ideal_bits, CompressStats, SparseGrad};
 use crate::coding::{self, Encoding, WireCodec};
 use crate::rngkit::RandArray;
@@ -42,6 +51,64 @@ pub const DEFAULT_SHARD_LEN: usize = 1 << 14;
 
 /// Default dimension at which sharded parallel compression kicks in.
 pub const DEFAULT_PARALLEL_MIN_D: usize = 1 << 16;
+
+/// Fixed chunk length of the greedy solver's init/rescale/stats passes.
+/// Deliberately independent of the sampling `shard_len`: probability
+/// values must never depend on the sharding geometry, so the chunk grid —
+/// and therefore the chunk-ordered f64 reductions — is a constant of the
+/// engine. 16 Ki coordinates keeps a chunk's (g, p) working set
+/// cache-resident.
+const PROBS_CHUNK_LEN: usize = 1 << 14;
+
+/// One chunk's partial sums from a greedy solver pass (two f64 lanes + a
+/// counter cover every pass shape).
+#[derive(Clone, Copy, Debug, Default)]
+struct PassPartial {
+    a: f64,
+    b: f64,
+    n: u64,
+}
+
+/// Run one per-chunk greedy pass over `p` (chunked at `chunk_len`) and the
+/// matching `partials` slots, either sequentially in chunk order or as
+/// grouped jobs on the pool. Chunk `c`'s output goes to `partials[c]`
+/// regardless of which thread ran it, and the caller reduces the partials
+/// in chunk order — so the pooled result is bitwise identical to the
+/// sequential one by construction.
+fn run_prob_pass<F>(
+    pool: Option<&ShardPool>,
+    threads: usize,
+    chunk_len: usize,
+    p: &mut [f32],
+    partials: &mut [PassPartial],
+    f: &F,
+) where
+    F: Fn(usize, &mut [f32], &mut PassPartial) + Sync,
+{
+    let nchunks = partials.len();
+    let pool = match pool {
+        Some(pool) if threads > 1 && nchunks > 1 => pool,
+        _ => {
+            for (c, (pc, part)) in p.chunks_mut(chunk_len).zip(partials.iter_mut()).enumerate() {
+                f(c, pc, part);
+            }
+            return;
+        }
+    };
+    let per = nchunks.div_ceil(threads.min(nchunks));
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(nchunks.div_ceil(per));
+    let mut first = 0usize;
+    for (pg, partg) in p.chunks_mut(chunk_len * per).zip(partials.chunks_mut(per)) {
+        let base = first;
+        first += partg.len();
+        jobs.push(Box::new(move || {
+            for (j, (pc, part)) in pg.chunks_mut(chunk_len).zip(partg.iter_mut()).enumerate() {
+                f(base + j, pc, part);
+            }
+        }));
+    }
+    pool.run(jobs);
+}
 
 /// Which probability solver the engine runs.
 #[derive(Clone, Copy, Debug)]
@@ -74,6 +141,8 @@ pub struct CompressEngine {
     uniforms: Vec<f32>,
     /// Partial-selection scratch for the closed-form solver.
     select: SelectScratch,
+    /// Per-chunk partial sums of the greedy solver's pooled passes.
+    prob_partials: Vec<PassPartial>,
     /// Per-chunk output buffers for the parallel path.
     shards: Vec<ShardBuf>,
     /// Persistent worker threads for the parallel path, created lazily on
@@ -103,6 +172,7 @@ impl CompressEngine {
             p: Vec::new(),
             uniforms: Vec::new(),
             select: SelectScratch::default(),
+            prob_partials: Vec::new(),
             shards: Vec::new(),
             pool: None,
         }
@@ -302,10 +372,136 @@ impl CompressEngine {
 
     fn compute_probs(&mut self, g: &[f32]) -> ProbVector {
         match self.mode {
-            EngineMode::Greedy { rho, iters } => greedy_probs(g, rho, iters, &mut self.p),
+            EngineMode::Greedy { rho, iters } => self.greedy_probs_chunked(g, rho, iters),
             EngineMode::ClosedForm { eps } => {
                 closed_form_probs_with(g, eps, &mut self.p, &mut self.select)
             }
+        }
+    }
+
+    /// Algorithm 3 over the engine's fixed chunk grid, with every pass
+    /// (‖g‖₁, the init scale, each fixed-point rescale, and the final
+    /// statistics) runnable on the persistent [`ShardPool`]: chunks write
+    /// per-chunk partial sums that are reduced sequentially **in chunk
+    /// order**, so the pooled and sequential paths produce bitwise
+    /// identical probabilities and scalars (asserted by the engine's
+    /// determinism tests). Mathematically identical to
+    /// [`super::probs::greedy_probs`]; the f64 reductions merely associate
+    /// per chunk instead of over the whole array.
+    fn greedy_probs_chunked(&mut self, g: &[f32], rho: f32, iters: usize) -> ProbVector {
+        let d = g.len();
+        assert!(rho > 0.0 && rho <= 1.0, "rho must be in (0, 1]");
+        self.p.clear();
+        self.p.resize(d, 0.0);
+        if d == 0 {
+            return ProbVector {
+                inv_lambda: 0.0,
+                num_exact: 0,
+                expected_nnz: 0.0,
+                variance: 0.0,
+            };
+        }
+        let chunk = PROBS_CHUNK_LEN;
+        let nchunks = d.div_ceil(chunk);
+        let threads = self.max_threads.min(nchunks);
+        let pooled = d >= self.parallel_min_d && threads > 1;
+        if pooled && self.pool.is_none() {
+            self.pool = Some(ShardPool::new(self.max_threads));
+        }
+        if self.prob_partials.len() < nchunks {
+            self.prob_partials.resize(nchunks, PassPartial::default());
+        }
+        let pool = if pooled { self.pool.as_ref() } else { None };
+        let p = &mut self.p[..d];
+        let partials = &mut self.prob_partials[..nchunks];
+
+        // Pass 1: ‖g‖₁ (per-chunk partials, reduced in chunk order).
+        run_prob_pass(pool, threads, chunk, p, partials, &|c, _pc, part| {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(d);
+            part.a = l1_norm_pass(&g[lo..hi]);
+        });
+        let mut l1 = 0.0f64;
+        for part in partials.iter() {
+            l1 += part.a;
+        }
+        if l1 == 0.0 {
+            return ProbVector {
+                inv_lambda: 0.0,
+                num_exact: 0,
+                expected_nnz: 0.0,
+                variance: 0.0,
+            };
+        }
+
+        let target = rho as f64 * d as f64;
+        let mut gamma = target / l1;
+        // Pass 2: init p = min(γ|g|, 1) fused with the first iteration's
+        // (Σ_{p<1} p, #capped) statistics.
+        let gf = gamma as f32;
+        run_prob_pass(pool, threads, chunk, p, partials, &|c, pc, part| {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(d);
+            let (sum, capped) = init_scale_pass(&g[lo..hi], gf, pc);
+            part.a = sum;
+            part.n = capped as u64;
+        });
+        let mut active_sum = 0.0f64;
+        let mut capped = 0u64;
+        for part in partials.iter() {
+            active_sum += part.a;
+            capped += part.n;
+        }
+
+        for _ in 0..iters {
+            let want = target - capped as f64;
+            if want <= 0.0 || active_sum <= 0.0 {
+                break;
+            }
+            let scale = want / active_sum;
+            if scale <= 1.0 {
+                break;
+            }
+            gamma *= scale;
+            let cf = scale as f32;
+            // Rescale pass fused with the next iteration's statistics.
+            run_prob_pass(pool, threads, chunk, p, partials, &|_c, pc, part| {
+                let (sum, next_capped) = rescale_pass(pc, cf);
+                part.a = sum;
+                part.n = next_capped as u64;
+            });
+            active_sum = 0.0;
+            capped = 0;
+            for part in partials.iter() {
+                active_sum += part.a;
+                capped += part.n;
+            }
+        }
+
+        // Final pass: the Prop-1 statistics.
+        let inv_gamma = 1.0 / gamma;
+        run_prob_pass(pool, threads, chunk, p, partials, &|c, pc, part| {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(d);
+            let (nnz, var, exact) = greedy_stats_pass(pc, &g[lo..hi], inv_gamma);
+            part.a = nnz;
+            part.b = var;
+            part.n = exact;
+        });
+        let mut expected_nnz = 0.0f64;
+        let mut variance = 0.0f64;
+        let mut num_exact = 0u64;
+        for part in partials.iter() {
+            expected_nnz += part.a;
+            variance += part.b;
+            num_exact += part.n;
+        }
+
+        ProbVector {
+            inv_lambda: inv_gamma as f32,
+            num_exact: num_exact as usize,
+            expected_nnz,
+            variance,
         }
     }
 }
@@ -373,6 +569,55 @@ mod tests {
                 assert_eq!(seq_pv.num_exact, par_pv.num_exact);
                 assert!(seq_out.nnz() > 0, "degenerate test input");
             }
+        }
+    }
+
+    #[test]
+    fn pooled_greedy_passes_match_sequential_bitwise() {
+        // The solver satellite: init/rescale/stats passes dispatched on the
+        // shard pool must reproduce the single-threaded chunk loop exactly
+        // — probabilities, scalars, and all (chunk-ordered reduction).
+        for (d, seed) in [(70_000usize, 61u64), (1 << 17, 62), (49_999, 63)] {
+            let g = gradient(d, seed);
+            let mut seq = CompressEngine::greedy(0.03, 2).with_sharding(1 << 12, usize::MAX, 1);
+            let pv_seq = seq.probs(&g);
+            let mut par = CompressEngine::greedy(0.03, 2).with_sharding(1 << 12, 1, 4);
+            let pv_par = par.probs(&g);
+            assert_eq!(seq.probabilities(), par.probabilities(), "d={d}");
+            assert_eq!(pv_seq.inv_lambda, pv_par.inv_lambda, "d={d}");
+            assert_eq!(pv_seq.num_exact, pv_par.num_exact, "d={d}");
+            assert_eq!(pv_seq.expected_nnz, pv_par.expected_nnz, "d={d}");
+            assert_eq!(pv_seq.variance, pv_par.variance, "d={d}");
+        }
+    }
+
+    #[test]
+    fn chunked_greedy_agrees_with_free_function_solver() {
+        // The chunk grid only changes f64 association, not the math: the
+        // engine's solver must agree with `greedy_probs` to far better
+        // than f32 resolution on the probabilities and tightly on the
+        // scalars.
+        let d = 50_000;
+        let g = gradient(d, 64);
+        let mut engine = CompressEngine::greedy(0.05, 2);
+        let pv = engine.probs(&g);
+        let mut p_ref = Vec::new();
+        let pv_ref = crate::sparsify::greedy_probs(&g, 0.05, 2, &mut p_ref);
+        assert_eq!(pv.num_exact, pv_ref.num_exact);
+        let rel = |a: f64, b: f64| (a - b).abs() / a.abs().max(b.abs()).max(1e-12);
+        assert!(rel(pv.expected_nnz, pv_ref.expected_nnz) < 1e-9);
+        assert!(rel(pv.variance, pv_ref.variance) < 1e-9);
+        assert!(
+            rel(pv.inv_lambda as f64, pv_ref.inv_lambda as f64) < 1e-5,
+            "{} vs {}",
+            pv.inv_lambda,
+            pv_ref.inv_lambda
+        );
+        for (i, (&a, &b)) in engine.probabilities().iter().zip(&p_ref).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-6 * b.abs().max(1e-6),
+                "p[{i}]: {a} vs {b}"
+            );
         }
     }
 

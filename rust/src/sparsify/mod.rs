@@ -24,8 +24,9 @@
 //!   list, feeding the `WireBatch` wire format;
 //! * [`Compressor`] implementations for the paper's method (GSpar) and every
 //!   baseline in the evaluation: uniform sampling (UniSp), QSGD, TernGrad,
-//!   deterministic top-k, and 1-bit SGD with error feedback — all reusing
-//!   caller-held message buffers via [`Compressor::compress_into`].
+//!   deterministic top-k, and 1-bit SGD (a plain [`SignCompressor`] composed
+//!   with the shared [`crate::feedback`] error-memory subsystem) — all
+//!   reusing caller-held message buffers via [`Compressor::compress_into`].
 
 pub mod baselines;
 pub mod batch;
@@ -34,7 +35,9 @@ pub mod pool;
 pub mod probs;
 pub mod sample;
 
-pub use baselines::{OneBitSgd, QsgdCompressor, TernGradCompressor, TopKCompressor, UniformSampler};
+pub use baselines::{
+    OneBitSgd, QsgdCompressor, SignCompressor, TernGradCompressor, TopKCompressor, UniformSampler,
+};
 pub use batch::BatchCompressEngine;
 pub use engine::{CompressEngine, EngineMode};
 pub use pool::ShardPool;
@@ -298,6 +301,34 @@ pub trait Compressor: Send {
 
     /// Human-readable name for figure labels.
     fn name(&self) -> &'static str;
+}
+
+/// Forwarding impl so adapters generic over `C: Compressor` (e.g.
+/// [`crate::feedback::WithFeedback`]) can wrap a boxed trait object from
+/// [`crate::api::MethodSpec::build`] directly.
+impl<T: Compressor + ?Sized> Compressor for Box<T> {
+    fn compress_into(
+        &mut self,
+        g: &[f32],
+        rand: &mut RandArray,
+        out: &mut Compressed,
+    ) -> CompressStats {
+        (**self).compress_into(g, rand, out)
+    }
+
+    fn compress_batch_into(
+        &mut self,
+        layers: &[&[f32]],
+        rand: &mut RandArray,
+        out: &mut Vec<Compressed>,
+        stats: &mut Vec<CompressStats>,
+    ) {
+        (**self).compress_batch_into(layers, rand, out, stats)
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
 }
 
 /// Reset `out` to an empty `Compressed::Sparse` of dimension `d`, reusing

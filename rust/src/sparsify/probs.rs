@@ -379,21 +379,8 @@ pub fn greedy_probs(g: &[f32], rho: f32, iters: usize, p_out: &mut Vec<f32>) -> 
     p_out.clear();
     p_out.resize(d, 0.0);
 
-    // ||g||₁ in f64 (d can be large and magnitudes tiny). 4-lane unrolled
-    // accumulation breaks the serial FP dependency chain so it vectorizes.
-    let mut acc = [0.0f64; 4];
-    let chunks = d / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        acc[0] += g[i].abs() as f64;
-        acc[1] += g[i + 1].abs() as f64;
-        acc[2] += g[i + 2].abs() as f64;
-        acc[3] += g[i + 3].abs() as f64;
-    }
-    let mut l1 = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    for &x in &g[chunks * 4..] {
-        l1 += x.abs() as f64;
-    }
+    // ||g||₁ in f64 (d can be large and magnitudes tiny).
+    let l1 = l1_norm_pass(g);
     if l1 == 0.0 {
         return ProbVector {
             inv_lambda: 0.0,
@@ -433,29 +420,60 @@ pub fn greedy_probs(g: &[f32], rho: f32, iters: usize, p_out: &mut Vec<f32>) -> 
     // and branchless (g = 0 ⇒ p = 0 ⇒ both select arms contribute 0), so
     // the loop vectorizes.
     let inv_gamma = 1.0 / gamma;
-    let mut expected_nnz = 0.0f64;
-    let mut variance = 0.0f64;
-    let mut num_exact = 0usize;
-    for (&p, &x) in p_out.iter().zip(g.iter()) {
-        let m = x.abs() as f64;
-        let is_capped = p >= 1.0;
-        num_exact += is_capped as usize;
-        expected_nnz += if is_capped { 1.0 } else { p as f64 };
-        variance += if is_capped { m * m } else { m * inv_gamma };
-    }
+    let (expected_nnz, variance, num_exact) = greedy_stats_pass(p_out, g, inv_gamma);
 
     ProbVector {
         inv_lambda: inv_gamma as f32,
-        num_exact,
+        num_exact: num_exact as usize,
         expected_nnz,
         variance,
     }
 }
 
+/// `‖g‖₁` in f64 over one slice: 4-lane unrolled accumulation breaks the
+/// serial FP dependency chain so the loop vectorizes. Also the per-chunk
+/// kernel of the engine's pooled greedy path — chunk partials are reduced
+/// in chunk order there, so the parallel result is deterministic.
+#[inline]
+pub(crate) fn l1_norm_pass(g: &[f32]) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let chunks = g.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += g[i].abs() as f64;
+        acc[1] += g[i + 1].abs() as f64;
+        acc[2] += g[i + 2].abs() as f64;
+        acc[3] += g[i + 3].abs() as f64;
+    }
+    let mut l1 = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for &x in &g[chunks * 4..] {
+        l1 += x.abs() as f64;
+    }
+    l1
+}
+
+/// The greedy solver's final statistics over one slice:
+/// `(Σ p, Σ g²/p, #{p ≥ 1})` in the division-free Prop-1 form. Per-chunk
+/// kernel of the pooled path (partials reduced in chunk order).
+#[inline]
+pub(crate) fn greedy_stats_pass(p: &[f32], g: &[f32], inv_gamma: f64) -> (f64, f64, u64) {
+    let mut expected_nnz = 0.0f64;
+    let mut variance = 0.0f64;
+    let mut num_exact = 0u64;
+    for (&pi, &x) in p.iter().zip(g.iter()) {
+        let m = x.abs() as f64;
+        let is_capped = pi >= 1.0;
+        num_exact += is_capped as u64;
+        expected_nnz += if is_capped { 1.0 } else { pi as f64 };
+        variance += if is_capped { m * m } else { m * inv_gamma };
+    }
+    (expected_nnz, variance, num_exact)
+}
+
 /// `p_i = min(gf·|g_i|, 1)` plus `(Σ_{0<p<1} p, #{p ≥ 1})` in one pass.
 /// Branchless (selects) with 4-lane f64 accumulators so LLVM vectorizes.
 #[inline]
-fn init_scale_pass(g: &[f32], gf: f32, p_out: &mut [f32]) -> (f64, usize) {
+pub(crate) fn init_scale_pass(g: &[f32], gf: f32, p_out: &mut [f32]) -> (f64, usize) {
     let d = g.len();
     let mut sum = [0.0f64; 4];
     let mut cap = [0u64; 4];
@@ -488,7 +506,7 @@ fn init_scale_pass(g: &[f32], gf: f32, p_out: &mut [f32]) -> (f64, usize) {
 /// iteration's `(Σ_{0<p<1} p, #{p ≥ 1})` from the same pass. Branchless:
 /// capped entries multiply by 1 (min keeps them at 1.0 exactly).
 #[inline]
-fn rescale_pass(p_out: &mut [f32], cf: f32) -> (f64, usize) {
+pub(crate) fn rescale_pass(p_out: &mut [f32], cf: f32) -> (f64, usize) {
     let d = p_out.len();
     let mut sum = [0.0f64; 4];
     let mut cap = [0u64; 4];

@@ -12,6 +12,11 @@
 //!
 //! * `PULL` — empty body; a worker requesting the current weights.
 //! * `WEIGHTS` — `u64 version` + `d × f32 LE` weights.
+//! * `WEIGHTS_BATCH` — `u64 version` + `u32 tensor count L` + `L × u32`
+//!   per-tensor f32 counts + the concatenated `f32 LE` payloads: a whole
+//!   multi-tensor model's weights in **one** frame per pull round-trip,
+//!   mirroring what `GRAD_BATCH` does for the upload direction (v3 links
+//!   only; v2 peers receive plain `WEIGHTS`).
 //! * `GRAD` — `u64 based_on` + `f64 g_norm_sq` + `f64 q_norm_sq` +
 //!   `f64 expected_nnz` + `u64 ideal_bits` + `u8 kind` + payload, where
 //!   `kind = 0` means the payload is [`crate::coding`] wire bytes and
@@ -57,6 +62,7 @@ const TAG_GRAD: u8 = 0x12;
 const TAG_SHUTDOWN: u8 = 0x13;
 const TAG_CONFIG: u8 = 0x14;
 const TAG_GRAD_BATCH: u8 = 0x15;
+const TAG_WEIGHTS_BATCH: u8 = 0x16;
 
 /// The handshake sent by the connecting side as its first frame. Besides
 /// identifying the worker it pins the protocol version *and* the wire codec
@@ -176,6 +182,11 @@ const GRAD_HEADER_LEN: usize = 1 + 8 + 8 + 8 + 8 + 8 + 1;
 pub enum MsgView<'a> {
     Pull,
     Weights { version: u64, w_bytes: &'a [u8] },
+    /// A whole multi-tensor weight set in one frame (v3 links only):
+    /// `batch` is the validated `u32 count + count × u32 lens + payload`
+    /// region — read it through [`weights_batch_count`] /
+    /// [`weights_batch_into`] / [`weights_batch_segments_into`].
+    WeightsBatch { version: u64, batch: &'a [u8] },
     Grad { header: GradHeader, payload: &'a [u8] },
     /// A whole model update in one frame: the header carries the
     /// layer-summed statistics, the payload is a
@@ -199,6 +210,56 @@ pub fn encode_weights(out: &mut Vec<u8>, version: u64, w: &[f32]) {
     out.extend_from_slice(&version.to_le_bytes());
     for &x in w {
         out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Encode a `WEIGHTS_BATCH` message into `out` (cleared first): every
+/// tensor of a multi-tensor model in one frame — one round-trip per pull
+/// regardless of the layer count, the download-direction sibling of
+/// `GRAD_BATCH`.
+pub fn encode_weights_batch(out: &mut Vec<u8>, version: u64, tensors: &[&[f32]]) {
+    let total: usize = tensors.iter().map(|t| t.len()).sum();
+    out.clear();
+    out.reserve(1 + 8 + 4 + 4 * tensors.len() + 4 * total);
+    out.push(TAG_WEIGHTS_BATCH);
+    out.extend_from_slice(&version.to_le_bytes());
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        out.extend_from_slice(&(t.len() as u32).to_le_bytes());
+    }
+    for t in tensors {
+        for &x in t.iter() {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Tensor count of a validated `WEIGHTS_BATCH` region.
+pub fn weights_batch_count(batch: &[u8]) -> usize {
+    u32::from_le_bytes(batch[0..4].try_into().unwrap()) as usize
+}
+
+/// Concatenate every tensor of a validated `WEIGHTS_BATCH` region into one
+/// caller-held `f32` arena (cleared first; capacity reused) — the layout
+/// single-arena consumers (e.g. the dist runtime's flat weight vector)
+/// want.
+pub fn weights_batch_into(batch: &[u8], out: &mut Vec<f32>) {
+    let count = weights_batch_count(batch);
+    weights_into(&batch[4 + 4 * count..], out);
+}
+
+/// Split a validated `WEIGHTS_BATCH` region into per-tensor vectors
+/// (resized to the tensor count; inner capacity reused).
+pub fn weights_batch_segments_into(batch: &[u8], out: &mut Vec<Vec<f32>>) {
+    let count = weights_batch_count(batch);
+    if out.len() != count {
+        out.resize_with(count, Vec::new);
+    }
+    let mut off = 4 + 4 * count;
+    for (t, slot) in out.iter_mut().enumerate() {
+        let len = u32::from_le_bytes(batch[4 + 4 * t..8 + 4 * t].try_into().unwrap()) as usize;
+        weights_into(&batch[off..off + 4 * len], slot);
+        off += 4 * len;
     }
 }
 
@@ -262,6 +323,35 @@ pub fn decode(buf: &[u8]) -> Result<MsgView<'_>, TransportError> {
             Ok(MsgView::Weights {
                 version: u64::from_le_bytes(body[0..8].try_into().unwrap()),
                 w_bytes: &body[8..],
+            })
+        }
+        TAG_WEIGHTS_BATCH => {
+            // Fully validated here so the `weights_batch_*` readers can
+            // index without re-checking: count table present, every length
+            // fits, and the payload is exactly the declared total.
+            if body.len() < 12 {
+                return Err(TransportError::UnexpectedMessage("weights batch truncated"));
+            }
+            let batch = &body[8..];
+            let count = u32::from_le_bytes(batch[0..4].try_into().unwrap()) as usize;
+            // The length table alone bounds `count` before any multiply
+            // can overflow or any allocation can happen.
+            if batch.len() < 4 || (batch.len() - 4) / 4 < count {
+                return Err(TransportError::UnexpectedMessage("weights batch count"));
+            }
+            let mut total: u64 = 0;
+            for t in 0..count {
+                let len =
+                    u32::from_le_bytes(batch[4 + 4 * t..8 + 4 * t].try_into().unwrap());
+                total += len as u64;
+            }
+            let payload_len = (batch.len() - 4 - 4 * count) as u64;
+            if total.checked_mul(4) != Some(payload_len) {
+                return Err(TransportError::UnexpectedMessage("weights batch payload"));
+            }
+            Ok(MsgView::WeightsBatch {
+                version: u64::from_le_bytes(body[0..8].try_into().unwrap()),
+                batch,
             })
         }
         TAG_GRAD | TAG_GRAD_BATCH => {
@@ -461,6 +551,51 @@ mod tests {
         bad[kind_off] = 1;
         assert!(decode(&bad).is_err());
         assert!(decode(&buf[..GRAD_HEADER_LEN - 1]).is_err());
+    }
+
+    #[test]
+    fn weights_batch_roundtrips_multi_tensor() {
+        let a = [1.0f32, -2.5, 0.0];
+        let b: [f32; 0] = [];
+        let c = [7.25f32];
+        let mut buf = Vec::new();
+        encode_weights_batch(&mut buf, 42, &[&a, &b, &c]);
+        match decode(&buf).unwrap() {
+            MsgView::WeightsBatch { version, batch } => {
+                assert_eq!(version, 42);
+                assert_eq!(weights_batch_count(batch), 3);
+                let mut flat = Vec::new();
+                weights_batch_into(batch, &mut flat);
+                assert_eq!(flat, vec![1.0, -2.5, 0.0, 7.25]);
+                let mut segs = Vec::new();
+                weights_batch_segments_into(batch, &mut segs);
+                assert_eq!(segs, vec![a.to_vec(), b.to_vec(), c.to_vec()]);
+            }
+            other => panic!("{other:?}"),
+        }
+        // An empty tensor list is a valid (12-byte) batch.
+        encode_weights_batch(&mut buf, 0, &[]);
+        match decode(&buf).unwrap() {
+            MsgView::WeightsBatch { batch, .. } => assert_eq!(weights_batch_count(batch), 0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn weights_batch_rejects_malformed() {
+        let w = [0.5f32, 1.5];
+        let mut buf = Vec::new();
+        encode_weights_batch(&mut buf, 9, &[&w]);
+        // Truncated header / truncated payload / inflated count all refuse.
+        assert!(decode(&buf[..10]).is_err());
+        assert!(decode(&buf[..buf.len() - 1]).is_err());
+        let mut bad = buf.clone();
+        bad[9] = 200; // count LSB (body offset 8 → frame offset 9)
+        assert!(decode(&bad).is_err());
+        // A length-table entry that disagrees with the payload size.
+        let mut bad = buf.clone();
+        bad[13] = 3; // first tensor length LSB: 2 → 3
+        assert!(decode(&bad).is_err());
     }
 
     #[test]

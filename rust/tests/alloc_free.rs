@@ -81,6 +81,26 @@ fn steady_state_compression_is_allocation_free() {
         );
     }
 
+    // --- Error-feedback adapter: residual arena + scratch reuse --------
+    // (OneBit above already runs through WithFeedback<SignCompressor>;
+    // this pins the adapter around a sparse compressor explicitly.)
+    {
+        let mut c = gsparse::feedback::WithFeedback::new(
+            gsparse::sparsify::TopKCompressor::new(0.05),
+        );
+        let mut msg = Compressed::Sparse(SparseGrad::empty(d));
+        for _ in 0..8 {
+            gsparse::sparsify::Compressor::compress_into(&mut c, &g, &mut rand, &mut msg);
+        }
+        let n = count_allocs(calls, || {
+            gsparse::sparsify::Compressor::compress_into(&mut c, &g, &mut rand, &mut msg);
+        });
+        assert_eq!(
+            n, 0,
+            "WithFeedback<TopK>: compress_into allocated {n} times in {calls} calls"
+        );
+    }
+
     // --- Aggregator reduce (encode → decode_into → average) ------------
     let mut engine = CompressEngine::greedy(0.05, 2);
     let mut grads: Vec<SparseGrad> = Vec::new();

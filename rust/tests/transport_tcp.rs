@@ -21,8 +21,11 @@ use gsparse::transport::{
 };
 
 /// The shared suite honours the CI `codec: [raw, entropy]` matrix via
-/// `GSPARSE_CODEC`; the explicit `*_entropy_codec` tests below pin the
-/// entropy variant regardless of the environment.
+/// `GSPARSE_CODEC` and the `feedback: [off, on]` matrix via
+/// `GSPARSE_FEEDBACK` (error feedback rides the CONFIG frame, so the
+/// parity criteria must hold with the residual memory engaged too); the
+/// explicit `*_entropy_codec` tests below pin the entropy variant
+/// regardless of the environment.
 fn test_cfg() -> RunPlan {
     RunPlan {
         workers: 2,
@@ -33,6 +36,7 @@ fn test_cfg() -> RunPlan {
         seed: 71,
         reg: 1.0 / (10.0 * 256.0),
         codec: WireCodec::from_env(),
+        feedback: gsparse::feedback::FeedbackConfig::from_env(),
         ..Default::default()
     }
 }
@@ -98,6 +102,38 @@ fn multi_process_cluster_matches_in_process_run_entropy_codec() {
     // 1 server + 2 worker processes negotiating `--codec entropy` on their
     // real command lines — the smoke test's entropy variant.
     multi_process_parity(&entropy_cfg());
+}
+
+#[test]
+fn multi_process_cluster_matches_in_process_run_feedback_local_steps() {
+    // The feedback-determinism criterion across *OS processes*: residual
+    // state lives inside each spawned worker (shipped via the CONFIG
+    // frame, never on the wire), yet the compressed bytes and final
+    // weights must match the in-process threads run bitwise — with error
+    // feedback on a biased method AND a local-step schedule engaged.
+    let cfg = RunPlan {
+        method: gsparse::config::Method::TopK,
+        rho: 0.05,
+        rounds: 60,
+        local_steps: 3,
+        feedback: Some(gsparse::feedback::FeedbackConfig::default()),
+        ..test_cfg()
+    };
+    let bin = std::path::PathBuf::from(env!("CARGO_BIN_EXE_gsparse"));
+    let procs = dist::run_processes(&bin, "127.0.0.1:0", &cfg).unwrap();
+    let inproc = dist::run_threads(InProcTransport::new(), "mp-fb", &cfg).unwrap();
+    assert_eq!(procs.grad_digest, inproc.grad_digest);
+    assert_eq!(procs.final_w, inproc.final_w);
+    // 60 local rounds at H = 3 → 20 pushes per worker.
+    assert_eq!(procs.versions, (20 * cfg.workers) as u64);
+    assert_eq!(
+        procs.curve.ledger.measured_bytes,
+        inproc.curve.ledger.measured_bytes
+    );
+    assert_eq!(
+        procs.curve.ledger.measured_frames,
+        inproc.curve.ledger.measured_frames
+    );
 }
 
 fn multi_process_parity(cfg: &RunPlan) {
@@ -175,6 +211,37 @@ fn frame_roundtrips_over_tcp_empty_and_large() {
             let mut back = Vec::new();
             frame::weights_into(w_bytes, &mut back);
             assert_eq!(back, w);
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn weights_batch_frame_roundtrips_over_tcp() {
+    // The multi-tensor pull frame end to end over real sockets: one frame
+    // carries a whole layer list's weights, and both readers reproduce it.
+    let (mut client, mut server) = tcp_pair();
+    let tensors: Vec<Vec<f32>> = vec![
+        (0..1000).map(|i| i as f32 * 0.25).collect(),
+        vec![],
+        (0..37).map(|i| -(i as f32)).collect(),
+    ];
+    let refs: Vec<&[f32]> = tensors.iter().map(|t| t.as_slice()).collect();
+    let mut frame_buf = Vec::new();
+    frame::encode_weights_batch(&mut frame_buf, 5, &refs);
+    client.send(&frame_buf).unwrap();
+    let mut buf = Vec::new();
+    server.recv(&mut buf).unwrap();
+    match frame::decode(&buf).unwrap() {
+        MsgView::WeightsBatch { version, batch } => {
+            assert_eq!(version, 5);
+            assert_eq!(frame::weights_batch_count(batch), 3);
+            let mut segs = Vec::new();
+            frame::weights_batch_segments_into(batch, &mut segs);
+            assert_eq!(segs, tensors);
+            let mut flat = Vec::new();
+            frame::weights_batch_into(batch, &mut flat);
+            assert_eq!(flat.len(), 1037);
         }
         other => panic!("{other:?}"),
     }
@@ -318,6 +385,9 @@ fn v2_workers_interoperate_with_a_v3_server_bitwise() {
     let v3_report = dist::run_threads(TcpTransport::new(), "127.0.0.1:0", &cfg).unwrap();
     assert_eq!(v2_report.grad_digest, v3_report.grad_digest);
     assert_eq!(v2_report.final_w, v3_report.final_w);
+    // Same hellos, same frames: the single-tensor weight set travels as
+    // plain WEIGHTS on both v2 and v3 links (WEIGHTS_BATCH only kicks in
+    // for multi-tensor weight sets), so framed bytes match exactly.
     assert_eq!(
         v2_report.curve.ledger.measured_bytes,
         v3_report.curve.ledger.measured_bytes,
