@@ -6,12 +6,15 @@
 //! trajectory.
 
 use gsparse::benchkit::{black_box, section, Bencher, JsonReport};
+use gsparse::coding::{BatchStreamEncoder, WireCodec};
 use gsparse::coordinator::dist::{self, RunPlan};
 use gsparse::rngkit::RandArray;
-use gsparse::sparsify::{greedy_probs, sample_sparse};
+use gsparse::sparsify::{greedy_probs, sample_sparse, BatchCompressEngine, SparseGrad};
 use gsparse::transport::frame::{self, GradHeader, MsgView};
-use gsparse::transport::{InProcTransport, TcpTransport, FRAME_OVERHEAD};
-use std::time::Instant;
+use gsparse::transport::{
+    Hello, InProcTransport, Listener, TcpTransport, Transport, FRAME_OVERHEAD,
+};
+use std::time::{Duration, Instant};
 
 fn bench_frame_codec(report: &mut JsonReport) {
     section("frame codec (grad message, d = 2048, rho = 0.1)");
@@ -98,12 +101,260 @@ fn bench_cluster(report: &mut JsonReport, backend: &str) {
     );
 }
 
+// ---- pipelined compression <-> network overlap ------------------------
+//
+// The ISSUE-6 acceptance workload: d = 2^20 coordinates (16 layers of
+// 65536) at rho = 0.01 over loopback TCP, against a receiver that "drains
+// the wire" at a paced rate calibrated to the measured compression time —
+// so compute and wire are comparably expensive, the regime where overlap
+// matters. Depth 1 runs the reference encode-then-send path; depth >= 2
+// keeps frames in flight via the streaming WireBatch encoder + vectored
+// gather writes. The receiver digests every frame, proving the two paths
+// put bitwise-identical bytes on the wire.
+
+const PIPE_LAYERS: usize = 16;
+const PIPE_LAYER_D: usize = 1 << 16; // 16 x 65536 = 2^20 coordinates
+const PIPE_ROUNDS: usize = 8;
+const PIPE_DEPTH: usize = 2;
+const PIPE_RHO: f32 = 0.01;
+
+fn fnv1a(mut hash: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    hash
+}
+
+fn pipe_rand() -> RandArray {
+    RandArray::from_seed(2020, 1 << 21)
+}
+
+fn pipe_header(round: usize) -> GradHeader {
+    GradHeader {
+        based_on: round as u64,
+        g_norm_sq: 0.0,
+        q_norm_sq: 0.0,
+        expected_nnz: 0.0,
+        ideal_bits: 0,
+        kind: 0,
+    }
+}
+
+/// Paced ack receiver: recv `rounds` frames, FNV-digest each, hold each
+/// for `pace` (the simulated wire drain), then ack with one byte.
+fn spawn_receiver(
+    mut listener: Box<dyn Listener>,
+    rounds: usize,
+    pace: Duration,
+) -> std::thread::JoinHandle<u64> {
+    std::thread::spawn(move || {
+        let (mut conn, _hello) = listener.accept().expect("bench accept");
+        let mut buf = Vec::new();
+        let mut digest = 0xCBF2_9CE4_8422_2325u64; // FNV-1a offset basis
+        for _ in 0..rounds {
+            conn.recv(&mut buf).expect("bench frame");
+            digest = fnv1a(digest, &buf);
+            std::thread::sleep(pace);
+            conn.send(b"k").expect("bench ack");
+        }
+        digest
+    })
+}
+
+/// Average seconds per compress+encode round (the work that must finish
+/// before the frame's bytes exist), measured with no network attached.
+fn pipe_compress_round_s(refs: &[&[f32]], codec: WireCodec) -> f64 {
+    let mut engine = BatchCompressEngine::greedy(PIPE_RHO, 2);
+    let mut rand = pipe_rand();
+    let mut outs: Vec<SparseGrad> = Vec::new();
+    let mut pvs = Vec::new();
+    let mut wire = Vec::new();
+    // One warmup round grows every scratch buffer to steady state.
+    engine.compress_batch_into(refs, codec, &mut rand, &mut outs, &mut wire, &mut pvs);
+    let mut rand = pipe_rand();
+    let t0 = Instant::now();
+    for _ in 0..PIPE_ROUNDS {
+        engine.compress_batch_into(refs, codec, &mut rand, &mut outs, &mut wire, &mut pvs);
+        black_box(wire.len());
+    }
+    t0.elapsed().as_secs_f64() / PIPE_ROUNDS as f64
+}
+
+/// One pre-encoded `GRAD_BATCH` frame for the wire-only measurement.
+fn pipe_one_frame(refs: &[&[f32]], codec: WireCodec) -> Vec<u8> {
+    let mut engine = BatchCompressEngine::greedy(PIPE_RHO, 2);
+    let mut rand = pipe_rand();
+    let mut outs: Vec<SparseGrad> = Vec::new();
+    let mut pvs = Vec::new();
+    let mut wire = Vec::new();
+    engine.compress_batch_into(refs, codec, &mut rand, &mut outs, &mut wire, &mut pvs);
+    let mut frame_buf = Vec::new();
+    frame::encode_grad_batch(&mut frame_buf, &pipe_header(0), &wire);
+    frame_buf
+}
+
+/// Average seconds per round of pure wire work: ship the same pre-encoded
+/// frame `PIPE_ROUNDS` times through the paced receiver, one ack at a time.
+fn pipe_wire_round_s(frame_bytes: &[u8], codec: WireCodec, pace: Duration) -> f64 {
+    let transport = TcpTransport::new();
+    let listener = transport.listen("127.0.0.1:0").expect("bench listen");
+    let addr = listener.local_addr();
+    let rx = spawn_receiver(listener, PIPE_ROUNDS, pace);
+    let mut conn = transport
+        .connect(&addr, &Hello::with_codec(0, codec))
+        .expect("bench connect");
+    let mut ack = Vec::new();
+    let t0 = Instant::now();
+    for _ in 0..PIPE_ROUNDS {
+        conn.send(frame_bytes).expect("bench send");
+        conn.recv(&mut ack).expect("bench ack");
+    }
+    let per_round = t0.elapsed().as_secs_f64() / PIPE_ROUNDS as f64;
+    rx.join().expect("receiver thread");
+    per_round
+}
+
+/// A full compress-and-ship run at in-flight window `depth` (1 = the
+/// sequential reference path). Returns (seconds per round, the receiver's
+/// frame digest, the link's vectored-frame count).
+fn pipe_run(
+    refs: &[&[f32]],
+    codec: WireCodec,
+    pace: Duration,
+    depth: usize,
+) -> (f64, u64, u64) {
+    let transport = TcpTransport::new();
+    let listener = transport.listen("127.0.0.1:0").expect("bench listen");
+    let addr = listener.local_addr();
+    let rx = spawn_receiver(listener, PIPE_ROUNDS, pace);
+    let mut conn = transport
+        .connect(&addr, &Hello::with_codec(0, codec))
+        .expect("bench connect");
+
+    let mut engine = BatchCompressEngine::greedy(PIPE_RHO, 2);
+    let mut rand = pipe_rand();
+    let mut outs: Vec<SparseGrad> = (0..refs.len()).map(|_| SparseGrad::empty(0)).collect();
+    let mut pvs = Vec::new();
+    let mut wire = Vec::new();
+    let mut frame_buf = Vec::new();
+    let mut seg_bufs: Vec<Vec<u8>> = vec![Vec::new(); refs.len()];
+    let mut ack = Vec::new();
+    let mut outstanding = 0usize;
+
+    let t0 = Instant::now();
+    for round in 0..PIPE_ROUNDS {
+        let header = pipe_header(round);
+        if depth >= 2 {
+            // Streaming path: solve + sample, then encode each layer into
+            // its own segment and gather-write the frame — no contiguous
+            // WireBatch assembly, no frame-buffer copy.
+            {
+                let mut slots: Vec<&mut SparseGrad> = outs.iter_mut().collect();
+                engine.compress_batch_sparse_into(refs, &mut rand, &mut slots, &mut pvs);
+            }
+            let sgs: Vec<&SparseGrad> = outs.iter().collect();
+            let mut enc = BatchStreamEncoder::plan(&sgs, codec);
+            for (sg, seg) in sgs.iter().zip(seg_bufs.iter_mut()) {
+                enc.encode_next(sg, seg);
+            }
+            frame::encode_grad_batch_prefix(&mut frame_buf, &header);
+            let mut segments: Vec<&[u8]> = Vec::with_capacity(2 + seg_bufs.len());
+            segments.push(&frame_buf);
+            segments.push(enc.header());
+            segments.extend(seg_bufs.iter().map(|s| s.as_slice()));
+            conn.send_vectored(&segments).expect("bench send");
+        } else {
+            engine.compress_batch_into(refs, codec, &mut rand, &mut outs, &mut wire, &mut pvs);
+            frame::encode_grad_batch(&mut frame_buf, &header, &wire);
+            conn.send(&frame_buf).expect("bench send");
+        }
+        outstanding += 1;
+        if outstanding >= depth {
+            conn.recv(&mut ack).expect("bench ack");
+            outstanding -= 1;
+        }
+    }
+    while outstanding > 0 {
+        conn.recv(&mut ack).expect("bench ack");
+        outstanding -= 1;
+    }
+    let per_round = t0.elapsed().as_secs_f64() / PIPE_ROUNDS as f64;
+    let digest = rx.join().expect("receiver thread");
+    (per_round, digest, conn.counters().frames_vectored())
+}
+
+fn bench_pipeline(report: &mut JsonReport) {
+    section(&format!(
+        "pipelined rounds: d = 2^20 ({PIPE_LAYERS} x {PIPE_LAYER_D}), rho = {PIPE_RHO}, \
+         tcp, depth {PIPE_DEPTH}"
+    ));
+    let layers: Vec<Vec<f32>> = (0..PIPE_LAYERS)
+        .map(|l| gsparse::benchkit::skewed_gradient(PIPE_LAYER_D, 100 + l as u64, 0.3))
+        .collect();
+    let refs: Vec<&[f32]> = layers.iter().map(|g| g.as_slice()).collect();
+    for codec in [WireCodec::Raw, WireCodec::Entropy] {
+        let cname = match codec {
+            WireCodec::Raw => "raw",
+            WireCodec::Entropy => "entropy",
+        };
+        let compress_s = pipe_compress_round_s(&refs, codec);
+        // Pace the receiver so the simulated wire drain is comparable to
+        // (but cheaper than) compression — the max(compress, wire) regime
+        // the overlap targets. Clamped away from scheduler granularity.
+        let pace = Duration::from_secs_f64((0.75 * compress_s).clamp(0.0005, 0.05));
+        let one_frame = pipe_one_frame(&refs, codec);
+        let wire_s = pipe_wire_round_s(&one_frame, codec, pace);
+        let (seq_s, seq_digest, _) = pipe_run(&refs, codec, pace, 1);
+        let (pipe_s, pipe_digest, vectored) = pipe_run(&refs, codec, pace, PIPE_DEPTH);
+        assert_eq!(
+            seq_digest, pipe_digest,
+            "{cname}: pipelined frames must be bitwise identical to sequential"
+        );
+        assert!(
+            vectored >= PIPE_ROUNDS as u64,
+            "{cname}: every pipelined frame should take the vectored zero-copy path"
+        );
+        let overlap_ratio = pipe_s / compress_s.max(wire_s);
+        let vs_sum_ratio = pipe_s / (compress_s + wire_s);
+        println!(
+            "{cname:>7}: compress {:.2} ms  wire {:.2} ms  sequential {:.2} ms  \
+             pipelined {:.2} ms  ({overlap_ratio:.2}x max, {vs_sum_ratio:.2}x sum)  \
+             frame {} B  vectored {vectored}",
+            compress_s * 1e3,
+            wire_s * 1e3,
+            seq_s * 1e3,
+            pipe_s * 1e3,
+            one_frame.len(),
+        );
+        report.push_metric(&format!("pipeline_{cname}_compress_round_s"), compress_s);
+        report.push_metric(&format!("pipeline_{cname}_wire_round_s"), wire_s);
+        report.push_metric(&format!("pipeline_{cname}_sequential_round_s"), seq_s);
+        report.push_metric(&format!("pipeline_{cname}_pipelined_round_s"), pipe_s);
+        report.push_metric(&format!("pipeline_{cname}_overlap_ratio"), overlap_ratio);
+        report.push_metric(&format!("pipeline_{cname}_vs_sum_ratio"), vs_sum_ratio);
+        report.push_metric(
+            &format!("pipeline_{cname}_digest_match"),
+            f64::from(u8::from(seq_digest == pipe_digest)),
+        );
+        report.push_metric(
+            &format!("pipeline_{cname}_frames_vectored"),
+            vectored as f64,
+        );
+        report.push_metric(
+            &format!("pipeline_{cname}_frame_bytes"),
+            one_frame.len() as f64,
+        );
+    }
+}
+
 fn main() {
     let mut report = JsonReport::new();
     bench_frame_codec(&mut report);
     section("distributed parameter server, 2 workers x 150 rounds (d = 1024)");
     bench_cluster(&mut report, "inproc");
     bench_cluster(&mut report, "tcp");
+    bench_pipeline(&mut report);
     let out_path = std::env::var("GSPARSE_BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_transport.json".to_string());
     match report.write(&out_path) {

@@ -246,6 +246,7 @@ pub struct SessionBuilder {
     transport_version: u8,
     feedback: Option<FeedbackConfig>,
     local_steps: usize,
+    pipeline: usize,
 }
 
 impl Default for SessionBuilder {
@@ -260,6 +261,7 @@ impl Default for SessionBuilder {
             transport_version: TRANSPORT_VERSION,
             feedback: None,
             local_steps: 1,
+            pipeline: 1,
         }
     }
 }
@@ -342,6 +344,19 @@ impl SessionBuilder {
         self
     }
 
+    /// Pipeline depth: the maximum number of in-flight compressed round
+    /// frames a sender may have unacknowledged on the wire. Depth 1 (the
+    /// default) is the historical fully-sequential reference path; depth
+    /// ≥ 2 enables the streaming `WireBatch` encoder and vectored
+    /// zero-copy frame writes, overlapping chunk compression with network
+    /// transmission. The decoded updates are **bitwise identical** at
+    /// every depth — pipelining reorders work, never bytes. Clamped to at
+    /// least 1.
+    pub fn pipeline(mut self, depth: usize) -> Self {
+        self.pipeline = depth.max(1);
+        self
+    }
+
     pub fn build(self) -> Session {
         Session {
             method: self.method,
@@ -353,7 +368,25 @@ impl SessionBuilder {
             transport_version: self.transport_version,
             feedback: self.feedback,
             local_steps: self.local_steps,
+            pipeline: self.pipeline,
         }
+    }
+}
+
+/// Read the pipeline depth from the `GSPARSE_PIPELINE` environment
+/// variable — the hook the CI matrix and the shared test suites use to
+/// steer every run through a given depth. Unset or empty means depth 1
+/// (the sequential reference path); anything that does not parse as a
+/// positive integer panics, so a typo in a CI matrix cannot silently
+/// test the wrong configuration.
+pub fn pipeline_from_env() -> usize {
+    match std::env::var("GSPARSE_PIPELINE") {
+        Err(_) => 1,
+        Ok(v) if v.is_empty() => 1,
+        Ok(v) => match v.parse::<usize>() {
+            Ok(depth) if depth >= 1 => depth,
+            _ => panic!("GSPARSE_PIPELINE must be a positive integer, got {v:?}"),
+        },
     }
 }
 
@@ -371,6 +404,7 @@ pub struct Session {
     transport_version: u8,
     feedback: Option<FeedbackConfig>,
     local_steps: usize,
+    pipeline: usize,
 }
 
 impl Session {
@@ -414,6 +448,12 @@ impl Session {
     /// The local-step period `H` (1 = synchronize every round).
     pub fn local_steps(&self) -> usize {
         self.local_steps
+    }
+
+    /// The pipeline depth (max in-flight round frames; 1 = sequential
+    /// reference path). See [`SessionBuilder::pipeline`].
+    pub fn pipeline(&self) -> usize {
+        self.pipeline
     }
 
     /// The communication schedule implied by [`Self::local_steps`].
@@ -485,6 +525,7 @@ impl Session {
             codec: self.codec,
             local_steps: self.local_steps,
             feedback: self.feedback,
+            pipeline: self.pipeline,
         }
     }
 
@@ -704,6 +745,7 @@ mod tests {
         assert_eq!(s.transport_version(), TRANSPORT_VERSION);
         assert_eq!(s.feedback(), None);
         assert_eq!(s.local_steps(), 1);
+        assert_eq!(s.pipeline(), 1);
         assert_eq!(s.comm_schedule(), crate::feedback::CommSchedule::every_round());
 
         let s = Session::builder()
@@ -715,6 +757,7 @@ mod tests {
             .transport_version(0) // clamped to the supported window
             .feedback(FeedbackConfig::with_decay(0.9))
             .local_steps(0) // clamped to 1
+            .pipeline(0) // clamped to 1
             .build();
         assert_eq!(s.workers(), 1);
         assert_eq!(s.seed(), 7);
@@ -724,7 +767,11 @@ mod tests {
         assert_eq!(s.method().method(), Method::TopK);
         assert_eq!(s.feedback(), Some(FeedbackConfig::with_decay(0.9)));
         assert_eq!(s.local_steps(), 1);
+        assert_eq!(s.pipeline(), 1);
         assert!(!s.compressor().name().is_empty());
+
+        let s = Session::builder().pipeline(4).build();
+        assert_eq!(s.pipeline(), 4);
     }
 
     #[test]
@@ -765,6 +812,7 @@ mod tests {
             .codec(WireCodec::Entropy)
             .workers(3)
             .seed(99)
+            .pipeline(2)
             .build();
         let task = DistTask {
             rounds: 17,
@@ -779,6 +827,7 @@ mod tests {
         assert_eq!(plan.seed, 99);
         assert_eq!(plan.d, 64);
         assert_eq!(plan.codec, WireCodec::Entropy);
+        assert_eq!(plan.pipeline, 2);
         // The plan survives its own wire encoding (the CONFIG frame).
         assert_eq!(RunPlan::decode(&plan.encode()).unwrap(), plan);
     }

@@ -12,10 +12,10 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic "GSPB"
-//! 4       1     version (1)
+//! 4       1     version (2; version-1 batches are still decoded)
 //! 5       1     codec the batch was encoded under (0 = raw, 1 = entropy)
-//! 6       1     ka — shared Rice parameter for every QA index stream
-//! 7       1     kb — shared Rice parameter for every QB index stream
+//! 6       1     ka — pooled Rice parameter for the QA index streams
+//! 7       1     kb — pooled Rice parameter for the QB index streams
 //! 8       4     L — number of layers (u32 LE)
 //! 12      ...   L sub-messages, concatenated in layer order
 //! ```
@@ -25,24 +25,46 @@
 //!
 //! ```text
 //! offset  size  field
-//! 0       1     encoding (0 = Indexed, 1 = DenseSymbols, 2 = IndexedRice)
+//! 0       1     encoding byte: bits 0–6 = encoding (0 = Indexed,
+//!               1 = DenseSymbols, 2 = IndexedRice); bit 7 = Rice
+//!               parameter-delta flag (version ≥ 2, IndexedRice only)
 //! 1       4     d            (u32 LE)
 //! 5       4     nnz_a        (u32 LE)
 //! 9       4     nnz_b        (u32 LE)
 //! 13      4     shared_mag   (f32 LE, = 1/λ)
-//! 17      ...   payload — byte-identical to the single-message layouts,
-//!               with `IndexedRice` reading the shared ka/kb above
+//! [17]    [1]   parameter-delta byte, present iff bit 7 of the encoding
+//!               byte is set: signed 4-bit deltas `(dka << 4) | dkb`
+//!               applied to the pooled header parameters, each in [-8, 7]
+//! 17|18   ...   payload — byte-identical to the single-message layouts,
+//!               with `IndexedRice` reading `(ka + dka, kb + dkb)`
 //! ```
+//!
+//! A layer whose gap scale diverges from the pooled distribution may spend
+//! one delta byte to run its Rice streams at its own optimum; the encoder
+//! does so only when that is *strictly* smaller than the pooled form, so
+//! ties keep the shorter spelling and every batch still has exactly one
+//! canonical byte form per codec. A delta byte of `0x00` (both deltas
+//! zero) and any delta pushing an effective parameter outside
+//! `[0, MAX_RICE_PARAM]` are rejected on decode.
+//!
+//! **Streaming sub-header rule.** Everything a sub-header (and delta byte)
+//! carries is decided by one cheap sizing pass over the layer list — no
+//! payload bytes need to exist yet. [`BatchStreamEncoder`] exploits this:
+//! `plan()` fixes the batch header, every per-layer encoding choice, and
+//! the exact total byte length up front, then `encode_next()` materializes
+//! one layer's sub-message at a time, so finished segments can be handed
+//! to the transport while later layers are still being encoded. The
+//! streaming path and [`encode_batch`] share the same plan/write internals
+//! and produce **bitwise-identical** batches by construction.
 //!
 //! Sub-message payloads have no explicit length: the fixed-layout encodings
 //! derive theirs from `(d, nnz_a, nnz_b)`, and the Rice stream ends after
 //! exactly `nnz_a + nnz_b` codewords plus canonical zero padding — the same
 //! self-delimiting property the single-message decoder already enforces.
 //! The encoder still chooses the cheapest admissible encoding per layer
-//! (falling back to the raw layouts when the shared parameters don't pay),
+//! (falling back to the raw layouts when neither Rice form pays),
 //! mirroring the Theorem-4 `min(·,·)` per layer. Header bytes 6–7 must be
-//! zero when no sub-message uses `IndexedRice`, so every batch has exactly
-//! one canonical byte form per codec.
+//! zero when no sub-message uses `IndexedRice`.
 
 use super::message::{
     self, dense_payload_len, gaps_of, indexed_payload_len, rice_payload_len, Encoding, WireCodec,
@@ -53,11 +75,17 @@ use crate::sparsify::SparseGrad;
 
 /// Magic of a batched message ("GSPB" vs the single-message "GSPR").
 pub const BATCH_MAGIC: &[u8; 4] = b"GSPB";
-pub const BATCH_VERSION: u8 = 1;
+/// Current batch format version. Version 1 (no per-layer parameter deltas)
+/// is still accepted on decode for wire compatibility with older peers.
+pub const BATCH_VERSION: u8 = 2;
 /// Fixed batch-header length in bytes.
 pub const BATCH_HEADER_LEN: usize = 12;
-/// Fixed per-layer sub-header length in bytes.
+/// Fixed per-layer sub-header length in bytes (excluding the optional
+/// parameter-delta byte).
 pub const SUB_HEADER_LEN: usize = 17;
+/// Bit 7 of the sub-header encoding byte: a parameter-delta byte follows
+/// the fixed sub-header (version ≥ 2, `IndexedRice` only).
+pub const PARAM_DELTA_FLAG: u8 = 0x80;
 
 /// The shared Rice parameters the `Entropy` codec would use for this layer
 /// list: one `(ka, kb)` pair chosen from the pooled gap distributions of
@@ -68,96 +96,258 @@ fn shared_rice_params(sgs: &[&SparseGrad]) -> (u8, u8) {
     (ka, kb)
 }
 
-/// Cheapest admissible encoding for one layer under the batch's shared
-/// Rice parameters; returns the encoding and its payload length.
-fn choose_sub(sg: &SparseGrad, codec: WireCodec, ka: u8, kb: u8) -> (Encoding, usize) {
+/// One layer's planned sub-message: everything the write pass needs, fixed
+/// before any payload byte exists.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct SubPlan {
+    enc: Encoding,
+    /// `Some(byte)` ⇒ the sub-header carries a parameter-delta byte and the
+    /// payload runs at the per-layer effective parameters below.
+    delta: Option<u8>,
+    /// Effective Rice parameters for this layer's payload (= the pooled
+    /// pair unless `delta` is set).
+    ka: u8,
+    kb: u8,
+    /// Payload bytes (excluding sub-header and delta byte).
+    payload_len: usize,
+}
+
+impl SubPlan {
+    fn wire_len(&self) -> usize {
+        SUB_HEADER_LEN + self.delta.is_some() as usize + self.payload_len
+    }
+}
+
+/// Cheapest admissible sub-message for one layer under the batch's pooled
+/// Rice parameters — considering, under `Entropy`, both the pooled-parameter
+/// Rice form and the 1-byte-delta per-layer-optimum form.
+fn plan_sub(sg: &SparseGrad, codec: WireCodec, ka: u8, kb: u8) -> SubPlan {
     let (na, nb) = (sg.exact.len(), sg.shared.len());
     let indexed = indexed_payload_len(na, nb);
     let dense = dense_payload_len(sg.d as usize, na);
     let raw = indexed.min(dense);
-    let rice_len = match codec {
-        WireCodec::Raw => usize::MAX,
-        WireCodec::Entropy => {
-            let bits = rice::stream_bits(gaps_of(&sg.exact), ka as u32)
-                + rice::stream_bits(gaps_of(&sg.shared), kb as u32);
-            rice_payload_len(na, nb, bits)
+    // Entropy candidate: pooled parameters, or the per-layer optimum behind
+    // a 1-byte delta when that is *strictly* smaller — ties keep the pooled
+    // form so each layer list has one canonical spelling.
+    let mut rice_cost = usize::MAX;
+    let mut delta = None;
+    let (mut eka, mut ekb) = (ka, kb);
+    if codec == WireCodec::Entropy && (na > 0 || nb > 0) {
+        let pooled_bits = rice::stream_bits(gaps_of(&sg.exact), ka as u32)
+            + rice::stream_bits(gaps_of(&sg.shared), kb as u32);
+        rice_cost = rice_payload_len(na, nb, pooled_bits);
+        // Per-layer optimum; an empty stream stays at the pooled parameter
+        // (its bits are zero either way, so a delta would be pure noise).
+        let (la, bits_a) = if na == 0 {
+            (ka, 0)
+        } else {
+            rice::choose_param(|| gaps_of(&sg.exact))
+        };
+        let (lb, bits_b) = if nb == 0 {
+            (kb, 0)
+        } else {
+            rice::choose_param(|| gaps_of(&sg.shared))
+        };
+        let (dka, dkb) = (la as i16 - ka as i16, lb as i16 - kb as i16);
+        if (dka, dkb) != (0, 0) && (-8..=7).contains(&dka) && (-8..=7).contains(&dkb) {
+            let with_delta = 1 + rice_payload_len(na, nb, bits_a + bits_b);
+            if with_delta < rice_cost {
+                rice_cost = with_delta;
+                delta = Some(rice::pack_param_deltas(dka as i8, dkb as i8));
+                (eka, ekb) = (la, lb);
+            }
         }
-    };
-    if rice_len < raw {
-        (Encoding::IndexedRice, rice_len)
-    } else if indexed <= dense {
-        (Encoding::Indexed, indexed)
-    } else {
-        (Encoding::DenseSymbols, dense)
     }
+    if rice_cost < raw {
+        SubPlan {
+            enc: Encoding::IndexedRice,
+            delta,
+            ka: eka,
+            kb: ekb,
+            payload_len: rice_cost - delta.is_some() as usize,
+        }
+    } else if indexed <= dense {
+        SubPlan {
+            enc: Encoding::Indexed,
+            delta: None,
+            ka,
+            kb,
+            payload_len: indexed,
+        }
+    } else {
+        SubPlan {
+            enc: Encoding::DenseSymbols,
+            delta: None,
+            ka,
+            kb,
+            payload_len: dense,
+        }
+    }
+}
+
+/// The sizing pass shared by [`encode_batch`], [`encoded_batch_len`] and
+/// [`BatchStreamEncoder`]: pooled parameters, per-layer plans, the exact
+/// total length, and the header parameter bytes (zero when no layer uses
+/// Rice, keeping one canonical byte form per codec).
+fn plan_batch(sgs: &[&SparseGrad], codec: WireCodec) -> (u8, u8, usize, Vec<SubPlan>) {
+    let (ka, kb) = match codec {
+        WireCodec::Raw => (0, 0),
+        WireCodec::Entropy => shared_rice_params(sgs),
+    };
+    let mut total = BATCH_HEADER_LEN;
+    let mut any_rice = false;
+    let plan: Vec<SubPlan> = sgs
+        .iter()
+        .map(|sg| {
+            let p = plan_sub(sg, codec, ka, kb);
+            any_rice |= p.enc == Encoding::IndexedRice;
+            total += p.wire_len();
+            p
+        })
+        .collect();
+    let (hka, hkb) = if any_rice { (ka, kb) } else { (0, 0) };
+    (hka, hkb, total, plan)
+}
+
+/// The fixed 12-byte batch header for a planned batch.
+fn batch_header(hka: u8, hkb: u8, codec: WireCodec, nlayers: usize) -> [u8; BATCH_HEADER_LEN] {
+    let mut h = [0u8; BATCH_HEADER_LEN];
+    h[0..4].copy_from_slice(BATCH_MAGIC);
+    h[4] = BATCH_VERSION;
+    h[5] = codec.index() as u8;
+    h[6] = hka;
+    h[7] = hkb;
+    h[8..12].copy_from_slice(&(nlayers as u32).to_le_bytes());
+    h
+}
+
+/// Append one planned sub-message (sub-header, optional delta byte,
+/// payload) — the single write path both the one-shot and the streaming
+/// encoder go through, so their bytes cannot diverge.
+fn write_sub(sg: &SparseGrad, plan: &SubPlan, out: &mut Vec<u8>) {
+    let mut enc_byte = plan.enc as u8;
+    if plan.delta.is_some() {
+        enc_byte |= PARAM_DELTA_FLAG;
+    }
+    out.push(enc_byte);
+    out.extend_from_slice(&sg.d.to_le_bytes());
+    out.extend_from_slice(&(sg.exact.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(sg.shared.len() as u32).to_le_bytes());
+    out.extend_from_slice(&sg.shared_mag.to_le_bytes());
+    if let Some(db) = plan.delta {
+        out.push(db);
+    }
+    message::write_payload(sg, plan.enc, plan.ka, plan.kb, out);
 }
 
 /// Byte length [`encode_batch`] will produce for this layer list.
 pub fn encoded_batch_len(sgs: &[&SparseGrad], codec: WireCodec) -> usize {
-    let (ka, kb) = match codec {
-        WireCodec::Raw => (0, 0),
-        WireCodec::Entropy => shared_rice_params(sgs),
-    };
-    BATCH_HEADER_LEN
-        + sgs
-            .iter()
-            .map(|sg| SUB_HEADER_LEN + choose_sub(sg, codec, ka, kb).1)
-            .sum::<usize>()
+    plan_batch(sgs, codec).2
 }
 
 /// Encode a layer list into one `WireBatch` message (cleared `out`, whose
 /// capacity is reused across rounds). Per-round cost beyond the byte
-/// writes: one L-element encoding-plan buffer (one byte per *layer*, never
-/// per coordinate). The per-layer sub-messages are written straight from
-/// the [`SparseGrad`]s — no intermediate per-layer message is materialized.
+/// writes: one L-element plan buffer (a few bytes per *layer*, never per
+/// coordinate). The per-layer sub-messages are written straight from the
+/// [`SparseGrad`]s — no intermediate per-layer message is materialized.
 pub fn encode_batch(sgs: &[&SparseGrad], codec: WireCodec, out: &mut Vec<u8>) {
-    let (ka, kb) = match codec {
-        WireCodec::Raw => (0, 0),
-        WireCodec::Entropy => shared_rice_params(sgs),
-    };
-    // Sizing pass: per-layer encoding choices (cached — the Entropy cost
-    // model walks both gap streams, so recomputing it during the write
-    // pass would double the O(nnz) work), the total length for one
-    // reserve, and whether Rice engages anywhere — header bytes 6–7 are
-    // zero otherwise, keeping one canonical byte form per (layer list,
-    // codec).
-    let mut total = BATCH_HEADER_LEN;
-    let mut any_rice = false;
-    let plan: Vec<Encoding> = sgs
-        .iter()
-        .map(|sg| {
-            let (enc, len) = choose_sub(sg, codec, ka, kb);
-            any_rice |= enc == Encoding::IndexedRice;
-            total += SUB_HEADER_LEN + len;
-            enc
-        })
-        .collect();
-    let (hka, hkb) = if any_rice { (ka, kb) } else { (0, 0) };
-
+    let (hka, hkb, total, plan) = plan_batch(sgs, codec);
     out.clear();
     out.reserve(total);
-    out.extend_from_slice(BATCH_MAGIC);
-    out.push(BATCH_VERSION);
-    out.push(codec.index() as u8);
-    out.push(hka);
-    out.push(hkb);
-    out.extend_from_slice(&(sgs.len() as u32).to_le_bytes());
-    for (sg, &enc) in sgs.iter().zip(plan.iter()) {
-        out.push(enc as u8);
-        out.extend_from_slice(&sg.d.to_le_bytes());
-        out.extend_from_slice(&(sg.exact.len() as u32).to_le_bytes());
-        out.extend_from_slice(&(sg.shared.len() as u32).to_le_bytes());
-        out.extend_from_slice(&sg.shared_mag.to_le_bytes());
-        message::write_payload(sg, enc, ka, kb, out);
+    out.extend_from_slice(&batch_header(hka, hkb, codec, sgs.len()));
+    for (sg, p) in sgs.iter().zip(plan.iter()) {
+        write_sub(sg, p, out);
     }
     debug_assert_eq!(out.len(), total);
 }
 
+/// Incremental `WireBatch` encoder for the pipelined send path.
+///
+/// [`BatchStreamEncoder::plan`] runs the sizing pass once: after it
+/// returns, the batch header bytes, every per-layer sub-header (including
+/// parameter-delta decisions), and the exact [`total_len`] are fixed — so a
+/// sender can emit the transport frame's length prefix and the batch
+/// header immediately, then call [`encode_next`] per layer and hand each
+/// finished segment to the connection while later layers are still being
+/// encoded. The concatenation `header() ++ segment_0 ++ … ++ segment_{L-1}`
+/// is bitwise identical to [`encode_batch`] over the same layer list (the
+/// two share one plan/write implementation; the parity tests pin it).
+///
+/// `encode_next` must be called with the same [`SparseGrad`]s, in the same
+/// order, that `plan` saw — the plan is positional.
+///
+/// [`total_len`]: BatchStreamEncoder::total_len
+/// [`encode_next`]: BatchStreamEncoder::encode_next
+pub struct BatchStreamEncoder {
+    plan: Vec<SubPlan>,
+    header: [u8; BATCH_HEADER_LEN],
+    total: usize,
+    next: usize,
+}
+
+impl BatchStreamEncoder {
+    /// Size and plan a batch without materializing any payload bytes.
+    pub fn plan(sgs: &[&SparseGrad], codec: WireCodec) -> Self {
+        let (hka, hkb, total, plan) = plan_batch(sgs, codec);
+        Self {
+            plan,
+            header: batch_header(hka, hkb, codec, sgs.len()),
+            total,
+            next: 0,
+        }
+    }
+
+    /// Exact byte length of the full batch (header + every sub-message).
+    pub fn total_len(&self) -> usize {
+        self.total
+    }
+
+    /// The fixed 12-byte batch header.
+    pub fn header(&self) -> &[u8] {
+        &self.header
+    }
+
+    /// Number of layers in the planned batch.
+    pub fn layers(&self) -> usize {
+        self.plan.len()
+    }
+
+    /// Index of the layer the next [`Self::encode_next`] call will emit.
+    pub fn next_layer(&self) -> usize {
+        self.next
+    }
+
+    /// True once every layer's segment has been emitted.
+    pub fn is_done(&self) -> bool {
+        self.next == self.plan.len()
+    }
+
+    /// Planned wire length (sub-header + delta byte + payload) of `layer`.
+    pub fn sub_len(&self, layer: usize) -> usize {
+        self.plan[layer].wire_len()
+    }
+
+    /// Encode the next layer's sub-message into `out` (cleared first) and
+    /// return its length. `sg` must be the same layer, at the same
+    /// position, the plan pass saw.
+    pub fn encode_next(&mut self, sg: &SparseGrad, out: &mut Vec<u8>) -> usize {
+        let p = &self.plan[self.next];
+        out.clear();
+        out.reserve(p.wire_len());
+        write_sub(sg, p, out);
+        debug_assert_eq!(out.len(), p.wire_len());
+        self.next += 1;
+        out.len()
+    }
+}
+
 /// Decode a `WireBatch` into caller-held per-layer [`SparseGrad`]s
 /// (buffers reused; `out` is resized to the layer count). `sub_lens`
-/// receives each sub-message's total byte length (header + payload) — the
-/// per-layer share of the batch the coordinators ledger. On error both
-/// outputs may hold partial content and must not be interpreted.
+/// receives each sub-message's total byte length (header + delta byte +
+/// payload) — the per-layer share of the batch the coordinators ledger.
+/// Accepts format versions 1 and 2; the parameter-delta flag is rejected
+/// in version-1 batches. On error both outputs may hold partial content
+/// and must not be interpreted.
 pub fn decode_batch_into(
     buf: &[u8],
     out: &mut Vec<SparseGrad>,
@@ -170,8 +360,9 @@ pub fn decode_batch_into(
     if &buf[0..4] != BATCH_MAGIC {
         return Err(WireError::BadMagic);
     }
-    if buf[4] != BATCH_VERSION {
-        return Err(WireError::BadVersion(buf[4]));
+    let version = buf[4];
+    if version != 1 && version != BATCH_VERSION {
+        return Err(WireError::BadVersion(version));
     }
     let codec = WireCodec::from_u8(buf[5]).ok_or(WireError::BadEncoding(buf[5]))?;
     let (ka, kb) = (buf[6], buf[7]);
@@ -204,12 +395,21 @@ pub fn decode_batch_into(
             return Err(WireError::Truncated(buf.len()));
         }
         let h = &buf[off..off + SUB_HEADER_LEN];
-        let enc = match h[0] {
+        let flagged = h[0] & PARAM_DELTA_FLAG != 0;
+        if flagged && version < 2 {
+            // The delta byte is a version-2 construct; a v1 batch carrying
+            // the flag is malformed, not merely old.
+            return Err(WireError::BadParamDelta(h[0]));
+        }
+        let enc = match h[0] & !PARAM_DELTA_FLAG {
             0 => Encoding::Indexed,
             1 => Encoding::DenseSymbols,
             2 => Encoding::IndexedRice,
             e => return Err(WireError::BadEncoding(e)),
         };
+        if flagged && enc != Encoding::IndexedRice {
+            return Err(WireError::BadParamDelta(h[0]));
+        }
         if enc == Encoding::IndexedRice {
             if codec == WireCodec::Raw {
                 // A raw-codec batch may not smuggle Rice sub-messages.
@@ -233,12 +433,35 @@ pub fn decode_batch_into(
         if !shared_mag.is_finite() {
             return Err(WireError::NonFiniteSharedMag(shared_mag));
         }
+        let mut payload_off = off + SUB_HEADER_LEN;
+        let (eka, ekb) = if flagged {
+            if buf.len() < payload_off + 1 {
+                return Err(WireError::Truncated(buf.len()));
+            }
+            let db = buf[payload_off];
+            payload_off += 1;
+            if db == 0 {
+                // Zero deltas must be spelled as the pooled (flagless)
+                // form — one canonical byte form per batch.
+                return Err(WireError::BadParamDelta(0));
+            }
+            let (dka, dkb) = rice::unpack_param_deltas(db);
+            let eka = ka as i16 + dka as i16;
+            let ekb = kb as i16 + dkb as i16;
+            let range = 0..=MAX_RICE_PARAM as i16;
+            if !range.contains(&eka) || !range.contains(&ekb) {
+                return Err(WireError::BadParamDelta(db));
+            }
+            (eka as u8, ekb as u8)
+        } else {
+            (ka, kb)
+        };
         slot.reset(d as usize);
         slot.shared_mag = shared_mag;
         let consumed =
-            message::read_payload(enc, d, na, nb, ka, kb, &buf[off + SUB_HEADER_LEN..], slot)?;
-        sub_lens.push(SUB_HEADER_LEN + consumed);
-        off += SUB_HEADER_LEN + consumed;
+            message::read_payload(enc, d, na, nb, eka, ekb, &buf[payload_off..], slot)?;
+        sub_lens.push(payload_off - off + consumed);
+        off = payload_off + consumed;
     }
     if off != buf.len() {
         return Err(WireError::LengthMismatch {
@@ -267,6 +490,19 @@ mod tests {
         sample_sparse(&g, &p, pv.inv_lambda, &mut ra)
     }
 
+    /// A hand-built QB-only layer with a fixed index stride — its gap scale
+    /// is exactly `stride - 1`, which the delta tests steer far away from
+    /// the pooled distribution.
+    fn strided_layer(d: usize, stride: usize, count: usize) -> SparseGrad {
+        let mut sg = SparseGrad::empty(d);
+        sg.shared_mag = 1.0;
+        for i in 0..count {
+            sg.shared.push(((i * stride) as u32, i % 3 == 0));
+        }
+        assert!((count - 1) * stride < d);
+        sg
+    }
+
     fn roundtrip(layers: &[SparseGrad], codec: WireCodec) -> (Vec<u8>, Vec<usize>) {
         let refs: Vec<&SparseGrad> = layers.iter().collect();
         let mut buf = Vec::new();
@@ -287,6 +523,17 @@ mod tests {
             "sub lengths must tile the batch"
         );
         (buf, sub_lens)
+    }
+
+    /// Offsets of each sub-message's encoding byte, from decoded sub_lens.
+    fn sub_offsets(sub_lens: &[usize]) -> Vec<usize> {
+        let mut offs = Vec::with_capacity(sub_lens.len());
+        let mut off = BATCH_HEADER_LEN;
+        for &len in sub_lens {
+            offs.push(off);
+            off += len;
+        }
+        offs
     }
 
     #[test]
@@ -348,6 +595,169 @@ mod tests {
         encode_batch(&refs, WireCodec::Entropy, &mut buf);
         assert!(buf[6] > 0 || buf[7] > 0, "expected shared Rice params");
         assert!(ent < raw);
+    }
+
+    #[test]
+    fn divergent_layers_spend_a_delta_byte_and_win() {
+        // One layer with gap scale ~127, one with gap scale 0: the pooled
+        // parameter fits neither, so both should diverge behind 1-byte
+        // deltas, each strictly cheaper than the pooled Rice form.
+        let layers = vec![
+            strided_layer(1 << 16, 128, 400), // mean gap 127 → k ≈ 6–7
+            strided_layer(1 << 12, 1, 400),   // mean gap 0 → k = 0
+        ];
+        let (buf, sub_lens) = roundtrip(&layers, WireCodec::Entropy);
+        let offs = sub_offsets(&sub_lens);
+        let flagged: Vec<bool> = offs
+            .iter()
+            .map(|&o| buf[o] & PARAM_DELTA_FLAG != 0)
+            .collect();
+        assert!(
+            flagged.iter().any(|&f| f),
+            "expected at least one param-delta sub-message, got {flagged:?}"
+        );
+        // The delta byte sits right after the 17-byte sub-header and is
+        // never the canonical all-zero value.
+        for (&o, &f) in offs.iter().zip(&flagged) {
+            if f {
+                assert_ne!(buf[o + SUB_HEADER_LEN], 0, "zero delta byte is non-canonical");
+            }
+        }
+        // Divergent parameters must not cost more than the raw codec would.
+        let refs: Vec<&SparseGrad> = layers.iter().collect();
+        assert!(
+            encoded_batch_len(&refs, WireCodec::Entropy)
+                < encoded_batch_len(&refs, WireCodec::Raw)
+        );
+    }
+
+    #[test]
+    fn homogeneous_batch_spends_no_delta_bytes() {
+        // A single-layer batch's pooled parameters *are* the layer optimum,
+        // so the delta form can never be strictly smaller.
+        let layers = vec![sample_layer(1 << 14, 0.02, 33)];
+        let (buf, sub_lens) = roundtrip(&layers, WireCodec::Entropy);
+        for &o in &sub_offsets(&sub_lens) {
+            assert_eq!(buf[o] & PARAM_DELTA_FLAG, 0, "unexpected delta flag");
+        }
+    }
+
+    #[test]
+    fn version1_batches_without_deltas_still_decode() {
+        // A delta-free v2 batch differs from its v1 spelling only in the
+        // version byte; patching it back to 1 must decode identically.
+        let layers = vec![sample_layer(1 << 14, 0.02, 34), SparseGrad::empty(50)];
+        for codec in [WireCodec::Raw, WireCodec::Entropy] {
+            let (buf, sub_lens) = roundtrip(&layers, codec);
+            for &o in &sub_offsets(&sub_lens) {
+                assert_eq!(buf[o] & PARAM_DELTA_FLAG, 0, "fixture must be delta-free");
+            }
+            let mut v1 = buf.clone();
+            assert_eq!(v1[4], BATCH_VERSION);
+            v1[4] = 1;
+            let mut back = Vec::new();
+            let mut lens = Vec::new();
+            decode_batch_into(&v1, &mut back, &mut lens).unwrap();
+            assert_eq!(back, layers, "{codec}: v1 spelling drifted");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_param_deltas() {
+        let layers = vec![
+            strided_layer(1 << 16, 128, 400),
+            strided_layer(1 << 12, 1, 400),
+        ];
+        let (buf, sub_lens) = roundtrip(&layers, WireCodec::Entropy);
+        let offs = sub_offsets(&sub_lens);
+        let flagged_off = *offs
+            .iter()
+            .find(|&&o| buf[o] & PARAM_DELTA_FLAG != 0)
+            .expect("fixture must contain a delta sub-message");
+        let mut out = Vec::new();
+        let mut lens = Vec::new();
+
+        // Zero delta byte: the pooled form is canonical for zero deltas.
+        let mut bad = buf.clone();
+        bad[flagged_off + SUB_HEADER_LEN] = 0;
+        assert_eq!(
+            decode_batch_into(&bad, &mut out, &mut lens),
+            Err(WireError::BadParamDelta(0))
+        );
+        // Delta pushing the effective parameter below zero: header kb plus
+        // -8 is negative whenever kb < 8 (true for this fixture).
+        assert!(buf[7] < 8, "fixture sanity: pooled kb {}", buf[7]);
+        let mut bad = buf.clone();
+        bad[flagged_off + SUB_HEADER_LEN] = rice::pack_param_deltas(0, -8);
+        assert_eq!(
+            decode_batch_into(&bad, &mut out, &mut lens),
+            Err(WireError::BadParamDelta(rice::pack_param_deltas(0, -8)))
+        );
+        // The flag on a non-Rice sub-message is structurally invalid.
+        let raw_layers = vec![sample_layer(512, 0.05, 41)];
+        let refs: Vec<&SparseGrad> = raw_layers.iter().collect();
+        let mut rbuf = Vec::new();
+        encode_batch(&refs, WireCodec::Raw, &mut rbuf);
+        let enc_at = BATCH_HEADER_LEN;
+        assert!(rbuf[enc_at] & PARAM_DELTA_FLAG == 0 && rbuf[enc_at] != 2);
+        let mut bad = rbuf.clone();
+        bad[enc_at] |= PARAM_DELTA_FLAG;
+        assert_eq!(
+            decode_batch_into(&bad, &mut out, &mut lens),
+            Err(WireError::BadParamDelta(bad[enc_at]))
+        );
+        // The flag inside a version-1 batch is malformed, not merely old.
+        let mut bad = buf.clone();
+        bad[4] = 1;
+        assert_eq!(
+            decode_batch_into(&bad, &mut out, &mut lens),
+            Err(WireError::BadParamDelta(buf[flagged_off]))
+        );
+        // Truncation right after a flagged sub-header (the delta byte is
+        // part of the header for length purposes).
+        let cut = &buf[..flagged_off + SUB_HEADER_LEN];
+        assert!(matches!(
+            decode_batch_into(cut, &mut out, &mut lens),
+            Err(WireError::Truncated(_))
+        ));
+    }
+
+    #[test]
+    fn stream_encoder_matches_encode_batch_bytewise() {
+        let layer_sets: Vec<Vec<SparseGrad>> = vec![
+            vec![],
+            vec![SparseGrad::empty(64)],
+            vec![
+                sample_layer(4096, 0.01, 71),
+                SparseGrad::empty(100),
+                sample_layer(257, 0.9, 72),
+                strided_layer(1 << 16, 128, 400), // forces a delta byte
+                strided_layer(1 << 12, 1, 400),
+            ],
+        ];
+        for layers in &layer_sets {
+            let refs: Vec<&SparseGrad> = layers.iter().collect();
+            for codec in [WireCodec::Raw, WireCodec::Entropy] {
+                let mut want = Vec::new();
+                encode_batch(&refs, codec, &mut want);
+
+                let mut enc = BatchStreamEncoder::plan(&refs, codec);
+                assert_eq!(enc.total_len(), want.len(), "{codec}: planned length");
+                assert_eq!(enc.layers(), layers.len());
+                let mut got = Vec::new();
+                got.extend_from_slice(enc.header());
+                let mut seg = Vec::new();
+                for (l, sg) in layers.iter().enumerate() {
+                    assert_eq!(enc.next_layer(), l);
+                    assert!(!enc.is_done());
+                    let n = enc.encode_next(sg, &mut seg);
+                    assert_eq!(n, enc.sub_len(l), "{codec}: layer {l} segment length");
+                    got.extend_from_slice(&seg);
+                }
+                assert!(enc.is_done());
+                assert_eq!(got, want, "{codec}: streamed bytes drifted");
+            }
+        }
     }
 
     #[test]
@@ -463,6 +873,17 @@ mod tests {
                 encode_batch(&refs, codec, &mut buf);
                 if buf.len() != encoded_batch_len(&refs, codec) {
                     return Err(format!("length mismatch under {codec}"));
+                }
+                // The streaming encoder must agree byte for byte.
+                let mut enc = BatchStreamEncoder::plan(&refs, codec);
+                let mut streamed = enc.header().to_vec();
+                let mut seg = Vec::new();
+                for sg in &layers {
+                    enc.encode_next(sg, &mut seg);
+                    streamed.extend_from_slice(&seg);
+                }
+                if streamed != buf {
+                    return Err(format!("streamed bytes drifted under {codec}"));
                 }
                 let mut back = Vec::new();
                 let mut lens = Vec::new();

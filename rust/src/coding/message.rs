@@ -139,6 +139,11 @@ pub enum WireError {
     /// Header bytes 6–7 must be zero for non-Rice encodings — enforced so
     /// every message has exactly one canonical byte form.
     NonZeroReserved(u8),
+    /// A `WireBatch` per-layer Rice parameter delta byte is structurally
+    /// invalid: flagged on a non-Rice sub-message, present in a v1 batch,
+    /// all-zero (the pooled form is canonical for zero deltas), or pushing
+    /// an effective parameter outside `[0, MAX_RICE_PARAM]`.
+    BadParamDelta(u8),
 }
 
 impl std::fmt::Display for WireError {
@@ -169,6 +174,9 @@ impl std::fmt::Display for WireError {
             WireError::BadRiceStream(why) => write!(f, "malformed rice stream: {why}"),
             WireError::NonZeroReserved(v) => {
                 write!(f, "reserved header byte must be zero, got {v}")
+            }
+            WireError::BadParamDelta(b) => {
+                write!(f, "invalid rice parameter delta byte {b:#04x}")
             }
         }
     }

@@ -26,12 +26,23 @@
 //! ```text
 //! WireBatch     ┌ "GSPB" ┬ ver ┬ codec ┬ ka ┬ kb ┬ L ┐  12-byte header
 //!               └────────┴─────┴───────┴────┴────┴───┘
-//! sub-message   ┌ enc ┬ d ┬ nnz_a ┬ nnz_b ┬ 1/λ ┬ payload ┐  × L layers
-//!               └─────┴───┴───────┴───────┴─────┴─────────┘  17 B + payload
+//! sub-message   ┌ enc ┬ d ┬ nnz_a ┬ nnz_b ┬ 1/λ ┬ [Δk] ┬ payload ┐  × L
+//!               └─────┴───┴───────┴───────┴─────┴──────┴─────────┘
+//!                 bit 7 of enc ⇒ the optional Δk byte is present:
+//!                 signed 4-bit (dka, dkb) applied to the pooled ka/kb
 //! ```
 //!
 //! Sub-payloads are byte-identical to the single-message layouts; only the
-//! repeated header bytes and per-message Rice parameters are shared.
+//! repeated header bytes and per-message Rice parameters are shared. A
+//! layer whose gap scale diverges from the pooled distribution may spend
+//! one Δk byte (format version 2) to run at its own Rice optimum.
+//!
+//! **Streaming sub-header rule** (the pipelined send path relies on it):
+//! every sub-header field — encoding choice, counts, Δk byte, and hence the
+//! exact batch length — is fixed by one sizing pass before any payload
+//! byte exists, so [`batch::BatchStreamEncoder`] can emit the header and
+//! then hand per-layer segments to the transport incrementally, bitwise
+//! identical to the one-shot [`encode_batch`].
 
 pub mod batch;
 mod entropy;
@@ -39,8 +50,8 @@ mod message;
 pub mod rice;
 
 pub use batch::{
-    decode_batch_into, encode_batch, encoded_batch_len, BATCH_HEADER_LEN, BATCH_MAGIC,
-    BATCH_VERSION, SUB_HEADER_LEN,
+    decode_batch_into, encode_batch, encoded_batch_len, BatchStreamEncoder, BATCH_HEADER_LEN,
+    BATCH_MAGIC, BATCH_VERSION, PARAM_DELTA_FLAG, SUB_HEADER_LEN,
 };
 pub use entropy::{symbol_entropy_bits, SymbolCounts};
 pub use message::{

@@ -34,6 +34,25 @@ pub enum RiceError {
     QuotientOverflow,
 }
 
+/// Pack two signed per-layer Rice parameter deltas into one byte: the QA
+/// delta in the high nibble, the QB delta in the low nibble, each a 4-bit
+/// two's-complement value in `[-8, 7]`. This is the `WireBatch` v2 delta
+/// byte that lets a sub-message override the batch-pooled parameters.
+pub fn pack_param_deltas(dka: i8, dkb: i8) -> u8 {
+    debug_assert!((-8..=7).contains(&dka), "dka {dka} out of nibble range");
+    debug_assert!((-8..=7).contains(&dkb), "dkb {dkb} out of nibble range");
+    (((dka as u8) & 0xF) << 4) | ((dkb as u8) & 0xF)
+}
+
+/// Inverse of [`pack_param_deltas`]: sign-extend both nibbles back to
+/// `(dka, dkb)`.
+pub fn unpack_param_deltas(b: u8) -> (i8, i8) {
+    // Sign-extend a 4-bit two's-complement nibble: flip the sign bit into
+    // the carry position and subtract it back out.
+    let sx = |n: u8| ((n ^ 8).wrapping_sub(8)) as i8;
+    (sx((b >> 4) & 0xF), sx(b & 0xF))
+}
+
 /// Total bits a gap stream costs at parameter `k` (`q + 1 + k` per gap).
 pub fn stream_bits<I: Iterator<Item = u32>>(gaps: I, k: u32) -> u64 {
     gaps.map(|g| (g >> k) as u64 + 1 + k as u64).sum()
@@ -275,6 +294,21 @@ mod tests {
         // Empty stream is truncation, not a panic.
         let mut r = BitReader::new(&[]);
         assert_eq!(r.read_rice(3, 10), Err(RiceError::Truncated));
+    }
+
+    #[test]
+    fn param_delta_nibbles_roundtrip_exactly() {
+        for dka in -8i8..=7 {
+            for dkb in -8i8..=7 {
+                let b = pack_param_deltas(dka, dkb);
+                assert_eq!(unpack_param_deltas(b), (dka, dkb), "byte {b:#04x}");
+            }
+        }
+        // Spot-check the byte layout itself: high nibble = QA, low = QB.
+        assert_eq!(pack_param_deltas(0, 0), 0x00);
+        assert_eq!(pack_param_deltas(1, -1), 0x1F);
+        assert_eq!(pack_param_deltas(-8, 7), 0x87);
+        assert_eq!(unpack_param_deltas(0xF0), (-1, 0));
     }
 
     #[test]

@@ -36,6 +36,21 @@
 //! [`LayerUpdate::ideal_bits`] switches from compressor expectations to
 //! the exact per-message bit model. The decoded updates — the training
 //! math — are identical either way.
+//!
+//! ## Pipelined rounds
+//!
+//! A session with [`pipeline`](crate::api::SessionBuilder::pipeline) ≥ 2
+//! switches the batched send path to the streaming flavor: the
+//! [`crate::coding::BatchStreamEncoder`] sizes the whole `WireBatch` up
+//! front (header and per-layer sub-headers are fixed before any payload
+//! byte exists), each layer is encoded into its own reused segment
+//! buffer, and the frame leaves through one vectored gather write —
+//! `GRAD_BATCH` header prefix + batch header + per-layer segments — with
+//! no concatenation copy into a frame buffer. Depth 1 (the default)
+//! keeps the historical encode-then-send reference path. The bytes on
+//! every link are identical at either depth (pinned by tests and by the
+//! shared plan/write implementation in `coding::batch`), so pipelined
+//! senders interoperate with any batch-capable peer.
 
 use crate::api::Session;
 use crate::coding::WireCodec;
@@ -78,6 +93,9 @@ struct WorkerComm {
     frame_buf: Vec<u8>,
     dense_tx: Vec<f32>,
     dense_bytes: Vec<u8>,
+    /// Per-layer segment buffers for the pipelined (vectored) send path;
+    /// empty and unused at depth 1.
+    seg_bufs: Vec<Vec<u8>>,
 }
 
 /// The synchronous cluster communication fabric.
@@ -95,6 +113,9 @@ pub struct Cluster {
     /// Local-step schedule: rounds between synchronizations accumulate
     /// worker gradients locally and ship nothing.
     schedule: CommSchedule,
+    /// Pipeline depth: ≥ 2 streams batched frames as vectored segments
+    /// (see the module doc); 1 is the sequential reference path.
+    pipeline: usize,
     /// 1-based count of [`Cluster::round`] calls (drives the schedule).
     rounds_seen: u64,
     /// `rounds_seen` at the last synchronization (tracks whether a partial
@@ -132,6 +153,7 @@ impl Cluster {
             TRANSPORT_VERSION,
             false,
             CommSchedule::every_round(),
+            1,
             make_compressor,
         )
     }
@@ -160,6 +182,7 @@ impl Cluster {
             TRANSPORT_VERSION,
             false,
             CommSchedule::every_round(),
+            1,
             make_compressor,
         )
     }
@@ -178,6 +201,7 @@ impl Cluster {
             session.transport_version(),
             batch,
             session.comm_schedule(),
+            session.pipeline(),
             || session.compressor(),
         );
         cluster.net = session.net();
@@ -193,6 +217,7 @@ impl Cluster {
         hello_version: u8,
         batch: bool,
         schedule: CommSchedule,
+        pipeline: usize,
         mut make_compressor: F,
     ) -> Self
     where
@@ -227,6 +252,7 @@ impl Cluster {
                     frame_buf: Vec::new(),
                     dense_tx: Vec::new(),
                     dense_bytes: Vec::new(),
+                    seg_bufs: Vec::new(),
                 })
             })
             .collect();
@@ -246,6 +272,7 @@ impl Cluster {
             batch,
             peer_batch,
             schedule,
+            pipeline: pipeline.max(1),
             rounds_seen: 0,
             last_comm: 0,
             acc: Vec::new(),
@@ -360,6 +387,7 @@ impl Cluster {
             .map(|s| s.take().expect("worker state present"))
             .collect();
         let codec = self.codec;
+        let pipelined = self.pipeline >= 2;
         let returned: Vec<WorkerComm> = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(self.workers);
             for (w, mut st) in states.into_iter().enumerate() {
@@ -367,7 +395,7 @@ impl Cluster {
                 let batched = use_batch[w];
                 handles.push(scope.spawn(move || {
                     if batched {
-                        worker_round_batched(&mut st, worker_grads, codec);
+                        worker_round_batched(&mut st, worker_grads, codec, pipelined);
                     } else {
                         worker_round_per_layer(&mut st, worker_grads, codec);
                     }
@@ -527,7 +555,20 @@ fn worker_round_per_layer(st: &mut WorkerComm, worker_grads: &[Vec<f32>], codec:
 /// `WireBatch` payload, one `GRAD_BATCH` frame. The header carries the
 /// layer-summed statistics; the sub-messages carry each layer's own λ and
 /// survivors, exactly as the per-layer path would have produced them.
-fn worker_round_batched(st: &mut WorkerComm, worker_grads: &[Vec<f32>], codec: WireCodec) {
+///
+/// `pipelined` selects how the frame reaches the connection: the
+/// reference path materializes the whole `WireBatch` and copies it into
+/// one frame buffer (`encode_batch` + `send`); the pipelined path sizes
+/// the batch with [`crate::coding::BatchStreamEncoder`], encodes each
+/// layer into its own reused segment buffer, and hands the connection a
+/// vectored gather — frame prefix, batch header, per-layer segments —
+/// with no concatenation copy. Identical bytes on the wire either way.
+fn worker_round_batched(
+    st: &mut WorkerComm,
+    worker_grads: &[Vec<f32>],
+    codec: WireCodec,
+    pipelined: bool,
+) {
     let layer_refs: Vec<&[f32]> = worker_grads.iter().map(|g| g.as_slice()).collect();
     st.compressors[0].compress_batch_into(
         &layer_refs,
@@ -557,7 +598,6 @@ fn worker_round_batched(st: &mut WorkerComm, worker_grads: &[Vec<f32>], codec: W
             other => unreachable!("batchable methods produce sparse messages, got {other:?}"),
         })
         .collect();
-    crate::coding::encode_batch(&sgs, codec, &mut st.wire);
     let header = GradHeader {
         based_on: 0,
         g_norm_sq: g_norm,
@@ -566,8 +606,28 @@ fn worker_round_batched(st: &mut WorkerComm, worker_grads: &[Vec<f32>], codec: W
         ideal_bits,
         kind: 0,
     };
-    frame::encode_grad_batch(&mut st.frame_buf, &header, &st.wire);
-    st.conn.send(&st.frame_buf).expect("leader link alive");
+    if pipelined {
+        let mut enc = crate::coding::BatchStreamEncoder::plan(&sgs, codec);
+        if st.seg_bufs.len() < sgs.len() {
+            st.seg_bufs.resize_with(sgs.len(), Vec::new);
+        }
+        for (sg, seg) in sgs.iter().zip(st.seg_bufs.iter_mut()) {
+            enc.encode_next(sg, seg);
+        }
+        debug_assert!(enc.is_done());
+        frame::encode_grad_batch_prefix(&mut st.frame_buf, &header);
+        let mut segments: Vec<&[u8]> = Vec::with_capacity(2 + sgs.len());
+        segments.push(&st.frame_buf);
+        segments.push(enc.header());
+        segments.extend(st.seg_bufs.iter().take(sgs.len()).map(|s| s.as_slice()));
+        st.conn
+            .send_vectored(&segments)
+            .expect("leader link alive");
+    } else {
+        crate::coding::encode_batch(&sgs, codec, &mut st.wire);
+        frame::encode_grad_batch(&mut st.frame_buf, &header, &st.wire);
+        st.conn.send(&st.frame_buf).expect("leader link alive");
+    }
 }
 
 #[cfg(test)]
@@ -747,6 +807,51 @@ mod tests {
                 b_ledger.measured_bytes,
                 pl_ledger.measured_bytes
             );
+        }
+    }
+
+    #[test]
+    fn pipelined_batched_round_is_bitwise_identical() {
+        // Depth ≥ 2 changes the send mechanics (streaming encoder +
+        // vectored gather), never the bytes: decoded updates, ledger, and
+        // frame counts all match the depth-1 reference path exactly —
+        // under both codecs, with and without error feedback.
+        let dims = [700usize, 0, 256, 64];
+        let grads = grads_for(2, &dims, 71);
+        let run = |depth: usize, codec: WireCodec, feedback: bool| {
+            let mut builder = Session::builder()
+                .method(MethodSpec::GSpar { rho: 0.1, iters: 2 })
+                .workers(2)
+                .seed(72)
+                .codec(codec)
+                .batch_layers(true)
+                .pipeline(depth);
+            if feedback {
+                builder = builder.feedback(crate::feedback::FeedbackConfig::default());
+            }
+            let mut cluster = builder.build().cluster(&dims);
+            let first = cluster.round(&grads);
+            let second = cluster.round(&grads);
+            (first, second, cluster.ledger.clone(), cluster.frames_received())
+        };
+        for codec in [WireCodec::Raw, WireCodec::Entropy] {
+            for feedback in [false, true] {
+                let (s1, s2, s_ledger, s_frames) = run(1, codec, feedback);
+                for depth in [2usize, 4] {
+                    let (p1, p2, p_ledger, p_frames) = run(depth, codec, feedback);
+                    for ((a, b), l) in s1.iter().zip(&p1).chain(s2.iter().zip(&p2)).zip(0..) {
+                        assert_eq!(
+                            a.grad, b.grad,
+                            "{codec} fb={feedback} depth {depth}: layer {l} drifted"
+                        );
+                        assert_eq!(a.upload_bytes, b.upload_bytes);
+                        assert_eq!(a.ideal_bits, b.ideal_bits);
+                    }
+                    assert_eq!(s_ledger.wire_bytes, p_ledger.wire_bytes);
+                    assert_eq!(s_ledger.measured_bytes, p_ledger.measured_bytes);
+                    assert_eq!(s_frames, p_frames);
+                }
+            }
         }
     }
 

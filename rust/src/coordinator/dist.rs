@@ -81,6 +81,12 @@ pub struct RunPlan {
     /// Error-feedback memory around every worker's compressor (ships to
     /// worker processes in the CONFIG frame like everything else).
     pub feedback: Option<FeedbackConfig>,
+    /// Pipeline depth (max in-flight compressed round frames; 1 = the
+    /// sequential reference path). Depth ≥ 2 makes workers hand their
+    /// gradient frames to the connection as vectored header + payload
+    /// segments — bytes on the wire are identical at every depth, so a
+    /// pipelined sender interoperates with any v3 peer.
+    pub pipeline: usize,
 }
 
 /// Deprecated name of [`RunPlan`].
@@ -110,17 +116,19 @@ impl Default for RunPlan {
             codec: WireCodec::Raw,
             local_steps: 1,
             feedback: None,
+            pipeline: 1,
         }
     }
 }
 
 /// Version 2 appended the wire-codec byte; version 3 appended the
-/// local-step period and the error-feedback toggle + decay.
-const CONFIG_VERSION: u8 = 3;
+/// local-step period and the error-feedback toggle + decay; version 4
+/// appended the pipeline depth.
+const CONFIG_VERSION: u8 = 4;
 /// Offset of the codec byte: version + method + 6×u32 + u64 seed + 5×f32.
 const CONFIG_CODEC_AT: usize = 2 + 6 * 4 + 8 + 5 * 4;
-/// Codec byte + u32 local_steps + feedback flag + f32 decay.
-const CONFIG_LEN: usize = CONFIG_CODEC_AT + 1 + 4 + 1 + 4;
+/// Codec byte + u32 local_steps + feedback flag + f32 decay + u32 pipeline.
+const CONFIG_LEN: usize = CONFIG_CODEC_AT + 1 + 4 + 1 + 4 + 4;
 
 impl RunPlan {
     /// Serialize for the `CONFIG` frame (fixed-width LE fields).
@@ -152,6 +160,7 @@ impl RunPlan {
         out.extend_from_slice(
             &self.feedback.map(|f| f.decay).unwrap_or(0.0).to_le_bytes(),
         );
+        out.extend_from_slice(&(self.pipeline.max(1) as u32).to_le_bytes());
         out
     }
 
@@ -187,6 +196,10 @@ impl RunPlan {
         } else {
             None
         };
+        let pipeline = u32::from_le_bytes(
+            buf[codec_at + 10..codec_at + 14].try_into().unwrap(),
+        ) as usize;
+        anyhow::ensure!(pipeline >= 1, "pipeline depth must be ≥ 1");
         Ok(Self {
             workers: u32_at(0) as usize,
             rounds: u32_at(1) as usize,
@@ -204,6 +217,7 @@ impl RunPlan {
             codec,
             local_steps,
             feedback,
+            pipeline,
         })
     }
 }
@@ -531,8 +545,17 @@ pub fn run_worker(
             ideal_bits: stats.ideal_bits,
             kind,
         };
-        frame::encode_grad(&mut txbuf, &header, payload);
-        conn.send(&txbuf)?;
+        if cfg.pipeline >= 2 {
+            // Pipelined send: header prefix + codec payload as a vectored
+            // gather, skipping the payload copy into the frame buffer. The
+            // concatenated bytes are exactly the `encode_grad` frame, so
+            // any v3 peer decodes this without knowing the sender's depth.
+            frame::encode_grad_prefix(&mut txbuf, &header);
+            conn.send_vectored(&[&txbuf, payload])?;
+        } else {
+            frame::encode_grad(&mut txbuf, &header, payload);
+            conn.send(&txbuf)?;
+        }
     }
     Ok(())
 }
@@ -686,6 +709,7 @@ mod tests {
                 codec,
                 local_steps: 3,
                 feedback: Some(FeedbackConfig::with_decay(0.75)),
+                pipeline: 4,
                 ..small_cfg()
             };
             let bytes = cfg.encode();
@@ -703,6 +727,10 @@ mod tests {
             // local_steps = 0 is not a valid shipped schedule.
             let mut bad = bytes.clone();
             bad[codec_at + 1..codec_at + 5].copy_from_slice(&0u32.to_le_bytes());
+            assert!(RunPlan::decode(&bad).is_err());
+            // Neither is pipeline depth 0.
+            let mut bad = bytes.clone();
+            bad[codec_at + 10..codec_at + 14].copy_from_slice(&0u32.to_le_bytes());
             assert!(RunPlan::decode(&bad).is_err());
         }
         // The default plan (no feedback, every-round) roundtrips too.
@@ -842,6 +870,30 @@ mod tests {
         assert_eq!(
             a.curve.ledger.measured_bytes,
             b.curve.ledger.measured_bytes
+        );
+    }
+
+    #[test]
+    fn pipelined_workers_ship_bitwise_identical_runs() {
+        // Depth ≥ 2 only changes *how* the worker hands bytes to the
+        // connection (vectored header + payload), never which bytes: the
+        // digest, weights, and measured ledger all match depth 1 exactly.
+        let base = small_cfg();
+        let piped = RunPlan {
+            pipeline: 2,
+            ..small_cfg()
+        };
+        let a = run_threads(InProcTransport::new(), "pd-1", &base).unwrap();
+        let b = run_threads(InProcTransport::new(), "pd-2", &piped).unwrap();
+        assert_eq!(a.grad_digest, b.grad_digest);
+        assert_eq!(a.final_w, b.final_w);
+        assert_eq!(
+            a.curve.ledger.measured_bytes,
+            b.curve.ledger.measured_bytes
+        );
+        assert_eq!(
+            a.curve.ledger.measured_frames,
+            b.curve.ledger.measured_frames
         );
     }
 

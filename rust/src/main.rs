@@ -61,10 +61,10 @@ fn print_help() {
            async-svm [--threads T] [--scheme lock|atomic|wild] [--method M]\n\
            e2e [--steps N] [--workers M] [--rho R] [--batch-layers]   transformer end-to-end\n\
            server [--addr H:P] [--workers M] [--rounds R] [--codec C]\n\
-                  [--feedback] [--local-steps H] ...\n\
+                  [--feedback] [--local-steps H] [--pipeline D] ...\n\
            worker --addr H:P --id N [--codec C]   one worker process (config from server)\n\
            dist [--transport inproc|tcp] [--procs] [--codec raw|entropy]\n\
-                [--feedback] [--feedback-decay B] [--local-steps H] ...\n\
+                [--feedback] [--feedback-decay B] [--local-steps H] [--pipeline D] ...\n\
            version",
         gsparse::VERSION
     );
@@ -217,6 +217,7 @@ fn dist_session_from_args(args: &Args) -> anyhow::Result<(Session, DistTask)> {
         .codec(parse_codec(args)?)
         .workers(args.get_parse("workers", 2))
         .local_steps(args.get_parse("local-steps", 1))
+        .pipeline(args.get_parse("pipeline", 1))
         .seed(args.get_parse("seed", 42));
     if let Some(cfg) = parse_feedback(args)? {
         builder = builder.feedback(cfg);

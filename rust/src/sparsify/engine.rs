@@ -34,12 +34,18 @@
 //!   chunk writes partial f64 sums that are reduced sequentially in chunk
 //!   order, so the pooled probabilities are bitwise identical to the
 //!   single-threaded ones (and independent of the sampling shard
-//!   geometry).
+//!   geometry). The closed-form solver's `(Σ|g|, Σg²)` moment pass runs
+//!   over the same grid, and when its plan has an empty exact head
+//!   (`k = 0`) the probability write `p_i = min(λ|g_i|, 1)` **fuses with
+//!   Bernoulli sampling** into one sweep over the sampling chunk grid —
+//!   one pass over the gradient instead of two, with the `ProbVector`
+//!   scalars reduced per chunk in chunk order so the pooled and sequential
+//!   fused paths stay bitwise identical.
 
 use super::pool::ShardPool;
 use super::probs::{
-    closed_form_probs_with, greedy_stats_pass, init_scale_pass, l1_norm_pass, rescale_pass,
-    ProbVector, SelectScratch,
+    abs_moment_sums, closed_form_finish, closed_form_plan, greedy_stats_pass, init_scale_pass,
+    l1_norm_pass, rescale_pass, ClosedFormPlan, ProbVector, SelectScratch,
 };
 use super::{hybrid_ideal_bits, CompressStats, SparseGrad};
 use crate::coding::{self, Encoding, WireCodec};
@@ -249,10 +255,10 @@ impl CompressEngine {
         out: &mut SparseGrad,
     ) -> ProbVector {
         let d = g.len();
-        let pv = self.compute_probs(g);
-        out.reset(d);
-        out.shared_mag = pv.inv_lambda;
         if d == 0 {
+            let pv = self.compute_probs(g);
+            out.reset(0);
+            out.shared_mag = pv.inv_lambda;
             return pv;
         }
         if self.uniforms.len() < d {
@@ -266,6 +272,31 @@ impl CompressEngine {
         // lengths and walks the whole buffer — the same decorrelation
         // rationale as `RandArray::reseed_offset`.
         let _ = rand.next();
+        out.reset(d);
+
+        // Closed-form mode plans before writing any probability: when the
+        // exact head is empty (k = 0, the heavy-sparsification norm) the
+        // probability write collapses to the pointwise formula and fuses
+        // with sampling into a single sweep; otherwise the solver finishes
+        // normally and the shared sampling pass below runs as before.
+        let pv = match self.mode {
+            EngineMode::ClosedForm { eps } => match self.closed_form_plan_chunked(g, eps) {
+                None => ProbVector {
+                    inv_lambda: 0.0,
+                    num_exact: 0,
+                    expected_nnz: 0.0,
+                    variance: 0.0,
+                },
+                Some(plan) if plan.k == 0 => {
+                    let pv = self.sample_fused_closed_form(g, &plan, out);
+                    out.shared_mag = pv.inv_lambda;
+                    return pv;
+                }
+                Some(plan) => closed_form_finish(g, &plan, &mut self.p, &self.select),
+            },
+            EngineMode::Greedy { rho, iters } => self.greedy_probs_chunked(g, rho, iters),
+        };
+        out.shared_mag = pv.inv_lambda;
 
         let shard_len = self.shard_len;
         let nchunks = d.div_ceil(shard_len);
@@ -373,10 +404,189 @@ impl CompressEngine {
     fn compute_probs(&mut self, g: &[f32]) -> ProbVector {
         match self.mode {
             EngineMode::Greedy { rho, iters } => self.greedy_probs_chunked(g, rho, iters),
-            EngineMode::ClosedForm { eps } => {
-                closed_form_probs_with(g, eps, &mut self.p, &mut self.select)
+            EngineMode::ClosedForm { eps } => match self.closed_form_plan_chunked(g, eps) {
+                None => ProbVector {
+                    inv_lambda: 0.0,
+                    num_exact: 0,
+                    expected_nnz: 0.0,
+                    variance: 0.0,
+                },
+                // k = 0: same pointwise write (and the same chunk-ordered
+                // scalar accumulation) as the fused sampling pass, so
+                // `probs()` and the compress path agree bitwise — which is
+                // what lets the batched engine solve here and sample later.
+                Some(plan) if plan.k == 0 => self.closed_form_write_pass(g, &plan),
+                Some(plan) => closed_form_finish(g, &plan, &mut self.p, &self.select),
+            },
+        }
+    }
+
+    /// Chunked `(Σ|g|, Σg²)` moment pass + the closed-form eq. (6) search.
+    /// Returns `None` on an empty or all-zero gradient (probabilities are
+    /// left zeroed). The moment pass runs over the fixed
+    /// [`PROBS_CHUNK_LEN`] grid — on the shard pool for large gradients —
+    /// with partials reduced in chunk order, so the pooled sums (and hence
+    /// the whole plan) are bitwise identical to the sequential path.
+    fn closed_form_plan_chunked(&mut self, g: &[f32], eps: f32) -> Option<ClosedFormPlan> {
+        let d = g.len();
+        assert!(eps >= 0.0, "variance budget must be non-negative");
+        self.p.clear();
+        self.p.resize(d, 0.0);
+        if d == 0 {
+            return None;
+        }
+        let chunk = PROBS_CHUNK_LEN;
+        let nchunks = d.div_ceil(chunk);
+        let threads = self.max_threads.min(nchunks);
+        let pooled = d >= self.parallel_min_d && threads > 1;
+        if pooled && self.pool.is_none() {
+            self.pool = Some(ShardPool::new(self.max_threads));
+        }
+        if self.prob_partials.len() < nchunks {
+            self.prob_partials.resize(nchunks, PassPartial::default());
+        }
+        let pool = if pooled { self.pool.as_ref() } else { None };
+        let p = &mut self.p[..d];
+        let partials = &mut self.prob_partials[..nchunks];
+        run_prob_pass(pool, threads, chunk, p, partials, &|c, _pc, part| {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(d);
+            let (l1, l2) = abs_moment_sums(&g[lo..hi]);
+            part.a = l1;
+            part.b = l2;
+        });
+        let mut total_l1 = 0.0f64;
+        let mut total_l2 = 0.0f64;
+        for part in partials.iter() {
+            total_l1 += part.a;
+            total_l2 += part.b;
+        }
+        if total_l2 == 0.0 {
+            return None;
+        }
+        Some(closed_form_plan(g, eps, &mut self.select, total_l1, total_l2))
+    }
+
+    /// The `k = 0` probability write without sampling (the `probs()` path):
+    /// the same pointwise kernel and per-chunk scalar accumulation as the
+    /// fused sampling pass, over the same sampling chunk grid, reduced in
+    /// chunk order — so solve-then-sample-later callers (the batched
+    /// engine) see bitwise the probabilities and scalars the fused
+    /// solve-and-sample path produces.
+    fn closed_form_write_pass(&mut self, g: &[f32], plan: &ClosedFormPlan) -> ProbVector {
+        let d = g.len();
+        debug_assert!(plan.lambda > 0.0, "k = 0 with a non-zero gradient implies λ > 0");
+        let shard_len = self.shard_len;
+        let nchunks = d.div_ceil(shard_len);
+        let threads = self.max_threads.min(nchunks);
+        let pooled = d >= self.parallel_min_d && threads > 1;
+        if pooled && self.pool.is_none() {
+            self.pool = Some(ShardPool::new(self.max_threads));
+        }
+        if self.prob_partials.len() < nchunks {
+            self.prob_partials.resize(nchunks, PassPartial::default());
+        }
+        let pool = if pooled { self.pool.as_ref() } else { None };
+        let lambda = plan.lambda;
+        let p = &mut self.p[..d];
+        let partials = &mut self.prob_partials[..nchunks];
+        run_prob_pass(pool, threads, shard_len, p, partials, &|c, pc, part| {
+            let lo = c * shard_len;
+            let hi = (lo + shard_len).min(d);
+            closed_form_write_chunk(&g[lo..hi], lambda, pc, part);
+        });
+        reduce_closed_form_partials(partials, plan.inv_lambda)
+    }
+
+    /// The fused `k = 0` closed-form pass: write `p_i = min(λ|g_i|, 1)` and
+    /// Bernoulli-sample the coordinate against its pre-assigned uniform in
+    /// the same sweep over the sampling chunk grid, sequentially or on the
+    /// pool. Chunk outputs land in index-assigned buffers and the
+    /// `ProbVector` partials reduce in chunk order, so the pooled result is
+    /// bitwise identical to the sequential one.
+    fn sample_fused_closed_form(
+        &mut self,
+        g: &[f32],
+        plan: &ClosedFormPlan,
+        out: &mut SparseGrad,
+    ) -> ProbVector {
+        let d = g.len();
+        debug_assert!(plan.lambda > 0.0, "k = 0 with a non-zero gradient implies λ > 0");
+        let lambda = plan.lambda;
+        let shard_len = self.shard_len;
+        let nchunks = d.div_ceil(shard_len);
+        let threads = self.max_threads.min(nchunks);
+        if self.prob_partials.len() < nchunks {
+            self.prob_partials.resize(nchunks, PassPartial::default());
+        }
+        let u = &self.uniforms[..d];
+        let p = &mut self.p[..d];
+        let partials = &mut self.prob_partials[..nchunks];
+        if d < self.parallel_min_d || threads <= 1 {
+            for c in 0..nchunks {
+                let lo = c * shard_len;
+                let hi = (lo + shard_len).min(d);
+                fused_closed_form_chunk(
+                    &g[lo..hi],
+                    &u[lo..hi],
+                    lambda,
+                    lo as u32,
+                    &mut p[lo..hi],
+                    &mut out.exact,
+                    &mut out.shared,
+                    &mut partials[c],
+                );
+            }
+        } else {
+            if self.shards.len() < nchunks {
+                self.shards.resize_with(nchunks, ShardBuf::default);
+            }
+            let want_threads = self.max_threads;
+            let pool = self
+                .pool
+                .get_or_insert_with(|| ShardPool::new(want_threads));
+            let shards = &mut self.shards[..nchunks];
+            let per = nchunks.div_ceil(threads);
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(nchunks.div_ceil(per));
+            for (((t, group), pg), partg) in shards
+                .chunks_mut(per)
+                .enumerate()
+                .zip(p.chunks_mut(shard_len * per))
+                .zip(partials.chunks_mut(per))
+            {
+                let first = t * per;
+                jobs.push(Box::new(move || {
+                    for (j, ((sh, part), pc)) in group
+                        .iter_mut()
+                        .zip(partg.iter_mut())
+                        .zip(pg.chunks_mut(shard_len))
+                        .enumerate()
+                    {
+                        let lo = (first + j) * shard_len;
+                        let hi = (lo + shard_len).min(d);
+                        sh.exact.clear();
+                        sh.shared.clear();
+                        fused_closed_form_chunk(
+                            &g[lo..hi],
+                            &u[lo..hi],
+                            lambda,
+                            lo as u32,
+                            pc,
+                            &mut sh.exact,
+                            &mut sh.shared,
+                            part,
+                        );
+                    }
+                }));
+            }
+            pool.run(jobs);
+            for sh in shards.iter() {
+                out.exact.extend_from_slice(&sh.exact);
+                out.shared.extend_from_slice(&sh.shared);
             }
         }
+        reduce_closed_form_partials(partials, plan.inv_lambda)
     }
 
     /// Algorithm 3 over the engine's fixed chunk grid, with every pass
@@ -506,6 +716,95 @@ impl CompressEngine {
     }
 }
 
+/// Reduce per-chunk closed-form partials (chunk order) into the final
+/// `ProbVector`. `k = 0`, so the exact head contributes nothing up front.
+fn reduce_closed_form_partials(partials: &[PassPartial], inv_lambda: f32) -> ProbVector {
+    let mut expected_nnz = 0.0f64;
+    let mut variance = 0.0f64;
+    let mut num_exact = 0u64;
+    for part in partials {
+        expected_nnz += part.a;
+        variance += part.b;
+        num_exact += part.n;
+    }
+    ProbVector {
+        inv_lambda,
+        num_exact: num_exact as usize,
+        expected_nnz,
+        variance,
+    }
+}
+
+/// Write pass of a `k = 0` closed-form plan over one chunk:
+/// `p_i = min(λ|g_i|, 1)` plus the chunk's `ProbVector` partials in
+/// coordinate order — the exact accumulation [`fused_closed_form_chunk`]
+/// performs, minus the sampling, so the solve-only and solve-and-sample
+/// paths produce identical scalars. Zero coordinates keep their zeroed
+/// probability and contribute nothing.
+#[inline]
+fn closed_form_write_chunk(g: &[f32], lambda: f64, p: &mut [f32], part: &mut PassPartial) {
+    let mut nnz = 0.0f64;
+    let mut var = 0.0f64;
+    let mut nexact = 0u64;
+    for i in 0..g.len() {
+        let m = g[i].abs() as f64;
+        if m == 0.0 {
+            continue;
+        }
+        let pf = (lambda * m).min(1.0);
+        let pi = pf as f32;
+        p[i] = pi;
+        nnz += pf;
+        var += m * m / pf;
+        nexact += (pi >= 1.0) as u64;
+    }
+    part.a = nnz;
+    part.b = var;
+    part.n = nexact;
+}
+
+/// [`closed_form_write_chunk`] fused with Bernoulli sampling: the
+/// probability is written and coordinate `base + i` is sampled against its
+/// pre-assigned uniform in the same sweep. Membership is decided exactly
+/// like [`sample_chunk`] reading the written probabilities, so fusing
+/// cannot change any survivor.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn fused_closed_form_chunk(
+    g: &[f32],
+    u: &[f32],
+    lambda: f64,
+    base: u32,
+    p: &mut [f32],
+    exact: &mut Vec<(u32, f32)>,
+    shared: &mut Vec<(u32, bool)>,
+    part: &mut PassPartial,
+) {
+    let mut nnz = 0.0f64;
+    let mut var = 0.0f64;
+    let mut nexact = 0u64;
+    for i in 0..g.len() {
+        let m = g[i].abs() as f64;
+        if m == 0.0 {
+            continue;
+        }
+        let pf = (lambda * m).min(1.0);
+        let pi = pf as f32;
+        p[i] = pi;
+        nnz += pf;
+        var += m * m / pf;
+        if pi >= 1.0 {
+            nexact += 1;
+            exact.push((base + i as u32, g[i]));
+        } else if u[i] < pi {
+            shared.push((base + i as u32, g[i] < 0.0));
+        }
+    }
+    part.a = nnz;
+    part.b = var;
+    part.n = nexact;
+}
+
 /// The per-chunk sampling kernel. `base` is the chunk's first coordinate
 /// index; `u[i]` is the pre-assigned uniform for coordinate `base + i`.
 /// Shared with the batched engine, whose chunks are layer-local.
@@ -588,6 +887,80 @@ mod tests {
             assert_eq!(pv_seq.num_exact, pv_par.num_exact, "d={d}");
             assert_eq!(pv_seq.expected_nnz, pv_par.expected_nnz, "d={d}");
             assert_eq!(pv_seq.variance, pv_par.variance, "d={d}");
+        }
+    }
+
+    #[test]
+    fn pooled_closed_form_matches_sequential_bitwise() {
+        // The carried-over solver satellite: the chunked moment pass and
+        // the fused k = 0 write+sample pass dispatched on the shard pool
+        // must reproduce the single-threaded chunk loops exactly — output,
+        // wire bytes, probabilities, and every ProbVector scalar.
+        for (d, seed, eps) in [
+            (70_000usize, 71u64, 0.5f32),
+            (1 << 17, 72, 2.0),
+            (49_999, 73, 0.05),
+        ] {
+            let g = gradient(d, seed);
+            let mut seq = CompressEngine::closed_form(eps).with_sharding(1 << 12, usize::MAX, 1);
+            let mut par = CompressEngine::closed_form(eps).with_sharding(1 << 12, 1, 4);
+            let mut seq_rand = RandArray::from_seed(seed ^ 0xF00D, 1 << 18);
+            let mut par_rand = RandArray::from_seed(seed ^ 0xF00D, 1 << 18);
+            let (mut seq_out, mut par_out) = (SparseGrad::empty(0), SparseGrad::empty(0));
+            let (mut seq_wire, mut par_wire) = (Vec::new(), Vec::new());
+            let (pv_s, _) = seq.compress_into(&g, &mut seq_rand, &mut seq_out, &mut seq_wire);
+            let (pv_p, _) = par.compress_into(&g, &mut par_rand, &mut par_out, &mut par_wire);
+            assert_eq!(seq_out, par_out, "d={d} eps={eps}");
+            assert_eq!(seq_wire, par_wire, "d={d} eps={eps}");
+            assert_eq!(seq.probabilities(), par.probabilities(), "d={d} eps={eps}");
+            assert_eq!(pv_s.inv_lambda, pv_p.inv_lambda, "d={d} eps={eps}");
+            assert_eq!(pv_s.num_exact, pv_p.num_exact, "d={d} eps={eps}");
+            assert_eq!(pv_s.expected_nnz, pv_p.expected_nnz, "d={d} eps={eps}");
+            assert_eq!(pv_s.variance, pv_p.variance, "d={d} eps={eps}");
+            assert!(seq_out.nnz() > 0, "degenerate test input");
+        }
+    }
+
+    #[test]
+    fn fused_closed_form_sampling_obeys_membership_law() {
+        // Whatever path the closed-form mode takes (fused k = 0 sweep or
+        // solve-then-sample), the output must satisfy the membership law
+        // against the replayed uniforms and the engine's probabilities,
+        // and the solve-only `probs()` path must agree with the compress
+        // path bitwise.
+        let d = 40_000;
+        let g = gradient(d, 77);
+        for eps in [0.05f32, 3.0] {
+            let mut engine = CompressEngine::closed_form(eps).with_sharding(1 << 12, 1, 4);
+            let mut rand = RandArray::from_seed(78, 1 << 18);
+            let mut replay = rand.clone();
+            let mut uniforms = vec![0.0f32; d];
+            let mut out = SparseGrad::empty(0);
+            let pv = engine.compress_sparse_into(&g, &mut rand, &mut out);
+            replay.fill(&mut uniforms);
+            let p = engine.probabilities().to_vec();
+            let mut want_exact = Vec::new();
+            let mut want_shared = Vec::new();
+            for i in 0..d {
+                let pi = p[i];
+                if pi <= 0.0 {
+                    continue;
+                }
+                if pi >= 1.0 {
+                    want_exact.push((i as u32, g[i]));
+                } else if uniforms[i] < pi {
+                    want_shared.push((i as u32, g[i] < 0.0));
+                }
+            }
+            assert_eq!(out.exact, want_exact, "eps={eps}");
+            assert_eq!(out.shared, want_shared, "eps={eps}");
+            assert_eq!(out.shared_mag, pv.inv_lambda, "eps={eps}");
+            let mut probe = CompressEngine::closed_form(eps).with_sharding(1 << 12, 1, 4);
+            let pv2 = probe.probs(&g);
+            assert_eq!(probe.probabilities(), &p[..], "eps={eps}");
+            assert_eq!(pv2.expected_nnz, pv.expected_nnz, "eps={eps}");
+            assert_eq!(pv2.variance, pv.variance, "eps={eps}");
+            assert_eq!(pv2.num_exact, pv.num_exact, "eps={eps}");
         }
     }
 

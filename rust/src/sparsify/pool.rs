@@ -20,13 +20,13 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+type Job = (usize, Box<dyn FnOnce() + Send + 'static>);
 
 /// A fixed-size pool of persistent worker threads executing borrowed jobs
 /// to completion ([`ShardPool::run`]). Dropping the pool joins the threads.
 pub struct ShardPool {
     job_tx: Option<Sender<Job>>,
-    done_rx: Receiver<Result<(), String>>,
+    done_rx: Receiver<(usize, Result<(), String>)>,
     threads: Vec<JoinHandle<()>>,
 }
 
@@ -42,7 +42,7 @@ impl ShardPool {
     /// Spawn `threads` persistent workers (at least one).
     pub fn new(threads: usize) -> Self {
         let (job_tx, job_rx) = channel::<Job>();
-        let (done_tx, done_rx) = channel::<Result<(), String>>();
+        let (done_tx, done_rx) = channel::<(usize, Result<(), String>)>();
         // The job queue is shared work-stealing style: whichever worker is
         // free locks the receiver and takes the next job. Jobs are coarse
         // (a group of shards), so the lock is uncontended in practice.
@@ -56,7 +56,7 @@ impl ShardPool {
                         let guard = job_rx.lock().expect("pool queue lock");
                         guard.recv()
                     };
-                    let Ok(job) = job else {
+                    let Ok((slot, job)) = job else {
                         break; // pool dropped
                     };
                     let result = catch_unwind(AssertUnwindSafe(job)).map_err(|payload| {
@@ -66,7 +66,7 @@ impl ShardPool {
                             .or_else(|| payload.downcast_ref::<String>().cloned())
                             .unwrap_or_else(|| "non-string panic payload".into())
                     });
-                    if done_tx.send(result).is_err() {
+                    if done_tx.send((slot, result)).is_err() {
                         break;
                     }
                 })
@@ -87,9 +87,26 @@ impl ShardPool {
     /// A panic inside any job is re-raised here — after every other job has
     /// completed, so no borrow is left running.
     pub fn run<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        self.run_streamed(jobs, |_| {});
+    }
+
+    /// Like [`ShardPool::run`], but invokes `on_done(i)` **on the calling
+    /// thread** as soon as job `i` (submission index) has completed, in
+    /// completion order — the hook the pipelined send path uses to hand a
+    /// finished chunk's output downstream while later chunks are still
+    /// running. `on_done` must not touch state the still-running jobs
+    /// borrow mutably; the usual pattern is reading job `i`'s disjoint
+    /// output slot. If any job panics, the panic is re-raised here after
+    /// every job has finished (completed jobs still get their `on_done`
+    /// call first).
+    pub fn run_streamed<'env>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() + Send + 'env>>,
+        mut on_done: impl FnMut(usize),
+    ) {
         let n = jobs.len();
         let tx = self.job_tx.as_ref().expect("pool is alive until drop");
-        for job in jobs {
+        for (slot, job) in jobs.into_iter().enumerate() {
             // SAFETY: lifetime erasure only. This function blocks below
             // until all `n` jobs report completion, and pool workers report
             // *after* the job has returned (or unwound), so everything the
@@ -97,16 +114,19 @@ impl ShardPool {
             // completion loop can only exit early by panicking out of
             // `recv()`, which requires every worker thread to have exited —
             // and workers exit only when the pool itself is dropped.
-            let job: Job = unsafe {
-                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'env>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
             };
-            tx.send(job).expect("pool workers alive");
+            tx.send((slot, job)).expect("pool workers alive");
         }
         let mut panicked: Option<String> = None;
         for _ in 0..n {
             match self.done_rx.recv().expect("pool workers alive") {
-                Ok(()) => {}
-                Err(msg) => panicked = Some(msg),
+                (slot, Ok(())) => on_done(slot),
+                (_, Err(msg)) => panicked = Some(msg),
             }
         }
         if let Some(msg) = panicked {
@@ -192,6 +212,30 @@ mod tests {
             })
             .collect();
         pool.run(jobs);
+    }
+
+    #[test]
+    fn streamed_completions_arrive_once_per_job_with_outputs_visible() {
+        let pool = ShardPool::new(3);
+        let outputs: Vec<AtomicUsize> = (0..12).map(|_| AtomicUsize::new(0)).collect();
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..12)
+            .map(|i| {
+                let slot = &outputs[i];
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    slot.store(i + 1, Ordering::Release);
+                });
+                job
+            })
+            .collect();
+        let mut seen = vec![false; 12];
+        pool.run_streamed(jobs, |i| {
+            // Each index is reported exactly once, and by the time it is
+            // reported the job's output is visible to the calling thread.
+            assert!(!seen[i], "index {i} reported twice");
+            seen[i] = true;
+            assert_eq!(outputs[i].load(Ordering::Acquire), i + 1);
+        });
+        assert!(seen.iter().all(|&s| s));
     }
 
     #[test]

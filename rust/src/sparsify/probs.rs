@@ -149,8 +149,11 @@ impl SelectScratch {
 }
 
 /// `(Σ|g_i|, Σ g_i²)` in one pass, 4-lane f64 accumulators (vectorizes).
+/// Also the per-chunk kernel of the engine's pooled closed-form path: chunk
+/// partials are reduced in chunk order there, so the pooled sums are
+/// bitwise identical to the engine's sequential chunk loop.
 #[inline]
-fn abs_moment_sums(g: &[f32]) -> (f64, f64) {
+pub(crate) fn abs_moment_sums(g: &[f32]) -> (f64, f64) {
     let mut s1 = [0.0f64; 4];
     let mut s2 = [0.0f64; 4];
     let chunks = g.len() / 4;
@@ -193,13 +196,27 @@ pub fn closed_form_probs_with(
     p_out: &mut Vec<f32>,
     scratch: &mut SelectScratch,
 ) -> ProbVector {
+    let (total_l1, total_l2) = abs_moment_sums(g);
+    closed_form_probs_with_sums(g, eps, p_out, scratch, total_l1, total_l2)
+}
+
+/// [`closed_form_probs_with`] given precomputed moment sums — the entry
+/// point of the engine's pooled path, which accumulates `(Σ|g|, Σg²)` over
+/// its fixed chunk grid (so the pooled and sequential sums are bitwise
+/// identical) before handing them to the solver.
+pub(crate) fn closed_form_probs_with_sums(
+    g: &[f32],
+    eps: f32,
+    p_out: &mut Vec<f32>,
+    scratch: &mut SelectScratch,
+    total_l1: f64,
+    total_l2: f64,
+) -> ProbVector {
     let d = g.len();
-    assert!(eps >= 0.0, "variance budget must be non-negative");
     p_out.clear();
     p_out.resize(d, 0.0);
-
-    let (total_l1, total_l2) = abs_moment_sums(g);
     if total_l2 == 0.0 {
+        assert!(eps >= 0.0, "variance budget must be non-negative");
         // Zero gradient: nothing to keep.
         return ProbVector {
             inv_lambda: 0.0,
@@ -208,6 +225,37 @@ pub fn closed_form_probs_with(
             variance: 0.0,
         };
     }
+    let plan = closed_form_plan(g, eps, scratch, total_l1, total_l2);
+    closed_form_finish(g, &plan, p_out, scratch)
+}
+
+/// Outcome of the eq. (6) search: everything after it is a write pass over
+/// the probabilities. `k == 0` means the exact head is empty, so that write
+/// pass is the single pointwise formula `p_i = min(λ|g_i|, 1)` — the shape
+/// the engine fuses with Bernoulli sampling.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ClosedFormPlan {
+    /// Size of the dominating set `S_k` (top-`k` magnitudes kept exactly).
+    pub k: usize,
+    /// `λ` of eq. (7); zero when the tail is empty or all-zero.
+    pub lambda: f64,
+    /// `1/λ` as `f32` (the decoded shared magnitude).
+    pub inv_lambda: f32,
+}
+
+/// The eq. (6)/(7) search of [`closed_form_probs_with`], stopping before
+/// any probability is written. The partial magnitude ordering and its
+/// prefix sums are left in `scratch` for [`closed_form_finish`] (or the
+/// engine's fused sample pass). Caller guarantees `total_l2 > 0`.
+pub(crate) fn closed_form_plan(
+    g: &[f32],
+    eps: f32,
+    scratch: &mut SelectScratch,
+    total_l1: f64,
+    total_l2: f64,
+) -> ClosedFormPlan {
+    let d = g.len();
+    assert!(eps >= 0.0, "variance budget must be non-negative");
     let budget = eps as f64 * total_l2;
 
     let order = &mut scratch.order;
@@ -326,6 +374,28 @@ pub fn closed_form_probs_with(
         }
     };
 
+    ClosedFormPlan {
+        k,
+        lambda,
+        inv_lambda,
+    }
+}
+
+/// The write pass following [`closed_form_plan`]: `p = 1` on the exact head
+/// `S_k`, `p_i = min(λ|g_i|, 1)` on the tail, with the `ProbVector` scalars
+/// accumulated along the scratch ordering. `p_out` must already be zeroed
+/// to length `d` and `scratch` must hold the state the plan left behind.
+pub(crate) fn closed_form_finish(
+    g: &[f32],
+    plan: &ClosedFormPlan,
+    p_out: &mut [f32],
+    scratch: &SelectScratch,
+) -> ProbVector {
+    let (k, lambda) = (plan.k, plan.lambda);
+    let order = &scratch.order;
+    let prefix_l2 = &scratch.prefix_l2;
+    let mag = |i: u32| g[i as usize].abs();
+
     let mut expected_nnz = k as f64;
     let mut variance = prefix_l2[k.min(prefix_l2.len() - 1)]; // S_k contributes g².
     let mut num_exact = k;
@@ -352,7 +422,7 @@ pub fn closed_form_probs_with(
     }
 
     ProbVector {
-        inv_lambda,
+        inv_lambda: plan.inv_lambda,
         num_exact,
         expected_nnz,
         variance,

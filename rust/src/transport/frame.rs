@@ -268,6 +268,15 @@ pub fn encode_grad(out: &mut Vec<u8>, header: &GradHeader, payload: &[u8]) {
     encode_grad_tagged(out, TAG_GRAD, header, payload);
 }
 
+/// Encode only the tag + header prefix of a `GRAD` message into `out`
+/// (cleared first) — the first segment of a vectored send whose remaining
+/// segment is the codec payload, sparing the sender the payload copy.
+/// Byte-for-byte, `prefix ++ payload` equals what [`encode_grad`] produces
+/// for the same header and payload.
+pub fn encode_grad_prefix(out: &mut Vec<u8>, header: &GradHeader) {
+    encode_grad_tagged(out, TAG_GRAD, header, &[]);
+}
+
 /// Encode a `GRAD_BATCH` message into `out` (cleared first): the same
 /// header layout as `GRAD` with layer-summed statistics, followed by a
 /// `WireBatch` payload. Batches are always sparse wire bytes, so
@@ -275,6 +284,16 @@ pub fn encode_grad(out: &mut Vec<u8>, header: &GradHeader, payload: &[u8]) {
 pub fn encode_grad_batch(out: &mut Vec<u8>, header: &GradHeader, payload: &[u8]) {
     debug_assert_eq!(header.kind, 0, "batch frames carry sparse wire bytes");
     encode_grad_tagged(out, TAG_GRAD_BATCH, header, payload);
+}
+
+/// Encode only the tag + header prefix of a `GRAD_BATCH` message into
+/// `out` (cleared first) — the first segment of a vectored send whose
+/// remaining segments are the `WireBatch` header and per-layer payloads.
+/// Byte-for-byte, `prefix ++ payload` equals what [`encode_grad_batch`]
+/// produces for the same header and payload.
+pub fn encode_grad_batch_prefix(out: &mut Vec<u8>, header: &GradHeader) {
+    debug_assert_eq!(header.kind, 0, "batch frames carry sparse wire bytes");
+    encode_grad_tagged(out, TAG_GRAD_BATCH, header, &[]);
 }
 
 fn encode_grad_tagged(out: &mut Vec<u8>, tag: u8, header: &GradHeader, payload: &[u8]) {
@@ -518,6 +537,14 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+        // The vectored-send prefix concatenated with the payload is exactly
+        // the one-shot frame.
+        let mut prefix = Vec::new();
+        encode_grad_prefix(&mut prefix, &header);
+        assert_eq!(prefix.len(), GRAD_HEADER_LEN);
+        let mut glued = prefix.clone();
+        glued.extend_from_slice(b"payload-bytes");
+        assert_eq!(glued, buf);
 
         encode_shutdown(&mut buf);
         assert_eq!(decode(&buf).unwrap(), MsgView::Shutdown);
@@ -551,6 +578,14 @@ mod tests {
         bad[kind_off] = 1;
         assert!(decode(&bad).is_err());
         assert!(decode(&buf[..GRAD_HEADER_LEN - 1]).is_err());
+        // The vectored-send prefix concatenated with the payload is exactly
+        // the one-shot frame.
+        let mut prefix = Vec::new();
+        encode_grad_batch_prefix(&mut prefix, &header);
+        assert_eq!(prefix.len(), GRAD_HEADER_LEN);
+        let mut glued = prefix.clone();
+        glued.extend_from_slice(b"wire-batch-bytes");
+        assert_eq!(glued, buf);
     }
 
     #[test]

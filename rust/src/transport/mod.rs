@@ -115,6 +115,7 @@ struct CounterCells {
     bytes_rx: AtomicU64,
     frames_tx: AtomicU64,
     frames_rx: AtomicU64,
+    frames_vectored: AtomicU64,
 }
 
 impl LinkCounters {
@@ -154,6 +155,20 @@ impl LinkCounters {
         self.inner.frames_rx.load(Ordering::Relaxed)
     }
 
+    /// Record that the last counted tx frame was written by a
+    /// scatter/gather path from multiple payload segments — i.e. the
+    /// whole-payload assembly copy the contiguous path pays was skipped.
+    pub(crate) fn note_vectored(&self) {
+        self.inner.frames_vectored.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Frames sent zero-copy via multi-segment scatter/gather writes
+    /// (no contiguous payload assembly) — the transport bench reports this
+    /// as the "saved copy" count of the pipelined path.
+    pub fn frames_vectored(&self) -> u64 {
+        self.inner.frames_vectored.load(Ordering::Relaxed)
+    }
+
     /// Total framed bytes that crossed the link in either direction.
     pub fn bytes_total(&self) -> u64 {
         self.bytes_tx() + self.bytes_rx()
@@ -166,6 +181,21 @@ impl LinkCounters {
 pub trait Connection: Send {
     /// Send one frame (the payload; the transport adds the length prefix).
     fn send(&mut self, payload: &[u8]) -> Result<(), TransportError>;
+
+    /// Send one frame whose payload is the concatenation of `segments` —
+    /// the bytes on the wire are identical to assembling them into one
+    /// buffer and calling [`Connection::send`]. The default implementation
+    /// does exactly that assembly; backends with scatter/gather writes
+    /// (TCP's `write_vectored`) override it to skip the payload copy, and
+    /// count the skipped copy in [`LinkCounters::frames_vectored`].
+    fn send_vectored(&mut self, segments: &[&[u8]]) -> Result<(), TransportError> {
+        let total: usize = segments.iter().map(|s| s.len()).sum();
+        let mut buf = Vec::with_capacity(total);
+        for s in segments {
+            buf.extend_from_slice(s);
+        }
+        self.send(&buf)
+    }
 
     /// Receive one frame into `buf` (cleared/overwritten; capacity reused).
     fn recv(&mut self, buf: &mut Vec<u8>) -> Result<(), TransportError>;
@@ -329,6 +359,43 @@ mod tests {
         c.add_rx(1);
         assert_eq!(clone.frames_rx(), 2, "clones share the same cells");
         assert_eq!(clone.bytes_total(), clone.bytes_tx() + clone.bytes_rx());
+        assert_eq!(c.frames_vectored(), 0);
+        c.note_vectored();
+        assert_eq!(clone.frames_vectored(), 1);
+    }
+
+    #[test]
+    fn default_send_vectored_concatenates_segments() {
+        // The trait default must produce exactly the frame `send` would.
+        struct Capture {
+            frames: Vec<Vec<u8>>,
+            counters: LinkCounters,
+        }
+        impl Connection for Capture {
+            fn send(&mut self, payload: &[u8]) -> Result<(), TransportError> {
+                self.counters.add_tx(payload.len());
+                self.frames.push(payload.to_vec());
+                Ok(())
+            }
+            fn recv(&mut self, _buf: &mut Vec<u8>) -> Result<(), TransportError> {
+                Err(TransportError::Closed)
+            }
+            fn counters(&self) -> LinkCounters {
+                self.counters.clone()
+            }
+            fn peer(&self) -> String {
+                "capture".into()
+            }
+        }
+        let mut c = Capture {
+            frames: Vec::new(),
+            counters: LinkCounters::new(),
+        };
+        c.send_vectored(&[b"head", b"", b"tail"]).unwrap();
+        c.send_vectored(&[]).unwrap();
+        assert_eq!(c.frames, vec![b"headtail".to_vec(), Vec::new()]);
+        assert_eq!(c.counters.frames_tx(), 2);
+        assert_eq!(c.counters.frames_vectored(), 0, "default path still copies");
     }
 
     #[test]

@@ -1,16 +1,20 @@
 //! TCP transport backend: `std::net` sockets (loopback or a real NIC)
 //! behind the [`Transport`] trait.
 //!
-//! Each frame is written as one contiguous buffer (length prefix + payload)
-//! so a message is a single `write_all` syscall in steady state;
-//! `TCP_NODELAY` is set because the parameter-server protocol is
-//! request/response shaped and Nagle batching would serialize rounds on the
-//! RTT. The receive path validates the declared length against
-//! [`super::MAX_FRAME_LEN`] *before* allocating, so an adversarial or
-//! corrupted peer cannot OOM the process.
+//! Frames are written with `write_vectored`: the 4-byte length prefix and
+//! the payload segments go to the kernel as one gather list, so steady
+//! state is a single syscall with **no contiguous assembly copy** of the
+//! payload (the scratch-buffer memcpy the first TCP backend paid per
+//! frame). A short-write loop re-submits the unwritten tail, degrading to
+//! per-segment `write_all` only if the socket stops accepting vectored
+//! writes entirely. `TCP_NODELAY` is set because the parameter-server
+//! protocol is request/response shaped and Nagle batching would serialize
+//! rounds on the RTT. The receive path validates the declared length
+//! against [`super::MAX_FRAME_LEN`] *before* allocating, so an adversarial
+//! or corrupted peer cannot OOM the process.
 
 use super::{Connection, Hello, Listener, LinkCounters, Transport, TransportError};
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 
 /// The TCP backend (stateless; addresses are `host:port` strings, with
@@ -28,8 +32,6 @@ impl TcpTransport {
 struct TcpConn {
     stream: TcpStream,
     counters: LinkCounters,
-    /// Reused send assembly buffer (prefix + payload in one write).
-    scratch: Vec<u8>,
     peer: String,
 }
 
@@ -43,25 +45,77 @@ impl TcpConn {
         Ok(Self {
             stream,
             counters: LinkCounters::new(),
-            scratch: Vec::new(),
             peer,
         })
+    }
+
+    /// Write `segments` (prefix already included by the caller) as one
+    /// gather list, looping on short writes. `write_vectored` may accept
+    /// any prefix of the requested bytes; the loop re-submits from the
+    /// first unwritten byte. If the socket ever reports zero progress on a
+    /// non-empty request, fall back to plain `write_all` per segment — the
+    /// bytes on the wire are identical either way.
+    fn write_segments(&mut self, segments: &[&[u8]]) -> Result<(), TransportError> {
+        let mut idx = 0; // first segment not fully written
+        let mut off = 0; // bytes of segments[idx] already written
+        while idx < segments.len() {
+            if off == segments[idx].len() {
+                idx += 1;
+                off = 0;
+                continue;
+            }
+            let mut iov: Vec<IoSlice<'_>> = Vec::with_capacity(segments.len() - idx);
+            iov.push(IoSlice::new(&segments[idx][off..]));
+            iov.extend(segments[idx + 1..].iter().map(|s| IoSlice::new(s)));
+            let mut n = self.stream.write_vectored(&iov)?;
+            if n == 0 {
+                // write_all fallback: drain the remaining segments one by
+                // one (handles sockets/wrappers that refuse gather writes).
+                self.stream.write_all(&segments[idx][off..])?;
+                for s in &segments[idx + 1..] {
+                    self.stream.write_all(s)?;
+                }
+                return Ok(());
+            }
+            // Advance (idx, off) past the n bytes the kernel accepted.
+            while n > 0 {
+                let rem = segments[idx].len() - off;
+                if n >= rem {
+                    n -= rem;
+                    idx += 1;
+                    off = 0;
+                } else {
+                    off += n;
+                    n = 0;
+                }
+            }
+        }
+        Ok(())
     }
 }
 
 impl Connection for TcpConn {
     fn send(&mut self, payload: &[u8]) -> Result<(), TransportError> {
+        self.send_vectored(&[payload])
+    }
+
+    fn send_vectored(&mut self, segments: &[&[u8]]) -> Result<(), TransportError> {
+        let total: usize = segments.iter().map(|s| s.len()).sum();
         // MAX_FRAME_LEN ≪ u32::MAX, so the cap check makes the cast safe.
-        if payload.len() > super::MAX_FRAME_LEN {
-            return Err(TransportError::FrameTooLarge(payload.len() as u64));
+        if total > super::MAX_FRAME_LEN {
+            return Err(TransportError::FrameTooLarge(total as u64));
         }
-        let len = payload.len() as u32;
-        self.scratch.clear();
-        self.scratch.reserve(4 + payload.len());
-        self.scratch.extend_from_slice(&len.to_le_bytes());
-        self.scratch.extend_from_slice(payload);
-        self.stream.write_all(&self.scratch)?;
-        self.counters.add_tx(payload.len());
+        let prefix = (total as u32).to_le_bytes();
+        let mut gather: Vec<&[u8]> = Vec::with_capacity(1 + segments.len());
+        gather.push(&prefix);
+        gather.extend_from_slice(segments);
+        self.write_segments(&gather)?;
+        self.counters.add_tx(total);
+        if segments.len() > 1 {
+            // A multi-segment frame went out without the contiguous
+            // assembly copy the single-buffer path would have paid.
+            self.counters.note_vectored();
+        }
         Ok(())
     }
 
@@ -158,6 +212,58 @@ mod tests {
         // What the client sent, the server received — framed bytes agree.
         assert_eq!(cc.bytes_tx(), conn.counters().bytes_rx());
         assert_eq!(cc.bytes_rx(), conn.counters().bytes_tx());
+    }
+
+    #[test]
+    fn vectored_send_is_bytewise_identical_to_contiguous_send() {
+        let t = TcpTransport::new();
+        let mut listener = t.listen("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr();
+        let client = std::thread::spawn(move || {
+            let mut conn = t.connect(&addr, &Hello::new(0)).unwrap();
+            // The same logical frame, three ways: contiguous, two-segment,
+            // and many-segment with empty slices mixed in.
+            let payload = b"prefix-middle-suffix";
+            conn.send(payload).unwrap();
+            conn.send_vectored(&[b"prefix-", b"middle-suffix"]).unwrap();
+            conn.send_vectored(&[b"", b"prefix-", b"middle", b"-suffix", b""])
+                .unwrap();
+            conn.counters()
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        let mut buf = Vec::new();
+        for _ in 0..3 {
+            conn.recv(&mut buf).unwrap();
+            assert_eq!(buf, b"prefix-middle-suffix");
+        }
+        let cc = client.join().unwrap();
+        // Counters agree with the receiver, and only the two multi-segment
+        // frames count as vectored (the hello and the contiguous send used
+        // a single payload segment).
+        assert_eq!(cc.bytes_tx(), conn.counters().bytes_rx());
+        assert_eq!(cc.frames_tx(), 4); // hello + 3 frames
+        assert_eq!(cc.frames_vectored(), 2);
+    }
+
+    #[test]
+    fn oversized_vectored_frame_is_rejected_before_writing() {
+        let t = TcpTransport::new();
+        let mut listener = t.listen("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr();
+        let client = std::thread::spawn(move || {
+            let mut conn = t.connect(&addr, &Hello::new(0)).unwrap();
+            let big = vec![0u8; super::super::MAX_FRAME_LEN / 2 + 1];
+            let err = conn.send_vectored(&[&big, &big]).unwrap_err();
+            assert!(matches!(err, TransportError::FrameTooLarge(_)), "{err:?}");
+            // The link is still usable: nothing of the oversized frame hit
+            // the wire.
+            conn.send(b"ok").unwrap();
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        let mut buf = Vec::new();
+        conn.recv(&mut buf).unwrap();
+        assert_eq!(buf, b"ok");
+        client.join().unwrap();
     }
 
     #[test]

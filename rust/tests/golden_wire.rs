@@ -215,9 +215,9 @@ fn batch_fixtures() -> Vec<BatchFixture> {
         BatchFixture {
             name: "batch_empty_d100",
             layers: vec![msg(100, &[], &[], 0.0)],
-            raw_hex: "475350420100000001000000\
+            raw_hex: "475350420200000001000000\
                       0064000000000000000000000000000000",
-            entropy_hex: "475350420101000001000000\
+            entropy_hex: "475350420201000001000000\
                           0064000000000000000000000000000000",
         },
         // Single mixed layer: the sub-payloads are exactly the
@@ -226,11 +226,11 @@ fn batch_fixtures() -> Vec<BatchFixture> {
         BatchFixture {
             name: "batch_mixed_d1000",
             layers: vec![mixed_d1000()],
-            raw_hex: "475350420100000001000000\
+            raw_hex: "475350420200000001000000\
                       00e803000002000000040000000000003f\
                       030000000000c03fbd020000000010c000000000\
                       11000000fa000000e70300000a",
-            entropy_hex: "475350420101080701000000\
+            entropy_hex: "475350420201080701000000\
                           02e803000002000000040000000000003f\
                           0000c03f000010c00a06960b0012fa6303",
         },
@@ -241,11 +241,11 @@ fn batch_fixtures() -> Vec<BatchFixture> {
         BatchFixture {
             name: "batch_dense_d5_plus_empty_d3",
             layers: vec![dense_d5(), msg(3, &[], &[], 0.0)],
-            raw_hex: "475350420100000002000000\
+            raw_hex: "475350420200000002000000\
                       010500000001000000040000000000803e\
                       67020000803f\
                       0003000000000000000000000000000000",
-            entropy_hex: "475350420101000002000000\
+            entropy_hex: "475350420201000002000000\
                           010500000001000000040000000000803e\
                           67020000803f\
                           0003000000000000000000000000000000",
@@ -256,18 +256,65 @@ fn batch_fixtures() -> Vec<BatchFixture> {
         BatchFixture {
             name: "batch_two_mixed_d1000",
             layers: vec![mixed_d1000(), mixed_d1000()],
-            raw_hex: "475350420100000002000000\
+            raw_hex: "475350420200000002000000\
                       00e803000002000000040000000000003f\
                       030000000000c03fbd020000000010c000000000\
                       11000000fa000000e70300000a\
                       00e803000002000000040000000000003f\
                       030000000000c03fbd020000000010c000000000\
                       11000000fa000000e70300000a",
-            entropy_hex: "475350420101080702000000\
+            entropy_hex: "475350420201080702000000\
                           02e803000002000000040000000000003f\
                           0000c03f000010c00a06960b0012fa6303\
                           02e803000002000000040000000000003f\
                           0000c03f000010c00a06960b0012fa6303",
+        },
+        // Version-2 parameter-delta byte. The pooled QB gap multiset is
+        // {0 × 8} ∪ {127 × 4} → shared kb = 5. The consecutive-index layer
+        // (gap scale 0) strictly wins by running at k = 0 behind the delta
+        // byte 0x0b (dkb = −5); the strided layer's per-layer optimum
+        // (k = 6) only ties the pooled form, so it stays flag-free — one
+        // batch exercising both outcomes. Layer signs alternate so the QB
+        // bitmaps are non-trivial; the trailing empty layer keeps the batch
+        // strictly smaller than per-message framing.
+        BatchFixture {
+            name: "batch_param_delta_mixed_scales",
+            layers: vec![
+                msg(
+                    64,
+                    &[],
+                    &[
+                        (0, false),
+                        (1, true),
+                        (2, false),
+                        (3, true),
+                        (4, false),
+                        (5, true),
+                        (6, false),
+                        (7, true),
+                    ],
+                    1.0,
+                ),
+                msg(
+                    512,
+                    &[],
+                    &[(127, true), (255, false), (383, true), (511, false)],
+                    0.5,
+                ),
+                msg(12, &[], &[], 0.0),
+            ],
+            raw_hex: "475350420200000003000000\
+                      01400000000000000008000000 0000803f\
+                      99990000000000000000000000000000\
+                      00000200000000000004000000 0000003f\
+                      7f000000ff0000007f010000ff01000005\
+                      000c000000000000000000000000000000",
+            entropy_hex: "475350420201000503000000\
+                          82400000000000000008000000 0000803f\
+                          0baa00\
+                          02000200000000000004000000 0000003f\
+                          05f7efdfbf0f\
+                          000c000000000000000000000000000000",
         },
     ]
 }
@@ -324,6 +371,54 @@ fn golden_batch_bytes_decode_to_the_fixture_layers() {
             );
         }
     }
+}
+
+#[test]
+fn golden_v1_spellings_still_behave() {
+    // A delta-free v2 batch differs from its v1 spelling only in the
+    // version byte, so patching it back must keep decoding byte-for-byte —
+    // that is the wire-compatibility promise to older peers. A batch that
+    // *does* carry a delta flag has no v1 spelling: the patched bytes must
+    // be rejected, not misread.
+    for f in batch_fixtures() {
+        for (codec, hex) in [
+            (WireCodec::Raw, f.raw_hex),
+            (WireCodec::Entropy, f.entropy_hex),
+        ] {
+            let bytes = from_hex(hex);
+            assert_eq!(bytes[4], coding::BATCH_VERSION, "{}: fixture version", f.name);
+            let mut out = Vec::new();
+            let mut sub_lens = Vec::new();
+            coding::decode_batch_into(&bytes, &mut out, &mut sub_lens).unwrap();
+            let mut any_delta = false;
+            let mut off = coding::BATCH_HEADER_LEN;
+            for &len in &sub_lens {
+                any_delta |= bytes[off] & coding::PARAM_DELTA_FLAG != 0;
+                off += len;
+            }
+            let mut v1 = bytes.clone();
+            v1[4] = 1;
+            let res = coding::decode_batch_into(&v1, &mut out, &mut sub_lens);
+            if any_delta {
+                assert!(
+                    matches!(res, Err(coding::WireError::BadParamDelta(_))),
+                    "{}/{codec}: delta batch must have no v1 spelling, got {res:?}",
+                    f.name
+                );
+            } else {
+                res.unwrap_or_else(|e| panic!("{}/{codec}: v1 spelling undecodable: {e}", f.name));
+                assert_eq!(out, f.layers, "{}/{codec}: v1 spelling drifted", f.name);
+            }
+        }
+    }
+    // The delta fixture actually exercises the delta path: its first
+    // entropy sub-message must carry the flag and the committed 0x0b byte.
+    let f = &batch_fixtures()[4];
+    assert_eq!(f.name, "batch_param_delta_mixed_scales");
+    let bytes = from_hex(f.entropy_hex);
+    let enc_at = coding::BATCH_HEADER_LEN;
+    assert_ne!(bytes[enc_at] & coding::PARAM_DELTA_FLAG, 0, "delta flag missing");
+    assert_eq!(bytes[enc_at + coding::SUB_HEADER_LEN], 0x0b, "delta byte drifted");
 }
 
 #[test]

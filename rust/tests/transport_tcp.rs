@@ -21,11 +21,13 @@ use gsparse::transport::{
 };
 
 /// The shared suite honours the CI `codec: [raw, entropy]` matrix via
-/// `GSPARSE_CODEC` and the `feedback: [off, on]` matrix via
+/// `GSPARSE_CODEC`, the `feedback: [off, on]` matrix via
 /// `GSPARSE_FEEDBACK` (error feedback rides the CONFIG frame, so the
-/// parity criteria must hold with the residual memory engaged too); the
-/// explicit `*_entropy_codec` tests below pin the entropy variant
-/// regardless of the environment.
+/// parity criteria must hold with the residual memory engaged too), and
+/// the `pipeline: [1, 2]` matrix via `GSPARSE_PIPELINE` (depth ≥ 2 sends
+/// gradients as vectored header+payload segments — same bytes, different
+/// write path); the explicit `*_entropy_codec` tests below pin the entropy
+/// variant regardless of the environment.
 fn test_cfg() -> RunPlan {
     RunPlan {
         workers: 2,
@@ -37,6 +39,7 @@ fn test_cfg() -> RunPlan {
         reg: 1.0 / (10.0 * 256.0),
         codec: WireCodec::from_env(),
         feedback: gsparse::feedback::FeedbackConfig::from_env(),
+        pipeline: gsparse::api::pipeline_from_env(),
         ..Default::default()
     }
 }
