@@ -1,0 +1,131 @@
+//! Trace-instrumentation microbench: the cost of one span / counter record
+//! (hot-path price of observability), the inert cost when tracing is off,
+//! and the ISSUE acceptance workload — a full compress+encode round at
+//! d = 2^20, ρ = 0.01 traced vs. untraced, whose overhead ratio the CI
+//! trace guard pins at ≤ 5%. Writes `BENCH_trace.json` (override with
+//! `GSPARSE_BENCH_OUT`).
+
+use gsparse::benchkit::{black_box, section, Bencher, JsonReport};
+use gsparse::rngkit::RandArray;
+use gsparse::sparsify::{CompressEngine, SparseGrad};
+use gsparse::trace::{self, Stage, TraceConfig};
+use std::time::Instant;
+
+const ROUND_D: usize = 1 << 20;
+const ROUND_RHO: f32 = 0.01;
+const ROUND_REPS: usize = 8;
+
+fn bench_span_costs(report: &mut JsonReport) {
+    section("span record cost");
+    let bench = Bencher::default();
+
+    // Inert path: no recorder exists process-wide, so a span is one relaxed
+    // atomic load plus a no-op drop.
+    let s = bench.bench("span inert (tracing off)", None, || {
+        let mut sp = trace::span(black_box(Stage::Solve));
+        sp.bytes(4096);
+    });
+    report.push(&s);
+
+    // Hot path: recorder installed on this thread; every span is two clock
+    // reads plus one ring write (overwriting in place once the ring fills —
+    // exactly the steady state of a long traced run).
+    let rec = trace::Recorder::new(&TraceConfig::on()).expect("recorder");
+    let guard = trace::install(&rec, 0);
+    trace::set_round(1);
+    let s = bench.bench("span record (tracing on)", None, || {
+        let mut sp = trace::span(black_box(Stage::Solve));
+        sp.bytes(4096);
+    });
+    report.push(&s);
+    let span_ns = s.mean.as_secs_f64() * 1e9;
+    let s = bench.bench("counter record (tracing on)", None, || {
+        trace::counter(black_box(Stage::FrameTx), 128);
+    });
+    report.push(&s);
+
+    // Export cost (off the hot path, but the guard wants it tracked): drain
+    // the bench's ring and render Chrome JSON.
+    let events = rec.drain();
+    let n_events = events.len().max(1);
+    let t0 = Instant::now();
+    let json = trace::chrome_trace_json(&events);
+    let export_s = t0.elapsed().as_secs_f64();
+    black_box(json.len());
+    drop(guard);
+
+    report.push_metric("span_record_ns", span_ns);
+    report.push_metric(
+        "chrome_export_ns_per_event",
+        export_s * 1e9 / n_events as f64,
+    );
+    println!(
+        "span {span_ns:.1} ns; chrome export {:.1} ns/event over {n_events} events",
+        export_s * 1e9 / n_events as f64
+    );
+}
+
+/// Average seconds per compress+encode round (solve → sample → wire encode,
+/// the fully instrumented engine path) over `ROUND_REPS` repetitions.
+fn round_s(
+    engine: &mut CompressEngine,
+    g: &[f32],
+    rand: &mut RandArray,
+    out: &mut SparseGrad,
+    wire: &mut Vec<u8>,
+) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..ROUND_REPS {
+        engine.compress_into(g, rand, out, wire);
+        black_box(wire.len());
+    }
+    t0.elapsed().as_secs_f64() / ROUND_REPS as f64
+}
+
+fn bench_traced_round(report: &mut JsonReport) {
+    section(&format!(
+        "traced vs untraced round: d = 2^20, rho = {ROUND_RHO}"
+    ));
+    let g = gsparse::benchkit::skewed_gradient(ROUND_D, 3, 0.1);
+    let mut engine = CompressEngine::greedy(ROUND_RHO, 2);
+    engine.reserve(ROUND_D);
+    let mut rand = RandArray::from_seed(4, 1 << 21);
+    let mut out = SparseGrad::empty(ROUND_D);
+    let mut wire = Vec::new();
+
+    // Warmup grows every scratch buffer to its plateau.
+    for _ in 0..2 {
+        engine.compress_into(&g, &mut rand, &mut out, &mut wire);
+    }
+    let untraced_s = round_s(&mut engine, &g, &mut rand, &mut out, &mut wire);
+
+    let rec = trace::Recorder::new(&TraceConfig::on()).expect("recorder");
+    let guard = trace::install(&rec, 0);
+    engine.compress_into(&g, &mut rand, &mut out, &mut wire); // traced warmup
+    let events_per_round = rec.drain().len();
+    let traced_s = round_s(&mut engine, &g, &mut rand, &mut out, &mut wire);
+    drop(guard);
+
+    let overhead_x = traced_s / untraced_s;
+    println!(
+        "untraced {:.3} ms  traced {:.3} ms  ({overhead_x:.4}x, {events_per_round} events/round)",
+        untraced_s * 1e3,
+        traced_s * 1e3,
+    );
+    report.push_metric("round_untraced_s", untraced_s);
+    report.push_metric("round_traced_s", traced_s);
+    report.push_metric("round_trace_overhead_x", overhead_x);
+    report.push_metric("round_events_per_round", events_per_round as f64);
+}
+
+fn main() {
+    let mut report = JsonReport::new();
+    bench_span_costs(&mut report);
+    bench_traced_round(&mut report);
+    let out_path =
+        std::env::var("GSPARSE_BENCH_OUT").unwrap_or_else(|_| "BENCH_trace.json".to_string());
+    match report.write(&out_path) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
+    }
+}

@@ -70,6 +70,7 @@ use crate::sparsify::{
     Compressor, DenseCompressor, GSparCompressor, OneBitSgd, QsgdCompressor, TernGradCompressor,
     TopKCompressor, UniformSampler,
 };
+use crate::trace::TraceConfig;
 use crate::transport::{Listener, Transport, TRANSPORT_VERSION};
 
 /// Typed compressor specification — the replacement for the positional
@@ -247,6 +248,7 @@ pub struct SessionBuilder {
     feedback: Option<FeedbackConfig>,
     local_steps: usize,
     pipeline: usize,
+    trace: TraceConfig,
 }
 
 impl Default for SessionBuilder {
@@ -262,6 +264,9 @@ impl Default for SessionBuilder {
             feedback: None,
             local_steps: 1,
             pipeline: 1,
+            // The CI trace leg (GSPARSE_TRACE=json) flows through every
+            // session built by the shared suites without test changes.
+            trace: TraceConfig::from_env(),
         }
     }
 }
@@ -357,6 +362,18 @@ impl SessionBuilder {
         self
     }
 
+    /// Trace recording for every coordinator this session runs
+    /// ([`crate::trace`]): per-stage spans (solve / sample / encode / send
+    /// / apply / barrier wait …) into per-thread ring buffers, with zero
+    /// effect on the computed bytes and weights. The distributed runtime
+    /// ships the config to worker processes in the CONFIG frame, so
+    /// multi-process traces merge by worker id. Defaults to the
+    /// `GSPARSE_TRACE` environment setting ([`TraceConfig::from_env`]).
+    pub fn trace(mut self, cfg: TraceConfig) -> Self {
+        self.trace = cfg;
+        self
+    }
+
     pub fn build(self) -> Session {
         Session {
             method: self.method,
@@ -369,6 +386,7 @@ impl SessionBuilder {
             feedback: self.feedback,
             local_steps: self.local_steps,
             pipeline: self.pipeline,
+            trace: self.trace,
         }
     }
 }
@@ -405,6 +423,7 @@ pub struct Session {
     feedback: Option<FeedbackConfig>,
     local_steps: usize,
     pipeline: usize,
+    trace: TraceConfig,
 }
 
 impl Session {
@@ -454,6 +473,11 @@ impl Session {
     /// reference path). See [`SessionBuilder::pipeline`].
     pub fn pipeline(&self) -> usize {
         self.pipeline
+    }
+
+    /// The trace configuration (see [`SessionBuilder::trace`]).
+    pub fn trace(&self) -> TraceConfig {
+        self.trace
     }
 
     /// The communication schedule implied by [`Self::local_steps`].
@@ -526,6 +550,7 @@ impl Session {
             local_steps: self.local_steps,
             feedback: self.feedback,
             pipeline: self.pipeline,
+            trace: self.trace,
         }
     }
 
@@ -611,10 +636,13 @@ impl Default for SyncTask {
 /// Per-run knobs of the SSP parameter server.
 #[derive(Clone, Debug)]
 pub struct PsTask {
-    /// Total gradient iterations across all workers. With
+    /// Total gradient **iterations** across all workers. With
     /// [`SessionBuilder::local_steps`]` = H > 1` each wire push covers up
-    /// to `H` of them, so the applied-push count is ≈ `total_pushes / H`.
-    pub total_pushes: usize,
+    /// to `H` of them, so the applied-push count is ≈ `total_iterations /
+    /// H`. (Renamed from `total_pushes`, which had counted iterations —
+    /// not pushes — since local steps landed; [`PsTask::total_pushes`] is
+    /// the deprecated alias.)
+    pub total_iterations: usize,
     /// SSP bound: max versions a worker's weights may lag the server.
     pub max_staleness: u64,
     /// Minibatch size per worker.
@@ -623,10 +651,26 @@ pub struct PsTask {
     pub lr: f32,
 }
 
+impl PsTask {
+    /// Deprecated alias of [`PsTask::total_iterations`] — the field never
+    /// counted wire pushes once local steps landed.
+    #[deprecated(since = "0.7.0", note = "renamed to `total_iterations`")]
+    pub fn total_pushes(&self) -> usize {
+        self.total_iterations
+    }
+
+    /// Deprecated chainable setter kept for the old field name.
+    #[deprecated(since = "0.7.0", note = "set `total_iterations` instead")]
+    pub fn with_total_pushes(mut self, n: usize) -> Self {
+        self.total_iterations = n;
+        self
+    }
+}
+
 impl Default for PsTask {
     fn default() -> Self {
         Self {
-            total_pushes: 2000,
+            total_iterations: 2000,
             max_staleness: 8,
             batch: 8,
             lr: 0.5,
@@ -803,6 +847,30 @@ mod tests {
         let (f1, f2) = run(&fb);
         assert_eq!(p1, f1, "first feedback step sees zero residual");
         assert_ne!(f1, f2, "the residual must alter the second message");
+    }
+
+    #[test]
+    fn builder_trace_config_round_trips() {
+        // Default mirrors the environment hook (off in a clean test env,
+        // on in the CI trace leg).
+        let s = Session::builder().build();
+        assert_eq!(s.trace().enabled(), TraceConfig::from_env().enabled());
+        // Explicit config wins and flows into the wire-shipped plan.
+        let s = Session::builder().trace(TraceConfig::on()).build();
+        assert!(s.trace().enabled());
+        let plan = s.dist_plan(&DistTask::default());
+        assert_eq!(plan.trace, TraceConfig::on());
+        let s = Session::builder().trace(TraceConfig::Off).build();
+        assert!(!s.trace().enabled());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn ps_task_total_pushes_alias_reads_and_writes_total_iterations() {
+        let t = PsTask::default().with_total_pushes(123);
+        assert_eq!(t.total_iterations, 123);
+        assert_eq!(t.total_pushes(), 123);
+        assert_eq!(PsTask::default().total_iterations, 2000);
     }
 
     #[test]

@@ -251,6 +251,7 @@ pub fn encoded_batch_len(sgs: &[&SparseGrad], codec: WireCodec) -> usize {
 /// coordinate). The per-layer sub-messages are written straight from the
 /// [`SparseGrad`]s — no intermediate per-layer message is materialized.
 pub fn encode_batch(sgs: &[&SparseGrad], codec: WireCodec, out: &mut Vec<u8>) {
+    let mut trace_span = crate::trace::span(crate::trace::Stage::Encode);
     let (hka, hkb, total, plan) = plan_batch(sgs, codec);
     out.clear();
     out.reserve(total);
@@ -259,6 +260,7 @@ pub fn encode_batch(sgs: &[&SparseGrad], codec: WireCodec, out: &mut Vec<u8>) {
         write_sub(sg, p, out);
     }
     debug_assert_eq!(out.len(), total);
+    trace_span.bytes(out.len() as u64);
 }
 
 /// Incremental `WireBatch` encoder for the pipelined send path.
@@ -331,12 +333,15 @@ impl BatchStreamEncoder {
     /// return its length. `sg` must be the same layer, at the same
     /// position, the plan pass saw.
     pub fn encode_next(&mut self, sg: &SparseGrad, out: &mut Vec<u8>) -> usize {
+        let mut trace_span = crate::trace::span(crate::trace::Stage::Encode);
+        trace_span.layer(self.next as u32);
         let p = &self.plan[self.next];
         out.clear();
         out.reserve(p.wire_len());
         write_sub(sg, p, out);
         debug_assert_eq!(out.len(), p.wire_len());
         self.next += 1;
+        trace_span.bytes(out.len() as u64);
         out.len()
     }
 }
@@ -353,6 +358,8 @@ pub fn decode_batch_into(
     out: &mut Vec<SparseGrad>,
     sub_lens: &mut Vec<usize>,
 ) -> Result<(), WireError> {
+    let mut trace_span = crate::trace::span(crate::trace::Stage::Decode);
+    trace_span.bytes(buf.len() as u64);
     sub_lens.clear();
     if buf.len() < BATCH_HEADER_LEN {
         return Err(WireError::Truncated(buf.len()));

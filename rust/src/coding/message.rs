@@ -248,6 +248,7 @@ pub fn encode(sg: &SparseGrad, out: &mut Vec<u8>) -> Encoding {
 /// returned, so `Entropy` output is never larger than `Raw` output for the
 /// same message.
 pub fn encode_with(sg: &SparseGrad, codec: WireCodec, out: &mut Vec<u8>) -> Encoding {
+    let mut trace_span = crate::trace::span(crate::trace::Stage::Encode);
     let d = sg.d as usize;
     let (na, nb) = (sg.exact.len(), sg.shared.len());
     // Header math lives in one place: compute every admissible payload
@@ -288,6 +289,7 @@ pub fn encode_with(sg: &SparseGrad, codec: WireCodec, out: &mut Vec<u8>) -> Enco
 
     write_payload(sg, enc, ka, kb, out);
     debug_assert_eq!(out.len(), encoded_len_with(sg, codec));
+    trace_span.bytes(out.len() as u64);
     enc
 }
 
@@ -384,6 +386,8 @@ pub fn decode(buf: &[u8]) -> Result<SparseGrad, WireError> {
 /// every round). On error `sg` may hold partially-decoded content and must
 /// not be interpreted.
 pub fn decode_into(buf: &[u8], sg: &mut SparseGrad) -> Result<(), WireError> {
+    let mut trace_span = crate::trace::span(crate::trace::Stage::Decode);
+    trace_span.bytes(buf.len() as u64);
     if buf.len() < HEADER_LEN {
         return Err(WireError::Truncated(buf.len()));
     }

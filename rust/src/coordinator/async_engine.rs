@@ -114,6 +114,13 @@ impl AsyncSvmEngine {
         let lock = Arc::new(Mutex::new(()));
         let start = Instant::now();
 
+        // Observability: shared-memory runs have no Session, so the trace
+        // switch is the environment (`GSPARSE_TRACE`). Spans are per claim
+        // chunk — never per coordinate update — so the hot CAS loop stays
+        // untouched.
+        let trace_cfg = crate::trace::TraceConfig::from_env();
+        let recorder = crate::trace::Recorder::new(&trace_cfg);
+
         // Monitor samples (wall_ms, loss).
         let monitor_points = Arc::new(Mutex::new(Vec::<(f64, f64)>::new()));
 
@@ -127,7 +134,10 @@ impl AsyncSvmEngine {
                 let lock = Arc::clone(&lock);
                 let model = model;
                 let cfg = cfg.clone();
+                let worker_recorder = recorder.clone();
                 scope.spawn(move || {
+                    let _trace_guard =
+                        crate::trace::install_opt(worker_recorder.as_ref(), tid as u16);
                     worker_loop(
                         tid, &cfg, ds, &model, &shared, &remaining, &conflicts, &updates, &lock,
                     );
@@ -183,6 +193,12 @@ impl AsyncSvmEngine {
             wall_ms,
         });
         curve.sparsity = cfg.rho as f64;
+
+        if let Some(rec) = &recorder {
+            if crate::trace::TraceConfig::dump_requested() {
+                let _ = crate::trace::dump(rec, "async", trace_cfg.format());
+            }
+        }
 
         AsyncReport {
             curve,
@@ -260,6 +276,8 @@ fn worker_loop(
             }
         }
 
+        let mut chunk_span = crate::trace::span(crate::trace::Stage::LocalStep);
+        chunk_span.bytes(take);
         for _ in 0..take {
             t_local += 1;
             // Step size: lr/ρ initial (paper §5.3), 1/sqrt(t) decay keeps

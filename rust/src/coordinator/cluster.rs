@@ -131,6 +131,13 @@ pub struct Cluster {
     pub spa_meter: SparsityMeter,
     pub ledger: CommLedger,
     pub sim_time_s: f64,
+    /// Trace recorder (None under [`crate::trace::TraceConfig::Off`]). The
+    /// per-worker [`crate::trace::ThreadHandle`]s are pre-allocated so the
+    /// round-scoped comm threads re-register without allocating.
+    recorder: Option<crate::trace::Recorder>,
+    trace_handles: Vec<crate::trace::ThreadHandle>,
+    leader_handle: Option<crate::trace::ThreadHandle>,
+    trace_cfg: crate::trace::TraceConfig,
 }
 
 impl Cluster {
@@ -154,6 +161,7 @@ impl Cluster {
             false,
             CommSchedule::every_round(),
             1,
+            crate::trace::TraceConfig::from_env(),
             make_compressor,
         )
     }
@@ -183,6 +191,7 @@ impl Cluster {
             false,
             CommSchedule::every_round(),
             1,
+            crate::trace::TraceConfig::from_env(),
             make_compressor,
         )
     }
@@ -202,6 +211,7 @@ impl Cluster {
             batch,
             session.comm_schedule(),
             session.pipeline(),
+            session.trace(),
             || session.compressor(),
         );
         cluster.net = session.net();
@@ -218,11 +228,20 @@ impl Cluster {
         batch: bool,
         schedule: CommSchedule,
         pipeline: usize,
+        trace_cfg: crate::trace::TraceConfig,
         mut make_compressor: F,
     ) -> Self
     where
         F: FnMut() -> Box<dyn Compressor>,
     {
+        let recorder = crate::trace::Recorder::new(&trace_cfg);
+        let trace_handles: Vec<crate::trace::ThreadHandle> = recorder
+            .as_ref()
+            .map(|r| (0..workers).map(|w| r.thread_handle(w as u16)).collect())
+            .unwrap_or_default();
+        let leader_handle = recorder
+            .as_ref()
+            .map(|r| r.thread_handle(crate::trace::SERVER_WORKER));
         let transport = InProcTransport::new();
         let mut listener = transport.listen("cluster").expect("in-process listen");
         let comm: Vec<Option<WorkerComm>> = (0..workers)
@@ -282,6 +301,10 @@ impl Cluster {
             spa_meter: SparsityMeter::default(),
             ledger: CommLedger::default(),
             sim_time_s: 0.0,
+            recorder,
+            trace_handles,
+            leader_handle,
+            trace_cfg,
         }
     }
 
@@ -376,6 +399,10 @@ impl Cluster {
     fn comm_round(&mut self, grads: &[Vec<Vec<f32>>]) -> Vec<LayerUpdate> {
         let layers = self.layers.clone();
         let use_batch: Vec<bool> = (0..self.workers).map(|w| self.batched_link(w)).collect();
+        let round_idx = self.rounds_seen as u32;
+        let _leader_guard = crate::trace::install_handle_opt(self.leader_handle.as_ref());
+        crate::trace::set_round(round_idx);
+        let _round_span = crate::trace::span(crate::trace::Stage::Round);
 
         // Move each worker's comm state into its thread; all workers encode
         // and send concurrently, then the states come back via the joins.
@@ -393,7 +420,12 @@ impl Cluster {
             for (w, mut st) in states.into_iter().enumerate() {
                 let worker_grads = &grads[w];
                 let batched = use_batch[w];
+                let trace_handle = self.trace_handles.get(w).cloned();
                 handles.push(scope.spawn(move || {
+                    let _trace_guard =
+                        crate::trace::install_handle_opt(trace_handle.as_ref());
+                    crate::trace::set_round(round_idx);
+                    let _push_span = crate::trace::span(crate::trace::Stage::Push);
                     if batched {
                         worker_round_batched(&mut st, worker_grads, codec, pipelined);
                     } else {
@@ -430,7 +462,13 @@ impl Cluster {
         for (w, link) in self.leader_links.iter_mut().enumerate() {
             if use_batch[w] {
                 // One frame carries the whole model update.
-                link.recv(&mut rx_frame).expect("worker frame");
+                {
+                    let mut wait = crate::trace::span(crate::trace::Stage::BarrierWait);
+                    wait.layer(w as u32);
+                    link.recv(&mut rx_frame).expect("worker frame");
+                }
+                let mut apply_span = crate::trace::span(crate::trace::Stage::Apply);
+                apply_span.bytes(rx_frame.len() as u64);
                 let (header, payload) = match frame::decode(&rx_frame).expect("self-encoded") {
                     MsgView::GradBatch { header, payload } => (header, payload),
                     other => panic!("unexpected message from worker: {other:?}"),
@@ -452,7 +490,14 @@ impl Cluster {
                     .record_codec(header.ideal_bits, payload.len() as u64, codec);
             } else {
                 for (l, upd) in updates.iter_mut().enumerate() {
-                    link.recv(&mut rx_frame).expect("worker frame");
+                    {
+                        let mut wait = crate::trace::span(crate::trace::Stage::BarrierWait);
+                        wait.layer(l as u32);
+                        link.recv(&mut rx_frame).expect("worker frame");
+                    }
+                    let mut apply_span = crate::trace::span(crate::trace::Stage::Apply);
+                    apply_span.bytes(rx_frame.len() as u64);
+                    apply_span.layer(l as u32);
                     let (header, payload) = match frame::decode(&rx_frame).expect("self-encoded")
                     {
                         MsgView::Grad { header, payload } => (header, payload),
@@ -488,7 +533,25 @@ impl Cluster {
             .sum();
         self.ledger.set_measured(measured);
         self.ledger.set_measured_frames(self.frames_received());
+        self.ledger.verify();
         updates
+    }
+
+    /// Aggregated trace metrics for the rounds so far: span counters and
+    /// log₂ latency histograms from the recorder, plus each leader link's
+    /// transport counters. `None` when the cluster runs with tracing off.
+    /// Draining is destructive per call (rings restart empty), so call it
+    /// once at the end of a run.
+    pub fn trace_metrics(&self) -> Option<crate::trace::MetricsSnapshot> {
+        self.recorder.as_ref().map(|rec| {
+            let events = rec.drain();
+            let mut snap = crate::trace::MetricsSnapshot::from_events(&events);
+            for (w, link) in self.leader_links.iter().enumerate() {
+                snap.fold_link_counters(&format!("link_w{w}"), &link.counters());
+            }
+            snap.push_gauge("sim_time_s", self.sim_time_s);
+            snap
+        })
     }
 
     /// Transport frames the leader has received so far (cumulative across
@@ -499,6 +562,19 @@ impl Cluster {
             .iter()
             .map(|c| c.counters().frames_rx())
             .sum()
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        // Run-end trace dump: the cluster is round-driven with no explicit
+        // shutdown, so teardown is the merge point. Opt-in via
+        // `GSPARSE_TRACE_OUT` only — plain recording leaves no files.
+        if let Some(rec) = &self.recorder {
+            if crate::trace::TraceConfig::dump_requested() {
+                let _ = crate::trace::dump(rec, "cluster", self.trace_cfg.format());
+            }
+        }
     }
 }
 

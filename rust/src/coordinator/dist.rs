@@ -37,6 +37,7 @@ use crate::metrics::{CurvePoint, RunCurve, SparsityMeter, VarianceRatio};
 use crate::model::{ConvexModel, LogisticModel};
 use crate::rngkit::{RandArray, Xoshiro256pp};
 use crate::sparsify::{Compressed, SparseGrad};
+use crate::trace::{self, TraceConfig};
 use crate::transport::frame::{self, GradHeader, MsgView};
 use crate::transport::{
     Connection, Hello, LinkCounters, Listener, TcpTransport, Transport,
@@ -87,6 +88,12 @@ pub struct RunPlan {
     /// segments — bytes on the wire are identical at every depth, so a
     /// pipelined sender interoperates with any v3 peer.
     pub pipeline: usize,
+    /// Trace recording ([`crate::trace`]): shipped to worker processes in
+    /// the CONFIG frame, so every participant of a multi-process run
+    /// records under the same configuration and their per-worker trace
+    /// files merge into one timeline keyed by worker id. Recording never
+    /// changes the computed bytes or weights.
+    pub trace: TraceConfig,
 }
 
 /// Deprecated name of [`RunPlan`].
@@ -117,18 +124,23 @@ impl Default for RunPlan {
             local_steps: 1,
             feedback: None,
             pipeline: 1,
+            // The CI trace leg (GSPARSE_TRACE=json) flows through plans
+            // built without an explicit config, like SessionBuilder.
+            trace: TraceConfig::from_env(),
         }
     }
 }
 
 /// Version 2 appended the wire-codec byte; version 3 appended the
 /// local-step period and the error-feedback toggle + decay; version 4
-/// appended the pipeline depth.
-const CONFIG_VERSION: u8 = 4;
+/// appended the pipeline depth; version 5 appended the trace config
+/// (mode byte + u32 ring capacity).
+const CONFIG_VERSION: u8 = 5;
 /// Offset of the codec byte: version + method + 6×u32 + u64 seed + 5×f32.
 const CONFIG_CODEC_AT: usize = 2 + 6 * 4 + 8 + 5 * 4;
-/// Codec byte + u32 local_steps + feedback flag + f32 decay + u32 pipeline.
-const CONFIG_LEN: usize = CONFIG_CODEC_AT + 1 + 4 + 1 + 4 + 4;
+/// Codec byte + u32 local_steps + feedback flag + f32 decay + u32 pipeline
+/// + trace mode byte + u32 trace ring capacity.
+const CONFIG_LEN: usize = CONFIG_CODEC_AT + 1 + 4 + 1 + 4 + 4 + 1 + 4;
 
 impl RunPlan {
     /// Serialize for the `CONFIG` frame (fixed-width LE fields).
@@ -161,6 +173,7 @@ impl RunPlan {
             &self.feedback.map(|f| f.decay).unwrap_or(0.0).to_le_bytes(),
         );
         out.extend_from_slice(&(self.pipeline.max(1) as u32).to_le_bytes());
+        out.extend_from_slice(&self.trace.wire_bytes());
         out
     }
 
@@ -200,6 +213,11 @@ impl RunPlan {
             buf[codec_at + 10..codec_at + 14].try_into().unwrap(),
         ) as usize;
         anyhow::ensure!(pipeline >= 1, "pipeline depth must be ≥ 1");
+        let trace_cap = u32::from_le_bytes(
+            buf[codec_at + 15..codec_at + 19].try_into().unwrap(),
+        );
+        let trace = TraceConfig::from_wire(buf[codec_at + 14], trace_cap)
+            .ok_or_else(|| anyhow::anyhow!("unknown trace mode {}", buf[codec_at + 14]))?;
         Ok(Self {
             workers: u32_at(0) as usize,
             rounds: u32_at(1) as usize,
@@ -218,6 +236,7 @@ impl RunPlan {
             local_steps,
             feedback,
             pipeline,
+            trace,
         })
     }
 }
@@ -242,6 +261,9 @@ pub struct DistReport {
     pub measured_rx_bytes: u64,
     /// α-β simulated communication time over the gradient payload bytes.
     pub sim_time_s: f64,
+    /// Server-side trace roll-up (per-stage counters + duration histograms
+    /// + per-link transport counters) when the plan enabled tracing.
+    pub trace_metrics: Option<trace::MetricsSnapshot>,
 }
 
 fn fnv1a(mut hash: u64, bytes: &[u8]) -> u64 {
@@ -259,6 +281,12 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
     let d = cfg.d;
     let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
     let model = LogisticModel::new(cfg.reg);
+
+    // Install the recorder before the accept phase so the handshake span
+    // lands in the trace; recording reads only lengths and the clock, so
+    // the run is bitwise identical with tracing on or off (tests/trace.rs).
+    let recorder = trace::Recorder::new(&cfg.trace);
+    let _trace_guard = trace::install_opt(recorder.as_ref(), trace::SERVER_WORKER);
 
     // ---- accept + config distribution (codec agreement checked here; the
     // per-peer hello version decides the weights-frame flavor below) ----
@@ -304,6 +332,8 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
     // gradient steps, zero wire traffic) — visible below as the frame and
     // byte counters scaling with `blocks`, not `rounds`.
     for block in 0..blocks {
+        trace::set_round(block as u32);
+        let _round_span = trace::span(trace::Stage::Round);
         let block_len = schedule.block_len(block, cfg.rounds) as u64;
         // Phase 1: answer one pull per worker, all at the same version —
         // encode each weights flavor at most once. A *multi-tensor* weight
@@ -320,7 +350,11 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
         let mut plain_encoded = false;
         let mut batch_encoded = false;
         for (wid, conn) in conns.iter_mut().enumerate() {
-            conn.recv(&mut rxbuf)?;
+            {
+                let mut wait = trace::span(trace::Stage::BarrierWait);
+                wait.layer(wid as u32);
+                conn.recv(&mut rxbuf)?;
+            }
             match frame::decode(&rxbuf)? {
                 MsgView::Pull => {}
                 _ => anyhow::bail!("expected pull from {}", conn.peer()),
@@ -342,7 +376,11 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
         // Phase 2: apply one (accumulated) gradient per worker, in
         // worker-id order.
         for (wid, conn) in conns.iter_mut().enumerate() {
-            conn.recv(&mut rxbuf)?;
+            {
+                let mut wait = trace::span(trace::Stage::BarrierWait);
+                wait.layer(wid as u32);
+                conn.recv(&mut rxbuf)?;
+            }
             let (header, payload) = match frame::decode(&rxbuf)? {
                 MsgView::Grad { header, payload } => (header, payload),
                 _ => anyhow::bail!("expected gradient from {}", conn.peer()),
@@ -358,9 +396,13 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
                     "gradient dimension {} != configured {d}",
                     sg.d
                 );
+                let mut apply = trace::span(trace::Stage::Apply);
+                apply.bytes(payload.len() as u64);
                 sg.add_into(-eta, &mut w);
             } else {
                 anyhow::ensure!(payload.len() == 4 * d, "dense payload length");
+                let mut apply = trace::span(trace::Stage::Apply);
+                apply.bytes(payload.len() as u64);
                 frame::add_dense_le(payload, -eta, &mut w);
             }
             max_stale = max_stale.max(version.saturating_sub(header.based_on));
@@ -413,8 +455,21 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
     curve
         .ledger
         .set_measured_frames(counters.iter().map(|c| c.frames_tx() + c.frames_rx()).sum());
+    curve.ledger.verify();
     curve.var_ratio = var_meter.value();
     curve.sparsity = spa_meter.value();
+    let trace_metrics = recorder.as_ref().map(|rec| {
+        let events = rec.drain();
+        let mut snap = trace::MetricsSnapshot::from_events(&events);
+        for (wid, c) in counters.iter().enumerate() {
+            snap.fold_link_counters(&format!("link_w{wid}"), c);
+        }
+        snap.push_gauge("sim_time_s", sim_time);
+        if TraceConfig::dump_requested() {
+            let _ = trace::dump_events(&events, "server", cfg.trace.format());
+        }
+        snap
+    });
     let final_loss = model.loss(&ds, &w);
     Ok(DistReport {
         curve,
@@ -426,6 +481,7 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
         measured_tx_bytes: measured_tx,
         measured_rx_bytes: measured_rx,
         sim_time_s: sim_time,
+        trace_metrics,
     })
 }
 
@@ -450,6 +506,11 @@ pub fn run_worker(
         "server config says codec {}, this worker negotiated {codec}",
         cfg.codec
     );
+    // The CONFIG frame just told us whether to trace — every later frame,
+    // solve, sample, and encode on this worker lands in its own recorder,
+    // keyed by worker id so per-process traces merge into one timeline.
+    let recorder = trace::Recorder::new(&cfg.trace);
+    let _trace_guard = trace::install_opt(recorder.as_ref(), worker_id as u16);
     let d = cfg.d;
     let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
     let model = LogisticModel::new(cfg.reg);
@@ -479,27 +540,34 @@ pub fn run_worker(
     let mut dense_scratch: Vec<u8> = Vec::new();
     let mut idx = Vec::with_capacity(cfg.batch);
     let mut rounds_done = 0usize;
+    let mut block_idx = 0u32;
 
     loop {
-        frame::encode_pull(&mut txbuf);
-        conn.send(&txbuf)?;
-        conn.recv(&mut rxbuf)?;
-        let version = match frame::decode(&rxbuf)? {
-            MsgView::Shutdown => break,
-            MsgView::Weights { version, w_bytes } => {
-                anyhow::ensure!(w_bytes.len() == 4 * d, "weights length");
-                frame::weights_into(w_bytes, &mut w_local);
-                version
+        trace::set_round(block_idx);
+        block_idx += 1;
+        let version = {
+            let mut pull = trace::span(trace::Stage::Pull);
+            frame::encode_pull(&mut txbuf);
+            conn.send(&txbuf)?;
+            conn.recv(&mut rxbuf)?;
+            pull.bytes(rxbuf.len() as u64);
+            match frame::decode(&rxbuf)? {
+                MsgView::Shutdown => break,
+                MsgView::Weights { version, w_bytes } => {
+                    anyhow::ensure!(w_bytes.len() == 4 * d, "weights length");
+                    frame::weights_into(w_bytes, &mut w_local);
+                    version
+                }
+                MsgView::WeightsBatch { version, batch } => {
+                    // The batched pull (one frame for the whole tensor
+                    // list); this runtime's model is one flat vector, so
+                    // the concatenated arena must match `d` exactly.
+                    frame::weights_batch_into(batch, &mut w_local);
+                    anyhow::ensure!(w_local.len() == d, "weights batch total length");
+                    version
+                }
+                _ => anyhow::bail!("expected weights or shutdown"),
             }
-            MsgView::WeightsBatch { version, batch } => {
-                // The batched pull (one frame for the whole tensor list);
-                // this runtime's model is one flat vector, so the
-                // concatenated arena must match `d` exactly.
-                frame::weights_batch_into(batch, &mut w_local);
-                anyhow::ensure!(w_local.len() == d, "weights batch total length");
-                version
-            }
-            _ => anyhow::bail!("expected weights or shutdown"),
         };
         // One block of `H` local rounds (fewer on the trailing partial
         // block): gradient + local step per round, one compressed
@@ -507,6 +575,7 @@ pub fn run_worker(
         let block_len = h.min(cfg.rounds - rounds_done);
         acc.fill(0.0);
         for s in 0..block_len {
+            let _step = trace::span(trace::Stage::LocalStep);
             idx.clear();
             for _ in 0..cfg.batch {
                 idx.push(rng.next_below(ds.n() as u64) as usize);
@@ -545,16 +614,26 @@ pub fn run_worker(
             ideal_bits: stats.ideal_bits,
             kind,
         };
-        if cfg.pipeline >= 2 {
-            // Pipelined send: header prefix + codec payload as a vectored
-            // gather, skipping the payload copy into the frame buffer. The
-            // concatenated bytes are exactly the `encode_grad` frame, so
-            // any v3 peer decodes this without knowing the sender's depth.
-            frame::encode_grad_prefix(&mut txbuf, &header);
-            conn.send_vectored(&[&txbuf, payload])?;
-        } else {
-            frame::encode_grad(&mut txbuf, &header, payload);
-            conn.send(&txbuf)?;
+        {
+            let mut push = trace::span(trace::Stage::Push);
+            push.bytes(payload.len() as u64);
+            if cfg.pipeline >= 2 {
+                // Pipelined send: header prefix + codec payload as a
+                // vectored gather, skipping the payload copy into the
+                // frame buffer. The concatenated bytes are exactly the
+                // `encode_grad` frame, so any v3 peer decodes this without
+                // knowing the sender's depth.
+                frame::encode_grad_prefix(&mut txbuf, &header);
+                conn.send_vectored(&[&txbuf, payload])?;
+            } else {
+                frame::encode_grad(&mut txbuf, &header, payload);
+                conn.send(&txbuf)?;
+            }
+        }
+    }
+    if let Some(rec) = recorder.as_ref() {
+        if TraceConfig::dump_requested() {
+            let _ = trace::dump(rec, &format!("worker{worker_id}"), cfg.trace.format());
         }
     }
     Ok(())
@@ -710,6 +789,7 @@ mod tests {
                 local_steps: 3,
                 feedback: Some(FeedbackConfig::with_decay(0.75)),
                 pipeline: 4,
+                trace: TraceConfig::on(),
                 ..small_cfg()
             };
             let bytes = cfg.encode();
@@ -732,10 +812,20 @@ mod tests {
             let mut bad = bytes.clone();
             bad[codec_at + 10..codec_at + 14].copy_from_slice(&0u32.to_le_bytes());
             assert!(RunPlan::decode(&bad).is_err());
+            // Unknown trace mode bytes are refused.
+            let mut bad = bytes.clone();
+            bad[codec_at + 14] = 9;
+            assert!(RunPlan::decode(&bad).is_err());
         }
-        // The default plan (no feedback, every-round) roundtrips too.
-        let cfg = small_cfg();
-        assert_eq!(RunPlan::decode(&cfg.encode()).unwrap(), cfg);
+        // The default plan (no feedback, every-round) roundtrips too, as
+        // does an explicitly trace-off / JSONL-trace one.
+        for trace in [TraceConfig::Off, TraceConfig::from_env(), TraceConfig::on()] {
+            let cfg = RunPlan {
+                trace,
+                ..small_cfg()
+            };
+            assert_eq!(RunPlan::decode(&cfg.encode()).unwrap(), cfg);
+        }
     }
 
     #[test]

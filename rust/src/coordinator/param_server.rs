@@ -93,6 +93,10 @@ pub struct PsReport {
     /// Measured framed bytes on the worker→server links (payloads plus
     /// length prefixes plus handshakes), from the transport counters.
     pub measured_bytes: u64,
+    /// Aggregated trace metrics (counters, gauges, log₂ latency
+    /// histograms) when the session ran with tracing enabled; `None` under
+    /// [`crate::trace::TraceConfig::Off`].
+    pub trace_metrics: Option<crate::trace::MetricsSnapshot>,
 }
 
 /// Shared weight store with versioning (server publishes, workers pull).
@@ -118,7 +122,9 @@ pub fn run_param_server(
         .workers(cfg.workers)
         .build();
     let task = PsTask {
-        total_pushes: cfg.total_pushes,
+        // The shim keeps the old `total_pushes` name; the Session-era task
+        // calls the same budget `total_iterations`.
+        total_iterations: cfg.total_pushes,
         max_staleness: cfg.max_staleness,
         batch: cfg.batch,
         lr: cfg.lr,
@@ -147,7 +153,7 @@ pub(crate) fn run_session(
     let store = Arc::new(WeightStore {
         state: Mutex::new((vec![0.0f32; d], 0)),
     });
-    let budget = Arc::new(AtomicU64::new(task.total_pushes as u64));
+    let budget = Arc::new(AtomicU64::new(task.total_iterations as u64));
     let stalls = Arc::new(AtomicU64::new(0));
     let max_stale = Arc::new(AtomicU64::new(0));
     // SSP clocks: per-worker iteration counters (u64::MAX = exited).
@@ -189,6 +195,13 @@ pub(crate) fn run_session(
     );
     let start = Instant::now();
 
+    // Observability: one recorder shared by the server thread and every
+    // worker thread (each installs its own per-thread context, so the ring
+    // buffers never contend). `TraceConfig::Off` makes all of this no-ops.
+    let trace_cfg = session.trace();
+    let recorder = crate::trace::Recorder::new(&trace_cfg);
+    let _trace_guard = crate::trace::install_opt(recorder.as_ref(), crate::trace::SERVER_WORKER);
+
     let mut curve = RunCurve::new(format!(
         "ps-{}(st={})",
         spec.method(),
@@ -197,8 +210,8 @@ pub(crate) fn run_session(
     let mut var_meter = VarianceRatio::default();
     let mut wire_bytes = 0u64;
 
-    let (total_pushes, max_staleness, batch, lr) =
-        (task.total_pushes, task.max_staleness, task.batch, task.lr);
+    let (total_iterations, max_staleness, batch, lr) =
+        (task.total_iterations, task.max_staleness, task.batch, task.lr);
 
     std::thread::scope(|scope| {
         // ---- workers ----
@@ -212,7 +225,10 @@ pub(crate) fn run_session(
             let sent = Arc::clone(&sent);
             let iterations_done = Arc::clone(&iterations_done);
             let mut conn = worker_conns[wid].take().expect("connection unclaimed");
+            let worker_recorder = recorder.clone();
             scope.spawn(move || {
+                let _trace_guard =
+                    crate::trace::install_opt(worker_recorder.as_ref(), wid as u16);
                 let mut rng = Xoshiro256pp::for_worker(seed, wid);
                 let mut rand = RandArray::new(
                     Xoshiro256pp::for_worker(seed ^ 0x9511, wid),
@@ -235,8 +251,12 @@ pub(crate) fn run_session(
                 let mut dense_tx: Vec<f32> = Vec::new();
                 let mut frame_buf: Vec<u8> = Vec::new();
                 let mut my_version = 0u64;
+                let mut block: u32 = 0;
                 let (clock_mx, clock_cv) = &*clocks;
                 loop {
+                    crate::trace::set_round(block);
+                    block = block.wrapping_add(1);
+                    let _round_span = crate::trace::span(crate::trace::Stage::Round);
                     // Claim up to H iterations from the budget (H = 1:
                     // exactly the historical one-claim-per-push loop).
                     let mut claimed = 0usize;
@@ -256,6 +276,8 @@ pub(crate) fn run_session(
                     // `max_staleness` iterations ahead of the slowest live
                     // worker. The slowest worker always passes — no deadlock.
                     {
+                        let _wait_span =
+                            crate::trace::span(crate::trace::Stage::BarrierWait);
                         let mut cl = clock_mx.lock().unwrap();
                         loop {
                             let min_clock = cl
@@ -285,6 +307,8 @@ pub(crate) fn run_session(
                     }
                     // Pull the freshest weights (records observed staleness).
                     {
+                        let mut pull_span = crate::trace::span(crate::trace::Stage::Pull);
+                        pull_span.bytes((d * 4) as u64);
                         let guard = store.state.lock().unwrap();
                         let (ref w, version) = *guard;
                         max_stale
@@ -295,6 +319,8 @@ pub(crate) fn run_session(
                     // Local block: `claimed` gradient computations against
                     // the worker's own iterate, no wire traffic until the
                     // accumulated sum is pushed below.
+                    let mut local_span = crate::trace::span(crate::trace::Stage::LocalStep);
+                    local_span.layer(claimed as u32);
                     acc.fill(0.0);
                     for s in 0..claimed {
                         let idx: Vec<usize> = (0..batch)
@@ -310,6 +336,8 @@ pub(crate) fn run_session(
                         }
                     }
                     iterations_done.fetch_add(claimed as u64, Ordering::Relaxed);
+                    drop(local_span);
+                    let mut push_span = crate::trace::span(crate::trace::Stage::Push);
                     let g_norm = crate::tensor::norm2_sq(&acc) as f64;
                     let stats = compressor.compress_into(&acc, &mut rand, &mut msg);
                     let q_norm = msg.norm2_sq();
@@ -334,8 +362,10 @@ pub(crate) fn run_session(
                         kind,
                     };
                     frame::encode_grad(&mut frame_buf, &header, payload);
+                    push_span.bytes(frame_buf.len() as u64);
                     sent.fetch_add(1, Ordering::Release);
                     let send_failed = conn.send(&frame_buf).is_err();
+                    drop(push_span);
                     // Advance this worker's SSP clock and wake gated peers.
                     {
                         let mut cl = clock_mx.lock().unwrap();
@@ -356,7 +386,7 @@ pub(crate) fn run_session(
         }
         // ---- server (this thread) ----
         let mut t = 0u64;
-        let record_every = (total_pushes / 50).max(1) as u64;
+        let record_every = (total_iterations / 50).max(1) as u64;
         let mut decode_slot = crate::sparsify::SparseGrad::empty(0);
         while let Some((_wid, frame_bytes)) = mux.recv() {
             let frame_bytes = frame_bytes.expect("worker link healthy");
@@ -365,8 +395,11 @@ pub(crate) fn run_session(
                 other => panic!("unexpected message from worker: {other:?}"),
             };
             t += 1;
+            crate::trace::set_round(t as u32);
             let eta = lr / (1.0 + (t as f32 / workers as f32));
             {
+                let mut apply_span = crate::trace::span(crate::trace::Stage::Apply);
+                apply_span.bytes(payload.len() as u64);
                 let mut guard = store.state.lock().unwrap();
                 let (ref mut w, ref mut version) = *guard;
                 if header.kind == 0 {
@@ -423,6 +456,19 @@ pub(crate) fn run_session(
     curve.ledger.set_measured_frames(
         link_counters.iter().map(|c| c.frames_rx() + c.frames_tx()).sum(),
     );
+    curve.ledger.verify();
+    let trace_metrics = recorder.as_ref().map(|rec| {
+        let events = rec.drain();
+        let mut snap = crate::trace::MetricsSnapshot::from_events(&events);
+        for (wid, c) in link_counters.iter().enumerate() {
+            snap.fold_link_counters(&format!("link_w{wid}"), c);
+        }
+        snap.push_gauge("staleness_stalls", stalls.load(Ordering::Relaxed) as f64);
+        if crate::trace::TraceConfig::dump_requested() {
+            let _ = crate::trace::dump_events(&events, "ps", trace_cfg.format());
+        }
+        snap
+    });
     let wire_bytes_by_codec = curve.ledger.wire_bytes_by_codec;
     PsReport {
         curve,
@@ -433,6 +479,7 @@ pub(crate) fn run_session(
         wire_bytes,
         wire_bytes_by_codec,
         measured_bytes,
+        trace_metrics,
     }
 }
 
@@ -464,7 +511,7 @@ mod tests {
     fn ps_converges_with_gspar() {
         let (ds, model) = setup();
         let task = PsTask {
-            total_pushes: 3000,
+            total_iterations: 3000,
             ..PsTask::default()
         };
         let report = session(WireCodec::Raw, 4, gspar()).param_server(&task, &ds, &model);
@@ -484,7 +531,7 @@ mod tests {
     fn ps_entropy_codec_converges_with_fewer_wire_bytes() {
         let (ds, model) = setup();
         let task = PsTask {
-            total_pushes: 2000,
+            total_iterations: 2000,
             ..PsTask::default()
         };
         let raw = session(WireCodec::Raw, 4, gspar()).param_server(&task, &ds, &model);
@@ -516,7 +563,7 @@ mod tests {
     fn ps_dense_and_sparse_reach_similar_loss() {
         let (ds, model) = setup();
         let task = PsTask {
-            total_pushes: 3000,
+            total_iterations: 3000,
             ..PsTask::default()
         };
         let dense = session(WireCodec::Raw, 4, MethodSpec::Dense).param_server(&task, &ds, &model);
@@ -535,7 +582,7 @@ mod tests {
         // the version counter equals the push budget exactly.
         let (ds, model) = setup();
         let task = PsTask {
-            total_pushes: 1200,
+            total_iterations: 1200,
             max_staleness: 4,
             ..PsTask::default()
         };
@@ -553,7 +600,7 @@ mod tests {
         );
         // And the gate must actually have engaged on this contended box.
         let loose = PsTask {
-            total_pushes: 1200,
+            total_iterations: 1200,
             max_staleness: 10_000,
             ..PsTask::default()
         };
@@ -570,7 +617,7 @@ mod tests {
     fn ps_single_worker_is_sequential_sgd() {
         let (ds, model) = setup();
         let task = PsTask {
-            total_pushes: 1500,
+            total_iterations: 1500,
             ..PsTask::default()
         };
         let report =

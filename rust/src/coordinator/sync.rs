@@ -175,6 +175,14 @@ pub(crate) fn run_session(
     let net = session.net();
     let start = Instant::now();
 
+    // Observability: the whole simulated cluster runs on this one thread,
+    // so a single recorder/context covers every worker's spans (per-worker
+    // attribution rides on the span `layer` field). `TraceConfig::Off`
+    // leaves both as cheap no-ops.
+    let trace_cfg = session.trace();
+    let recorder = crate::trace::Recorder::new(&trace_cfg);
+    let _trace_guard = crate::trace::install_opt(recorder.as_ref(), 0);
+
     // Worker → master messages cross the in-process transport as framed
     // wire bytes, so the ledger gains a measured column next to the
     // idealized one (same trait, same framing as the TCP runtime).
@@ -271,6 +279,8 @@ pub(crate) fn run_session(
     });
 
     for t in 1..=total_rounds {
+        crate::trace::set_round(t as u32);
+        let _round_span = crate::trace::span(crate::trace::Stage::Round);
         // SVRG outer loop: refresh the reference point + full gradient.
         if is_svrg && (t - 1) % svrg_inner == 0 {
             w_ref.copy_from_slice(&w);
@@ -284,6 +294,7 @@ pub(crate) fn run_session(
         let comm = comm_schedule.is_comm_round(t as u64) || t == total_rounds;
 
         // ---- Algorithm 1 steps 3–4: local gradients (+ local steps) ----
+        let local_span = crate::trace::span(crate::trace::Stage::LocalStep);
         let var_before = var_meter.value().max(1e-12);
         for worker in workers.iter_mut() {
             worker.sample_batch(task.batch, &mut batch_idx);
@@ -319,6 +330,8 @@ pub(crate) fn run_session(
                 crate::tensor::axpy(-eta_local, &worker.grad, &mut worker.w_local);
             }
         }
+
+        drop(local_span);
 
         // ---- Local rounds end here: zero frames, zero bytes on the wire.
         if comm {
@@ -359,7 +372,10 @@ pub(crate) fn run_session(
                     kind,
                 };
                 let payload: &[u8] = if kind == 0 { &wire } else { &dense_bytes };
+                let mut push_span = crate::trace::span(crate::trace::Stage::Push);
+                push_span.layer(widx as u32);
                 frame::encode_grad(&mut frame_buf, &header, payload);
+                push_span.bytes(frame_buf.len() as u64);
                 worker.conn.send(&frame_buf).expect("master link alive");
                 master_links[widx].recv(&mut rx_frame).expect("worker frame");
                 match frame::decode(&rx_frame).expect("self-encoded") {
@@ -379,6 +395,8 @@ pub(crate) fn run_session(
             }
 
             // ---- Step 6: All-Reduce v_t = (1/M) Σ Q(Σ_local g^m) ----
+            let mut apply_span = crate::trace::span(crate::trace::Stage::Apply);
+            apply_span.bytes(upload_bytes);
             if all_sparse {
                 let out = agg.reduce_decoded(&decoded, upload_bytes, &mut v);
                 sim_time += out.sim_time_s;
@@ -396,6 +414,7 @@ pub(crate) fn run_session(
                 }
                 sim_time += net.round_time_s(&vec![upload_bytes / m as u64; m], (d * 4) as u64);
             }
+            drop(apply_span);
 
             // ---- Optional step 7: re-sparsify the average pre-broadcast ----
             if task.resparsify_broadcast {
@@ -449,6 +468,12 @@ pub(crate) fn run_session(
     curve.ledger.set_measured_frames(
         link_counters.iter().map(|c| c.frames_rx() + c.frames_tx()).sum(),
     );
+    curve.ledger.verify();
+    if let Some(rec) = &recorder {
+        if crate::trace::TraceConfig::dump_requested() {
+            let _ = crate::trace::dump(rec, "sync", trace_cfg.format());
+        }
+    }
     let _ = start;
     curve
 }

@@ -22,6 +22,9 @@
 //! * [`comm`] — a simulated cluster (All-Reduce / Broadcast, α-β cost model);
 //! * [`transport`] — the real one: a pluggable framed transport (`InProc`
 //!   channels / TCP sockets) with per-link byte counters, behind one trait;
+//! * [`trace`] — low-overhead per-stage span recording (solve / sample /
+//!   encode / send / apply …) with Chrome-trace + JSONL exporters and a
+//!   metrics registry, threaded through every coordinator;
 //! * [`opt`] — SGD / SVRG / Adam with the paper's variance-scaled step sizes;
 //! * [`coordinator`] — synchronous data-parallel training (Algorithm 1), the
 //!   SVRG master variant (eq. 15), and the §5.3 asynchronous shared-memory
@@ -54,6 +57,7 @@ pub mod rngkit;
 pub mod runtime;
 pub mod sparsify;
 pub mod tensor;
+pub mod trace;
 pub mod transport;
 
 /// Crate version string (reported by the CLI).

@@ -25,6 +25,7 @@ use gsparse::transport::{Hello, InProcTransport, Listener, TcpTransport, Transpo
 
 fn main() {
     let args = Args::from_env();
+    apply_trace_args(&args);
     let result = match args.subcommand.as_deref() {
         Some("fig") => cmd_fig(&args),
         Some("train") => cmd_train(&args),
@@ -48,6 +49,25 @@ fn main() {
     }
 }
 
+/// `--trace-out STEM` / `--trace json|jsonl|off`: the CLI spellings of the
+/// `GSPARSE_TRACE_OUT` / `GSPARSE_TRACE` environment switches (see
+/// [`gsparse::trace`]). Applied before any session is built so the flags
+/// flow into every coordinator — including, via the CONFIG frame and the
+/// inherited environment, `dist --procs` worker processes, whose per-role
+/// dumps merge with the server's by worker id.
+fn apply_trace_args(args: &Args) {
+    if let Some(mode) = args.get("trace") {
+        std::env::set_var("GSPARSE_TRACE", mode);
+    }
+    if let Some(stem) = args.get("trace-out") {
+        std::env::set_var("GSPARSE_TRACE_OUT", stem);
+        // Dumping implies recording unless the caller pinned a mode.
+        if std::env::var("GSPARSE_TRACE").map(|v| v.is_empty()).unwrap_or(true) {
+            std::env::set_var("GSPARSE_TRACE", "json");
+        }
+    }
+}
+
 fn print_help() {
     println!(
         "gsparse {} — Gradient Sparsification (Wangni et al., NeurIPS 2018)\n\
@@ -65,7 +85,12 @@ fn print_help() {
            worker --addr H:P --id N [--codec C]   one worker process (config from server)\n\
            dist [--transport inproc|tcp] [--procs] [--codec raw|entropy]\n\
                 [--feedback] [--feedback-decay B] [--local-steps H] [--pipeline D] ...\n\
-           version",
+           version\n\
+         \n\
+         OBSERVABILITY (any subcommand):\n\
+           --trace json|jsonl|off    record trace events (env: GSPARSE_TRACE)\n\
+           --trace-out STEM          dump per-role trace files STEM.<role>.trace.json[l]\n\
+                                     at run end (env: GSPARSE_TRACE_OUT; implies --trace json)",
         gsparse::VERSION
     );
 }

@@ -114,6 +114,42 @@ impl CommLedger {
         (self.wire_bytes * 8) as f64 / self.ideal_bits as f64
     }
 
+    /// Cross-column consistency, as a predicate (see [`Self::verify`]):
+    ///
+    /// * the per-codec split sums back to `wire_bytes`;
+    /// * when a transport measured this run, the framed bytes are at least
+    ///   the encoded payload bytes they carried (framing only ever adds),
+    ///   and frames were actually counted alongside them;
+    /// * messages and wire bytes appear together.
+    pub fn consistent(&self) -> bool {
+        let split_ok =
+            self.wire_bytes_by_codec.iter().sum::<u64>() == self.wire_bytes;
+        let measured_ok = self.measured_bytes == 0
+            || (self.measured_bytes >= self.wire_bytes && self.measured_frames > 0);
+        // Zero-byte messages are legal; wire bytes without messages are not.
+        let messages_ok = self.messages > 0 || self.wire_bytes == 0;
+        split_ok && measured_ok && messages_ok
+    }
+
+    /// Debug assertion that the columns agree ([`Self::consistent`]) —
+    /// every coordinator calls this after folding its transport counters
+    /// in, so counter drift (a path that records payloads but misses the
+    /// framed column, or vice versa) fails loudly in debug/test builds
+    /// instead of skewing reported ratios.
+    pub fn verify(&self) {
+        debug_assert!(
+            self.consistent(),
+            "CommLedger columns disagree: ideal_bits={} wire_bytes={} by_codec={:?} \
+             measured_bytes={} measured_frames={} messages={}",
+            self.ideal_bits,
+            self.wire_bytes,
+            self.wire_bytes_by_codec,
+            self.measured_bytes,
+            self.measured_frames,
+            self.messages,
+        );
+    }
+
     pub fn merge(&mut self, other: &CommLedger) {
         self.ideal_bits += other.ideal_bits;
         self.wire_bytes += other.wire_bytes;
@@ -311,6 +347,40 @@ mod tests {
         assert_eq!(a.measured_bytes, 50);
         assert_eq!(a.measured_frames, 5);
         assert_eq!(a.messages, 2);
+    }
+
+    #[test]
+    fn ledger_consistency_predicate() {
+        let mut l = CommLedger::default();
+        assert!(l.consistent(), "empty ledger is consistent");
+        l.verify();
+        l.record_codec(100, 16, WireCodec::Raw);
+        l.set_measured(40);
+        l.set_measured_frames(3);
+        assert!(l.consistent());
+        l.verify();
+        // Framed bytes below the payloads they carried: counter drift.
+        let mut bad = l.clone();
+        bad.set_measured(8);
+        assert!(!bad.consistent());
+        // Measured bytes without any counted frames: drift.
+        let mut bad = l.clone();
+        bad.set_measured_frames(0);
+        assert!(!bad.consistent());
+        // A per-codec split that misses the total: drift.
+        let mut bad = l.clone();
+        bad.wire_bytes_by_codec[WireCodec::Entropy.index()] += 1;
+        assert!(!bad.consistent());
+        // Wire bytes with no recorded messages: drift.
+        let mut bad = CommLedger::default();
+        bad.wire_bytes = 5;
+        bad.wire_bytes_by_codec[0] = 5;
+        assert!(!bad.consistent());
+        // Simulated-only runs (no transport) stay consistent.
+        let mut sim = CommLedger::default();
+        sim.record(64, 8);
+        assert!(sim.consistent());
+        sim.verify();
     }
 
     #[test]

@@ -139,6 +139,8 @@ impl BatchCompressEngine {
 
         // Phase 1 — per-layer solves into the shared arena, consuming the
         // uniform stream exactly like the per-layer path.
+        let mut solve_span = crate::trace::span(crate::trace::Stage::Solve);
+        solve_span.layer(layers.len() as u32);
         let mut off = 0usize;
         for (g, out) in layers.iter().zip(outs.iter_mut()) {
             let d = g.len();
@@ -156,7 +158,10 @@ impl BatchCompressEngine {
             off += d;
         }
 
+        drop(solve_span);
         // Phase 2 — one sampling pass over every layer's chunks.
+        let mut sample_span = crate::trace::span(crate::trace::Stage::Sample);
+        sample_span.layer(layers.len() as u32);
         let (shard_len, parallel_min_d, max_threads) = self.engine.geometry();
         self.chunk_meta.clear();
         let mut goff = 0usize;
@@ -223,7 +228,11 @@ impl BatchCompressEngine {
                     }
                 }));
             }
-            pool.run(jobs);
+            {
+                let mut dispatch = crate::trace::span(crate::trace::Stage::ShardDispatch);
+                dispatch.bytes(nchunks as u64);
+                pool.run(jobs);
+            }
             for (sh, meta) in self.shards[..nchunks].iter().zip(self.chunk_meta.iter()) {
                 let out = &mut *outs[meta.layer];
                 out.exact.extend_from_slice(&sh.exact);

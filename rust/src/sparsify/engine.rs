@@ -113,6 +113,8 @@ fn run_prob_pass<F>(
             }
         }));
     }
+    let mut dispatch = crate::trace::span(crate::trace::Stage::ShardDispatch);
+    dispatch.bytes(nchunks as u64);
     pool.run(jobs);
 }
 
@@ -279,6 +281,7 @@ impl CompressEngine {
         // probability write collapses to the pointwise formula and fuses
         // with sampling into a single sweep; otherwise the solver finishes
         // normally and the shared sampling pass below runs as before.
+        let solve_span = crate::trace::span(crate::trace::Stage::Solve);
         let pv = match self.mode {
             EngineMode::ClosedForm { eps } => match self.closed_form_plan_chunked(g, eps) {
                 None => ProbVector {
@@ -288,6 +291,8 @@ impl CompressEngine {
                     variance: 0.0,
                 },
                 Some(plan) if plan.k == 0 => {
+                    drop(solve_span);
+                    let _sample_span = crate::trace::span(crate::trace::Stage::Sample);
                     let pv = self.sample_fused_closed_form(g, &plan, out);
                     out.shared_mag = pv.inv_lambda;
                     return pv;
@@ -296,7 +301,10 @@ impl CompressEngine {
             },
             EngineMode::Greedy { rho, iters } => self.greedy_probs_chunked(g, rho, iters),
         };
+        drop(solve_span);
         out.shared_mag = pv.inv_lambda;
+        let mut sample_span = crate::trace::span(crate::trace::Stage::Sample);
+        sample_span.layer(d as u32);
 
         let shard_len = self.shard_len;
         let nchunks = d.div_ceil(shard_len);
@@ -353,7 +361,11 @@ impl CompressEngine {
                     }
                 }));
             }
-            pool.run(jobs);
+            {
+                let mut dispatch = crate::trace::span(crate::trace::Stage::ShardDispatch);
+                dispatch.bytes(nchunks as u64);
+                pool.run(jobs);
+            }
             for sh in shards.iter() {
                 out.exact.extend_from_slice(&sh.exact);
                 out.shared.extend_from_slice(&sh.shared);
@@ -580,7 +592,11 @@ impl CompressEngine {
                     }
                 }));
             }
-            pool.run(jobs);
+            {
+                let mut dispatch = crate::trace::span(crate::trace::Stage::ShardDispatch);
+                dispatch.bytes(nchunks as u64);
+                pool.run(jobs);
+            }
             for sh in shards.iter() {
                 out.exact.extend_from_slice(&sh.exact);
                 out.shared.extend_from_slice(&sh.shared);

@@ -1,0 +1,1105 @@
+//! `gsparse::trace` — low-overhead, allocation-free-in-steady-state
+//! instrumentation for the whole runtime.
+//!
+//! The paper's argument is a *time*/accuracy trade, but until this module
+//! the runtime could only report bytes ([`crate::metrics::CommLedger`]):
+//! where a round's wall-clock goes — solve vs. sample vs. encode vs. send
+//! vs. decode vs. apply — was invisible, and the PR-6 pipeline overlap was
+//! only observable through a bench-side ratio. This module makes it
+//! directly measurable:
+//!
+//! * a [`Recorder`] collects fixed-size [`Event`] records into **per-thread
+//!   ring buffers** (one `Mutex<Ring>` per registered thread, only ever
+//!   locked by its owner in steady state and by the exporter at the end, so
+//!   recording never blocks the hot loop — a contended `try_lock` drops the
+//!   event instead of waiting);
+//! * [`span`] / [`counter`] are the universal instrumentation points: when
+//!   no recorder is installed on the calling thread they cost one relaxed
+//!   atomic load ([`TraceConfig::Off`] compiles to near-no-ops — pinned by
+//!   `tests/trace.rs` and the `trace_micro` bench);
+//! * exporters turn a drained event list into Chrome `trace_event` JSON
+//!   (load in `chrome://tracing` / Perfetto) or JSONL span dumps, plus a
+//!   [`MetricsSnapshot`] of counters/gauges/log₂-bucketed histograms that
+//!   the reports embed and the benches write into `BENCH_trace.json`.
+//!
+//! ## Event record layout
+//!
+//! One event is a fixed 40-byte record (logical layout; `repr(Rust)` may
+//! reorder fields in memory, the exporters use the field names):
+//!
+//! ```text
+//! byte   0        8        16       24      28      32     33    34    36
+//!        ├────────┼────────┼────────┼───────┼───────┼──────┼─────┼─────┤
+//!        │t_start │ t_end  │ bytes  │ round │ layer │stage │ wrk │ tid │
+//!        │ ns u64 │ ns u64 │  u64   │  u32  │  u32  │  u8  │ u16 │ u16 │
+//!        └────────┴────────┴────────┴───────┴───────┴──────┴─────┴─────┘
+//! ```
+//!
+//! * `t_start`/`t_end` — nanoseconds on the recorder's monotonic clock
+//!   (every timestamp in one recorder shares the same `Instant` origin, so
+//!   spans from different threads of one process align exactly);
+//! * `bytes` — stage-dependent payload size (frame bytes for
+//!   `FrameTx`/`FrameRx`, wire bytes for `Encode`, chunk count for
+//!   `ShardDispatch`, zero where meaningless);
+//! * `round`/`layer` — ambient context set by the coordinators via
+//!   [`set_round`] and per-span via [`Span::layer`];
+//! * `stage` — the [`Stage`] id; `wrk`/`tid` — the worker id the thread
+//!   was installed with and the recorder-local thread index (these become
+//!   `pid`/`tid` lanes in the Chrome export, which is what makes traces
+//!   from separate worker processes mergeable by concatenation).
+//!
+//! ## Determinism
+//!
+//! Recording only ever *reads* the data path (lengths, counts) and writes
+//! into trace-private buffers; it never consumes RNG draws, reorders float
+//! accumulation, or adds wire frames. Tracing on vs. off is therefore
+//! bitwise-identical on every coordinator path — pinned by
+//! `tests/trace.rs` across all four coordinators.
+//!
+//! ## Turning it on
+//!
+//! Programmatic: `Session::builder().trace(TraceConfig::on())`, then read
+//! back events from the session's recorder. Environment (the CI hook):
+//! `GSPARSE_TRACE=json|jsonl` enables recording in every session built
+//! without an explicit config; setting `GSPARSE_TRACE_OUT=<stem>`
+//! *additionally* makes every coordinator dump its trace at run end to
+//! `<stem>.<role>.trace.json[l]` (recording and dumping are separate
+//! switches so a whole test suite can run traced without processes racing
+//! on dump files). The `gsparse` binary's `--trace-out STEM` flag sets
+//! both. The distributed runtime ships the config to worker processes in
+//! the CONFIG frame (v5), so a multi-process run produces one trace file
+//! per role keyed by worker id — mergeable by concatenating their
+//! `traceEvents` arrays.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::transport::LinkCounters;
+
+/// Default ring capacity per registered thread (events, not bytes).
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+/// Number of log₂ duration buckets a [`Histogram`] carries. Bucket `i`
+/// counts spans with `duration_ns in [2^i, 2^(i+1))` (bucket 0 also takes
+/// zero-length counter events); 40 buckets cover up to ~18 minutes.
+pub const HISTOGRAM_BUCKETS: usize = 40;
+
+/// Export format of the run-end trace dump.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// Chrome `trace_event` JSON (open in `chrome://tracing` / Perfetto).
+    Chrome,
+    /// One JSON object per span, one per line.
+    Jsonl,
+}
+
+/// Whether (and how) a session records trace events.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TraceConfig {
+    /// No recorder is created; every instrumentation point reduces to one
+    /// relaxed atomic load (and not even that when no recorder exists
+    /// process-wide).
+    #[default]
+    Off,
+    /// Record into per-thread rings of `capacity` events; run-end dumps
+    /// (when requested via the environment / CLI) use `format`.
+    On {
+        /// Ring capacity per registered thread; the oldest events are
+        /// overwritten (and counted as dropped) once a ring is full.
+        capacity: usize,
+        /// Export format for run-end dumps.
+        format: TraceFormat,
+    },
+}
+
+impl TraceConfig {
+    /// Tracing on, with the default capacity and Chrome-JSON dumps.
+    pub fn on() -> Self {
+        TraceConfig::On {
+            capacity: DEFAULT_CAPACITY,
+            format: TraceFormat::Chrome,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        matches!(self, TraceConfig::On { .. })
+    }
+
+    /// Read the trace switch from `GSPARSE_TRACE` — the hook the CI matrix
+    /// uses. Unset or empty (or `off`/`0`) means [`TraceConfig::Off`];
+    /// `json`/`chrome` and `jsonl` enable the matching dump format;
+    /// anything else panics so a typo'd CI matrix cannot silently run the
+    /// wrong configuration (the same contract as
+    /// [`crate::api::pipeline_from_env`]).
+    pub fn from_env() -> Self {
+        match std::env::var("GSPARSE_TRACE") {
+            Err(_) => TraceConfig::Off,
+            Ok(v) => match v.as_str() {
+                "" | "off" | "0" => TraceConfig::Off,
+                "json" | "chrome" | "1" | "on" => TraceConfig::on(),
+                "jsonl" => TraceConfig::On {
+                    capacity: DEFAULT_CAPACITY,
+                    format: TraceFormat::Jsonl,
+                },
+                _ => panic!("GSPARSE_TRACE must be json|jsonl|off, got {v:?}"),
+            },
+        }
+    }
+
+    /// Whether run-end dumps were requested: `GSPARSE_TRACE_OUT` is set
+    /// and non-empty. Recording (`GSPARSE_TRACE`) and dumping are separate
+    /// opt-ins — the CI matrix traces every test without any of them
+    /// writing files; only dedicated runs (the `--trace-out` CLI flag sets
+    /// both variables) dump.
+    pub fn dump_requested() -> bool {
+        matches!(std::env::var("GSPARSE_TRACE_OUT"), Ok(v) if !v.is_empty())
+    }
+
+    /// The CONFIG-frame encoding: mode byte + u32 ring capacity.
+    pub(crate) fn wire_bytes(&self) -> [u8; 5] {
+        let (mode, cap) = match *self {
+            TraceConfig::Off => (0u8, 0u32),
+            TraceConfig::On {
+                capacity,
+                format: TraceFormat::Chrome,
+            } => (1, capacity as u32),
+            TraceConfig::On {
+                capacity,
+                format: TraceFormat::Jsonl,
+            } => (2, capacity as u32),
+        };
+        let mut out = [0u8; 5];
+        out[0] = mode;
+        out[1..5].copy_from_slice(&cap.to_le_bytes());
+        out
+    }
+
+    /// Decode the CONFIG-frame bytes; `None` on an unknown mode byte.
+    pub(crate) fn from_wire(mode: u8, capacity: u32) -> Option<Self> {
+        match mode {
+            0 => Some(TraceConfig::Off),
+            1 => Some(TraceConfig::On {
+                capacity: (capacity as usize).max(1),
+                format: TraceFormat::Chrome,
+            }),
+            2 => Some(TraceConfig::On {
+                capacity: (capacity as usize).max(1),
+                format: TraceFormat::Jsonl,
+            }),
+            _ => None,
+        }
+    }
+
+    /// The dump format, defaulting to Chrome when off.
+    pub fn format(&self) -> TraceFormat {
+        match *self {
+            TraceConfig::On { format, .. } => format,
+            TraceConfig::Off => TraceFormat::Chrome,
+        }
+    }
+}
+
+/// Stage id of an event — the vocabulary shared by every layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Stage {
+    /// One coordinator synchronization round (block), end to end.
+    Round = 0,
+    /// Probability solve (Algorithm 2/3) inside the compress engines.
+    Solve = 1,
+    /// Bernoulli sampling sweep (including the fused solve+sample path).
+    Sample = 2,
+    /// Wire encoding (codec or `WireBatch` sub-message).
+    Encode = 3,
+    /// Wire decoding on the receiving side.
+    Decode = 4,
+    /// Applying a received update to the weights.
+    Apply = 5,
+    /// One local gradient step (no wire traffic).
+    LocalStep = 6,
+    /// Weight pull: request + waiting for + decoding fresh weights.
+    Pull = 7,
+    /// Gradient push: framing + handing the payload to the connection.
+    Push = 8,
+    /// Leader/server time spent waiting on stragglers (recv order).
+    BarrierWait = 9,
+    /// A `ShardPool` dispatch: jobs handed out → all chunk tails joined
+    /// (`bytes` carries the chunk count).
+    ShardDispatch = 10,
+    /// Transport handshake (hello exchange + validation).
+    Handshake = 11,
+    /// One framed transport send (`bytes` = payload + prefix). Counter.
+    FrameTx = 12,
+    /// One framed transport receive. Counter.
+    FrameRx = 13,
+    /// A vectored (scatter/gather, copy-skipping) frame send. Counter.
+    VectoredTx = 14,
+}
+
+/// Every stage, in id order (export tables iterate this).
+pub const STAGES: [Stage; 15] = [
+    Stage::Round,
+    Stage::Solve,
+    Stage::Sample,
+    Stage::Encode,
+    Stage::Decode,
+    Stage::Apply,
+    Stage::LocalStep,
+    Stage::Pull,
+    Stage::Push,
+    Stage::BarrierWait,
+    Stage::ShardDispatch,
+    Stage::Handshake,
+    Stage::FrameTx,
+    Stage::FrameRx,
+    Stage::VectoredTx,
+];
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Round => "round",
+            Stage::Solve => "solve",
+            Stage::Sample => "sample",
+            Stage::Encode => "encode",
+            Stage::Decode => "decode",
+            Stage::Apply => "apply",
+            Stage::LocalStep => "local_step",
+            Stage::Pull => "pull",
+            Stage::Push => "push",
+            Stage::BarrierWait => "barrier_wait",
+            Stage::ShardDispatch => "shard_dispatch",
+            Stage::Handshake => "handshake",
+            Stage::FrameTx => "frame_tx",
+            Stage::FrameRx => "frame_rx",
+            Stage::VectoredTx => "vectored_tx",
+        }
+    }
+}
+
+/// One fixed-size trace record. See the module docs for the layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub t_start_ns: u64,
+    pub t_end_ns: u64,
+    pub bytes: u64,
+    pub round: u32,
+    pub layer: u32,
+    pub stage: Stage,
+    pub worker: u16,
+    pub tid: u16,
+}
+
+impl Event {
+    pub fn duration_ns(&self) -> u64 {
+        self.t_end_ns.saturating_sub(self.t_start_ns)
+    }
+}
+
+/// Worker id the coordinators install leader/server threads under (worker
+/// threads use their real id).
+pub const SERVER_WORKER: u16 = u16::MAX;
+
+// ---------------------------------------------------------------------------
+// Recorder internals
+// ---------------------------------------------------------------------------
+
+/// Count of live recorders process-wide: the global fast-path gate. When
+/// zero, [`span`]/[`counter`] return after a single relaxed load.
+static ACTIVE_RECORDERS: AtomicUsize = AtomicUsize::new(0);
+
+#[inline(always)]
+fn tracing_possible() -> bool {
+    ACTIVE_RECORDERS.load(Ordering::Relaxed) != 0
+}
+
+/// Fixed-capacity overwrite-oldest ring of events.
+#[derive(Debug)]
+struct Ring {
+    buf: Vec<Event>,
+    /// Next write slot.
+    next: usize,
+    /// Live events (≤ capacity).
+    len: usize,
+    /// Events overwritten because the ring was full.
+    dropped: u64,
+}
+
+impl Ring {
+    fn with_capacity(capacity: usize) -> Self {
+        Self {
+            buf: Vec::with_capacity(capacity),
+            next: 0,
+            len: 0,
+            dropped: 0,
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, ev: Event) {
+        let cap = self.buf.capacity();
+        if self.buf.len() < cap {
+            self.buf.push(ev);
+            self.len += 1;
+        } else {
+            self.buf[self.next] = ev;
+            self.dropped += 1;
+        }
+        self.next = (self.next + 1) % cap.max(1);
+    }
+
+    /// Events in record order (oldest first).
+    fn drain_ordered(&mut self) -> Vec<Event> {
+        let mut out = Vec::with_capacity(self.len);
+        if self.buf.len() < self.buf.capacity() {
+            out.extend_from_slice(&self.buf);
+        } else {
+            out.extend_from_slice(&self.buf[self.next..]);
+            out.extend_from_slice(&self.buf[..self.next]);
+        }
+        self.buf.clear();
+        self.next = 0;
+        self.len = 0;
+        out
+    }
+}
+
+#[derive(Debug)]
+struct ThreadBuf {
+    worker: u16,
+    tid: u16,
+    ring: Mutex<Ring>,
+}
+
+#[derive(Debug)]
+struct Shared {
+    capacity: usize,
+    origin: Instant,
+    threads: Mutex<Vec<Arc<ThreadBuf>>>,
+    next_tid: AtomicU64,
+}
+
+impl Drop for Shared {
+    fn drop(&mut self) {
+        ACTIVE_RECORDERS.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Owns the per-thread rings of one traced run. Cloning yields another
+/// handle to the same buffers (it is an `Arc` inside), which is how one
+/// recorder serves every thread of a coordinator.
+#[derive(Clone, Debug)]
+pub struct Recorder {
+    shared: Arc<Shared>,
+}
+
+impl Recorder {
+    /// Create a recorder for `cfg`; `None` when tracing is off (the
+    /// coordinators thread that `Option` through untouched).
+    pub fn new(cfg: &TraceConfig) -> Option<Self> {
+        match *cfg {
+            TraceConfig::Off => None,
+            TraceConfig::On { capacity, .. } => {
+                ACTIVE_RECORDERS.fetch_add(1, Ordering::Relaxed);
+                Some(Self {
+                    shared: Arc::new(Shared {
+                        capacity: capacity.max(1),
+                        origin: Instant::now(),
+                        threads: Mutex::new(Vec::new()),
+                        next_tid: AtomicU64::new(0),
+                    }),
+                })
+            }
+        }
+    }
+
+    /// Drain every thread's ring into one list sorted by start time.
+    /// Threads may keep recording afterwards (their rings restart empty).
+    pub fn drain(&self) -> Vec<Event> {
+        let threads = self.shared.threads.lock().expect("trace thread registry");
+        let mut out = Vec::new();
+        for t in threads.iter() {
+            if let Ok(mut ring) = t.ring.lock() {
+                out.extend(ring.drain_ordered());
+            }
+        }
+        out.sort_by_key(|e| (e.t_start_ns, e.tid));
+        out
+    }
+
+    /// Allocate a reusable per-thread registration under `worker`.
+    ///
+    /// Coordinators that spawn fresh OS threads every round (the cluster's
+    /// scoped comm threads) create one handle per logical worker up front
+    /// and re-install it on whichever thread runs that worker each round —
+    /// the ring is allocated once per worker, not once per round, keeping
+    /// the steady state allocation-free. A handle must not be installed on
+    /// two threads at once (events would contend on the ring's `try_lock`
+    /// and be dropped, never corrupted).
+    pub fn thread_handle(&self, worker: u16) -> ThreadHandle {
+        let tid = self.shared.next_tid.fetch_add(1, Ordering::Relaxed) as u16;
+        let buf = Arc::new(ThreadBuf {
+            worker,
+            tid,
+            ring: Mutex::new(Ring::with_capacity(self.shared.capacity)),
+        });
+        self.shared
+            .threads
+            .lock()
+            .expect("trace thread registry")
+            .push(Arc::clone(&buf));
+        ThreadHandle {
+            buf,
+            origin: self.shared.origin,
+        }
+    }
+
+    /// Total events overwritten across all rings (ring too small).
+    pub fn dropped(&self) -> u64 {
+        let threads = self.shared.threads.lock().expect("trace thread registry");
+        threads
+            .iter()
+            .map(|t| t.ring.lock().map(|r| r.dropped).unwrap_or(0))
+            .sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local installation + recording
+// ---------------------------------------------------------------------------
+
+struct ThreadCtx {
+    buf: Arc<ThreadBuf>,
+    origin: Instant,
+    round: u32,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<ThreadCtx>> = const { RefCell::new(None) };
+}
+
+/// Uninstalls the thread's recorder context on drop (scoped-thread safe).
+#[must_use = "dropping the guard uninstalls the recorder from this thread"]
+pub struct InstallGuard {
+    installed: bool,
+}
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        if self.installed {
+            CURRENT.with(|c| *c.borrow_mut() = None);
+        }
+    }
+}
+
+/// A reusable per-thread registration (see [`Recorder::thread_handle`]).
+/// Cloning shares the same ring.
+#[derive(Clone, Debug)]
+pub struct ThreadHandle {
+    buf: Arc<ThreadBuf>,
+    origin: Instant,
+}
+
+/// Register the calling thread with `recorder` under `worker`: allocates
+/// this thread's ring (the one non-steady-state allocation) and makes
+/// [`span`]/[`counter`] record into it until the guard drops.
+pub fn install(recorder: &Recorder, worker: u16) -> InstallGuard {
+    install_handle(&recorder.thread_handle(worker))
+}
+
+/// Install a pre-allocated [`ThreadHandle`] on the calling thread — no
+/// allocation, so round-scoped threads can re-register for free.
+pub fn install_handle(handle: &ThreadHandle) -> InstallGuard {
+    CURRENT.with(|c| {
+        *c.borrow_mut() = Some(ThreadCtx {
+            buf: Arc::clone(&handle.buf),
+            origin: handle.origin,
+            round: 0,
+        })
+    });
+    InstallGuard { installed: true }
+}
+
+/// [`install_handle`] through an `Option` (mirrors [`install_opt`]).
+pub fn install_handle_opt(handle: Option<&ThreadHandle>) -> InstallGuard {
+    match handle {
+        Some(h) => install_handle(h),
+        None => InstallGuard { installed: false },
+    }
+}
+
+/// [`install`] through an `Option` — the no-recorder case returns an inert
+/// guard, which is what lets coordinators write one unconditional line.
+pub fn install_opt(recorder: Option<&Recorder>, worker: u16) -> InstallGuard {
+    match recorder {
+        Some(r) => install(r, worker),
+        None => InstallGuard { installed: false },
+    }
+}
+
+/// Set the ambient round index recorded into subsequent events from this
+/// thread. No-op when no recorder is installed.
+pub fn set_round(round: u32) {
+    if !tracing_possible() {
+        return;
+    }
+    CURRENT.with(|c| {
+        if let Some(ctx) = c.borrow_mut().as_mut() {
+            ctx.round = round;
+        }
+    });
+}
+
+#[inline]
+fn record(stage: Stage, t0: Instant, t1: Option<Instant>, bytes: u64, layer: u32) {
+    CURRENT.with(|c| {
+        let borrow = c.borrow();
+        let Some(ctx) = borrow.as_ref() else { return };
+        let start = t0.duration_since(ctx.origin).as_nanos() as u64;
+        let end = t1
+            .map(|t| t.duration_since(ctx.origin).as_nanos() as u64)
+            .unwrap_or(start);
+        let ev = Event {
+            t_start_ns: start,
+            t_end_ns: end,
+            bytes,
+            round: ctx.round,
+            layer,
+            stage,
+            worker: ctx.buf.worker,
+            tid: ctx.buf.tid,
+        };
+        // Only the owning thread and the run-end exporter ever take this
+        // lock, so steady state is uncontended; under contention the event
+        // is dropped rather than ever blocking the hot loop.
+        if let Ok(mut ring) = ctx.buf.ring.try_lock() {
+            ring.push(ev);
+        }
+    });
+}
+
+/// An in-flight span; records on drop. Inert (one branch on drop) when the
+/// thread has no installed recorder.
+pub struct Span {
+    t0: Option<Instant>,
+    stage: Stage,
+    bytes: u64,
+    layer: u32,
+}
+
+impl Span {
+    /// Attach a byte count (meaning is stage-specific; see [`Event`]).
+    #[inline]
+    pub fn bytes(&mut self, bytes: u64) {
+        self.bytes = bytes;
+    }
+
+    /// Attach a layer index (multi-layer coordinators).
+    #[inline]
+    pub fn layer(&mut self, layer: u32) {
+        self.layer = layer;
+    }
+}
+
+impl Drop for Span {
+    #[inline]
+    fn drop(&mut self) {
+        if let Some(t0) = self.t0 {
+            record(self.stage, t0, Some(Instant::now()), self.bytes, self.layer);
+        }
+    }
+}
+
+/// Open a span for `stage`. When tracing is off this is one relaxed atomic
+/// load plus an inert guard; when on, the clock is read at open and close.
+#[inline]
+pub fn span(stage: Stage) -> Span {
+    let t0 = if tracing_possible() && CURRENT.with(|c| c.borrow().is_some()) {
+        Some(Instant::now())
+    } else {
+        None
+    };
+    Span {
+        t0,
+        stage,
+        bytes: 0,
+        layer: 0,
+    }
+}
+
+/// Record a zero-duration counter event (e.g. one transport frame).
+#[inline]
+pub fn counter(stage: Stage, bytes: u64) {
+    if !tracing_possible() {
+        return;
+    }
+    let now = Instant::now();
+    record(stage, now, None, bytes, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Exporters
+// ---------------------------------------------------------------------------
+
+fn json_escape(s: &str, out: &mut String) {
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Render events as Chrome `trace_event` JSON ("X" complete events;
+/// `ts`/`dur` in microseconds). `pid` is the worker id and `tid` the
+/// recorder-local thread index, so per-worker traces from separate
+/// processes merge by concatenating their `traceEvents` arrays.
+pub fn chrome_trace_json(events: &[Event]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(events.len() * 96 + 64);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"name\":\"{}\",\"cat\":\"gsparse\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\
+             \"pid\":{},\"tid\":{},\"args\":{{\"round\":{},\"layer\":{},\"bytes\":{}}}}}",
+            e.stage.name(),
+            e.t_start_ns as f64 / 1e3,
+            e.duration_ns() as f64 / 1e3,
+            e.worker,
+            e.tid,
+            e.round,
+            e.layer,
+            e.bytes
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Render events as JSONL: one span object per line.
+pub fn jsonl(events: &[Event]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(events.len() * 128);
+    for e in events {
+        let _ = writeln!(
+            out,
+            "{{\"stage\":\"{}\",\"worker\":{},\"tid\":{},\"round\":{},\"layer\":{},\
+             \"t_start_ns\":{},\"t_end_ns\":{},\"bytes\":{}}}",
+            e.stage.name(),
+            e.worker,
+            e.tid,
+            e.round,
+            e.layer,
+            e.t_start_ns,
+            e.t_end_ns,
+            e.bytes
+        );
+    }
+    out
+}
+
+/// The dump-file stem: `GSPARSE_TRACE_OUT`, defaulting to `gsparse_trace`.
+pub fn out_stem() -> String {
+    match std::env::var("GSPARSE_TRACE_OUT") {
+        Ok(v) if !v.is_empty() => v,
+        _ => "gsparse_trace".to_string(),
+    }
+}
+
+/// Drain `recorder` and write `<stem>.<role>.trace.json[l]`; returns the
+/// path written. The coordinators call this at run end when the
+/// environment asked for dumps ([`TraceConfig::dump_requested`]).
+pub fn dump(
+    recorder: &Recorder,
+    role: &str,
+    format: TraceFormat,
+) -> std::io::Result<std::path::PathBuf> {
+    dump_events(&recorder.drain(), role, format)
+}
+
+/// [`dump`] for an already-drained event list — what coordinators that
+/// also roll the events into a [`MetricsSnapshot`] use, so one drain
+/// serves both.
+pub fn dump_events(
+    events: &[Event],
+    role: &str,
+    format: TraceFormat,
+) -> std::io::Result<std::path::PathBuf> {
+    let (suffix, body) = match format {
+        TraceFormat::Chrome => (".trace.json", chrome_trace_json(events)),
+        TraceFormat::Jsonl => (".trace.jsonl", jsonl(events)),
+    };
+    let path = std::path::PathBuf::from(format!("{}.{role}{suffix}", out_stem()));
+    std::fs::write(&path, body)?;
+    Ok(path)
+}
+
+// ---------------------------------------------------------------------------
+// Metrics snapshot
+// ---------------------------------------------------------------------------
+
+/// A log₂-bucketed duration histogram: bucket `i` counts spans whose
+/// duration in nanoseconds satisfies `floor(log2(max(ns, 1))) == i`
+/// (fixed boundaries `[2^i, 2^(i+1))`, so snapshots from different runs
+/// merge bucket-by-bucket).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    pub name: String,
+    pub count: u64,
+    pub sum_ns: u64,
+    pub buckets: [u64; HISTOGRAM_BUCKETS],
+}
+
+impl Histogram {
+    fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            count: 0,
+            sum_ns: 0,
+            buckets: [0; HISTOGRAM_BUCKETS],
+        }
+    }
+
+    fn observe(&mut self, ns: u64) {
+        self.count += 1;
+        self.sum_ns += ns;
+        let b = (63 - ns.max(1).leading_zeros() as usize).min(HISTOGRAM_BUCKETS - 1);
+        self.buckets[b] += 1;
+    }
+
+    /// Lower bound of bucket `i` in nanoseconds.
+    pub fn bucket_lower_bound_ns(i: usize) -> u64 {
+        1u64 << i
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+}
+
+/// A periodic roll-up of a trace: per-stage counters (event and byte
+/// totals), free-form gauges, and per-stage duration [`Histogram`]s. The
+/// reports embed one and the benches write one into `BENCH_trace.json`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// `(name, value)` monotone counters.
+    pub counters: Vec<(String, u64)>,
+    /// `(name, value)` point-in-time gauges.
+    pub gauges: Vec<(String, f64)>,
+    /// Per-stage span-duration histograms (only stages that occurred).
+    pub histograms: Vec<Histogram>,
+}
+
+impl MetricsSnapshot {
+    /// Roll `events` up into per-stage counters + histograms.
+    pub fn from_events(events: &[Event]) -> Self {
+        let mut snap = MetricsSnapshot::default();
+        let mut by_stage: Vec<Option<(u64, u64, Histogram)>> =
+            (0..STAGES.len()).map(|_| None).collect();
+        let mut max_round = 0u32;
+        for e in events {
+            let idx = e.stage as usize;
+            let slot = by_stage[idx].get_or_insert_with(|| {
+                (0, 0, Histogram::new(&format!("{}_duration_ns", e.stage.name())))
+            });
+            slot.0 += 1;
+            slot.1 += e.bytes;
+            slot.2.observe(e.duration_ns());
+            max_round = max_round.max(e.round);
+        }
+        snap.counters.push(("events_total".into(), events.len() as u64));
+        let rounds_seen = max_round as u64 + u64::from(!events.is_empty());
+        snap.counters.push(("rounds_seen".into(), rounds_seen));
+        for (stage, slot) in STAGES.iter().zip(by_stage) {
+            if let Some((n, bytes, hist)) = slot {
+                snap.counters.push((format!("{}_events", stage.name()), n));
+                snap.counters.push((format!("{}_bytes", stage.name()), bytes));
+                snap.histograms.push(hist);
+            }
+        }
+        snap
+    }
+
+    /// Fold one link's transport counters into the registry under `label`
+    /// (e.g. `link_w0`): framed bytes and frames in both directions plus
+    /// the vectored-send count — the `LinkCounters` columns, so the
+    /// snapshot is the one place with both timing and byte truth.
+    pub fn fold_link_counters(&mut self, label: &str, c: &LinkCounters) {
+        self.counters.push((format!("{label}_bytes_tx"), c.bytes_tx()));
+        self.counters.push((format!("{label}_bytes_rx"), c.bytes_rx()));
+        self.counters.push((format!("{label}_frames_tx"), c.frames_tx()));
+        self.counters.push((format!("{label}_frames_rx"), c.frames_rx()));
+        self.counters
+            .push((format!("{label}_frames_vectored"), c.frames_vectored()));
+    }
+
+    pub fn push_gauge(&mut self, name: &str, value: f64) {
+        self.gauges.push((name.to_string(), value));
+    }
+
+    /// Counter value by name (test/driver convenience).
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    /// Histogram by name (test/driver convenience).
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.iter().find(|h| h.name == name)
+    }
+
+    /// Hand-rolled JSON (the offline image has no serde): a schema-stable
+    /// object `{"schema":"gsparse-metrics-v1","counters":{...},
+    /// "gauges":{...},"histograms":[{"name":…,"count":…,"sum_ns":…,
+    /// "buckets":[…]}]}` with log₂ bucket boundaries implied by index.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        out.push_str("{\"schema\":\"gsparse-metrics-v1\",\"counters\":{");
+        for (i, (name, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            json_escape(name, &mut out);
+            let _ = write!(out, "\":{v}");
+        }
+        out.push_str("},\"gauges\":{");
+        for (i, (name, v)) in self.gauges.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            json_escape(name, &mut out);
+            if v.is_finite() {
+                let _ = write!(out, "\":{v}");
+            } else {
+                out.push_str("\":null");
+            }
+        }
+        out.push_str("},\"histograms\":[");
+        for (i, h) in self.histograms.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("{\"name\":\"");
+            json_escape(&h.name, &mut out);
+            let _ = write!(out, "\",\"count\":{},\"sum_ns\":{},\"buckets\":[", h.count, h.sum_ns);
+            for (j, b) in h.buckets.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "{b}");
+            }
+            out.push_str("]}");
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_config_creates_no_recorder_and_spans_are_inert() {
+        assert!(Recorder::new(&TraceConfig::Off).is_none());
+        // No recorder installed on this thread: spans and counters are
+        // no-ops whatever other tests' recorders are doing.
+        let mut s = span(Stage::Solve);
+        s.bytes(10);
+        drop(s);
+        counter(Stage::FrameTx, 4);
+    }
+
+    #[test]
+    fn spans_record_with_ambient_context() {
+        let rec = Recorder::new(&TraceConfig::on()).unwrap();
+        {
+            let _g = install(&rec, 3);
+            set_round(7);
+            {
+                let mut s = span(Stage::Encode);
+                s.bytes(128);
+                s.layer(2);
+            }
+            counter(Stage::FrameTx, 36);
+        }
+        let events = rec.drain();
+        assert_eq!(events.len(), 2);
+        let enc = events.iter().find(|e| e.stage == Stage::Encode).unwrap();
+        assert_eq!((enc.worker, enc.round, enc.layer, enc.bytes), (3, 7, 2, 128));
+        assert!(enc.t_end_ns >= enc.t_start_ns);
+        let tx = events.iter().find(|e| e.stage == Stage::FrameTx).unwrap();
+        assert_eq!(tx.bytes, 36);
+        assert_eq!(tx.duration_ns(), 0);
+        // After the guard dropped, recording stops.
+        drop(span(Stage::Solve));
+        assert!(rec.drain().is_empty());
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let rec = Recorder::new(&TraceConfig::On {
+            capacity: 4,
+            format: TraceFormat::Chrome,
+        })
+        .unwrap();
+        let _g = install(&rec, 0);
+        for i in 0..10u64 {
+            counter(Stage::FrameTx, i);
+        }
+        assert_eq!(rec.dropped(), 6);
+        let events = rec.drain();
+        assert_eq!(events.len(), 4);
+        // Oldest-first order of the surviving tail.
+        let bytes: Vec<u64> = events.iter().map(|e| e.bytes).collect();
+        assert_eq!(bytes, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn multi_thread_events_share_one_clock_origin() {
+        let rec = Recorder::new(&TraceConfig::on()).unwrap();
+        let _g = install(&rec, SERVER_WORKER);
+        drop(span(Stage::Round));
+        std::thread::scope(|scope| {
+            for wid in 0..2u16 {
+                let rec = rec.clone();
+                scope.spawn(move || {
+                    let _g = install(&rec, wid);
+                    set_round(1);
+                    drop(span(Stage::Solve));
+                });
+            }
+        });
+        let events = rec.drain();
+        assert_eq!(events.len(), 3);
+        let tids: std::collections::HashSet<u16> = events.iter().map(|e| e.tid).collect();
+        assert_eq!(tids.len(), 3, "each thread gets its own tid lane");
+        let workers: std::collections::HashSet<u16> =
+            events.iter().map(|e| e.worker).collect();
+        assert!(workers.contains(&SERVER_WORKER));
+        assert!(workers.contains(&0) && workers.contains(&1));
+    }
+
+    #[test]
+    fn chrome_and_jsonl_exports_are_well_formed() {
+        let events = [
+            Event {
+                t_start_ns: 1_000,
+                t_end_ns: 3_500,
+                bytes: 64,
+                round: 2,
+                layer: 1,
+                stage: Stage::Encode,
+                worker: 0,
+                tid: 0,
+            },
+            Event {
+                t_start_ns: 4_000,
+                t_end_ns: 4_000,
+                bytes: 36,
+                round: 2,
+                layer: 0,
+                stage: Stage::FrameTx,
+                worker: 1,
+                tid: 1,
+            },
+        ];
+        let chrome = chrome_trace_json(&events);
+        assert!(chrome.starts_with('{') && chrome.ends_with('}'));
+        assert!(chrome.contains("\"traceEvents\":["));
+        assert!(chrome.contains("\"name\":\"encode\""));
+        assert!(chrome.contains("\"ts\":1.000"));
+        assert!(chrome.contains("\"dur\":2.500"));
+        assert!(chrome.contains("\"pid\":1"));
+        let lines = jsonl(&events);
+        assert_eq!(lines.lines().count(), 2);
+        assert!(lines.contains("\"stage\":\"frame_tx\""));
+        assert!(lines.contains("\"t_start_ns\":1000"));
+    }
+
+    #[test]
+    fn snapshot_rolls_up_counters_and_log2_histograms() {
+        let mk = |stage, dur: u64, bytes| Event {
+            t_start_ns: 0,
+            t_end_ns: dur,
+            bytes,
+            round: 4,
+            layer: 0,
+            stage,
+            worker: 0,
+            tid: 0,
+        };
+        let events = [
+            mk(Stage::Encode, 1024, 100),
+            mk(Stage::Encode, 1500, 50),
+            mk(Stage::Round, 1 << 20, 0),
+        ];
+        let snap = MetricsSnapshot::from_events(&events);
+        assert_eq!(snap.counter("events_total"), Some(3));
+        assert_eq!(snap.counter("encode_events"), Some(2));
+        assert_eq!(snap.counter("encode_bytes"), Some(150));
+        assert_eq!(snap.counter("rounds_seen"), Some(5));
+        let h = snap.histogram("encode_duration_ns").unwrap();
+        assert_eq!(h.count, 2);
+        assert_eq!(h.sum_ns, 2524);
+        // 1024 and 1500 both land in bucket 10 ([2^10, 2^11)).
+        assert_eq!(h.buckets[10], 2);
+        let r = snap.histogram("round_duration_ns").unwrap();
+        assert_eq!(r.buckets[20], 1);
+        assert_eq!(Histogram::bucket_lower_bound_ns(10), 1024);
+        // Empty input still renders.
+        let empty = MetricsSnapshot::from_events(&[]);
+        assert_eq!(empty.counter("rounds_seen"), Some(0));
+        // JSON is structurally sound and carries the schema tag.
+        let json = snap.to_json();
+        assert!(json.starts_with("{\"schema\":\"gsparse-metrics-v1\""));
+        assert!(json.contains("\"encode_duration_ns\""));
+        assert_eq!(
+            json.matches('{').count(),
+            json.matches('}').count(),
+            "balanced braces"
+        );
+    }
+
+    #[test]
+    fn snapshot_folds_link_counters() {
+        let c = LinkCounters::new();
+        let mut snap = MetricsSnapshot::default();
+        snap.fold_link_counters("link_w0", &c);
+        assert_eq!(snap.counter("link_w0_bytes_tx"), Some(0));
+        assert_eq!(snap.counter("link_w0_frames_vectored"), Some(0));
+    }
+
+    #[test]
+    fn config_wire_roundtrip() {
+        for cfg in [
+            TraceConfig::Off,
+            TraceConfig::on(),
+            TraceConfig::On {
+                capacity: 123,
+                format: TraceFormat::Jsonl,
+            },
+        ] {
+            let bytes = cfg.wire_bytes();
+            let cap = u32::from_le_bytes(bytes[1..5].try_into().unwrap());
+            assert_eq!(TraceConfig::from_wire(bytes[0], cap), Some(cfg));
+        }
+        assert_eq!(TraceConfig::from_wire(9, 0), None);
+    }
+}

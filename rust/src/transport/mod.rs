@@ -124,17 +124,17 @@ impl LinkCounters {
     }
 
     pub(crate) fn add_tx(&self, frame_payload_len: usize) {
-        self.inner
-            .bytes_tx
-            .fetch_add(frame_payload_len as u64 + FRAME_OVERHEAD as u64, Ordering::Relaxed);
+        let framed = frame_payload_len as u64 + FRAME_OVERHEAD as u64;
+        self.inner.bytes_tx.fetch_add(framed, Ordering::Relaxed);
         self.inner.frames_tx.fetch_add(1, Ordering::Relaxed);
+        crate::trace::counter(crate::trace::Stage::FrameTx, framed);
     }
 
     pub(crate) fn add_rx(&self, frame_payload_len: usize) {
-        self.inner
-            .bytes_rx
-            .fetch_add(frame_payload_len as u64 + FRAME_OVERHEAD as u64, Ordering::Relaxed);
+        let framed = frame_payload_len as u64 + FRAME_OVERHEAD as u64;
+        self.inner.bytes_rx.fetch_add(framed, Ordering::Relaxed);
         self.inner.frames_rx.fetch_add(1, Ordering::Relaxed);
+        crate::trace::counter(crate::trace::Stage::FrameRx, framed);
     }
 
     /// Framed bytes sent on this link (payload + length prefixes).
@@ -160,6 +160,7 @@ impl LinkCounters {
     /// whole-payload assembly copy the contiguous path pays was skipped.
     pub(crate) fn note_vectored(&self) {
         self.inner.frames_vectored.fetch_add(1, Ordering::Relaxed);
+        crate::trace::counter(crate::trace::Stage::VectoredTx, 1);
     }
 
     /// Frames sent zero-copy via multi-segment scatter/gather writes
@@ -251,6 +252,7 @@ pub fn accept_n_hello(
     n: usize,
     codec: crate::coding::WireCodec,
 ) -> Result<Vec<(Box<dyn Connection>, Hello)>, TransportError> {
+    let _span = crate::trace::span(crate::trace::Stage::Handshake);
     let mut slots: Vec<Option<(Box<dyn Connection>, Hello)>> = (0..n).map(|_| None).collect();
     for _ in 0..n {
         let (conn, hello) = listener.accept()?;

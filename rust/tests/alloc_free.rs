@@ -191,6 +191,42 @@ fn steady_state_compression_is_allocation_free() {
         assert_eq!(n, 0, "adversarial decodes allocated {n} times in 16 calls");
     }
 
+    // --- Trace recording: allocation-free in steady state ---------------
+    // (Same #[test], same reason.) The recorder preallocates each thread's
+    // ring at install time; recording a span afterwards is a clock read
+    // plus a write into that ring — zero allocations per span, the
+    // tentpole "never blocks, never allocates in the hot loop" criterion.
+    // Ring overflow overwrites in place, so a full ring stays free too.
+    {
+        use gsparse::trace::{self, Stage, TraceConfig};
+        let rec = trace::Recorder::new(&TraceConfig::On {
+            capacity: 256,
+            format: trace::TraceFormat::Chrome,
+        })
+        .unwrap();
+        let guard = trace::install(&rec, 0); // ring allocated here (warmup)
+        trace::set_round(1);
+        for _ in 0..8 {
+            let mut s = trace::span(Stage::Encode);
+            s.bytes(64);
+        }
+        let n = count_allocs(1024, || {
+            let mut s = trace::span(Stage::Solve);
+            s.bytes(4096);
+            drop(s);
+            trace::counter(Stage::FrameTx, 128);
+        });
+        assert_eq!(n, 0, "span recording allocated {n} times in 1024 calls");
+        // Disabled-path cost: with no recorder installed on the thread the
+        // instrumentation must not allocate either (it is one atomic load).
+        drop(guard);
+        let n = count_allocs(1024, || {
+            let mut s = trace::span(Stage::Solve);
+            s.bytes(4096);
+        });
+        assert_eq!(n, 0, "inert spans allocated {n} times in 1024 calls");
+    }
+
     // --- Sharded path: shard buffers reused ----------------------------
     // (Same #[test] on purpose: a concurrent test thread would pollute the
     // global counter.) The parallel path runs on the persistent ShardPool —

@@ -169,7 +169,7 @@ fn one_session_runs_all_four_coordinators() {
     // 2. SSP parameter server.
     let ps = session.param_server(
         &PsTask {
-            total_pushes: 400,
+            total_iterations: 400,
             ..PsTask::default()
         },
         &ds,

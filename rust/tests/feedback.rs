@@ -302,7 +302,7 @@ fn ps_local_steps_push_fewer_frames() {
     let ds = gen_logistic(256, 128, 0.6, 0.25, 71);
     let model = LogisticModel::new(1.0 / (10.0 * 256.0));
     let task = PsTask {
-        total_pushes: 800,
+        total_iterations: 800,
         ..PsTask::default()
     };
     let run = |h: usize| {

@@ -1,0 +1,265 @@
+//! Acceptance tests of the `gsparse::trace` instrumentation — the pinned
+//! tentpole invariant: **tracing on vs. off is bitwise-identical** on every
+//! coordinator (spans read clocks and lengths, never the data path), plus
+//! the metrics roll-up and exporter contracts the CI trace guard relies on.
+//!
+//! No test here touches `GSPARSE_TRACE` / `GSPARSE_TRACE_OUT` — the trace
+//! switch goes through `SessionBuilder::trace` explicitly, so these tests
+//! stay parallel-safe (the env-driven path is covered in
+//! `tests/async_engine.rs` under a lock, and in the CI matrix leg).
+
+use gsparse::api::{DistTask, MethodSpec, PsTask, Session, SyncTask};
+use gsparse::data::gen_logistic;
+use gsparse::model::{ConvexModel, LogisticModel};
+use gsparse::trace::{self, Stage, TraceConfig};
+use gsparse::transport::InProcTransport;
+
+/// A session differing *only* in the trace switch.
+fn session(traced: bool, seed: u64, workers: usize) -> Session {
+    Session::builder()
+        .method(MethodSpec::GSpar { rho: 0.1, iters: 2 })
+        .workers(workers)
+        .seed(seed)
+        .trace(if traced { TraceConfig::on() } else { TraceConfig::Off })
+        .build()
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator 1: synchronous Algorithm-1 trainer.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sync_trace_on_off_bitwise_identical() {
+    let ds = gen_logistic(128, 256, 0.6, 0.25, 91);
+    let model = LogisticModel::new(1.0 / (10.0 * 128.0));
+    let task = SyncTask {
+        batch: 8,
+        epochs: 8, // 4 rounds/epoch → 32 rounds
+        lr: 1.0,
+        ..SyncTask::default()
+    };
+    let off = session(false, 91, 4).train_convex(&task, &ds, &model);
+    let on = session(true, 91, 4).train_convex(&task, &ds, &model);
+    assert_eq!(off.final_loss(), on.final_loss(), "weights must not move");
+    assert_eq!(off.ledger.messages, on.ledger.messages);
+    assert_eq!(off.ledger.ideal_bits, on.ledger.ideal_bits);
+    assert_eq!(off.ledger.wire_bytes, on.ledger.wire_bytes);
+    assert_eq!(off.ledger.wire_bytes_by_codec, on.ledger.wire_bytes_by_codec);
+    assert_eq!(off.ledger.measured_bytes, on.ledger.measured_bytes);
+    assert_eq!(off.ledger.measured_frames, on.ledger.measured_frames);
+    // Same loss curve, point for point.
+    assert_eq!(off.points.len(), on.points.len());
+    for (a, b) in off.points.iter().zip(&on.points) {
+        assert_eq!(a.loss, b.loss);
+    }
+    // And the run itself made progress (tracing a dead run proves little).
+    let f0 = model.loss(&ds, &vec![0.0; 256]);
+    assert!(on.final_loss() < f0 * 0.9, "{f0} -> {}", on.final_loss());
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator 2: threaded leader/worker cluster (multi-layer).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cluster_trace_on_off_bitwise_identical_and_metrics_line_up() {
+    let dims = [96usize, 64];
+    let workers = 2usize;
+    let rounds = 5usize;
+    let grads: Vec<Vec<Vec<f32>>> = (0..workers)
+        .map(|w| {
+            dims.iter()
+                .enumerate()
+                .map(|(l, &d)| gsparse::benchkit::skewed_gradient(d, (w * 11 + l) as u64, 0.1))
+                .collect()
+        })
+        .collect();
+    let run = |traced: bool| {
+        let mut cluster = session(traced, 47, workers).cluster(&dims);
+        let updates: Vec<_> = (0..rounds).map(|_| cluster.round(&grads)).collect();
+        let metrics = cluster.trace_metrics();
+        (updates, cluster.ledger.clone(), metrics)
+    };
+    let (off_upd, off_ledger, off_metrics) = run(false);
+    let (on_upd, on_ledger, on_metrics) = run(true);
+
+    // Bitwise identity: every decoded layer update, every ledger column.
+    for (r, (a_round, b_round)) in off_upd.iter().zip(&on_upd).enumerate() {
+        for (l, (a, b)) in a_round.iter().zip(b_round).enumerate() {
+            assert_eq!(a.grad, b.grad, "round {r} layer {l} drifted under tracing");
+            assert_eq!(a.upload_bytes, b.upload_bytes, "round {r} layer {l}");
+            assert_eq!(a.ideal_bits, b.ideal_bits, "round {r} layer {l}");
+        }
+    }
+    assert_eq!(off_ledger.wire_bytes, on_ledger.wire_bytes);
+    assert_eq!(off_ledger.measured_bytes, on_ledger.measured_bytes);
+    assert_eq!(off_ledger.measured_frames, on_ledger.measured_frames);
+    assert_eq!(off_ledger.messages, on_ledger.messages);
+
+    // Tracing off → no recorder, no snapshot. On → the roll-up's span
+    // counters mirror the coordinator's structure exactly: one leader
+    // round span per round, one push span per worker per round, and the
+    // leader links' transport counters folded in under `link_w*`.
+    assert!(off_metrics.is_none(), "Off must not allocate a recorder");
+    let snap = on_metrics.expect("traced cluster must produce a snapshot");
+    assert_eq!(snap.counter("round_events"), Some(rounds as u64));
+    assert_eq!(snap.counter("push_events"), Some((workers * rounds) as u64));
+    assert!(snap.counter("events_total").unwrap() > 0);
+    assert!(
+        snap.counter("link_w0_frames_rx").unwrap() > 0,
+        "leader link counters must fold into the registry"
+    );
+    assert!(
+        snap.histogram("round_duration_ns").is_some(),
+        "per-stage latency histograms must be populated"
+    );
+    // The snapshot exporter is schema-stable hand-rolled JSON.
+    let json = snap.to_json();
+    assert!(json.starts_with("{\"schema\":\"gsparse-metrics-v1\""), "{json}");
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator 3: distributed runtime (threads over InProc channels).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dist_threads_trace_on_off_bitwise_identical() {
+    let task = DistTask {
+        rounds: 24,
+        n: 128,
+        d: 96,
+        batch: 4,
+        reg: 1.0 / (10.0 * 128.0),
+        ..DistTask::default()
+    };
+    let run = |traced: bool, addr: &str| {
+        session(traced, 63, 2)
+            .dist_threads(InProcTransport::new(), addr, &task)
+            .unwrap()
+    };
+    let off = run(false, "trace-off");
+    let on = run(true, "trace-on");
+    // The digest is FNV-1a over every gradient payload in apply order —
+    // equality means the traced run shipped bitwise-identical bytes.
+    assert_eq!(off.grad_digest, on.grad_digest);
+    assert_eq!(off.final_w, on.final_w);
+    assert_eq!(off.versions, on.versions);
+    assert_eq!(off.curve.ledger.wire_bytes, on.curve.ledger.wire_bytes);
+    assert_eq!(
+        off.curve.ledger.measured_frames,
+        on.curve.ledger.measured_frames,
+        "tracing must add zero frames to the wire"
+    );
+    assert_eq!(off.measured_tx_bytes, on.measured_tx_bytes);
+    assert_eq!(off.measured_rx_bytes, on.measured_rx_bytes);
+
+    // Server-side roll-up: one round span per block (H = 1 → per round).
+    assert!(off.trace_metrics.is_none());
+    let snap = on.trace_metrics.expect("traced dist run must report metrics");
+    assert_eq!(snap.counter("round_events"), Some(task.rounds as u64));
+    assert!(snap.counter("apply_events").unwrap() > 0, "server applies traced");
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator 4: SSP parameter server. The thread schedule is racy by
+// design, so bitwise identity is claimed on the *budget-driven* columns
+// (applied versions = the iteration budget), not on the race-dependent
+// trajectory — plus trace transparency on the frame accounting identity
+// that holds on every schedule.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn param_server_trace_is_transparent_and_reports_metrics() {
+    let ds = gen_logistic(256, 128, 0.6, 0.25, 55);
+    let model = LogisticModel::new(1.0 / (10.0 * 256.0));
+    let task = PsTask {
+        total_iterations: 400,
+        ..PsTask::default()
+    };
+    let workers = 4usize;
+    let run = |traced: bool| session(traced, 55, workers).param_server(&task, &ds, &model);
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.versions, 400, "H = 1: one applied push per iteration");
+    assert_eq!(on.versions, 400);
+    // Frame identity on both runs: handshakes plus exactly one push per
+    // version — tracing adds nothing to the wire.
+    assert_eq!(off.curve.ledger.measured_frames, workers as u64 + off.versions);
+    assert_eq!(on.curve.ledger.measured_frames, workers as u64 + on.versions);
+    let f0 = model.loss(&ds, &vec![0.0; 128]);
+    assert!(off.final_loss < f0, "{f0} -> {}", off.final_loss);
+    assert!(on.final_loss < f0, "{f0} -> {}", on.final_loss);
+
+    assert!(off.trace_metrics.is_none());
+    let snap = on.trace_metrics.expect("traced PS run must report metrics");
+    // Every applied version was one worker-side push span.
+    assert_eq!(snap.counter("push_events"), Some(on.versions));
+    assert_eq!(snap.counter("apply_events"), Some(on.versions));
+    assert!(snap.counter("pull_events").unwrap() > 0);
+    assert!(
+        snap.gauges.iter().any(|(n, _)| n == "staleness_stalls"),
+        "PS-specific gauge must be registered"
+    );
+    assert!(snap.counter("link_w0_frames_tx").unwrap() > 0);
+}
+
+// ---------------------------------------------------------------------------
+// Recorder + exporter contracts (what the CI trace guard parses).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn recorder_roundtrip_exports_chrome_and_jsonl() {
+    let rec = trace::Recorder::new(&TraceConfig::On {
+        capacity: 64,
+        format: trace::TraceFormat::Chrome,
+    })
+    .expect("On must build a recorder");
+    {
+        let _guard = trace::install(&rec, 3);
+        trace::set_round(7);
+        {
+            let mut s = trace::span(Stage::Encode);
+            s.bytes(1234);
+            s.layer(2);
+        }
+        trace::counter(Stage::FrameTx, 1238);
+    }
+    let events = rec.drain();
+    assert_eq!(events.len(), 2);
+    // Sorted by start time; identity fields survive the ring.
+    assert!(events[0].t_start_ns <= events[1].t_start_ns);
+    let enc = events.iter().find(|e| e.stage == Stage::Encode).unwrap();
+    assert_eq!((enc.worker, enc.round, enc.layer, enc.bytes), (3, 7, 2, 1234));
+
+    let chrome = trace::chrome_trace_json(&events);
+    assert!(chrome.contains("\"traceEvents\":["), "{chrome}");
+    assert!(chrome.contains("\"name\":\"encode\""), "{chrome}");
+    assert!(chrome.contains("\"pid\":3"), "{chrome}");
+    let jsonl = trace::jsonl(&events);
+    assert_eq!(jsonl.lines().count(), events.len(), "one object per line");
+    assert!(jsonl.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
+
+    // Draining is destructive; the rings restart empty.
+    assert!(rec.drain().is_empty());
+}
+
+#[test]
+fn ring_overwrites_oldest_and_counts_drops() {
+    let rec = trace::Recorder::new(&TraceConfig::On {
+        capacity: 4,
+        format: trace::TraceFormat::Chrome,
+    })
+    .unwrap();
+    {
+        let _guard = trace::install(&rec, 0);
+        for i in 0..10u64 {
+            trace::counter(Stage::FrameRx, i);
+        }
+    }
+    let events = rec.drain();
+    assert_eq!(events.len(), 4, "ring must cap at capacity");
+    // The survivors are the *newest* events.
+    let bytes: Vec<u64> = events.iter().map(|e| e.bytes).collect();
+    assert_eq!(bytes, vec![6, 7, 8, 9]);
+    assert_eq!(rec.dropped(), 6, "overwritten events must be counted");
+}
