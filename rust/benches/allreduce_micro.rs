@@ -1,0 +1,189 @@
+//! Sparse all-reduce microbench at the paper's communication scale:
+//! d = 2^20 coordinates at rho = 0.01, M ∈ {4, 16} ranks. Runs the real
+//! budgeted ring collective over in-process links and a star hub exchange
+//! over the same transport, reporting **measured** per-node hop bytes and
+//! end-to-end bytes next to the α-β model's round times for both
+//! topologies. Writes `BENCH_allreduce.json` (override with
+//! `GSPARSE_BENCH_OUT`).
+
+use gsparse::benchkit::{section, JsonReport};
+use gsparse::coding::{self, WireCodec};
+use gsparse::collective::{self, RingReducer};
+use gsparse::comm::{merge, NetworkModel, Topology};
+use gsparse::rngkit::Xoshiro256pp;
+use gsparse::sparsify::SparseGrad;
+use gsparse::transport::{accept_n_hello, Hello, InProcTransport, LinkCounters, Transport};
+use std::time::Instant;
+
+const D: usize = 1 << 20;
+const RHO: f32 = 0.01;
+
+/// ~`k`-entry sparse message with ascending indices — the shape a rho-sparse
+/// compressor emits at this scale.
+fn sparse_input(d: usize, k: usize, seed: u64) -> SparseGrad {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut sg = SparseGrad::empty(d);
+    let stride = (d / k.max(1)).max(1) as u64;
+    let mut idx = rng.next_below(stride) as usize;
+    while idx < d && sg.exact.len() < k {
+        sg.exact
+            .push((idx as u32, (rng.next_gaussian() as f32).max(0.01)));
+        idx += 1 + rng.next_below(2 * stride) as usize;
+    }
+    sg
+}
+
+/// Budgeted ring all-reduce over real in-process links. Returns (per-node
+/// right-link tx bytes, encoded reduced-sum length, wall seconds).
+fn run_ring(inputs: &[SparseGrad], m: usize) -> (Vec<u64>, usize, f64) {
+    let transport = InProcTransport::new();
+    let binds: Vec<String> = (0..m).map(|r| format!("ring-{m}-{r}")).collect();
+    let peers = collective::form_ring_local(&transport, m, WireCodec::Raw, &binds)
+        .expect("bench ring");
+    let tx: Vec<LinkCounters> = peers.iter().map(|p| p.right_counters()).collect();
+    let budget = Some(collective::default_budget(RHO, D as u32, m));
+    let t0 = Instant::now();
+    let reduced_len = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(m);
+        for (mut peer, input) in peers.into_iter().zip(inputs) {
+            handles.push(scope.spawn(move || {
+                let mut reducer = RingReducer::new(WireCodec::Raw, budget);
+                let mut out = SparseGrad::empty(0);
+                reducer.reduce(&mut peer, input, &mut out, None).expect("bench reduce");
+                let mut bytes = Vec::new();
+                coding::encode_with(&out, WireCodec::Raw, &mut bytes);
+                bytes.len()
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("bench rank"))
+            .max()
+            .unwrap_or(0)
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    (tx.iter().map(|c| c.bytes_tx()).collect(), reduced_len, wall_s)
+}
+
+/// Star all-reduce over the same transport: every rank uploads its message
+/// to a hub and downloads the merged sum. Returns (per-node link bytes,
+/// per-rank upload lengths, merged encoding length).
+fn run_star(inputs: &[SparseGrad], m: usize) -> (Vec<u64>, Vec<u64>, usize) {
+    let transport = InProcTransport::new();
+    let hub = format!("star-{m}-hub");
+    let mut listener = transport.listen(&hub).expect("bench hub");
+    let uploads: Vec<u64> = inputs
+        .iter()
+        .map(|sg| {
+            let mut bytes = Vec::new();
+            coding::encode_with(sg, WireCodec::Raw, &mut bytes);
+            bytes.len() as u64
+        })
+        .collect();
+    let (per_node, merged_len) = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(m);
+        for (w, input) in inputs.iter().enumerate() {
+            let (t, hub) = (&transport, &hub);
+            handles.push(scope.spawn(move || {
+                let mut conn = t
+                    .connect(hub, &Hello::with_codec(w as u32, WireCodec::Raw))
+                    .expect("bench connect");
+                let mut bytes = Vec::new();
+                coding::encode_with(input, WireCodec::Raw, &mut bytes);
+                conn.send(&bytes).expect("bench upload");
+                let mut rx = Vec::new();
+                conn.recv(&mut rx).expect("bench download");
+                conn.counters().bytes_total()
+            }));
+        }
+        let accepted = accept_n_hello(listener.as_mut(), m, WireCodec::Raw).expect("bench accept");
+        let mut conns: Vec<_> = accepted.into_iter().map(|(c, _)| c).collect();
+        let mut sum = SparseGrad::empty(D);
+        let mut incoming = SparseGrad::empty(0);
+        let mut merged = SparseGrad::empty(0);
+        let mut rx = Vec::new();
+        for conn in conns.iter_mut() {
+            conn.recv(&mut rx).expect("bench hub recv");
+            coding::decode_into(&rx, &mut incoming).expect("bench decode");
+            merge::merge_sum(&sum, &incoming, &mut merged);
+            std::mem::swap(&mut sum, &mut merged);
+        }
+        let mut down = Vec::new();
+        coding::encode_with(&sum, WireCodec::Raw, &mut down);
+        for conn in conns.iter_mut() {
+            conn.send(&down).expect("bench hub send");
+        }
+        let per_node: Vec<u64> = handles
+            .into_iter()
+            .map(|h| h.join().expect("bench rank"))
+            .collect();
+        (per_node, down.len())
+    });
+    (per_node, uploads, merged_len)
+}
+
+fn bench_scale(report: &mut JsonReport, m: usize) {
+    let k = (RHO * D as f32) as usize;
+    let inputs: Vec<SparseGrad> = (0..m)
+        .map(|w| sparse_input(D, k, 0xA11D ^ w as u64))
+        .collect();
+
+    let (ring_tx, ring_e2e, wall_s) = run_ring(&inputs, m);
+    let ring_max = ring_tx.iter().copied().max().unwrap_or(0);
+    let (star_per_node, uploads, merged_len) = run_star(&inputs, m);
+    let star_min = star_per_node.iter().copied().min().unwrap_or(0);
+
+    // α-β model of the same round under both topologies: uploads are the
+    // measured per-rank message encodings, the broadcast is the merged sum.
+    let mut net = NetworkModel::commodity_1g();
+    net.topology = Topology::Star;
+    let model_star_s = net.round_time_s(&uploads, merged_len as u64);
+    net.topology = Topology::Ring;
+    let model_ring_s = net.round_time_s(&uploads, merged_len as u64);
+
+    section(&format!("M = {m}, d = 2^20, rho = {RHO}"));
+    println!(
+        "    ring: per-node hop tx {ring_max} B (e2e {ring_e2e} B, {:.1} ms wall)\n\
+         \x20   star: per-node {star_min} B (merged download {merged_len} B)\n\
+         \x20   model round: star {:.2} ms, ring {:.2} ms",
+        wall_s * 1e3,
+        model_star_s * 1e3,
+        model_ring_s * 1e3,
+    );
+    assert!(
+        ring_max < star_min,
+        "M={m}: ring per-node bytes must beat star's"
+    );
+
+    report.push_metric(&format!("m{m}_ring_hop_bytes_per_node_max"), ring_max as f64);
+    report.push_metric(
+        &format!("m{m}_ring_hop_bytes_total"),
+        ring_tx.iter().sum::<u64>() as f64,
+    );
+    report.push_metric(&format!("m{m}_ring_e2e_bytes"), ring_e2e as f64);
+    report.push_metric(&format!("m{m}_ring_wall_s"), wall_s);
+    report.push_metric(&format!("m{m}_star_bytes_per_node_min"), star_min as f64);
+    report.push_metric(
+        &format!("m{m}_star_broadcast_bytes"),
+        merged_len as f64,
+    );
+    report.push_metric(
+        &format!("m{m}_ring_vs_star_per_node_x"),
+        star_min as f64 / ring_max.max(1) as f64,
+    );
+    report.push_metric(&format!("m{m}_model_star_round_s"), model_star_s);
+    report.push_metric(&format!("m{m}_model_ring_round_s"), model_ring_s);
+}
+
+fn main() {
+    let mut report = JsonReport::new();
+    for m in [4usize, 16] {
+        bench_scale(&mut report, m);
+    }
+    let out_path = std::env::var("GSPARSE_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_allreduce.json".to_string());
+    match report.write(&out_path) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
+    }
+}

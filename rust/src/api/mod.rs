@@ -56,7 +56,7 @@
 //! [`crate::feedback`].
 
 use crate::coding::WireCodec;
-use crate::comm::NetworkModel;
+use crate::comm::{NetworkModel, Topology};
 use crate::config::Method;
 use crate::feedback::{CommSchedule, FeedbackConfig, WithFeedback};
 use crate::coordinator::cluster::Cluster;
@@ -249,6 +249,8 @@ pub struct SessionBuilder {
     local_steps: usize,
     pipeline: usize,
     trace: TraceConfig,
+    topology: Topology,
+    aligned: bool,
 }
 
 impl Default for SessionBuilder {
@@ -267,6 +269,9 @@ impl Default for SessionBuilder {
             // The CI trace leg (GSPARSE_TRACE=json) flows through every
             // session built by the shared suites without test changes.
             trace: TraceConfig::from_env(),
+            // Likewise the CI topology leg (GSPARSE_TOPOLOGY=ring).
+            topology: topology_from_env(),
+            aligned: false,
         }
     }
 }
@@ -374,6 +379,28 @@ impl SessionBuilder {
         self
     }
 
+    /// Wire topology of the transport-backed coordinators: `Star` (every
+    /// worker talks to the leader/server — the historical path) or `Ring`
+    /// (gradients are reduced by a sparse ring reduce-scatter / all-gather
+    /// over peer-to-peer links, [`crate::collective`], and only rank 0
+    /// delivers the reduced result). Star rounds are byte-for-byte
+    /// unchanged by this knob. Defaults to the `GSPARSE_TOPOLOGY`
+    /// environment setting ([`topology_from_env`]).
+    pub fn topology(mut self, topology: Topology) -> Self {
+        self.topology = topology;
+        self
+    }
+
+    /// Ring-only refinement: aligned sparsity. Workers agree on one top-k
+    /// index set via a cheap shared-seed count sketch and reduce the
+    /// values index-free (no index bytes on the wire after the sketch
+    /// exchange) — see [`crate::collective::RingReducer::reduce_aligned`].
+    /// Ignored on star topologies.
+    pub fn aligned_sparsity(mut self, on: bool) -> Self {
+        self.aligned = on;
+        self
+    }
+
     pub fn build(self) -> Session {
         Session {
             method: self.method,
@@ -387,6 +414,8 @@ impl SessionBuilder {
             local_steps: self.local_steps,
             pipeline: self.pipeline,
             trace: self.trace,
+            topology: self.topology,
+            aligned: self.aligned,
         }
     }
 }
@@ -408,6 +437,22 @@ pub fn pipeline_from_env() -> usize {
     }
 }
 
+/// Read the wire topology from the `GSPARSE_TOPOLOGY` environment variable
+/// — the hook the CI `topology: [star, ring]` matrix uses to steer the
+/// shared suites. Unset or empty means [`Topology::Star`] (the historical
+/// path); anything but `star` / `ring` panics, so a typo in a CI matrix
+/// cannot silently test the wrong configuration.
+pub fn topology_from_env() -> Topology {
+    match std::env::var("GSPARSE_TOPOLOGY") {
+        Err(_) => Topology::Star,
+        Ok(v) => match v.to_ascii_lowercase().as_str() {
+            "" | "star" => Topology::Star,
+            "ring" => Topology::Ring,
+            other => panic!("GSPARSE_TOPOLOGY must be star|ring, got {other:?}"),
+        },
+    }
+}
+
 /// The shared run context consumed by all four coordinators. Construct via
 /// [`Session::builder`]; the per-run knobs go into [`SyncTask`] /
 /// [`PsTask`] / [`DistTask`] at call time.
@@ -424,6 +469,8 @@ pub struct Session {
     local_steps: usize,
     pipeline: usize,
     trace: TraceConfig,
+    topology: Topology,
+    aligned: bool,
 }
 
 impl Session {
@@ -478,6 +525,17 @@ impl Session {
     /// The trace configuration (see [`SessionBuilder::trace`]).
     pub fn trace(&self) -> TraceConfig {
         self.trace
+    }
+
+    /// The wire topology (see [`SessionBuilder::topology`]).
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
+    /// Whether ring rounds use aligned sparsity (see
+    /// [`SessionBuilder::aligned_sparsity`]).
+    pub fn aligned(&self) -> bool {
+        self.aligned
     }
 
     /// The communication schedule implied by [`Self::local_steps`].
@@ -551,6 +609,8 @@ impl Session {
             feedback: self.feedback,
             pipeline: self.pipeline,
             trace: self.trace,
+            topology: self.topology,
+            aligned: self.aligned,
         }
     }
 
@@ -791,6 +851,10 @@ mod tests {
         assert_eq!(s.local_steps(), 1);
         assert_eq!(s.pipeline(), 1);
         assert_eq!(s.comm_schedule(), crate::feedback::CommSchedule::every_round());
+        // Default mirrors the environment hook (Star in a clean test env,
+        // Ring in the CI topology leg).
+        assert_eq!(s.topology(), topology_from_env());
+        assert!(!s.aligned());
 
         let s = Session::builder()
             .method(MethodSpec::TopK { rho: 0.05 })
@@ -816,6 +880,13 @@ mod tests {
 
         let s = Session::builder().pipeline(4).build();
         assert_eq!(s.pipeline(), 4);
+
+        let s = Session::builder()
+            .topology(Topology::Ring)
+            .aligned_sparsity(true)
+            .build();
+        assert_eq!(s.topology(), Topology::Ring);
+        assert!(s.aligned());
     }
 
     #[test]
@@ -890,6 +961,8 @@ mod tests {
         let plan = session.dist_plan(&task);
         assert_eq!(plan.workers, 3);
         assert_eq!(plan.rounds, 17);
+        assert_eq!(plan.topology, session.topology());
+        assert!(!plan.aligned);
         assert_eq!(plan.method, Method::Qsgd);
         assert_eq!(plan.qsgd_bits, 6);
         assert_eq!(plan.seed, 99);

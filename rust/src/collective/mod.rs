@@ -1,0 +1,988 @@
+//! Sparse ring collectives over the [`crate::transport`] trait.
+//!
+//! The parameter-server topology every coordinator started from has a cost
+//! asymmetry the paper's §4 cost model makes explicit: the leader receives
+//! `M` sparse messages per round, so its ingress grows linearly with the
+//! worker count while every worker pays a constant. A ring
+//! reduce-scatter / all-gather removes the hot spot — each of the `2(M−1)`
+//! phases moves roughly `1/M` of the payload over every link, so per-node
+//! traffic stops growing with `M`.
+//!
+//! Dense rings are textbook; *sparse* rings are not, because a hop no longer
+//! sums two aligned buffers — it merges two index sets. This module provides
+//! the two designs the literature converged on:
+//!
+//! * [`RingReducer::reduce`] — index-carrying hops. Each hop payload is a
+//!   one-message `WireBatch` ([`crate::coding::encode_batch`]); every hop
+//!   merges the incoming message into the local chunk accumulator by index
+//!   union ([`crate::comm::merge::merge_sum`]) and, under a per-hop `budget`,
+//!   re-sparsifies the partial sum ([`crate::comm::merge::resparsify_top`]),
+//!   folding the dropped mass into an error-feedback residual
+//!   ([`crate::feedback::FeedbackState`]) so nothing is silently lost.
+//!   Without a budget the reduction is exact but hop messages grow as index
+//!   sets union (up to `m·k` entries) — budget `⌈2ρD/m⌉` restores the ring's
+//!   per-node advantage at the cost of a top-k bias the residual repairs.
+//! * [`RingReducer::reduce_aligned`] — index-free hops (ARC-style aligned
+//!   sparsity). Every rank sketches its local message into a shared-seed
+//!   count sketch, the sketches are ring-all-gathered and summed in rank
+//!   order, and each rank independently selects the same top-`k` index set
+//!   from the summed sketch (the estimate, tie-break, and sort are all
+//!   deterministic). The reduction then runs over the `k` *positions* —
+//!   raw `f32` little-endian payloads, no indices on the wire — and the
+//!   selected coordinates carry their **exact** sums (the sketch only picks
+//!   *which* coordinates travel). Unselected local mass folds into the
+//!   residual.
+//!
+//! Both paths are bitwise deterministic across backends and thread counts:
+//! the ring schedule pins which rank's contribution is added when (chunk
+//! `c`'s sum left-folds in ring order starting at rank `c`), hop payloads
+//! round-trip losslessly through the wire codec, and no kernel iterates in
+//! hash or address order.
+//!
+//! **Deadlock note.** Each phase is "every rank sends to its right
+//! neighbour, then receives from its left". That is safe on
+//! [`InProcTransport`](crate::transport::InProcTransport) (unbounded
+//! channels) and on TCP whenever a hop payload fits the kernel socket
+//! buffers — which budgeted hops do by construction. Callers pushing
+//! unbudgeted multi-megabyte hops over TCP should size `budget` instead of
+//! relying on socket buffering.
+
+use crate::coding::{self, WireCodec};
+use crate::comm::merge;
+use crate::feedback::FeedbackState;
+use crate::sparsify::SparseGrad;
+use crate::transport::frame::{self, Hello, MsgView};
+use crate::transport::{Connection, LinkCounters, Listener, Transport, TransportError};
+
+/// Reduce-scatter hop carrying a `WireBatch` sparse chunk.
+pub const PHASE_REDUCE_SCATTER: u8 = 0;
+/// All-gather hop forwarding a finalized `WireBatch` sparse chunk.
+pub const PHASE_ALL_GATHER: u8 = 1;
+/// Aligned mode: ring all-gather of raw `f32` count-sketch rows.
+pub const PHASE_SKETCH: u8 = 2;
+/// Aligned mode: reduce-scatter of raw `f32` values at the agreed indices.
+pub const PHASE_VALUES_RS: u8 = 3;
+/// Aligned mode: all-gather of the reduced raw `f32` values.
+pub const PHASE_VALUES_AG: u8 = 4;
+
+/// Coordinate range `[lo, hi)` of chunk `c` when dimension `d` is split into
+/// `m` near-equal contiguous chunks. Exhaustive over `c = 0..m`: chunk
+/// bounds tile `[0, d)` exactly, and widths differ by at most one.
+pub fn chunk_bounds(d: u32, m: u32, c: u32) -> (u32, u32) {
+    debug_assert!(c < m);
+    let lo = (c as u64 * d as u64 / m as u64) as u32;
+    let hi = ((c as u64 + 1) * d as u64 / m as u64) as u32;
+    (lo, hi)
+}
+
+/// One rank's two ring links: `left` is the accepted connection from rank
+/// `(rank + peers − 1) mod peers`, `right` the outgoing connection to rank
+/// `(rank + 1) mod peers`. Built by [`form_ring_local`] (all ranks in one
+/// process) or [`connect_ring`] (one rank of a distributed ring).
+pub struct RingPeer {
+    rank: u32,
+    peers: u32,
+    left: Box<dyn Connection>,
+    right: Box<dyn Connection>,
+}
+
+impl RingPeer {
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    pub fn peers(&self) -> u32 {
+        self.peers
+    }
+
+    /// Counter handle for the outgoing (right) link — hop bytes leave here.
+    pub fn right_counters(&self) -> LinkCounters {
+        self.right.counters()
+    }
+
+    /// Counter handle for the incoming (left) link.
+    pub fn left_counters(&self) -> LinkCounters {
+        self.left.counters()
+    }
+}
+
+fn validate_neighbour(hello: &Hello, expect_rank: u32, codec: WireCodec) -> Result<(), TransportError> {
+    let ours = codec.index() as u8;
+    if hello.codec != ours {
+        return Err(TransportError::CodecMismatch {
+            ours,
+            theirs: hello.codec,
+        });
+    }
+    if hello.worker_id != expect_rank {
+        return Err(TransportError::BadHandshake("ring neighbour rank mismatch"));
+    }
+    Ok(())
+}
+
+/// Form a full `m`-rank ring inside one process (the cluster coordinator and
+/// the tests): bind all `m` listeners first, connect every rank to its right
+/// neighbour's listener (safe single-threaded — listeners queue the connect
+/// in their backlog before any accept), then accept every left neighbour,
+/// validating that it announces the expected rank and wire codec.
+///
+/// `bind_addrs[r]` is rank `r`'s listen address (`"127.0.0.1:0"` for TCP,
+/// any per-run-unique name for in-proc). Returns one [`RingPeer`] per rank,
+/// indexed by rank. `m == 1` forms a self-loop; [`RingReducer`] never
+/// touches the links in that case.
+pub fn form_ring_local(
+    transport: &dyn Transport,
+    m: usize,
+    codec: WireCodec,
+    bind_addrs: &[String],
+) -> Result<Vec<RingPeer>, TransportError> {
+    assert!(m >= 1, "a ring needs at least one rank");
+    assert_eq!(bind_addrs.len(), m, "one bind address per rank");
+    let mut listeners: Vec<Box<dyn Listener>> = Vec::with_capacity(m);
+    for addr in bind_addrs {
+        listeners.push(transport.listen(addr)?);
+    }
+    let addrs: Vec<String> = listeners.iter().map(|l| l.local_addr()).collect();
+    let mut rights = Vec::with_capacity(m);
+    for r in 0..m {
+        let hello = Hello::with_codec(r as u32, codec);
+        rights.push(transport.connect(&addrs[(r + 1) % m], &hello)?);
+    }
+    let mut peers = Vec::with_capacity(m);
+    for (r, (mut listener, right)) in listeners.into_iter().zip(rights).enumerate() {
+        let (left, hello) = listener.accept()?;
+        validate_neighbour(&hello, ((r + m - 1) % m) as u32, codec)?;
+        peers.push(RingPeer {
+            rank: r as u32,
+            peers: m as u32,
+            left,
+            right,
+        });
+    }
+    Ok(peers)
+}
+
+/// Form one rank's ring links in a distributed setting: the caller has
+/// already bound `listener` and learned its right neighbour's address (the
+/// dist runtime relays addresses through the server via `RING_ADDR`
+/// frames). Connects right first — every rank's listener exists before any
+/// address was handed out, so the connect never blocks on a remote accept —
+/// then accepts the left neighbour and validates rank and codec.
+pub fn connect_ring(
+    transport: &dyn Transport,
+    listener: &mut dyn Listener,
+    right_addr: &str,
+    rank: u32,
+    peers: u32,
+    codec: WireCodec,
+) -> Result<RingPeer, TransportError> {
+    assert!(peers >= 1 && rank < peers, "rank out of range");
+    let right = transport.connect(right_addr, &Hello::with_codec(rank, codec))?;
+    let (left, hello) = listener.accept()?;
+    validate_neighbour(&hello, (rank + peers - 1) % peers, codec)?;
+    Ok(RingPeer {
+        rank,
+        peers,
+        left,
+        right,
+    })
+}
+
+/// What one [`RingReducer`] call did on the wire, measured from the
+/// outgoing link's counters (frame overhead included — these are the bytes
+/// the [`CommLedger`](crate::metrics::CommLedger) hop column reports).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReduceOutcome {
+    /// Bytes this rank transmitted on its right link during the reduction.
+    pub hop_bytes_tx: u64,
+    /// Frames this rank transmitted on its right link.
+    pub hop_frames_tx: u64,
+    /// Entries in the reduced result every rank now holds.
+    pub result_nnz: usize,
+    /// Entries this rank dropped (re-sparsification or non-selection) and
+    /// folded into the residual — 0 when no residual was supplied *and* no
+    /// budget applied.
+    pub dropped_entries: usize,
+}
+
+/// Configuration of the aligned-sparsity (index-free) mode: a shared-seed
+/// count sketch of `rows × buckets` cells and the number of coordinates
+/// `k` every rank independently — and identically — selects from it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AlignedConfig {
+    /// Sketch rows (median-of-rows estimation; odd values avoid averaging).
+    pub rows: usize,
+    /// Buckets per row. Estimation error shrinks as buckets grow; a few ×
+    /// the expected nnz is the usual operating point.
+    pub buckets: usize,
+    /// Coordinates selected — the index-free reduction's payload size.
+    pub k: usize,
+    /// Shared hash seed. Must agree across ranks (all hash the same seed to
+    /// the same cells, which is the whole point).
+    pub seed: u64,
+}
+
+impl Default for AlignedConfig {
+    fn default() -> Self {
+        Self {
+            rows: 3,
+            buckets: 1024,
+            k: 128,
+            seed: 0x9e37_79b9_7f4a_7c15,
+        }
+    }
+}
+
+/// Per-hop entry budget restoring the ring's per-node advantage for a
+/// method of target density `rho` over dimension `d` split into `m` chunks:
+/// `⌈2ρd/m⌉` — twice the expected per-chunk message size, so pairwise
+/// merges rarely drop while deep partial sums stay bounded (the dropped
+/// mass folds into the caller's residual either way).
+pub fn default_budget(rho: f32, d: u32, m: usize) -> usize {
+    (((2.0 * rho as f64 * d as f64) / m.max(1) as f64).ceil() as usize).max(1)
+}
+
+/// Aligned-mode configuration matched to a target density: select
+/// `k = ⌈ρd⌉` coordinates through a 3-row sketch with `≥ 4k` buckets per
+/// row (rounded up to a power of two), seeded from the run seed so every
+/// rank hashes identically.
+pub fn aligned_for(rho: f32, d: u32, seed: u64) -> AlignedConfig {
+    let k = ((rho as f64 * d as f64).ceil() as usize).clamp(1, d.max(1) as usize);
+    AlignedConfig {
+        rows: 3,
+        buckets: (4 * k).next_power_of_two().max(64),
+        k,
+        seed: seed ^ 0xA11C_ED5E_1EC7_10F5,
+    }
+}
+
+/// SplitMix64 finalizer — the per-cell hash of the shared sketch. Pure
+/// arithmetic on `u64`, so identical on every platform and backend.
+#[inline]
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// Bucket and sign for coordinate `i` in sketch row `row`.
+#[inline]
+fn hash_cell(seed: u64, row: usize, i: u32, buckets: usize) -> (usize, f32) {
+    let h = mix64(seed ^ ((row as u64) << 32) ^ i as u64);
+    let bucket = ((h >> 1) % buckets as u64) as usize;
+    let sign = if h & 1 == 1 { -1.0 } else { 1.0 };
+    (bucket, sign)
+}
+
+/// Median of a small scratch slice (sorted in place, IEEE total order).
+fn median(xs: &mut [f32]) -> f32 {
+    xs.sort_unstable_by(|a, b| a.total_cmp(b));
+    let n = xs.len();
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        0.5 * (xs[n / 2 - 1] + xs[n / 2])
+    }
+}
+
+fn fold_residual(res: Option<&mut FeedbackState>, lo: u32, dropped: &[(u32, f32)]) {
+    if let Some(res) = res {
+        let decay = res.decay();
+        let seg = res.layer_residual_mut(0);
+        for &(i, v) in dropped {
+            seg[(lo + i) as usize] += decay * v;
+        }
+    }
+}
+
+/// Encode `sg` as a one-message `WireBatch` and send it as a vectored
+/// `SPARSE_REDUCE` frame (header segment + payload segment, one wire frame).
+fn send_sparse_hop(
+    right: &mut dyn Connection,
+    frame_buf: &mut Vec<u8>,
+    payload: &mut Vec<u8>,
+    chunk: u32,
+    phase: u8,
+    sg: &SparseGrad,
+    codec: WireCodec,
+) -> Result<(), TransportError> {
+    coding::encode_batch(&[sg], codec, payload);
+    frame::encode_sparse_reduce_prefix(frame_buf, chunk, phase);
+    let mut sp = crate::trace::span(crate::trace::Stage::Hop);
+    sp.bytes((frame_buf.len() + payload.len()) as u64);
+    right.send_vectored(&[frame_buf.as_slice(), payload.as_slice()])
+}
+
+/// Send a raw little-endian `f32` slice as a `SPARSE_REDUCE` frame — the
+/// index-free hop payload of the aligned mode.
+fn send_raw_hop(
+    right: &mut dyn Connection,
+    frame_buf: &mut Vec<u8>,
+    payload: &mut Vec<u8>,
+    chunk: u32,
+    phase: u8,
+    values: &[f32],
+) -> Result<(), TransportError> {
+    payload.clear();
+    payload.reserve(values.len() * 4);
+    for v in values {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    frame::encode_sparse_reduce_prefix(frame_buf, chunk, phase);
+    let mut sp = crate::trace::span(crate::trace::Stage::Hop);
+    sp.bytes((frame_buf.len() + payload.len()) as u64);
+    right.send_vectored(&[frame_buf.as_slice(), payload.as_slice()])
+}
+
+/// Receive one `SPARSE_REDUCE` frame into `rx` and return the byte range
+/// of its payload within `rx`, refusing anything but the chunk/phase the
+/// fixed ring schedule expects next.
+fn recv_hop(
+    left: &mut dyn Connection,
+    rx: &mut Vec<u8>,
+    expect_chunk: u32,
+    expect_phase: u8,
+) -> Result<std::ops::Range<usize>, TransportError> {
+    left.recv(rx)?;
+    match frame::decode(&rx[..])? {
+        MsgView::SparseReduce { chunk, phase, payload }
+            if chunk == expect_chunk && phase == expect_phase =>
+        {
+            let start = payload.as_ptr() as usize - rx.as_ptr() as usize;
+            Ok(start..start + payload.len())
+        }
+        MsgView::SparseReduce { .. } => {
+            Err(TransportError::UnexpectedMessage("hop out of ring schedule"))
+        }
+        _ => Err(TransportError::UnexpectedMessage("expected sparse-reduce hop")),
+    }
+}
+
+/// Parse a raw `f32` hop payload into `out` (exact length required).
+fn decode_f32s(payload: &[u8], out: &mut [f32]) -> Result<(), TransportError> {
+    if payload.len() != out.len() * 4 {
+        return Err(TransportError::UnexpectedMessage("raw hop length mismatch"));
+    }
+    for (slot, ch) in out.iter_mut().zip(payload.chunks_exact(4)) {
+        *slot = f32::from_le_bytes(ch.try_into().unwrap());
+    }
+    Ok(())
+}
+
+/// Parse a raw `f32` hop payload and left-fold it into `out`
+/// (`out[j] = incoming[j] + out[j]` — incoming first, pinning the ring-order
+/// associativity).
+fn add_f32s(payload: &[u8], out: &mut [f32]) -> Result<(), TransportError> {
+    if payload.len() != out.len() * 4 {
+        return Err(TransportError::UnexpectedMessage("raw hop length mismatch"));
+    }
+    for (slot, ch) in out.iter_mut().zip(payload.chunks_exact(4)) {
+        *slot = f32::from_le_bytes(ch.try_into().unwrap()) + *slot;
+    }
+    Ok(())
+}
+
+/// Reusable scratch + configuration for ring reductions. One per rank;
+/// steady state performs no allocation beyond what message growth forces
+/// (all buffers are retained across rounds, matching the compress-engine
+/// scratch discipline used everywhere else in the crate).
+pub struct RingReducer {
+    codec: WireCodec,
+    budget: Option<usize>,
+    chunks: Vec<SparseGrad>,
+    incoming: Vec<SparseGrad>,
+    merged: SparseGrad,
+    payload: Vec<u8>,
+    frame_buf: Vec<u8>,
+    rx: Vec<u8>,
+    sub_lens: Vec<usize>,
+    dropped: Vec<(u32, f32)>,
+    sketch: Vec<f32>,
+    sketches: Vec<f32>,
+    est: Vec<(u32, f32)>,
+    sel: Vec<u32>,
+    vals: Vec<f32>,
+    row_scratch: Vec<f32>,
+}
+
+impl RingReducer {
+    /// `budget` caps the entry count of every sparse hop message (`None` =
+    /// exact reduction, hop messages may grow by index union). The wire
+    /// codec must match the ring links' handshake codec.
+    pub fn new(codec: WireCodec, budget: Option<usize>) -> Self {
+        Self {
+            codec,
+            budget,
+            chunks: Vec::new(),
+            incoming: Vec::new(),
+            merged: SparseGrad::empty(0),
+            payload: Vec::new(),
+            frame_buf: Vec::new(),
+            rx: Vec::new(),
+            sub_lens: Vec::new(),
+            dropped: Vec::new(),
+            sketch: Vec::new(),
+            sketches: Vec::new(),
+            est: Vec::new(),
+            sel: Vec::new(),
+            vals: Vec::new(),
+            row_scratch: Vec::new(),
+        }
+    }
+
+    pub fn budget(&self) -> Option<usize> {
+        self.budget
+    }
+
+    pub fn set_budget(&mut self, budget: Option<usize>) {
+        self.budget = budget;
+    }
+
+    /// Split `input` into `m` chunk accumulators in chunk-local coordinates
+    /// (everything promoted to exact values — partial sums lose the shared
+    /// magnitude after the first merge anyway).
+    fn split_chunks(&mut self, input: &SparseGrad, m: usize) {
+        let d = input.d;
+        if self.chunks.len() != m {
+            self.chunks.resize_with(m, || SparseGrad::empty(0));
+        }
+        for (c, chunk) in self.chunks.iter_mut().enumerate() {
+            let (lo, hi) = chunk_bounds(d, m as u32, c as u32);
+            chunk.reset((hi - lo) as usize);
+        }
+        let (mut c, mut hi) = (0usize, chunk_bounds(d, m as u32, 0).1);
+        let mut lo = 0u32;
+        for (i, v) in merge::Entries::new(input) {
+            // Entries ascend, so the chunk cursor only moves forward; every
+            // valid index lands before the final chunk's `hi == d`.
+            while i >= hi {
+                c += 1;
+                let b = chunk_bounds(d, m as u32, c as u32);
+                lo = b.0;
+                hi = b.1;
+            }
+            self.chunks[c].exact.push((i - lo, v));
+        }
+    }
+
+    /// Budget-cap chunk `c` (global chunk id) and fold the dropped mass into
+    /// the residual at global coordinates. Returns the number dropped.
+    fn cap_chunk(
+        &mut self,
+        d: u32,
+        m: usize,
+        c: usize,
+        residual: Option<&mut FeedbackState>,
+    ) -> usize {
+        let Some(budget) = self.budget else { return 0 };
+        self.dropped.clear();
+        merge::resparsify_top(&mut self.chunks[c], budget, &mut self.dropped);
+        let (lo, _) = chunk_bounds(d, m as u32, c as u32);
+        fold_residual(residual, lo, &self.dropped);
+        self.dropped.len()
+    }
+
+    /// Decode a sparse hop payload into `self.incoming[0]`, validating the
+    /// one-message batch shape and the chunk dimension.
+    fn decode_sparse_hop(&mut self, payload_range: std::ops::Range<usize>, want_d: u32) -> Result<(), TransportError> {
+        let payload = &self.rx[payload_range];
+        coding::decode_batch_into(payload, &mut self.incoming, &mut self.sub_lens)
+            .map_err(|_| TransportError::UnexpectedMessage("undecodable hop payload"))?;
+        if self.incoming.len() != 1 {
+            return Err(TransportError::UnexpectedMessage("hop payload is not one message"));
+        }
+        if self.incoming[0].d != want_d {
+            return Err(TransportError::UnexpectedMessage("hop chunk dimension mismatch"));
+        }
+        Ok(())
+    }
+
+    /// Ring reduce-scatter + all-gather of sparse messages. Every rank calls
+    /// this with its local message (all ranks must pass the same `d`); on
+    /// return `out` holds the bitwise-identical reduced sum on every rank.
+    ///
+    /// Under a hop `budget`, partial sums are re-sparsified before every
+    /// send and the dropped `(index, value)` mass is folded into `residual`
+    /// (scaled by its decay) at global coordinates — supply the same
+    /// [`FeedbackState`] that corrects this rank's next local gradient and
+    /// the ring inherits the top-k + error-feedback contraction.
+    pub fn reduce(
+        &mut self,
+        peer: &mut RingPeer,
+        input: &SparseGrad,
+        out: &mut SparseGrad,
+        mut residual: Option<&mut FeedbackState>,
+    ) -> Result<ReduceOutcome, TransportError> {
+        let d = input.d;
+        let m = peer.peers as usize;
+        let r = peer.rank as usize;
+        if let Some(res) = residual.as_deref_mut() {
+            res.ensure_layout(&[d as usize]);
+        }
+        let mut dropped_total = 0usize;
+        if m <= 1 {
+            out.reset(d as usize);
+            out.exact.extend(merge::Entries::new(input));
+            if let Some(budget) = self.budget {
+                self.dropped.clear();
+                merge::resparsify_top(out, budget, &mut self.dropped);
+                dropped_total = self.dropped.len();
+                fold_residual(residual.as_deref_mut(), 0, &self.dropped);
+            }
+            return Ok(ReduceOutcome {
+                hop_bytes_tx: 0,
+                hop_frames_tx: 0,
+                result_nnz: out.nnz(),
+                dropped_entries: dropped_total,
+            });
+        }
+        let tx = peer.right.counters();
+        let (bytes0, frames0) = (tx.bytes_tx(), tx.frames_tx());
+
+        self.split_chunks(input, m);
+
+        // Reduce-scatter: at step s, send chunk (r−s) mod m right, receive
+        // chunk (r−s−1) mod m from the left and merge it *incoming-first* —
+        // chunk c's sum left-folds in ring order starting at rank c, which
+        // is what makes the result backend-independent.
+        for s in 0..(m - 1) {
+            let sc = (r + m - s) % m;
+            let rc = (r + m - s - 1) % m;
+            dropped_total += self.cap_chunk(d, m, sc, residual.as_deref_mut());
+            send_sparse_hop(
+                peer.right.as_mut(),
+                &mut self.frame_buf,
+                &mut self.payload,
+                sc as u32,
+                PHASE_REDUCE_SCATTER,
+                &self.chunks[sc],
+                self.codec,
+            )?;
+            let range = recv_hop(
+                peer.left.as_mut(),
+                &mut self.rx,
+                rc as u32,
+                PHASE_REDUCE_SCATTER,
+            )?;
+            let (lo, hi) = chunk_bounds(d, m as u32, rc as u32);
+            self.decode_sparse_hop(range, hi - lo)?;
+            merge::merge_sum(&self.incoming[0], &self.chunks[rc], &mut self.merged);
+            std::mem::swap(&mut self.chunks[rc], &mut self.merged);
+        }
+
+        // This rank now owns chunk (r+1) mod m — its fully reduced sum.
+        // Cap it once; all-gather then forwards finalized chunks verbatim,
+        // so every rank reconstructs identical bytes.
+        let own = (r + 1) % m;
+        dropped_total += self.cap_chunk(d, m, own, residual.as_deref_mut());
+        for s in 0..(m - 1) {
+            let sc = (r + 1 + m - s) % m;
+            let rc = (r + m - s) % m;
+            send_sparse_hop(
+                peer.right.as_mut(),
+                &mut self.frame_buf,
+                &mut self.payload,
+                sc as u32,
+                PHASE_ALL_GATHER,
+                &self.chunks[sc],
+                self.codec,
+            )?;
+            let range = recv_hop(
+                peer.left.as_mut(),
+                &mut self.rx,
+                rc as u32,
+                PHASE_ALL_GATHER,
+            )?;
+            let (lo, hi) = chunk_bounds(d, m as u32, rc as u32);
+            self.decode_sparse_hop(range, hi - lo)?;
+            std::mem::swap(&mut self.chunks[rc], &mut self.incoming[0]);
+        }
+
+        out.reset(d as usize);
+        for c in 0..m {
+            let (lo, _) = chunk_bounds(d, m as u32, c as u32);
+            out.exact
+                .extend(merge::Entries::new(&self.chunks[c]).map(|(i, v)| (lo + i, v)));
+        }
+        Ok(ReduceOutcome {
+            hop_bytes_tx: tx.bytes_tx() - bytes0,
+            hop_frames_tx: tx.frames_tx() - frames0,
+            result_nnz: out.nnz(),
+            dropped_entries: dropped_total,
+        })
+    }
+
+    /// Aligned-sparsity reduction: ranks agree on one top-`k` index set via
+    /// a shared-seed count sketch, then reduce the `k` values index-free
+    /// (raw `f32` hops, no index bytes on the wire). The selected
+    /// coordinates carry their exact sums — the sketch decides *which*
+    /// coordinates travel, never their values. Local entries outside the
+    /// agreed set fold into `residual`.
+    pub fn reduce_aligned(
+        &mut self,
+        peer: &mut RingPeer,
+        cfg: &AlignedConfig,
+        input: &SparseGrad,
+        out: &mut SparseGrad,
+        mut residual: Option<&mut FeedbackState>,
+    ) -> Result<ReduceOutcome, TransportError> {
+        assert!(cfg.rows > 0 && cfg.buckets > 0, "sketch must have cells");
+        let d = input.d;
+        let m = peer.peers as usize;
+        let r = peer.rank as usize;
+        let k = cfg.k.min(d as usize);
+        let cells = cfg.rows * cfg.buckets;
+        if let Some(res) = residual.as_deref_mut() {
+            res.ensure_layout(&[d as usize]);
+        }
+        let tx = peer.right.counters();
+        let (bytes0, frames0) = (tx.bytes_tx(), tx.frames_tx());
+
+        // 1. Sketch the local message (O(nnz · rows)).
+        {
+            let mut sp = crate::trace::span(crate::trace::Stage::Sketch);
+            sp.bytes((input.nnz() * cfg.rows) as u64);
+            self.sketch.clear();
+            self.sketch.resize(cells, 0.0);
+            for (i, v) in merge::Entries::new(input) {
+                for row in 0..cfg.rows {
+                    let (b, sign) = hash_cell(cfg.seed, row, i, cfg.buckets);
+                    self.sketch[row * cfg.buckets + b] += sign * v;
+                }
+            }
+        }
+
+        // 2. Ring all-gather every rank's sketch (chunk field = source
+        // rank), then sum them in rank order 0..m — summing on arrival
+        // would fold in a per-rank order and break the cross-rank
+        // agreement the selection depends on.
+        self.sketches.clear();
+        self.sketches.resize(m * cells, 0.0);
+        self.sketches[r * cells..(r + 1) * cells].copy_from_slice(&self.sketch);
+        for s in 0..m.saturating_sub(1) {
+            let src_tx = (r + m - s) % m;
+            let src_rx = (r + m - s - 1) % m;
+            send_raw_hop(
+                peer.right.as_mut(),
+                &mut self.frame_buf,
+                &mut self.payload,
+                src_tx as u32,
+                PHASE_SKETCH,
+                &self.sketches[src_tx * cells..(src_tx + 1) * cells],
+            )?;
+            let range = recv_hop(peer.left.as_mut(), &mut self.rx, src_rx as u32, PHASE_SKETCH)?;
+            decode_f32s(
+                &self.rx[range],
+                &mut self.sketches[src_rx * cells..(src_rx + 1) * cells],
+            )?;
+        }
+        self.sketch.clear();
+        self.sketch.resize(cells, 0.0);
+        for rank in 0..m {
+            let seg = &self.sketches[rank * cells..(rank + 1) * cells];
+            for (t, &v) in self.sketch.iter_mut().zip(seg) {
+                *t += v;
+            }
+        }
+
+        // 3. Identical top-k selection on every rank: median-of-rows
+        // estimate for all d coordinates, |estimate| descending with
+        // index-ascending tie-break, selected set sorted ascending.
+        {
+            let mut sp = crate::trace::span(crate::trace::Stage::Sketch);
+            sp.bytes(d as u64);
+            self.row_scratch.clear();
+            self.row_scratch.resize(cfg.rows, 0.0);
+            self.est.clear();
+            self.est.reserve(d as usize);
+            for i in 0..d {
+                for row in 0..cfg.rows {
+                    let (b, sign) = hash_cell(cfg.seed, row, i, cfg.buckets);
+                    self.row_scratch[row] = sign * self.sketch[row * cfg.buckets + b];
+                }
+                self.est.push((i, median(&mut self.row_scratch)));
+            }
+            self.est.sort_unstable_by(|a, b| {
+                b.1.abs().total_cmp(&a.1.abs()).then_with(|| a.0.cmp(&b.0))
+            });
+            self.sel.clear();
+            self.sel.extend(self.est[..k].iter().map(|&(i, _)| i));
+            self.sel.sort_unstable();
+        }
+
+        // 4. Local values at the agreed coordinates; everything else is
+        // this rank's non-selected mass → residual.
+        self.vals.clear();
+        self.vals.resize(k, 0.0);
+        self.dropped.clear();
+        let mut j = 0usize;
+        for (i, v) in merge::Entries::new(input) {
+            while j < self.sel.len() && self.sel[j] < i {
+                j += 1;
+            }
+            if j < self.sel.len() && self.sel[j] == i {
+                self.vals[j] = v;
+            } else {
+                self.dropped.push((i, v));
+            }
+        }
+        let dropped_total = self.dropped.len();
+        fold_residual(residual.as_deref_mut(), 0, &self.dropped);
+
+        // 5. Index-free reduce-scatter + all-gather over the k positions —
+        // the same ring schedule as the sparse path, raw f32 payloads.
+        for s in 0..m.saturating_sub(1) {
+            let sc = (r + m - s) % m;
+            let rc = (r + m - s - 1) % m;
+            let (lo_s, hi_s) = chunk_bounds(k as u32, m as u32, sc as u32);
+            send_raw_hop(
+                peer.right.as_mut(),
+                &mut self.frame_buf,
+                &mut self.payload,
+                sc as u32,
+                PHASE_VALUES_RS,
+                &self.vals[lo_s as usize..hi_s as usize],
+            )?;
+            let (lo_r, hi_r) = chunk_bounds(k as u32, m as u32, rc as u32);
+            let range = recv_hop(peer.left.as_mut(), &mut self.rx, rc as u32, PHASE_VALUES_RS)?;
+            add_f32s(&self.rx[range], &mut self.vals[lo_r as usize..hi_r as usize])?;
+        }
+        for s in 0..m.saturating_sub(1) {
+            let sc = (r + 1 + m - s) % m;
+            let rc = (r + m - s) % m;
+            let (lo_s, hi_s) = chunk_bounds(k as u32, m as u32, sc as u32);
+            send_raw_hop(
+                peer.right.as_mut(),
+                &mut self.frame_buf,
+                &mut self.payload,
+                sc as u32,
+                PHASE_VALUES_AG,
+                &self.vals[lo_s as usize..hi_s as usize],
+            )?;
+            let (lo_r, hi_r) = chunk_bounds(k as u32, m as u32, rc as u32);
+            let range = recv_hop(peer.left.as_mut(), &mut self.rx, rc as u32, PHASE_VALUES_AG)?;
+            decode_f32s(&self.rx[range], &mut self.vals[lo_r as usize..hi_r as usize])?;
+        }
+
+        out.reset(d as usize);
+        out.exact
+            .extend(self.sel.iter().zip(&self.vals).map(|(&i, &v)| (i, v)));
+        Ok(ReduceOutcome {
+            hop_bytes_tx: tx.bytes_tx() - bytes0,
+            hop_frames_tx: tx.frames_tx() - frames0,
+            result_nnz: out.nnz(),
+            dropped_entries: dropped_total,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::feedback::FeedbackConfig;
+    use crate::transport::InProcTransport;
+
+    fn sg(d: u32, exact: &[(u32, f32)], shared: &[(u32, bool)], mag: f32) -> SparseGrad {
+        SparseGrad {
+            d,
+            exact: exact.to_vec(),
+            shared: shared.to_vec(),
+            shared_mag: mag,
+        }
+    }
+
+    fn dense_sum(inputs: &[SparseGrad]) -> Vec<f32> {
+        let d = inputs[0].d as usize;
+        let mut out = vec![0.0f32; d];
+        for g in inputs {
+            for (i, v) in g.to_dense().into_iter().enumerate() {
+                out[i] += v;
+            }
+        }
+        out
+    }
+
+    fn ring_addrs(tag: &str, m: usize) -> Vec<String> {
+        (0..m).map(|r| format!("{tag}-{r}")).collect()
+    }
+
+    #[test]
+    fn chunk_bounds_tile_the_dimension() {
+        for &(d, m) in &[(10u32, 3u32), (7, 8), (1, 4), (1 << 20, 16), (5, 5)] {
+            let mut prev_hi = 0u32;
+            for c in 0..m {
+                let (lo, hi) = chunk_bounds(d, m, c);
+                assert_eq!(lo, prev_hi, "chunks must tile contiguously");
+                assert!(hi >= lo);
+                assert!(hi - lo <= d / m + 1, "widths differ by at most one");
+                prev_hi = hi;
+            }
+            assert_eq!(prev_hi, d, "chunks must cover [0, d)");
+        }
+    }
+
+    #[test]
+    fn hash_cell_is_deterministic_and_in_range() {
+        for i in 0..1000u32 {
+            for row in 0..4usize {
+                let (b1, s1) = hash_cell(42, row, i, 64);
+                let (b2, s2) = hash_cell(42, row, i, 64);
+                assert_eq!((b1, s1.to_bits()), (b2, s2.to_bits()));
+                assert!(b1 < 64);
+                assert!(s1 == 1.0 || s1 == -1.0);
+            }
+        }
+        // Different seeds decorrelate at least one of the first few cells.
+        assert!((0..16u32).any(|i| hash_cell(1, 0, i, 64) != hash_cell(2, 0, i, 64)));
+    }
+
+    #[test]
+    fn exact_ring_reduce_matches_dense_sum() {
+        let m = 3;
+        let inputs = vec![
+            sg(13, &[(0, 1.0), (5, -2.0), (12, 4.0)], &[(3, true)], 0.5),
+            sg(13, &[(5, 1.5), (7, 0.25)], &[(0, false), (9, true)], 2.0),
+            sg(13, &[(2, -1.0), (12, 1.0)], &[], 0.0),
+        ];
+        let expect = dense_sum(&inputs);
+        let transport = InProcTransport::new();
+        let peers = form_ring_local(&transport, m, WireCodec::Raw, &ring_addrs("xring", m)).unwrap();
+        let outs: Vec<SparseGrad> = std::thread::scope(|s| {
+            let handles: Vec<_> = peers
+                .into_iter()
+                .zip(&inputs)
+                .map(|(mut peer, input)| {
+                    s.spawn(move || {
+                        let mut red = RingReducer::new(WireCodec::Raw, None);
+                        let mut out = SparseGrad::empty(0);
+                        let oc = red.reduce(&mut peer, input, &mut out, None).unwrap();
+                        assert!(oc.hop_bytes_tx > 0);
+                        assert_eq!(oc.result_nnz, out.nnz());
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for out in &outs {
+            let got = out.to_dense();
+            for (g, e) in got.iter().zip(&expect) {
+                assert!((g - e).abs() < 1e-6, "got {got:?}, expect {expect:?}");
+            }
+            // Bitwise identical across ranks, not merely close.
+            assert_eq!(out.exact, outs[0].exact);
+        }
+    }
+
+    #[test]
+    fn budgeted_reduce_conserves_mass_through_residuals() {
+        let m = 2;
+        let inputs = vec![
+            sg(8, &[(0, 3.0), (1, 0.1), (4, -2.0), (6, 0.2)], &[], 0.0),
+            sg(8, &[(1, 0.3), (3, 5.0), (6, -0.1), (7, 1.0)], &[], 0.0),
+        ];
+        let expect: f32 = dense_sum(&inputs).iter().sum();
+        let transport = InProcTransport::new();
+        let peers = form_ring_local(&transport, m, WireCodec::Raw, &ring_addrs("bring", m)).unwrap();
+        let results: Vec<(SparseGrad, f64, usize)> = std::thread::scope(|s| {
+            let handles: Vec<_> = peers
+                .into_iter()
+                .zip(&inputs)
+                .map(|(mut peer, input)| {
+                    s.spawn(move || {
+                        let mut red = RingReducer::new(WireCodec::Raw, Some(2));
+                        let mut res = FeedbackState::new(FeedbackConfig::default());
+                        let mut out = SparseGrad::empty(0);
+                        let oc = red.reduce(&mut peer, input, &mut out, Some(&mut res)).unwrap();
+                        let res_sum: f64 =
+                            res.layer_residual(0).iter().map(|&x| x as f64).sum();
+                        (out, res_sum, oc.dropped_entries)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(results[0].0.exact, results[1].0.exact);
+        let result_sum: f32 = results[0].0.to_dense().iter().sum();
+        let residual_sum: f64 = results.iter().map(|r| r.1).sum();
+        assert!(
+            (result_sum as f64 + residual_sum - expect as f64).abs() < 1e-5,
+            "dropped mass must land in exactly one residual"
+        );
+        assert!(results.iter().any(|r| r.2 > 0), "budget 2 must drop entries");
+    }
+
+    #[test]
+    fn single_rank_reduce_is_identity_with_zero_hops() {
+        let transport = InProcTransport::new();
+        let mut peers =
+            form_ring_local(&transport, 1, WireCodec::Raw, &ring_addrs("sring", 1)).unwrap();
+        let input = sg(6, &[(1, 2.0), (4, -1.0)], &[(5, false)], 0.5);
+        let mut red = RingReducer::new(WireCodec::Raw, None);
+        let mut out = SparseGrad::empty(0);
+        let oc = red.reduce(&mut peers[0], &input, &mut out, None).unwrap();
+        assert_eq!(oc.hop_bytes_tx, 0);
+        assert_eq!(oc.hop_frames_tx, 0);
+        assert_eq!(out.to_dense(), input.to_dense());
+    }
+
+    #[test]
+    fn aligned_ranks_agree_and_carry_exact_sums() {
+        let m = 3;
+        let d = 32;
+        // Three heavy coordinates spread across ranks; the rest is noise an
+        // order of magnitude smaller.
+        let inputs = vec![
+            sg(d, &[(3, 10.0), (8, 0.2), (20, -0.1)], &[], 0.0),
+            sg(d, &[(3, 2.0), (17, -12.0), (25, 0.3)], &[], 0.0),
+            sg(d, &[(9, 8.0), (17, -1.0), (30, 0.15)], &[], 0.0),
+        ];
+        let expect = dense_sum(&inputs);
+        let cfg = AlignedConfig {
+            rows: 5,
+            buckets: 256,
+            k: 4,
+            seed: 7,
+        };
+        let transport = InProcTransport::new();
+        let peers = form_ring_local(&transport, m, WireCodec::Raw, &ring_addrs("aring", m)).unwrap();
+        let outs: Vec<SparseGrad> = std::thread::scope(|s| {
+            let handles: Vec<_> = peers
+                .into_iter()
+                .zip(&inputs)
+                .map(|(mut peer, input)| {
+                    s.spawn(move || {
+                        let mut red = RingReducer::new(WireCodec::Raw, None);
+                        let mut out = SparseGrad::empty(0);
+                        let oc = red
+                            .reduce_aligned(&mut peer, &cfg, input, &mut out, None)
+                            .unwrap();
+                        assert_eq!(oc.result_nnz, cfg.k);
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for out in &outs {
+            assert_eq!(out.exact, outs[0].exact, "aligned selection must agree");
+        }
+        // Selected coordinates carry their exact dense sums — the sketch
+        // only chooses which coordinates travel.
+        for &(i, v) in &outs[0].exact {
+            assert!(
+                (v - expect[i as usize]).abs() < 1e-6,
+                "coord {i}: got {v}, expect {}",
+                expect[i as usize]
+            );
+        }
+        // The three heavy hitters must be among the selected four.
+        let sel: Vec<u32> = outs[0].exact.iter().map(|&(i, _)| i).collect();
+        for heavy in [3u32, 9, 17] {
+            assert!(sel.contains(&heavy), "heavy coord {heavy} missed: {sel:?}");
+        }
+    }
+}

@@ -23,6 +23,24 @@ pub enum ReduceAlgo {
     Sparse,
 }
 
+/// Typed failure of an aggregation round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceError {
+    /// [`Aggregator::reduce`] was called with zero worker messages; there is
+    /// nothing to average and `1/M` is undefined.
+    EmptyWorkers,
+}
+
+impl std::fmt::Display for ReduceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReduceError::EmptyWorkers => write!(f, "reduce called with no worker gradients"),
+        }
+    }
+}
+
+impl std::error::Error for ReduceError {}
+
 /// Result of one aggregation round.
 #[derive(Debug, Clone)]
 pub struct AggregateOutput {
@@ -66,31 +84,47 @@ impl Aggregator {
     /// accounting. This is the honest path used by integration tests; the
     /// figure drivers use [`Aggregator::reduce_decoded`] on pre-encoded
     /// messages when they already hold them.
-    pub fn reduce(&mut self, grads: &[SparseGrad], out: &mut [f32]) -> AggregateOutput {
+    pub fn reduce(
+        &mut self,
+        grads: &[SparseGrad],
+        out: &mut [f32],
+    ) -> Result<AggregateOutput, ReduceError> {
         let m = grads.len();
-        assert!(m > 0, "no workers");
-        let mut upload_bytes = 0u64;
-        if self.decode_buf.len() < m {
+        if m == 0 {
+            return Err(ReduceError::EmptyWorkers);
+        }
+        // Bound scratch to the current worker count: shrinking drops the
+        // excess decoded messages (and their index/value heaps) instead of
+        // pinning the high-water mark forever.
+        if self.decode_buf.len() != m {
             self.decode_buf.resize_with(m, || SparseGrad::empty(0));
         }
+        let mut per_worker = std::mem::take(&mut self.worker_bytes);
+        per_worker.clear();
         for (sg, slot) in grads.iter().zip(self.decode_buf.iter_mut()) {
             coding::encode(sg, &mut self.wire_buf);
-            upload_bytes += self.wire_buf.len() as u64;
+            per_worker.push(self.wire_buf.len() as u64);
             coding::decode_into(&self.wire_buf, slot).expect("self-encoded message");
         }
         let decoded = std::mem::take(&mut self.decode_buf);
-        let res = self.reduce_decoded(&decoded[..m], upload_bytes, out);
+        let res = self.reduce_decoded(&decoded[..m], &per_worker, out);
         self.decode_buf = decoded;
-        res
+        self.worker_bytes = per_worker;
+        Ok(res)
     }
 
-    /// Average already-decoded messages into `out`.
+    /// Average already-decoded messages into `out`. `worker_bytes[m]` is the
+    /// measured encoded length of worker `m`'s message — the real sizes, so
+    /// heterogeneous uploads cost what they actually cost under the network
+    /// model (a uniform split would hide the straggler the ring max-chunk
+    /// term keys on).
     pub fn reduce_decoded(
         &mut self,
         grads: &[SparseGrad],
-        upload_bytes: u64,
+        worker_bytes: &[u64],
         out: &mut [f32],
     ) -> AggregateOutput {
+        debug_assert_eq!(grads.len(), worker_bytes.len());
         let m = grads.len();
         out.fill(0.0);
         let inv_m = 1.0 / m as f32;
@@ -115,16 +149,10 @@ impl Aggregator {
         // optional step-7 re-sparsification is applied by the coordinator
         // before calling this when enabled.
         let broadcast_bytes = (out.len() * 4) as u64;
-        let per_worker = upload_bytes / m as u64;
-        self.worker_bytes.clear();
-        self.worker_bytes.extend((0..m).map(|i| {
-            // Distribute the remainder deterministically.
-            per_worker + if (i as u64) < upload_bytes % m as u64 { 1 } else { 0 }
-        }));
         AggregateOutput {
-            upload_bytes,
+            upload_bytes: worker_bytes.iter().sum(),
             broadcast_bytes,
-            sim_time_s: self.net.round_time_s(&self.worker_bytes, broadcast_bytes),
+            sim_time_s: self.net.round_time_s(worker_bytes, broadcast_bytes),
         }
     }
 }
@@ -132,6 +160,7 @@ impl Aggregator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::Topology;
     use crate::rngkit::RandArray;
     use crate::sparsify::{greedy_probs, sample_sparse};
 
@@ -152,8 +181,8 @@ mod tests {
         let mut b = Aggregator::new(NetworkModel::datacenter_10g(), ReduceAlgo::Sparse);
         let mut out_a = vec![0.0; d];
         let mut out_b = vec![0.0; d];
-        let ra = a.reduce(&grads, &mut out_a);
-        let rb = b.reduce(&grads, &mut out_b);
+        let ra = a.reduce(&grads, &mut out_a).unwrap();
+        let rb = b.reduce(&grads, &mut out_b).unwrap();
         for i in 0..d {
             assert!((out_a[i] - out_b[i]).abs() < 1e-6, "coord {i}");
         }
@@ -166,7 +195,7 @@ mod tests {
         let grads: Vec<SparseGrad> = (0..3).map(|m| worker_grad(d, 200 + m, 0.5)).collect();
         let mut agg = Aggregator::new(NetworkModel::datacenter_10g(), ReduceAlgo::Sparse);
         let mut out = vec![0.0; d];
-        agg.reduce(&grads, &mut out);
+        agg.reduce(&grads, &mut out).unwrap();
         let mut expect = vec![0.0f64; d];
         for sg in &grads {
             for (i, v) in sg.to_dense().into_iter().enumerate() {
@@ -185,8 +214,8 @@ mod tests {
         let dense: Vec<SparseGrad> = (0..4).map(|m| worker_grad(d, 300 + m, 1.0)).collect();
         let mut agg = Aggregator::new(NetworkModel::commodity_1g(), ReduceAlgo::Sparse);
         let mut out = vec![0.0; d];
-        let rs = agg.reduce(&sparse, &mut out);
-        let rd = agg.reduce(&dense, &mut out);
+        let rs = agg.reduce(&sparse, &mut out).unwrap();
+        let rd = agg.reduce(&dense, &mut out).unwrap();
         assert!(rs.upload_bytes * 4 < rd.upload_bytes, "sparsification should shrink uploads");
         assert!(rs.sim_time_s < rd.sim_time_s);
         assert_eq!(rs.broadcast_bytes, (d * 4) as u64);
@@ -198,10 +227,58 @@ mod tests {
         let g = worker_grad(d, 400, 0.9);
         let mut agg = Aggregator::new(NetworkModel::datacenter_10g(), ReduceAlgo::Sparse);
         let mut out = vec![0.0; d];
-        agg.reduce(std::slice::from_ref(&g), &mut out);
+        agg.reduce(std::slice::from_ref(&g), &mut out).unwrap();
         let dense = g.to_dense();
         for i in 0..d {
             assert!((out[i] - dense[i]).abs() < 1e-7);
         }
+    }
+
+    #[test]
+    fn empty_worker_set_is_typed_error_not_panic() {
+        let mut agg = Aggregator::new(NetworkModel::datacenter_10g(), ReduceAlgo::Sparse);
+        let mut out = vec![0.0; 16];
+        assert_eq!(agg.reduce(&[], &mut out), Err(ReduceError::EmptyWorkers));
+    }
+
+    #[test]
+    fn decode_scratch_tracks_worker_count() {
+        // Regression: `decode_buf` only ever grew, so one wide round pinned
+        // the high-water mark of decoded-message heap forever.
+        let d = 256;
+        let wide: Vec<SparseGrad> = (0..8).map(|m| worker_grad(d, 500 + m, 0.3)).collect();
+        let narrow: Vec<SparseGrad> = (0..2).map(|m| worker_grad(d, 600 + m, 0.3)).collect();
+        let mut agg = Aggregator::new(NetworkModel::datacenter_10g(), ReduceAlgo::Sparse);
+        let mut out = vec![0.0; d];
+        agg.reduce(&wide, &mut out).unwrap();
+        assert_eq!(agg.decode_buf.len(), 8);
+        agg.reduce(&narrow, &mut out).unwrap();
+        assert_eq!(agg.decode_buf.len(), 2, "scratch must shrink with m");
+    }
+
+    #[test]
+    fn heterogeneous_uploads_use_measured_per_worker_bytes() {
+        // Regression: `reduce_decoded` used to spread the total uniformly,
+        // which hides the straggler the ring max-chunk term keys on.
+        let d = 4096;
+        let mut grads: Vec<SparseGrad> = (0..3).map(|m| worker_grad(d, 700 + m, 0.01)).collect();
+        grads.push(worker_grad(d, 703, 1.0)); // one near-dense straggler
+        let net = NetworkModel {
+            topology: Topology::Ring,
+            ..NetworkModel::commodity_1g()
+        };
+        let mut agg = Aggregator::new(net, ReduceAlgo::Sparse);
+        let mut out = vec![0.0; d];
+        let res = agg.reduce(&grads, &mut out).unwrap();
+        // The fabricated-uniform accounting would have charged the mean
+        // upload; the honest ring time keys on the max.
+        let uniform = vec![res.upload_bytes / 4; 4];
+        let fabricated = net.round_time_s(&uniform, res.broadcast_bytes);
+        assert!(
+            res.sim_time_s > fabricated,
+            "measured {} !> uniform-fabricated {}",
+            res.sim_time_s,
+            fabricated
+        );
     }
 }

@@ -1,0 +1,247 @@
+//! Sparse merge kernels for collective reductions.
+//!
+//! A ring reduce-scatter sums *messages*, not dense vectors: each hop merges
+//! two [`SparseGrad`]s by index union, summing magnitudes where indices
+//! collide, and (optionally) re-sparsifies the partial sum so per-hop message
+//! size stays bounded. The kernels here are the arithmetic core of
+//! [`crate::collective`]; they are deterministic — identical inputs produce
+//! bitwise-identical outputs regardless of backend or thread count — because
+//! the ring schedule pins the merge order and these kernels never iterate in
+//! hash or address order.
+
+use crate::sparsify::SparseGrad;
+
+/// Iterator over a [`SparseGrad`]'s decoded `(index, value)` entries in
+/// ascending index order, interleaving the exact (`Q_A`) and shared-magnitude
+/// (`Q_B`) streams (each is ascending and they are disjoint).
+pub struct Entries<'a> {
+    exact: std::slice::Iter<'a, (u32, f32)>,
+    shared: std::slice::Iter<'a, (u32, bool)>,
+    mag: f32,
+    next_exact: Option<(u32, f32)>,
+    next_shared: Option<(u32, bool)>,
+}
+
+impl<'a> Entries<'a> {
+    pub fn new(sg: &'a SparseGrad) -> Self {
+        let mut exact = sg.exact.iter();
+        let mut shared = sg.shared.iter();
+        let next_exact = exact.next().copied();
+        let next_shared = shared.next().copied();
+        Self {
+            exact,
+            shared,
+            mag: sg.shared_mag,
+            next_exact,
+            next_shared,
+        }
+    }
+}
+
+impl Iterator for Entries<'_> {
+    type Item = (u32, f32);
+
+    fn next(&mut self) -> Option<(u32, f32)> {
+        match (self.next_exact, self.next_shared) {
+            (None, None) => None,
+            (Some((i, v)), None) => {
+                self.next_exact = self.exact.next().copied();
+                Some((i, v))
+            }
+            (None, Some((i, neg))) => {
+                self.next_shared = self.shared.next().copied();
+                Some((i, if neg { -self.mag } else { self.mag }))
+            }
+            (Some((ie, v)), Some((is, neg))) => {
+                if ie < is {
+                    self.next_exact = self.exact.next().copied();
+                    Some((ie, v))
+                } else {
+                    self.next_shared = self.shared.next().copied();
+                    Some((is, if neg { -self.mag } else { self.mag }))
+                }
+            }
+        }
+    }
+}
+
+/// `out = a + b` as an exact-valued sparse message: index union, colliding
+/// magnitudes summed (`a`'s contribution added first — the caller's hop order
+/// pins float associativity). `out` is reset to dimension `a.d`; the result
+/// carries everything in `exact` because a sum of two messages no longer has
+/// a common shared magnitude.
+pub fn merge_sum(a: &SparseGrad, b: &SparseGrad, out: &mut SparseGrad) {
+    assert_eq!(a.d, b.d, "dimension mismatch in merge_sum");
+    out.reset(a.d as usize);
+    let mut ita = Entries::new(a).peekable();
+    let mut itb = Entries::new(b).peekable();
+    loop {
+        match (ita.peek().copied(), itb.peek().copied()) {
+            (None, None) => break,
+            (Some((i, v)), None) => {
+                out.exact.push((i, v));
+                ita.next();
+            }
+            (None, Some((i, v))) => {
+                out.exact.push((i, v));
+                itb.next();
+            }
+            (Some((ia, va)), Some((ib, vb))) => {
+                if ia < ib {
+                    out.exact.push((ia, va));
+                    ita.next();
+                } else if ib < ia {
+                    out.exact.push((ib, vb));
+                    itb.next();
+                } else {
+                    out.exact.push((ia, va + vb));
+                    ita.next();
+                    itb.next();
+                }
+            }
+        }
+    }
+}
+
+/// Rewrite `sg` so every entry lives in `exact` (ascending index) and the
+/// shared stream is empty. Partial sums lose the common-magnitude structure
+/// after the first merge anyway; normalizing first keeps the merge kernels
+/// single-stream.
+pub fn promote_to_exact(sg: &mut SparseGrad) {
+    if sg.shared.is_empty() {
+        sg.shared_mag = 0.0;
+        return;
+    }
+    let mag = sg.shared_mag;
+    let shared = std::mem::take(&mut sg.shared);
+    sg.exact
+        .extend(shared.iter().map(|&(i, neg)| (i, if neg { -mag } else { mag })));
+    // Exact and shared index sets are disjoint and each ascending; one sort
+    // restores global ascending order deterministically.
+    sg.exact.sort_unstable_by_key(|&(i, _)| i);
+    sg.shared = shared; // keep the (now empty, cleared below) allocation
+    sg.shared.clear();
+    sg.shared_mag = 0.0;
+}
+
+/// Keep the `budget` largest-magnitude entries of `sg` (deterministic
+/// tie-break: larger |value| first via IEEE total order, then lower index)
+/// and append every dropped `(index, value)` to `dropped` so the caller can
+/// fold the lost mass into an error-feedback residual. No-op when the
+/// message already fits.
+pub fn resparsify_top(sg: &mut SparseGrad, budget: usize, dropped: &mut Vec<(u32, f32)>) {
+    promote_to_exact(sg);
+    if sg.exact.len() <= budget {
+        return;
+    }
+    sg.exact.sort_unstable_by(|a, b| {
+        b.1.abs()
+            .total_cmp(&a.1.abs())
+            .then_with(|| a.0.cmp(&b.0))
+    });
+    dropped.extend(sg.exact.drain(budget..));
+    sg.exact.sort_unstable_by_key(|&(i, _)| i);
+}
+
+/// Concatenate per-layer messages into one flat message over the summed
+/// dimension `Σ dims[l]`, with layer `l`'s coordinates shifted by the prefix
+/// offset. Everything is promoted to exact values.
+pub fn flatten_concat(layers: &[&SparseGrad], out: &mut SparseGrad) {
+    let total: usize = layers.iter().map(|sg| sg.d as usize).sum();
+    out.reset(total);
+    let mut offset = 0u32;
+    for sg in layers {
+        out.exact.extend(Entries::new(sg).map(|(i, v)| (offset + i, v)));
+        offset += sg.d;
+    }
+}
+
+/// Scatter a flat concatenated message back onto per-layer dense buffers:
+/// entry `(i, v)` lands in the layer whose offset range contains `i`, scaled
+/// by `alpha`. Inverse of [`flatten_concat`]'s coordinate shift.
+pub fn scatter_concat(sg: &SparseGrad, alpha: f32, layers: &mut [&mut [f32]]) {
+    let total: usize = layers.iter().map(|l| l.len()).sum();
+    assert_eq!(total, sg.d as usize, "layer dims do not cover the flat message");
+    let mut layer = 0usize;
+    let mut offset = 0usize;
+    for (i, v) in Entries::new(sg) {
+        let i = i as usize;
+        // Entries ascend, so the layer cursor only ever moves forward.
+        while i >= offset + layers[layer].len() {
+            offset += layers[layer].len();
+            layer += 1;
+        }
+        layers[layer][i - offset] += alpha * v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sg(d: u32, exact: &[(u32, f32)], shared: &[(u32, bool)], mag: f32) -> SparseGrad {
+        SparseGrad {
+            d,
+            exact: exact.to_vec(),
+            shared: shared.to_vec(),
+            shared_mag: mag,
+        }
+    }
+
+    #[test]
+    fn entries_interleave_both_streams_ascending() {
+        let g = sg(10, &[(1, 2.0), (5, -1.0)], &[(0, true), (3, false)], 0.5);
+        let got: Vec<(u32, f32)> = Entries::new(&g).collect();
+        assert_eq!(got, vec![(0, -0.5), (1, 2.0), (3, 0.5), (5, -1.0)]);
+    }
+
+    #[test]
+    fn merge_sum_matches_dense_sum() {
+        let a = sg(8, &[(0, 1.0), (4, 2.0)], &[(2, false)], 0.25);
+        let b = sg(8, &[(2, 3.0), (4, -1.5)], &[(7, true)], 0.75);
+        let mut out = SparseGrad::empty(0);
+        merge_sum(&a, &b, &mut out);
+        let mut expect = a.to_dense();
+        for (i, v) in b.to_dense().into_iter().enumerate() {
+            expect[i] += v;
+        }
+        assert_eq!(out.to_dense(), expect);
+        assert!(out.shared.is_empty());
+        assert!(out.exact.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+
+    #[test]
+    fn resparsify_keeps_top_budget_and_reports_dropped() {
+        let mut g = sg(8, &[(0, 0.1), (3, -5.0), (6, 2.0)], &[(1, false)], 3.0);
+        let mut dropped = Vec::new();
+        resparsify_top(&mut g, 2, &mut dropped);
+        assert_eq!(g.exact, vec![(1, 3.0), (3, -5.0)]);
+        // Dropped mass is reported so the caller can fold it into a residual.
+        let mut d2 = dropped.clone();
+        d2.sort_unstable_by_key(|&(i, _)| i);
+        assert_eq!(d2, vec![(0, 0.1), (6, 2.0)]);
+    }
+
+    #[test]
+    fn resparsify_tie_breaks_by_lower_index() {
+        let mut g = sg(4, &[(0, 1.0), (1, -1.0), (2, 1.0)], &[], 0.0);
+        let mut dropped = Vec::new();
+        resparsify_top(&mut g, 2, &mut dropped);
+        assert_eq!(g.exact, vec![(0, 1.0), (1, -1.0)]);
+        assert_eq!(dropped, vec![(2, 1.0)]);
+    }
+
+    #[test]
+    fn flatten_then_scatter_round_trips() {
+        let a = sg(4, &[(1, 2.0)], &[(3, true)], 0.5);
+        let b = sg(6, &[(0, -1.0), (5, 4.0)], &[], 0.0);
+        let mut flat = SparseGrad::empty(0);
+        flatten_concat(&[&a, &b], &mut flat);
+        assert_eq!(flat.d, 10);
+        let mut la = vec![0.0f32; 4];
+        let mut lb = vec![0.0f32; 6];
+        scatter_concat(&flat, 1.0, &mut [la.as_mut_slice(), lb.as_mut_slice()]);
+        assert_eq!(la, a.to_dense());
+        assert_eq!(lb, b.to_dense());
+    }
+}

@@ -10,9 +10,10 @@
 //! can report communication-bound speedups.
 
 mod allreduce;
+pub mod merge;
 mod network;
 
-pub use allreduce::{AggregateOutput, Aggregator, ReduceAlgo};
+pub use allreduce::{AggregateOutput, Aggregator, ReduceAlgo, ReduceError};
 pub use network::{NetworkModel, Topology};
 
 #[cfg(test)]

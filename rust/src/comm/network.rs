@@ -66,11 +66,15 @@ impl NetworkModel {
                 upload + self.message_time_s(broadcast_bytes)
             }
             Topology::Ring => {
-                // 2(M−1) phases each carrying the max worker chunk of ~1/M.
+                // (M−1) reduce-scatter phases each carrying the max worker
+                // chunk of ~1/M, then (M−1) all-gather phases each carrying
+                // ~1/M of the broadcast payload. Every phase pays the α
+                // latency floor.
                 let m = worker_bytes.len().max(1) as f64;
                 let max_bytes = worker_bytes.iter().copied().max().unwrap_or(0) as f64;
-                let phase = self.alpha_s + (max_bytes / m) / self.beta_bytes_per_s;
-                2.0 * (m - 1.0) * phase
+                let scatter = self.alpha_s + (max_bytes / m) / self.beta_bytes_per_s;
+                let gather = self.alpha_s + (broadcast_bytes as f64 / m) / self.beta_bytes_per_s;
+                (m - 1.0) * (scatter + gather)
             }
         }
     }
@@ -111,6 +115,25 @@ mod tests {
         let tiny_dense = net.round_time_s(&[4000; 4], 4000);
         let tiny_sparse = net.round_time_s(&[200; 4], 200);
         assert!(tiny_sparse > tiny_dense / 3.0);
+    }
+
+    #[test]
+    fn ring_round_strictly_increases_with_broadcast_payload() {
+        // Regression: the Ring arm used to drop `broadcast_bytes` entirely,
+        // making ring-vs-star comparisons dishonest (the all-gather phases
+        // were free). Ring time must be strictly monotone in the broadcast
+        // payload.
+        let net = NetworkModel {
+            topology: Topology::Ring,
+            ..NetworkModel::datacenter_10g()
+        };
+        let uploads = vec![1_000_000u64; 8];
+        let mut prev = net.round_time_s(&uploads, 0);
+        for bcast in [1_000u64, 1_000_000, 100_000_000] {
+            let t = net.round_time_s(&uploads, bcast);
+            assert!(t > prev, "broadcast {bcast}: {t} !> {prev}");
+            prev = t;
+        }
     }
 
     #[test]

@@ -29,10 +29,12 @@
 
 use crate::api::MethodSpec;
 use crate::coding::WireCodec;
+use crate::collective::{self, RingPeer, RingReducer};
+use crate::comm::{merge, Topology};
 use crate::config::Method;
 use crate::coordinator::sync::estimate_f_star;
 use crate::data::gen_logistic;
-use crate::feedback::{CommSchedule, FeedbackConfig};
+use crate::feedback::{CommSchedule, FeedbackConfig, FeedbackState};
 use crate::metrics::{CurvePoint, RunCurve, SparsityMeter, VarianceRatio};
 use crate::model::{ConvexModel, LogisticModel};
 use crate::rngkit::{RandArray, Xoshiro256pp};
@@ -94,6 +96,19 @@ pub struct RunPlan {
     /// files merge into one timeline keyed by worker id. Recording never
     /// changes the computed bytes or weights.
     pub trace: TraceConfig,
+    /// Communication topology. Under [`Topology::Ring`] (and `workers > 1`)
+    /// the workers bootstrap a peer ring through `RING_ADDR` relays, reduce
+    /// every block's compressed gradients among themselves
+    /// ([`crate::collective::RingReducer`]), and rank 0 alone pushes the
+    /// reduced sum — the server applies **one** update per block instead of
+    /// `M`. Star (the default) is the historical per-worker push schedule,
+    /// byte-for-byte unchanged. Ring requires a sparse-message method.
+    pub topology: Topology,
+    /// Aligned-sparsity ring mode: ranks agree on a shared top-k index set
+    /// via a count sketch and reduce index-free
+    /// ([`crate::collective::RingReducer::reduce_aligned`]). Ignored under
+    /// [`Topology::Star`].
+    pub aligned: bool,
 }
 
 /// Deprecated name of [`RunPlan`].
@@ -127,6 +142,11 @@ impl Default for RunPlan {
             // The CI trace leg (GSPARSE_TRACE=json) flows through plans
             // built without an explicit config, like SessionBuilder.
             trace: TraceConfig::from_env(),
+            // Plans built through Session::dist_plan inherit the session's
+            // topology (including its GSPARSE_TOPOLOGY env default); direct
+            // RunPlan construction keeps the historical star schedule.
+            topology: Topology::Star,
+            aligned: false,
         }
     }
 }
@@ -134,13 +154,15 @@ impl Default for RunPlan {
 /// Version 2 appended the wire-codec byte; version 3 appended the
 /// local-step period and the error-feedback toggle + decay; version 4
 /// appended the pipeline depth; version 5 appended the trace config
-/// (mode byte + u32 ring capacity).
-const CONFIG_VERSION: u8 = 5;
+/// (mode byte + u32 ring capacity); version 6 appended the topology and
+/// aligned-sparsity bytes.
+const CONFIG_VERSION: u8 = 6;
 /// Offset of the codec byte: version + method + 6×u32 + u64 seed + 5×f32.
 const CONFIG_CODEC_AT: usize = 2 + 6 * 4 + 8 + 5 * 4;
 /// Codec byte + u32 local_steps + feedback flag + f32 decay + u32 pipeline
-/// + trace mode byte + u32 trace ring capacity.
-const CONFIG_LEN: usize = CONFIG_CODEC_AT + 1 + 4 + 1 + 4 + 4 + 1 + 4;
+/// + trace mode byte + u32 trace ring capacity + topology byte + aligned
+/// byte.
+const CONFIG_LEN: usize = CONFIG_CODEC_AT + 1 + 4 + 1 + 4 + 4 + 1 + 4 + 1 + 1;
 
 impl RunPlan {
     /// Serialize for the `CONFIG` frame (fixed-width LE fields).
@@ -174,6 +196,11 @@ impl RunPlan {
         );
         out.extend_from_slice(&(self.pipeline.max(1) as u32).to_le_bytes());
         out.extend_from_slice(&self.trace.wire_bytes());
+        out.push(match self.topology {
+            Topology::Star => 0,
+            Topology::Ring => 1,
+        });
+        out.push(u8::from(self.aligned));
         out
     }
 
@@ -218,6 +245,13 @@ impl RunPlan {
         );
         let trace = TraceConfig::from_wire(buf[codec_at + 14], trace_cap)
             .ok_or_else(|| anyhow::anyhow!("unknown trace mode {}", buf[codec_at + 14]))?;
+        let topology = match buf[codec_at + 19] {
+            0 => Topology::Star,
+            1 => Topology::Ring,
+            other => anyhow::bail!("unknown topology id {other}"),
+        };
+        let aligned_flag = buf[codec_at + 20];
+        anyhow::ensure!(aligned_flag <= 1, "unknown aligned flag {aligned_flag}");
         Ok(Self {
             workers: u32_at(0) as usize,
             rounds: u32_at(1) as usize,
@@ -237,7 +271,22 @@ impl RunPlan {
             feedback,
             pipeline,
             trace,
+            topology,
+            aligned: aligned_flag == 1,
         })
+    }
+
+    /// Whether this plan runs the ring collective (ring topology with more
+    /// than one worker; a single worker degenerates to the star schedule).
+    fn ring_mode(&self) -> bool {
+        self.topology == Topology::Ring && self.workers > 1
+    }
+
+    /// The method's target density when it produces sparse messages — ring
+    /// mode requires one (quantized/dense fallbacks have no sparse merge).
+    fn sparse_density(&self) -> Option<f32> {
+        MethodSpec::from_parts(self.method, self.rho, self.c1 * self.c2, self.qsgd_bits)
+            .density()
     }
 }
 
@@ -279,6 +328,14 @@ fn fnv1a(mut hash: u64, bytes: &[u8]) -> u64 {
 /// backends and tests control the address.
 pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistReport> {
     let d = cfg.d;
+    let ring = cfg.ring_mode();
+    if ring {
+        anyhow::ensure!(
+            cfg.sparse_density().is_some(),
+            "ring topology requires a sparse-message method, not {}",
+            cfg.method
+        );
+    }
     let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
     let model = LogisticModel::new(cfg.reg);
 
@@ -300,9 +357,38 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
     let counters: Vec<LinkCounters> = conns.iter().map(|c| c.counters()).collect();
     let cfg_bytes = cfg.encode();
     let mut txbuf = Vec::new();
+    let mut rxbuf = Vec::new();
     for conn in conns.iter_mut() {
         frame::encode_config(&mut txbuf, &cfg_bytes);
         conn.send(&txbuf)?;
+    }
+
+    // ---- ring bootstrap: collect every worker's ring-listener address,
+    // then relay each worker its right neighbour's — the workers open the
+    // peer links themselves ([`collective::connect_ring`]); the server
+    // never sees ring traffic, only this handshake ----
+    if ring {
+        let mut ring_addrs = vec![String::new(); cfg.workers];
+        for (wid, conn) in conns.iter_mut().enumerate() {
+            conn.recv(&mut rxbuf)?;
+            match frame::decode(&rxbuf)? {
+                MsgView::RingAddr { worker_id, addr } => {
+                    anyhow::ensure!(
+                        worker_id as usize == wid,
+                        "ring address announced id {worker_id} on worker {wid}'s link"
+                    );
+                    ring_addrs[wid] = std::str::from_utf8(addr)
+                        .map_err(|_| anyhow::anyhow!("ring address is not utf-8"))?
+                        .to_string();
+                }
+                _ => anyhow::bail!("expected ring address from {}", conn.peer()),
+            }
+        }
+        for (wid, conn) in conns.iter_mut().enumerate() {
+            let right = (wid + 1) % cfg.workers;
+            frame::encode_ring_addr(&mut txbuf, right as u32, &ring_addrs[right]);
+            conn.send(&txbuf)?;
+        }
     }
 
     // ---- training state ----
@@ -311,16 +397,20 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
     let mut w = vec![0.0f32; d];
     let mut version = 0u64;
     let mut t = 0u64;
-    let total = (blocks * cfg.workers) as u64;
+    // Ring blocks apply one ring-reduced push; star blocks apply M.
+    let pushes_per_block = if ring { 1 } else { cfg.workers };
+    let total = (blocks * pushes_per_block) as u64;
     let record_every = (total / 50).max(1);
     let mut curve = RunCurve::new(format!("dist-{}(M={})", cfg.method, cfg.workers));
     let mut var_meter = VarianceRatio::default();
     let mut spa_meter = SparsityMeter::default();
-    let net = crate::comm::NetworkModel::commodity_1g();
+    let mut net = crate::comm::NetworkModel::commodity_1g();
+    if ring {
+        net.topology = Topology::Ring;
+    }
     let mut sim_time = 0.0f64;
     let mut max_stale = 0u64;
     let mut digest = 0xCBF2_9CE4_8422_2325u64; // FNV-1a offset basis
-    let mut rxbuf = Vec::new();
     let mut sg = SparseGrad::empty(0);
     let mut round_bytes = vec![0u64; cfg.workers];
     let mut samples_done = 0u64;
@@ -373,7 +463,63 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
                 conn.send(&txbuf)?;
             }
         }
-        // Phase 2: apply one (accumulated) gradient per worker, in
+        // Phase 2 (ring): the workers already reduced among themselves;
+        // rank 0 alone pushes the summed gradient and the server applies
+        // it once, scaled to the mean (`−η/M · Σ g` — the all-reduce SGD
+        // convention, one weight version per block).
+        if ring {
+            let conn = &mut conns[0];
+            {
+                let mut wait = trace::span(trace::Stage::BarrierWait);
+                wait.layer(0);
+                conn.recv(&mut rxbuf)?;
+            }
+            let (header, payload) = match frame::decode(&rxbuf)? {
+                MsgView::Grad { header, payload } => (header, payload),
+                _ => anyhow::bail!("expected ring-reduced gradient from {}", conn.peer()),
+            };
+            anyhow::ensure!(header.kind == 0, "ring pushes are sparse by construction");
+            t += 1;
+            let eta = cfg.lr / (1.0 + t as f32 / cfg.workers as f32);
+            crate::coding::decode_into(payload, &mut sg)?;
+            anyhow::ensure!(
+                sg.d as usize == d,
+                "gradient dimension {} != configured {d}",
+                sg.d
+            );
+            {
+                let mut apply = trace::span(trace::Stage::Apply);
+                apply.bytes(payload.len() as u64);
+                sg.add_into(-eta / cfg.workers as f32, &mut w);
+            }
+            max_stale = max_stale.max(version.saturating_sub(header.based_on));
+            version += 1;
+            digest = fnv1a(digest, payload);
+            var_meter.record(header.q_norm_sq, header.g_norm_sq);
+            spa_meter.record(header.expected_nnz, d);
+            let upload = payload.len() as u64;
+            curve.ledger.record_codec(header.ideal_bits, upload, cfg.codec);
+            // The server cannot see the worker-owned ring links, so the
+            // hop column stays 0 here (the cluster coordinator, which owns
+            // both sides, fills it); the end-to-end column records what a
+            // consumer of the reduced gradient pays.
+            curve.ledger.add_end_to_end_bytes(rxbuf.len() as u64);
+            // Every ring node carries ~the reduced payload across its
+            // 2(M−1) hop phases — feed the α-β ring arm that per-node size.
+            round_bytes.fill(upload);
+            samples_done += block_len * (cfg.batch * cfg.workers) as u64;
+            if t % record_every == 0 || t == total {
+                curve.points.push(CurvePoint {
+                    data_passes: samples_done as f64 / ds.n() as f64,
+                    loss: model.loss(&ds, &w),
+                    comm_bits: curve.ledger.wire_bytes * 8,
+                    wall_ms: start.elapsed().as_secs_f64() * 1e3,
+                });
+            }
+            sim_time += net.round_time_s(&round_bytes, (d * 4) as u64);
+            continue;
+        }
+        // Phase 2 (star): apply one (accumulated) gradient per worker, in
         // worker-id order.
         for (wid, conn) in conns.iter_mut().enumerate() {
             {
@@ -485,14 +631,34 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
     })
 }
 
+/// One dist worker's ring machinery (built only under ring topology): the
+/// peer links, the reusable reducer scratch, and the error-feedback
+/// residual the per-hop budget folds dropped mass into.
+struct RingState {
+    peer: RingPeer,
+    reducer: RingReducer,
+    fb: FeedbackState,
+    aligned_cfg: collective::AlignedConfig,
+    res_sg: SparseGrad,
+    ring_in: SparseGrad,
+    ring_out: SparseGrad,
+}
+
 /// Run the worker side over an established connection. `worker_id` and
 /// `codec` must match the hello this connection was opened with (the id
 /// seeds the RNG streams; the codec was negotiated at accept time, and the
 /// server-shipped config must agree with it).
+///
+/// `ring_env` is the transport + bind address this worker would use for
+/// its ring listener should the server-shipped config request
+/// [`Topology::Ring`] (`"127.0.0.1:0"` for TCP, a per-worker-unique name
+/// for in-proc). `None` is fine for star runs; a ring config without a
+/// ring environment is a clean error.
 pub fn run_worker(
     conn: &mut dyn Connection,
     worker_id: u32,
     codec: WireCodec,
+    ring_env: Option<(&dyn Transport, &str)>,
 ) -> anyhow::Result<()> {
     let mut rxbuf = Vec::new();
     let mut txbuf = Vec::new();
@@ -511,6 +677,55 @@ pub fn run_worker(
     // keyed by worker id so per-process traces merge into one timeline.
     let recorder = trace::Recorder::new(&cfg.trace);
     let _trace_guard = trace::install_opt(recorder.as_ref(), worker_id as u16);
+    // Ring bootstrap: bind a peer listener, announce its address to the
+    // server, learn the right neighbour's from the relay, then form the
+    // ring (connect right, accept left — see [`collective::connect_ring`]).
+    let mut ring_state: Option<RingState> = None;
+    if cfg.ring_mode() {
+        let rho = cfg.sparse_density().ok_or_else(|| {
+            anyhow::anyhow!(
+                "ring topology requires a sparse-message method, not {}",
+                cfg.method
+            )
+        })?;
+        let (transport, bind) = ring_env.ok_or_else(|| {
+            anyhow::anyhow!("server requested ring topology but this worker has no ring transport")
+        })?;
+        let mut listener = transport.listen(bind)?;
+        frame::encode_ring_addr(&mut txbuf, worker_id, &listener.local_addr());
+        conn.send(&txbuf)?;
+        conn.recv(&mut rxbuf)?;
+        let right_addr = match frame::decode(&rxbuf)? {
+            MsgView::RingAddr { worker_id: rid, addr } => {
+                anyhow::ensure!(
+                    rid as usize == (worker_id as usize + 1) % cfg.workers,
+                    "server relayed rank {rid}, expected this worker's right neighbour"
+                );
+                std::str::from_utf8(addr)
+                    .map_err(|_| anyhow::anyhow!("ring address is not utf-8"))?
+                    .to_string()
+            }
+            _ => anyhow::bail!("expected ring address relay from server"),
+        };
+        let peer = collective::connect_ring(
+            transport,
+            listener.as_mut(),
+            &right_addr,
+            worker_id,
+            cfg.workers as u32,
+            codec,
+        )?;
+        let budget = collective::default_budget(rho, cfg.d as u32, cfg.workers);
+        ring_state = Some(RingState {
+            peer,
+            reducer: RingReducer::new(codec, Some(budget)),
+            fb: FeedbackState::new(cfg.feedback.unwrap_or_default()),
+            aligned_cfg: collective::aligned_for(rho, cfg.d as u32, cfg.seed),
+            res_sg: SparseGrad::empty(0),
+            ring_in: SparseGrad::empty(0),
+            ring_out: SparseGrad::empty(0),
+        });
+    }
     let d = cfg.d;
     let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
     let model = LogisticModel::new(cfg.reg);
@@ -593,6 +808,58 @@ pub fn run_worker(
         let g_norm_sq = crate::tensor::norm2_sq(&acc) as f64;
         let stats = compressor.compress_into(&acc, &mut rand, &mut msg);
         let q_norm_sq = msg.norm2_sq();
+        if let Some(rs) = ring_state.as_mut() {
+            let sg_local = match &msg {
+                Compressed::Sparse(sg) => sg,
+                other => anyhow::bail!("ring hops need sparse messages, got {other:?}"),
+            };
+            // Re-inject the mass earlier budget caps dropped on this rank
+            // (standard error feedback around the collective), then reduce.
+            rs.fb.ensure_layout(&[d]);
+            rs.res_sg.reset(d);
+            {
+                let res = rs.fb.layer_residual_mut(0);
+                for (i, v) in res.iter_mut().enumerate() {
+                    if *v != 0.0 {
+                        rs.res_sg.exact.push((i as u32, *v));
+                        *v = 0.0;
+                    }
+                }
+            }
+            merge::merge_sum(&rs.res_sg, sg_local, &mut rs.ring_in);
+            if cfg.aligned {
+                rs.reducer.reduce_aligned(
+                    &mut rs.peer,
+                    &rs.aligned_cfg,
+                    &rs.ring_in,
+                    &mut rs.ring_out,
+                    Some(&mut rs.fb),
+                )?;
+            } else {
+                rs.reducer
+                    .reduce(&mut rs.peer, &rs.ring_in, &mut rs.ring_out, Some(&mut rs.fb))?;
+            }
+            // Rank 0 alone forwards the (every-rank-identical) reduced sum;
+            // the header carries this rank's *local* compression stats —
+            // the meters want the per-worker quantization picture, and the
+            // reduced message's cost is what the payload itself measures.
+            if worker_id == 0 {
+                crate::coding::encode_with(&rs.ring_out, codec, &mut wire);
+                let header = GradHeader {
+                    based_on: version,
+                    g_norm_sq,
+                    q_norm_sq,
+                    expected_nnz: stats.expected_nnz,
+                    ideal_bits: stats.ideal_bits,
+                    kind: 0,
+                };
+                let mut push = trace::span(trace::Stage::Push);
+                push.bytes(wire.len() as u64);
+                frame::encode_grad(&mut txbuf, &header, &wire);
+                conn.send(&txbuf)?;
+            }
+            continue;
+        }
         let (kind, payload): (u8, &[u8]) = match &msg {
             Compressed::Sparse(sg) => {
                 crate::coding::encode_with(sg, codec, &mut wire);
@@ -639,6 +906,18 @@ pub fn run_worker(
     Ok(())
 }
 
+/// Ring-listener bind address for worker `wid` alongside a server bound at
+/// `server_bind`: TCP-looking addresses (they contain `:`) get an ephemeral
+/// loopback port, in-proc names a per-worker suffix (unique per run because
+/// the server bind name already is).
+fn ring_bind_addr(server_bind: &str, wid: usize) -> String {
+    if server_bind.contains(':') {
+        "127.0.0.1:0".to_string()
+    } else {
+        format!("{server_bind}-ring{wid}")
+    }
+}
+
 /// Launch a full cluster as threads in this process: one server plus
 /// `cfg.workers` workers, all talking through `transport` (use
 /// [`crate::transport::InProcTransport`] for channels or [`TcpTransport`]
@@ -654,11 +933,17 @@ where
         for wid in 0..cfg.workers {
             let transport = transport.clone();
             let addr = addr.clone();
+            let ring_bind = ring_bind_addr(bind_addr, wid);
             let codec = cfg.codec;
             handles.push(scope.spawn(move || -> anyhow::Result<()> {
                 let mut conn =
                     transport.connect(&addr, &Hello::with_codec(wid as u32, codec))?;
-                run_worker(conn.as_mut(), wid as u32, codec)
+                run_worker(
+                    conn.as_mut(),
+                    wid as u32,
+                    codec,
+                    Some((&transport, ring_bind.as_str())),
+                )
             }));
         }
         let report = serve(listener.as_mut(), cfg);
@@ -790,6 +1075,8 @@ mod tests {
                 feedback: Some(FeedbackConfig::with_decay(0.75)),
                 pipeline: 4,
                 trace: TraceConfig::on(),
+                topology: Topology::Ring,
+                aligned: true,
                 ..small_cfg()
             };
             let bytes = cfg.encode();
@@ -815,6 +1102,13 @@ mod tests {
             // Unknown trace mode bytes are refused.
             let mut bad = bytes.clone();
             bad[codec_at + 14] = 9;
+            assert!(RunPlan::decode(&bad).is_err());
+            // So are unknown topology ids and aligned flags.
+            let mut bad = bytes.clone();
+            bad[codec_at + 19] = 9;
+            assert!(RunPlan::decode(&bad).is_err());
+            let mut bad = bytes.clone();
+            bad[codec_at + 20] = 7;
             assert!(RunPlan::decode(&bad).is_err());
         }
         // The default plan (no feedback, every-round) roundtrips too, as
@@ -985,6 +1279,83 @@ mod tests {
             a.curve.ledger.measured_frames,
             b.curve.ledger.measured_frames
         );
+    }
+
+    #[test]
+    fn ring_topology_applies_once_per_block_and_is_deterministic() {
+        let star = small_cfg();
+        let ring = RunPlan {
+            topology: Topology::Ring,
+            ..small_cfg()
+        };
+        let s = run_threads(InProcTransport::new(), "ring-s", &star).unwrap();
+        let r = run_threads(InProcTransport::new(), "ring-r", &ring).unwrap();
+        let r2 = run_threads(InProcTransport::new(), "ring-r2", &ring).unwrap();
+        assert_eq!(r.grad_digest, r2.grad_digest);
+        assert_eq!(r.final_w, r2.final_w);
+        // One ring-reduced apply per block instead of M; the reduced push
+        // is always based on the block's own weight version.
+        assert_eq!(r.versions, ring.rounds as u64);
+        assert_eq!(s.versions, (star.rounds * star.workers) as u64);
+        assert_eq!(r.max_observed_staleness, 0);
+        // The end-to-end column records rank 0's reduced frames; star has
+        // no such column entry. The hop column stays 0 server-side (the
+        // ring links are worker-owned).
+        assert!(r.curve.ledger.end_to_end_bytes > 0);
+        assert_eq!(s.curve.ledger.end_to_end_bytes, 0);
+        assert_eq!(r.curve.ledger.hop_bytes, 0);
+        // Per-link server frames: hello + config + ring-addr in/out +
+        // (blocks+1) pulls + blocks weights + shutdown = 2·blocks + 6, plus
+        // blocks gradient pushes on rank 0's link only — every other rank
+        // ships its gradient over the ring, not to the server.
+        let blocks = ring.rounds as u64;
+        assert_eq!(
+            r.curve.ledger.measured_frames,
+            (2 * blocks + 6) * ring.workers as u64 + blocks
+        );
+        // Still optimizes.
+        let ds = gen_logistic(ring.n, ring.d, ring.c1, ring.c2, ring.seed);
+        let model = LogisticModel::new(ring.reg);
+        let f0 = model.loss(&ds, &vec![0.0; ring.d]);
+        assert!(r.final_loss < f0, "{f0} -> {}", r.final_loss);
+    }
+
+    #[test]
+    fn aligned_ring_is_deterministic_and_converges() {
+        let cfg = RunPlan {
+            topology: Topology::Ring,
+            aligned: true,
+            method: Method::TopK,
+            rho: 0.1,
+            ..small_cfg()
+        };
+        let a = run_threads(InProcTransport::new(), "aring-a", &cfg).unwrap();
+        let b = run_threads(InProcTransport::new(), "aring-b", &cfg).unwrap();
+        assert_eq!(a.grad_digest, b.grad_digest);
+        assert_eq!(a.final_w, b.final_w);
+        let ds = gen_logistic(cfg.n, cfg.d, cfg.c1, cfg.c2, cfg.seed);
+        let model = LogisticModel::new(cfg.reg);
+        let f0 = model.loss(&ds, &vec![0.0; cfg.d]);
+        assert!(a.final_loss < f0, "{f0} -> {}", a.final_loss);
+        // Aligned hops carry no index bytes, so the digest must differ from
+        // the index-carrying ring (different selected sets in general).
+        let plain = RunPlan {
+            aligned: false,
+            ..cfg.clone()
+        };
+        let p = run_threads(InProcTransport::new(), "aring-p", &plain).unwrap();
+        assert_ne!(p.grad_digest, a.grad_digest);
+    }
+
+    #[test]
+    fn ring_with_dense_method_is_a_clean_error() {
+        let cfg = RunPlan {
+            topology: Topology::Ring,
+            method: Method::Dense,
+            rounds: 2,
+            ..small_cfg()
+        };
+        assert!(run_threads(InProcTransport::new(), "ring-dense", &cfg).is_err());
     }
 
     #[test]

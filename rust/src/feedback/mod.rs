@@ -232,6 +232,15 @@ impl FeedbackState {
         &self.residual[self.offsets[l]..self.offsets[l + 1]]
     }
 
+    /// Mutable access to layer `l`'s residual segment — the fold-in point
+    /// for the ring collective: per-hop re-sparsification adds its dropped
+    /// mass here ([`crate::collective`]), and drains it back into the next
+    /// round's outgoing message, so bounded hop budgets keep the top-k +
+    /// error-feedback contraction instead of silently losing gradient.
+    pub fn layer_residual_mut(&mut self, l: usize) -> &mut [f32] {
+        &mut self.residual[self.offsets[l]..self.offsets[l + 1]]
+    }
+
     /// `‖e‖²` over the whole arena (f64 accumulation).
     pub fn residual_norm2_sq(&self) -> f64 {
         self.residual()

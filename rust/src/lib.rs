@@ -19,7 +19,10 @@
 //!   around any compressor) and local-step scheduling
 //!   ([`feedback::CommSchedule`]) for the biased/aggressive regimes;
 //! * [`coding`] — the §3.3 hybrid wire format and Theorem-4 bit accounting;
-//! * [`comm`] — a simulated cluster (All-Reduce / Broadcast, α-β cost model);
+//! * [`comm`] — the α-β cost model plus the sparse merge kernels;
+//! * [`collective`] — ring reduce-scatter / all-gather of sparse gradient
+//!   messages over the transport, with per-hop re-sparsification and an
+//!   aligned-sparsity (shared-sketch, index-free) mode;
 //! * [`transport`] — the real one: a pluggable framed transport (`InProc`
 //!   channels / TCP sockets) with per-link byte counters, behind one trait;
 //! * [`trace`] — low-overhead per-stage span recording (solve / sample /
@@ -43,6 +46,7 @@ pub mod api;
 pub mod benchkit;
 pub mod cli;
 pub mod coding;
+pub mod collective;
 pub mod comm;
 pub mod config;
 pub mod coordinator;

@@ -81,10 +81,12 @@ fn print_help() {
            async-svm [--threads T] [--scheme lock|atomic|wild] [--method M]\n\
            e2e [--steps N] [--workers M] [--rho R] [--batch-layers]   transformer end-to-end\n\
            server [--addr H:P] [--workers M] [--rounds R] [--codec C]\n\
-                  [--feedback] [--local-steps H] [--pipeline D] ...\n\
+                  [--feedback] [--local-steps H] [--pipeline D]\n\
+                  [--topology star|ring] [--aligned] ...\n\
            worker --addr H:P --id N [--codec C]   one worker process (config from server)\n\
            dist [--transport inproc|tcp] [--procs] [--codec raw|entropy]\n\
-                [--feedback] [--feedback-decay B] [--local-steps H] [--pipeline D] ...\n\
+                [--feedback] [--feedback-decay B] [--local-steps H] [--pipeline D]\n\
+                [--topology star|ring] [--aligned] ...\n\
            version\n\
          \n\
          OBSERVABILITY (any subcommand):\n\
@@ -244,6 +246,16 @@ fn dist_session_from_args(args: &Args) -> anyhow::Result<(Session, DistTask)> {
         .local_steps(args.get_parse("local-steps", 1))
         .pipeline(args.get_parse("pipeline", 1))
         .seed(args.get_parse("seed", 42));
+    if let Some(t) = args.get("topology") {
+        builder = builder.topology(match t {
+            "star" => gsparse::comm::Topology::Star,
+            "ring" => gsparse::comm::Topology::Ring,
+            other => anyhow::bail!("unknown topology {other} (star|ring)"),
+        });
+    }
+    if args.flag("aligned") {
+        builder = builder.aligned_sparsity(true);
+    }
     if let Some(cfg) = parse_feedback(args)? {
         builder = builder.feedback(cfg);
     }
@@ -308,7 +320,9 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     let codec = parse_codec(args)?;
     let transport = TcpTransport::new();
     let mut conn = transport.connect(addr, &Hello::with_codec(id, codec))?;
-    gsparse::coordinator::dist::run_worker(conn.as_mut(), id, codec)
+    // The ring environment is only used if the server-shipped config asks
+    // for ring topology; an ephemeral loopback port serves any TCP worker.
+    gsparse::coordinator::dist::run_worker(conn.as_mut(), id, codec, Some((&transport, "127.0.0.1:0")))
 }
 
 fn cmd_dist(args: &Args) -> anyhow::Result<()> {

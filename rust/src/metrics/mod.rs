@@ -76,6 +76,18 @@ pub struct CommLedger {
     /// this is what proves a local-step round shipped *nothing*: rounds
     /// scheduled between synchronizations leave both columns unchanged.
     pub measured_frames: u64,
+    /// **Measured** bytes the ring collective's hop links transmitted
+    /// (reduce-scatter + all-gather frames, overhead included) — the
+    /// per-node cost a [`Topology::Ring`](crate::comm::Topology) round pays
+    /// instead of the star's leader ingress. Zero on star topologies and on
+    /// coordinators that cannot observe the hop links (the dist *server*
+    /// never sees worker-owned ring links; only the cluster coordinator,
+    /// which owns every endpoint, fills this column).
+    pub hop_bytes: u64,
+    /// **Measured** bytes of the fully reduced result delivered after the
+    /// ring (rank 0's single result frame per round) — what replaces the
+    /// star's `M` uploads. Zero on star topologies.
+    pub end_to_end_bytes: u64,
     /// Number of messages (one per worker per step).
     pub messages: u64,
 }
@@ -105,6 +117,18 @@ impl CommLedger {
     /// overwrites, like [`Self::set_measured`]).
     pub fn set_measured_frames(&mut self, measured_frames: u64) {
         self.measured_frames = measured_frames;
+    }
+
+    /// Set the ring hop-bytes column from the ring links' cumulative
+    /// counters (overwrites, like [`Self::set_measured`]).
+    pub fn set_hop_bytes(&mut self, hop_bytes: u64) {
+        self.hop_bytes = hop_bytes;
+    }
+
+    /// Accumulate the framed bytes of one round's reduced-result delivery
+    /// (per-round frame sizes, not a cumulative counter — hence adds).
+    pub fn add_end_to_end_bytes(&mut self, bytes: u64) {
+        self.end_to_end_bytes += bytes;
     }
 
     /// Wire-bytes (encoded payload, in bits) over ideal-bits — the gap the
@@ -140,12 +164,14 @@ impl CommLedger {
         debug_assert!(
             self.consistent(),
             "CommLedger columns disagree: ideal_bits={} wire_bytes={} by_codec={:?} \
-             measured_bytes={} measured_frames={} messages={}",
+             measured_bytes={} measured_frames={} hop_bytes={} end_to_end_bytes={} messages={}",
             self.ideal_bits,
             self.wire_bytes,
             self.wire_bytes_by_codec,
             self.measured_bytes,
             self.measured_frames,
+            self.hop_bytes,
+            self.end_to_end_bytes,
             self.messages,
         );
     }
@@ -162,6 +188,8 @@ impl CommLedger {
         }
         self.measured_bytes += other.measured_bytes;
         self.measured_frames += other.measured_frames;
+        self.hop_bytes += other.hop_bytes;
+        self.end_to_end_bytes += other.end_to_end_bytes;
         self.messages += other.messages;
     }
 }
@@ -336,16 +364,23 @@ mod tests {
         a.record(100, 16);
         a.set_measured(40);
         a.set_measured_frames(3);
+        a.set_hop_bytes(7);
+        a.add_end_to_end_bytes(5);
         let mut b = CommLedger::default();
         b.record_codec(50, 8, WireCodec::Entropy);
         b.set_measured(10);
         b.set_measured_frames(2);
+        b.set_hop_bytes(3);
+        b.add_end_to_end_bytes(4);
+        b.add_end_to_end_bytes(2);
         a.merge(&b);
         assert_eq!(a.ideal_bits, 150);
         assert_eq!(a.wire_bytes, 24);
         assert_eq!(a.wire_bytes_by_codec, [16, 8]);
         assert_eq!(a.measured_bytes, 50);
         assert_eq!(a.measured_frames, 5);
+        assert_eq!(a.hop_bytes, 10);
+        assert_eq!(a.end_to_end_bytes, 11);
         assert_eq!(a.messages, 2);
     }
 
@@ -381,6 +416,13 @@ mod tests {
         sim.record(64, 8);
         assert!(sim.consistent());
         sim.verify();
+        // Ring columns are independent of the star-era constraints: a ring
+        // run with hop + end-to-end bytes stays consistent.
+        let mut ring = l.clone();
+        ring.set_hop_bytes(12);
+        ring.add_end_to_end_bytes(9);
+        assert!(ring.consistent());
+        ring.verify();
     }
 
     #[test]

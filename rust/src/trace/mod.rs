@@ -236,10 +236,16 @@ pub enum Stage {
     FrameRx = 13,
     /// A vectored (scatter/gather, copy-skipping) frame send. Counter.
     VectoredTx = 14,
+    /// One ring-collective hop: send own chunk + receive + merge the
+    /// neighbour's (`bytes` = received hop payload).
+    Hop = 15,
+    /// Aligned-sparsity sketch work: local sketch build, ring exchange, and
+    /// the shared top-k index agreement.
+    Sketch = 16,
 }
 
 /// Every stage, in id order (export tables iterate this).
-pub const STAGES: [Stage; 15] = [
+pub const STAGES: [Stage; 17] = [
     Stage::Round,
     Stage::Solve,
     Stage::Sample,
@@ -255,6 +261,8 @@ pub const STAGES: [Stage; 15] = [
     Stage::FrameTx,
     Stage::FrameRx,
     Stage::VectoredTx,
+    Stage::Hop,
+    Stage::Sketch,
 ];
 
 impl Stage {
@@ -275,6 +283,8 @@ impl Stage {
             Stage::FrameTx => "frame_tx",
             Stage::FrameRx => "frame_rx",
             Stage::VectoredTx => "vectored_tx",
+            Stage::Hop => "hop",
+            Stage::Sketch => "sketch",
         }
     }
 }

@@ -63,6 +63,8 @@ const TAG_SHUTDOWN: u8 = 0x13;
 const TAG_CONFIG: u8 = 0x14;
 const TAG_GRAD_BATCH: u8 = 0x15;
 const TAG_WEIGHTS_BATCH: u8 = 0x16;
+const TAG_SPARSE_REDUCE: u8 = 0x17;
+const TAG_RING_ADDR: u8 = 0x18;
 
 /// The handshake sent by the connecting side as its first frame. Besides
 /// identifying the worker it pins the protocol version *and* the wire codec
@@ -194,6 +196,17 @@ pub enum MsgView<'a> {
     GradBatch { header: GradHeader, payload: &'a [u8] },
     Shutdown,
     Config { bytes: &'a [u8] },
+    /// One hop of a ring collective ([`crate::collective`]): `chunk` is the
+    /// ring-chunk index the payload covers, `phase` distinguishes the
+    /// pipeline stage (reduce-scatter, all-gather, sketch, …; the collective
+    /// layer defines the values and refuses unexpected ones). The payload
+    /// reuses the [`crate::coding`] WireBatch layout for sparse stages and
+    /// raw `f32 LE` for the index-free aligned stages.
+    SparseReduce { chunk: u32, phase: u8, payload: &'a [u8] },
+    /// Ring-link bootstrap for the dist runtime: worker `worker_id`'s own
+    /// listener address, relayed through the server so each worker learns
+    /// its right neighbour without any out-of-band channel.
+    RingAddr { worker_id: u32, addr: &'a [u8] },
 }
 
 /// Encode a `PULL` message into `out` (cleared first).
@@ -309,6 +322,33 @@ fn encode_grad_tagged(out: &mut Vec<u8>, tag: u8, header: &GradHeader, payload: 
     out.extend_from_slice(payload);
 }
 
+/// Encode a `SPARSE_REDUCE` hop message into `out` (cleared first).
+pub fn encode_sparse_reduce(out: &mut Vec<u8>, chunk: u32, phase: u8, payload: &[u8]) {
+    out.clear();
+    out.reserve(1 + 4 + 1 + payload.len());
+    out.push(TAG_SPARSE_REDUCE);
+    out.extend_from_slice(&chunk.to_le_bytes());
+    out.push(phase);
+    out.extend_from_slice(payload);
+}
+
+/// Encode only the tag + chunk + phase prefix of a `SPARSE_REDUCE` message
+/// into `out` (cleared first) — the first segment of a vectored send whose
+/// remaining segment is the hop payload. Byte-for-byte, `prefix ++ payload`
+/// equals what [`encode_sparse_reduce`] produces.
+pub fn encode_sparse_reduce_prefix(out: &mut Vec<u8>, chunk: u32, phase: u8) {
+    encode_sparse_reduce(out, chunk, phase, &[]);
+}
+
+/// Encode a `RING_ADDR` bootstrap message into `out` (cleared first).
+pub fn encode_ring_addr(out: &mut Vec<u8>, worker_id: u32, addr: &str) {
+    out.clear();
+    out.reserve(1 + 4 + addr.len());
+    out.push(TAG_RING_ADDR);
+    out.extend_from_slice(&worker_id.to_le_bytes());
+    out.extend_from_slice(addr.as_bytes());
+}
+
 /// Encode a `SHUTDOWN` message into `out` (cleared first).
 pub fn encode_shutdown(out: &mut Vec<u8>) {
     out.clear();
@@ -403,6 +443,25 @@ pub fn decode(buf: &[u8]) -> Result<MsgView<'_>, TransportError> {
             Ok(MsgView::Shutdown)
         }
         TAG_CONFIG => Ok(MsgView::Config { bytes: body }),
+        TAG_SPARSE_REDUCE => {
+            if body.len() < 5 {
+                return Err(TransportError::UnexpectedMessage("sparse reduce truncated"));
+            }
+            Ok(MsgView::SparseReduce {
+                chunk: u32::from_le_bytes(body[0..4].try_into().unwrap()),
+                phase: body[4],
+                payload: &body[5..],
+            })
+        }
+        TAG_RING_ADDR => {
+            if body.len() < 4 {
+                return Err(TransportError::UnexpectedMessage("ring addr truncated"));
+            }
+            Ok(MsgView::RingAddr {
+                worker_id: u32::from_le_bytes(body[0..4].try_into().unwrap()),
+                addr: &body[4..],
+            })
+        }
         _ => Err(TransportError::UnexpectedMessage("unknown tag")),
     }
 }
@@ -631,6 +690,44 @@ mod tests {
         let mut bad = buf.clone();
         bad[13] = 3; // first tensor length LSB: 2 → 3
         assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn sparse_reduce_and_ring_addr_roundtrip() {
+        let mut buf = Vec::new();
+        encode_sparse_reduce(&mut buf, 6, 1, b"hop-payload");
+        assert_eq!(
+            decode(&buf).unwrap(),
+            MsgView::SparseReduce {
+                chunk: 6,
+                phase: 1,
+                payload: b"hop-payload",
+            }
+        );
+        // Prefix + payload equals the one-shot frame (vectored send path).
+        let mut prefix = Vec::new();
+        encode_sparse_reduce_prefix(&mut prefix, 6, 1);
+        let mut glued = prefix.clone();
+        glued.extend_from_slice(b"hop-payload");
+        assert_eq!(glued, buf);
+        // An empty payload is legal (a worker can own an empty chunk).
+        encode_sparse_reduce(&mut buf, 0, 0, b"");
+        assert!(matches!(
+            decode(&buf).unwrap(),
+            MsgView::SparseReduce { chunk: 0, phase: 0, payload: b"" }
+        ));
+        // Truncated header refuses.
+        assert!(decode(&[TAG_SPARSE_REDUCE, 1, 2, 3]).is_err());
+
+        encode_ring_addr(&mut buf, 3, "127.0.0.1:4242");
+        assert_eq!(
+            decode(&buf).unwrap(),
+            MsgView::RingAddr {
+                worker_id: 3,
+                addr: b"127.0.0.1:4242",
+            }
+        );
+        assert!(decode(&[TAG_RING_ADDR, 1]).is_err());
     }
 
     #[test]

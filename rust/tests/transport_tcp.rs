@@ -377,7 +377,7 @@ fn v2_workers_interoperate_with_a_v3_server_bitwise() {
             assert_eq!(hello.version, 2);
             assert!(!hello.supports_batch());
             let mut conn = t.connect(&addr, &hello).unwrap();
-            dist::run_worker(conn.as_mut(), wid as u32, codec)
+            dist::run_worker(conn.as_mut(), wid as u32, codec, None)
         }));
     }
     let v2_report = dist::serve(listener.as_mut(), &cfg).unwrap();
