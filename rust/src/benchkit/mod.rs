@@ -231,21 +231,34 @@ pub fn allocation_count() -> u64 {
     ALLOCATION_COUNT.load(std::sync::atomic::Ordering::Relaxed)
 }
 
+// SAFETY: a pure pass-through to `System` plus one relaxed counter bump —
+// layouts are forwarded untouched, so every GlobalAlloc contract obligation
+// (layout validity, pointer provenance, no unwinding) is exactly `System`'s.
 unsafe impl std::alloc::GlobalAlloc for CountingAllocator {
+    // SAFETY: caller upholds GlobalAlloc's contract; forwarded verbatim.
     unsafe fn alloc(&self, layout: std::alloc::Layout) -> *mut u8 {
         ALLOCATION_COUNT.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        std::alloc::System.alloc(layout)
+        // SAFETY: same layout the caller passed under the same contract.
+        unsafe { std::alloc::System.alloc(layout) }
     }
+    // SAFETY: caller upholds GlobalAlloc's contract; forwarded verbatim.
     unsafe fn alloc_zeroed(&self, layout: std::alloc::Layout) -> *mut u8 {
         ALLOCATION_COUNT.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        std::alloc::System.alloc_zeroed(layout)
+        // SAFETY: same layout the caller passed under the same contract.
+        unsafe { std::alloc::System.alloc_zeroed(layout) }
     }
+    // SAFETY: caller upholds GlobalAlloc's contract; forwarded verbatim.
     unsafe fn realloc(&self, ptr: *mut u8, layout: std::alloc::Layout, new_size: usize) -> *mut u8 {
         ALLOCATION_COUNT.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        std::alloc::System.realloc(ptr, layout, new_size)
+        // SAFETY: ptr came from this allocator (i.e. from `System`), and
+        // layout/new_size are the caller's, under the same contract.
+        unsafe { std::alloc::System.realloc(ptr, layout, new_size) }
     }
+    // SAFETY: caller upholds GlobalAlloc's contract; forwarded verbatim.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: std::alloc::Layout) {
-        std::alloc::System.dealloc(ptr, layout)
+        // SAFETY: ptr was produced by `System` via this wrapper with the
+        // same layout, per the caller's contract.
+        unsafe { std::alloc::System.dealloc(ptr, layout) }
     }
 }
 

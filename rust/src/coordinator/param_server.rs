@@ -31,7 +31,7 @@ use crate::sparsify::Compressed;
 use crate::transport::frame::{self, GradHeader, MsgView};
 use crate::transport::{Connection, Hello, InProcTransport, Mux, Transport};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use crate::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 /// Parameter-server run configuration (deprecated shim of the Session API).

@@ -41,6 +41,17 @@
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
 //! request path is pure Rust. See `DESIGN.md` for the architecture and
 //! `EXPERIMENTS.md` for reproduction results.
+//!
+//! Correctness tooling: the repo-invariant lint pass lives in the sibling
+//! `verifier` crate (`cargo run -p verifier`), and [`sync`] is the seam the
+//! `--features model` exhaustive-interleaving checker swaps in under
+//! `rust/tests/model.rs`. See README §Correctness tooling.
+
+// Every `unsafe` operation must sit in an explicit `unsafe {}` block with
+// its own `// SAFETY:` comment, even inside `unsafe fn` — enforced here and
+// cross-checked by the verifier's `safety-comment` rule.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
 
 pub mod api;
 pub mod benchkit;
@@ -60,6 +71,7 @@ pub mod proptest_lite;
 pub mod rngkit;
 pub mod runtime;
 pub mod sparsify;
+pub mod sync;
 pub mod tensor;
 pub mod trace;
 pub mod transport;

@@ -15,18 +15,25 @@
 //! the sequential path (asserted by the engine's determinism tests, which
 //! now exercise the pool).
 
+use crate::sync::mpsc::{channel, Receiver, Sender};
+use crate::sync::thread::JoinHandle;
+use crate::sync::{thread, Arc, Mutex};
+use std::cell::Cell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 
-type Job = (usize, Box<dyn FnOnce() + Send + 'static>);
+/// (generation, submission slot, work). The generation tags which
+/// `run_streamed` call a job belongs to, so an aborted call (panicking
+/// `on_done`) can never leak its completions into the next call.
+type Job = (u64, usize, Box<dyn FnOnce() + Send + 'static>);
+
+type Done = (u64, usize, Result<(), String>);
 
 /// A fixed-size pool of persistent worker threads executing borrowed jobs
 /// to completion ([`ShardPool::run`]). Dropping the pool joins the threads.
 pub struct ShardPool {
     job_tx: Option<Sender<Job>>,
-    done_rx: Receiver<(usize, Result<(), String>)>,
+    done_rx: Receiver<Done>,
+    generation: Cell<u64>,
     threads: Vec<JoinHandle<()>>,
 }
 
@@ -42,7 +49,7 @@ impl ShardPool {
     /// Spawn `threads` persistent workers (at least one).
     pub fn new(threads: usize) -> Self {
         let (job_tx, job_rx) = channel::<Job>();
-        let (done_tx, done_rx) = channel::<(usize, Result<(), String>)>();
+        let (done_tx, done_rx) = channel::<Done>();
         // The job queue is shared work-stealing style: whichever worker is
         // free locks the receiver and takes the next job. Jobs are coarse
         // (a group of shards), so the lock is uncontended in practice.
@@ -51,12 +58,12 @@ impl ShardPool {
             .map(|_| {
                 let job_rx = Arc::clone(&job_rx);
                 let done_tx = done_tx.clone();
-                std::thread::spawn(move || loop {
+                thread::spawn(move || loop {
                     let job = {
                         let guard = job_rx.lock().expect("pool queue lock");
                         guard.recv()
                     };
-                    let Ok((slot, job)) = job else {
+                    let Ok((gen, slot, job)) = job else {
                         break; // pool dropped
                     };
                     let result = catch_unwind(AssertUnwindSafe(job)).map_err(|payload| {
@@ -66,7 +73,7 @@ impl ShardPool {
                             .or_else(|| payload.downcast_ref::<String>().cloned())
                             .unwrap_or_else(|| "non-string panic payload".into())
                     });
-                    if done_tx.send((slot, result)).is_err() {
+                    if done_tx.send((gen, slot, result)).is_err() {
                         break;
                     }
                 })
@@ -75,6 +82,7 @@ impl ShardPool {
         Self {
             job_tx: Some(job_tx),
             done_rx,
+            generation: Cell::new(0),
             threads,
         }
     }
@@ -98,39 +106,89 @@ impl ShardPool {
     /// borrow mutably; the usual pattern is reading job `i`'s disjoint
     /// output slot. If any job panics, the panic is re-raised here after
     /// every job has finished (completed jobs still get their `on_done`
-    /// call first).
+    /// call first). If `on_done` itself panics, the call still blocks until
+    /// every outstanding job has finished before the unwind escapes — the
+    /// borrowed jobs must never outlive this call frame — and the pool
+    /// stays usable afterwards.
     pub fn run_streamed<'env>(
         &self,
         jobs: Vec<Box<dyn FnOnce() + Send + 'env>>,
         mut on_done: impl FnMut(usize),
     ) {
         let n = jobs.len();
+        let gen = self.generation.get().wrapping_add(1);
+        self.generation.set(gen);
         let tx = self.job_tx.as_ref().expect("pool is alive until drop");
+        // Armed before the first send: from the moment a borrowed job is in
+        // flight, *every* exit from this function — normal return, a panic
+        // in `on_done`, or a re-raised job panic — first blocks until all
+        // `n` completions of this generation have arrived.
+        let mut drain = DrainGuard {
+            rx: &self.done_rx,
+            gen,
+            remaining: n,
+        };
         for (slot, job) in jobs.into_iter().enumerate() {
-            // SAFETY: lifetime erasure only. This function blocks below
-            // until all `n` jobs report completion, and pool workers report
-            // *after* the job has returned (or unwound), so everything the
-            // job borrows from `'env` strictly outlives its execution. The
-            // completion loop can only exit early by panicking out of
-            // `recv()`, which requires every worker thread to have exited —
-            // and workers exit only when the pool itself is dropped.
+            // SAFETY: lifetime erasure only. The `DrainGuard` above blocks
+            // (in the loop below, or in its Drop if that loop unwinds)
+            // until all `n` jobs of this generation report completion, and
+            // pool workers report *after* the job has returned (or
+            // unwound), so everything the job borrows from `'env` strictly
+            // outlives its execution. The drain can only end early when
+            // `recv` disconnects, which requires every worker thread to
+            // have exited — then nothing borrowing `'env` runs either.
             let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
                 std::mem::transmute::<
                     Box<dyn FnOnce() + Send + 'env>,
                     Box<dyn FnOnce() + Send + 'static>,
                 >(job)
             };
-            tx.send((slot, job)).expect("pool workers alive");
+            tx.send((gen, slot, job)).expect("pool workers alive");
         }
         let mut panicked: Option<String> = None;
-        for _ in 0..n {
+        while drain.remaining > 0 {
             match self.done_rx.recv().expect("pool workers alive") {
-                (slot, Ok(())) => on_done(slot),
-                (_, Err(msg)) => panicked = Some(msg),
+                (g, _, _) if g != gen => {} // stale completion from an aborted call
+                (_, slot, Ok(())) => {
+                    // Count down before `on_done`: if the hook panics, the
+                    // guard must not wait for this already-received slot.
+                    drain.remaining -= 1;
+                    on_done(slot);
+                }
+                (_, _, Err(msg)) => {
+                    drain.remaining -= 1;
+                    panicked = Some(msg);
+                }
             }
         }
+        drain.remaining = 0; // fully drained; disarm the guard
         if let Some(msg) = panicked {
             panic!("shard pool job panicked: {msg}");
+        }
+    }
+}
+
+/// Soundness backstop for [`ShardPool::run_streamed`]: while armed
+/// (`remaining > 0`), leaving the call frame — normally or by unwinding out
+/// of the `on_done` hook — first receives every outstanding completion of
+/// the current generation, so no borrowed job can still be running once the
+/// `'env` borrows end.
+struct DrainGuard<'a> {
+    rx: &'a Receiver<Done>,
+    gen: u64,
+    remaining: usize,
+}
+
+impl Drop for DrainGuard<'_> {
+    fn drop(&mut self) {
+        while self.remaining > 0 {
+            match self.rx.recv() {
+                Ok((g, _, _)) if g == self.gen => self.remaining -= 1,
+                Ok(_) => {} // stale completion from an older aborted call
+                // Disconnected: workers only exit when the pool itself is
+                // being dropped, at which point no borrowed job is running.
+                Err(_) => break,
+            }
         }
     }
 }
@@ -236,6 +294,77 @@ mod tests {
             assert_eq!(outputs[i].load(Ordering::Acquire), i + 1);
         });
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn panicking_on_done_hook_drains_before_unwinding() {
+        let pool = ShardPool::new(3);
+        let outputs: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+                .map(|i| {
+                    let slot = &outputs[i];
+                    let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        slot.store(i + 1, Ordering::Release);
+                    });
+                    job
+                })
+                .collect();
+            pool.run_streamed(jobs, |_| panic!("hook failure"));
+        }));
+        assert!(caught.is_err(), "hook panic must propagate");
+        // Every job of the aborted call finished before the unwind escaped
+        // the call frame (otherwise workers would still hold the borrow of
+        // `outputs` here — the soundness property the DrainGuard exists for).
+        for (i, slot) in outputs.iter().enumerate() {
+            assert_eq!(slot.load(Ordering::Acquire), i + 1);
+        }
+        // And the pool is still fully usable for the next round.
+        let ok = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                let ok = &ok;
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    ok.fetch_add(1, Ordering::Relaxed);
+                });
+                job
+            })
+            .collect();
+        let mut done = 0usize;
+        pool.run_streamed(jobs, |_| done += 1);
+        assert_eq!(done, 4, "no stale completions may leak into a new call");
+        assert_eq!(ok.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn job_panic_and_hook_panic_together_leave_pool_reusable() {
+        let pool = ShardPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|i| {
+                    let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        if i == 0 {
+                            panic!("job boom");
+                        }
+                    });
+                    job
+                })
+                .collect();
+            pool.run_streamed(jobs, |_| panic!("hook boom"));
+        }));
+        assert!(caught.is_err());
+        let n = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+            .map(|_| {
+                let n = &n;
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    n.fetch_add(1, Ordering::Relaxed);
+                });
+                job
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(n.load(Ordering::Relaxed), 2);
     }
 
     #[test]

@@ -1,0 +1,56 @@
+//! Synchronization shim: the one import point for every lock, channel, and
+//! thread handle on the concurrency-bearing paths (`sparsify::pool`,
+//! `trace`, the transport [`Mux`](crate::transport::Mux), and the SSP
+//! clock pair in `coordinator::param_server`).
+//!
+//! * Default build: thin re-exports of `std::sync` / `std::thread` /
+//!   `std::sync::mpsc` — zero cost, identical semantics.
+//! * `--features model`: the same names resolve to the instrumented
+//!   primitives in [`model`], a vendored mini exhaustive-interleaving
+//!   checker (loom-style, no external deps — the offline-image rule) that
+//!   serializes threads onto a token-passing scheduler and DFS-explores
+//!   every scheduling decision. `rust/tests/model.rs` uses it to
+//!   model-check the `ShardPool` dispatch/drop/panic protocol and the
+//!   trace-ring owner-only `try_lock` claim.
+//!
+//! Atomics and `Arc` stay `std` in both builds: the checker serializes
+//! execution, so every atomic access is already sequentially consistent
+//! under it, and the repo's atomics are relaxed counters whose values never
+//! drive control flow across threads.
+
+#[cfg(feature = "model")]
+pub mod model;
+
+#[cfg(feature = "model")]
+pub use model::{Condvar, Mutex, MutexGuard};
+
+#[cfg(feature = "model")]
+pub mod mpsc {
+    pub use super::model::mpsc::{channel, Receiver, Sender};
+    pub use std::sync::mpsc::{RecvError, SendError, TryRecvError};
+}
+
+#[cfg(feature = "model")]
+pub mod thread {
+    pub use super::model::thread::{spawn, JoinHandle};
+    pub use std::thread::Result;
+}
+
+#[cfg(not(feature = "model"))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+
+#[cfg(not(feature = "model"))]
+pub mod mpsc {
+    pub use std::sync::mpsc::*;
+}
+
+#[cfg(not(feature = "model"))]
+pub mod thread {
+    pub use std::thread::*;
+}
+
+pub use std::sync::{Arc, LockResult, PoisonError, TryLockError, TryLockResult};
+
+pub mod atomic {
+    pub use std::sync::atomic::*;
+}

@@ -1,0 +1,826 @@
+//! A vendored mini exhaustive-interleaving checker (loom-style).
+//!
+//! ## How it works
+//!
+//! Threads under test run as real OS threads, but a token-passing scheduler
+//! serializes them: exactly one thread (the `current` one) executes at a
+//! time, and every instrumented operation — `lock`, `try_lock`, channel
+//! `send`/`recv`, condvar wait/notify, spawn/join — is a *scheduling
+//! point* where the scheduler may hand the token to any runnable thread.
+//! Each run therefore corresponds to one interleaving, identified by the
+//! sequence of decisions taken at points with more than one runnable
+//! thread. [`check`] drives a depth-first search over those decisions:
+//! replay a recorded prefix, take the next unexplored branch, run to
+//! completion, repeat — until the tree is exhausted ([`Report::complete`])
+//! or the iteration budget runs out.
+//!
+//! Blocking is modeled, never real: a thread that would block (`lock` on a
+//! held mutex, `recv` on an empty channel, condvar wait, join on a live
+//! thread) parks itself as `Blocked(reason)` and the token moves on. The
+//! matching event (unlock, send/sender-drop, notify, thread exit) marks it
+//! runnable again. If no thread is runnable and some are blocked, that
+//! interleaving deadlocks — the checker panics with the blocked set, which
+//! is precisely the bug class the `ShardPool` drop/panic protocol and the
+//! SSP clock condvar must never exhibit.
+//!
+//! ## Rules for code under test
+//!
+//! * The closure must be deterministic given the schedule (no clocks, no
+//!   ambient randomness) — divergence during replay panics.
+//! * Every thread spawned inside the closure must be joined before it
+//!   returns (dropping a [`crate::sparsify::ShardPool`] does this).
+//! * Threads not created through [`thread::spawn`] (or used outside any
+//!   active [`check`]) fall through to plain `std` behavior, so the same
+//!   primitives stay usable in ordinary `--features model` builds.
+//!
+//! Limitations, accepted on purpose: no atomic-ordering exploration (the
+//! scheduler is sequentially consistent), condvar notify wakes the
+//! lowest-tid waiter, and there is no partial-order reduction — keep
+//! modeled scenarios small (2–3 threads, a handful of operations).
+
+use std::cell::RefCell;
+use std::ops::{Deref, DerefMut};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc as std_mpsc;
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex};
+use std::sync::{LockResult, PoisonError, TryLockError, TryLockResult};
+
+// ---------------------------------------------------------------------------
+// Scheduler
+// ---------------------------------------------------------------------------
+
+/// What a parked thread is waiting for.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Waiting {
+    Lock(u64),
+    Chan(u64),
+    Cond(u64),
+    Join(usize),
+}
+
+#[derive(Clone, Debug)]
+enum Ts {
+    Runnable,
+    Blocked(Waiting),
+    Finished,
+}
+
+/// One recorded decision: which of the runnable threads got the token.
+#[derive(Clone, Debug)]
+struct Choice {
+    chosen: usize,
+    options: Vec<usize>,
+}
+
+#[derive(Default)]
+struct State {
+    threads: Vec<Ts>,
+    current: usize,
+    choices: Vec<Choice>,
+    replay: Vec<usize>,
+    deadlock: Option<String>,
+}
+
+struct Sched {
+    state: StdMutex<State>,
+    cv: StdCondvar,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<(Arc<Sched>, usize)>> = const { RefCell::new(None) };
+}
+
+fn ctx() -> Option<(Arc<Sched>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+static NEXT_OBJ_ID: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_id() -> u64 {
+    NEXT_OBJ_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+impl Sched {
+    fn new(replay: Vec<usize>) -> Self {
+        Self {
+            state: StdMutex::new(State {
+                threads: vec![Ts::Runnable],
+                current: 0,
+                choices: Vec::new(),
+                replay,
+                deadlock: None,
+            }),
+            cv: StdCondvar::new(),
+        }
+    }
+
+    /// Pick the next token holder among runnable threads. Records a
+    /// [`Choice`] whenever more than one thread could run (that is where
+    /// the DFS branches). Must be called with the state lock held.
+    fn pick_next(&self, st: &mut State) {
+        let options: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| matches!(t, Ts::Runnable))
+            .map(|(i, _)| i)
+            .collect();
+        if options.is_empty() {
+            if st
+                .threads
+                .iter()
+                .any(|t| matches!(t, Ts::Blocked(_)))
+            {
+                st.deadlock = Some(format!("{:?}", st.threads));
+                self.cv.notify_all();
+            }
+            return;
+        }
+        let idx = if options.len() == 1 {
+            0
+        } else {
+            let d = st.choices.len();
+            let i = if d < st.replay.len() { st.replay[d] } else { 0 };
+            assert!(
+                i < options.len(),
+                "model: schedule diverged (replay wants option {i} of {} at depth {d}) \
+                 — the closure is nondeterministic",
+                options.len()
+            );
+            st.choices.push(Choice {
+                chosen: i,
+                options: options.clone(),
+            });
+            i
+        };
+        st.current = options[idx];
+        self.cv.notify_all();
+    }
+
+    /// Park until this thread holds the token and is runnable.
+    fn wait_turn(&self, me: usize) {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        loop {
+            if let Some(d) = &st.deadlock {
+                let msg = d.clone();
+                drop(st);
+                panic!("model: deadlock — all live threads blocked: {msg}");
+            }
+            if st.current == me && matches!(st.threads[me], Ts::Runnable) {
+                return;
+            }
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// A plain scheduling point for the current thread.
+    fn yield_point(&self, me: usize) {
+        {
+            let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+            st.threads[me] = Ts::Runnable;
+            self.pick_next(&mut st);
+        }
+        self.wait_turn(me);
+    }
+
+    /// Park the current thread as blocked and give the token away.
+    fn block_current(&self, me: usize, w: Waiting) {
+        {
+            let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+            st.threads[me] = Ts::Blocked(w);
+            self.pick_next(&mut st);
+        }
+        self.wait_turn(me);
+    }
+
+    /// Mark every thread blocked on `w` runnable (the waking thread keeps
+    /// the token; the woken ones compete at the next scheduling point).
+    fn wake(&self, pred: impl Fn(&Waiting) -> bool, limit: usize) {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut n = 0usize;
+        for t in st.threads.iter_mut() {
+            if n >= limit {
+                break;
+            }
+            if let Ts::Blocked(w) = t {
+                if pred(w) {
+                    *t = Ts::Runnable;
+                    n += 1;
+                }
+            }
+        }
+        if n > 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn register_thread(&self) -> usize {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        st.threads.push(Ts::Runnable);
+        st.threads.len() - 1
+    }
+
+    fn thread_finished(&self, me: usize) {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        st.threads[me] = Ts::Finished;
+        for t in st.threads.iter_mut() {
+            if matches!(t, Ts::Blocked(Waiting::Join(j)) if *j == me) {
+                *t = Ts::Runnable;
+            }
+        }
+        self.pick_next(&mut st);
+    }
+
+    fn is_thread_finished(&self, tid: usize) -> bool {
+        let st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        matches!(st.threads[tid], Ts::Finished)
+    }
+}
+
+/// Scheduling point for the calling thread, if a check is active.
+fn maybe_yield() {
+    if let Some((sched, me)) = ctx() {
+        sched.yield_point(me);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The DFS driver
+// ---------------------------------------------------------------------------
+
+/// Exploration budget.
+pub struct Opts {
+    /// Stop after this many distinct interleavings (`complete` stays false
+    /// if the budget is the reason exploration stopped).
+    pub max_iterations: usize,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Self {
+            max_iterations: 20_000,
+        }
+    }
+}
+
+/// Outcome of [`check`].
+#[derive(Debug)]
+pub struct Report {
+    /// Number of distinct interleavings executed.
+    pub iterations: usize,
+    /// True when the schedule tree was exhausted (every interleaving ran).
+    pub complete: bool,
+}
+
+/// Explore every interleaving of `f` (within `Opts::default()` budget).
+/// Panics — with the failing schedule printed — as soon as any
+/// interleaving panics, deadlocks, or diverges from its replay.
+pub fn check(f: impl Fn()) -> Report {
+    check_with(Opts::default(), f)
+}
+
+pub fn check_with(opts: Opts, f: impl Fn()) -> Report {
+    assert!(
+        ctx().is_none(),
+        "model: check() does not nest inside another active check"
+    );
+    let mut replay: Vec<usize> = Vec::new();
+    let mut iterations = 0usize;
+    loop {
+        let sched = Arc::new(Sched::new(replay.clone()));
+        CTX.with(|c| *c.borrow_mut() = Some((Arc::clone(&sched), 0)));
+        let result = catch_unwind(AssertUnwindSafe(&f));
+        CTX.with(|c| *c.borrow_mut() = None);
+        iterations += 1;
+        if let Err(payload) = result {
+            eprintln!(
+                "model: interleaving #{iterations} failed; schedule prefix: {replay:?}"
+            );
+            resume_unwind(payload);
+        }
+        let choices = sched
+            .state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .choices
+            .clone();
+        let mut prefix = choices;
+        let mut next: Option<Vec<usize>> = None;
+        while let Some(c) = prefix.pop() {
+            if c.chosen + 1 < c.options.len() {
+                let mut r: Vec<usize> = prefix.iter().map(|p| p.chosen).collect();
+                r.push(c.chosen + 1);
+                next = Some(r);
+                break;
+            }
+        }
+        match next {
+            None => {
+                return Report {
+                    iterations,
+                    complete: true,
+                }
+            }
+            Some(_) if iterations >= opts.max_iterations => {
+                return Report {
+                    iterations,
+                    complete: false,
+                }
+            }
+            Some(r) => replay = r,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mutex / Condvar
+// ---------------------------------------------------------------------------
+
+/// Instrumented drop-in for [`std::sync::Mutex`]. Under an active
+/// [`check`], `lock` never blocks the OS thread: it try-locks, and parks in
+/// the scheduler on contention.
+pub struct Mutex<T> {
+    id: u64,
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(t: T) -> Self {
+        Self {
+            id: fresh_id(),
+            inner: StdMutex::new(t),
+        }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        let Some((sched, me)) = ctx() else {
+            return wrap_lock_result(self, self.inner.lock());
+        };
+        loop {
+            sched.yield_point(me);
+            match self.inner.try_lock() {
+                Ok(g) => {
+                    let guard = MutexGuard {
+                        mutex: self,
+                        inner: Some(g),
+                    };
+                    // Hold-visible point: without a scheduling point here,
+                    // the token never leaves a lock holder inside its
+                    // critical section, and `try_lock` contention (the
+                    // trace ring's drop-on-contention path) would be
+                    // unreachable in any explored schedule.
+                    sched.yield_point(me);
+                    return Ok(guard);
+                }
+                Err(TryLockError::WouldBlock) => {
+                    sched.block_current(me, Waiting::Lock(self.id));
+                }
+                Err(TryLockError::Poisoned(p)) => {
+                    return Err(PoisonError::new(MutexGuard {
+                        mutex: self,
+                        inner: Some(p.into_inner()),
+                    }));
+                }
+            }
+        }
+    }
+
+    pub fn try_lock(&self) -> TryLockResult<MutexGuard<'_, T>> {
+        maybe_yield();
+        match self.inner.try_lock() {
+            Ok(g) => Ok(MutexGuard {
+                mutex: self,
+                inner: Some(g),
+            }),
+            Err(TryLockError::WouldBlock) => Err(TryLockError::WouldBlock),
+            Err(TryLockError::Poisoned(p)) => {
+                Err(TryLockError::Poisoned(PoisonError::new(MutexGuard {
+                    mutex: self,
+                    inner: Some(p.into_inner()),
+                })))
+            }
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner
+            .into_inner()
+            .map_err(|p| PoisonError::new(p.into_inner()))
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner
+            .get_mut()
+            .map_err(|p| PoisonError::new(p.into_inner()))
+    }
+}
+
+impl<T> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mutex").field("id", &self.id).finish()
+    }
+}
+
+fn wrap_lock_result<'a, T>(
+    mutex: &'a Mutex<T>,
+    r: LockResult<std::sync::MutexGuard<'a, T>>,
+) -> LockResult<MutexGuard<'a, T>> {
+    match r {
+        Ok(g) => Ok(MutexGuard {
+            mutex,
+            inner: Some(g),
+        }),
+        Err(p) => Err(PoisonError::new(MutexGuard {
+            mutex,
+            inner: Some(p.into_inner()),
+        })),
+    }
+}
+
+/// Guard for [`Mutex`]; releasing it wakes scheduler-parked waiters.
+pub struct MutexGuard<'a, T> {
+    mutex: &'a Mutex<T>,
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard holds the lock")
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard holds the lock")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some(g) = self.inner.take() {
+            drop(g); // release the real lock first
+            if let Some((sched, _)) = ctx() {
+                let id = self.mutex.id;
+                sched.wake(|w| *w == Waiting::Lock(id), usize::MAX);
+            }
+        }
+    }
+}
+
+impl<T> std::fmt::Debug for MutexGuard<'_, T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MutexGuard")
+            .field("mutex", &self.mutex.id)
+            .finish()
+    }
+}
+
+/// Instrumented drop-in for [`std::sync::Condvar`]. `notify_one` wakes the
+/// lowest-tid waiter (a documented reduction of the schedule space).
+/// Outside an active [`check`] it forwards to a real `std` condvar; mixing
+/// model-scheduled waiters with non-model notifiers is not supported.
+pub struct Condvar {
+    id: u64,
+    inner: StdCondvar,
+}
+
+impl Condvar {
+    pub fn new() -> Self {
+        Self {
+            id: fresh_id(),
+            inner: StdCondvar::new(),
+        }
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let mutex = guard.mutex;
+        let Some((sched, me)) = ctx() else {
+            // Passthrough: wait on the real condvar with the real guard.
+            // (We must skip the model guard's Drop, which would try to wake
+            // scheduler waiters that do not exist here.)
+            let mut guard = guard;
+            let inner = guard.inner.take().expect("guard holds the lock");
+            std::mem::forget(guard);
+            return wrap_lock_result(mutex, self.inner.wait(inner));
+        };
+        let mutex_id = mutex.id;
+        {
+            let mut guard = guard;
+            let inner = guard.inner.take().expect("guard holds the lock");
+            std::mem::forget(guard);
+            // Atomically (under the scheduler lock): park as a condvar
+            // waiter, release the mutex, wake lock waiters, move the token.
+            let mut st = sched.state.lock().unwrap_or_else(PoisonError::into_inner);
+            st.threads[me] = Ts::Blocked(Waiting::Cond(self.id));
+            drop(inner);
+            for t in st.threads.iter_mut() {
+                if matches!(t, Ts::Blocked(Waiting::Lock(l)) if *l == mutex_id) {
+                    *t = Ts::Runnable;
+                }
+            }
+            sched.pick_next(&mut st);
+        }
+        sched.wait_turn(me);
+        mutex.lock()
+    }
+
+    pub fn notify_one(&self) {
+        if let Some((sched, me)) = ctx() {
+            sched.yield_point(me);
+            let id = self.id;
+            sched.wake(|w| *w == Waiting::Cond(id), 1);
+        } else {
+            self.inner.notify_one();
+        }
+    }
+
+    pub fn notify_all(&self) {
+        if let Some((sched, me)) = ctx() {
+            sched.yield_point(me);
+            let id = self.id;
+            sched.wake(|w| *w == Waiting::Cond(id), usize::MAX);
+        } else {
+            self.inner.notify_all();
+        }
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Condvar").field("id", &self.id).finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Channels
+// ---------------------------------------------------------------------------
+
+pub mod mpsc {
+    use super::*;
+
+    /// Instrumented unbounded channel: `std::sync::mpsc` underneath, with
+    /// `recv` turned into a schedulable try/park loop and sender drops
+    /// ordered so disconnection is visible *before* waiters wake.
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        let (tx, rx) = std_mpsc::channel();
+        let id = fresh_id();
+        (
+            Sender {
+                inner: Some(tx),
+                id,
+            },
+            Receiver { inner: rx, id },
+        )
+    }
+
+    pub struct Sender<T> {
+        // `Option` so Drop can release the std sender *before* waking
+        // parked receivers — otherwise a woken receiver try-recvs Empty,
+        // parks again, and the disconnect event is lost (missed wakeup).
+        inner: Option<std_mpsc::Sender<T>>,
+        id: u64,
+    }
+
+    impl<T> Sender<T> {
+        pub fn send(&self, t: T) -> Result<(), std_mpsc::SendError<T>> {
+            maybe_yield();
+            let r = self.inner.as_ref().expect("sender is live").send(t);
+            if r.is_ok() {
+                if let Some((sched, _)) = ctx() {
+                    let id = self.id;
+                    sched.wake(|w| *w == Waiting::Chan(id), usize::MAX);
+                }
+            }
+            r
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Self {
+            Self {
+                inner: self.inner.clone(),
+                id: self.id,
+            }
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            drop(self.inner.take());
+            if let Some((sched, _)) = ctx() {
+                let id = self.id;
+                sched.wake(|w| *w == Waiting::Chan(id), usize::MAX);
+            }
+        }
+    }
+
+    impl<T> std::fmt::Debug for Sender<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Sender").field("id", &self.id).finish()
+        }
+    }
+
+    pub struct Receiver<T> {
+        inner: std_mpsc::Receiver<T>,
+        id: u64,
+    }
+
+    impl<T> Receiver<T> {
+        pub fn recv(&self) -> Result<T, std_mpsc::RecvError> {
+            let Some((sched, me)) = ctx() else {
+                return self.inner.recv();
+            };
+            loop {
+                sched.yield_point(me);
+                match self.inner.try_recv() {
+                    Ok(v) => return Ok(v),
+                    Err(std_mpsc::TryRecvError::Empty) => {
+                        sched.block_current(me, Waiting::Chan(self.id));
+                    }
+                    Err(std_mpsc::TryRecvError::Disconnected) => {
+                        return Err(std_mpsc::RecvError)
+                    }
+                }
+            }
+        }
+
+        pub fn try_recv(&self) -> Result<T, std_mpsc::TryRecvError> {
+            maybe_yield();
+            self.inner.try_recv()
+        }
+    }
+
+    impl<T> std::fmt::Debug for Receiver<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Receiver").field("id", &self.id).finish()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threads
+// ---------------------------------------------------------------------------
+
+pub mod thread {
+    use super::*;
+
+    /// Instrumented spawn: inside an active [`check`], the child registers
+    /// with the scheduler and takes its first step only when handed the
+    /// token; outside, this is exactly `std::thread::spawn`.
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let Some((sched, _me)) = ctx() else {
+            return JoinHandle {
+                inner: std::thread::spawn(f),
+                sched: None,
+                tid: 0,
+            };
+        };
+        let tid = sched.register_thread();
+        let sched_child = Arc::clone(&sched);
+        let sched_exit = Arc::clone(&sched);
+        let inner = std::thread::spawn(move || {
+            CTX.with(|c| *c.borrow_mut() = Some((Arc::clone(&sched_child), tid)));
+            let result = catch_unwind(AssertUnwindSafe(move || {
+                sched_child.wait_turn(tid);
+                f()
+            }));
+            sched_exit.thread_finished(tid);
+            CTX.with(|c| *c.borrow_mut() = None);
+            match result {
+                Ok(v) => v,
+                Err(p) => resume_unwind(p),
+            }
+        });
+        JoinHandle {
+            inner,
+            sched: Some(sched),
+            tid,
+        }
+    }
+
+    pub struct JoinHandle<T> {
+        inner: std::thread::JoinHandle<T>,
+        sched: Option<Arc<Sched>>,
+        tid: usize,
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            if let (Some(sched), Some((_, me))) = (&self.sched, ctx()) {
+                sched.yield_point(me);
+                if !sched.is_thread_finished(self.tid) {
+                    sched.block_current(me, Waiting::Join(self.tid));
+                }
+                // Logically finished; the real join below returns promptly.
+            }
+            self.inner.join()
+        }
+
+        pub fn is_finished(&self) -> bool {
+            match &self.sched {
+                Some(sched) if ctx().is_some() => sched.is_thread_finished(self.tid),
+                _ => self.inner.is_finished(),
+            }
+        }
+    }
+
+    impl<T> std::fmt::Debug for JoinHandle<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("JoinHandle").field("tid", &self.tid).finish()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Self-tests for the checker itself
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Two threads contending for one mutex: the checker must find both
+    /// acquisition orders and terminate with a complete tree.
+    #[test]
+    fn explores_both_lock_orders_exhaustively() {
+        static FIRST_WAS_CHILD: AtomicUsize = AtomicUsize::new(0);
+        static FIRST_WAS_MAIN: AtomicUsize = AtomicUsize::new(0);
+        let report = check(|| {
+            let m = Arc::new(Mutex::new(Vec::<u8>::new()));
+            let m2 = Arc::clone(&m);
+            let h = thread::spawn(move || {
+                m2.lock().expect("model mutex").push(b'c');
+            });
+            m.lock().expect("model mutex").push(b'm');
+            h.join().expect("child clean");
+            let order = m.lock().expect("model mutex").clone();
+            match order.as_slice() {
+                [b'c', b'm'] => FIRST_WAS_CHILD.fetch_add(1, Ordering::Relaxed),
+                [b'm', b'c'] => FIRST_WAS_MAIN.fetch_add(1, Ordering::Relaxed),
+                other => panic!("impossible order {other:?}"),
+            };
+        });
+        assert!(report.complete, "tree not exhausted: {report:?}");
+        assert!(report.iterations >= 2, "{report:?}");
+        assert!(FIRST_WAS_CHILD.load(Ordering::Relaxed) > 0);
+        assert!(FIRST_WAS_MAIN.load(Ordering::Relaxed) > 0);
+    }
+
+    /// A channel round trip with the sender dropped first: disconnection
+    /// must surface as `Err`, never as a lost wakeup.
+    #[test]
+    fn channel_disconnect_is_never_a_missed_wakeup() {
+        let report = check(|| {
+            let (tx, rx) = mpsc::channel::<u32>();
+            let h = thread::spawn(move || {
+                tx.send(7).expect("receiver alive");
+                // tx drops here
+            });
+            assert_eq!(rx.recv(), Ok(7));
+            assert!(rx.recv().is_err(), "disconnect must be observed");
+            h.join().expect("sender clean");
+        });
+        assert!(report.complete, "{report:?}");
+        assert!(report.iterations >= 2, "{report:?}");
+    }
+
+    /// A genuine deadlock (AB-BA lock order) must be detected, not hung on.
+    #[test]
+    fn detects_ab_ba_deadlock() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            check(|| {
+                let a = Arc::new(Mutex::new(()));
+                let b = Arc::new(Mutex::new(()));
+                let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+                let h = thread::spawn(move || {
+                    let _ga = a2.lock().expect("model mutex");
+                    let _gb = b2.lock().expect("model mutex");
+                });
+                let _gb = b.lock().expect("model mutex");
+                let _ga = a.lock().expect("model mutex");
+                drop(_ga);
+                drop(_gb);
+                h.join().expect("child clean");
+            });
+        }));
+        let payload = caught.expect_err("some interleaving must deadlock");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("deadlock"), "unexpected panic: {msg}");
+    }
+}

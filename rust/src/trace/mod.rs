@@ -73,8 +73,9 @@
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+use crate::sync::{Arc, Mutex};
 
 use crate::transport::LinkCounters;
 
@@ -347,6 +348,7 @@ impl Ring {
         }
     }
 
+    // verifier: hot-path — overwrite-oldest into preallocated storage only.
     #[inline]
     fn push(&mut self, ev: Event) {
         let cap = self.buf.capacity();
@@ -562,6 +564,7 @@ pub fn set_round(round: u32) {
     });
 }
 
+// verifier: hot-path — allocation-free, clock-free, try_lock only.
 #[inline]
 fn record(stage: Stage, t0: Instant, t1: Option<Instant>, bytes: u64, layer: u32) {
     CURRENT.with(|c| {
@@ -624,6 +627,7 @@ impl Drop for Span {
 
 /// Open a span for `stage`. When tracing is off this is one relaxed atomic
 /// load plus an inert guard; when on, the clock is read at open and close.
+// verifier: hot-path (clock-ok) — reads the clock, allocates nothing.
 #[inline]
 pub fn span(stage: Stage) -> Span {
     let t0 = if tracing_possible() && CURRENT.with(|c| c.borrow().is_some()) {
@@ -640,6 +644,7 @@ pub fn span(stage: Stage) -> Span {
 }
 
 /// Record a zero-duration counter event (e.g. one transport frame).
+// verifier: hot-path (clock-ok) — reads the clock, allocates nothing.
 #[inline]
 pub fn counter(stage: Stage, bytes: u64) {
     if !tracing_possible() {

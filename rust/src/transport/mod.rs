@@ -33,8 +33,8 @@ pub use inproc::InProcTransport;
 pub use tcp::TcpTransport;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
-use std::sync::Arc;
+
+use crate::sync::{mpsc, thread, Arc};
 
 /// Transport-layer errors. (`Display`/`Error` are hand-written: the offline
 /// image has no `thiserror`.)
@@ -286,7 +286,7 @@ pub fn accept_n_hello(
 /// byte accounting. Iteration ends when every peer has closed its link.
 pub struct Mux {
     rx: Option<mpsc::Receiver<(u32, Result<Vec<u8>, TransportError>)>>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Vec<thread::JoinHandle<()>>,
 }
 
 impl Mux {
@@ -296,7 +296,7 @@ impl Mux {
             .into_iter()
             .map(|(id, mut conn)| {
                 let tx = tx.clone();
-                std::thread::spawn(move || loop {
+                thread::spawn(move || loop {
                     let mut buf = Vec::new();
                     match conn.recv(&mut buf) {
                         Ok(()) => {

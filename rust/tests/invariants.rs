@@ -491,3 +491,92 @@ fn compressed_variants_dim_consistency() {
         assert!(c.nnz() <= c.dim());
     }
 }
+
+// ---------------------------------------------------------------------------
+// Hostile decode: one test per header/payload defense, each pinning the
+// exact WireError the defense reports. Together with the Rice/batch attacks
+// in golden_wire.rs this covers every WireError variant (the verifier's
+// `wire-error-tests` rule fails the build if a variant loses its test).
+// ---------------------------------------------------------------------------
+
+/// A small message that deterministically encodes as `Indexed` (two exact
+/// survivors in d = 1000: 16 payload bytes vs ~250 dense), giving a stable
+/// byte layout to corrupt: indices at payload offsets 0 and 8.
+fn indexed_fixture() -> Vec<u8> {
+    let mut sg = SparseGrad::empty(1000);
+    sg.shared_mag = 1.0;
+    sg.exact.push((3, 1.5));
+    sg.exact.push((9, -2.5));
+    let mut buf = Vec::new();
+    let enc = coding::encode(&sg, &mut buf);
+    assert_eq!(enc, coding::Encoding::Indexed, "fixture layout assumption");
+    buf
+}
+
+#[test]
+fn hostile_truncated_header_is_rejected_with_length() {
+    assert_eq!(coding::decode(&[]), Err(WireError::Truncated(0)));
+    let buf = indexed_fixture();
+    let cut = &buf[..coding::HEADER_LEN - 1];
+    assert_eq!(coding::decode(cut), Err(WireError::Truncated(cut.len())));
+}
+
+#[test]
+fn hostile_bad_magic_is_rejected() {
+    let mut buf = indexed_fixture();
+    buf[0] = b'X';
+    assert_eq!(coding::decode(&buf), Err(WireError::BadMagic));
+}
+
+#[test]
+fn hostile_unknown_version_is_rejected_with_value() {
+    let mut buf = indexed_fixture();
+    buf[4] = 9;
+    assert_eq!(coding::decode(&buf), Err(WireError::BadVersion(9)));
+}
+
+#[test]
+fn hostile_unknown_encoding_is_rejected_with_value() {
+    let mut buf = indexed_fixture();
+    buf[5] = 7;
+    assert_eq!(coding::decode(&buf), Err(WireError::BadEncoding(7)));
+}
+
+#[test]
+fn hostile_nonzero_reserved_bytes_are_rejected() {
+    // Bytes 6–7 are the Rice parameters; on non-Rice encodings they must be
+    // zero so every message has exactly one canonical byte form.
+    let mut buf = indexed_fixture();
+    buf[6] = 1;
+    assert_eq!(coding::decode(&buf), Err(WireError::NonZeroReserved(1)));
+}
+
+#[test]
+fn hostile_non_finite_shared_mag_is_rejected() {
+    let mut buf = indexed_fixture();
+    buf[20..24].copy_from_slice(&f32::NAN.to_le_bytes());
+    assert!(matches!(
+        coding::decode(&buf),
+        Err(WireError::NonFiniteSharedMag(v)) if v.is_nan()
+    ));
+    buf[20..24].copy_from_slice(&f32::INFINITY.to_le_bytes());
+    assert!(matches!(
+        coding::decode(&buf),
+        Err(WireError::NonFiniteSharedMag(v)) if v.is_infinite()
+    ));
+}
+
+#[test]
+fn hostile_unsorted_indices_are_rejected() {
+    // Swap the two QA indices (payload u32s at header+0 and header+8) so
+    // the stream decodes as 9, 3 — strictly-ascending order is part of the
+    // canonical form, so this must be refused, not silently reordered.
+    let mut buf = indexed_fixture();
+    buf[coding::HEADER_LEN..coding::HEADER_LEN + 4].copy_from_slice(&9u32.to_le_bytes());
+    buf[coding::HEADER_LEN + 8..coding::HEADER_LEN + 12]
+        .copy_from_slice(&3u32.to_le_bytes());
+    assert!(matches!(
+        coding::decode(&buf),
+        Err(WireError::IndicesNotSorted(_))
+    ));
+}

@@ -1,0 +1,149 @@
+//! Repo-invariant lint pass for the gsparse tree.
+//!
+//! `cargo run -p verifier` scans `rust/src` + `rust/tests` and enforces the
+//! hand-maintained invariants the reproduction's determinism claims rest on
+//! (see each rule module). The same engine runs as a tier-1 test
+//! (`verifier/tests/tree.rs`), so `cargo test -q` fails on any violation,
+//! and against synthetic fixture trees (`verifier/tests/fixtures.rs`) to
+//! prove each rule actually fires.
+
+pub mod rules;
+pub mod strip;
+
+use std::fmt;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use strip::SourceFile;
+
+/// A scanned source tree (repo-relative paths, forward slashes).
+pub struct Tree {
+    pub files: Vec<SourceFile>,
+}
+
+impl Tree {
+    /// Build a tree from in-memory `(path, contents)` pairs — the fixture
+    /// tests' entry point.
+    pub fn from_files(files: Vec<(String, String)>) -> Self {
+        Self {
+            files: files
+                .into_iter()
+                .map(|(p, s)| SourceFile::new(p, s))
+                .collect(),
+        }
+    }
+
+    /// Load every `.rs` file under `<root>/rust/src` and `<root>/rust/tests`.
+    pub fn load(root: &Path) -> io::Result<Self> {
+        let mut paths: Vec<PathBuf> = Vec::new();
+        for sub in ["rust/src", "rust/tests"] {
+            collect_rs(&root.join(sub), &mut paths)?;
+        }
+        paths.sort();
+        let mut files = Vec::with_capacity(paths.len());
+        for p in paths {
+            let raw = std::fs::read_to_string(&p)?;
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            files.push(SourceFile::new(rel, raw));
+        }
+        Ok(Self { files })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.path == path)
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// One rule violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Stable rule identifier (`safety-comment`, `wire-consts`, ...).
+    pub rule: &'static str,
+    pub path: String,
+    /// 1-based line, or 0 when the finding is tree-level.
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line == 0 {
+            write!(f, "[{}] {}: {}", self.rule, self.path, self.msg)
+        } else {
+            write!(f, "[{}] {}:{}: {}", self.rule, self.path, self.line, self.msg)
+        }
+    }
+}
+
+/// The full report: findings plus the generated wire-constant table.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub wire_table: String,
+}
+
+impl Report {
+    pub fn passed(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Findings for one rule id (fixture tests filter with this).
+    pub fn by_rule(&self, rule: &str) -> Vec<&Finding> {
+        self.findings.iter().filter(|f| f.rule == rule).collect()
+    }
+
+    /// Human-readable report body (what the binary prints and uploads).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("gsparse repo-invariant verifier\n");
+        out.push_str("===============================\n\n");
+        out.push_str(&self.wire_table);
+        out.push('\n');
+        if self.findings.is_empty() {
+            out.push_str("OK: all invariants hold.\n");
+        } else {
+            out.push_str(&format!("{} violation(s):\n", self.findings.len()));
+            for f in &self.findings {
+                out.push_str(&format!("  {f}\n"));
+            }
+        }
+        out
+    }
+}
+
+/// Run every rule over the tree.
+pub fn run_all(tree: &Tree) -> Report {
+    let mut findings = Vec::new();
+    rules::safety::check(tree, &mut findings);
+    rules::spawn::check(tree, &mut findings);
+    rules::hotpath::check(tree, &mut findings);
+    let wire_table = rules::wire::check(tree, &mut findings);
+    rules::coverage::check(tree, &mut findings);
+    rules::deprecated::check(tree, &mut findings);
+    findings.sort_by(|a, b| {
+        (a.rule, &a.path, a.line, &a.msg).cmp(&(b.rule, &b.path, b.line, &b.msg))
+    });
+    Report {
+        findings,
+        wire_table,
+    }
+}

@@ -1,0 +1,41 @@
+//! `cargo run -p verifier` — scan the repo's `rust/` tree and enforce the
+//! invariants described in `verifier::rules`. Exit code 1 on any violation.
+//! Set `VERIFIER_OUT=<path>` to also write the report to a file (CI uploads
+//! it as an artifact).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    // The binary lives at <repo>/verifier; the scanned tree at <repo>/rust.
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("verifier crate sits inside the repo")
+        .to_path_buf();
+    let tree = match verifier::Tree::load(&root) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("verifier: cannot read {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    let report = verifier::run_all(&tree);
+    let rendered = report.render();
+    print!("{rendered}");
+    println!(
+        "scanned {} files, {} finding(s)",
+        tree.files.len(),
+        report.findings.len()
+    );
+    if let Ok(out_path) = std::env::var("VERIFIER_OUT") {
+        if let Err(e) = std::fs::write(&out_path, &rendered) {
+            eprintln!("verifier: cannot write {out_path}: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    if report.passed() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,202 @@
+//! `stage-coverage` / `wire-error-tests`: the observability and adversarial
+//! surfaces must stay total. Every `trace::Stage` variant needs at least one
+//! probe site outside `trace/mod.rs` (a stage nobody records is a dead
+//! column in every export), the `STAGES` table must list each variant
+//! exactly once, and every `coding::WireError` variant needs at least one
+//! hostile-decode test under `rust/tests/` naming it — the rule that found
+//! the gaps `tests/invariants.rs` now closes.
+
+use crate::strip::ident_occurrences;
+use crate::{Finding, SourceFile, Tree};
+
+pub fn check(tree: &Tree, out: &mut Vec<Finding>) {
+    if let Some(f) = tree.files.iter().find(|f| f.path.ends_with("src/trace/mod.rs")) {
+        check_stages(tree, f, out);
+    }
+    if let Some(f) = tree
+        .files
+        .iter()
+        .find(|f| f.path.ends_with("src/coding/message.rs"))
+    {
+        check_wire_errors(tree, f, out);
+    }
+}
+
+fn check_stages(tree: &Tree, f: &SourceFile, out: &mut Vec<Finding>) {
+    let Some(variants) = enum_variants(f, "Stage") else {
+        out.push(Finding {
+            rule: "stage-coverage",
+            path: f.path.clone(),
+            line: 0,
+            msg: "could not parse `enum Stage`".into(),
+        });
+        return;
+    };
+    // The STAGES table must enumerate each variant exactly once.
+    if let Some(body) = stages_array_body(f) {
+        for v in &variants {
+            let n = ident_occurrences(body, v).len();
+            if n != 1 {
+                out.push(Finding {
+                    rule: "stage-coverage",
+                    path: f.path.clone(),
+                    line: 0,
+                    msg: format!("`STAGES` lists `Stage::{v}` {n} times (want exactly 1)"),
+                });
+            }
+        }
+    } else {
+        out.push(Finding {
+            rule: "stage-coverage",
+            path: f.path.clone(),
+            line: 0,
+            msg: "could not locate the `STAGES` array initializer".into(),
+        });
+    }
+    // Every variant needs a probe site somewhere else in the tree.
+    for v in &variants {
+        let probe = format!("Stage::{v}");
+        let probed = tree
+            .files
+            .iter()
+            .filter(|other| !other.path.ends_with("src/trace/mod.rs"))
+            .any(|other| other.code.contains(&probe));
+        if !probed {
+            out.push(Finding {
+                rule: "stage-coverage",
+                path: f.path.clone(),
+                line: 0,
+                msg: format!("`Stage::{v}` has no probe site outside trace/mod.rs"),
+            });
+        }
+    }
+}
+
+fn check_wire_errors(tree: &Tree, f: &SourceFile, out: &mut Vec<Finding>) {
+    let Some(variants) = enum_variants(f, "WireError") else {
+        out.push(Finding {
+            rule: "wire-error-tests",
+            path: f.path.clone(),
+            line: 0,
+            msg: "could not parse `enum WireError`".into(),
+        });
+        return;
+    };
+    for v in &variants {
+        let pat = format!("WireError::{v}");
+        let tested = tree
+            .files
+            .iter()
+            .filter(|t| t.path.contains("rust/tests/") || t.path.starts_with("tests/"))
+            .any(|t| t.code.contains(&pat));
+        if !tested {
+            out.push(Finding {
+                rule: "wire-error-tests",
+                path: f.path.clone(),
+                line: 0,
+                msg: format!(
+                    "`WireError::{v}` has no adversarial decode test under rust/tests/"
+                ),
+            });
+        }
+    }
+}
+
+/// Parse the variant names of `enum <name>` from stripped code.
+fn enum_variants(f: &SourceFile, name: &str) -> Option<Vec<String>> {
+    let code = &f.code;
+    let mut def = None;
+    for at in ident_occurrences(code, name) {
+        if code[..at].trim_end().ends_with("enum") {
+            def = Some(at);
+            break;
+        }
+    }
+    let at = def?;
+    let open = at + code[at..].find('{')?;
+    let bytes = code.as_bytes();
+    let mut depth = 0usize;
+    let mut close = open;
+    for (j, &b) in bytes.iter().enumerate().skip(open) {
+        match b {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    close = j;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let body = &code[open + 1..close];
+    let mut variants = Vec::new();
+    let mut expect_variant = true;
+    let mut depth = 0i32;
+    let b = body.as_bytes();
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'{' | b'(' | b'[' => {
+                depth += 1;
+                i += 1;
+            }
+            b'}' | b')' | b']' => {
+                depth -= 1;
+                i += 1;
+            }
+            b',' if depth == 0 => {
+                expect_variant = true;
+                i += 1;
+            }
+            b'#' if depth == 0 && i + 1 < b.len() && b[i + 1] == b'[' => {
+                // Skip an attribute.
+                let mut d = 0usize;
+                while i < b.len() {
+                    match b[i] {
+                        b'[' => d += 1,
+                        b']' => {
+                            d -= 1;
+                            if d == 0 {
+                                i += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    i += 1;
+                }
+            }
+            _ if expect_variant
+                && depth == 0
+                && (c.is_ascii_alphabetic() || c == b'_') =>
+            {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                variants.push(body[start..i].to_string());
+                expect_variant = false;
+            }
+            _ => i += 1,
+        }
+    }
+    Some(variants)
+}
+
+/// The text of the `STAGES` array initializer (`= [ ... ]`).
+fn stages_array_body(f: &SourceFile) -> Option<&str> {
+    let code = &f.code;
+    for at in ident_occurrences(code, "STAGES") {
+        if !code[..at].trim_end().ends_with("const") {
+            continue;
+        }
+        let eq = at + code[at..].find('=')?;
+        let open = eq + code[eq..].find('[')?;
+        let close = open + code[open..].find(']')?;
+        return Some(&code[open + 1..close]);
+    }
+    None
+}

@@ -1,0 +1,325 @@
+//! `deprecated-use`: the `#[deprecated]` config shims (`TrainOptions`,
+//! `PsConfig`, `DistConfig`, `Cluster::new`, ...) exist for downstream
+//! callers only — code inside `src/` must use the `Session` surface.
+//! rustc's own lint already warns, but a warning inside an
+//! `#[allow(deprecated)]` re-export region is invisible; this rule makes
+//! the boundary explicit: a deprecated ident may appear only in its
+//! defining file, under an `#[allow(deprecated)]` item (the intentional
+//! re-export/shim sites), in `use` declarations, or in tests.
+//!
+//! Matching is name-based, so precision is deliberate: type-level shims
+//! (`struct`/`enum`/`type`/`trait`) match their bare ident anywhere, while
+//! `fn` shims — whose names (`new`, `build`, `train_convex`) collide with
+//! unrelated live items — match only path-qualified uses: `Type::name` for
+//! methods, `module::name` for free functions. Unqualified calls of a
+//! deprecated free fn are left to rustc's lint.
+
+use crate::strip::{ident_occurrences, item_end_after};
+use crate::{Finding, SourceFile, Tree};
+
+enum Needle {
+    /// Bare identifier, word-boundary matched (type-level shims).
+    Ident(String),
+    /// `prefix::name`, boundary-checked at both ends (fn shims).
+    Qualified(String),
+}
+
+impl Needle {
+    fn text(&self) -> &str {
+        match self {
+            Needle::Ident(s) | Needle::Qualified(s) => s,
+        }
+    }
+}
+
+pub fn check(tree: &Tree, out: &mut Vec<Finding>) {
+    // Inventory: (defining file, needle) for every `#[deprecated]` item.
+    let mut shims: Vec<(String, Needle)> = Vec::new();
+    for f in &tree.files {
+        if !f.path.contains("src/") {
+            continue;
+        }
+        let mut from = 0usize;
+        while let Some(rel) = f.code[from..].find("#[deprecated") {
+            let at = from + rel;
+            from = at + 1;
+            if f.is_test_at(at) {
+                continue;
+            }
+            let Some((kw, name)) = deprecated_item(&f.code, at) else {
+                continue;
+            };
+            let needle = if kw == "fn" {
+                let prefix = match enclosing_impl_type(&f.code, at) {
+                    Some(ty) => ty,
+                    None => match module_of(&f.path) {
+                        Some(m) => m,
+                        None => continue,
+                    },
+                };
+                Needle::Qualified(format!("{prefix}::{name}"))
+            } else {
+                Needle::Ident(name)
+            };
+            if !shims.iter().any(|(_, n)| n.text() == needle.text()) {
+                shims.push((f.path.clone(), needle));
+            }
+        }
+    }
+    if shims.is_empty() {
+        return;
+    }
+    for f in &tree.files {
+        if !f.path.contains("src/") {
+            continue;
+        }
+        let allowed = allowed_lines(f);
+        for (home, needle) in &shims {
+            if &f.path == home {
+                continue; // the shim's own file may reference it freely
+            }
+            let hits = match needle {
+                Needle::Ident(name) => ident_occurrences(&f.code, name),
+                Needle::Qualified(path) => qualified_occurrences(&f.code, path),
+            };
+            for at in hits {
+                if f.is_test_at(at) {
+                    continue;
+                }
+                let line = f.line_of(at);
+                if allowed[line - 1] {
+                    continue;
+                }
+                let trimmed = f.raw_line(line).trim_start();
+                if trimmed.starts_with("use ") || trimmed.starts_with("pub use ") {
+                    continue;
+                }
+                out.push(Finding {
+                    rule: "deprecated-use",
+                    path: f.path.clone(),
+                    line,
+                    msg: format!(
+                        "use of deprecated shim `{}` (defined in {home}) — \
+                         migrate to the Session surface or mark the shim site \
+                         #[allow(deprecated)]",
+                        needle.text()
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Occurrences of a `prefix::name` path with identifier boundaries on both
+/// sides (so `MyCluster::new` never matches a `Cluster::new` needle).
+fn qualified_occurrences(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let hb = hay.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = hay[from..].find(needle) {
+        let at = from + rel;
+        from = at + 1;
+        let before_ok = at == 0 || !is_ident_byte(hb[at - 1]);
+        let end = at + needle.len();
+        let after_ok = end >= hb.len() || !is_ident_byte(hb[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+    }
+    out
+}
+
+/// Rust module name a file's free items live under (`sparsify/mod.rs` →
+/// `sparsify`, `coordinator/sync.rs` → `sync`).
+fn module_of(path: &str) -> Option<String> {
+    let mut parts = path.rsplit('/');
+    let file = parts.next()?;
+    if file == "mod.rs" {
+        parts.next().map(str::to_string)
+    } else if file == "lib.rs" || file == "main.rs" {
+        None // crate-root free fns have no stable path prefix
+    } else {
+        Some(file.strip_suffix(".rs").unwrap_or(file).to_string())
+    }
+}
+
+/// The keyword and identifier of the item a `#[deprecated...]` attribute at
+/// `attr_start` is attached to.
+fn deprecated_item(code: &str, attr_start: usize) -> Option<(&'static str, String)> {
+    let bytes = code.as_bytes();
+    // Skip past the attribute's closing bracket.
+    let mut i = attr_start;
+    let mut d = 0usize;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'[' => d += 1,
+            b']' => {
+                d -= 1;
+                if d == 0 {
+                    i += 1;
+                    break;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    let window = &code[i..bytes.len().min(i + 400)];
+    let mut best: Option<usize> = None;
+    let mut best_kw: &'static str = "";
+    for kw in ["fn", "struct", "enum", "trait", "type", "mod", "const", "static"] {
+        if let Some(&at) = ident_occurrences(window, kw).first() {
+            let earlier = match best {
+                None => true,
+                Some(b) => at < b,
+            };
+            if earlier {
+                best = Some(at);
+                best_kw = kw;
+            }
+        }
+    }
+    let mut j = best? + best_kw.len();
+    let wb = window.as_bytes();
+    while j < wb.len() && (wb[j] as char).is_whitespace() {
+        j += 1;
+    }
+    let start = j;
+    while j < wb.len() && is_ident_byte(wb[j]) {
+        j += 1;
+    }
+    (j > start).then(|| (best_kw, window[start..j].to_string()))
+}
+
+/// Self type of the innermost `impl` block enclosing `pos`, if any
+/// (`impl Cluster` / `impl<T> Foo<T>` / `impl Debug for Bar` all resolve to
+/// the implementing type's final path segment).
+fn enclosing_impl_type(code: &str, pos: usize) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut best: Option<(usize, String)> = None;
+    for at in ident_occurrences(code, "impl") {
+        if at >= pos {
+            break;
+        }
+        let Some(rel) = code[at..].find('{') else {
+            continue;
+        };
+        let open = at + rel;
+        if open >= pos {
+            continue;
+        }
+        // Matching close of the impl block's brace.
+        let mut depth = 0usize;
+        let mut j = open;
+        let mut close = None;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        close = Some(j);
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(close) = close else { continue };
+        if pos >= close {
+            continue;
+        }
+        if let Some(name) = impl_header_type(&code[at + 4..open]) {
+            let replace = match &best {
+                None => true,
+                Some((b, _)) => at > *b, // innermost wins
+            };
+            if replace {
+                best = Some((at, name));
+            }
+        }
+    }
+    best.map(|(_, name)| name)
+}
+
+/// Extract the self-type name from the text between `impl` and `{`.
+fn impl_header_type(header: &str) -> Option<String> {
+    let mut h = header.trim();
+    if let Some(p) = h.find(" for ") {
+        h = h[p + 5..].trim();
+    } else if h.starts_with('<') {
+        // Skip the generic parameter list after `impl`.
+        let mut d = 0usize;
+        let mut cut = h.len();
+        for (k, ch) in h.char_indices() {
+            match ch {
+                '<' => d += 1,
+                '>' => {
+                    d -= 1;
+                    if d == 0 {
+                        cut = k + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        h = h[cut..].trim();
+    }
+    let end = h
+        .find(|c: char| c == '<' || c.is_whitespace())
+        .unwrap_or(h.len());
+    let name = h[..end].rsplit("::").next().unwrap_or("");
+    (!name.is_empty()).then(|| name.to_string())
+}
+
+/// Lines covered by `#[allow(deprecated)]` (attribute through the end of
+/// its item), or the whole file for `#![allow(deprecated)]`.
+fn allowed_lines(f: &SourceFile) -> Vec<bool> {
+    let mut allowed = vec![false; f.lines()];
+    let bytes = f.code.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = f.code[from..].find("allow(deprecated") {
+        let at = from + rel;
+        from = at + 1;
+        let Some(hash) = f.code[..at].rfind('#') else {
+            continue;
+        };
+        if bytes.get(hash + 1) == Some(&b'!') {
+            // Inner attribute: whole file.
+            for a in allowed.iter_mut() {
+                *a = true;
+            }
+            return allowed;
+        }
+        // Outer attribute: match its `]`, then extend over the item.
+        let mut i = hash;
+        let mut d = 0usize;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'[' => d += 1,
+                b']' => {
+                    d -= 1;
+                    if d == 0 {
+                        i += 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        let end = item_end_after(bytes, i).unwrap_or(bytes.len());
+        let first = f.line_of(hash) - 1;
+        let last = f.line_of(end.saturating_sub(1)) - 1;
+        for a in allowed.iter_mut().take(last + 1).skip(first) {
+            *a = true;
+        }
+    }
+    allowed
+}

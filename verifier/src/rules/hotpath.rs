@@ -1,0 +1,143 @@
+//! `trace-hotpath`: functions annotated `// verifier: hot-path` must stay
+//! allocation-free and lock-free — no `Instant::now` (unless the marker
+//! says `(clock-ok)`, for the two span entry points whose whole job is to
+//! read the clock), no blocking `.lock(`, and none of the common allocating
+//! calls. The rule also *requires* the markers on the four trace hot-path
+//! functions (`record`, `Ring::push`, `span`, `counter`) so the annotation
+//! itself cannot silently disappear.
+
+use crate::strip::ident_occurrences;
+use crate::{Finding, SourceFile, Tree};
+
+const MARKER: &str = "verifier: hot-path";
+
+/// Substrings that mean "this allocates" at the call-site level.
+const ALLOCATING: &[&str] = &[
+    "Vec::new",
+    "vec!",
+    "Box::new",
+    "String::new",
+    "String::from",
+    "format!",
+    ".to_string(",
+    ".to_owned(",
+    ".to_vec(",
+    "with_capacity",
+    ".collect(",
+    "push_str",
+];
+
+/// Functions in `rust/src/trace/mod.rs` that must carry the marker.
+const REQUIRED_TRACE_FNS: &[&str] = &["record", "push", "span", "counter"];
+
+pub fn check(tree: &Tree, out: &mut Vec<Finding>) {
+    for f in &tree.files {
+        if !f.path.contains("src/") {
+            continue;
+        }
+        let mut marked: Vec<String> = Vec::new();
+        for line in 1..=f.lines() {
+            let raw = f.raw_line(line);
+            let Some(pos) = raw.find(MARKER) else {
+                continue;
+            };
+            let clock_ok = raw[pos..].contains("(clock-ok)");
+            match fn_after_line(f, line) {
+                Some((name, body_start, body_end)) => {
+                    marked.push(name.clone());
+                    scan_body(f, &name, body_start, body_end, clock_ok, out);
+                }
+                None => out.push(Finding {
+                    rule: "trace-hotpath",
+                    path: f.path.clone(),
+                    line,
+                    msg: "hot-path marker not followed by a function".into(),
+                }),
+            }
+        }
+        if f.path.ends_with("src/trace/mod.rs") {
+            for required in REQUIRED_TRACE_FNS {
+                if !marked.iter().any(|m| m == required) {
+                    out.push(Finding {
+                        rule: "trace-hotpath",
+                        path: f.path.clone(),
+                        line: 0,
+                        msg: format!(
+                            "trace fn `{required}` lost its `// {MARKER}` marker"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Find the first `fn` at or after the start of `line + 1` in stripped
+/// code; return its name and body byte range (inside the braces).
+fn fn_after_line(f: &SourceFile, line: usize) -> Option<(String, usize, usize)> {
+    let from = *f.line_starts.get(line)?; // start of the following line
+    let code = &f.code;
+    let fn_at = ident_occurrences(&code[from..], "fn")
+        .first()
+        .map(|&o| from + o)?;
+    let bytes = code.as_bytes();
+    // Function name: first identifier after `fn`.
+    let mut i = fn_at + 2;
+    while i < bytes.len() && (bytes[i] as char).is_whitespace() {
+        i += 1;
+    }
+    let name_start = i;
+    while i < bytes.len() && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_') {
+        i += 1;
+    }
+    let name = code[name_start..i].to_string();
+    if name.is_empty() {
+        return None;
+    }
+    // Body: first `{` after the `fn` keyword, to its matching `}`.
+    let open = fn_at + code[fn_at..].find('{')?;
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < bytes.len() {
+        match bytes[j] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((name, open + 1, j));
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+fn scan_body(
+    f: &SourceFile,
+    name: &str,
+    start: usize,
+    end: usize,
+    clock_ok: bool,
+    out: &mut Vec<Finding>,
+) {
+    let body = &f.code[start..end];
+    let mut flag = |pat: &str, what: &str| {
+        if let Some(off) = body.find(pat) {
+            out.push(Finding {
+                rule: "trace-hotpath",
+                path: f.path.clone(),
+                line: f.line_of(start + off),
+                msg: format!("hot-path fn `{name}` contains {what} (`{pat}`)"),
+            });
+        }
+    };
+    if !clock_ok {
+        flag("Instant::now", "a clock read");
+    }
+    flag(".lock(", "a blocking lock (use try_lock and drop on contention)");
+    for pat in ALLOCATING {
+        flag(pat, "an allocating call");
+    }
+}

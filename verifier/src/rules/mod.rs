@@ -1,0 +1,21 @@
+//! The repo-specific lint rules. Each module exposes
+//! `check(&Tree, &mut Vec<Finding>)` (the wire rule also returns the
+//! generated constant table). Rule ids are stable strings so CI output and
+//! the fixture tests can key on them:
+//!
+//! | id                 | invariant                                             |
+//! |--------------------|-------------------------------------------------------|
+//! | `safety-comment`   | every `unsafe` in `src/` carries a `// SAFETY:` note  |
+//! | `thread-spawn`     | `thread::spawn` only at allow-listed sites            |
+//! | `trace-hotpath`    | marked hot-path fns: no clocks/locks/allocations      |
+//! | `wire-consts`      | wire-format constants match the generated table       |
+//! | `stage-coverage`   | every `trace::Stage` variant has a probe site         |
+//! | `wire-error-tests` | every `WireError` variant has an adversarial test     |
+//! | `deprecated-use`   | no use of `#[deprecated]` shims inside `src/`         |
+
+pub mod coverage;
+pub mod deprecated;
+pub mod hotpath;
+pub mod safety;
+pub mod spawn;
+pub mod wire;

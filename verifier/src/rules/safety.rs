@@ -1,0 +1,52 @@
+//! `safety-comment`: every `unsafe` keyword in non-test `rust/src` code —
+//! blocks, fns, and impls alike — must carry a `// SAFETY:` justification:
+//! on the same line, or anywhere in the contiguous run of comment lines
+//! directly above it (blank lines and `#[...]` attribute lines may sit in
+//! between). The lifetime-erasing transmute in `sparsify/pool.rs` is
+//! exactly the kind of site whose justification must never rot away from
+//! the code.
+
+use crate::strip::ident_occurrences;
+use crate::{Finding, Tree};
+
+/// True when the raw line may appear between an `unsafe` and its SAFETY
+/// comment block: a comment, an attribute, or blank.
+fn is_gap_line(raw: &str) -> bool {
+    let t = raw.trim_start();
+    t.is_empty() || t.starts_with("//") || t.starts_with("#[") || t.starts_with("#!")
+}
+
+pub fn check(tree: &Tree, out: &mut Vec<Finding>) {
+    for f in &tree.files {
+        if !f.path.contains("src/") {
+            continue;
+        }
+        for at in ident_occurrences(&f.code, "unsafe") {
+            if f.is_test_at(at) {
+                continue;
+            }
+            let line = f.line_of(at);
+            let mut documented = f.raw_line(line).contains("SAFETY:");
+            let mut l = line;
+            while !documented && l > 1 {
+                l -= 1;
+                let raw = f.raw_line(l);
+                if raw.contains("SAFETY:") {
+                    documented = true;
+                } else if !is_gap_line(raw) {
+                    break;
+                }
+            }
+            if !documented {
+                out.push(Finding {
+                    rule: "safety-comment",
+                    path: f.path.clone(),
+                    line,
+                    msg: "`unsafe` without a `// SAFETY:` comment on it or in the \
+                          comment block directly above"
+                        .into(),
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! `thread-spawn`: raw `thread::spawn` is allowed only at the sites that
+//! own thread lifecycles — the `ShardPool` workers, the transport `Mux`
+//! reader threads, the dist coordinator's process watchdog, and the
+//! `gsparse::sync` shim itself (whose model scheduler spawns the threads it
+//! controls). Everything else must go through `ShardPool` or `thread::scope`
+//! so no detached thread can outlive the borrows it captures.
+
+use crate::{Finding, Tree};
+
+/// Files (suffix match) where `thread::spawn` is legitimate.
+const ALLOWED: &[&str] = &[
+    "src/sync/",
+    "src/sparsify/pool.rs",
+    "src/transport/mod.rs",
+    "src/coordinator/dist.rs",
+];
+
+pub fn check(tree: &Tree, out: &mut Vec<Finding>) {
+    for f in &tree.files {
+        if !f.path.contains("src/") {
+            continue;
+        }
+        if ALLOWED.iter().any(|a| f.path.contains(a)) {
+            continue;
+        }
+        let mut from = 0usize;
+        while let Some(rel) = f.code[from..].find("thread::spawn") {
+            let at = from + rel;
+            from = at + 1;
+            if f.is_test_at(at) {
+                continue;
+            }
+            out.push(Finding {
+                rule: "thread-spawn",
+                path: f.path.clone(),
+                line: f.line_of(at),
+                msg: "`thread::spawn` outside the allow-listed thread owners \
+                      (use ShardPool, thread::scope, or gsparse::sync::thread)"
+                    .into(),
+            });
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! `wire-consts`: the wire-format constants scattered across
+//! `transport/frame.rs`, `coding/message.rs`, `coding/batch.rs`, and
+//! `coordinator/dist.rs` are cross-referenced against ONE generated table
+//! (below) plus structural identities (header lengths decompose into their
+//! field widths, the version window is well-formed, frame-kind bytes are
+//! unique). Skewing any one constant without updating its peers — the
+//! classic silent determinism breaker — fails the verifier with a diff of
+//! the table.
+
+use crate::{Finding, SourceFile, Tree};
+
+/// The single source of truth: every wire constant and its pinned value.
+/// Bumping a format version means editing this table in the same PR — which
+/// is the point: the cross-file consistency argument happens here, once.
+const EXPECTED: &[(&str, &str, i64)] = &[
+    ("src/transport/frame.rs", "TRANSPORT_VERSION", 3),
+    ("src/transport/frame.rs", "MIN_TRANSPORT_VERSION", 2),
+    ("src/transport/frame.rs", "HELLO_LEN", 10),
+    ("src/transport/frame.rs", "TAG_PULL", 0x10),
+    ("src/transport/frame.rs", "TAG_WEIGHTS", 0x11),
+    ("src/transport/frame.rs", "TAG_GRAD", 0x12),
+    ("src/transport/frame.rs", "TAG_SHUTDOWN", 0x13),
+    ("src/transport/frame.rs", "TAG_CONFIG", 0x14),
+    ("src/transport/frame.rs", "TAG_GRAD_BATCH", 0x15),
+    ("src/transport/frame.rs", "TAG_WEIGHTS_BATCH", 0x16),
+    ("src/transport/frame.rs", "TAG_SPARSE_REDUCE", 0x17),
+    ("src/transport/frame.rs", "TAG_RING_ADDR", 0x18),
+    ("src/coding/message.rs", "VERSION", 1),
+    ("src/coding/message.rs", "HEADER_LEN", 24),
+    ("src/coding/batch.rs", "BATCH_VERSION", 2),
+    ("src/coding/batch.rs", "BATCH_HEADER_LEN", 12),
+    ("src/coding/batch.rs", "SUB_HEADER_LEN", 17),
+    ("src/coding/batch.rs", "PARAM_DELTA_FLAG", 0x80),
+    ("src/coordinator/dist.rs", "CONFIG_VERSION", 6),
+];
+
+pub fn check(tree: &Tree, out: &mut Vec<Finding>) -> String {
+    let mut table = String::from("wire-format constant table (found vs pinned):\n");
+    let mut found: Vec<(&str, &str, Option<i64>, i64)> = Vec::new();
+    for &(file, name, expected) in EXPECTED {
+        let Some(f) = tree.files.iter().find(|f| f.path.ends_with(file)) else {
+            continue; // fixture trees omit most files; the build catches deletions
+        };
+        let got = parse_const(f, name);
+        found.push((file, name, got, expected));
+        match got {
+            None => out.push(Finding {
+                rule: "wire-consts",
+                path: f.path.clone(),
+                line: 0,
+                msg: format!("constant `{name}` not found (or not an integer literal)"),
+            }),
+            Some(v) if v != expected => out.push(Finding {
+                rule: "wire-consts",
+                path: f.path.clone(),
+                line: 0,
+                msg: format!(
+                    "`{name}` = {v} but the verifier table pins {expected} — \
+                     if the format changed on purpose, update verifier/src/rules/wire.rs"
+                ),
+            }),
+            Some(_) => {}
+        }
+    }
+    for (file, name, got, expected) in &found {
+        let shown = got.map_or("<missing>".to_string(), |v| format!("{v:#x}"));
+        table.push_str(&format!(
+            "  {file:28} {name:24} {shown:>10}  (pinned {expected:#x})\n"
+        ));
+    }
+
+    // Relational invariants on whatever the tree actually contains.
+    let get = |name: &str| found.iter().find(|r| r.1 == name).and_then(|r| r.2);
+    if let (Some(min), Some(max)) = (get("MIN_TRANSPORT_VERSION"), get("TRANSPORT_VERSION")) {
+        if min > max {
+            out.push(Finding {
+                rule: "wire-consts",
+                path: "rust/src/transport/frame.rs".into(),
+                line: 0,
+                msg: format!(
+                    "version window inverted: MIN_TRANSPORT_VERSION ({min}) > \
+                     TRANSPORT_VERSION ({max})"
+                ),
+            });
+        }
+        if let Some(f) = tree.files.iter().find(|f| f.path.ends_with("src/transport/frame.rs"))
+        {
+            match supports_batch_threshold(f) {
+                Some(t) if t < min || t > max => out.push(Finding {
+                    rule: "wire-consts",
+                    path: f.path.clone(),
+                    line: 0,
+                    msg: format!(
+                        "supports_batch threshold {t} outside the accepted \
+                         version window [{min}, {max}]"
+                    ),
+                }),
+                None => out.push(Finding {
+                    rule: "wire-consts",
+                    path: f.path.clone(),
+                    line: 0,
+                    msg: "could not locate the `version >= N` literal in supports_batch"
+                        .into(),
+                }),
+                Some(_) => {}
+            }
+        }
+    }
+    // Frame-kind bytes must be unique.
+    let tags: Vec<(&str, i64)> = found
+        .iter()
+        .filter(|r| r.1.starts_with("TAG_"))
+        .filter_map(|r| r.2.map(|v| (r.1, v)))
+        .collect();
+    for (i, &(name_a, a)) in tags.iter().enumerate() {
+        for &(name_b, b) in &tags[i + 1..] {
+            if a == b {
+                out.push(Finding {
+                    rule: "wire-consts",
+                    path: "rust/src/transport/frame.rs".into(),
+                    line: 0,
+                    msg: format!("frame tags `{name_a}` and `{name_b}` collide at {a:#x}"),
+                });
+            }
+        }
+    }
+    // Header lengths decompose into their documented field widths.
+    let identities: &[(&str, i64, &str)] = &[
+        ("HELLO_LEN", 4 + 1 + 4 + 1, "magic + version + worker_id + codec"),
+        (
+            "HEADER_LEN",
+            4 + 1 + 1 + 1 + 1 + 4 + 4 + 4 + 4,
+            "magic + ver + enc + ka + kb + d + nnz_a + nnz_b + shared_mag",
+        ),
+        (
+            "BATCH_HEADER_LEN",
+            4 + 1 + 1 + 1 + 1 + 4,
+            "magic + ver + codec + ka + kb + nlayers",
+        ),
+        (
+            "SUB_HEADER_LEN",
+            1 + 4 + 4 + 4 + 4,
+            "enc + d + nnz_a + nnz_b + shared_mag",
+        ),
+    ];
+    for &(name, sum, fields) in identities {
+        let home = EXPECTED
+            .iter()
+            .find(|e| e.1 == name)
+            .map_or("", |e| e.0)
+            .to_string();
+        if let Some(v) = get(name) {
+            if v != sum {
+                out.push(Finding {
+                    rule: "wire-consts",
+                    path: home,
+                    line: 0,
+                    msg: format!("`{name}` = {v} but its fields ({fields}) sum to {sum}"),
+                });
+            }
+        }
+    }
+    table
+}
+
+/// Parse `const NAME: <ty> = <int literal>;` from stripped code. Returns
+/// `None` when absent or when the initializer is not a plain integer.
+fn parse_const(f: &SourceFile, name: &str) -> Option<i64> {
+    for at in crate::strip::ident_occurrences(&f.code, name) {
+        // Must look like a const definition: preceding token is `const`.
+        let before = f.code[..at].trim_end();
+        if !before.ends_with("const") {
+            continue;
+        }
+        let after = &f.code[at + name.len()..];
+        let eq = after.find('=')?;
+        let rest = after[eq + 1..].trim_start();
+        return parse_int(rest);
+    }
+    None
+}
+
+fn parse_int(s: &str) -> Option<i64> {
+    let s = s.trim_start();
+    let (digits, radix) = if let Some(hex) = s.strip_prefix("0x") {
+        (hex, 16)
+    } else {
+        (s, 10)
+    };
+    let mut end = 0usize;
+    for (i, c) in digits.char_indices() {
+        if c.is_digit(radix) || c == '_' {
+            end = i + c.len_utf8();
+        } else {
+            break;
+        }
+    }
+    if end == 0 {
+        return None;
+    }
+    let lit: String = digits[..end].chars().filter(|&c| c != '_').collect();
+    // Reject expressions (`1 << 28`): the literal must be followed by an
+    // optional type suffix and then `;`.
+    let tail = digits[end..].trim_start();
+    let tail = tail
+        .trim_start_matches(|c: char| c.is_ascii_alphanumeric())
+        .trim_start();
+    if !tail.starts_with(';') {
+        return None;
+    }
+    i64::from_str_radix(&lit, radix).ok()
+}
+
+/// Extract `N` from `self.version >= N` inside `fn supports_batch`.
+fn supports_batch_threshold(f: &SourceFile) -> Option<i64> {
+    let at = f.code.find("fn supports_batch")?;
+    let window = &f.code[at..f.code.len().min(at + 400)];
+    let ge = window.find(">=")?;
+    let rest = window[ge + 2..].trim_start();
+    let mut end = 0usize;
+    for (i, c) in rest.char_indices() {
+        if c.is_ascii_digit() {
+            end = i + 1;
+        } else {
+            break;
+        }
+    }
+    if end == 0 {
+        return None;
+    }
+    rest[..end].parse().ok()
+}

@@ -1,0 +1,410 @@
+//! A minimal Rust source scanner: blanks comments and string/char literals
+//! while preserving byte offsets and line structure, and marks `#[cfg(test)]`
+//! regions. No parser dependency — the lint rules only need token-level
+//! facts (identifier occurrences, brace matching, attribute positions), and
+//! the offline image has no registry to pull `syn` from anyway.
+//!
+//! The one genuinely ambiguous construct at this level is `'` — lifetime
+//! versus char literal. The heuristic: `'\` always opens a char literal;
+//! `'x'` (closing quote two bytes later) is a char literal; a `'` followed
+//! by a non-ASCII scalar with a closing `'` within a few bytes is a char
+//! literal; everything else is a lifetime/label and passes through.
+
+/// One scanned source file.
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes, e.g. `rust/src/lib.rs`.
+    pub path: String,
+    /// Original text.
+    pub raw: String,
+    /// Same byte length as `raw`, with comments and string/char-literal
+    /// contents replaced by spaces (newlines kept, delimiters kept).
+    pub code: String,
+    /// `test_lines[i]` is true when 1-based line `i+1` is inside a
+    /// `#[cfg(test)]` item or the file lives under a `tests/` directory.
+    pub test_lines: Vec<bool>,
+    /// Byte offset of the start of each line (index 0 = line 1).
+    pub line_starts: Vec<usize>,
+}
+
+impl SourceFile {
+    pub fn new(path: String, raw: String) -> Self {
+        let code = strip(&raw);
+        let line_starts = line_starts(&raw);
+        let is_test_file = path.contains("/tests/") || path.starts_with("tests/");
+        let test_lines = if is_test_file {
+            vec![true; line_starts.len()]
+        } else {
+            test_regions(&code, &line_starts)
+        };
+        Self {
+            path,
+            raw,
+            code,
+            test_lines,
+            line_starts,
+        }
+    }
+
+    /// 1-based line number of a byte offset.
+    pub fn line_of(&self, offset: usize) -> usize {
+        match self.line_starts.binary_search(&offset) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    /// Whether the byte offset falls in a test region.
+    pub fn is_test_at(&self, offset: usize) -> bool {
+        self.test_lines
+            .get(self.line_of(offset) - 1)
+            .copied()
+            .unwrap_or(false)
+    }
+
+    /// Raw text of a 1-based line (without the trailing newline).
+    pub fn raw_line(&self, line: usize) -> &str {
+        let start = self.line_starts[line - 1];
+        let end = self
+            .line_starts
+            .get(line)
+            .map(|&e| e.saturating_sub(1))
+            .unwrap_or(self.raw.len());
+        &self.raw[start..end.max(start)]
+    }
+
+    pub fn lines(&self) -> usize {
+        self.line_starts.len()
+    }
+}
+
+fn line_starts(s: &str) -> Vec<usize> {
+    let mut v = vec![0usize];
+    for (i, b) in s.bytes().enumerate() {
+        if b == b'\n' && i + 1 < s.len() {
+            v.push(i + 1);
+        }
+    }
+    v
+}
+
+/// Blank comments and string/char literals, preserving byte offsets.
+pub fn strip(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(b.len());
+    let mut i = 0usize;
+    let push_blanked = |out: &mut Vec<u8>, c: u8| {
+        out.push(if c == b'\n' { b'\n' } else { b' ' });
+    };
+    while i < b.len() {
+        let c = b[i];
+        // Line comment.
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            while i < b.len() && b[i] != b'\n' {
+                out.push(b' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (nests).
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            out.extend_from_slice(b"  ");
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else {
+                    push_blanked(&mut out, b[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string r"..." / r#"..."# (optionally byte: br"...").
+        if c == b'r' && i + 1 < b.len() && (b[i + 1] == b'"' || b[i + 1] == b'#') {
+            let prev = if i == 0 { b' ' } else { b[i - 1] };
+            let prev_prev = if i < 2 { b' ' } else { b[i - 2] };
+            let ident = |x: u8| x.is_ascii_alphanumeric() || x == b'_';
+            let ok_prefix = !ident(prev) || (prev == b'b' && !ident(prev_prev));
+            if ok_prefix {
+                let mut j = i + 1;
+                let mut hashes = 0usize;
+                while j < b.len() && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < b.len() && b[j] == b'"' {
+                    out.push(b' '); // the `r`
+                    for _ in 0..hashes {
+                        out.push(b' ');
+                    }
+                    out.push(b'"');
+                    j += 1;
+                    while j < b.len() {
+                        if b[j] == b'"' {
+                            let mut k = j + 1;
+                            let mut h = 0usize;
+                            while k < b.len() && h < hashes && b[k] == b'#' {
+                                h += 1;
+                                k += 1;
+                            }
+                            if h == hashes {
+                                out.push(b'"');
+                                for _ in 0..hashes {
+                                    out.push(b' ');
+                                }
+                                j = k;
+                                break;
+                            }
+                        }
+                        push_blanked(&mut out, b[j]);
+                        j += 1;
+                    }
+                    i = j;
+                    continue;
+                }
+            }
+        }
+        // Regular string.
+        if c == b'"' {
+            out.push(b'"');
+            i += 1;
+            while i < b.len() {
+                if b[i] == b'\\' && i + 1 < b.len() {
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'"' {
+                    out.push(b'"');
+                    i += 1;
+                    break;
+                }
+                push_blanked(&mut out, b[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal or lifetime.
+        if c == b'\'' {
+            if i + 1 < b.len() && b[i + 1] == b'\\' {
+                // Escaped char literal: scan to the closing quote.
+                out.push(b'\'');
+                i += 1;
+                while i < b.len() {
+                    if b[i] == b'\\' && i + 1 < b.len() {
+                        out.extend_from_slice(b"  ");
+                        i += 2;
+                        continue;
+                    }
+                    if b[i] == b'\'' {
+                        out.push(b'\'');
+                        i += 1;
+                        break;
+                    }
+                    out.push(b' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if i + 2 < b.len() && b[i + 2] == b'\'' && b[i + 1] != b'\'' && b[i + 1] < 0x80 {
+                // Simple one-byte char literal 'x'.
+                out.extend_from_slice(b"' '");
+                i += 3;
+                continue;
+            }
+            if i + 1 < b.len() && b[i + 1] >= 0x80 {
+                // Multi-byte scalar char literal: closing quote within 5 bytes.
+                let mut close = None;
+                for k in 2..=5usize {
+                    if i + k < b.len() && b[i + k] == b'\'' {
+                        close = Some(k);
+                        break;
+                    }
+                }
+                if let Some(k) = close {
+                    out.push(b'\'');
+                    for _ in 0..k - 1 {
+                        out.push(b' ');
+                    }
+                    out.push(b'\'');
+                    i += k + 1;
+                    continue;
+                }
+            }
+            // Lifetime / label: pass the quote through.
+            out.push(b'\'');
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    // All substituted bytes are ASCII and original multi-byte sequences are
+    // either copied whole or fully blanked, so this is valid UTF-8.
+    String::from_utf8(out).expect("stripped source is valid UTF-8")
+}
+
+/// Mark lines covered by `#[cfg(test)]` items (attribute through the end of
+/// the item's brace block, or through `;` for block-less items).
+fn test_regions(code: &str, line_starts: &[usize]) -> Vec<bool> {
+    let mut flags = vec![false; line_starts.len()];
+    let bytes = code.as_bytes();
+    let mut search = 0usize;
+    while let Some(rel) = code[search..].find("#[cfg(test)]") {
+        let attr_start = search + rel;
+        let attr_end = attr_start + "#[cfg(test)]".len();
+        search = attr_end;
+        let Some(item_end) = item_end_after(bytes, attr_end) else {
+            // Unterminated item: mark through end of file.
+            mark_lines(&mut flags, line_starts, attr_start, code.len());
+            break;
+        };
+        mark_lines(&mut flags, line_starts, attr_start, item_end);
+        search = item_end;
+    }
+    flags
+}
+
+/// Given stripped source and an offset just past an attribute, return the
+/// offset one past the end of the item the attribute is attached to: the
+/// matching `}` of the first brace block, or the first `;` when it precedes
+/// any `{` (use declarations, tuple structs, extern fns).
+pub fn item_end_after(bytes: &[u8], mut i: usize) -> Option<usize> {
+    // Skip whitespace and any further attributes before the item keyword.
+    loop {
+        while i < bytes.len() && (bytes[i] as char).is_whitespace() {
+            i += 1;
+        }
+        if i + 1 < bytes.len() && bytes[i] == b'#' && bytes[i + 1] == b'[' {
+            // Skip a (possibly bracket-nested) attribute.
+            let mut depth = 0usize;
+            while i < bytes.len() {
+                match bytes[i] {
+                    b'[' => depth += 1,
+                    b']' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            i += 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                i += 1;
+            }
+            continue;
+        }
+        break;
+    }
+    // Find the first `{` or a `;` that precedes any `{`.
+    let mut j = i;
+    while j < bytes.len() {
+        match bytes[j] {
+            b';' => return Some(j + 1),
+            b'{' => {
+                let mut depth = 0usize;
+                while j < bytes.len() {
+                    match bytes[j] {
+                        b'{' => depth += 1,
+                        b'}' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                return Some(j + 1);
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                return None;
+            }
+            _ => j += 1,
+        }
+    }
+    None
+}
+
+fn mark_lines(flags: &mut [bool], line_starts: &[usize], start: usize, end: usize) {
+    let first = match line_starts.binary_search(&start) {
+        Ok(i) => i,
+        Err(i) => i - 1,
+    };
+    let last = match line_starts.binary_search(&end) {
+        Ok(i) => i,
+        Err(i) => i - 1,
+    };
+    for f in flags.iter_mut().take(last + 1).skip(first) {
+        *f = true;
+    }
+}
+
+/// Iterator over word-boundary occurrences of `word` in `haystack`
+/// (identifier characters on either side disqualify a match).
+pub fn ident_occurrences(haystack: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let hb = haystack.as_bytes();
+    let ident = |x: u8| x.is_ascii_alphanumeric() || x == b'_';
+    let mut from = 0usize;
+    while let Some(rel) = haystack[from..].find(word) {
+        let at = from + rel;
+        from = at + 1;
+        let before_ok = at == 0 || !ident(hb[at - 1]);
+        let after = at + word.len();
+        let after_ok = after >= hb.len() || !ident(hb[after]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings_preserving_offsets() {
+        let src = "let a = \"un//safe\"; // unsafe here\nlet b = 'x'; /* unsafe */ let c: &'static str = \"\";\n";
+        let out = strip(src);
+        assert_eq!(out.len(), src.len());
+        assert!(!out.contains("unsafe"));
+        assert!(out.contains("'static"));
+        assert_eq!(
+            src.match_indices('\n').count(),
+            out.match_indices('\n').count()
+        );
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let src = "let s = r#\"unsafe \" quote\"#; let t = \"\\\"unsafe\\\"\"; let u = '\\'';";
+        let out = strip(src);
+        assert_eq!(out.len(), src.len());
+        assert!(!out.contains("unsafe"));
+    }
+
+    #[test]
+    fn test_region_marking() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let f = SourceFile::new("rust/src/x.rs".into(), src.into());
+        assert!(!f.test_lines[0]);
+        assert!(f.test_lines[1]);
+        assert!(f.test_lines[2]);
+        assert!(f.test_lines[3]);
+        assert!(f.test_lines[4]);
+        assert!(!f.test_lines[5]);
+    }
+
+    #[test]
+    fn word_boundaries() {
+        let occ = ident_occurrences("unsafe unsafe_op_in_unsafe_fn xunsafe un_safe", "unsafe");
+        assert_eq!(occ, vec![0]);
+    }
+}

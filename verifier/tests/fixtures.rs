@@ -1,0 +1,288 @@
+//! Seeded-violation fixtures: each test feeds the verifier a synthetic tree
+//! containing exactly the defect a rule exists to catch, and asserts the
+//! rule fires (and that the clean twin passes). This is the acceptance
+//! criterion that the lint pass "demonstrably fails" — without it a rule
+//! could rot into a no-op and nobody would notice.
+
+use verifier::{run_all, Tree};
+
+fn tree(files: &[(&str, &str)]) -> Tree {
+    Tree::from_files(
+        files
+            .iter()
+            .map(|(p, s)| (p.to_string(), s.to_string()))
+            .collect(),
+    )
+}
+
+#[test]
+fn missing_safety_comment_is_flagged() {
+    let bad = tree(&[(
+        "rust/src/demo.rs",
+        "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n",
+    )]);
+    let report = run_all(&bad);
+    let hits = report.by_rule("safety-comment");
+    assert_eq!(hits.len(), 1, "expected exactly one finding: {:?}", hits);
+    assert_eq!(hits[0].line, 2);
+
+    let good = tree(&[(
+        "rust/src/demo.rs",
+        "pub fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}\n",
+    )]);
+    assert!(run_all(&good).by_rule("safety-comment").is_empty());
+}
+
+#[test]
+fn safety_rule_ignores_comments_strings_and_tests() {
+    let t = tree(&[(
+        "rust/src/demo.rs",
+        concat!(
+            "// this mentions unsafe in prose only\n",
+            "pub const S: &str = \"unsafe\";\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    fn t() { unsafe { std::hint::unreachable_unchecked() } }\n",
+            "}\n",
+        ),
+    )]);
+    assert!(run_all(&t).by_rule("safety-comment").is_empty());
+}
+
+#[test]
+fn stray_thread_spawn_is_flagged_but_allowlisted_sites_pass() {
+    let bad = tree(&[(
+        "rust/src/widget.rs",
+        "pub fn go() { std::thread::spawn(|| {}); }\n",
+    )]);
+    assert_eq!(run_all(&bad).by_rule("thread-spawn").len(), 1);
+
+    let good = tree(&[(
+        "rust/src/sparsify/pool.rs",
+        "pub fn go() { std::thread::spawn(|| {}); }\n",
+    )]);
+    assert!(run_all(&good).by_rule("thread-spawn").is_empty());
+}
+
+/// A frame.rs fixture with every pinned constant present and `min` as the
+/// accepted-window floor.
+fn frame_src(min: u8) -> String {
+    format!(
+        concat!(
+            "pub const TRANSPORT_VERSION: u8 = 3;\n",
+            "pub const MIN_TRANSPORT_VERSION: u8 = {};\n",
+            "pub const HELLO_LEN: usize = 10;\n",
+            "const TAG_PULL: u8 = 0x10;\n",
+            "const TAG_WEIGHTS: u8 = 0x11;\n",
+            "const TAG_GRAD: u8 = 0x12;\n",
+            "const TAG_SHUTDOWN: u8 = 0x13;\n",
+            "const TAG_CONFIG: u8 = 0x14;\n",
+            "const TAG_GRAD_BATCH: u8 = 0x15;\n",
+            "const TAG_WEIGHTS_BATCH: u8 = 0x16;\n",
+            "const TAG_SPARSE_REDUCE: u8 = 0x17;\n",
+            "const TAG_RING_ADDR: u8 = 0x18;\n",
+            "impl Hello {{ pub fn supports_batch(&self) -> bool {{ self.version >= 3 }} }}\n",
+        ),
+        min
+    )
+}
+
+#[test]
+fn skewed_version_constant_is_flagged() {
+    // MIN above MAX: both the pinned-table check and the window identity
+    // must fire.
+    let bad = tree(&[("rust/src/transport/frame.rs", frame_src(4).as_str())]);
+    let report = run_all(&bad);
+    let hits = report.by_rule("wire-consts");
+    assert!(
+        hits.iter().any(|f| f.msg.contains("window inverted")),
+        "missing window finding: {:?}",
+        hits
+    );
+    assert!(
+        hits.iter().any(|f| f.msg.contains("MIN_TRANSPORT_VERSION")
+            && f.msg.contains("pins")),
+        "missing pinned-value finding: {:?}",
+        hits
+    );
+
+    let good = tree(&[("rust/src/transport/frame.rs", frame_src(2).as_str())]);
+    assert!(run_all(&good).by_rule("wire-consts").is_empty());
+}
+
+#[test]
+fn unprobed_stage_variant_is_flagged() {
+    let src = concat!(
+        "pub enum Stage {\n    Round = 0,\n    Solve = 1,\n}\n",
+        "pub const STAGES: [Stage; 2] = [Stage::Round, Stage::Solve];\n",
+    );
+    let bad = tree(&[
+        ("rust/src/trace/mod.rs", src),
+        ("rust/src/engine.rs", "pub fn f() { probe(Stage::Round); }\n"),
+    ]);
+    let report = run_all(&bad);
+    let hits = report.by_rule("stage-coverage");
+    assert_eq!(hits.len(), 1, "{:?}", hits);
+    assert!(hits[0].msg.contains("Stage::Solve"));
+
+    let good = tree(&[
+        ("rust/src/trace/mod.rs", src),
+        (
+            "rust/src/engine.rs",
+            "pub fn f() { probe(Stage::Round); probe(Stage::Solve); }\n",
+        ),
+    ]);
+    assert!(run_all(&good).by_rule("stage-coverage").is_empty());
+}
+
+#[test]
+fn stages_table_must_list_each_variant_once() {
+    let bad = tree(&[
+        (
+            "rust/src/trace/mod.rs",
+            concat!(
+                "pub enum Stage {\n    Round = 0,\n    Solve = 1,\n}\n",
+                "pub const STAGES: [Stage; 2] = [Stage::Round, Stage::Round];\n",
+            ),
+        ),
+        (
+            "rust/src/engine.rs",
+            "pub fn f() { probe(Stage::Round); probe(Stage::Solve); }\n",
+        ),
+    ]);
+    let report = run_all(&bad);
+    assert!(
+        report
+            .by_rule("stage-coverage")
+            .iter()
+            .any(|f| f.msg.contains("2 times") || f.msg.contains("0 times")),
+        "{:?}",
+        report.by_rule("stage-coverage")
+    );
+}
+
+#[test]
+fn untested_wire_error_variant_is_flagged() {
+    let enum_src = "pub enum WireError {\n    Truncated(usize),\n    BadMagic,\n}\n";
+    let bad = tree(&[
+        ("rust/src/coding/message.rs", enum_src),
+        (
+            "rust/tests/invariants.rs",
+            "fn t() { assert_eq!(decode(b), Err(WireError::Truncated(1))); }\n",
+        ),
+    ]);
+    let report = run_all(&bad);
+    let hits = report.by_rule("wire-error-tests");
+    assert_eq!(hits.len(), 1, "{:?}", hits);
+    assert!(hits[0].msg.contains("BadMagic"));
+
+    let good = tree(&[
+        ("rust/src/coding/message.rs", enum_src),
+        (
+            "rust/tests/invariants.rs",
+            concat!(
+                "fn t() { assert_eq!(decode(b), Err(WireError::Truncated(1))); ",
+                "assert_eq!(decode(c), Err(WireError::BadMagic)); }\n",
+            ),
+        ),
+    ]);
+    assert!(run_all(&good).by_rule("wire-error-tests").is_empty());
+}
+
+#[test]
+fn hotpath_marker_bans_clocks_locks_and_allocs() {
+    let bad = tree(&[(
+        "rust/src/demo.rs",
+        concat!(
+            "// verifier: hot-path\n",
+            "pub fn record(&self) {\n",
+            "    let t = std::time::Instant::now();\n",
+            "    let v = Vec::new();\n",
+            "    let g = self.m.lock().unwrap();\n",
+            "}\n",
+        ),
+    )]);
+    let report = run_all(&bad);
+    let hits = report.by_rule("trace-hotpath");
+    assert!(hits.iter().any(|f| f.msg.contains("clock")), "{:?}", hits);
+    assert!(hits.iter().any(|f| f.msg.contains("allocating")), "{:?}", hits);
+    assert!(hits.iter().any(|f| f.msg.contains("blocking lock")), "{:?}", hits);
+
+    // try_lock + clock-ok marker is the sanctioned shape.
+    let good = tree(&[(
+        "rust/src/demo.rs",
+        concat!(
+            "// verifier: hot-path (clock-ok)\n",
+            "pub fn span(&self) {\n",
+            "    let t = std::time::Instant::now();\n",
+            "    if let Ok(g) = self.m.try_lock() { g.len(); }\n",
+            "}\n",
+        ),
+    )]);
+    assert!(run_all(&good).by_rule("trace-hotpath").is_empty());
+}
+
+#[test]
+fn deprecated_shim_use_is_flagged_outside_its_home() {
+    let home = concat!(
+        "#[deprecated(note = \"use Session\")]\n",
+        "pub struct OldConfig { pub n: usize }\n",
+    );
+    let bad = tree(&[
+        ("rust/src/shims.rs", home),
+        (
+            "rust/src/caller.rs",
+            "pub fn f() -> usize { OldConfig { n: 1 }.n }\n",
+        ),
+    ]);
+    let report = run_all(&bad);
+    let hits = report.by_rule("deprecated-use");
+    assert_eq!(hits.len(), 1, "{:?}", hits);
+    assert!(hits[0].msg.contains("OldConfig"));
+
+    let allowed = tree(&[
+        ("rust/src/shims.rs", home),
+        (
+            "rust/src/caller.rs",
+            concat!(
+                "#[allow(deprecated)]\n",
+                "pub fn f() -> usize { OldConfig { n: 1 }.n }\n",
+            ),
+        ),
+    ]);
+    assert!(run_all(&allowed).by_rule("deprecated-use").is_empty());
+}
+
+#[test]
+fn deprecated_method_shim_matches_only_qualified_uses() {
+    // A deprecated associated fn named `new` must match `Cluster::new` but
+    // never an unrelated `Vec::new()` / `Other::new()` — the precision that
+    // keeps the rule usable when shim names collide with live items.
+    let home = concat!(
+        "pub struct Cluster;\n",
+        "impl Cluster {\n",
+        "    #[deprecated(note = \"use Session::cluster\")]\n",
+        "    pub fn new() -> Self { Cluster }\n",
+        "}\n",
+    );
+    let bad = tree(&[
+        ("rust/src/cluster.rs", home),
+        (
+            "rust/src/caller.rs",
+            "pub fn f() { let _c = Cluster::new(); let _v: Vec<u8> = Vec::new(); }\n",
+        ),
+    ]);
+    let report = run_all(&bad);
+    let hits = report.by_rule("deprecated-use");
+    assert_eq!(hits.len(), 1, "{:?}", hits);
+    assert!(hits[0].msg.contains("Cluster::new"));
+
+    let clean = tree(&[
+        ("rust/src/cluster.rs", home),
+        (
+            "rust/src/caller.rs",
+            "pub fn f() { let _v: Vec<u8> = Vec::new(); let _o = Other::new(); }\n",
+        ),
+    ]);
+    assert!(run_all(&clean).by_rule("deprecated-use").is_empty());
+}

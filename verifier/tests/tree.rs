@@ -1,0 +1,26 @@
+//! Tier-1 gate: the real repo tree must pass every verifier rule. This is
+//! what turns "determinism by discipline" into a failing test the moment a
+//! refactor drops a SAFETY comment, skews a wire constant, or leaves a
+//! `Stage`/`WireError` variant uncovered.
+
+use std::path::PathBuf;
+
+#[test]
+fn repo_tree_passes_all_invariants() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("verifier crate sits inside the repo")
+        .to_path_buf();
+    let tree = verifier::Tree::load(&root).expect("readable rust/ tree");
+    assert!(
+        tree.files.len() > 20,
+        "suspiciously small tree ({} files) — wrong root?",
+        tree.files.len()
+    );
+    let report = verifier::run_all(&tree);
+    assert!(
+        report.passed(),
+        "verifier found violations:\n{}",
+        report.render()
+    );
+}
