@@ -65,6 +65,40 @@ fn bench_span_costs(report: &mut JsonReport) {
     );
 }
 
+fn bench_registry_costs(report: &mut JsonReport) {
+    section("telemetry registry cost");
+    let bench = Bencher::default();
+    let reg = gsparse::telemetry::Registry::new();
+    let c = reg.counter("bench_rounds_total", "bench", &[("worker", "0")]);
+    let g = reg.gauge("bench_straggler_ratio", "bench", &[]);
+    let h = reg.histogram(
+        "bench_round_latency_seconds",
+        "bench",
+        &[("worker", "0")],
+        &[1e-4, 1e-3, 1e-2, 0.1, 1.0],
+    );
+    // The whole per-round metrics update a coordinator performs: one
+    // counter bump, one gauge store, one histogram observation.
+    let s = bench.bench("registry update (counter+gauge+histogram)", None, || {
+        c.inc();
+        g.set(black_box(1.25));
+        h.observe(black_box(0.004));
+    });
+    report.push(&s);
+    let update_ns = s.mean.as_secs_f64() * 1e9;
+
+    // Scrape-side price (responder thread only, never the hot path).
+    let reps = 1000usize;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        black_box(reg.render().len());
+    }
+    let render_ns = t0.elapsed().as_secs_f64() * 1e9 / reps as f64;
+    report.push_metric("registry_update_ns", update_ns);
+    report.push_metric("registry_render_ns", render_ns);
+    println!("registry update {update_ns:.1} ns; render {render_ns:.1} ns/scrape");
+}
+
 /// Average seconds per compress+encode round (solve → sample → wire encode,
 /// the fully instrumented engine path) over `ROUND_REPS` repetitions.
 fn round_s(
@@ -116,11 +150,45 @@ fn bench_traced_round(report: &mut JsonReport) {
     report.push_metric("round_traced_s", traced_s);
     report.push_metric("round_trace_overhead_x", overhead_x);
     report.push_metric("round_events_per_round", events_per_round as f64);
+
+    // Full telemetry on: tracing plus the per-round registry updates the
+    // dist coordinator performs (counter + gauge + latency histogram).
+    // The CI trace guard pins this ratio at ≤ 5% overhead too.
+    let reg = gsparse::telemetry::Registry::new();
+    let rounds = reg.counter("bench_rounds_total", "bench", &[("worker", "0")]);
+    let version = reg.gauge("bench_weight_version", "bench", &[]);
+    let latency = reg.histogram(
+        "bench_round_latency_seconds",
+        "bench",
+        &[("worker", "0")],
+        &[1e-4, 1e-3, 1e-2, 0.1, 1.0],
+    );
+    let rec = trace::Recorder::new(&TraceConfig::on()).expect("recorder");
+    let guard = trace::install(&rec, 0);
+    let t0 = Instant::now();
+    for i in 0..ROUND_REPS {
+        let r0 = Instant::now();
+        engine.compress_into(&g, &mut rand, &mut out, &mut wire);
+        black_box(wire.len());
+        rounds.inc();
+        version.set(i as f64);
+        latency.observe(r0.elapsed().as_secs_f64());
+    }
+    let telemetry_s = t0.elapsed().as_secs_f64() / ROUND_REPS as f64;
+    drop(guard);
+    let telemetry_x = telemetry_s / untraced_s;
+    println!(
+        "traced+metrics {:.3} ms  ({telemetry_x:.4}x untraced)",
+        telemetry_s * 1e3
+    );
+    report.push_metric("round_telemetry_s", telemetry_s);
+    report.push_metric("round_telemetry_overhead_x", telemetry_x);
 }
 
 fn main() {
     let mut report = JsonReport::new();
     bench_span_costs(&mut report);
+    bench_registry_costs(&mut report);
     bench_traced_round(&mut report);
     let out_path =
         std::env::var("GSPARSE_BENCH_OUT").unwrap_or_else(|_| "BENCH_trace.json".to_string());

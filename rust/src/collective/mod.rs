@@ -298,12 +298,31 @@ fn fold_residual(res: Option<&mut FeedbackState>, lo: u32, dropped: &[(u32, f32)
     }
 }
 
+/// Stamp the hop frame's trace context: ring links are version-homogeneous
+/// (both ends of every link run this binary's [`frame::TRANSPORT_VERSION`]),
+/// so hops always carry `(round, sender-rank, seq)` — the merger links the
+/// resulting `frame_tx`/`frame_rx` pairs into cross-rank flow arrows.
+/// Stamping is version-, not telemetry-, dependent: the bytes on the wire
+/// are identical whether or not anything records, which is what keeps the
+/// telemetry-on/off runs bitwise-equal end to end.
+fn stamp_hop(frame_buf: &mut Vec<u8>, sender: u32) {
+    frame::stamp_ctx(
+        frame_buf,
+        frame::TraceCtx {
+            round: crate::trace::current_round(),
+            sender,
+            seq: crate::trace::next_flow_seq(),
+        },
+    );
+}
+
 /// Encode `sg` as a one-message `WireBatch` and send it as a vectored
 /// `SPARSE_REDUCE` frame (header segment + payload segment, one wire frame).
 fn send_sparse_hop(
     right: &mut dyn Connection,
     frame_buf: &mut Vec<u8>,
     payload: &mut Vec<u8>,
+    sender: u32,
     chunk: u32,
     phase: u8,
     sg: &SparseGrad,
@@ -311,6 +330,7 @@ fn send_sparse_hop(
 ) -> Result<(), TransportError> {
     coding::encode_batch(&[sg], codec, payload);
     frame::encode_sparse_reduce_prefix(frame_buf, chunk, phase);
+    stamp_hop(frame_buf, sender);
     let mut sp = crate::trace::span(crate::trace::Stage::Hop);
     sp.bytes((frame_buf.len() + payload.len()) as u64);
     right.send_vectored(&[frame_buf.as_slice(), payload.as_slice()])
@@ -322,6 +342,7 @@ fn send_raw_hop(
     right: &mut dyn Connection,
     frame_buf: &mut Vec<u8>,
     payload: &mut Vec<u8>,
+    sender: u32,
     chunk: u32,
     phase: u8,
     values: &[f32],
@@ -332,6 +353,7 @@ fn send_raw_hop(
         payload.extend_from_slice(&v.to_le_bytes());
     }
     frame::encode_sparse_reduce_prefix(frame_buf, chunk, phase);
+    stamp_hop(frame_buf, sender);
     let mut sp = crate::trace::span(crate::trace::Stage::Hop);
     sp.bytes((frame_buf.len() + payload.len()) as u64);
     right.send_vectored(&[frame_buf.as_slice(), payload.as_slice()])
@@ -556,6 +578,7 @@ impl RingReducer {
                 peer.right.as_mut(),
                 &mut self.frame_buf,
                 &mut self.payload,
+                peer.rank,
                 sc as u32,
                 PHASE_REDUCE_SCATTER,
                 &self.chunks[sc],
@@ -585,6 +608,7 @@ impl RingReducer {
                 peer.right.as_mut(),
                 &mut self.frame_buf,
                 &mut self.payload,
+                peer.rank,
                 sc as u32,
                 PHASE_ALL_GATHER,
                 &self.chunks[sc],
@@ -669,6 +693,7 @@ impl RingReducer {
                 peer.right.as_mut(),
                 &mut self.frame_buf,
                 &mut self.payload,
+                peer.rank,
                 src_tx as u32,
                 PHASE_SKETCH,
                 &self.sketches[src_tx * cells..(src_tx + 1) * cells],
@@ -742,6 +767,7 @@ impl RingReducer {
                 peer.right.as_mut(),
                 &mut self.frame_buf,
                 &mut self.payload,
+                peer.rank,
                 sc as u32,
                 PHASE_VALUES_RS,
                 &self.vals[lo_s as usize..hi_s as usize],
@@ -758,6 +784,7 @@ impl RingReducer {
                 peer.right.as_mut(),
                 &mut self.frame_buf,
                 &mut self.payload,
+                peer.rank,
                 sc as u32,
                 PHASE_VALUES_AG,
                 &self.vals[lo_s as usize..hi_s as usize],

@@ -196,7 +196,8 @@ impl AsyncSvmEngine {
 
         if let Some(rec) = &recorder {
             if crate::trace::TraceConfig::dump_requested() {
-                let _ = crate::trace::dump(rec, "async", trace_cfg.format());
+                let tag = crate::trace::run_tag(cfg.total_steps, "shared");
+                let _ = crate::trace::dump(rec, &tag, "async", trace_cfg.format());
             }
         }
 

@@ -751,6 +751,7 @@ impl Cluster {
         self.recorder.as_ref().map(|rec| {
             let events = rec.drain();
             let mut snap = crate::trace::MetricsSnapshot::from_events(&events);
+            snap.set_dropped(rec.dropped());
             for (w, link) in self.leader_links.iter().enumerate() {
                 snap.fold_link_counters(&format!("link_w{w}"), &link.counters());
             }
@@ -777,7 +778,9 @@ impl Drop for Cluster {
         // `GSPARSE_TRACE_OUT` only — plain recording leaves no files.
         if let Some(rec) = &self.recorder {
             if crate::trace::TraceConfig::dump_requested() {
-                let _ = crate::trace::dump(rec, "cluster", self.trace_cfg.format());
+                let topo = if self.ring { "ring" } else { "star" };
+                let tag = crate::trace::run_tag(self.rounds_seen as usize, topo);
+                let _ = crate::trace::dump(rec, &tag, "cluster", self.trace_cfg.format());
             }
         }
     }

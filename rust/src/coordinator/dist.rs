@@ -38,9 +38,10 @@ use crate::feedback::{CommSchedule, FeedbackConfig, FeedbackState};
 use crate::metrics::{CurvePoint, RunCurve, SparsityMeter, VarianceRatio};
 use crate::model::{ConvexModel, LogisticModel};
 use crate::rngkit::{RandArray, Xoshiro256pp};
-use crate::sparsify::{Compressed, SparseGrad};
+use crate::sparsify::{Compressed, Compressor, SparseGrad};
+use crate::telemetry::{self, ClockEstimator, MetricsServer, Registry};
 use crate::trace::{self, TraceConfig};
-use crate::transport::frame::{self, GradHeader, MsgView};
+use crate::transport::frame::{self, GradHeader, MsgView, TraceCtx};
 use crate::transport::{
     Connection, Hello, LinkCounters, Listener, TcpTransport, Transport,
 };
@@ -155,14 +156,32 @@ impl Default for RunPlan {
 /// local-step period and the error-feedback toggle + decay; version 4
 /// appended the pipeline depth; version 5 appended the trace config
 /// (mode byte + u32 ring capacity); version 6 appended the topology and
-/// aligned-sparsity bytes.
-const CONFIG_VERSION: u8 = 6;
+/// aligned-sparsity bytes; version 7 appended the server's transport
+/// version (the hello handshake is one-way, so this byte is how a worker
+/// learns whether the server understands trace-context stamps and clock
+/// probes — see [`frame::Hello::supports_ctx`]).
+const CONFIG_VERSION: u8 = 7;
 /// Offset of the codec byte: version + method + 6×u32 + u64 seed + 5×f32.
 const CONFIG_CODEC_AT: usize = 2 + 6 * 4 + 8 + 5 * 4;
 /// Codec byte + u32 local_steps + feedback flag + f32 decay + u32 pipeline
 /// + trace mode byte + u32 trace ring capacity + topology byte + aligned
-/// byte.
-const CONFIG_LEN: usize = CONFIG_CODEC_AT + 1 + 4 + 1 + 4 + 4 + 1 + 4 + 1 + 1;
+/// byte + server transport-version byte.
+const CONFIG_LEN: usize = CONFIG_CODEC_AT + 1 + 4 + 1 + 4 + 4 + 1 + 4 + 1 + 1 + 1;
+
+/// Server-side clock re-probe period: after the initial post-CONFIG ping,
+/// every v4 link gets one fresh NTP-style probe exchange each
+/// `PROBE_EVERY_BLOCKS` blocks, so the per-link offset estimate tracks
+/// drift over long runs without ever contending with gradient traffic
+/// (probes ride the same sequential frame stream).
+pub const PROBE_EVERY_BLOCKS: usize = 16;
+
+/// How many clock-probe pings the server sends per ctx-capable link over a
+/// run of `blocks` blocks: one right after CONFIG plus the periodic
+/// re-probes. Each ping costs exactly two frames on the link (ping out,
+/// pong back) — the frame-accounting tests pin their counts with this.
+pub fn probe_count(blocks: usize) -> usize {
+    1 + blocks.saturating_sub(1) / PROBE_EVERY_BLOCKS
+}
 
 impl RunPlan {
     /// Serialize for the `CONFIG` frame (fixed-width LE fields).
@@ -201,10 +220,22 @@ impl RunPlan {
             Topology::Ring => 1,
         });
         out.push(u8::from(self.aligned));
+        // Not a plan field: the encoding server's own transport version,
+        // read back via [`RunPlan::decode_with_caps`].
+        out.push(frame::TRANSPORT_VERSION);
         out
     }
 
     pub fn decode(buf: &[u8]) -> anyhow::Result<Self> {
+        Self::decode_with_caps(buf).map(|(cfg, _)| cfg)
+    }
+
+    /// [`RunPlan::decode`] plus the server-capability byte (the server's
+    /// transport version): the CONFIG frame is the only server→worker
+    /// message guaranteed to precede all telemetry traffic, so it carries
+    /// the bit a worker needs before deciding whether its own gradient
+    /// frames may be trace-context stamped.
+    pub fn decode_with_caps(buf: &[u8]) -> anyhow::Result<(Self, u8)> {
         anyhow::ensure!(buf.len() == CONFIG_LEN, "config frame length");
         anyhow::ensure!(buf[0] == CONFIG_VERSION, "config version {}", buf[0]);
         let method = *Method::all()
@@ -252,7 +283,8 @@ impl RunPlan {
         };
         let aligned_flag = buf[codec_at + 20];
         anyhow::ensure!(aligned_flag <= 1, "unknown aligned flag {aligned_flag}");
-        Ok(Self {
+        let server_version = buf[codec_at + 21];
+        let cfg = Self {
             workers: u32_at(0) as usize,
             rounds: u32_at(1) as usize,
             batch: u32_at(2) as usize,
@@ -273,7 +305,8 @@ impl RunPlan {
             trace,
             topology,
             aligned: aligned_flag == 1,
-        })
+        };
+        Ok((cfg, server_version))
     }
 
     /// Whether this plan runs the ring collective (ring topology with more
@@ -313,6 +346,16 @@ pub struct DistReport {
     /// Server-side trace roll-up (per-stage counters + duration histograms
     /// + per-link transport counters) when the plan enabled tracing.
     pub trace_metrics: Option<trace::MetricsSnapshot>,
+    /// Final Prometheus exposition text of the run's telemetry registry —
+    /// what a last `/metrics` scrape would have returned (the registry is
+    /// always maintained; the HTTP responder only starts when
+    /// [`crate::telemetry::METRICS_ADDR_ENV`] names an address).
+    pub metrics_text: String,
+    /// Per-link NTP-style clock offsets (worker id, peer − server, ns) for
+    /// every link that completed at least one probe exchange — what the
+    /// trace merger uses to align per-role dumps. Empty when every peer
+    /// predates the v4 probe frames.
+    pub clock_offsets_ns: Vec<(u32, i64)>,
 }
 
 fn fnv1a(mut hash: u64, bytes: &[u8]) -> u64 {
@@ -321,6 +364,104 @@ fn fnv1a(mut hash: u64, bytes: &[u8]) -> u64 {
         hash = hash.wrapping_mul(0x0000_0100_0000_01B3);
     }
     hash
+}
+
+/// The topology's dump-filename spelling (feeds [`trace::run_tag`]).
+fn topo_name(t: Topology) -> &'static str {
+    match t {
+        Topology::Star => "star",
+        Topology::Ring => "ring",
+    }
+}
+
+/// Fixed round-latency histogram bounds (seconds): ~log-spaced from 10 µs
+/// to 3 s, wide enough for in-proc rounds and WAN-ish stragglers alike.
+/// Fixed bounds keep scrapes from different runs mergeable bucket-by-bucket.
+const LATENCY_BOUNDS: &[f64] = &[
+    1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 0.1, 0.3, 1.0, 3.0,
+];
+
+/// Server-side receive that absorbs clock-probe `PONG`s into the link's
+/// [`ClockEstimator`] (t3 taken at absorb time) and leaves the first
+/// protocol frame in `rxbuf` — pongs can interleave anywhere in the frame
+/// stream because the worker answers pings from inside its own recv loop.
+fn recv_absorb_pongs(
+    conn: &mut dyn Connection,
+    rxbuf: &mut Vec<u8>,
+    clock: &mut ClockEstimator,
+) -> anyhow::Result<()> {
+    loop {
+        conn.recv(rxbuf)?;
+        let absorbed = match frame::decode(rxbuf)? {
+            MsgView::Probe { kind, t0, t1, t2 } => {
+                anyhow::ensure!(
+                    kind == frame::PROBE_PONG,
+                    "unexpected clock-probe ping from a worker (only the server pings)"
+                );
+                clock.update(t0, t1, t2, trace::now_ns());
+                true
+            }
+            _ => false,
+        };
+        if !absorbed {
+            return Ok(());
+        }
+    }
+}
+
+/// Worker-side receive that answers clock-probe `PING`s in place (t1 at
+/// receipt, t2 at reply encode) and leaves the first protocol frame in
+/// `rxbuf`. The pong travels on the same sequential frame stream, so the
+/// server's next receive on this link absorbs it.
+fn recv_answer_pings(
+    conn: &mut dyn Connection,
+    rxbuf: &mut Vec<u8>,
+    pongbuf: &mut Vec<u8>,
+) -> anyhow::Result<()> {
+    loop {
+        conn.recv(rxbuf)?;
+        let ping_t0 = match frame::decode(rxbuf)? {
+            MsgView::Probe { kind, t0, .. } => {
+                anyhow::ensure!(
+                    kind == frame::PROBE_PING,
+                    "unexpected clock-probe pong on a worker (only workers pong)"
+                );
+                Some(t0)
+            }
+            _ => None,
+        };
+        match ping_t0 {
+            Some(t0) => {
+                let t1 = trace::now_ns();
+                frame::encode_probe(pongbuf, frame::PROBE_PONG, t0, t1, trace::now_ns());
+                conn.send(pongbuf)?;
+            }
+            None => return Ok(()),
+        }
+    }
+}
+
+/// Write `<stem>.<tag>.clock.json` — the per-worker offsets the trace
+/// merger (`gsparse trace-merge --clock …`) applies when aligning per-role
+/// dumps: `{"schema":"gsparse-clock-v1","offsets_ns":{"<worker>":<ns>}}`.
+/// Links that never completed a probe exchange are omitted.
+fn write_clock_file(tag: &str, clocks: &[ClockEstimator]) -> std::io::Result<std::path::PathBuf> {
+    let mut body = String::from("{\"schema\":\"gsparse-clock-v1\",\"offsets_ns\":{");
+    let mut first = true;
+    for (wid, c) in clocks.iter().enumerate() {
+        if c.samples() == 0 {
+            continue;
+        }
+        if !first {
+            body.push(',');
+        }
+        first = false;
+        body.push_str(&format!("\"{wid}\":{}", c.offset_ns()));
+    }
+    body.push_str("}}\n");
+    let path = std::path::PathBuf::from(format!("{}.{tag}.clock.json", trace::out_stem()));
+    std::fs::write(&path, &body)?;
+    Ok(path)
 }
 
 /// Run the server side: accept `cfg.workers` connections, ship the config,
@@ -350,17 +491,104 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
     let accepted = crate::transport::accept_n_hello(listener, cfg.workers, cfg.codec)?;
     let mut conns: Vec<Box<dyn Connection>> = Vec::with_capacity(cfg.workers);
     let mut peer_batch: Vec<bool> = Vec::with_capacity(cfg.workers);
+    let mut peer_ctx: Vec<bool> = Vec::with_capacity(cfg.workers);
     for (conn, hello) in accepted {
         peer_batch.push(hello.supports_batch());
+        peer_ctx.push(hello.supports_ctx());
         conns.push(conn);
     }
     let counters: Vec<LinkCounters> = conns.iter().map(|c| c.counters()).collect();
+
+    // ---- live metrics plane ([`crate::telemetry`]): a per-run registry
+    // the round loop updates lock-free, concatenated with the process
+    // global (where workers in threads mode publish residual gauges) and
+    // served over HTTP when the environment names an address. Metrics only
+    // observe — the probes below are *version*-gated, never
+    // telemetry-gated, so the bytes on every link are identical whether or
+    // not anything scrapes them.
+    let registry = Registry::new();
+    let _metrics_server: Option<MetricsServer> =
+        match std::env::var(telemetry::METRICS_ADDR_ENV) {
+            Ok(addr) if !addr.is_empty() => Some(
+                MetricsServer::start(&addr, vec![registry.clone(), telemetry::global()])
+                    .map_err(|e| anyhow::anyhow!("binding metrics endpoint {addr}: {e}"))?,
+            ),
+            _ => None,
+        };
+    let per_worker_counter = |name: &str, help: &str| -> Vec<telemetry::Counter> {
+        (0..cfg.workers)
+            .map(|wid| {
+                let l = wid.to_string();
+                registry.counter(name, help, &[("worker", &l)])
+            })
+            .collect()
+    };
+    let rounds_total = per_worker_counter(
+        "gsparse_rounds_total",
+        "Gradient pushes applied by the server, per worker link.",
+    );
+    let round_latency: Vec<telemetry::Histo> = (0..cfg.workers)
+        .map(|wid| {
+            let l = wid.to_string();
+            registry.histogram(
+                "gsparse_round_latency_seconds",
+                "Block latency from the server's phase start to this worker's gradient being applied.",
+                &[("worker", &l)],
+                LATENCY_BOUNDS,
+            )
+        })
+        .collect();
+    let wire_bytes_total = registry.counter(
+        "gsparse_wire_bytes_total",
+        "Compressed gradient payload bytes received (the ledger's wire column).",
+        &[],
+    );
+    let e2e_bytes_total = registry.counter(
+        "gsparse_end_to_end_bytes_total",
+        "Framed bytes of ring-reduced gradient frames (the ledger's end-to-end column).",
+        &[],
+    );
+    let straggler_ratio = registry.gauge(
+        "gsparse_straggler_ratio",
+        "Slowest over fastest per-worker gradient wait in the latest block (1 = perfectly even).",
+        &[],
+    );
+    let straggler_rank = registry.gauge(
+        "gsparse_straggler_rank",
+        "Worker rank whose gradient the server waited longest for in the latest block.",
+        &[],
+    );
+    let weight_version_gauge = registry.gauge(
+        "gsparse_weight_version",
+        "Server-side weight version (== total applied pushes).",
+        &[],
+    );
+    let trace_dropped_total = registry.counter(
+        "gsparse_trace_dropped_total",
+        "Trace events overwritten in the server recorder's rings before draining.",
+        &[],
+    );
+    let mut dropped_seen = 0u64;
+
+    // Per-link NTP-style clock estimators, fed by the probe pongs the
+    // probe-aware recvs absorb.
+    let mut clocks: Vec<ClockEstimator> =
+        (0..cfg.workers).map(|_| ClockEstimator::default()).collect();
+
     let cfg_bytes = cfg.encode();
     let mut txbuf = Vec::new();
     let mut rxbuf = Vec::new();
-    for conn in conns.iter_mut() {
+    for (wid, conn) in conns.iter_mut().enumerate() {
         frame::encode_config(&mut txbuf, &cfg_bytes);
         conn.send(&txbuf)?;
+        // First clock probe straight after the config: the pong comes back
+        // ahead of the worker's first protocol frame and is absorbed by
+        // the probe-aware recvs below. Legacy (pre-v4) peers never see a
+        // probe — their byte stream is exactly the pre-telemetry one.
+        if peer_ctx[wid] {
+            frame::encode_probe(&mut txbuf, frame::PROBE_PING, trace::now_ns(), 0, 0);
+            conn.send(&txbuf)?;
+        }
     }
 
     // ---- ring bootstrap: collect every worker's ring-listener address,
@@ -370,7 +598,7 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
     if ring {
         let mut ring_addrs = vec![String::new(); cfg.workers];
         for (wid, conn) in conns.iter_mut().enumerate() {
-            conn.recv(&mut rxbuf)?;
+            recv_absorb_pongs(conn.as_mut(), &mut rxbuf, &mut clocks[wid])?;
             match frame::decode(&rxbuf)? {
                 MsgView::RingAddr { worker_id, addr } => {
                     anyhow::ensure!(
@@ -415,6 +643,7 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
     let mut round_bytes = vec![0u64; cfg.workers];
     let mut samples_done = 0u64;
     let mut txbuf_batch = Vec::new();
+    let mut txbuf_ctx = Vec::new();
     let start = Instant::now();
 
     // One pull/push pair per worker per *block* of `local_steps` rounds:
@@ -425,6 +654,18 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
         trace::set_round(block as u32);
         let _round_span = trace::span(trace::Stage::Round);
         let block_len = schedule.block_len(block, cfg.rounds) as u64;
+        let block_start = Instant::now();
+        // Periodic clock re-probe (v4 links only): keeps the per-link
+        // offset estimate fresh over long runs. The pong is absorbed by
+        // this block's own phase-1 receive.
+        if block > 0 && block % PROBE_EVERY_BLOCKS == 0 {
+            for (wid, conn) in conns.iter_mut().enumerate() {
+                if peer_ctx[wid] {
+                    frame::encode_probe(&mut txbuf, frame::PROBE_PING, trace::now_ns(), 0, 0);
+                    conn.send(&txbuf)?;
+                }
+            }
+        }
         // Phase 1: answer one pull per worker, all at the same version —
         // encode each weights flavor at most once. A *multi-tensor* weight
         // set goes to batch-capable (v3) peers as one WEIGHTS_BATCH frame
@@ -439,11 +680,12 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
         let weight_tensors: &[&[f32]] = &[w.as_slice()];
         let mut plain_encoded = false;
         let mut batch_encoded = false;
+        let mut stamped_encoded = false;
         for (wid, conn) in conns.iter_mut().enumerate() {
             {
                 let mut wait = trace::span(trace::Stage::BarrierWait);
                 wait.layer(wid as u32);
-                conn.recv(&mut rxbuf)?;
+                recv_absorb_pongs(conn.as_mut(), &mut rxbuf, &mut clocks[wid])?;
             }
             match frame::decode(&rxbuf)? {
                 MsgView::Pull => {}
@@ -460,7 +702,29 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
                     frame::encode_weights(&mut txbuf, version, &w);
                     plain_encoded = true;
                 }
-                conn.send(&txbuf)?;
+                if peer_ctx[wid] {
+                    // Stamp the broadcast with a per-link trace context so
+                    // the worker's frame_rx span links back to this send.
+                    // One stamped copy is kept next to the unstamped
+                    // master (restamped per link) — mixed-version fleets
+                    // send each peer its own flavor.
+                    let ctx = TraceCtx {
+                        round: block as u32,
+                        sender: u32::MAX,
+                        seq: trace::next_flow_seq(),
+                    };
+                    if !stamped_encoded {
+                        txbuf_ctx.clear();
+                        txbuf_ctx.extend_from_slice(&txbuf);
+                        frame::stamp_ctx(&mut txbuf_ctx, ctx);
+                        stamped_encoded = true;
+                    } else {
+                        frame::restamp_ctx(&mut txbuf_ctx, ctx);
+                    }
+                    conn.send(&txbuf_ctx)?;
+                } else {
+                    conn.send(&txbuf)?;
+                }
             }
         }
         // Phase 2 (ring): the workers already reduced among themselves;
@@ -472,7 +736,7 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
             {
                 let mut wait = trace::span(trace::Stage::BarrierWait);
                 wait.layer(0);
-                conn.recv(&mut rxbuf)?;
+                recv_absorb_pongs(conn.as_mut(), &mut rxbuf, &mut clocks[0])?;
             }
             let (header, payload) = match frame::decode(&rxbuf)? {
                 MsgView::Grad { header, payload } => (header, payload),
@@ -507,6 +771,16 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
             // Every ring node carries ~the reduced payload across its
             // 2(M−1) hop phases — feed the α-β ring arm that per-node size.
             round_bytes.fill(upload);
+            rounds_total[0].inc();
+            round_latency[0].observe(block_start.elapsed().as_secs_f64());
+            wire_bytes_total.inc_by(upload);
+            e2e_bytes_total.inc_by(rxbuf.len() as u64);
+            weight_version_gauge.set(version as f64);
+            if let Some(rec) = recorder.as_ref() {
+                let d = rec.dropped();
+                trace_dropped_total.inc_by(d - dropped_seen);
+                dropped_seen = d;
+            }
             samples_done += block_len * (cfg.batch * cfg.workers) as u64;
             if t % record_every == 0 || t == total {
                 curve.points.push(CurvePoint {
@@ -521,11 +795,25 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
         }
         // Phase 2 (star): apply one (accumulated) gradient per worker, in
         // worker-id order.
+        let mut slowest_wait = 0.0f64;
+        let mut slowest_wid = 0usize;
+        let mut fastest_wait = f64::INFINITY;
         for (wid, conn) in conns.iter_mut().enumerate() {
             {
+                let wait_start = Instant::now();
                 let mut wait = trace::span(trace::Stage::BarrierWait);
                 wait.layer(wid as u32);
-                conn.recv(&mut rxbuf)?;
+                recv_absorb_pongs(conn.as_mut(), &mut rxbuf, &mut clocks[wid])?;
+                // The blocking part of this worker's turn — what the
+                // straggler gauge attributes. Sequential worker-id order
+                // means earlier workers absorb shared wait, so this is a
+                // lower bound on the true straggle, exact for the slowest.
+                let waited = wait_start.elapsed().as_secs_f64();
+                if waited > slowest_wait {
+                    slowest_wait = waited;
+                    slowest_wid = wid;
+                }
+                fastest_wait = fastest_wait.min(waited);
             }
             let (header, payload) = match frame::decode(&rxbuf)? {
                 MsgView::Grad { header, payload } => (header, payload),
@@ -571,6 +859,10 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
             let msg_codec = if header.kind == 0 { cfg.codec } else { WireCodec::Raw };
             curve.ledger.record_codec(header.ideal_bits, upload, msg_codec);
             round_bytes[wid] = upload;
+            rounds_total[wid].inc();
+            round_latency[wid].observe(block_start.elapsed().as_secs_f64());
+            wire_bytes_total.inc_by(upload);
+            weight_version_gauge.set(version as f64);
             samples_done += block_len * cfg.batch as u64;
             if t % record_every == 0 || t == total {
                 curve.points.push(CurvePoint {
@@ -581,12 +873,19 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
                 });
             }
         }
+        straggler_ratio.set(slowest_wait / fastest_wait.max(1e-9));
+        straggler_rank.set(slowest_wid as f64);
+        if let Some(rec) = recorder.as_ref() {
+            let dropped = rec.dropped();
+            trace_dropped_total.inc_by(dropped - dropped_seen);
+            dropped_seen = dropped;
+        }
         sim_time += net.round_time_s(&round_bytes, (d * 4) as u64);
     }
 
     // ---- shutdown: each worker sends one final pull ----
-    for conn in conns.iter_mut() {
-        conn.recv(&mut rxbuf)?;
+    for (wid, conn) in conns.iter_mut().enumerate() {
+        recv_absorb_pongs(conn.as_mut(), &mut rxbuf, &mut clocks[wid])?;
         match frame::decode(&rxbuf)? {
             MsgView::Pull => {}
             _ => anyhow::bail!("expected final pull from {}", conn.peer()),
@@ -604,18 +903,33 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
     curve.ledger.verify();
     curve.var_ratio = var_meter.value();
     curve.sparsity = spa_meter.value();
+    if let Some(rec) = recorder.as_ref() {
+        let dropped = rec.dropped();
+        trace_dropped_total.inc_by(dropped - dropped_seen);
+    }
+    let run_tag = trace::run_tag(cfg.rounds, topo_name(cfg.topology));
     let trace_metrics = recorder.as_ref().map(|rec| {
         let events = rec.drain();
         let mut snap = trace::MetricsSnapshot::from_events(&events);
+        snap.set_dropped(rec.dropped());
         for (wid, c) in counters.iter().enumerate() {
             snap.fold_link_counters(&format!("link_w{wid}"), c);
         }
         snap.push_gauge("sim_time_s", sim_time);
         if TraceConfig::dump_requested() {
-            let _ = trace::dump_events(&events, "server", cfg.trace.format());
+            let _ = trace::dump_events(&events, &run_tag, "server", cfg.trace.format());
+            // The clock sidecar rides along with the server dump: same
+            // stem and tag, consumed by `gsparse trace-merge --clock`.
+            let _ = write_clock_file(&run_tag, &clocks);
         }
         snap
     });
+    let clock_offsets_ns: Vec<(u32, i64)> = clocks
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.samples() > 0)
+        .map(|(wid, c)| (wid as u32, c.offset_ns()))
+        .collect();
     let final_loss = model.loss(&ds, &w);
     Ok(DistReport {
         curve,
@@ -628,6 +942,8 @@ pub fn serve(listener: &mut dyn Listener, cfg: &RunPlan) -> anyhow::Result<DistR
         measured_rx_bytes: measured_rx,
         sim_time_s: sim_time,
         trace_metrics,
+        metrics_text: registry.render(),
+        clock_offsets_ns,
     })
 }
 
@@ -647,7 +963,10 @@ struct RingState {
 /// Run the worker side over an established connection. `worker_id` and
 /// `codec` must match the hello this connection was opened with (the id
 /// seeds the RNG streams; the codec was negotiated at accept time, and the
-/// server-shipped config must agree with it).
+/// server-shipped config must agree with it), and `hello_version` the
+/// transport version that hello announced — a worker impersonating an
+/// older peer must keep its own frames telemetry-free (no trace-context
+/// stamps), exactly as the server keeps that link probe-free.
 ///
 /// `ring_env` is the transport + bind address this worker would use for
 /// its ring listener should the server-shipped config request
@@ -658,13 +977,15 @@ pub fn run_worker(
     conn: &mut dyn Connection,
     worker_id: u32,
     codec: WireCodec,
+    hello_version: u8,
     ring_env: Option<(&dyn Transport, &str)>,
 ) -> anyhow::Result<()> {
     let mut rxbuf = Vec::new();
     let mut txbuf = Vec::new();
+    let mut pongbuf = Vec::new();
     conn.recv(&mut rxbuf)?;
-    let cfg = match frame::decode(&rxbuf)? {
-        MsgView::Config { bytes } => RunPlan::decode(bytes)?,
+    let (cfg, server_version) = match frame::decode(&rxbuf)? {
+        MsgView::Config { bytes } => RunPlan::decode_with_caps(bytes)?,
         _ => anyhow::bail!("expected config from server"),
     };
     anyhow::ensure!(
@@ -672,6 +993,10 @@ pub fn run_worker(
         "server config says codec {}, this worker negotiated {codec}",
         cfg.codec
     );
+    // Gradient frames carry a trace context only when both ends opted into
+    // v4: our own hello announced it AND the config's capability byte says
+    // the server understands it.
+    let stamp_grads = hello_version >= 4 && server_version >= 4;
     // The CONFIG frame just told us whether to trace — every later frame,
     // solve, sample, and encode on this worker lands in its own recorder,
     // keyed by worker id so per-process traces merge into one timeline.
@@ -694,7 +1019,7 @@ pub fn run_worker(
         let mut listener = transport.listen(bind)?;
         frame::encode_ring_addr(&mut txbuf, worker_id, &listener.local_addr());
         conn.send(&txbuf)?;
-        conn.recv(&mut rxbuf)?;
+        recv_answer_pings(conn, &mut rxbuf, &mut pongbuf)?;
         let right_addr = match frame::decode(&rxbuf)? {
             MsgView::RingAddr { worker_id: rid, addr } => {
                 anyhow::ensure!(
@@ -746,6 +1071,19 @@ pub fn run_worker(
         MethodSpec::from_parts(cfg.method, cfg.rho, cfg.c1 * cfg.c2, cfg.qsgd_bits),
         cfg.feedback,
     );
+    // Residual-norm gauge in the process-global telemetry registry: under
+    // `run_threads` every worker shares the server process, so these show
+    // up on the server's `/metrics` endpoint; spawned worker processes
+    // keep their own (unserved) global. Registered only when the plan
+    // carries feedback state at all.
+    let wid_label = worker_id.to_string();
+    let residual_gauge = (cfg.feedback.is_some() || cfg.ring_mode()).then(|| {
+        telemetry::global().gauge(
+            "gsparse_feedback_residual_norm",
+            "L2 norm of this worker's error-feedback residual after its latest push.",
+            &[("worker", &wid_label)],
+        )
+    });
     let mut msg = Compressed::Sparse(SparseGrad::empty(d));
     let mut w_local: Vec<f32> = Vec::with_capacity(d);
     let mut grad = vec![0.0f32; d];
@@ -764,7 +1102,7 @@ pub fn run_worker(
             let mut pull = trace::span(trace::Stage::Pull);
             frame::encode_pull(&mut txbuf);
             conn.send(&txbuf)?;
-            conn.recv(&mut rxbuf)?;
+            recv_answer_pings(conn, &mut rxbuf, &mut pongbuf)?;
             pull.bytes(rxbuf.len() as u64);
             match frame::decode(&rxbuf)? {
                 MsgView::Shutdown => break,
@@ -839,6 +1177,9 @@ pub fn run_worker(
                 rs.reducer
                     .reduce(&mut rs.peer, &rs.ring_in, &mut rs.ring_out, Some(&mut rs.fb))?;
             }
+            if let Some(g) = &residual_gauge {
+                g.set(rs.fb.residual_norm2_sq().sqrt());
+            }
             // Rank 0 alone forwards the (every-rank-identical) reduced sum;
             // the header carries this rank's *local* compression stats —
             // the meters want the per-worker quantization picture, and the
@@ -856,6 +1197,16 @@ pub fn run_worker(
                 let mut push = trace::span(trace::Stage::Push);
                 push.bytes(wire.len() as u64);
                 frame::encode_grad(&mut txbuf, &header, &wire);
+                if stamp_grads {
+                    frame::stamp_ctx(
+                        &mut txbuf,
+                        TraceCtx {
+                            round: trace::current_round(),
+                            sender: worker_id,
+                            seq: trace::next_flow_seq(),
+                        },
+                    );
+                }
                 conn.send(&txbuf)?;
             }
             continue;
@@ -884,23 +1235,41 @@ pub fn run_worker(
         {
             let mut push = trace::span(trace::Stage::Push);
             push.bytes(payload.len() as u64);
+            let ctx = TraceCtx {
+                round: trace::current_round(),
+                sender: worker_id,
+                seq: trace::next_flow_seq(),
+            };
             if cfg.pipeline >= 2 {
                 // Pipelined send: header prefix + codec payload as a
                 // vectored gather, skipping the payload copy into the
                 // frame buffer. The concatenated bytes are exactly the
                 // `encode_grad` frame, so any v3 peer decodes this without
-                // knowing the sender's depth.
+                // knowing the sender's depth. The trace context rides on
+                // the tag-bearing first segment.
                 frame::encode_grad_prefix(&mut txbuf, &header);
+                if stamp_grads {
+                    frame::stamp_ctx(&mut txbuf, ctx);
+                }
                 conn.send_vectored(&[&txbuf, payload])?;
             } else {
                 frame::encode_grad(&mut txbuf, &header, payload);
+                if stamp_grads {
+                    frame::stamp_ctx(&mut txbuf, ctx);
+                }
                 conn.send(&txbuf)?;
+            }
+        }
+        if let Some(g) = &residual_gauge {
+            if let Some(r2) = compressor.residual_norm2_sq() {
+                g.set(r2.sqrt());
             }
         }
     }
     if let Some(rec) = recorder.as_ref() {
         if TraceConfig::dump_requested() {
-            let _ = trace::dump(rec, &format!("worker{worker_id}"), cfg.trace.format());
+            let tag = trace::run_tag(cfg.rounds, topo_name(cfg.topology));
+            let _ = trace::dump(rec, &tag, &format!("worker{worker_id}"), cfg.trace.format());
         }
     }
     Ok(())
@@ -936,12 +1305,13 @@ where
             let ring_bind = ring_bind_addr(bind_addr, wid);
             let codec = cfg.codec;
             handles.push(scope.spawn(move || -> anyhow::Result<()> {
-                let mut conn =
-                    transport.connect(&addr, &Hello::with_codec(wid as u32, codec))?;
+                let hello = Hello::with_codec(wid as u32, codec);
+                let mut conn = transport.connect(&addr, &hello)?;
                 run_worker(
                     conn.as_mut(),
                     wid as u32,
                     codec,
+                    hello.version,
                     Some((&transport, ring_bind.as_str())),
                 )
             }));
@@ -1081,6 +1451,11 @@ mod tests {
             };
             let bytes = cfg.encode();
             assert_eq!(RunPlan::decode(&bytes).unwrap(), cfg);
+            // v7 appends the server's transport version as a capability
+            // byte; it travels next to the plan, not inside it.
+            let (back, caps) = RunPlan::decode_with_caps(&bytes).unwrap();
+            assert_eq!(back, cfg);
+            assert_eq!(caps, frame::TRANSPORT_VERSION);
             assert!(RunPlan::decode(&bytes[..bytes.len() - 1]).is_err());
             let mut bad = bytes.clone();
             bad[1] = 200;
@@ -1150,8 +1525,11 @@ mod tests {
             every.curve.ledger.messages
         );
         // Per-link frames: 1 hello + 1 config + (blocks + 1) pulls +
-        // blocks weights + blocks grads + 1 shutdown = 3·blocks + 4.
-        let frames_for = |blocks: u64| (3 * blocks + 4) * base.workers as u64;
+        // blocks weights + blocks grads + 1 shutdown = 3·blocks + 4, plus
+        // 2 frames (ping + pong) per clock probe on every v4 link.
+        let frames_for = |blocks: u64| {
+            (3 * blocks + 4 + 2 * probe_count(blocks as usize) as u64) * base.workers as u64
+        };
         assert_eq!(local.curve.ledger.measured_frames, frames_for(16));
         assert_eq!(every.curve.ledger.measured_frames, frames_for(64));
         assert!(
@@ -1306,12 +1684,14 @@ mod tests {
         assert_eq!(r.curve.ledger.hop_bytes, 0);
         // Per-link server frames: hello + config + ring-addr in/out +
         // (blocks+1) pulls + blocks weights + shutdown = 2·blocks + 6, plus
-        // blocks gradient pushes on rank 0's link only — every other rank
-        // ships its gradient over the ring, not to the server.
+        // 2 frames per clock probe, plus blocks gradient pushes on rank 0's
+        // link only — every other rank ships its gradient over the ring,
+        // not to the server.
         let blocks = ring.rounds as u64;
         assert_eq!(
             r.curve.ledger.measured_frames,
-            (2 * blocks + 6) * ring.workers as u64 + blocks
+            (2 * blocks + 6 + 2 * probe_count(blocks as usize) as u64) * ring.workers as u64
+                + blocks
         );
         // Still optimizes.
         let ds = gen_logistic(ring.n, ring.d, ring.c1, ring.c2, ring.seed);
@@ -1345,6 +1725,34 @@ mod tests {
         };
         let p = run_threads(InProcTransport::new(), "aring-p", &plain).unwrap();
         assert_ne!(p.grad_digest, a.grad_digest);
+    }
+
+    #[test]
+    fn metrics_registry_matches_ledger_and_clocks_sample() {
+        let cfg = small_cfg();
+        let report = run_threads(InProcTransport::new(), "metrics", &cfg).unwrap();
+        // Per-worker round counters cover every round, and the wire-byte
+        // counter is byte-for-byte the CommLedger column — the acceptance
+        // bar for a mid-run scrape being trustworthy.
+        for w in 0..cfg.workers {
+            let needle = format!("gsparse_rounds_total{{worker=\"{w}\"}} {}", cfg.rounds);
+            assert!(
+                report.metrics_text.contains(&needle),
+                "missing `{needle}` in rendered metrics:\n{}",
+                report.metrics_text
+            );
+        }
+        let wire = format!("gsparse_wire_bytes_total {}", report.curve.ledger.wire_bytes);
+        assert!(report.metrics_text.contains(&wire), "missing `{wire}`");
+        assert!(report.metrics_text.contains("gsparse_trace_dropped_total 0"));
+        assert!(report.metrics_text.contains("# TYPE gsparse_round_latency_seconds histogram"));
+        // Every v4 link produced clock samples, and same-process clocks
+        // must read as near-zero offset (well under a second).
+        assert_eq!(report.clock_offsets_ns.len(), cfg.workers);
+        for (wid, off) in &report.clock_offsets_ns {
+            assert!((*wid as usize) < cfg.workers);
+            assert!(off.abs() < 1_000_000_000, "worker {wid} offset {off}ns");
+        }
     }
 
     #[test]

@@ -464,8 +464,10 @@ pub(crate) fn run_session(
             snap.fold_link_counters(&format!("link_w{wid}"), c);
         }
         snap.push_gauge("staleness_stalls", stalls.load(Ordering::Relaxed) as f64);
+        snap.set_dropped(rec.dropped());
         if crate::trace::TraceConfig::dump_requested() {
-            let _ = crate::trace::dump_events(&events, "ps", trace_cfg.format());
+            let tag = crate::trace::run_tag(total_iterations, "star");
+            let _ = crate::trace::dump_events(&events, &tag, "ps", trace_cfg.format());
         }
         snap
     });

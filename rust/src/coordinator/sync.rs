@@ -471,7 +471,8 @@ pub(crate) fn run_session(
     curve.ledger.verify();
     if let Some(rec) = &recorder {
         if crate::trace::TraceConfig::dump_requested() {
-            let _ = crate::trace::dump(rec, "sync", trace_cfg.format());
+            let tag = crate::trace::run_tag(total_rounds, "star");
+            let _ = crate::trace::dump(rec, &tag, "sync", trace_cfg.format());
         }
     }
     let _ = start;

@@ -424,6 +424,10 @@ impl<C: Compressor> Compressor for WithFeedback<C> {
     fn name(&self) -> &'static str {
         self.inner.name()
     }
+
+    fn residual_norm2_sq(&self) -> Option<f64> {
+        Some(self.state.residual_norm2_sq())
+    }
 }
 
 #[cfg(test)]

@@ -72,6 +72,7 @@ pub mod rngkit;
 pub mod runtime;
 pub mod sparsify;
 pub mod sync;
+pub mod telemetry;
 pub mod tensor;
 pub mod trace;
 pub mod transport;

@@ -10,6 +10,8 @@
 //!   server (TCP; workers receive the full config from the server);
 //! * `dist` — launch a whole loopback cluster from one command (threads by
 //!   default, `--procs` spawns genuine worker processes);
+//! * `trace-merge` — merge per-role trace dumps into one causal timeline
+//!   (clock-aligned, with flow arrows linking `frame_tx` → `frame_rx`);
 //! * `version`.
 
 use gsparse::api::{DistTask, MethodSpec, Session, SyncTask};
@@ -34,6 +36,7 @@ fn main() {
         Some("server") => cmd_server(&args),
         Some("worker") => cmd_worker(&args),
         Some("dist") => cmd_dist(&args),
+        Some("trace-merge") => cmd_trace_merge(&args),
         Some("version") => {
             println!("gsparse {}", gsparse::VERSION);
             Ok(())
@@ -66,6 +69,12 @@ fn apply_trace_args(args: &Args) {
             std::env::set_var("GSPARSE_TRACE", "json");
         }
     }
+    // `--metrics-addr H:P` → the `/metrics` responder bind address, via the
+    // same environment seam the server coordinator reads (only the serving
+    // role binds it; worker processes just export into their registries).
+    if let Some(addr) = args.get("metrics-addr") {
+        std::env::set_var(gsparse::telemetry::METRICS_ADDR_ENV, addr);
+    }
 }
 
 fn print_help() {
@@ -87,12 +96,18 @@ fn print_help() {
            dist [--transport inproc|tcp] [--procs] [--codec raw|entropy]\n\
                 [--feedback] [--feedback-decay B] [--local-steps H] [--pipeline D]\n\
                 [--topology star|ring] [--aligned] ...\n\
+           trace-merge FILE... [--clock FILE] [--out FILE]   merge per-role dumps into\n\
+                one clock-aligned causal timeline with tx->rx flow arrows\n\
            version\n\
          \n\
          OBSERVABILITY (any subcommand):\n\
            --trace json|jsonl|off    record trace events (env: GSPARSE_TRACE)\n\
-           --trace-out STEM          dump per-role trace files STEM.<role>.trace.json[l]\n\
-                                     at run end (env: GSPARSE_TRACE_OUT; implies --trace json)",
+           --trace-out STEM          dump per-role traces STEM.r<rounds>.<topo>.<role>\n\
+                                     .trace.json[l] at run end, plus the server's\n\
+                                     STEM.r<rounds>.<topo>.clock.json offset sidecar\n\
+                                     (env: GSPARSE_TRACE_OUT; implies --trace json)\n\
+           --metrics-addr H:P        serve live Prometheus text on http://H:P/metrics\n\
+                                     for the run's duration (env: GSPARSE_METRICS_ADDR)",
         gsparse::VERSION
     );
 }
@@ -319,10 +334,47 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(id != u32::MAX, "worker requires --id N");
     let codec = parse_codec(args)?;
     let transport = TcpTransport::new();
-    let mut conn = transport.connect(addr, &Hello::with_codec(id, codec))?;
+    let hello = Hello::with_codec(id, codec);
+    let mut conn = transport.connect(addr, &hello)?;
     // The ring environment is only used if the server-shipped config asks
     // for ring topology; an ephemeral loopback port serves any TCP worker.
-    gsparse::coordinator::dist::run_worker(conn.as_mut(), id, codec, Some((&transport, "127.0.0.1:0")))
+    gsparse::coordinator::dist::run_worker(
+        conn.as_mut(),
+        id,
+        codec,
+        hello.version,
+        Some((&transport, "127.0.0.1:0")),
+    )
+}
+
+/// `trace-merge A.trace.json B.trace.json ... [--clock STEM.clock.json]
+/// [--out merged.trace.json]`: align per-role dumps onto the server clock
+/// and link `frame_tx` → `frame_rx` pairs with Chrome flow arrows.
+fn cmd_trace_merge(args: &Args) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !args.positional.is_empty(),
+        "trace-merge requires at least one <stem>.<tag>.<role>.trace.json file"
+    );
+    let files: Vec<std::path::PathBuf> =
+        args.positional.iter().map(std::path::PathBuf::from).collect();
+    let clock = args.get("clock").map(std::path::Path::new);
+    let report = gsparse::telemetry::merge::merge_files(&files, clock)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let out = args.get_or("out", "merged.trace.json");
+    std::fs::write(out, &report.json)?;
+    println!(
+        "merged {} role dump(s) -> {out}: {} flow(s) linked, {} unmatched",
+        files.len(),
+        report.flows_linked,
+        report.flows_unmatched
+    );
+    if report.flows_linked > 0 {
+        println!("min tx->rx latency {:.1} us", report.min_flow_latency_us);
+    }
+    for (role, shift) in &report.role_shift_us {
+        println!("  {role}: shifted {shift:+.1} us onto the server clock");
+    }
+    Ok(())
 }
 
 fn cmd_dist(args: &Args) -> anyhow::Result<()> {

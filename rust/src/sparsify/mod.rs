@@ -301,6 +301,14 @@ pub trait Compressor: Send {
 
     /// Human-readable name for figure labels.
     fn name(&self) -> &'static str;
+
+    /// Squared L2 norm of the compressor's carried error-feedback
+    /// residual, if it holds one. Memoryless compressors return `None`;
+    /// [`crate::feedback::WithFeedback`] overrides this so telemetry can
+    /// export the residual norm without knowing the concrete wrapper type.
+    fn residual_norm2_sq(&self) -> Option<f64> {
+        None
+    }
 }
 
 /// Forwarding impl so adapters generic over `C: Compressor` (e.g.
@@ -328,6 +336,10 @@ impl<T: Compressor + ?Sized> Compressor for Box<T> {
 
     fn name(&self) -> &'static str {
         (**self).name()
+    }
+
+    fn residual_norm2_sq(&self) -> Option<f64> {
+        (**self).residual_norm2_sq()
     }
 }
 

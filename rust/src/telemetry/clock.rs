@@ -1,0 +1,167 @@
+//! NTP-style per-link clock-offset estimation.
+//!
+//! Every process timestamps trace events on its own monotonic clock
+//! ([`crate::trace::now_ns`]), so two processes' dumps disagree by an
+//! unknown per-pair offset — merging them naively puts a `frame_rx`
+//! *before* its `frame_tx`. The transport's PROBE frames fix that with the
+//! classic four-timestamp exchange:
+//!
+//! ```text
+//!   local  ──t0──▶ PING ──▶ peer t1 (rx) … t2 (tx) ──▶ PONG ──t3──▶ local
+//! ```
+//!
+//! * offset  θ = ((t1 − t0) + (t2 − t3)) / 2   (peer clock − local clock)
+//! * rtt     δ = (t3 − t0) − (t2 − t1)
+//!
+//! θ's error is bounded by δ/2 (attained only when the path delay is
+//! fully asymmetric), so the estimator keeps the sample with the smallest
+//! rtt seen — the standard min-filter: the tighter the round trip, the
+//! tighter the bound. On loopback links rtt is tens of microseconds, which
+//! is what gets the merged-timeline skew to sub-millisecond.
+//!
+//! The estimate maps peer timestamps into local time as
+//! `local ≈ peer_ts − θ`. Residual error (up to δ/2) can still produce
+//! slightly negative flow latencies; the merger's causal clamp
+//! ([`crate::telemetry::merge`]) absorbs that.
+
+/// Running best-sample estimate of one peer's clock offset.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClockEstimator {
+    offset_ns: i64,
+    best_rtt_ns: u64,
+    samples: u32,
+}
+
+impl ClockEstimator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed one four-timestamp probe exchange (`t0`,`t3` on the local
+    /// clock; `t1`,`t2` on the peer's). Returns `true` when the sample
+    /// beat the best rtt so far and updated the estimate. Samples with a
+    /// non-positive rtt (reordered or corrupt timestamps) are rejected.
+    pub fn update(&mut self, t0: u64, t1: u64, t2: u64, t3: u64) -> bool {
+        let rtt = (t3 as i128 - t0 as i128) - (t2 as i128 - t1 as i128);
+        if rtt < 0 || t3 < t0 {
+            return false;
+        }
+        let rtt = rtt as u64;
+        self.samples += 1;
+        if self.samples == 1 || rtt < self.best_rtt_ns {
+            let theta = ((t1 as i128 - t0 as i128) + (t2 as i128 - t3 as i128)) / 2;
+            self.offset_ns = theta as i64;
+            self.best_rtt_ns = rtt;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Estimated `peer clock − local clock` in nanoseconds (0 until the
+    /// first accepted sample).
+    pub fn offset_ns(&self) -> i64 {
+        self.offset_ns
+    }
+
+    /// Round-trip time of the best (kept) sample.
+    pub fn rtt_ns(&self) -> Option<u64> {
+        (self.samples > 0).then_some(self.best_rtt_ns)
+    }
+
+    /// Worst-case offset error of the kept sample: δ/2.
+    pub fn error_bound_ns(&self) -> Option<u64> {
+        self.rtt_ns().map(|r| r / 2)
+    }
+
+    /// Accepted probe exchanges so far.
+    pub fn samples(&self) -> u32 {
+        self.samples
+    }
+
+    /// Map a peer timestamp onto the local clock (saturating at 0).
+    pub fn peer_to_local_ns(&self, peer_ns: u64) -> u64 {
+        (peer_ns as i128 - self.offset_ns as i128).max(0) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build the four timestamps of one exchange given a true offset and
+    /// asymmetric path delays.
+    fn exchange(local_t0: u64, true_offset: i64, d_fwd: u64, d_back: u64) -> (u64, u64, u64, u64) {
+        let peer = |local: u64| (local as i128 + true_offset as i128) as u64;
+        let t1 = peer(local_t0 + d_fwd);
+        let t2 = t1 + 1_000; // peer thinks for 1 µs
+        let t3 = (t2 as i128 - true_offset as i128) as u64 + d_back;
+        (local_t0, t1, t2, t3)
+    }
+
+    #[test]
+    fn symmetric_delay_recovers_the_offset_exactly() {
+        let mut est = ClockEstimator::new();
+        let (t0, t1, t2, t3) = exchange(1_000_000, 123_456_789, 40_000, 40_000);
+        assert!(est.update(t0, t1, t2, t3));
+        assert_eq!(est.offset_ns(), 123_456_789);
+        assert_eq!(est.rtt_ns(), Some(80_000));
+        assert_eq!(est.error_bound_ns(), Some(40_000));
+    }
+
+    #[test]
+    fn asymmetric_delay_error_is_bounded_by_half_rtt() {
+        // True offset -5 ms; forward path 10 µs, back path 90 µs.
+        let mut est = ClockEstimator::new();
+        let (t0, t1, t2, t3) = exchange(6_000_000_000, -5_000_000, 10_000, 90_000);
+        assert!(est.update(t0, t1, t2, t3));
+        let err = (est.offset_ns() - (-5_000_000)).unsigned_abs();
+        let bound = est.error_bound_ns().unwrap();
+        assert!(err <= bound, "err {err} > bound {bound}");
+        // The error is exactly the delay asymmetry / 2.
+        assert_eq!(err, (90_000 - 10_000) / 2);
+    }
+
+    #[test]
+    fn min_rtt_filter_keeps_the_tightest_sample() {
+        let mut est = ClockEstimator::new();
+        // A sloppy sample (wide, asymmetric) followed by a tight one.
+        let (a0, a1, a2, a3) = exchange(0, 7_000, 900_000, 100_000);
+        assert!(est.update(a0, a1, a2, a3));
+        let sloppy = est.offset_ns();
+        let (b0, b1, b2, b3) = exchange(5_000_000, 7_000, 2_000, 2_000);
+        assert!(est.update(b0, b1, b2, b3));
+        assert_eq!(est.offset_ns(), 7_000, "tight sample is exact");
+        assert_ne!(sloppy, 7_000, "the sloppy sample alone was biased");
+        // A later, wider sample is ignored.
+        let (c0, c1, c2, c3) = exchange(9_000_000, 7_000, 300_000, 1_000);
+        assert!(!est.update(c0, c1, c2, c3));
+        assert_eq!(est.offset_ns(), 7_000);
+        assert_eq!(est.samples(), 3);
+    }
+
+    #[test]
+    fn garbage_samples_are_rejected() {
+        let mut est = ClockEstimator::new();
+        // Negative rtt: peer "thought" longer than the whole round trip.
+        assert!(!est.update(100, 50, 10_000, 200));
+        // t3 before t0 (local clock went backwards — impossible input).
+        assert!(!est.update(1_000, 1_100, 1_200, 900));
+        assert_eq!(est.rtt_ns(), None);
+        assert_eq!(est.offset_ns(), 0);
+    }
+
+    #[test]
+    fn peer_to_local_maps_both_signs() {
+        let mut est = ClockEstimator::new();
+        let (t0, t1, t2, t3) = exchange(1_000_000, 500, 100, 100);
+        est.update(t0, t1, t2, t3);
+        assert_eq!(est.peer_to_local_ns(10_500), 10_000);
+        let mut neg = ClockEstimator::new();
+        let (t0, t1, t2, t3) = exchange(1_000_000, -500, 100, 100);
+        neg.update(t0, t1, t2, t3);
+        assert_eq!(neg.peer_to_local_ns(10_000), 10_500);
+        // Saturation at zero rather than wraparound.
+        assert_eq!(est.peer_to_local_ns(0), 0);
+    }
+}

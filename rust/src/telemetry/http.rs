@@ -1,0 +1,189 @@
+//! A deliberately tiny blocking HTTP/1.1 responder for `/metrics`.
+//!
+//! One thread, one connection at a time, `Connection: close` on every
+//! response — the absolute minimum that `curl` and a Prometheus scrape
+//! job need, with no async runtime and no external crates (the
+//! offline-image rule). Serving a scrape costs one registry render on the
+//! responder thread; the training hot path is never involved (the
+//! registry's update handles are lock-free, and `render` only takes the
+//! registration mutex, which the hot path never touches).
+//!
+//! Lifecycle: [`MetricsServer::start`] binds and spawns the accept loop;
+//! dropping the server (or calling [`MetricsServer::stop`]) flips the stop
+//! flag and pokes the listener with a loopback connect so the blocking
+//! `accept` wakes up and the thread exits. A slow or stuck client cannot
+//! wedge the loop: reads carry a 500 ms timeout.
+
+use super::registry::Registry;
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::Arc;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+/// A running `/metrics` endpoint. Dropping it shuts the thread down.
+pub struct MetricsServer {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an OS-assigned port) and serve
+    /// `registries` — later registries win on name collisions simply by
+    /// being concatenated after earlier ones; in practice the run registry
+    /// and the process-global one use disjoint names.
+    pub fn start(addr: &str, registries: Vec<Registry>) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_in = Arc::clone(&stop);
+        let handle = crate::sync::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop_in.load(Ordering::Relaxed) {
+                    break;
+                }
+                if let Ok(stream) = conn {
+                    // Per-connection errors (reset, timeout, bad request)
+                    // only lose that one scrape.
+                    let _ = serve_one(stream, &registries);
+                }
+            }
+        });
+        Ok(Self {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (`host:port`, concrete even when asked for `:0`).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Stop the responder thread and wait for it.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        let Some(handle) = self.handle.take() else {
+            return;
+        };
+        self.stop.store(true, Ordering::Relaxed);
+        // Wake the blocking accept. If the connect fails the listener is
+        // already gone and the thread has exited on its own.
+        let _ = TcpStream::connect(&self.addr);
+        let _ = handle.join();
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_one(mut stream: TcpStream, registries: &[Registry]) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_millis(500)))?;
+    // Read until the end of the request head (or a 4 KiB cap — nothing we
+    // serve takes a body).
+    let mut head = Vec::with_capacity(256);
+    let mut byte = [0u8; 256];
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") && head.len() < 4096 {
+        let n = stream.read(&mut byte)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&byte[..n]);
+    }
+    let head = String::from_utf8_lossy(&head);
+    let mut parts = head.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let (status, ctype, body) = match (method, path) {
+        ("GET", "/metrics") => {
+            let mut text = String::new();
+            for r in registries {
+                text.push_str(&r.render());
+            }
+            (
+                "200 OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                text,
+            )
+        }
+        ("GET", "/") | ("GET", "/health") => ("200 OK", "text/plain", "ok\n".to_string()),
+        ("GET", _) => ("404 Not Found", "text/plain", "not found\n".to_string()),
+        _ => (
+            "405 Method Not Allowed",
+            "text/plain",
+            "method not allowed\n".to_string(),
+        ),
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: &str, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_health_and_404() {
+        let reg = Registry::new();
+        let c = reg.counter("scrapes_total", "Scrapes served.", &[]);
+        c.inc_by(3);
+        let server = MetricsServer::start("127.0.0.1:0", vec![reg.clone()]).unwrap();
+        let addr = server.addr().to_string();
+
+        let resp = get(&addr, "/metrics");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"));
+        assert!(resp.contains("scrapes_total 3"));
+
+        // A second scrape sees live updates (counters move between reads).
+        c.inc();
+        assert!(get(&addr, "/metrics").contains("scrapes_total 4"));
+
+        assert!(get(&addr, "/health").starts_with("HTTP/1.1 200"));
+        assert!(get(&addr, "/nope").starts_with("HTTP/1.1 404"));
+
+        server.stop();
+        // After stop the port no longer answers.
+        assert!(TcpStream::connect(&addr).is_err() || {
+            // The OS may allow one last connect to a dying socket; a read
+            // must then return nothing.
+            let mut s = TcpStream::connect(&addr).unwrap();
+            let _ = write!(s, "GET /metrics HTTP/1.1\r\n\r\n");
+            let mut buf = String::new();
+            s.read_to_string(&mut buf).unwrap_or(0) == 0
+        });
+    }
+
+    #[test]
+    fn concatenates_multiple_registries() {
+        let a = Registry::new();
+        a.counter("a_total", "a", &[]).inc();
+        let b = Registry::new();
+        b.gauge("b_gauge", "b", &[]).set(2.5);
+        let server = MetricsServer::start("127.0.0.1:0", vec![a, b]).unwrap();
+        let resp = get(server.addr(), "/metrics");
+        assert!(resp.contains("a_total 1"));
+        assert!(resp.contains("b_gauge 2.5"));
+    }
+}

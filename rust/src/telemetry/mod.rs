@@ -1,0 +1,55 @@
+//! `gsparse::telemetry` — the live observability plane built on top of the
+//! [`crate::trace`] recorder.
+//!
+//! The trace subsystem answers "where did this run's time go" *after* the
+//! run, from per-process dump files. This module adds the three pieces
+//! that turn those post-hoc, per-process dumps into a live, cross-process
+//! story:
+//!
+//! * [`registry`] — a lock-free metrics registry (monotone counters,
+//!   gauges, fixed-bucket histograms) rendered in Prometheus text
+//!   exposition format. Update handles are plain relaxed atomics: the hot
+//!   path never blocks, never allocates, and never touches the registration
+//!   lock (same discipline as the trace rings, and enforced by the same
+//!   verifier `hot-path` rule).
+//! * [`http`] — a deliberately tiny blocking HTTP/1.1 responder that
+//!   serves the registry at `/metrics` from one accept-loop thread, so a
+//!   mid-run `curl` (or a Prometheus scrape job) can watch a distributed
+//!   run converge. No async runtime, no external crates — the offline-image
+//!   rule.
+//! * [`clock`] + [`merge`] — NTP-style per-link clock-offset estimation
+//!   (fed by PROBE ping/pong frames piggybacked on the transport, see
+//!   [`crate::transport::frame`]) and the trace-file merger that applies
+//!   those offsets to per-role Chrome dumps, links `frame_tx`/`frame_rx`
+//!   event pairs through their stamped flow ids, and emits one causally
+//!   consistent timeline with Chrome flow arrows. [`json`] is the minimal
+//!   JSON reader the merger uses on our own dump files.
+//!
+//! Everything here is observation-only: turning telemetry on changes no
+//! wire byte and no model float (pinned by `tests/trace.rs` across all
+//! four coordinators — probes are a transport *version* feature, not a
+//! telemetry feature, so they flow whether or not anyone is watching).
+
+pub mod clock;
+pub mod http;
+pub mod json;
+pub mod merge;
+pub mod registry;
+
+pub use clock::ClockEstimator;
+pub use http::MetricsServer;
+pub use registry::{Counter, Gauge, Histo, Registry};
+
+/// Environment variable naming the `/metrics` bind address (the
+/// `--metrics-addr` CLI flag sets it). Empty/unset means no endpoint.
+pub const METRICS_ADDR_ENV: &str = "GSPARSE_METRICS_ADDR";
+
+/// The process-global registry. Code that lives far from the coordinator
+/// (e.g. per-worker feedback residual gauges in the in-process topologies)
+/// publishes here; the server's HTTP responder serves a run-scoped
+/// registry *plus* this one. Cheap to clone (an `Arc` inside).
+pub fn global() -> Registry {
+    use std::sync::OnceLock;
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new).clone()
+}

@@ -1,0 +1,436 @@
+//! Lock-free metrics registry with Prometheus text rendering.
+//!
+//! Two-phase discipline, same shape as the trace rings: **registration**
+//! (naming a series, attaching labels, fixing histogram buckets) takes the
+//! registry mutex and may allocate — it happens at setup time, once per
+//! series. **Updates** go through the returned [`Counter`] / [`Gauge`] /
+//! [`Histo`] handles, which are `Arc`s over plain atomics: one relaxed
+//! RMW per update, no lock, no allocation, no clock — safe to call from
+//! the round hot loop. **Rendering** ([`Registry::render`]) takes the
+//! mutex again (scrape-time only) and emits Prometheus text exposition
+//! format 0.0.4, the thing `curl`/Prometheus expect from `/metrics`.
+//!
+//! Registering the same `(name, labels)` twice returns a handle to the
+//! same underlying series (idempotent), so per-round code can look its
+//! series up without threading handles through every signature — though
+//! holding the handle is cheaper.
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{Arc, Mutex};
+use std::fmt::Write as _;
+
+/// A monotone counter handle. Clone freely; all clones hit one cell.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add `v` to the counter.
+    // verifier: hot-path — one relaxed RMW, nothing else.
+    #[inline]
+    pub fn inc_by(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Add one.
+    // verifier: hot-path — one relaxed RMW, nothing else.
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A point-in-time gauge handle (stores f64 bits in an atomic).
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Set the gauge.
+    // verifier: hot-path — one relaxed store, nothing else.
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Debug)]
+struct HistoInner {
+    /// Upper bounds of the finite buckets (ascending); the +Inf bucket is
+    /// implicit. Fixed at registration — updates never resize anything.
+    bounds: Box<[f64]>,
+    /// Non-cumulative per-bucket counts; `buckets[bounds.len()]` is +Inf.
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    /// Running sum as f64 bits, advanced by a CAS loop (lock-free).
+    sum_bits: AtomicU64,
+}
+
+/// A fixed-bucket histogram handle.
+#[derive(Clone, Debug)]
+pub struct Histo(Arc<HistoInner>);
+
+impl Histo {
+    /// Record one observation.
+    // verifier: hot-path — bounded scan + relaxed RMWs; the sum uses a
+    // CAS loop (lock-free, never parks).
+    #[inline]
+    pub fn observe(&self, v: f64) {
+        let inner = &*self.0;
+        let mut idx = inner.bounds.len();
+        for (i, b) in inner.bounds.iter().enumerate() {
+            if v <= *b {
+                idx = i;
+                break;
+            }
+        }
+        inner.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        inner.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = inner.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            match inner
+                .sum_bits
+                .compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+}
+
+enum Cell {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicU64>),
+    Histo(Arc<HistoInner>),
+}
+
+struct Series {
+    /// Pre-rendered label block, `{k="v",...}` or empty.
+    labels: String,
+    cell: Cell,
+}
+
+struct Family {
+    name: String,
+    help: String,
+    kind: &'static str, // "counter" | "gauge" | "histogram"
+    series: Vec<Series>,
+}
+
+/// The registry: shared, cheap to clone, internally a mutex over the
+/// family list (taken only at registration and render time).
+#[derive(Clone, Default)]
+pub struct Registry {
+    families: Arc<Mutex<Vec<Family>>>,
+}
+
+/// Render a label set as the exposition block: `{a="x",b="y"}`.
+fn render_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut out = String::from("{");
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{k}=\"");
+        for ch in v.chars() {
+            match ch {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+    out.push('}');
+    out
+}
+
+/// Format a float the exposition format accepts (`+Inf`/`-Inf`/`NaN`).
+fn fmt_f64(v: f64, out: &mut String) {
+    if v.is_nan() {
+        out.push_str("NaN");
+    } else if v == f64::INFINITY {
+        out.push_str("+Inf");
+    } else if v == f64::NEG_INFINITY {
+        out.push_str("-Inf");
+    } else {
+        let _ = write!(out, "{v}");
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn series_cell(
+        &self,
+        name: &str,
+        help: &str,
+        kind: &'static str,
+        labels: &[(&str, &str)],
+        mk: impl FnOnce() -> Cell,
+    ) -> Cell {
+        let label_block = render_labels(labels);
+        let mut fams = self.families.lock().expect("metrics registry");
+        let fam = match fams.iter_mut().find(|f| f.name == name) {
+            Some(f) => {
+                assert_eq!(
+                    f.kind, kind,
+                    "metric `{name}` registered as {} and {kind}",
+                    f.kind
+                );
+                f
+            }
+            None => {
+                fams.push(Family {
+                    name: name.to_string(),
+                    help: help.to_string(),
+                    kind,
+                    series: Vec::new(),
+                });
+                fams.last_mut().unwrap()
+            }
+        };
+        if let Some(s) = fam.series.iter().find(|s| s.labels == label_block) {
+            return match &s.cell {
+                Cell::Counter(c) => Cell::Counter(Arc::clone(c)),
+                Cell::Gauge(g) => Cell::Gauge(Arc::clone(g)),
+                Cell::Histo(h) => Cell::Histo(Arc::clone(h)),
+            };
+        }
+        let cell = mk();
+        let clone = match &cell {
+            Cell::Counter(c) => Cell::Counter(Arc::clone(c)),
+            Cell::Gauge(g) => Cell::Gauge(Arc::clone(g)),
+            Cell::Histo(h) => Cell::Histo(Arc::clone(h)),
+        };
+        fam.series.push(Series {
+            labels: label_block,
+            cell,
+        });
+        clone
+    }
+
+    /// Register (or look up) a monotone counter.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        match self.series_cell(name, help, "counter", labels, || {
+            Cell::Counter(Arc::new(AtomicU64::new(0)))
+        }) {
+            Cell::Counter(c) => Counter(c),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register (or look up) a gauge.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        match self.series_cell(name, help, "gauge", labels, || {
+            Cell::Gauge(Arc::new(AtomicU64::new(0f64.to_bits())))
+        }) {
+            Cell::Gauge(g) => Gauge(g),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register (or look up) a histogram with the given finite upper
+    /// bounds (ascending; +Inf is implicit). Bounds are fixed for the life
+    /// of the series — a second registration's `bounds` are ignored.
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Histo {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must ascend"
+        );
+        match self.series_cell(name, help, "histogram", labels, || {
+            Cell::Histo(Arc::new(HistoInner {
+                bounds: bounds.to_vec().into_boxed_slice(),
+                buckets: (0..bounds.len() + 1)
+                    .map(|_| AtomicU64::new(0))
+                    .collect::<Vec<_>>()
+                    .into_boxed_slice(),
+                count: AtomicU64::new(0),
+                sum_bits: AtomicU64::new(0f64.to_bits()),
+            }))
+        }) {
+            Cell::Histo(h) => Histo(h),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Render every family in Prometheus text exposition format 0.0.4.
+    pub fn render(&self) -> String {
+        let fams = self.families.lock().expect("metrics registry");
+        let mut out = String::new();
+        for fam in fams.iter() {
+            let _ = writeln!(out, "# HELP {} {}", fam.name, fam.help);
+            let _ = writeln!(out, "# TYPE {} {}", fam.name, fam.kind);
+            for s in &fam.series {
+                match &s.cell {
+                    Cell::Counter(c) => {
+                        let _ = writeln!(
+                            out,
+                            "{}{} {}",
+                            fam.name,
+                            s.labels,
+                            c.load(Ordering::Relaxed)
+                        );
+                    }
+                    Cell::Gauge(g) => {
+                        let _ = write!(out, "{}{} ", fam.name, s.labels);
+                        fmt_f64(f64::from_bits(g.load(Ordering::Relaxed)), &mut out);
+                        out.push('\n');
+                    }
+                    Cell::Histo(h) => {
+                        // Exposition histograms are cumulative per bucket;
+                        // the cells store raw counts, so accumulate here.
+                        let mut cum = 0u64;
+                        for (i, b) in h.bounds.iter().enumerate() {
+                            cum += h.buckets[i].load(Ordering::Relaxed);
+                            let _ = write!(out, "{}_bucket{{", fam.name);
+                            if !s.labels.is_empty() {
+                                // splice the bucket label into the block
+                                out.push_str(&s.labels[1..s.labels.len() - 1]);
+                                out.push(',');
+                            }
+                            out.push_str("le=\"");
+                            fmt_f64(*b, &mut out);
+                            let _ = writeln!(out, "\"}} {cum}");
+                        }
+                        cum += h.buckets[h.bounds.len()].load(Ordering::Relaxed);
+                        let _ = write!(out, "{}_bucket{{", fam.name);
+                        if !s.labels.is_empty() {
+                            out.push_str(&s.labels[1..s.labels.len() - 1]);
+                            out.push(',');
+                        }
+                        let _ = writeln!(out, "le=\"+Inf\"}} {cum}");
+                        let _ = write!(out, "{}_sum{} ", fam.name, s.labels);
+                        fmt_f64(f64::from_bits(h.sum_bits.load(Ordering::Relaxed)), &mut out);
+                        out.push('\n');
+                        let _ = writeln!(
+                            out,
+                            "{}_count{} {}",
+                            fam.name,
+                            s.labels,
+                            h.count.load(Ordering::Relaxed)
+                        );
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render_exposition_text() {
+        let reg = Registry::new();
+        let c = reg.counter("rounds_total", "Completed rounds.", &[("worker", "0")]);
+        c.inc();
+        c.inc_by(4);
+        assert_eq!(c.get(), 5);
+        let g = reg.gauge("straggler_ratio", "Slowest/mean round time.", &[]);
+        g.set(1.25);
+        let text = reg.render();
+        assert!(text.contains("# HELP rounds_total Completed rounds."));
+        assert!(text.contains("# TYPE rounds_total counter"));
+        assert!(text.contains("rounds_total{worker=\"0\"} 5"));
+        assert!(text.contains("# TYPE straggler_ratio gauge"));
+        assert!(text.contains("straggler_ratio 1.25"));
+    }
+
+    #[test]
+    fn reregistration_returns_the_same_series() {
+        let reg = Registry::new();
+        let a = reg.counter("x_total", "x", &[("k", "v")]);
+        let b = reg.counter("x_total", "x", &[("k", "v")]);
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2);
+        // A different label set is a different series under one family.
+        let c = reg.counter("x_total", "x", &[("k", "w")]);
+        c.inc_by(7);
+        let text = reg.render();
+        assert!(text.contains("x_total{k=\"v\"} 2"));
+        assert!(text.contains("x_total{k=\"w\"} 7"));
+        assert_eq!(text.matches("# TYPE x_total").count(), 1);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_with_inf() {
+        let reg = Registry::new();
+        let h = reg.histogram(
+            "round_seconds",
+            "Round latency.",
+            &[("worker", "1")],
+            &[0.001, 0.01, 0.1],
+        );
+        h.observe(0.0005);
+        h.observe(0.05);
+        h.observe(2.0);
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 2.0505).abs() < 1e-12);
+        let text = reg.render();
+        assert!(text.contains("round_seconds_bucket{worker=\"1\",le=\"0.001\"} 1"));
+        assert!(text.contains("round_seconds_bucket{worker=\"1\",le=\"0.01\"} 1"));
+        assert!(text.contains("round_seconds_bucket{worker=\"1\",le=\"0.1\"} 2"));
+        assert!(text.contains("round_seconds_bucket{worker=\"1\",le=\"+Inf\"} 3"));
+        assert!(text.contains("round_seconds_count{worker=\"1\"} 3"));
+        assert!(text.contains("# TYPE round_seconds histogram"));
+    }
+
+    #[test]
+    fn gauge_specials_render_prometheus_style() {
+        let reg = Registry::new();
+        let g = reg.gauge("g", "g", &[]);
+        g.set(f64::INFINITY);
+        assert!(reg.render().contains("g +Inf"));
+        g.set(f64::NAN);
+        assert!(reg.render().contains("g NaN"));
+    }
+
+    #[test]
+    fn updates_are_safe_across_threads() {
+        let reg = Registry::new();
+        let c = reg.counter("t_total", "t", &[]);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 4000);
+    }
+}

@@ -24,15 +24,15 @@
 //!
 //! ## Event record layout
 //!
-//! One event is a fixed 40-byte record (logical layout; `repr(Rust)` may
+//! One event is a fixed 48-byte record (logical layout; `repr(Rust)` may
 //! reorder fields in memory, the exporters use the field names):
 //!
 //! ```text
-//! byte   0        8        16       24      28      32     33    34    36
-//!        ├────────┼────────┼────────┼───────┼───────┼──────┼─────┼─────┤
-//!        │t_start │ t_end  │ bytes  │ round │ layer │stage │ wrk │ tid │
-//!        │ ns u64 │ ns u64 │  u64   │  u32  │  u32  │  u8  │ u16 │ u16 │
-//!        └────────┴────────┴────────┴───────┴───────┴──────┴─────┴─────┘
+//! byte   0        8        16       24       32      36      40     41    42
+//!        ├────────┼────────┼────────┼────────┼───────┼───────┼──────┼─────┼─────┤
+//!        │t_start │ t_end  │ bytes  │  flow  │ round │ layer │stage │ wrk │ tid │
+//!        │ ns u64 │ ns u64 │  u64   │  u64   │  u32  │  u32  │  u8  │ u16 │ u16 │
+//!        └────────┴────────┴────────┴────────┴───────┴───────┴──────┴─────┴─────┘
 //! ```
 //!
 //! * `t_start`/`t_end` — nanoseconds on the recorder's monotonic clock
@@ -41,8 +41,15 @@
 //! * `bytes` — stage-dependent payload size (frame bytes for
 //!   `FrameTx`/`FrameRx`, wire bytes for `Encode`, chunk count for
 //!   `ShardDispatch`, zero where meaningless);
+//! * `flow` — the causal flow id of a v4 trace-context-stamped frame
+//!   (`sender_rank << 32 | seq`, zero = no flow): the `frame_tx` event on
+//!   the sending process and the `frame_rx` event on the receiving one
+//!   carry the same id, which is what lets the cross-process merger
+//!   ([`crate::telemetry::merge`]) connect them with Chrome flow arrows;
 //! * `round`/`layer` — ambient context set by the coordinators via
-//!   [`set_round`] and per-span via [`Span::layer`];
+//!   [`set_round`] and per-span via [`Span::layer`] (a stamped frame's
+//!   `frame_rx` uses the *sender's* round from the trace context, so both
+//!   halves of a flow agree even when the receiver's ambient round lags);
 //! * `stage` — the [`Stage`] id; `wrk`/`tid` — the worker id the thread
 //!   was installed with and the recorder-local thread index (these become
 //!   `pid`/`tid` lanes in the Chrome export, which is what makes traces
@@ -62,14 +69,28 @@
 //! back events from the session's recorder. Environment (the CI hook):
 //! `GSPARSE_TRACE=json|jsonl` enables recording in every session built
 //! without an explicit config; setting `GSPARSE_TRACE_OUT=<stem>`
-//! *additionally* makes every coordinator dump its trace at run end to
-//! `<stem>.<role>.trace.json[l]` (recording and dumping are separate
-//! switches so a whole test suite can run traced without processes racing
-//! on dump files). The `gsparse` binary's `--trace-out STEM` flag sets
-//! both. The distributed runtime ships the config to worker processes in
-//! the CONFIG frame (v5), so a multi-process run produces one trace file
-//! per role keyed by worker id — mergeable by concatenating their
-//! `traceEvents` arrays.
+//! *additionally* makes every coordinator dump its trace at run end
+//! (recording and dumping are separate switches so a whole test suite can
+//! run traced without processes racing on dump files). The `gsparse`
+//! binary's `--trace-out STEM` flag sets both. The distributed runtime
+//! ships the config to worker processes in the CONFIG frame, so a
+//! multi-process run produces one trace file per role keyed by worker id —
+//! mergeable by concatenating their `traceEvents` arrays, or (better) by
+//! the clock-aligning `gsparse trace-merge` subcommand.
+//!
+//! ## Dump file naming
+//!
+//! Run-end dumps are written to
+//! `<stem>.<run-tag>.<role>.trace.json[l]`, where `<stem>` is
+//! `GSPARSE_TRACE_OUT`, `<run-tag>` is `r<rounds>.<topology>` (built by
+//! [`run_tag`] — e.g. `r40.star`, `r40.ring`; coordinators without a wire
+//! topology use their schedule name, e.g. `r30.sim` for the synchronous
+//! simulator), and `<role>` is `server`, `worker<N>`, `cluster`, `ps`,
+//! `sync`, or `async`. Two runs with different shapes in one directory
+//! therefore never silently overwrite each other's dumps; re-running the
+//! *same* shape intentionally replaces them. The server of a dist run
+//! additionally writes `<stem>.<run-tag>.clock.json` (per-worker clock
+//! offsets, consumed by `trace-merge`).
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -296,6 +317,9 @@ pub struct Event {
     pub t_start_ns: u64,
     pub t_end_ns: u64,
     pub bytes: u64,
+    /// Causal flow id (`sender << 32 | seq`) of a trace-context-stamped
+    /// frame; zero = not part of a cross-process flow.
+    pub flow: u64,
     pub round: u32,
     pub layer: u32,
     pub stage: Stage,
@@ -567,6 +591,22 @@ pub fn set_round(round: u32) {
 // verifier: hot-path — allocation-free, clock-free, try_lock only.
 #[inline]
 fn record(stage: Stage, t0: Instant, t1: Option<Instant>, bytes: u64, layer: u32) {
+    record_flow(stage, t0, t1, bytes, layer, 0, None);
+}
+
+/// [`record`] with an explicit flow id and (for stamped `frame_rx`) the
+/// sender's round overriding the receiver's ambient one.
+// verifier: hot-path — allocation-free, clock-free, try_lock only.
+#[inline]
+fn record_flow(
+    stage: Stage,
+    t0: Instant,
+    t1: Option<Instant>,
+    bytes: u64,
+    layer: u32,
+    flow: u64,
+    round: Option<u32>,
+) {
     CURRENT.with(|c| {
         let borrow = c.borrow();
         let Some(ctx) = borrow.as_ref() else { return };
@@ -578,7 +618,8 @@ fn record(stage: Stage, t0: Instant, t1: Option<Instant>, bytes: u64, layer: u32
             t_start_ns: start,
             t_end_ns: end,
             bytes,
-            round: ctx.round,
+            flow,
+            round: round.unwrap_or(ctx.round),
             layer,
             stage,
             worker: ctx.buf.worker,
@@ -654,6 +695,59 @@ pub fn counter(stage: Stage, bytes: u64) {
     record(stage, now, None, bytes, 0);
 }
 
+/// Record a zero-duration counter event that belongs to a cross-process
+/// flow (a trace-context-stamped frame): `flow` is the
+/// [`TraceCtx::flow_id`](crate::transport::TraceCtx::flow_id), `round` the
+/// sender's round carried in the context (which overrides the receiving
+/// thread's ambient round, keeping both halves of the flow on one round).
+// verifier: hot-path (clock-ok) — reads the clock, allocates nothing.
+#[inline]
+pub fn counter_flow(stage: Stage, bytes: u64, flow: u64, round: u32) {
+    if !tracing_possible() {
+        return;
+    }
+    let now = Instant::now();
+    record_flow(stage, now, None, bytes, 0, flow, Some(round));
+}
+
+/// The ambient round of the calling thread's installed recorder context
+/// (zero when none is installed) — what frame senders stamp into a
+/// [`TraceCtx`](crate::transport::TraceCtx).
+pub fn current_round() -> u32 {
+    if !tracing_possible() {
+        return 0;
+    }
+    CURRENT.with(|c| c.borrow().as_ref().map_or(0, |ctx| ctx.round))
+}
+
+/// Next flow sequence number for this process's stamped frames. One
+/// process-wide counter (not per-link) so a flow id `sender << 32 | seq`
+/// is unique no matter how many links or topologies a process drives at
+/// once — the merger matches ids globally.
+// verifier: hot-path — one relaxed RMW, nothing else.
+#[inline]
+pub fn next_flow_seq() -> u32 {
+    static SEQ: AtomicU64 = AtomicU64::new(1);
+    SEQ.fetch_add(1, Ordering::Relaxed) as u32
+}
+
+/// Nanoseconds now on this process's trace clock: the installed recorder's
+/// origin when one is active on the calling thread, else a process-global
+/// epoch fixed at first use. Clock-probe timestamps
+/// ([`crate::telemetry::clock`]) use this so the offsets they estimate
+/// apply directly to this process's trace event timestamps.
+pub fn now_ns() -> u64 {
+    let from_recorder = CURRENT.with(|c| {
+        c.borrow()
+            .as_ref()
+            .map(|ctx| ctx.origin.elapsed().as_nanos() as u64)
+    });
+    from_recorder.unwrap_or_else(|| {
+        static EPOCH: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+        EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+    })
+}
+
 // ---------------------------------------------------------------------------
 // Exporters
 // ---------------------------------------------------------------------------
@@ -686,7 +780,7 @@ pub fn chrome_trace_json(events: &[Event]) -> String {
         let _ = write!(
             out,
             "{{\"name\":\"{}\",\"cat\":\"gsparse\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\
-             \"pid\":{},\"tid\":{},\"args\":{{\"round\":{},\"layer\":{},\"bytes\":{}}}}}",
+             \"pid\":{},\"tid\":{},\"args\":{{\"round\":{},\"layer\":{},\"bytes\":{}",
             e.stage.name(),
             e.t_start_ns as f64 / 1e3,
             e.duration_ns() as f64 / 1e3,
@@ -696,6 +790,10 @@ pub fn chrome_trace_json(events: &[Event]) -> String {
             e.layer,
             e.bytes
         );
+        if e.flow != 0 {
+            let _ = write!(out, ",\"flow\":{}", e.flow);
+        }
+        out.push_str("}}");
     }
     out.push_str("]}");
     out
@@ -709,7 +807,7 @@ pub fn jsonl(events: &[Event]) -> String {
         let _ = writeln!(
             out,
             "{{\"stage\":\"{}\",\"worker\":{},\"tid\":{},\"round\":{},\"layer\":{},\
-             \"t_start_ns\":{},\"t_end_ns\":{},\"bytes\":{}}}",
+             \"t_start_ns\":{},\"t_end_ns\":{},\"bytes\":{},\"flow\":{}}}",
             e.stage.name(),
             e.worker,
             e.tid,
@@ -717,7 +815,8 @@ pub fn jsonl(events: &[Event]) -> String {
             e.layer,
             e.t_start_ns,
             e.t_end_ns,
-            e.bytes
+            e.bytes,
+            e.flow
         );
     }
     out
@@ -731,15 +830,25 @@ pub fn out_stem() -> String {
     }
 }
 
-/// Drain `recorder` and write `<stem>.<role>.trace.json[l]`; returns the
-/// path written. The coordinators call this at run end when the
-/// environment asked for dumps ([`TraceConfig::dump_requested`]).
+/// The run-shape tag embedded in every dump filename (see the module docs):
+/// `r<rounds>.<topology>`, e.g. `r40.star`. Keeping the shape in the name
+/// is what stops successive runs with different shapes in one directory
+/// from silently overwriting each other's dumps.
+pub fn run_tag(rounds: usize, topology: &str) -> String {
+    format!("r{rounds}.{topology}")
+}
+
+/// Drain `recorder` and write `<stem>.<tag>.<role>.trace.json[l]` (`tag`
+/// from [`run_tag`]); returns the path written. The coordinators call this
+/// at run end when the environment asked for dumps
+/// ([`TraceConfig::dump_requested`]).
 pub fn dump(
     recorder: &Recorder,
+    tag: &str,
     role: &str,
     format: TraceFormat,
 ) -> std::io::Result<std::path::PathBuf> {
-    dump_events(&recorder.drain(), role, format)
+    dump_events(&recorder.drain(), tag, role, format)
 }
 
 /// [`dump`] for an already-drained event list — what coordinators that
@@ -747,6 +856,7 @@ pub fn dump(
 /// serves both.
 pub fn dump_events(
     events: &[Event],
+    tag: &str,
     role: &str,
     format: TraceFormat,
 ) -> std::io::Result<std::path::PathBuf> {
@@ -754,7 +864,7 @@ pub fn dump_events(
         TraceFormat::Chrome => (".trace.json", chrome_trace_json(events)),
         TraceFormat::Jsonl => (".trace.jsonl", jsonl(events)),
     };
-    let path = std::path::PathBuf::from(format!("{}.{role}{suffix}", out_stem()));
+    let path = std::path::PathBuf::from(format!("{}.{tag}.{role}{suffix}", out_stem()));
     std::fs::write(&path, body)?;
     Ok(path)
 }
@@ -864,6 +974,23 @@ impl MetricsSnapshot {
 
     pub fn push_gauge(&mut self, name: &str, value: f64) {
         self.gauges.push((name.to_string(), value));
+    }
+
+    /// Surface the recorder's ring-overwrite count
+    /// ([`Recorder::dropped`]) as the `trace_dropped_total` counter —
+    /// nonzero means the rings were too small for this run and the
+    /// timing roll-ups undercount (the drop itself never blocked the hot
+    /// path; that is the ring's contract).
+    pub fn set_dropped(&mut self, dropped: u64) {
+        if let Some(slot) = self
+            .counters
+            .iter_mut()
+            .find(|(n, _)| n == "trace_dropped_total")
+        {
+            slot.1 = dropped;
+        } else {
+            self.counters.push(("trace_dropped_total".into(), dropped));
+        }
     }
 
     /// Counter value by name (test/driver convenience).
@@ -1018,6 +1145,7 @@ mod tests {
                 t_start_ns: 1_000,
                 t_end_ns: 3_500,
                 bytes: 64,
+                flow: 0,
                 round: 2,
                 layer: 1,
                 stage: Stage::Encode,
@@ -1028,6 +1156,7 @@ mod tests {
                 t_start_ns: 4_000,
                 t_end_ns: 4_000,
                 bytes: 36,
+                flow: (3u64 << 32) | 9,
                 round: 2,
                 layer: 0,
                 stage: Stage::FrameTx,
@@ -1042,10 +1171,14 @@ mod tests {
         assert!(chrome.contains("\"ts\":1.000"));
         assert!(chrome.contains("\"dur\":2.500"));
         assert!(chrome.contains("\"pid\":1"));
+        // Flow ids appear in args only for flow-bearing events.
+        assert_eq!(chrome.matches("\"flow\":").count(), 1);
+        assert!(chrome.contains(&format!("\"flow\":{}", (3u64 << 32) | 9)));
         let lines = jsonl(&events);
         assert_eq!(lines.lines().count(), 2);
         assert!(lines.contains("\"stage\":\"frame_tx\""));
         assert!(lines.contains("\"t_start_ns\":1000"));
+        assert!(lines.contains("\"flow\":0"));
     }
 
     #[test]
@@ -1054,6 +1187,7 @@ mod tests {
             t_start_ns: 0,
             t_end_ns: dur,
             bytes,
+            flow: 0,
             round: 4,
             layer: 0,
             stage,
@@ -1099,6 +1233,45 @@ mod tests {
         snap.fold_link_counters("link_w0", &c);
         assert_eq!(snap.counter("link_w0_bytes_tx"), Some(0));
         assert_eq!(snap.counter("link_w0_frames_vectored"), Some(0));
+    }
+
+    #[test]
+    fn flow_counters_carry_id_and_sender_round() {
+        let rec = Recorder::new(&TraceConfig::on()).unwrap();
+        {
+            let _g = install(&rec, 1);
+            set_round(3);
+            assert_eq!(current_round(), 3);
+            // A stamped frame_rx records the *sender's* round (9), not the
+            // ambient one.
+            counter_flow(Stage::FrameRx, 64, (2u64 << 32) | 5, 9);
+            counter(Stage::FrameTx, 32);
+        }
+        let events = rec.drain();
+        let rx = events.iter().find(|e| e.stage == Stage::FrameRx).unwrap();
+        assert_eq!((rx.flow, rx.round), ((2u64 << 32) | 5, 9));
+        let tx = events.iter().find(|e| e.stage == Stage::FrameTx).unwrap();
+        assert_eq!((tx.flow, tx.round), (0, 3));
+        // With no recorder installed, current_round is 0 and now_ns falls
+        // back to the process epoch, still monotone.
+        assert_eq!(current_round(), 0);
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn run_tag_and_dropped_counter() {
+        assert_eq!(run_tag(40, "star"), "r40.star");
+        let mut snap = MetricsSnapshot::default();
+        snap.set_dropped(3);
+        assert_eq!(snap.counter("trace_dropped_total"), Some(3));
+        snap.set_dropped(5); // overwrites, never duplicates
+        assert_eq!(snap.counter("trace_dropped_total"), Some(5));
+        assert_eq!(
+            snap.counters.iter().filter(|(n, _)| n == "trace_dropped_total").count(),
+            1
+        );
     }
 
     #[test]

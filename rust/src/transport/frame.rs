@@ -40,10 +40,14 @@ pub const MAX_FRAME_LEN: usize = 1 << 28; // 256 MiB
 
 /// Transport protocol version carried in every handshake. Version 2 added
 /// the negotiated wire-codec byte to the hello; version 3 added the
-/// batched `GRAD_BATCH` frame (same 10-byte hello layout, so v2 and v3
-/// peers interoperate — a v3 side simply never sends batch frames to a
-/// peer whose hello announced v2).
-pub const TRANSPORT_VERSION: u8 = 3;
+/// batched `GRAD_BATCH` frame; version 4 added the optional per-frame
+/// trace context ([`TraceCtx`], flagged in the tag byte) and the clock
+/// `PROBE` frame. The 10-byte hello layout is unchanged across the whole
+/// window, so v2–v4 peers interoperate — a v4 side simply never stamps
+/// trace contexts on (or sends probes to) a peer whose hello announced an
+/// older version, leaving the bytes it ships bitwise identical to a v3
+/// run.
+pub const TRANSPORT_VERSION: u8 = 4;
 
 /// Oldest hello this side still accepts. Version-2 peers speak the same
 /// frame grammar minus `GRAD_BATCH`, so they remain first-class citizens;
@@ -65,6 +69,92 @@ const TAG_GRAD_BATCH: u8 = 0x15;
 const TAG_WEIGHTS_BATCH: u8 = 0x16;
 const TAG_SPARSE_REDUCE: u8 = 0x17;
 const TAG_RING_ADDR: u8 = 0x18;
+const TAG_PROBE: u8 = 0x19;
+
+/// Tag-byte flag marking a frame whose body is preceded by a 12-byte
+/// [`TraceCtx`] (v4 links only). Real tags live in `0x10..=0x19`, so a
+/// flagged tag (`0x90..=0x99`) can never collide with an unflagged one.
+pub const TRACE_CTX_FLAG: u8 = 0x80;
+
+/// Encoded length of a [`TraceCtx`]: `u32 round + u32 sender + u32 seq`.
+pub const TRACE_CTX_LEN: usize = 12;
+
+/// Clock-probe body length: `u8 kind + 3 × u64` timestamps.
+pub const PROBE_BODY_LEN: usize = 25;
+
+/// Probe kind: a ping carrying the sender's send timestamp in `t0`.
+pub const PROBE_PING: u8 = 0;
+
+/// Probe kind: a pong echoing the ping's `t0` plus the responder's local
+/// receive (`t1`) and reply-send (`t2`) timestamps.
+pub const PROBE_PONG: u8 = 1;
+
+/// Per-frame causal trace context (v4 links): which round the frame
+/// belongs to, which rank sent it, and a per-link sequence number. The
+/// `(sender, seq)` pair is the flow id linking the sender's `frame_tx`
+/// span to the receiver's `frame_rx` span in a merged cross-process
+/// timeline — see [`crate::telemetry::merge`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// Round index the frame belongs to (the sender's `trace::set_round`).
+    pub round: u32,
+    /// Sender rank (`u32::MAX` = the server, like `trace::SERVER_WORKER`).
+    pub sender: u32,
+    /// Per-link monotonically increasing frame sequence number.
+    pub seq: u32,
+}
+
+impl TraceCtx {
+    /// The flow id joining the tx and rx halves of this frame's journey.
+    pub fn flow_id(&self) -> u64 {
+        (u64::from(self.sender) << 32) | u64::from(self.seq)
+    }
+
+    fn write(&self, out: &mut [u8]) {
+        out[0..4].copy_from_slice(&self.round.to_le_bytes());
+        out[4..8].copy_from_slice(&self.sender.to_le_bytes());
+        out[8..12].copy_from_slice(&self.seq.to_le_bytes());
+    }
+
+    fn read(buf: &[u8]) -> Self {
+        Self {
+            round: u32::from_le_bytes(buf[0..4].try_into().unwrap()),
+            sender: u32::from_le_bytes(buf[4..8].try_into().unwrap()),
+            seq: u32::from_le_bytes(buf[8..12].try_into().unwrap()),
+        }
+    }
+}
+
+/// Stamp an encoded frame (or the tag-bearing first segment of a vectored
+/// send) with a trace context: sets [`TRACE_CTX_FLAG`] on the tag byte and
+/// inserts the 12 encoded context bytes between tag and body. Only valid
+/// on an unstamped frame; use [`restamp_ctx`] to overwrite in place.
+pub fn stamp_ctx(buf: &mut Vec<u8>, ctx: TraceCtx) {
+    debug_assert!(!buf.is_empty() && buf[0] & TRACE_CTX_FLAG == 0, "already stamped");
+    buf[0] |= TRACE_CTX_FLAG;
+    let mut enc = [0u8; TRACE_CTX_LEN];
+    ctx.write(&mut enc);
+    buf.splice(1..1, enc);
+}
+
+/// Overwrite the trace context of an already-stamped frame in place (no
+/// byte shifting) — how a sender reuses one encoded broadcast frame across
+/// several links that each need their own sequence number.
+pub fn restamp_ctx(buf: &mut [u8], ctx: TraceCtx) {
+    debug_assert!(buf.len() > TRACE_CTX_LEN && buf[0] & TRACE_CTX_FLAG != 0, "not stamped");
+    ctx.write(&mut buf[1..1 + TRACE_CTX_LEN]);
+}
+
+/// Read the trace context of a frame (or of a vectored send's first
+/// segment) without consuming it. `None` when the frame is unstamped or
+/// too short to carry a context.
+pub fn peek_ctx(buf: &[u8]) -> Option<TraceCtx> {
+    if buf.len() > TRACE_CTX_LEN && buf[0] & TRACE_CTX_FLAG != 0 {
+        Some(TraceCtx::read(&buf[1..1 + TRACE_CTX_LEN]))
+    } else {
+        None
+    }
+}
 
 /// The handshake sent by the connecting side as its first frame. Besides
 /// identifying the worker it pins the protocol version *and* the wire codec
@@ -109,6 +199,14 @@ impl Hello {
     /// Whether this peer may be sent `GRAD_BATCH` frames (hello ≥ v3).
     pub fn supports_batch(&self) -> bool {
         self.version >= 3
+    }
+
+    /// Whether this peer understands [`TraceCtx`]-stamped frames and clock
+    /// `PROBE` frames (hello ≥ v4). Frames to an older peer must stay
+    /// unstamped — that is the bitwise-compatibility contract of the v4
+    /// bump.
+    pub fn supports_ctx(&self) -> bool {
+        self.version >= 4
     }
 
     /// The decoded codec (`decode` validated the byte, so this never fails
@@ -207,6 +305,12 @@ pub enum MsgView<'a> {
     /// listener address, relayed through the server so each worker learns
     /// its right neighbour without any out-of-band channel.
     RingAddr { worker_id: u32, addr: &'a [u8] },
+    /// NTP-style clock probe (v4 links): a [`PROBE_PING`] carries the
+    /// sender's send timestamp in `t0`; the [`PROBE_PONG`] echoes it and
+    /// adds the responder's local receive (`t1`) and reply-send (`t2`)
+    /// timestamps, from which the pinger estimates the peer's clock offset
+    /// ([`crate::telemetry::clock`]).
+    Probe { kind: u8, t0: u64, t1: u64, t2: u64 },
 }
 
 /// Encode a `PULL` message into `out` (cleared first).
@@ -349,6 +453,20 @@ pub fn encode_ring_addr(out: &mut Vec<u8>, worker_id: u32, addr: &str) {
     out.extend_from_slice(addr.as_bytes());
 }
 
+/// Encode a `PROBE` message into `out` (cleared first). Pings set `t0` to
+/// the sender's clock and zero the rest; pongs echo the ping's `t0` and
+/// fill `t1`/`t2` from the responder's clock.
+pub fn encode_probe(out: &mut Vec<u8>, kind: u8, t0: u64, t1: u64, t2: u64) {
+    debug_assert!(kind == PROBE_PING || kind == PROBE_PONG);
+    out.clear();
+    out.reserve(1 + PROBE_BODY_LEN);
+    out.push(TAG_PROBE);
+    out.push(kind);
+    out.extend_from_slice(&t0.to_le_bytes());
+    out.extend_from_slice(&t1.to_le_bytes());
+    out.extend_from_slice(&t2.to_le_bytes());
+}
+
 /// Encode a `SHUTDOWN` message into `out` (cleared first).
 pub fn encode_shutdown(out: &mut Vec<u8>) {
     out.clear();
@@ -363,11 +481,21 @@ pub fn encode_config(out: &mut Vec<u8>, bytes: &[u8]) {
     out.extend_from_slice(bytes);
 }
 
-/// Decode one protocol message from a received frame payload.
+/// Decode one protocol message from a received frame payload. A
+/// [`TRACE_CTX_FLAG`]-stamped frame decodes to the same view as its
+/// unstamped twin — the context is observability metadata, read separately
+/// via [`peek_ctx`], never protocol state.
 pub fn decode(buf: &[u8]) -> Result<MsgView<'_>, TransportError> {
-    let (&tag, body) = buf
+    let (&raw_tag, mut body) = buf
         .split_first()
         .ok_or(TransportError::UnexpectedMessage("empty frame"))?;
+    let tag = raw_tag & !TRACE_CTX_FLAG;
+    if raw_tag & TRACE_CTX_FLAG != 0 {
+        if body.len() < TRACE_CTX_LEN {
+            return Err(TransportError::UnexpectedMessage("trace ctx truncated"));
+        }
+        body = &body[TRACE_CTX_LEN..];
+    }
     match tag {
         TAG_PULL => {
             if !body.is_empty() {
@@ -414,22 +542,25 @@ pub fn decode(buf: &[u8]) -> Result<MsgView<'_>, TransportError> {
             })
         }
         TAG_GRAD | TAG_GRAD_BATCH => {
-            if buf.len() < GRAD_HEADER_LEN {
+            // Header length minus the tag byte (offsets below are relative
+            // to `body`, which already skipped tag + any trace context).
+            let hdr = GRAD_HEADER_LEN - 1;
+            if body.len() < hdr {
                 return Err(TransportError::UnexpectedMessage("grad header truncated"));
             }
-            let kind = buf[GRAD_HEADER_LEN - 1];
+            let kind = body[hdr - 1];
             if kind > 1 || (tag == TAG_GRAD_BATCH && kind != 0) {
                 return Err(TransportError::UnexpectedMessage("grad kind"));
             }
             let header = GradHeader {
-                based_on: u64::from_le_bytes(buf[1..9].try_into().unwrap()),
-                g_norm_sq: f64::from_le_bytes(buf[9..17].try_into().unwrap()),
-                q_norm_sq: f64::from_le_bytes(buf[17..25].try_into().unwrap()),
-                expected_nnz: f64::from_le_bytes(buf[25..33].try_into().unwrap()),
-                ideal_bits: u64::from_le_bytes(buf[33..41].try_into().unwrap()),
+                based_on: u64::from_le_bytes(body[0..8].try_into().unwrap()),
+                g_norm_sq: f64::from_le_bytes(body[8..16].try_into().unwrap()),
+                q_norm_sq: f64::from_le_bytes(body[16..24].try_into().unwrap()),
+                expected_nnz: f64::from_le_bytes(body[24..32].try_into().unwrap()),
+                ideal_bits: u64::from_le_bytes(body[32..40].try_into().unwrap()),
                 kind,
             };
-            let payload = &buf[GRAD_HEADER_LEN..];
+            let payload = &body[hdr..];
             if tag == TAG_GRAD {
                 Ok(MsgView::Grad { header, payload })
             } else {
@@ -460,6 +591,21 @@ pub fn decode(buf: &[u8]) -> Result<MsgView<'_>, TransportError> {
             Ok(MsgView::RingAddr {
                 worker_id: u32::from_le_bytes(body[0..4].try_into().unwrap()),
                 addr: &body[4..],
+            })
+        }
+        TAG_PROBE => {
+            if body.len() != PROBE_BODY_LEN {
+                return Err(TransportError::UnexpectedMessage("probe body length"));
+            }
+            let kind = body[0];
+            if kind != PROBE_PING && kind != PROBE_PONG {
+                return Err(TransportError::UnexpectedMessage("probe kind"));
+            }
+            Ok(MsgView::Probe {
+                kind,
+                t0: u64::from_le_bytes(body[1..9].try_into().unwrap()),
+                t1: u64::from_le_bytes(body[9..17].try_into().unwrap()),
+                t2: u64::from_le_bytes(body[17..25].try_into().unwrap()),
             })
         }
         _ => Err(TransportError::UnexpectedMessage("unknown tag")),
@@ -534,7 +680,7 @@ mod tests {
         assert_eq!(v1.len(), 9);
         assert!(matches!(
             Hello::decode(&v1),
-            Err(TransportError::VersionMismatch { ours: 3, theirs: 1 })
+            Err(TransportError::VersionMismatch { ours: 4, theirs: 1 })
         ));
     }
 
@@ -550,15 +696,21 @@ mod tests {
         let back = Hello::decode(&buf).unwrap();
         assert_eq!(back, v2);
         assert!(!back.supports_batch());
+        assert!(!back.supports_ctx());
         assert!(Hello::new(0).supports_batch());
+        assert!(Hello::new(0).supports_ctx());
+        // A v3 peer batches but must never be stamped with trace contexts.
+        let v3 = Hello::with_version(1, crate::coding::WireCodec::Raw, 3);
+        assert!(v3.supports_batch());
+        assert!(!v3.supports_ctx());
         // with_version clamps into the supported window.
         assert_eq!(Hello::with_version(0, crate::coding::WireCodec::Raw, 0).version, 2);
-        assert_eq!(Hello::with_version(0, crate::coding::WireCodec::Raw, 9).version, 3);
+        assert_eq!(Hello::with_version(0, crate::coding::WireCodec::Raw, 9).version, 4);
         let mut future = buf.clone();
-        future[4] = 4;
+        future[4] = 5;
         assert!(matches!(
             Hello::decode(&future),
-            Err(TransportError::VersionMismatch { ours: 3, theirs: 4 })
+            Err(TransportError::VersionMismatch { ours: 4, theirs: 5 })
         ));
     }
 
@@ -759,6 +911,91 @@ mod tests {
         assert!(decode(&buf[..buf.len() - 1]).is_err());
         let mut bad = buf.clone();
         bad[GRAD_HEADER_LEN - 1] = 9;
+        assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn trace_ctx_stamp_peek_and_transparent_decode() {
+        let ctx = TraceCtx { round: 7, sender: 2, seq: 41 };
+        assert_eq!(ctx.flow_id(), (2u64 << 32) | 41);
+
+        // Stamping any of the four stampable frame kinds leaves the decoded
+        // view identical to the unstamped twin.
+        let header = GradHeader {
+            based_on: 11,
+            g_norm_sq: 2.5,
+            q_norm_sq: 3.25,
+            expected_nnz: 14.5,
+            ideal_bits: 999,
+            kind: 0,
+        };
+        let mut plain = Vec::new();
+        encode_grad(&mut plain, &header, b"payload-bytes");
+        assert_eq!(peek_ctx(&plain), None);
+        let mut stamped = plain.clone();
+        stamp_ctx(&mut stamped, ctx);
+        assert_eq!(stamped.len(), plain.len() + TRACE_CTX_LEN);
+        assert_eq!(peek_ctx(&stamped), Some(ctx));
+        match (decode(&plain).unwrap(), decode(&stamped).unwrap()) {
+            (MsgView::Grad { header: a, payload: pa }, MsgView::Grad { header: b, payload: pb }) => {
+                assert_eq!(a, b);
+                assert_eq!(pa, pb);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Restamping overwrites in place without shifting.
+        let ctx2 = TraceCtx { round: 8, sender: 2, seq: 42 };
+        restamp_ctx(&mut stamped, ctx2);
+        assert_eq!(stamped.len(), plain.len() + TRACE_CTX_LEN);
+        assert_eq!(peek_ctx(&stamped), Some(ctx2));
+
+        // A stamped vectored-send prefix glues to the same bytes as the
+        // stamped one-shot frame.
+        let mut prefix = Vec::new();
+        encode_grad_prefix(&mut prefix, &header);
+        stamp_ctx(&mut prefix, ctx2);
+        let mut glued = prefix.clone();
+        glued.extend_from_slice(b"payload-bytes");
+        assert_eq!(glued, stamped);
+
+        // Stamped WEIGHTS and SPARSE_REDUCE decode transparently too.
+        let mut buf = Vec::new();
+        encode_weights(&mut buf, 7, &[1.0, -2.5]);
+        stamp_ctx(&mut buf, ctx);
+        assert!(matches!(decode(&buf).unwrap(), MsgView::Weights { version: 7, .. }));
+        encode_sparse_reduce(&mut buf, 6, 1, b"hop");
+        stamp_ctx(&mut buf, ctx);
+        assert!(matches!(
+            decode(&buf).unwrap(),
+            MsgView::SparseReduce { chunk: 6, phase: 1, payload: b"hop" }
+        ));
+
+        // A flagged tag with a truncated context refuses; a flagged unknown
+        // tag is still unknown.
+        assert!(decode(&[TAG_GRAD | TRACE_CTX_FLAG, 1, 2]).is_err());
+        let mut junk = vec![0x7F | TRACE_CTX_FLAG];
+        junk.extend_from_slice(&[0u8; TRACE_CTX_LEN + 4]);
+        assert!(decode(&junk).is_err());
+    }
+
+    #[test]
+    fn probe_roundtrips_and_rejects_malformed() {
+        let mut buf = Vec::new();
+        encode_probe(&mut buf, PROBE_PING, 123, 0, 0);
+        assert_eq!(buf.len(), 1 + PROBE_BODY_LEN);
+        assert_eq!(
+            decode(&buf).unwrap(),
+            MsgView::Probe { kind: PROBE_PING, t0: 123, t1: 0, t2: 0 }
+        );
+        encode_probe(&mut buf, PROBE_PONG, 123, 456, 789);
+        assert_eq!(
+            decode(&buf).unwrap(),
+            MsgView::Probe { kind: PROBE_PONG, t0: 123, t1: 456, t2: 789 }
+        );
+        // Truncated body / bad kind refuse.
+        assert!(decode(&buf[..buf.len() - 1]).is_err());
+        let mut bad = buf.clone();
+        bad[1] = 7;
         assert!(decode(&bad).is_err());
     }
 

@@ -43,10 +43,11 @@ impl Connection for InProcConn {
         if payload.len() > super::MAX_FRAME_LEN {
             return Err(TransportError::FrameTooLarge(payload.len() as u64));
         }
+        let ctx = super::frame::peek_ctx(payload);
         self.tx
             .send(payload.to_vec())
             .map_err(|_| TransportError::Closed)?;
-        self.counters.add_tx(payload.len());
+        self.counters.add_tx_ctx(payload.len(), ctx);
         Ok(())
     }
 
@@ -62,14 +63,16 @@ impl Connection for InProcConn {
         for s in segments {
             frame.extend_from_slice(s);
         }
+        let ctx = super::frame::peek_ctx(&frame);
         self.tx.send(frame).map_err(|_| TransportError::Closed)?;
-        self.counters.add_tx(total);
+        self.counters.add_tx_ctx(total, ctx);
         Ok(())
     }
 
     fn recv(&mut self, buf: &mut Vec<u8>) -> Result<(), TransportError> {
         let frame = self.rx.recv().map_err(|_| TransportError::Closed)?;
-        self.counters.add_rx(frame.len());
+        self.counters
+            .add_rx_ctx(frame.len(), super::frame::peek_ctx(&frame));
         *buf = frame;
         Ok(())
     }

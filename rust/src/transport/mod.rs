@@ -26,7 +26,7 @@ mod inproc;
 mod tcp;
 
 pub use frame::{
-    Hello, MsgView, FRAME_OVERHEAD, HELLO_LEN, MAX_FRAME_LEN, MIN_TRANSPORT_VERSION,
+    Hello, MsgView, TraceCtx, FRAME_OVERHEAD, HELLO_LEN, MAX_FRAME_LEN, MIN_TRANSPORT_VERSION,
     TRANSPORT_VERSION,
 };
 pub use inproc::InProcTransport;
@@ -124,17 +124,46 @@ impl LinkCounters {
     }
 
     pub(crate) fn add_tx(&self, frame_payload_len: usize) {
-        let framed = frame_payload_len as u64 + FRAME_OVERHEAD as u64;
-        self.inner.bytes_tx.fetch_add(framed, Ordering::Relaxed);
-        self.inner.frames_tx.fetch_add(1, Ordering::Relaxed);
-        crate::trace::counter(crate::trace::Stage::FrameTx, framed);
+        self.add_tx_ctx(frame_payload_len, None);
     }
 
     pub(crate) fn add_rx(&self, frame_payload_len: usize) {
+        self.add_rx_ctx(frame_payload_len, None);
+    }
+
+    /// [`Self::add_tx`] for a frame whose first payload bytes carried a
+    /// [`TraceCtx`]: the `frame_tx` trace event records the context's flow
+    /// id and round, linking it to the peer's matching `frame_rx` in a
+    /// merged timeline. Counter columns are identical either way.
+    pub(crate) fn add_tx_ctx(&self, frame_payload_len: usize, ctx: Option<frame::TraceCtx>) {
+        let framed = frame_payload_len as u64 + FRAME_OVERHEAD as u64;
+        self.inner.bytes_tx.fetch_add(framed, Ordering::Relaxed);
+        self.inner.frames_tx.fetch_add(1, Ordering::Relaxed);
+        match ctx {
+            Some(c) => crate::trace::counter_flow(
+                crate::trace::Stage::FrameTx,
+                framed,
+                c.flow_id(),
+                c.round,
+            ),
+            None => crate::trace::counter(crate::trace::Stage::FrameTx, framed),
+        }
+    }
+
+    /// [`Self::add_rx`] for a received frame that carried a [`TraceCtx`].
+    pub(crate) fn add_rx_ctx(&self, frame_payload_len: usize, ctx: Option<frame::TraceCtx>) {
         let framed = frame_payload_len as u64 + FRAME_OVERHEAD as u64;
         self.inner.bytes_rx.fetch_add(framed, Ordering::Relaxed);
         self.inner.frames_rx.fetch_add(1, Ordering::Relaxed);
-        crate::trace::counter(crate::trace::Stage::FrameRx, framed);
+        match ctx {
+            Some(c) => crate::trace::counter_flow(
+                crate::trace::Stage::FrameRx,
+                framed,
+                c.flow_id(),
+                c.round,
+            ),
+            None => crate::trace::counter(crate::trace::Stage::FrameRx, framed),
+        }
     }
 
     /// Framed bytes sent on this link (payload + length prefixes).

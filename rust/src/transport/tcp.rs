@@ -110,7 +110,11 @@ impl Connection for TcpConn {
         gather.push(&prefix);
         gather.extend_from_slice(segments);
         self.write_segments(&gather)?;
-        self.counters.add_tx(total);
+        // The trace context (if stamped) lives in the tag-bearing first
+        // segment; peeking it links this send's frame_tx event to the
+        // peer's frame_rx in a merged cross-process timeline.
+        let ctx = segments.first().and_then(|s| super::frame::peek_ctx(s));
+        self.counters.add_tx_ctx(total, ctx);
         if segments.len() > 1 {
             // A multi-segment frame went out without the contiguous
             // assembly copy the single-buffer path would have paid.
@@ -134,7 +138,7 @@ impl Connection for TcpConn {
         if got < len {
             return Err(TransportError::Closed);
         }
-        self.counters.add_rx(len);
+        self.counters.add_rx_ctx(len, super::frame::peek_ctx(buf));
         Ok(())
     }
 

@@ -227,6 +227,36 @@ fn steady_state_compression_is_allocation_free() {
         assert_eq!(n, 0, "inert spans allocated {n} times in 1024 calls");
     }
 
+    // --- Telemetry registry: updates are allocation-free -----------------
+    // (Same #[test], same reason.) Registration takes the registry lock
+    // and allocates; the returned handles are Arcs over atomics, so every
+    // subsequent inc/set/observe must be a pure RMW — the `/metrics` hot
+    // path promise.
+    {
+        use gsparse::telemetry::Registry;
+        let reg = Registry::new();
+        let c = reg.counter("af_rounds_total", "alloc test", &[("worker", "0")]);
+        let gauge = reg.gauge("af_straggler_ratio", "alloc test", &[]);
+        let h = reg.histogram(
+            "af_round_latency_seconds",
+            "alloc test",
+            &[("worker", "0")],
+            &[1e-3, 1e-2, 1e-1, 1.0],
+        );
+        for _ in 0..8 {
+            c.inc();
+            gauge.set(1.25);
+            h.observe(0.02); // warmup (nothing to grow, but symmetric)
+        }
+        let n = count_allocs(1024, || {
+            c.inc_by(3);
+            gauge.set(2.5);
+            h.observe(0.004);
+            h.observe(7.0); // +Inf bucket, same promise
+        });
+        assert_eq!(n, 0, "registry updates allocated {n} times in 1024 calls");
+    }
+
     // --- Sharded path: shard buffers reused ----------------------------
     // (Same #[test] on purpose: a concurrent test thread would pollute the
     // global counter.) The parallel path runs on the persistent ShardPool —

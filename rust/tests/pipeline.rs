@@ -311,7 +311,7 @@ fn pipelined_tcp_dist_runs_interoperate_with_sequential_peers_bitwise() {
         handles.push(std::thread::spawn(move || {
             let hello = Hello::with_version(wid as u32, codec, 2);
             let mut conn = t.connect(&addr, &hello).unwrap();
-            dist::run_worker(conn.as_mut(), wid as u32, codec, None)
+            dist::run_worker(conn.as_mut(), wid as u32, codec, 2, None)
         }));
     }
     let v2_rep = dist::serve(listener.as_mut(), &pipe).unwrap();

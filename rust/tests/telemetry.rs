@@ -1,0 +1,162 @@
+//! End-to-end acceptance of the live telemetry plane: per-role trace dumps
+//! over real TCP merge into one causally-consistent timeline (clock-aligned
+//! flow arrows, non-negative tx→rx latencies), and a `/metrics` endpoint
+//! scraped *mid-run* serves well-formed, monotone Prometheus text.
+//!
+//! Both tests mutate process environment (`GSPARSE_TRACE_OUT`,
+//! `GSPARSE_METRICS_ADDR`), so they serialize on one lock and scrub the
+//! variables before releasing it.
+
+use gsparse::coordinator::dist::{self, RunPlan};
+use gsparse::telemetry::{self, merge};
+use gsparse::trace::TraceConfig;
+use gsparse::transport::TcpTransport;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn small_cfg() -> RunPlan {
+    RunPlan {
+        workers: 2,
+        rounds: 24,
+        n: 128,
+        d: 64,
+        batch: 4,
+        seed: 91,
+        reg: 1.0 / (10.0 * 128.0),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn tcp_dumps_merge_into_one_causal_timeline() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    let stem = std::env::temp_dir().join(format!("gsparse-telemetry-{}", std::process::id()));
+    let stem = stem.to_str().unwrap().to_string();
+    std::env::set_var("GSPARSE_TRACE_OUT", &stem);
+
+    let cfg = RunPlan {
+        trace: TraceConfig::on(),
+        ..small_cfg()
+    };
+    let report = dist::run_threads(TcpTransport::new(), "127.0.0.1:0", &cfg).unwrap();
+    std::env::remove_var("GSPARSE_TRACE_OUT");
+
+    // The run leaves one tagged dump per role plus the server's clock
+    // sidecar — the naming contract the merger and the CI guard parse.
+    let tag = format!("r{}.star", cfg.rounds);
+    let server = PathBuf::from(format!("{stem}.{tag}.server.trace.json"));
+    let worker0 = PathBuf::from(format!("{stem}.{tag}.worker0.trace.json"));
+    let worker1 = PathBuf::from(format!("{stem}.{tag}.worker1.trace.json"));
+    let clock = PathBuf::from(format!("{stem}.{tag}.clock.json"));
+    for p in [&server, &worker0, &worker1, &clock] {
+        assert!(p.exists(), "missing dump {}", p.display());
+    }
+    // Same-process threads share one clock, so every estimated offset must
+    // be tiny; the report surfaces the same table the sidecar holds.
+    assert_eq!(report.clock_offsets_ns.len(), cfg.workers);
+    for (wid, off) in &report.clock_offsets_ns {
+        assert!(
+            off.abs() < 1_000_000_000,
+            "worker {wid} offset {off}ns is not same-host plausible"
+        );
+    }
+
+    let merged = merge::merge_files(
+        &[server.clone(), worker0.clone(), worker1.clone()],
+        Some(clock.as_path()),
+    )
+    .unwrap();
+    // Every communication round contributes flow-stamped frames in both
+    // directions (WEIGHTS down, GRAD up) — far more links than rounds.
+    assert!(
+        merged.flows_linked >= cfg.rounds,
+        "only {} flows linked over {} rounds",
+        merged.flows_linked,
+        cfg.rounds
+    );
+    assert_eq!(
+        merged.flows_unmatched, 0,
+        "every stamped frame must find its peer in the dumps"
+    );
+    // The headline causal invariant: after clock alignment + clamp no
+    // receive precedes its send.
+    assert!(
+        merged.min_flow_latency_us >= 0.0,
+        "negative tx->rx latency {} survived the merge",
+        merged.min_flow_latency_us
+    );
+    // The merged doc parses as a Chrome trace and draws at least one
+    // arrow per linked flow.
+    assert_eq!(merged.json.matches("\"ph\":\"s\"").count(), merged.flows_linked);
+    assert_eq!(merged.json.matches("\"ph\":\"f\"").count(), merged.flows_linked);
+
+    for p in [server, worker0, worker1, clock] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+fn scrape(addr: &str) -> Option<String> {
+    let mut s = TcpStream::connect(addr).ok()?;
+    write!(s, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").ok()?;
+    let mut out = String::new();
+    s.read_to_string(&mut out).ok()?;
+    out.starts_with("HTTP/1.1 200").then_some(out)
+}
+
+/// `gsparse_rounds_total{worker="0"} N` → `N` from an exposition body.
+fn rounds_w0(text: &str) -> Option<u64> {
+    text.lines()
+        .find(|l| l.starts_with("gsparse_rounds_total{worker=\"0\"}"))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+}
+
+#[test]
+fn metrics_endpoint_serves_monotone_counters_mid_run() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    // Reserve an ephemeral port, free it, and hand it to the run — the
+    // coordinator binds it at serve() entry, well before the scrapes.
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap().to_string();
+    drop(probe);
+    std::env::set_var(telemetry::METRICS_ADDR_ENV, &addr);
+
+    let cfg = RunPlan {
+        rounds: 200, // long enough that mid-run scrapes land mid-run
+        ..small_cfg()
+    };
+    let scraper_addr = addr.clone();
+    let scraper = std::thread::spawn(move || {
+        let mut seen: Vec<u64> = Vec::new();
+        for _ in 0..400 {
+            if let Some(body) = scrape(&scraper_addr) {
+                if let Some(n) = rounds_w0(&body) {
+                    seen.push(n);
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        seen
+    });
+    let report = dist::run_threads(TcpTransport::new(), "127.0.0.1:0", &cfg).unwrap();
+    std::env::remove_var(telemetry::METRICS_ADDR_ENV);
+    let seen = scraper.join().unwrap();
+
+    // At least one scrape landed while the endpoint was up, every value
+    // respects the final ledger, and the sequence is monotone — the
+    // counter never runs backwards between scrapes.
+    assert!(!seen.is_empty(), "no successful mid-run scrape");
+    assert!(seen.windows(2).all(|w| w[0] <= w[1]), "counter ran backwards: {seen:?}");
+    assert!(seen.iter().all(|&n| n <= cfg.rounds as u64));
+    // And the final rendered registry agrees with the CommLedger exactly.
+    assert!(report
+        .metrics_text
+        .contains(&format!("gsparse_wire_bytes_total {}", report.curve.ledger.wire_bytes)));
+    assert!(report
+        .metrics_text
+        .contains(&format!("gsparse_rounds_total{{worker=\"0\"}} {}", cfg.rounds)));
+}

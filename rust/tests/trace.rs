@@ -158,6 +158,9 @@ fn dist_threads_trace_on_off_bitwise_identical() {
     let snap = on.trace_metrics.expect("traced dist run must report metrics");
     assert_eq!(snap.counter("round_events"), Some(task.rounds as u64));
     assert!(snap.counter("apply_events").unwrap() > 0, "server applies traced");
+    // Ring capacity dwarfs the event volume at this scale, so the drop
+    // counter the snapshot now carries must read exactly zero.
+    assert_eq!(snap.counter("trace_dropped_total"), Some(0));
 }
 
 // ---------------------------------------------------------------------------
@@ -201,6 +204,7 @@ fn param_server_trace_is_transparent_and_reports_metrics() {
         "PS-specific gauge must be registered"
     );
     assert!(snap.counter("link_w0_frames_tx").unwrap() > 0);
+    assert_eq!(snap.counter("trace_dropped_total"), Some(0));
 }
 
 // ---------------------------------------------------------------------------

@@ -347,12 +347,12 @@ fn server_refuses_codec_mismatched_worker() {
 }
 
 #[test]
-fn v2_workers_interoperate_with_a_v3_server_bitwise() {
-    // The v2↔v3 handshake fallback: a server running the version-3
+fn v2_workers_interoperate_with_a_v4_server_bitwise() {
+    // The version-fallback handshake: a server running the version-4
     // transport must accept version-2 hellos (same 10-byte layout, no
     // batch capability) and drive the run to bitwise-identical results —
-    // v2 links simply never see `GRAD_BATCH` frames. A pre-codec (v1)
-    // hello is still refused.
+    // v2 links simply never see `GRAD_BATCH` frames, clock probes, or
+    // trace-context stamps. A pre-codec (v1) hello is still refused.
     let cfg = RunPlan {
         workers: 2,
         rounds: 40,
@@ -377,7 +377,7 @@ fn v2_workers_interoperate_with_a_v3_server_bitwise() {
             assert_eq!(hello.version, 2);
             assert!(!hello.supports_batch());
             let mut conn = t.connect(&addr, &hello).unwrap();
-            dist::run_worker(conn.as_mut(), wid as u32, codec, None)
+            dist::run_worker(conn.as_mut(), wid as u32, codec, 2, None)
         }));
     }
     let v2_report = dist::serve(listener.as_mut(), &cfg).unwrap();
@@ -385,16 +385,30 @@ fn v2_workers_interoperate_with_a_v3_server_bitwise() {
         h.join().unwrap().unwrap();
     }
     // Reference run with current-version workers.
-    let v3_report = dist::run_threads(TcpTransport::new(), "127.0.0.1:0", &cfg).unwrap();
-    assert_eq!(v2_report.grad_digest, v3_report.grad_digest);
-    assert_eq!(v2_report.final_w, v3_report.final_w);
-    // Same hellos, same frames: the single-tensor weight set travels as
-    // plain WEIGHTS on both v2 and v3 links (WEIGHTS_BATCH only kicks in
-    // for multi-tensor weight sets), so framed bytes match exactly.
+    let v4_report = dist::run_threads(TcpTransport::new(), "127.0.0.1:0", &cfg).unwrap();
+    assert_eq!(v2_report.grad_digest, v4_report.grad_digest);
+    assert_eq!(v2_report.final_w, v4_report.final_w);
+    // A v2 link carries exactly the pre-v4 byte stream: no clock probes,
+    // no trace-context stamps. Pin the legacy frame count (hello + config
+    // + (blocks+1) pulls + blocks weights + blocks grads + shutdown per
+    // link) and check the v4 run's extra telemetry bytes are visible.
+    let blocks = cfg.rounds as u64;
     assert_eq!(
+        v2_report.curve.ledger.measured_frames,
+        (3 * blocks + 4) * cfg.workers as u64,
+        "v2 links must not carry probe frames"
+    );
+    assert!(
+        v2_report.curve.ledger.measured_bytes < v4_report.curve.ledger.measured_bytes,
+        "v4 links add probe + trace-context bytes: v2 {} !< v4 {}",
         v2_report.curve.ledger.measured_bytes,
-        v3_report.curve.ledger.measured_bytes,
-        "the v2 hello is the same length, so framed bytes must match too"
+        v4_report.curve.ledger.measured_bytes
+    );
+    // The payload (wire) bytes are identical — telemetry rides only in
+    // framing, never in the gradient encoding.
+    assert_eq!(
+        v2_report.curve.ledger.wire_bytes,
+        v4_report.curve.ledger.wire_bytes
     );
 
     // v1 peers (9-byte hello, version 1) are refused at accept.
@@ -416,7 +430,7 @@ fn v2_workers_interoperate_with_a_v3_server_bitwise() {
     });
     assert!(matches!(
         listener.accept(),
-        Err(TransportError::VersionMismatch { ours: 3, theirs: 1 })
+        Err(TransportError::VersionMismatch { ours: 4, theirs: 1 })
     ));
     stale.join().unwrap();
 }

@@ -13,9 +13,12 @@ use crate::{Finding, SourceFile, Tree};
 /// Bumping a format version means editing this table in the same PR — which
 /// is the point: the cross-file consistency argument happens here, once.
 const EXPECTED: &[(&str, &str, i64)] = &[
-    ("src/transport/frame.rs", "TRANSPORT_VERSION", 3),
+    ("src/transport/frame.rs", "TRANSPORT_VERSION", 4),
     ("src/transport/frame.rs", "MIN_TRANSPORT_VERSION", 2),
     ("src/transport/frame.rs", "HELLO_LEN", 10),
+    ("src/transport/frame.rs", "TRACE_CTX_FLAG", 0x80),
+    ("src/transport/frame.rs", "TRACE_CTX_LEN", 12),
+    ("src/transport/frame.rs", "PROBE_BODY_LEN", 25),
     ("src/transport/frame.rs", "TAG_PULL", 0x10),
     ("src/transport/frame.rs", "TAG_WEIGHTS", 0x11),
     ("src/transport/frame.rs", "TAG_GRAD", 0x12),
@@ -25,13 +28,14 @@ const EXPECTED: &[(&str, &str, i64)] = &[
     ("src/transport/frame.rs", "TAG_WEIGHTS_BATCH", 0x16),
     ("src/transport/frame.rs", "TAG_SPARSE_REDUCE", 0x17),
     ("src/transport/frame.rs", "TAG_RING_ADDR", 0x18),
+    ("src/transport/frame.rs", "TAG_PROBE", 0x19),
     ("src/coding/message.rs", "VERSION", 1),
     ("src/coding/message.rs", "HEADER_LEN", 24),
     ("src/coding/batch.rs", "BATCH_VERSION", 2),
     ("src/coding/batch.rs", "BATCH_HEADER_LEN", 12),
     ("src/coding/batch.rs", "SUB_HEADER_LEN", 17),
     ("src/coding/batch.rs", "PARAM_DELTA_FLAG", 0x80),
-    ("src/coordinator/dist.rs", "CONFIG_VERSION", 6),
+    ("src/coordinator/dist.rs", "CONFIG_VERSION", 7),
 ];
 
 pub fn check(tree: &Tree, out: &mut Vec<Finding>) -> String {

@@ -69,9 +69,12 @@ fn stray_thread_spawn_is_flagged_but_allowlisted_sites_pass() {
 fn frame_src(min: u8) -> String {
     format!(
         concat!(
-            "pub const TRANSPORT_VERSION: u8 = 3;\n",
+            "pub const TRANSPORT_VERSION: u8 = 4;\n",
             "pub const MIN_TRANSPORT_VERSION: u8 = {};\n",
             "pub const HELLO_LEN: usize = 10;\n",
+            "pub const TRACE_CTX_FLAG: u8 = 0x80;\n",
+            "pub const TRACE_CTX_LEN: usize = 12;\n",
+            "pub const PROBE_BODY_LEN: usize = 25;\n",
             "const TAG_PULL: u8 = 0x10;\n",
             "const TAG_WEIGHTS: u8 = 0x11;\n",
             "const TAG_GRAD: u8 = 0x12;\n",
@@ -81,6 +84,7 @@ fn frame_src(min: u8) -> String {
             "const TAG_WEIGHTS_BATCH: u8 = 0x16;\n",
             "const TAG_SPARSE_REDUCE: u8 = 0x17;\n",
             "const TAG_RING_ADDR: u8 = 0x18;\n",
+            "const TAG_PROBE: u8 = 0x19;\n",
             "impl Hello {{ pub fn supports_batch(&self) -> bool {{ self.version >= 3 }} }}\n",
         ),
         min
@@ -91,7 +95,7 @@ fn frame_src(min: u8) -> String {
 fn skewed_version_constant_is_flagged() {
     // MIN above MAX: both the pinned-table check and the window identity
     // must fire.
-    let bad = tree(&[("rust/src/transport/frame.rs", frame_src(4).as_str())]);
+    let bad = tree(&[("rust/src/transport/frame.rs", frame_src(5).as_str())]);
     let report = run_all(&bad);
     let hits = report.by_rule("wire-consts");
     assert!(
